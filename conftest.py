@@ -1,0 +1,5 @@
+# Make `pytest python/tests/` work from the repo root: the compile/tests
+# packages live under python/.
+import sys, pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

@@ -1,0 +1,85 @@
+//! End-to-end driver (§7.6 / Fig 5 / Table 6): non-iterative Opt-PR-ELM
+//! against iterative P-BPTT on a real small workload, exercising every
+//! layer of the stack — data generator → windowing → rust coordinator →
+//! PJRT → Pallas-lowered H kernels / jax fwd+bwd Adam step.
+//!
+//! Trains an LSTM (M = 10) on the Japan-population benchmark: P-BPTT for
+//! 10 epochs (batch 64, Adam, MSE — the paper's setup), logging the loss
+//! curve; Opt-PR-ELM in one shot. Writes `results/elm_vs_bptt.md`.
+//! The run is recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example elm_vs_bptt
+//! ```
+
+use std::fmt::Write as _;
+
+use opt_pr_elm::bptt::{BpttArch, BpttTrainer};
+use opt_pr_elm::coordinator::PrElmTrainer;
+use opt_pr_elm::data::spec::by_name;
+use opt_pr_elm::elm::Arch;
+use opt_pr_elm::report::prep::prepare;
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let spec = by_name("japan_population").expect("registry");
+    // japan is the smallest benchmark: run it at full published size
+    let (train, test) = prepare(&spec, 1.0, 7)?;
+    println!(
+        "japan_population (full size): {} train / {} test windows, Q = {}",
+        train.n, test.n, train.q
+    );
+
+    // ---- P-BPTT: 10 epochs, batch 64, Adam ------------------------------
+    let bptt = BpttTrainer::new(&default_artifacts_dir())?;
+    let (bptt_model, log) = bptt.train(BpttArch::Lstm, &train, 10, 7)?;
+    let bptt_mse = bptt.mse(&bptt_model, &test)?;
+    println!(
+        "\nP-BPTT     : {:.2}s over {} steps; test MSE {bptt_mse:.6}",
+        log.total_s, log.steps
+    );
+
+    // ---- Opt-PR-ELM: one shot -------------------------------------------
+    let elm = PrElmTrainer::new(&default_artifacts_dir(), 2)?;
+    let t0 = std::time::Instant::now();
+    let (elm_model, bd) = elm.train(Arch::Lstm, &train, 10, 7)?;
+    let elm_s = t0.elapsed().as_secs_f64();
+    let elm_rmse = elm.rmse(&elm_model, &test)?;
+    let elm_mse = elm_rmse * elm_rmse;
+    println!(
+        "Opt-PR-ELM : {elm_s:.4}s ({} blocks); test MSE {elm_mse:.6}",
+        bd.blocks
+    );
+    println!("ratio      : P-BPTT / Opt-PR-ELM = {:.0}x", log.total_s / elm_s);
+
+    // time for BPTT to first touch the ELM's MSE (the paper's "69 s" read)
+    let crossing = log.points.iter().find(|p| p.mse <= elm_mse);
+    match crossing {
+        Some(p) => println!(
+            "P-BPTT reaches ELM-level MSE after {:.2}s ({}x the ELM's training time)",
+            p.t_s,
+            (p.t_s / elm_s).round()
+        ),
+        None => println!("P-BPTT never reaches the ELM's MSE within 10 epochs"),
+    }
+
+    // ---- Fig-5-style loss curve → results/ ------------------------------
+    let mut md = String::new();
+    let _ = writeln!(md, "# ELM vs BPTT (japan_population, LSTM, M=10)\n");
+    let _ = writeln!(md, "| t (s) | minibatch MSE |");
+    let _ = writeln!(md, "|-------|---------------|");
+    let stride = (log.points.len() / 30).max(1);
+    for p in log.points.iter().step_by(stride) {
+        let _ = writeln!(md, "| {:.3} | {:.6} |", p.t_s, p.mse);
+    }
+    let _ = writeln!(
+        md,
+        "\nOpt-PR-ELM point: {elm_s:.4} s, test MSE {elm_mse:.6}\n\
+         P-BPTT total: {:.2} s, test MSE {bptt_mse:.6}",
+        log.total_s
+    );
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/elm_vs_bptt.md", md)?;
+    println!("\nwrote results/elm_vs_bptt.md");
+    Ok(())
+}

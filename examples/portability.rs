@@ -1,0 +1,48 @@
+//! Portability study (§7.4 / Table 5): Opt-PR-ELM speedups on the two GPU
+//! architectures through the calibrated gpusim model, at the paper's full
+//! dataset sizes — how architecture-dependent is the algorithm?
+//!
+//! ```sh
+//! cargo run --release --example portability
+//! ```
+
+use opt_pr_elm::data::spec::registry;
+use opt_pr_elm::elm::ALL_ARCHS;
+use opt_pr_elm::gpusim::{cpu_host, quadro_k2000, simulate, tesla_k20m, SimConfig, Variant};
+
+fn main() {
+    let host = cpu_host();
+    println!(
+        "{:<8} {:<20} {:>12} {:>12} {:>8}",
+        "arch", "dataset", "Tesla K20m", "Quadro K2000", "ratio"
+    );
+    for arch in ALL_ARCHS {
+        for d in registry() {
+            let cfg = SimConfig {
+                arch,
+                variant: Variant::Opt,
+                n: d.n_instances.saturating_sub(d.q_paper.min(64)),
+                s: 1,
+                q: d.q_paper.min(64),
+                m: 50,
+                bs: 32,
+            };
+            let t = simulate(&cfg, &tesla_k20m(), &host);
+            let q = simulate(&cfg, &quadro_k2000(), &host);
+            println!(
+                "{:<8} {:<20} {:>11.0}x {:>11.0}x {:>8.2}",
+                arch.name(),
+                d.name,
+                t.speedup,
+                q.speedup,
+                t.speedup / q.speedup
+            );
+        }
+        println!();
+    }
+    println!(
+        "Portability verdict (paper §7.4): the algorithm keeps high speedups on the\n\
+         much smaller Quadro because large-dataset runs are dominated by the shared\n\
+         host-side β solve and transfers, not the kernel."
+    );
+}

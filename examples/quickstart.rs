@@ -1,0 +1,47 @@
+//! Quickstart: train an Elman RNN non-iteratively on the AEMO electricity
+//! demand benchmark through the full three-layer stack (rust coordinator →
+//! PJRT → Pallas-lowered H kernels), and compare with the sequential
+//! baseline.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use opt_pr_elm::coordinator::PrElmTrainer;
+use opt_pr_elm::data::spec::by_name;
+use opt_pr_elm::elm::{Arch, SrElmModel, TrainOptions};
+use opt_pr_elm::report::prep::prepare;
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let spec = by_name("aemo").expect("registry");
+    // 10% of the published dataset size keeps the demo fast
+    let (train, test) = prepare(&spec, 0.10, 42)?;
+    println!("AEMO: {} train / {} test windows, Q = {}", train.n, test.n, train.q);
+
+    // --- parallel: Opt-PR-ELM over the AOT artifacts --------------------
+    let trainer = PrElmTrainer::new(&default_artifacts_dir(), 2)?;
+    let t0 = std::time::Instant::now();
+    let (model, bd) = trainer.train(Arch::Elman, &train, 50, 1)?;
+    let par_s = t0.elapsed().as_secs_f64();
+    let par_rmse = trainer.rmse(&model, &test)?;
+    println!(
+        "Opt-PR-ELM  : {par_s:.3}s ({} blocks; exec {:.3}s, solve {:.4}s) test RMSE {par_rmse:.5}",
+        bd.blocks, bd.exec_s, bd.solve_s
+    );
+
+    // --- sequential baseline --------------------------------------------
+    let t1 = std::time::Instant::now();
+    let seq = SrElmModel::train(Arch::Elman, &train, &TrainOptions::new(50, 1))?;
+    let seq_s = t1.elapsed().as_secs_f64();
+    println!("S-R-ELM     : {seq_s:.3}s test RMSE {:.5}", seq.rmse(&test));
+    println!("speedup     : {:.1}x", seq_s / par_s);
+
+    // one-step-ahead forecast sample
+    let preds = trainer.predict(&model, &test)?;
+    println!("\nfirst 5 one-step forecasts vs truth:");
+    for i in 0..5.min(test.n) {
+        println!("  t+{i}: pred {:.4}  true {:.4}", preds[i], test.y[i]);
+    }
+    Ok(())
+}

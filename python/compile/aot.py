@@ -1,0 +1,113 @@
+"""AOT driver: lower every manifest artifact to HLO text.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts [--jobs N] [--force]
+
+Python runs ONLY here; the rust binary is self-contained once artifacts/
+exists. Idempotent: artifacts newer than the compile/ sources are skipped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import concurrent.futures as cf
+import json
+import os
+import pathlib
+import sys
+import time
+
+
+def _sources_mtime() -> float:
+    root = pathlib.Path(__file__).parent
+    return max(p.stat().st_mtime for p in root.rglob("*.py"))
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple ABI)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name: str, out_dir: str) -> str:
+    """Lower one artifact by name (runs in a worker process)."""
+    import jax
+
+    from compile import manifest
+
+    spec = {s.name: s for s in manifest.specs()}[name]
+    fn, inputs, _outputs = spec.build()
+    args = [jax.ShapeDtypeStruct(tuple(shape), jax.numpy.float32) for _n, shape in inputs]
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return f"{name}: {len(text)} chars in {time.time() - t0:.1f}s"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--jobs", type=int, default=min(8, os.cpu_count() or 1))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", help="comma-separated artifact name filter")
+    args = ap.parse_args()
+
+    from compile import manifest
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    all_specs = manifest.specs()
+    if args.only:
+        keep = set(args.only.split(","))
+        all_specs = [s for s in all_specs if s.name in keep]
+
+    src_mtime = _sources_mtime()
+    todo = []
+    for s in all_specs:
+        path = os.path.join(out_dir, f"{s.name}.hlo.txt")
+        if args.force or not os.path.exists(path) or os.path.getmtime(path) < src_mtime:
+            todo.append(s.name)
+
+    print(f"{len(all_specs)} artifacts, {len(todo)} to lower (jobs={args.jobs})")
+    t0 = time.time()
+    failed = []
+    if todo:
+        with cf.ProcessPoolExecutor(max_workers=args.jobs) as ex:
+            futs = {ex.submit(lower_one, n, out_dir): n for n in todo}
+            for fut in cf.as_completed(futs):
+                name = futs[fut]
+                try:
+                    print("  " + fut.result())
+                except Exception as e:  # pragma: no cover - surfaced to make
+                    failed.append(name)
+                    print(f"  {name}: FAILED: {e}", file=sys.stderr)
+
+    # manifest.json covers the full grid (cheap: builder metadata only).
+    entries = [manifest.manifest_entry(s) for s in manifest.specs()]
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump({"artifacts": entries}, f, indent=1)
+    print(f"wrote {man_path} ({len(entries)} entries) in {time.time() - t0:.0f}s total")
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

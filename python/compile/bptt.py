@@ -1,0 +1,166 @@
+"""L2: P-BPTT comparator — full fwd/bwd Adam train step (§7.6, Table 6, Fig 5).
+
+The paper compares Opt-PR-ELM against TensorFlow BPTT [11] on the fully
+connected, LSTM and GRU architectures (M = 10, batch 64, MSE, Adam, 10
+epochs). We reproduce that comparator as a jax train step — loss through the
+unrolled recurrence, reverse-mode gradients, Adam update — AOT-lowered to one
+HLO executable that the rust `bptt` driver invokes per minibatch.
+
+Unlike the ELM H kernels (diagonal recurrence per the paper's thread model),
+the BPTT cells are the *standard full* cells, matching what TensorFlow's
+layers implement.
+
+Parameter order (the ABI recorded in the manifest):
+    fc:   wx (S, M),  wh (M, M),  b (M,),  wo (M,), bo (1,)
+    lstm: wx (S, 4M), wh (M, 4M), b (4M,), wo (M,), bo (1,)   gates [i, f, g, o]
+    gru:  wx (S, 3M), wh (M, 3M), b (3M,), wo (M,), bo (1,)   gates [z, r, n]
+
+Step signature:
+    (t, x (B,S,Q), y (B,), *params, *m, *v) -> (loss, *params', *m', *v')
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import DTYPE, sigmoid
+
+BPTT_ARCHS = ("fc", "lstm", "gru")
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+ADAM_LR = 1e-2
+
+
+def param_shapes(arch: str, s: int, m: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    gates = {"fc": 1, "lstm": 4, "gru": 3}[arch]
+    return [
+        ("wx", (s, gates * m)),
+        ("wh", (m, gates * m)),
+        ("b", (gates * m,)),
+        ("wo", (m,)),
+        ("bo", (1,)),
+    ]
+
+
+def _forward(arch: str, m: int, x, params):
+    """x: (B, S, Q) -> yhat (B,). Scan over the Q timesteps."""
+    wx, wh, b, wo, bo = params
+    xs = jnp.moveaxis(x, 2, 0)  # (Q, B, S)
+    batch = x.shape[0]
+
+    if arch == "fc":
+
+        def step(h, x_t):
+            h_new = jnp.tanh(x_t @ wx + h @ wh + b)
+            return h_new, None
+
+        h0 = jnp.zeros((batch, m), x.dtype)
+        h, _ = jax.lax.scan(step, h0, xs)
+        return h @ wo + bo[0]
+
+    if arch == "lstm":
+
+        def step(carry, x_t):
+            h, c = carry
+            z = x_t @ wx + h @ wh + b
+            i = sigmoid(z[:, 0 * m : 1 * m])
+            f = sigmoid(z[:, 1 * m : 2 * m])
+            g = jnp.tanh(z[:, 2 * m : 3 * m])
+            o = sigmoid(z[:, 3 * m : 4 * m])
+            c_new = f * c + i * g
+            h_new = o * jnp.tanh(c_new)
+            return (h_new, c_new), None
+
+        zeros = jnp.zeros((batch, m), x.dtype)
+        (h, _c), _ = jax.lax.scan(step, (zeros, zeros), xs)
+        return h @ wo + bo[0]
+
+    if arch == "gru":
+
+        def step(h, x_t):
+            zx = x_t @ wx + b
+            zh = h @ wh
+            z = sigmoid(zx[:, 0 * m : 1 * m] + zh[:, 0 * m : 1 * m])
+            r = sigmoid(zx[:, 1 * m : 2 * m] + zh[:, 1 * m : 2 * m])
+            n = jnp.tanh(zx[:, 2 * m : 3 * m] + r * zh[:, 2 * m : 3 * m])
+            h_new = (1.0 - z) * h + z * n
+            return h_new, None
+
+        h0 = jnp.zeros((batch, m), x.dtype)
+        h, _ = jax.lax.scan(step, h0, xs)
+        return h @ wo + bo[0]
+
+    raise ValueError(arch)
+
+
+def loss_fn(arch: str, m: int, x, y, params):
+    yhat = _forward(arch, m, x, params)
+    return jnp.mean(jnp.square(yhat - y))
+
+
+def bptt_step(
+    arch: str, batch: int, s: int, q: int, m: int
+) -> Tuple[Callable, List[Tuple[str, Tuple[int, ...]]], List[str]]:
+    """Build the train-step graph; returns (fn, input_specs, output_names)."""
+    if arch not in BPTT_ARCHS:
+        raise ValueError(f"bptt arch must be one of {BPTT_ARCHS}, got {arch}")
+    pshapes = param_shapes(arch, s, m)
+    n_params = len(pshapes)
+
+    inputs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("t", (1,)),
+        ("x", (batch, s, q)),
+        ("y", (batch,)),
+    ]
+    inputs += [(f"p_{n}", shp) for n, shp in pshapes]
+    inputs += [(f"m_{n}", shp) for n, shp in pshapes]
+    inputs += [(f"v_{n}", shp) for n, shp in pshapes]
+    outputs = (
+        ["loss"]
+        + [f"p_{n}" for n, _ in pshapes]
+        + [f"m_{n}" for n, _ in pshapes]
+        + [f"v_{n}" for n, _ in pshapes]
+    )
+
+    def fn(*args):
+        t, x, y = args[0], args[1], args[2]
+        params = list(args[3 : 3 + n_params])
+        ms = list(args[3 + n_params : 3 + 2 * n_params])
+        vs = list(args[3 + 2 * n_params : 3 + 3 * n_params])
+
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(arch, m, x, y, ps)
+        )(params)
+
+        tt = t[0]
+        bc1 = 1.0 - jnp.power(ADAM_B1, tt)
+        bc2 = 1.0 - jnp.power(ADAM_B2, tt)
+        new_p, new_m, new_v = [], [], []
+        for p, mm, vv, g in zip(params, ms, vs, grads):
+            mm = ADAM_B1 * mm + (1.0 - ADAM_B1) * g
+            vv = ADAM_B2 * vv + (1.0 - ADAM_B2) * jnp.square(g)
+            update = ADAM_LR * (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS)
+            new_p.append(p - update)
+            new_m.append(mm)
+            new_v.append(vv)
+        return tuple([jnp.reshape(loss, (1,))] + new_p + new_m + new_v)
+
+    return fn, inputs, outputs
+
+
+def bptt_predict(
+    arch: str, batch: int, s: int, q: int, m: int
+) -> Tuple[Callable, List[Tuple[str, Tuple[int, ...]]], List[str]]:
+    """Inference graph for the comparator: (x, *params) -> (yhat,)."""
+    pshapes = param_shapes(arch, s, m)
+    inputs = [("x", (batch, s, q))] + [(f"p_{n}", shp) for n, shp in pshapes]
+
+    def fn(x, *params):
+        return (_forward(arch, m, x, list(params)),)
+
+    return fn, inputs, ["yhat"]

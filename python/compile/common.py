@@ -1,0 +1,96 @@
+"""Shared conventions for the compile path (L1 kernels + L2 graphs).
+
+Parameter layouts are positional and fixed per architecture so the rust
+runtime can marshal literals without any python at runtime. The canonical
+order for every ELM graph is::
+
+    X (R, S, Q) [, Yhist (R, Qy)] [, Ehist (R, Qe)], <params...> [, Y, mask]
+
+and the per-architecture parameter lists are defined by ``param_specs``.
+
+All arrays are float32. ``R`` is the row-block size (the coordinator streams
+datasets through fixed-shape blocks, padding the tail block and masking the
+padded rows out of the Gram/TSQR accumulation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+ARCHS = ("elman", "jordan", "narmax", "fc", "lstm", "gru")
+
+#: Architectures whose H recurrence feeds back hidden state (true loop over t).
+RECURRENT_ARCHS = ("elman", "fc", "lstm", "gru")
+
+#: Architectures whose feedback is exogenous (targets / residuals): H(Q) is a
+#: direct function of the inputs, no hidden-state loop (see DESIGN.md §2).
+EXOGENOUS_ARCHS = ("jordan", "narmax")
+
+DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    """Static shape configuration of one compiled ELM graph."""
+
+    arch: str
+    rows: int  # R: row-block size
+    s: int  # S: input features per timestep
+    q: int  # Q: time dependency length
+    m: int  # M: hidden neurons
+    variant: str = "opt"  # "basic" (untiled) | "opt" (VMEM-tiled)
+    block_rows: int = 32  # BS/TW of the paper, applied to the row dimension
+
+    def __post_init__(self) -> None:
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}")
+        if self.variant not in ("basic", "opt"):
+            raise ValueError(f"unknown variant {self.variant!r}")
+        for field in ("rows", "s", "q", "m", "block_rows"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be positive")
+        if self.variant == "opt" and self.rows % self.block_rows != 0:
+            raise ValueError(
+                f"rows={self.rows} not divisible by block_rows={self.block_rows}"
+            )
+
+
+def param_specs(cfg: ShapeCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of the random ELM parameters of ``cfg``.
+
+    These are the paper's W, alpha, b (and gate variants): randomly generated
+    once by the coordinator, fixed during training.
+    """
+    s, q, m = cfg.s, cfg.q, cfg.m
+    if cfg.arch == "elman":
+        return [("w", (s, m)), ("b", (m,)), ("alpha", (m, q))]
+    if cfg.arch == "jordan":
+        return [("w", (s, m)), ("b", (m,)), ("alpha", (m, q))]
+    if cfg.arch == "narmax":
+        # F = R = Q: output- and error-feedback window both span the lag window.
+        return [("w", (s, m)), ("b", (m,)), ("wp", (m, q)), ("wpp", (m, q))]
+    if cfg.arch == "fc":
+        return [("w", (s, m)), ("b", (m,)), ("alpha", (m, m, q))]
+    if cfg.arch == "lstm":
+        # Gate order: [o, c~, lambda(forget), in] — stacked on axis 1 (resp. 0).
+        return [("w4", (s, 4, m)), ("u4", (4, m)), ("b4", (4, m))]
+    if cfg.arch == "gru":
+        # Gate order: [z, r, f].
+        return [("w3", (s, 3, m)), ("u3", (3, m)), ("b3", (3, m))]
+    raise ValueError(cfg.arch)
+
+
+def extra_input_specs(cfg: ShapeCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Exogenous feedback inputs (before params): Jordan / NARMAX histories."""
+    if cfg.arch == "jordan":
+        return [("yhist", (cfg.rows, cfg.q))]
+    if cfg.arch == "narmax":
+        return [("yhist", (cfg.rows, cfg.q)), ("ehist", (cfg.rows, cfg.q))]
+    return []
+
+
+def sigmoid(x):
+    return jnp.reciprocal(1.0 + jnp.exp(-x))

@@ -1,0 +1,26 @@
+"""L1: Pallas H-recurrence kernels, one module per RNN architecture.
+
+``h_pallas(cfg)`` dispatches to the architecture module and returns a
+callable ``(x, *extras, *params) -> H`` with the canonical input order of
+``compile.common``. ``ref.h_ref`` is the pure-jnp oracle each kernel is
+tested against.
+"""
+
+from __future__ import annotations
+
+from compile.common import ShapeCfg
+from compile.kernels import elman, fc, gru, jordan, lstm, narmax
+
+_BUILDERS = {
+    "elman": elman.build,
+    "jordan": jordan.build,
+    "narmax": narmax.build,
+    "fc": fc.build,
+    "lstm": lstm.build,
+    "gru": gru.build,
+}
+
+
+def h_pallas(cfg: ShapeCfg):
+    """Pallas H computation for ``cfg`` (interpret mode)."""
+    return _BUILDERS[cfg.arch](cfg)

@@ -1,0 +1,98 @@
+"""Shared Pallas harness: grid/BlockSpec construction for H kernels.
+
+The CUDA → TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* paper thread block (BS × BS)            →  grid cell over a row tile
+* shared-memory tiles of W / X (Alg 3)    →  BlockSpec staging into VMEM
+* per-thread register history ``H_loc``   →  fori_loop carry inside the cell
+* ``basic`` variant (Alg 2, no tiling)    →  single grid cell, full arrays
+
+Because the number of hidden neurons M is small (5-100) relative to the row
+block R (256), tiling is applied to the row (sample) dimension: one grid cell
+computes an ``(block_rows × M)`` tile of H. Under ``interpret=True`` both
+variants are numerically identical; the cost difference between them is what
+``gpusim`` models (Table 2 / §5 of the paper).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+from jax.experimental import pallas as pl
+
+from compile.common import DTYPE, ShapeCfg, extra_input_specs, param_specs
+
+
+def _tile_geometry(cfg: ShapeCfg) -> Tuple[Tuple[int, ...], int]:
+    """(grid, block_rows) for the given variant."""
+    if cfg.variant == "basic":
+        return (1,), cfg.rows
+    return (cfg.rows // cfg.block_rows,), cfg.block_rows
+
+
+def _row_spec(shape: Tuple[int, ...], br: int) -> pl.BlockSpec:
+    """Block over the leading (row) dimension, full trailing dims."""
+    blk = (br,) + tuple(shape[1:])
+    ndim = len(shape)
+    return pl.BlockSpec(blk, lambda i, _nd=ndim: (i,) + (0,) * (_nd - 1))
+
+
+def _full_spec(shape: Tuple[int, ...]) -> pl.BlockSpec:
+    """Whole-array block, replicated to every grid cell (W, alpha, b...)."""
+    ndim = len(shape)
+    return pl.BlockSpec(tuple(shape), lambda i, _nd=ndim: (0,) * _nd)
+
+
+def make_h(cfg: ShapeCfg, kernel: Callable) -> Callable:
+    """Wrap an architecture kernel body into a pallas_call.
+
+    ``kernel`` receives refs in the canonical order
+    ``(x_ref, *extra_refs, *param_refs, o_ref)`` where x/extras are row-tiled
+    and params are whole-array; it writes the ``(block_rows, M)`` H tile.
+    """
+    grid, br = _tile_geometry(cfg)
+    x_shape = (cfg.rows, cfg.s, cfg.q)
+    in_specs: List[pl.BlockSpec] = [_row_spec(x_shape, br)]
+    for _name, shape in extra_input_specs(cfg):
+        in_specs.append(_row_spec(shape, br))
+    for _name, shape in param_specs(cfg):
+        in_specs.append(_full_spec(shape))
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((cfg.rows, cfg.m), DTYPE),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=_row_spec((cfg.rows, cfg.m), br),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )
+
+    def h(x, *rest):
+        return call(x, *rest)
+
+    return h
+
+
+def vmem_bytes(cfg: ShapeCfg) -> int:
+    """Estimated VMEM footprint of one grid cell (bytes, f32).
+
+    Used by the perf pass and gpusim to check block shapes against the
+    16 MiB/core VMEM budget (the TPU analog of the K20m's 48 KiB shared
+    memory constraint).
+    """
+    _grid, br = _tile_geometry(cfg)
+    f32 = 4
+    tile_in = br * cfg.s * cfg.q  # X tile
+    params = sum(
+        int(__import__("math").prod(shape)) for _n, shape in param_specs(cfg)
+    )
+    extras = sum(br * shape[1] for _n, shape in extra_input_specs(cfg))
+    # carried history: Q states of (br, M) for recurrent archs, 2 for
+    # lstm (f, c), 1 otherwise; plus the per-t input projection cache.
+    hist = {"elman": cfg.q, "fc": cfg.q, "lstm": 2, "gru": 1}.get(cfg.arch, 0)
+    carry = hist * br * cfg.m
+    gates = {"lstm": 4, "gru": 3}.get(cfg.arch, 1)
+    wx_cache = cfg.q * gates * br * cfg.m
+    out = br * cfg.m
+    return f32 * (tile_in + params + extras + carry + wx_cache + out)

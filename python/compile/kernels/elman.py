@@ -1,0 +1,60 @@
+"""Elman H kernel (Eq 6 / Alg 2-3 of the paper).
+
+One grid cell computes a ``(block_rows, M)`` tile of H(Q). The per-thread
+register file ``H_loc`` of Alg 3 becomes a fori_loop carry holding the last
+Q hidden states of the tile; the shared-memory W/X tiles become the
+BlockSpec-staged VMEM blocks (see kernels.common).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import ShapeCfg
+from compile.kernels.common import make_h
+
+
+def _kernel(q: int):
+    def kernel(x_ref, w_ref, b_ref, alpha_ref, o_ref):
+        x = x_ref[...]  # (br, S, Q)   VMEM tile (Alg 3 line 10)
+        w = w_ref[...]  # (S, M)       VMEM tile (Alg 3 line 9)
+        b = b_ref[...]  # (M,)         loaded once per cell (Alg 3 line 16)
+        alpha = alpha_ref[...]  # (M, Q)
+
+        br = x.shape[0]
+        m = w.shape[1]
+        # Input projection for all timesteps at once: the tiled dot product
+        # of Alg 3 lines 8-13, hoisted out of the t loop.
+        wx = jnp.einsum("rsq,sm->qrm", x, w)
+
+        # Ring-buffer history (the register file H_loc of Alg 3): slot
+        # t mod Q holds h(t). Instead of shifting the large (Q, br, M)
+        # history every step (O(Q·br·M) copies), we gather the *small*
+        # (M, Q) alpha into slot order — §Perf L1 optimization, ~4x on
+        # Q = 50 blocks (EXPERIMENTS.md).
+        slots = jnp.arange(q)
+
+        def step(t, hist):
+            # slot j holds h(t-k) with k = (t - j) mod Q  ⇒  the weight
+            # for slot j is alpha[:, (t - 1 - j) mod Q]
+            a_idx = jnp.mod(t - 1 - slots, q)
+            a_slot = jnp.take(alpha, a_idx, axis=1)  # (M, Q)
+            rec = jnp.einsum("mj,jrm->rm", a_slot, hist)
+            h_t = jnp.tanh(wx[t] + b[None, :] + rec)
+            return jax.lax.dynamic_update_index_in_dim(
+                hist, h_t, jnp.mod(t, q), axis=0
+            )
+
+        hist0 = jnp.zeros((q, br, m), x.dtype)
+        hist = jax.lax.fori_loop(0, q, step, hist0)
+        # final state h(Q-1) lives in slot (Q-1) mod Q = Q-1
+        o_ref[...] = hist[q - 1]
+
+    return kernel
+
+
+def build(cfg: ShapeCfg):
+    """(x, w, b, alpha) -> H of shape (rows, M)."""
+    assert cfg.arch == "elman"
+    return make_h(cfg, _kernel(cfg.q))

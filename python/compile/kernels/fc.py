@@ -1,0 +1,52 @@
+"""Fully connected RNN H kernel (Eq 9).
+
+Unlike the diagonal architectures, every neuron sees every neuron's history
+(alpha is (M, M, Q)), so the neuron dimension cannot be tiled — the grid
+tiles rows (samples) only and each cell carries the full (Q, br, M) history.
+This is the paper's most compute-heavy architecture (Table 2: FLOPS grow
+with 2QM per element).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import ShapeCfg
+from compile.kernels.common import make_h
+
+
+def _kernel(q: int):
+    def kernel(x_ref, w_ref, b_ref, alpha_ref, o_ref):
+        x = x_ref[...]  # (br, S, Q)
+        w = w_ref[...]  # (S, M)
+        b = b_ref[...]  # (M,)
+        alpha = alpha_ref[...]  # (M, M, Q): alpha[j, l, k]
+
+        br = x.shape[0]
+        m = w.shape[1]
+        wx = jnp.einsum("rsq,sm->qrm", x, w)
+
+        # NOTE on the history layout: unlike elman.py's ring buffer, FC
+        # keeps the shifted (k-ordered) history. The elman trick gathers
+        # alpha into slot order, but FC's alpha is (M, M, Q) — the gather
+        # would move M²Q elements/step vs Q·br·M for the shift, which is
+        # *more* for every benchmark shape; and the O(M²·Q·br) recurrence
+        # einsum dominates either way (§Perf).
+        def step(t, hist):
+            # hist[k-1] == h(t-k) for all neurons: (Q, br, M)
+            rec = jnp.einsum("mlk,krl->rm", alpha, hist)
+            h_t = jnp.tanh(wx[t] + b[None, :] + rec)
+            return jnp.roll(hist, 1, axis=0).at[0].set(h_t)
+
+        hist0 = jnp.zeros((q, br, m), x.dtype)
+        hist = jax.lax.fori_loop(0, q, step, hist0)
+        o_ref[...] = hist[0]
+
+    return kernel
+
+
+def build(cfg: ShapeCfg):
+    """(x, w, b, alpha) -> H of shape (rows, M)."""
+    assert cfg.arch == "fc"
+    return make_h(cfg, _kernel(cfg.q))

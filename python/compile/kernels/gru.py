@@ -1,0 +1,42 @@
+"""GRU H kernel (Eq 11), diagonal recurrence. Gate order: [z, r, f]."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import ShapeCfg, sigmoid
+from compile.kernels.common import make_h
+
+
+def _kernel(q: int):
+    def kernel(x_ref, w3_ref, u3_ref, b3_ref, o_ref):
+        x = x_ref[...]  # (br, S, Q)
+        w3 = w3_ref[...]  # (S, 3, M)
+        u3 = u3_ref[...]  # (3, M)
+        b3 = b3_ref[...]  # (3, M)
+
+        br = x.shape[0]
+        m = w3.shape[2]
+        wx = jnp.einsum("rsq,sgm->qgrm", x, w3)  # (Q, 3, br, M)
+
+        def step(t, f_prev):
+            wx_t = wx[t]
+            z = sigmoid(wx_t[0] + u3[0][None, :] * f_prev + b3[0][None, :])
+            r = sigmoid(wx_t[1] + u3[1][None, :] * f_prev + b3[1][None, :])
+            cand = jnp.tanh(
+                wx_t[2] + u3[2][None, :] * (r * f_prev) + b3[2][None, :]
+            )
+            return (1.0 - z) * f_prev + z * cand
+
+        f0 = jnp.zeros((br, m), x.dtype)
+        f = jax.lax.fori_loop(0, q, step, f0)
+        o_ref[...] = f
+
+    return kernel
+
+
+def build(cfg: ShapeCfg):
+    """(x, w3, u3, b3) -> H of shape (rows, M)."""
+    assert cfg.arch == "gru"
+    return make_h(cfg, _kernel(cfg.q))

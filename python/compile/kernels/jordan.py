@@ -1,0 +1,34 @@
+"""Jordan H kernel (Eq 7).
+
+The Jordan recurrence feeds back *outputs*, which are teacher-forced during
+training (DESIGN.md §2), so H(Q) is a direct function of the inputs: no
+hidden-state loop. The kernel is a tiled projection + target-history matvec.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.common import ShapeCfg
+from compile.kernels.common import make_h
+
+
+def _kernel():
+    def kernel(x_ref, yhist_ref, w_ref, b_ref, alpha_ref, o_ref):
+        x_q = x_ref[...][:, :, -1]  # (br, S): input at the final timestep
+        yh = yhist_ref[...]  # (br, Q): yh[i, k-1] = y(t-k)
+        w = w_ref[...]  # (S, M)
+        b = b_ref[...]  # (M,)
+        alpha = alpha_ref[...]  # (M, Q)
+
+        wx = jnp.einsum("rs,sm->rm", x_q, w)
+        rec = jnp.einsum("mk,rk->rm", alpha, yh)
+        o_ref[...] = jnp.tanh(wx + b[None, :] + rec)
+
+    return kernel
+
+
+def build(cfg: ShapeCfg):
+    """(x, yhist, w, b, alpha) -> H of shape (rows, M)."""
+    assert cfg.arch == "jordan"
+    return make_h(cfg, _kernel())

@@ -1,0 +1,50 @@
+"""LSTM H kernel (Eq 10), diagonal recurrence.
+
+Each neuron's gates see only its own previous output f(t-1) — exactly the
+per-(i, j) thread independence the paper exploits. Gate order on the stacked
+parameter axis: [o, c~, lambda (forget), in]. Carry: (f, c) pairs, the
+register-file state of Alg 3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import ShapeCfg, sigmoid
+from compile.kernels.common import make_h
+
+
+def _kernel(q: int):
+    def kernel(x_ref, w4_ref, u4_ref, b4_ref, o_ref):
+        x = x_ref[...]  # (br, S, Q)
+        w4 = w4_ref[...]  # (S, 4, M)
+        u4 = u4_ref[...]  # (4, M) diagonal recurrent weights
+        b4 = b4_ref[...]  # (4, M)
+
+        br = x.shape[0]
+        m = w4.shape[2]
+        wx = jnp.einsum("rsq,sgm->qgrm", x, w4)  # (Q, 4, br, M)
+
+        def step(t, carry):
+            f_prev, c_prev = carry
+            pre = wx[t] + u4[:, None, :] * f_prev[None, :, :] + b4[:, None, :]
+            o = sigmoid(pre[0])
+            c_tilde = jnp.tanh(pre[1])
+            lam = sigmoid(pre[2])
+            inp = sigmoid(pre[3])
+            c = lam * c_prev + inp * c_tilde
+            f = o * jnp.tanh(c)
+            return (f, c)
+
+        zeros = jnp.zeros((br, m), x.dtype)
+        f, _c = jax.lax.fori_loop(0, q, step, (zeros, zeros))
+        o_ref[...] = f
+
+    return kernel
+
+
+def build(cfg: ShapeCfg):
+    """(x, w4, u4, b4) -> H of shape (rows, M)."""
+    assert cfg.arch == "lstm"
+    return make_h(cfg, _kernel(cfg.q))

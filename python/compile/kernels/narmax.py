@@ -1,0 +1,37 @@
+"""NARMAX H kernel (Eq 8), F = R = Q.
+
+Output- and error-feedback are exogenous (two-pass extended least squares,
+DESIGN.md §2): pass 1 runs with ehist = 0, pass 2 with pass-1 residuals.
+H(Q) is a direct tiled projection, like Jordan, with two feedback matvecs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.common import ShapeCfg
+from compile.kernels.common import make_h
+
+
+def _kernel():
+    def kernel(x_ref, yhist_ref, ehist_ref, w_ref, b_ref, wp_ref, wpp_ref, o_ref):
+        x_q = x_ref[...][:, :, -1]  # (br, S)
+        yh = yhist_ref[...]  # (br, Q)
+        eh = ehist_ref[...]  # (br, Q)
+        w = w_ref[...]  # (S, M)
+        b = b_ref[...]  # (M,)
+        wp = wp_ref[...]  # (M, Q)  output-feedback weights W'
+        wpp = wpp_ref[...]  # (M, Q)  error-feedback weights W''
+
+        wx = jnp.einsum("rs,sm->rm", x_q, w)
+        rec_y = jnp.einsum("mk,rk->rm", wp, yh)
+        rec_e = jnp.einsum("mk,rk->rm", wpp, eh)
+        o_ref[...] = jnp.tanh(wx + b[None, :] + rec_y + rec_e)
+
+    return kernel
+
+
+def build(cfg: ShapeCfg):
+    """(x, yhist, ehist, w, b, wp, wpp) -> H of shape (rows, M)."""
+    assert cfg.arch == "narmax"
+    return make_h(cfg, _kernel())

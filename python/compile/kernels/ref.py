@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for every architecture's H recurrence (Eq 6-11).
+
+These are the CORE correctness signal: every Pallas kernel (basic and opt
+variants, every tile size) is checked against these with assert_allclose in
+``python/tests``. They are written with ``lax.scan`` in the most direct
+transcription of the paper's equations; no tiling, no pallas.
+
+Shape conventions (see compile.common):
+    x      (R, S, Q)   lag-window input block
+    w      (S, M)      input weights, fixed random
+    b      (M,)        biases
+    alpha  (M, Q)      diagonal recurrent weights (elman/jordan)
+    alpha  (M, M, Q)   full recurrent weights (fc)
+    yhist  (R, Q)      target history, yhist[i, k-1] = y(t-k)   (jordan/narmax)
+    ehist  (R, Q)      residual history, same alignment          (narmax)
+returns H(Q) of shape (R, M) — the ELM design-matrix block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import sigmoid
+
+
+def _wx(x, w):
+    """Per-timestep input projections: (Q, R, M)."""
+    return jnp.einsum("rsq,sm->qrm", x, w)
+
+
+def elman_h(x, w, b, alpha):
+    """Eq 6: h_j(t) = g(w_j.x(t) + b_j + sum_k alpha[j,k] h_j(t-k))."""
+    q = x.shape[2]
+    wx = _wx(x, w)
+
+    def step(hist, wx_t):
+        # hist[k-1] == h(t-k), shape (Q, R, M)
+        rec = jnp.einsum("mk,krm->rm", alpha, hist)
+        h_t = jnp.tanh(wx_t + b[None, :] + rec)
+        hist = jnp.roll(hist, 1, axis=0).at[0].set(h_t)
+        return hist, None
+
+    hist0 = jnp.zeros((q,) + wx.shape[1:], wx.dtype)
+    hist, _ = jax.lax.scan(step, hist0, wx)
+    return hist[0]
+
+
+def jordan_h(x, w, b, alpha, yhist):
+    """Eq 7 at t=Q: the recurrence is through the (teacher-forced) targets
+    only, so H(Q) is a direct function of the inputs (DESIGN.md §2)."""
+    wx_q = jnp.einsum("rs,sm->rm", x[:, :, -1], w)
+    rec = jnp.einsum("mk,rk->rm", alpha, yhist)
+    return jnp.tanh(wx_q + b[None, :] + rec)
+
+
+def narmax_h(x, w, b, wp, wpp, yhist, ehist):
+    """Eq 8 at t=Q: exogenous output- and error-feedback (F = R = Q)."""
+    wx_q = jnp.einsum("rs,sm->rm", x[:, :, -1], w)
+    rec_y = jnp.einsum("mk,rk->rm", wp, yhist)
+    rec_e = jnp.einsum("mk,rk->rm", wpp, ehist)
+    return jnp.tanh(wx_q + b[None, :] + rec_y + rec_e)
+
+
+def fc_h(x, w, b, alpha):
+    """Eq 9 with the true cross-neuron coupling: alpha[j,l,k] h_l(t-k)."""
+    q = x.shape[2]
+    wx = _wx(x, w)
+
+    def step(hist, wx_t):
+        # hist (Q, R, M); contribution sum_{k,l} alpha[j,l,k] h_l(t-k)
+        rec = jnp.einsum("mlk,krl->rm", alpha, hist)
+        h_t = jnp.tanh(wx_t + b[None, :] + rec)
+        hist = jnp.roll(hist, 1, axis=0).at[0].set(h_t)
+        return hist, None
+
+    hist0 = jnp.zeros((q,) + wx.shape[1:], wx.dtype)
+    hist, _ = jax.lax.scan(step, hist0, wx)
+    return hist[0]
+
+
+def lstm_h(x, w4, u4, b4):
+    """Eq 10, diagonal recurrence (one thread per (i, j) in the paper).
+
+    Gate order on the stacked axis: [o, c~, lambda (forget), in].
+    """
+    wx = jnp.einsum("rsq,sgm->qgrm", x, w4)  # (Q, 4, R, M)
+
+    def step(carry, wx_t):
+        f_prev, c_prev = carry
+        pre = wx_t + u4[:, None, :] * f_prev[None, :, :] + b4[:, None, :]
+        o = sigmoid(pre[0])
+        c_tilde = jnp.tanh(pre[1])
+        lam = sigmoid(pre[2])
+        inp = sigmoid(pre[3])
+        c = lam * c_prev + inp * c_tilde
+        f = o * jnp.tanh(c)
+        return (f, c), None
+
+    r, m = x.shape[0], w4.shape[2]
+    zeros = jnp.zeros((r, m), x.dtype)
+    (f, _c), _ = jax.lax.scan(step, (zeros, zeros), wx)
+    return f
+
+
+def gru_h(x, w3, u3, b3):
+    """Eq 11, diagonal recurrence. Gate order: [z, r, f]."""
+    wx = jnp.einsum("rsq,sgm->qgrm", x, w3)  # (Q, 3, R, M)
+
+    def step(f_prev, wx_t):
+        z = sigmoid(wx_t[0] + u3[0][None, :] * f_prev + b3[0][None, :])
+        r = sigmoid(wx_t[1] + u3[1][None, :] * f_prev + b3[1][None, :])
+        cand = jnp.tanh(wx_t[2] + u3[2][None, :] * (r * f_prev) + b3[2][None, :])
+        f = (1.0 - z) * f_prev + z * cand
+        return f, None
+
+    rr, m = x.shape[0], w3.shape[2]
+    f0 = jnp.zeros((rr, m), x.dtype)
+    f, _ = jax.lax.scan(step, f0, wx)
+    return f
+
+
+def h_ref(arch, x, extras, params):
+    """Uniform entry point: extras/params in compile.common order."""
+    if arch == "elman":
+        return elman_h(x, *params)
+    if arch == "jordan":
+        (w, b, alpha) = params
+        (yhist,) = extras
+        return jordan_h(x, w, b, alpha, yhist)
+    if arch == "narmax":
+        (w, b, wp, wpp) = params
+        (yhist, ehist) = extras
+        return narmax_h(x, w, b, wp, wpp, yhist, ehist)
+    if arch == "fc":
+        return fc_h(x, *params)
+    if arch == "lstm":
+        return lstm_h(x, *params)
+    if arch == "gru":
+        return gru_h(x, *params)
+    raise ValueError(arch)

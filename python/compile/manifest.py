@@ -1,0 +1,166 @@
+"""The artifact grid: every HLO executable the experiments need.
+
+This file is the single source of truth shared between the compile path
+(aot.py lowers exactly these) and the rust runtime (artifacts/manifest.json
+records the ABI — input/output names, shapes, dtypes — for each artifact).
+
+The grid is derived from DESIGN.md §4 (experiment index):
+
+* ``elm_gram``  — the workhorse: streaming H + Gram block step.
+    Q=10  × M ∈ {5, 10, 20, 50, 100}  (Figs 3-4, Tables 4-6: Q=10 datasets)
+    Q=50  × M ∈ {20, 50}              (hourly-weather/stock/temperature sets)
+    Q=64  × M ∈ {100}                 (exoplanet, Q capped — DESIGN.md §3)
+* ``elm_h``     — raw H block for the TSQR path and integration tests.
+* ``elm_predict`` — inference for the RMSE evaluations (Table 4).
+* ``bptt_step`` / ``bptt_predict`` — the P-BPTT comparator (Table 6, Fig 5).
+
+Row-block size R = 256, S = 1 (univariate series), opt variant, BS = 32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from compile import bptt as bptt_mod
+from compile import model
+from compile.common import ARCHS, ShapeCfg
+
+ROWS = 256
+S = 1
+BLOCK_ROWS = 32
+BPTT_BATCH = 64
+BPTT_M = 10
+
+#: (Q, M) grid for the gram graphs.
+GRAM_QM: List[Tuple[int, int]] = [
+    (10, 5),
+    (10, 10),
+    (10, 20),
+    (10, 50),
+    (10, 100),
+    (50, 10),  # Table 6: M=10 on the Q=50 datasets
+    (50, 20),
+    (50, 50),
+    (64, 100),
+]
+
+#: (Q, M) grid for the predict graphs: the full gram grid — the parallel
+#: NARMAX trainer needs a predict executable wherever a gram one exists
+#: (two-pass ELS), and Table 4 evaluates RMSE at its (Q, M) selections.
+PREDICT_QM: List[Tuple[int, int]] = list(GRAM_QM)
+
+#: (Q, M) grid for the raw-H graphs (TSQR path).
+H_QM: List[Tuple[int, int]] = [(10, 50)]
+
+BPTT_Q: List[int] = [10, 50]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSpec:
+    """One lowered executable: its name, builder inputs, and ABI."""
+
+    name: str
+    kind: str  # elm_h | elm_gram | elm_predict | bptt_step | bptt_predict
+    arch: str
+    q: int
+    m: int
+    rows: int  # row block (elm_*) or batch (bptt_*)
+    s: int = S
+    variant: str = "opt"
+    block_rows: int = BLOCK_ROWS
+
+    def cfg(self) -> ShapeCfg:
+        return ShapeCfg(
+            arch=self.arch,
+            rows=self.rows,
+            s=self.s,
+            q=self.q,
+            m=self.m,
+            variant=self.variant,
+            block_rows=self.block_rows,
+        )
+
+    def build(self):
+        """Returns (fn, input_specs, output_names)."""
+        if self.kind == "elm_h":
+            return model.elm_h(self.cfg())
+        if self.kind == "elm_gram":
+            return model.elm_gram(self.cfg())
+        if self.kind == "elm_predict":
+            return model.elm_predict(self.cfg())
+        if self.kind == "bptt_step":
+            return bptt_mod.bptt_step(self.arch, self.rows, self.s, self.q, self.m)
+        if self.kind == "bptt_predict":
+            return bptt_mod.bptt_predict(
+                self.arch, self.rows, self.s, self.q, self.m
+            )
+        raise ValueError(self.kind)
+
+
+def _name(kind: str, arch: str, q: int, m: int, rows: int) -> str:
+    return f"{kind}_{arch}_r{rows}_s{S}_q{q}_m{m}"
+
+
+def specs() -> List[ArtifactSpec]:
+    out: List[ArtifactSpec] = []
+    for arch in ARCHS:
+        for q, m in GRAM_QM:
+            out.append(
+                ArtifactSpec(_name("elm_gram", arch, q, m, ROWS), "elm_gram", arch, q, m, ROWS)
+            )
+        for q, m in PREDICT_QM:
+            out.append(
+                ArtifactSpec(
+                    _name("elm_predict", arch, q, m, ROWS), "elm_predict", arch, q, m, ROWS
+                )
+            )
+        for q, m in H_QM:
+            out.append(
+                ArtifactSpec(_name("elm_h", arch, q, m, ROWS), "elm_h", arch, q, m, ROWS)
+            )
+    for arch in bptt_mod.BPTT_ARCHS:
+        for q in BPTT_Q:
+            out.append(
+                ArtifactSpec(
+                    _name("bptt_step", arch, q, BPTT_M, BPTT_BATCH),
+                    "bptt_step",
+                    arch,
+                    q,
+                    BPTT_M,
+                    BPTT_BATCH,
+                )
+            )
+            out.append(
+                ArtifactSpec(
+                    _name("bptt_predict", arch, q, BPTT_M, BPTT_BATCH),
+                    "bptt_predict",
+                    arch,
+                    q,
+                    BPTT_M,
+                    BPTT_BATCH,
+                )
+            )
+    names = [s.name for s in out]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+    return out
+
+
+def manifest_entry(spec: ArtifactSpec) -> Dict:
+    _fn, inputs, outputs = spec.build()
+    return {
+        "name": spec.name,
+        "file": f"{spec.name}.hlo.txt",
+        "kind": spec.kind,
+        "arch": spec.arch,
+        "variant": spec.variant,
+        "rows": spec.rows,
+        "block_rows": spec.block_rows,
+        "s": spec.s,
+        "q": spec.q,
+        "m": spec.m,
+        "inputs": [
+            {"name": n, "shape": list(shape), "dtype": "f32"} for n, shape in inputs
+        ],
+        "outputs": outputs,
+    }

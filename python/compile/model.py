@@ -1,0 +1,87 @@
+"""L2: the jax compute graphs lowered to HLO artifacts.
+
+Each builder returns ``(fn, input_specs, output_names)`` where ``fn`` takes
+positional jnp arrays in the recorded order — the rust runtime marshals
+literals by ``artifacts/manifest.json``, so the order here is the ABI.
+
+Graphs:
+
+* ``elm_h``      — H row-block via the L1 Pallas kernel (TSQR path).
+* ``elm_gram``   — fused block step: H, then masked partial sums HᵀH, HᵀY
+                   (streaming normal-equations path; one executable per
+                   block, no recompute of H — see DESIGN.md §7).
+* ``elm_predict``— H @ beta for a block (inference path).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.common import (
+    DTYPE,
+    ShapeCfg,
+    extra_input_specs,
+    param_specs,
+)
+
+InputSpec = Tuple[str, Tuple[int, ...]]
+
+
+def _base_inputs(cfg: ShapeCfg) -> List[InputSpec]:
+    inputs: List[InputSpec] = [("x", (cfg.rows, cfg.s, cfg.q))]
+    inputs.extend(extra_input_specs(cfg))
+    inputs.extend(param_specs(cfg))
+    return inputs
+
+
+def elm_h(cfg: ShapeCfg) -> Tuple[Callable, List[InputSpec], List[str]]:
+    """H block: (x, *extras, *params) -> (h,)."""
+    h_fn = kernels.h_pallas(cfg)
+
+    def fn(*args):
+        return (h_fn(*args),)
+
+    return fn, _base_inputs(cfg), ["h"]
+
+
+def elm_gram(cfg: ShapeCfg) -> Tuple[Callable, List[InputSpec], List[str]]:
+    """Fused block step: (x, *extras, *params, y, mask) -> (hth, hty).
+
+    ``mask`` zeroes padded tail rows out of both partial sums, so the
+    coordinator can stream any dataset length through a fixed block shape.
+    """
+    h_fn = kernels.h_pallas(cfg)
+    inputs = _base_inputs(cfg) + [("y", (cfg.rows,)), ("mask", (cfg.rows,))]
+
+    def fn(*args):
+        *head, y, mask = args
+        h = h_fn(*head)
+        hm = h * mask[:, None]
+        hth = hm.T @ hm
+        hty = hm.T @ (y * mask)
+        return (hth, hty)
+
+    return fn, inputs, ["hth", "hty"]
+
+
+def elm_predict(cfg: ShapeCfg) -> Tuple[Callable, List[InputSpec], List[str]]:
+    """Inference block: (x, *extras, *params, beta) -> (yhat,)."""
+    h_fn = kernels.h_pallas(cfg)
+    inputs = _base_inputs(cfg) + [("beta", (cfg.m,))]
+
+    def fn(*args):
+        *head, beta = args
+        h = h_fn(*head)
+        return (h @ beta,)
+
+    return fn, inputs, ["yhat"]
+
+
+def zeros_like_specs(specs: List[InputSpec]):
+    """Example arrays for lowering (shapes only; values irrelevant)."""
+    import jax
+
+    return [jax.ShapeDtypeStruct(shape, DTYPE) for _n, shape in specs]

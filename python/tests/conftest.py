@@ -1,0 +1,33 @@
+"""Shared fixtures: deterministic random inputs for any ShapeCfg."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile.common import ShapeCfg, extra_input_specs, param_specs
+
+
+def make_inputs(cfg: ShapeCfg, seed: int = 0):
+    """(x, extras, params) matching the canonical ABI order, float32.
+
+    Params are drawn uniform [-0.5, 0.5] (the ELM random-weight regime);
+    extras (target/error histories) are scaled down to keep tanh unsaturated
+    so allclose comparisons stay meaningful.
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((cfg.rows, cfg.s, cfg.q), dtype=np.float32)
+    extras = [
+        (rng.standard_normal(shape, dtype=np.float32) * 0.1)
+        for _n, shape in extra_input_specs(cfg)
+    ]
+    params = [
+        rng.uniform(-0.5, 0.5, shape).astype(np.float32)
+        for _n, shape in param_specs(cfg)
+    ]
+    return x, extras, params
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

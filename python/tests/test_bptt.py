@@ -1,0 +1,95 @@
+"""P-BPTT comparator step: gradient flow, Adam semantics, learnability."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import bptt
+
+
+def _init(arch, s, m, seed=0):
+    rng = np.random.default_rng(seed)
+    params = [
+        (rng.standard_normal(shape) * 0.2).astype(np.float32)
+        for _n, shape in bptt.param_shapes(arch, s, m)
+    ]
+    zeros = [np.zeros_like(p) for p in params]
+    return params, [z.copy() for z in zeros], [z.copy() for z in zeros]
+
+
+def _data(batch, s, q, seed=0):
+    """Synthetic AR(1)-flavoured task: y = mean of last two inputs."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, s, q)).astype(np.float32)
+    y = 0.5 * (x[:, 0, -1] + x[:, 0, -2]).astype(np.float32)
+    return x, y
+
+
+@pytest.mark.parametrize("arch", bptt.BPTT_ARCHS)
+def test_loss_decreases(arch):
+    batch, s, q, m = 64, 1, 6, 10
+    fn, inputs, outputs = bptt.bptt_step(arch, batch, s, q, m)
+    params, ms, vs = _init(arch, s, m, seed=1)
+    x, y = _data(batch, s, q, seed=2)
+
+    losses = []
+    for t in range(1, 41):
+        out = fn(np.array([float(t)], np.float32), x, y, *params, *ms, *vs)
+        losses.append(float(out[0][0]))
+        n = len(params)
+        params = [np.asarray(a) for a in out[1 : 1 + n]]
+        ms = [np.asarray(a) for a in out[1 + n : 1 + 2 * n]]
+        vs = [np.asarray(a) for a in out[1 + 2 * n : 1 + 3 * n]]
+    assert losses[-1] < 0.5 * losses[0], (arch, losses[0], losses[-1])
+
+
+@pytest.mark.parametrize("arch", bptt.BPTT_ARCHS)
+def test_step_abi(arch):
+    """Output count/order matches the manifest ABI: loss, params, m, v."""
+    batch, s, q, m = 8, 1, 3, 4
+    fn, inputs, outputs = bptt.bptt_step(arch, batch, s, q, m)
+    n = len(bptt.param_shapes(arch, s, m))
+    assert len(outputs) == 1 + 3 * n
+    assert outputs[0] == "loss"
+    arrays = [np.zeros(shape, np.float32) for _n, shape in inputs]
+    arrays[0] = np.array([1.0], np.float32)
+    out = fn(*arrays)
+    assert len(out) == len(outputs)
+    for got, (name, shape) in zip(out[1:], inputs[3:]):
+        assert np.asarray(got).shape == tuple(shape), name
+
+
+def test_adam_first_step_magnitude():
+    """At t=1 with bias correction, |update| ~ lr for any nonzero grad."""
+    arch, batch, s, q, m = "fc", 16, 1, 3, 4
+    fn, _i, _o = bptt.bptt_step(arch, batch, s, q, m)
+    params, ms, vs = _init(arch, s, m, seed=3)
+    x, y = _data(batch, s, q, seed=4)
+    out = fn(np.array([1.0], np.float32), x, y, *params, *ms, *vs)
+    new_params = [np.asarray(a) for a in out[1 : 1 + len(params)]]
+    deltas = np.concatenate(
+        [np.abs(n - p).ravel() for n, p in zip(new_params, params)]
+    )
+    # updates are lr * m_hat / (sqrt(v_hat) + eps) ~= lr * sign(g)
+    assert np.all(deltas <= bptt.ADAM_LR * 1.01)
+    assert np.median(deltas[deltas > 0]) > 0.1 * bptt.ADAM_LR
+
+
+@pytest.mark.parametrize("arch", bptt.BPTT_ARCHS)
+def test_predict_matches_forward(arch):
+    batch, s, q, m = 8, 1, 4, 5
+    fn, inputs, _o = bptt.bptt_predict(arch, batch, s, q, m)
+    params, _m, _v = _init(arch, s, m, seed=5)
+    x, _y = _data(batch, s, q, seed=6)
+    yhat = np.asarray(fn(x, *params)[0])
+    assert yhat.shape == (batch,)
+    assert np.all(np.isfinite(yhat))
+    # deterministic: same inputs, same outputs
+    yhat2 = np.asarray(fn(x, *params)[0])
+    np.testing.assert_array_equal(yhat, yhat2)
+
+
+def test_unknown_arch_rejected():
+    with pytest.raises(ValueError):
+        bptt.bptt_step("elman", 8, 1, 3, 4)

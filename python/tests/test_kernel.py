@@ -1,0 +1,85 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Every architecture, both variants (basic = Alg 2 untiled, opt = Alg 3
+tiled), multiple tile widths, non-trivial S/Q/M. Numerics must agree to
+float32 tolerance because under interpret=True the two paths compute the
+same graph with different blocking.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile.common import ARCHS, ShapeCfg
+from compile.kernels import h_pallas, ref
+from tests.conftest import make_inputs
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("variant", ["basic", "opt"])
+def test_kernel_matches_ref(arch, variant):
+    cfg = ShapeCfg(arch=arch, rows=64, s=3, q=7, m=6, variant=variant, block_rows=32)
+    x, extras, params = make_inputs(cfg, seed=7)
+    got = np.asarray(h_pallas(cfg)(x, *extras, *params))
+    want = np.asarray(ref.h_ref(arch, x, extras, params))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("block_rows", [16, 32])
+def test_tile_width_invariance(arch, block_rows):
+    """BS = 16 and BS = 32 (the paper's two configurations) must agree."""
+    cfg = ShapeCfg(arch=arch, rows=64, s=2, q=5, m=4, variant="opt", block_rows=block_rows)
+    x, extras, params = make_inputs(cfg, seed=11)
+    got = np.asarray(h_pallas(cfg)(x, *extras, *params))
+    want = np.asarray(ref.h_ref(arch, x, extras, params))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_basic_equals_opt(arch):
+    """Tiling must not change numerics (paper §7.3 robustness claim)."""
+    kw = dict(arch=arch, rows=96, s=2, q=6, m=5)
+    x, extras, params = make_inputs(ShapeCfg(variant="basic", **kw), seed=3)
+    basic = np.asarray(h_pallas(ShapeCfg(variant="basic", **kw))(x, *extras, *params))
+    opt = np.asarray(
+        h_pallas(ShapeCfg(variant="opt", block_rows=32, **kw))(x, *extras, *params)
+    )
+    np.testing.assert_allclose(basic, opt, **TOL)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_output_shape_and_dtype(arch):
+    cfg = ShapeCfg(arch=arch, rows=32, s=1, q=10, m=13, variant="opt", block_rows=16)
+    x, extras, params = make_inputs(cfg)
+    h = h_pallas(cfg)(x, *extras, *params)
+    assert h.shape == (cfg.rows, cfg.m)
+    assert str(h.dtype) == "float32"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_row_independence(arch):
+    """Permuting sample rows permutes H rows: thread (i, j) independence —
+    the property Basic-PR-ELM's parallelization rests on (§4.1.1)."""
+    cfg = ShapeCfg(arch=arch, rows=64, s=2, q=5, m=4, variant="opt", block_rows=32)
+    x, extras, params = make_inputs(cfg, seed=5)
+    perm = np.random.default_rng(0).permutation(cfg.rows)
+    h = np.asarray(h_pallas(cfg)(x, *extras, *params))
+    hp = np.asarray(
+        h_pallas(cfg)(x[perm], *[e[perm] for e in extras], *params)
+    )
+    np.testing.assert_allclose(hp, h[perm], **TOL)
+
+
+def test_bad_cfg_rejected():
+    with pytest.raises(ValueError):
+        ShapeCfg(arch="elman", rows=30, s=1, q=5, m=4, variant="opt", block_rows=32)
+    with pytest.raises(ValueError):
+        ShapeCfg(arch="nope", rows=32, s=1, q=5, m=4)
+    with pytest.raises(ValueError):
+        ShapeCfg(arch="elman", rows=32, s=0, q=5, m=4)
+    with pytest.raises(ValueError):
+        ShapeCfg(arch="elman", rows=32, s=1, q=5, m=4, variant="fast")

@@ -1,0 +1,93 @@
+"""Hypothesis sweeps: kernel vs ref over randomized shapes and inputs.
+
+Complements test_kernel.py's fixed shapes with property-based coverage of
+the (rows, S, Q, M, block_rows, variant) space — the L1 deliverable's
+"hypothesis sweeps the Pallas kernel's shapes/dtypes" requirement.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.common import ARCHS, ShapeCfg, extra_input_specs, param_specs
+from compile.kernels import h_pallas, ref
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def _inputs_from(data, cfg):
+    """Draw float32 inputs via hypothesis' random module."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    x = rng.standard_normal((cfg.rows, cfg.s, cfg.q), dtype=np.float32)
+    extras = [
+        (rng.standard_normal(shape, dtype=np.float32) * 0.2)
+        for _n, shape in extra_input_specs(cfg)
+    ]
+    params = [
+        rng.uniform(-0.6, 0.6, shape).astype(np.float32)
+        for _n, shape in param_specs(cfg)
+    ]
+    return x, extras, params
+
+
+@st.composite
+def shape_cfgs(draw):
+    arch = draw(st.sampled_from(ARCHS))
+    block_rows = draw(st.sampled_from([8, 16, 32]))
+    rows = block_rows * draw(st.integers(1, 3))
+    s = draw(st.integers(1, 4))
+    q = draw(st.integers(1, 12))
+    m = draw(st.integers(1, 24))
+    variant = draw(st.sampled_from(["basic", "opt"]))
+    return ShapeCfg(
+        arch=arch, rows=rows, s=s, q=q, m=m, variant=variant, block_rows=block_rows
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=shape_cfgs(), data=st.data())
+def test_kernel_matches_ref_over_shape_space(cfg, data):
+    x, extras, params = _inputs_from(data, cfg)
+    got = np.asarray(h_pallas(cfg)(x, *extras, *params))
+    want = np.asarray(ref.h_ref(cfg.arch, x, extras, params))
+    assert got.shape == (cfg.rows, cfg.m)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cfg=shape_cfgs(), data=st.data())
+def test_kernel_is_deterministic(cfg, data):
+    x, extras, params = _inputs_from(data, cfg)
+    fn = h_pallas(cfg)
+    a = np.asarray(fn(x, *extras, *params))
+    b = np.asarray(fn(x, *extras, *params))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    arch=st.sampled_from(ARCHS),
+    q=st.integers(1, 10),
+    m=st.integers(1, 16),
+    data=st.data(),
+)
+def test_outputs_bounded(arch, q, m, data):
+    """|H| <= 1 for every architecture (tanh / gated-tanh output)."""
+    cfg = ShapeCfg(arch=arch, rows=16, s=2, q=q, m=m, variant="basic")
+    x, extras, params = _inputs_from(data, cfg)
+    h = np.asarray(h_pallas(cfg)(x, *extras, *params))
+    assert np.all(np.isfinite(h))
+    assert np.all(np.abs(h) <= 1.0 + 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg=shape_cfgs(), data=st.data())
+def test_row_independence_property(cfg, data):
+    """Thread-(i, j) independence (§4.1.1): permuting rows permutes H."""
+    x, extras, params = _inputs_from(data, cfg)
+    perm = np.random.default_rng(0).permutation(cfg.rows)
+    fn = h_pallas(cfg)
+    h = np.asarray(fn(x, *extras, *params))
+    hp = np.asarray(fn(x[perm], *[e[perm] for e in extras], *params))
+    np.testing.assert_allclose(hp, h[perm], **TOL)

@@ -1,0 +1,63 @@
+"""Manifest grid sanity: unique names, well-formed ABI entries, coverage."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import manifest
+from compile.common import ARCHS
+
+
+def test_names_unique():
+    specs = manifest.specs()
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+
+
+def test_grid_covers_experiments():
+    """Every config the experiment index (DESIGN.md §4) needs must exist."""
+    specs = manifest.specs()
+    key = {(s.kind, s.arch, s.q, s.m) for s in specs}
+    for arch in ARCHS:
+        # Fig 4: M sweep at Q=10
+        for m in (5, 10, 20, 50, 100):
+            assert ("elm_gram", arch, 10, m) in key
+        # Fig 3 / Table 5: M=50 at both Q regimes
+        assert ("elm_gram", arch, 50, 50) in key
+        # Table 4 eval configs
+        assert ("elm_predict", arch, 10, 10) in key
+        assert ("elm_predict", arch, 50, 20) in key
+        assert ("elm_predict", arch, 64, 100) in key
+    for arch in ("fc", "lstm", "gru"):
+        for q in (10, 50):
+            assert ("bptt_step", arch, q, 10) in key
+            assert ("bptt_predict", arch, q, 10) in key
+
+
+def test_entries_well_formed():
+    for spec in manifest.specs()[:12]:
+        e = manifest.manifest_entry(spec)
+        assert e["file"] == e["name"] + ".hlo.txt"
+        assert e["outputs"], e["name"]
+        assert all(i["dtype"] == "f32" for i in e["inputs"])
+        assert all(all(d > 0 for d in i["shape"]) for i in e["inputs"])
+        # input names unique within an entry (positional ABI sanity)
+        names = [i["name"] for i in e["inputs"]]
+        assert len(names) == len(set(names))
+
+
+@pytest.mark.parametrize("kind", ["elm_gram", "elm_predict", "elm_h"])
+def test_builders_run(kind):
+    """Every ELM builder in the grid must trace with its declared shapes."""
+    spec = next(s for s in manifest.specs() if s.kind == kind and s.arch == "gru")
+    fn, inputs, outputs = spec.build()
+    args = [np.zeros(shape, np.float32) for _n, shape in inputs]
+    out = fn(*args)
+    assert len(out) == len(outputs)
+
+
+def test_rows_divisible_by_block():
+    for s in manifest.specs():
+        if s.kind.startswith("elm_"):
+            assert s.rows % s.block_rows == 0

@@ -1,0 +1,101 @@
+"""L2 graph semantics: gram fusion, masking, predict."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.common import ARCHS, ShapeCfg
+from compile.kernels import ref
+from tests.conftest import make_inputs
+
+TOL = dict(rtol=5e-4, atol=5e-5)
+
+
+def _cfg(arch, **kw):
+    d = dict(rows=64, s=2, q=5, m=4, variant="opt", block_rows=32)
+    d.update(kw)
+    return ShapeCfg(arch=arch, **d)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_gram_equals_explicit(arch):
+    """elm_gram's fused HtH/HtY must equal the oracle H's products."""
+    cfg = _cfg(arch)
+    x, extras, params = make_inputs(cfg, seed=21)
+    rng = np.random.default_rng(22)
+    y = rng.standard_normal(cfg.rows).astype(np.float32)
+    mask = np.ones(cfg.rows, np.float32)
+
+    fn, inputs, outputs = model.elm_gram(cfg)
+    assert outputs == ["hth", "hty"]
+    hth, hty = fn(x, *extras, *params, y, mask)
+
+    h = np.asarray(ref.h_ref(arch, x, extras, params))
+    np.testing.assert_allclose(np.asarray(hth), h.T @ h, **TOL)
+    np.testing.assert_allclose(np.asarray(hty), h.T @ y, **TOL)
+
+
+@pytest.mark.parametrize("arch", ["elman", "lstm"])
+def test_gram_mask_excludes_padded_rows(arch):
+    """Masked rows must contribute nothing: streaming a padded tail block
+    must equal the unpadded computation (coordinator invariant)."""
+    cfg = _cfg(arch)
+    x, extras, params = make_inputs(cfg, seed=30)
+    rng = np.random.default_rng(31)
+    y = rng.standard_normal(cfg.rows).astype(np.float32)
+    keep = 40
+    mask = np.zeros(cfg.rows, np.float32)
+    mask[:keep] = 1.0
+    # poison the padded region: must not leak into the sums
+    x = x.copy()
+    x[keep:] = 1e6
+    y = y.copy()
+    y[keep:] = 1e6
+
+    fn, _i, _o = model.elm_gram(cfg)
+    hth, hty = fn(x, *extras, *params, y, mask)
+
+    h = np.asarray(ref.h_ref(arch, x, extras, params))[:keep]
+    np.testing.assert_allclose(np.asarray(hth), h.T @ h, **TOL)
+    np.testing.assert_allclose(np.asarray(hty), h.T @ y[:keep], **TOL)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_predict_is_h_dot_beta(arch):
+    cfg = _cfg(arch)
+    x, extras, params = make_inputs(cfg, seed=40)
+    beta = np.random.default_rng(41).standard_normal(cfg.m).astype(np.float32)
+    fn, _i, _o = model.elm_predict(cfg)
+    yhat = np.asarray(fn(x, *extras, *params, beta)[0])
+    h = np.asarray(ref.h_ref(arch, x, extras, params))
+    np.testing.assert_allclose(yhat, h @ beta, **TOL)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_match_abi(arch):
+    """The recorded input specs must exactly describe what fn accepts."""
+    cfg = _cfg(arch)
+    fn, inputs, _o = model.elm_gram(cfg)
+    arrays = [np.zeros(shape, np.float32) for _n, shape in inputs]
+    hth, hty = fn(*arrays)
+    assert np.asarray(hth).shape == (cfg.m, cfg.m)
+    assert np.asarray(hty).shape == (cfg.m,)
+    names = [n for n, _s in inputs]
+    assert names[0] == "x" and names[-2:] == ["y", "mask"]
+    assert len(set(names)) == len(names)
+
+
+def test_gram_solve_recovers_linear_model():
+    """End-to-end ELM property: with enough random neurons, solving
+    (HtH + lam I) beta = HtY fits a smooth target to low error."""
+    cfg = _cfg("elman", rows=256, m=50, q=5, s=1)
+    x, extras, params = make_inputs(cfg, seed=50)
+    h = np.asarray(ref.h_ref("elman", x, extras, params)).astype(np.float64)
+    # target: a smooth function of the inputs
+    y = np.tanh(x[:, 0, -1] * 0.7 + 0.3 * x[:, 0, 0])
+    g = h.T @ h + 1e-8 * np.eye(cfg.m)
+    beta = np.linalg.solve(g, h.T @ y)
+    resid = h @ beta - y
+    assert np.sqrt(np.mean(resid**2)) < 0.05

@@ -1,0 +1,126 @@
+"""Semantic properties of the oracles themselves (Eq 6-11 fidelity).
+
+The kernels are tested *against* ref.py; these tests pin ref.py to the
+paper's equations so the whole chain is anchored.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.common import ShapeCfg, sigmoid
+from compile.kernels import ref
+from tests.conftest import make_inputs
+
+
+def _mk(arch, seed=0, **kw):
+    cfg = ShapeCfg(arch=arch, variant="basic", **kw)
+    return (cfg,) + make_inputs(cfg, seed)
+
+
+def test_elman_zero_alpha_is_feedforward():
+    """With alpha = 0, Eq 6 collapses to g(w.x(Q) + b): a plain SLFN on the
+    last timestep."""
+    cfg, x, _e, (w, b, alpha) = _mk("elman", rows=16, s=3, q=5, m=4)
+    h = ref.elman_h(x, w, b, np.zeros_like(alpha))
+    want = np.tanh(x[:, :, -1] @ w + b[None, :])
+    np.testing.assert_allclose(np.asarray(h), want, rtol=1e-5, atol=1e-6)
+
+
+def test_elman_one_step_recurrence():
+    """Q = 2: h(2) = g(w.x(2) + b + alpha[:,0] * h(1)) exactly."""
+    cfg, x, _e, (w, b, alpha) = _mk("elman", rows=8, s=2, q=2, m=3, seed=9)
+    h1 = np.tanh(x[:, :, 0] @ w + b[None, :])
+    want = np.tanh(x[:, :, 1] @ w + b[None, :] + alpha[:, 0][None, :] * h1)
+    got = np.asarray(ref.elman_h(x, w, b, alpha))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_jordan_is_affine_in_yhist():
+    """Eq 7 pre-activation is linear in the teacher-forced targets."""
+    cfg, x, (yh,), (w, b, alpha) = _mk("jordan", rows=8, s=2, q=4, m=3)
+    h0 = np.arctanh(np.asarray(ref.jordan_h(x, w, b, alpha, np.zeros_like(yh))))
+    h1 = np.arctanh(np.asarray(ref.jordan_h(x, w, b, alpha, yh)))
+    h2 = np.arctanh(np.asarray(ref.jordan_h(x, w, b, alpha, 2.0 * yh)))
+    np.testing.assert_allclose(h2 - h0, 2.0 * (h1 - h0), rtol=1e-3, atol=1e-4)
+
+
+def test_narmax_zero_error_matches_jordan_form():
+    """With W'' = 0 / ehist = 0, NARMAX (Eq 8) equals Jordan with wp as
+    alpha (both feed back outputs only)."""
+    cfg, x, (yh, eh), (w, b, wp, wpp) = _mk("narmax", rows=8, s=2, q=4, m=3)
+    nm = np.asarray(ref.narmax_h(x, w, b, wp, wpp, yh, np.zeros_like(eh)))
+    jd = np.asarray(ref.jordan_h(x, w, b, wp, yh))
+    np.testing.assert_allclose(nm, jd, rtol=1e-5, atol=1e-6)
+
+
+def test_fc_diagonal_alpha_equals_elman():
+    """Eq 9 with alpha[j, l, k] = delta_jl * a[j, k] reduces to Eq 6."""
+    cfg, x, _e, (w, b, alpha2) = _mk("elman", rows=8, s=2, q=4, m=3, seed=4)
+    m, q = alpha2.shape
+    alpha3 = np.zeros((m, m, q), np.float32)
+    for j in range(m):
+        alpha3[j, j, :] = alpha2[j, :]
+    fc = np.asarray(ref.fc_h(x, w, b, alpha3))
+    el = np.asarray(ref.elman_h(x, w, b, alpha2))
+    np.testing.assert_allclose(fc, el, rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_forget_gate_zero_kills_memory():
+    """Large negative forget-gate bias => c(t) ~ in*c~ only: output at Q
+    depends only on x(Q), not on earlier timesteps."""
+    cfg, x, _e, (w4, u4, b4) = _mk("lstm", rows=8, s=2, q=5, m=3, seed=2)
+    u4 = u4.copy()
+    b4 = b4.copy()
+    u4[2, :] = 0.0  # forget gate: no recurrent term
+    b4[2, :] = -30.0  # sigmoid -> 0
+    u4[0, :] = 0.0  # output gate: no recurrent term
+    u4[1, :] = 0.0  # candidate: no recurrent term
+    u4[3, :] = 0.0  # input gate: no recurrent term
+    h = np.asarray(ref.lstm_h(x, w4, u4, b4))
+    x2 = x.copy()
+    x2[:, :, :-1] = 7.7  # scramble every timestep except the last
+    h2 = np.asarray(ref.lstm_h(x2, w4, u4, b4))
+    np.testing.assert_allclose(h, h2, rtol=1e-4, atol=1e-5)
+
+
+def test_gru_z_zero_freezes_state():
+    """z(t) = 0 (large negative bias) => f(t) = f(t-1) = ... = 0."""
+    cfg, x, _e, (w3, u3, b3) = _mk("gru", rows=8, s=2, q=5, m=3, seed=2)
+    b3 = b3.copy()
+    b3[0, :] = -30.0  # update gate z -> 0
+    h = np.asarray(ref.gru_h(x, w3, u3, b3))
+    np.testing.assert_allclose(h, np.zeros_like(h), atol=1e-5)
+
+
+def test_gru_z_one_is_memoryless_candidate():
+    """z(t) = 1 => f(t) = tanh(W_f x(t) + ...) with f(t-1)=... prev-state
+    terms only through r*f_prev; with u3[f]=0 it's purely feedforward."""
+    cfg, x, _e, (w3, u3, b3) = _mk("gru", rows=8, s=2, q=4, m=3, seed=8)
+    b3 = b3.copy()
+    u3 = u3.copy()
+    b3[0, :] = 30.0  # z -> 1
+    u3[2, :] = 0.0  # candidate ignores previous state
+    h = np.asarray(ref.gru_h(x, w3, u3, b3))
+    want = np.tanh(x[:, :, -1] @ w3[:, 2, :] + b3[2][None, :])
+    np.testing.assert_allclose(h, want, rtol=1e-4, atol=1e-5)
+
+
+def test_outputs_bounded_by_activation():
+    """tanh output layer => |H| <= 1 for every architecture."""
+    for arch in ("elman", "jordan", "narmax", "fc", "gru"):
+        cfg, x, extras, params = _mk(arch, rows=16, s=2, q=4, m=3, seed=1)
+        h = np.asarray(ref.h_ref(arch, x, extras, params))
+        assert np.all(np.abs(h) <= 1.0 + 1e-6), arch
+    # LSTM: f = o * tanh(c), o in (0,1) => also bounded by 1.
+    cfg, x, extras, params = _mk("lstm", rows=16, s=2, q=4, m=3, seed=1)
+    h = np.asarray(ref.h_ref("lstm", x, extras, params))
+    assert np.all(np.abs(h) <= 1.0 + 1e-6)
+
+
+def test_sigmoid_matches_numpy():
+    z = np.linspace(-10, 10, 101).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(sigmoid(jnp.asarray(z))), 1.0 / (1.0 + np.exp(-z)), rtol=1e-6
+    )

@@ -1,0 +1,12 @@
+//! Fig 3 regeneration: Basic vs Opt (BS 16/32) speedups per architecture
+//! across the ten datasets (gpusim at paper sizes).
+
+use opt_pr_elm::report::{run_report, ReportCtx};
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() {
+    let ctx = ReportCtx::new(default_artifacts_dir());
+    for t in run_report("fig3", &ctx).expect("fig3 is analytic") {
+        println!("{}", t.to_markdown());
+    }
+}

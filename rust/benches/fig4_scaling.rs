@@ -1,0 +1,19 @@
+//! Fig 4 regeneration: speedup vs M (modeled at paper size + measured
+//! pipeline sweep on this machine).
+
+use opt_pr_elm::report::{run_report, ReportCtx};
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping fig4 bench: run `make artifacts` first");
+        return;
+    }
+    let mut ctx = ReportCtx::new(default_artifacts_dir());
+    ctx.scale = 0.01;
+    let t0 = std::time::Instant::now();
+    for t in run_report("fig4", &ctx).expect("fig4") {
+        println!("{}", t.to_markdown());
+    }
+    eprintln!("fig4 in {:.1}s", t0.elapsed().as_secs_f64());
+}

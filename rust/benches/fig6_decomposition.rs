@@ -1,0 +1,22 @@
+//! Fig 6 regeneration: the phase decomposition of one Opt-PR-ELM run,
+//! measured from the pipeline clocks + modeled at paper size. Also covers
+//! Fig 5 (the BPTT loss-vs-time race) in bench-sized form.
+
+use opt_pr_elm::report::{run_report, ReportCtx};
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping fig5/6 bench: run `make artifacts` first");
+        return;
+    }
+    let mut ctx = ReportCtx::new(default_artifacts_dir());
+    ctx.scale = 0.5;
+    for id in ["fig6", "fig5"] {
+        let t0 = std::time::Instant::now();
+        for t in run_report(id, &ctx).expect(id) {
+            println!("{}", t.to_markdown());
+        }
+        eprintln!("{id} in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+}

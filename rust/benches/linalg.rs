@@ -1,0 +1,47 @@
+//! Microbenches for the β-solve substrate: Householder QR vs TSQR vs the
+//! ridge/Cholesky path at ELM-shaped sizes (tall-skinny, M ≤ 100).
+
+use std::time::Duration;
+
+use opt_pr_elm::linalg::{householder_qr, lstsq_qr, lstsq_ridge, Matrix, TsqrAccumulator};
+use opt_pr_elm::util::rng::Rng;
+use opt_pr_elm::util::timer::bench;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    println!("== linalg microbench (β solve substrate) ==");
+    for (n, m) in [(1000usize, 20usize), (5000, 50), (20000, 50), (5000, 100)] {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(n, m, &mut rng);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        let r = bench(&format!("householder_qr {n}x{m}"), 1, budget, 50, || {
+            householder_qr(&a).unwrap()
+        });
+        println!("{}", r.summary());
+
+        let r = bench(&format!("lstsq_qr {n}x{m}"), 1, budget, 50, || {
+            lstsq_qr(&a, &b).unwrap()
+        });
+        println!("{}", r.summary());
+
+        let r = bench(&format!("lstsq_ridge {n}x{m}"), 1, budget, 50, || {
+            lstsq_ridge(&a, &b, 1e-8).unwrap()
+        });
+        println!("{}", r.summary());
+
+        let r = bench(&format!("tsqr(block=256) {n}x{m}"), 1, budget, 50, || {
+            let mut acc = TsqrAccumulator::new(m);
+            let mut i = 0;
+            while i < n {
+                let hi = (i + 256).min(n);
+                let rows: Vec<Vec<f64>> = (i..hi).map(|r| a.row(r).to_vec()).collect();
+                acc.push_block(&Matrix::from_rows(&rows), &b[i..hi]).unwrap();
+                i = hi;
+            }
+            acc.solve().unwrap()
+        });
+        println!("{}", r.summary());
+        println!();
+    }
+}

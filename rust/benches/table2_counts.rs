@@ -1,0 +1,32 @@
+//! Table 2 regeneration: the per-architecture operation counts and the
+//! Basic→Opt read-reduction sweep over tile widths.
+
+use opt_pr_elm::report::{run_report, ReportCtx};
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() {
+    let ctx = ReportCtx::new(default_artifacts_dir());
+    for t in run_report("table2", &ctx).expect("table2 is analytic") {
+        println!("{}", t.to_markdown());
+    }
+    // extra: read-reduction vs tile width (the §5 TW² claim)
+    use opt_pr_elm::elm::ALL_ARCHS;
+    use opt_pr_elm::gpusim::counts::op_counts;
+    use opt_pr_elm::gpusim::Variant;
+    println!("### read reduction vs TW (S=1, Q=50, M=50)\n");
+    print!("| arch |");
+    for tw in [4, 8, 16, 32] {
+        print!(" TW={tw} |");
+    }
+    println!();
+    println!("|------|------|------|------|------|");
+    for arch in ALL_ARCHS {
+        print!("| {} |", arch.name());
+        for tw in [4usize, 8, 16, 32] {
+            let b = op_counts(arch, Variant::Basic, 1, 50, 50, tw);
+            let o = op_counts(arch, Variant::Opt, 1, 50, 50, tw);
+            print!(" {:.0}x |", b.reads / o.reads);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,26 @@
+//! Table 4 regeneration (measured): RMSE ± std of S-R-ELM vs Opt-PR-ELM.
+//! Bench-sized by default; `repro report table4 --scale ... --reps 5` runs
+//! the fuller version.
+
+use opt_pr_elm::report::{run_report, ReportCtx};
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping table4 bench: run `make artifacts` first");
+        return;
+    }
+    let mut ctx = ReportCtx::new(default_artifacts_dir());
+    ctx.scale = 0.01;
+    ctx.reps = 2;
+    let t0 = std::time::Instant::now();
+    for t in run_report("table4", &ctx).expect("table4") {
+        println!("{}", t.to_markdown());
+    }
+    eprintln!(
+        "table4 (scale {}, reps {}) in {:.1}s",
+        ctx.scale,
+        ctx.reps,
+        t0.elapsed().as_secs_f64()
+    );
+}

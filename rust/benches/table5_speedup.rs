@@ -1,0 +1,19 @@
+//! Table 5 regeneration: modeled Tesla/Quadro speedups at paper sizes +
+//! the measured pipeline-vs-sequential column on this machine.
+
+use opt_pr_elm::report::{run_report, ReportCtx};
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping table5 bench: run `make artifacts` first");
+        return;
+    }
+    let mut ctx = ReportCtx::new(default_artifacts_dir());
+    ctx.scale = 0.02;
+    let t0 = std::time::Instant::now();
+    for t in run_report("table5", &ctx).expect("table5") {
+        println!("{}", t.to_markdown());
+    }
+    eprintln!("table5 in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,18 @@
+//! Table 6 regeneration (measured): Opt-PR-ELM vs P-BPTT runtimes.
+
+use opt_pr_elm::report::{run_report, ReportCtx};
+use opt_pr_elm::runtime::default_artifacts_dir;
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping table6 bench: run `make artifacts` first");
+        return;
+    }
+    let mut ctx = ReportCtx::new(default_artifacts_dir());
+    ctx.scale = 0.02;
+    let t0 = std::time::Instant::now();
+    for t in run_report("table6", &ctx).expect("table6") {
+        println!("{}", t.to_markdown());
+    }
+    eprintln!("table6 in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,178 @@
+//! The P-BPTT epoch loop: minibatch → `bptt_step` artifact → updated
+//! parameter/optimizer state, with wall-clock MSE logging (Fig 5).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::window::Windowed;
+use crate::runtime::{Buf, EnginePool, Manifest};
+
+use super::init::{bptt_param_shapes, init_params, BpttArch};
+
+/// One point of the Fig-5 loss curve.
+#[derive(Debug, Clone, Copy)]
+pub struct LossPoint {
+    /// seconds since training started
+    pub t_s: f64,
+    /// minibatch MSE at that moment
+    pub mse: f64,
+    pub step: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainLog {
+    pub points: Vec<LossPoint>,
+    pub total_s: f64,
+    pub epochs: usize,
+    pub steps: usize,
+}
+
+/// A trained comparator model.
+#[derive(Debug, Clone)]
+pub struct BpttModel {
+    pub arch: BpttArch,
+    pub s: usize,
+    pub q: usize,
+    pub m: usize,
+    pub params: Vec<Vec<f32>>,
+}
+
+/// Drives the AOT train-step executable.
+pub struct BpttTrainer {
+    pool: EnginePool,
+    manifest: Manifest,
+    pub epochs: usize,
+    pub batch: usize,
+}
+
+impl BpttTrainer {
+    pub fn new(artifacts_dir: &Path) -> Result<BpttTrainer> {
+        Ok(BpttTrainer {
+            // one engine: the step is inherently sequential (state carry)
+            pool: EnginePool::new(artifacts_dir, 1)?,
+            manifest: Manifest::load(artifacts_dir)?,
+            epochs: 10, // §7.6: "trained for 10 epochs with 64 as batch size"
+            batch: 64,
+        })
+    }
+
+    /// Train on `data`; returns the model and the MSE-vs-time log.
+    pub fn train(
+        &self,
+        arch: BpttArch,
+        data: &Windowed,
+        m: usize,
+        seed: u64,
+    ) -> Result<(BpttModel, TrainLog)> {
+        let meta = self
+            .manifest
+            .find("bptt_step", arch.name(), data.q, m)
+            .context("selecting bptt_step artifact")?
+            .clone();
+        if meta.rows != self.batch {
+            return Err(anyhow!(
+                "bptt_step artifact batch {} != configured batch {}",
+                meta.rows,
+                self.batch
+            ));
+        }
+        let shapes = bptt_param_shapes(arch, data.s, m);
+        let mut params = init_params(arch, data.s, m, seed);
+        let mut ms: Vec<Vec<f32>> = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let mut vs = ms.clone();
+        let n_params = params.len();
+
+        // warm the executable so compile time is not charged to training
+        self.pool.prepare_all(&meta.name)?;
+
+        let n_batches = data.n / self.batch; // drop the ragged tail
+        if n_batches == 0 {
+            return Err(anyhow!("dataset too small for batch {}", self.batch));
+        }
+        let sq = data.s * data.q;
+        let mut points = Vec::new();
+        let t0 = Instant::now();
+        let mut step = 0usize;
+        for _epoch in 0..self.epochs {
+            for b in 0..n_batches {
+                step += 1;
+                let lo = b * self.batch;
+                let hi = lo + self.batch;
+                let mut inputs = Vec::with_capacity(3 + 3 * n_params);
+                inputs.push(Buf::scalarish(step as f32));
+                inputs.push(Buf::new(
+                    vec![self.batch, data.s, data.q],
+                    data.x[lo * sq..hi * sq].to_vec(),
+                ));
+                inputs.push(Buf::new(vec![self.batch], data.y[lo..hi].to_vec()));
+                for p in &params {
+                    inputs.push(Buf::vec(p.clone()));
+                }
+                for mm in &ms {
+                    inputs.push(Buf::vec(mm.clone()));
+                }
+                for vv in &vs {
+                    inputs.push(Buf::vec(vv.clone()));
+                }
+                // reshape flat bufs to declared ABI dims
+                for (buf, spec) in inputs.iter_mut().zip(&meta.inputs) {
+                    buf.dims = spec.shape.clone();
+                }
+                let out = self.pool.run_on(0, &meta.name, inputs)?;
+                let loss = out[0].data[0] as f64;
+                for (i, p) in params.iter_mut().enumerate() {
+                    *p = out[1 + i].data.clone();
+                }
+                for (i, mm) in ms.iter_mut().enumerate() {
+                    *mm = out[1 + n_params + i].data.clone();
+                }
+                for (i, vv) in vs.iter_mut().enumerate() {
+                    *vv = out[1 + 2 * n_params + i].data.clone();
+                }
+                points.push(LossPoint { t_s: t0.elapsed().as_secs_f64(), mse: loss, step });
+            }
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+        let log = TrainLog { points, total_s, epochs: self.epochs, steps: step };
+        let model = BpttModel { arch, s: data.s, q: data.q, m, params };
+        Ok((model, log))
+    }
+
+    /// Batched predictions via the `bptt_predict` artifact (padded tail).
+    pub fn predict(&self, model: &BpttModel, data: &Windowed) -> Result<Vec<f64>> {
+        let meta = self
+            .manifest
+            .find("bptt_predict", model.arch.name(), data.q, model.m)
+            .context("selecting bptt_predict artifact")?
+            .clone();
+        let b = meta.rows;
+        let sq = data.s * data.q;
+        let mut out = vec![0f64; data.n];
+        let mut lo = 0usize;
+        while lo < data.n {
+            let hi = (lo + b).min(data.n);
+            let valid = hi - lo;
+            let mut x = vec![0f32; b * sq];
+            x[..valid * sq].copy_from_slice(&data.x[lo * sq..hi * sq]);
+            let mut inputs = vec![Buf::new(vec![b, data.s, data.q], x)];
+            for (p, spec) in model.params.iter().zip(&meta.inputs[1..]) {
+                inputs.push(Buf::new(spec.shape.clone(), p.clone()));
+            }
+            let res = self.pool.run_on(0, &meta.name, inputs)?;
+            for r in 0..valid {
+                out[lo + r] = res[0].data[r] as f64;
+            }
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// Test MSE through the predict path.
+    pub fn mse(&self, model: &BpttModel, data: &Windowed) -> Result<f64> {
+        let pred = self.predict(model, data)?;
+        let truth: Vec<f64> = data.y.iter().map(|&v| v as f64).collect();
+        Ok(crate::data::stats::mse(&pred, &truth))
+    }
+}

@@ -1,0 +1,101 @@
+//! BPTT parameter initialization — shapes mirror
+//! `python/compile/bptt.py::param_shapes` (the artifact ABI).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// The three architectures the paper's §7.6 comparison covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BpttArch {
+    Fc,
+    Lstm,
+    Gru,
+}
+
+impl BpttArch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BpttArch::Fc => "fc",
+            BpttArch::Lstm => "lstm",
+            BpttArch::Gru => "gru",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BpttArch> {
+        Ok(match s {
+            "fc" => BpttArch::Fc,
+            "lstm" => BpttArch::Lstm,
+            "gru" => BpttArch::Gru,
+            other => bail!("P-BPTT covers fc/lstm/gru, not {other:?}"),
+        })
+    }
+
+    pub fn gates(&self) -> usize {
+        match self {
+            BpttArch::Fc => 1,
+            BpttArch::Lstm => 4,
+            BpttArch::Gru => 3,
+        }
+    }
+}
+
+/// (name, shape) in ABI order: wx, wh, b, wo, bo.
+pub fn bptt_param_shapes(arch: BpttArch, s: usize, m: usize) -> Vec<(&'static str, Vec<usize>)> {
+    let g = arch.gates();
+    vec![
+        ("wx", vec![s, g * m]),
+        ("wh", vec![m, g * m]),
+        ("b", vec![g * m]),
+        ("wo", vec![m]),
+        ("bo", vec![1]),
+    ]
+}
+
+/// Glorot-ish initialization (matches what TF's defaults would roughly do).
+pub fn init_params(arch: BpttArch, s: usize, m: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    bptt_param_shapes(arch, s, m)
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let fan_in = shape.first().copied().unwrap_or(1).max(1) as f64;
+            let scale = match *name {
+                "b" | "bo" => 0.0,
+                _ => (1.0 / fan_in).sqrt(),
+            };
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_python_abi() {
+        let shapes = bptt_param_shapes(BpttArch::Lstm, 1, 10);
+        assert_eq!(shapes[0], ("wx", vec![1, 40]));
+        assert_eq!(shapes[1], ("wh", vec![10, 40]));
+        assert_eq!(shapes[2], ("b", vec![40]));
+        assert_eq!(shapes[3], ("wo", vec![10]));
+        assert_eq!(shapes[4], ("bo", vec![1]));
+    }
+
+    #[test]
+    fn init_deterministic_biases_zero() {
+        let a = init_params(BpttArch::Gru, 1, 8, 5);
+        let b = init_params(BpttArch::Gru, 1, 8, 5);
+        assert_eq!(a, b);
+        assert!(a[2].iter().all(|&v| v == 0.0), "b starts at zero");
+        assert!(a[4].iter().all(|&v| v == 0.0), "bo starts at zero");
+        assert!(a[0].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn parse_rejects_elm_only_archs() {
+        assert!(BpttArch::parse("elman").is_err());
+        assert_eq!(BpttArch::parse("lstm").unwrap(), BpttArch::Lstm);
+    }
+}

@@ -1,0 +1,14 @@
+//! P-BPTT comparator (§7.6, Table 6, Fig 5): iterative Adam training of
+//! standard full FC-RNN / LSTM / GRU cells, driven from rust.
+//!
+//! The fwd/bwd/Adam train step is a single AOT HLO executable per
+//! architecture (`bptt_step_*`, lowered by `python/compile/bptt.py` with
+//! `jax.value_and_grad`); this module owns the epoch loop, minibatching,
+//! parameter state, and the MSE-vs-wallclock log the paper plots in Fig 5.
+//! Matching the paper's setup: 10 epochs, batch 64, MSE loss, Adam.
+
+pub mod driver;
+pub mod init;
+
+pub use driver::{BpttModel, BpttTrainer, LossPoint, TrainLog};
+pub use init::{bptt_param_shapes, init_params, BpttArch};

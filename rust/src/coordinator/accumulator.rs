@@ -1,0 +1,232 @@
+//! Normal-equation / TSQR accumulation of per-block partials.
+//!
+//! Two solve strategies, selectable per job:
+//!
+//! * `Gram` — fold the (HᵀH, HᵀY) partials the `elm_gram` artifacts emit
+//!   (f32 on the wire, widened to f64 on accumulation), solve the ridge
+//!   system by Cholesky. One artifact execution per block; O(M²) traffic.
+//! * `Tsqr` — fold raw H blocks (`elm_h` artifacts) into the
+//!   communication-avoiding QR accumulator. Exact least squares (no
+//!   condition-number squaring); O(R·M) traffic per block.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{Matrix, TsqrAccumulator};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveStrategy {
+    Gram,
+    Tsqr,
+}
+
+/// Streaming (HᵀH, HᵀY) accumulator (f64).
+pub struct GramAccumulator {
+    m: usize,
+    g: Matrix,
+    c: Vec<f64>,
+    rows: usize,
+    lambda: f64,
+}
+
+impl GramAccumulator {
+    pub fn new(m: usize, lambda: f64) -> GramAccumulator {
+        GramAccumulator { m, g: Matrix::zeros(m, m), c: vec![0.0; m], rows: 0, lambda }
+    }
+
+    /// Fold one block's partial sums (row-major M×M and length-M, f32).
+    pub fn push_partials(&mut self, hth: &[f32], hty: &[f32], valid_rows: usize) -> Result<()> {
+        if hth.len() != self.m * self.m || hty.len() != self.m {
+            bail!(
+                "partial shapes ({}, {}) do not match M = {}",
+                hth.len(),
+                hty.len(),
+                self.m
+            );
+        }
+        for a in 0..self.m {
+            for b in 0..self.m {
+                self.g[(a, b)] += hth[a * self.m + b] as f64;
+            }
+        }
+        for (cj, &v) in self.c.iter_mut().zip(hty) {
+            *cj += v as f64;
+        }
+        self.rows += valid_rows;
+        Ok(())
+    }
+
+    pub fn rows_seen(&self) -> usize {
+        self.rows
+    }
+
+    /// Solve (G + λI)β = c. The partials arrive as f32 sums, so a nearly
+    /// singular G can be numerically indefinite; escalate λ by 100× (up to
+    /// twice) until the Cholesky succeeds.
+    pub fn solve(&self) -> Result<Vec<f64>> {
+        if self.rows < self.m {
+            bail!("underdetermined: {} rows < M = {}", self.rows, self.m);
+        }
+        let mut lambda = self.lambda;
+        for attempt in 0..3 {
+            match crate::linalg::solve::lstsq_ridge_from_parts(&self.g, &self.c, lambda) {
+                Ok(beta) => return Ok(beta),
+                Err(e) if attempt < 2 => {
+                    let _ = e; // f32 noise made G indefinite: regularize harder
+                    lambda *= 100.0;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!()
+    }
+
+    /// Merge a peer accumulator (tree reduction).
+    pub fn merge(&mut self, other: &GramAccumulator) -> Result<()> {
+        if other.m != self.m {
+            bail!("accumulator width mismatch");
+        }
+        for a in 0..self.m {
+            for b in 0..self.m {
+                self.g[(a, b)] += other.g[(a, b)];
+            }
+        }
+        for (cj, v) in self.c.iter_mut().zip(&other.c) {
+            *cj += v;
+        }
+        self.rows += other.rows;
+        Ok(())
+    }
+}
+
+/// Unified accumulator over both strategies.
+pub enum BetaAccumulator {
+    Gram(GramAccumulator),
+    Tsqr(TsqrAccumulator),
+}
+
+impl BetaAccumulator {
+    pub fn new(strategy: SolveStrategy, m: usize) -> BetaAccumulator {
+        match strategy {
+            SolveStrategy::Gram => BetaAccumulator::Gram(GramAccumulator::new(m, 1e-8)),
+            SolveStrategy::Tsqr => BetaAccumulator::Tsqr(TsqrAccumulator::new(m)),
+        }
+    }
+
+    pub fn solve(&self) -> Result<Vec<f64>> {
+        match self {
+            BetaAccumulator::Gram(g) => g.solve(),
+            BetaAccumulator::Tsqr(t) => t.solve(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_h_y(n: usize, m: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let h: Vec<f32> = (0..n * m).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        (h, y)
+    }
+
+    fn partials(h: &[f32], y: &[f32], m: usize) -> (Vec<f32>, Vec<f32>) {
+        let n = y.len();
+        let mut hth = vec![0f32; m * m];
+        let mut hty = vec![0f32; m];
+        for i in 0..n {
+            for a in 0..m {
+                for b in 0..m {
+                    hth[a * m + b] += h[i * m + a] * h[i * m + b];
+                }
+                hty[a] += h[i * m + a] * y[i];
+            }
+        }
+        (hth, hty)
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let (n, m) = (120, 6);
+        let (h, y) = random_h_y(n, m, 1);
+        // batch
+        let mut batch = GramAccumulator::new(m, 1e-10);
+        let (hth, hty) = partials(&h, &y, m);
+        batch.push_partials(&hth, &hty, n).unwrap();
+        // streamed in 5 blocks
+        let mut stream = GramAccumulator::new(m, 1e-10);
+        for c in 0..5 {
+            let lo = c * 24;
+            let hi = lo + 24;
+            let (p, q) = partials(&h[lo * m..hi * m], &y[lo..hi], m);
+            stream.push_partials(&p, &q, 24).unwrap();
+        }
+        let a = batch.solve().unwrap();
+        let b = stream.solve().unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn merge_equals_single() {
+        let (n, m) = (90, 4);
+        let (h, y) = random_h_y(n, m, 2);
+        let mut all = GramAccumulator::new(m, 1e-10);
+        let (p, q) = partials(&h, &y, m);
+        all.push_partials(&p, &q, n).unwrap();
+
+        let mut w1 = GramAccumulator::new(m, 1e-10);
+        let mut w2 = GramAccumulator::new(m, 1e-10);
+        let (p1, q1) = partials(&h[..45 * m], &y[..45], m);
+        let (p2, q2) = partials(&h[45 * m..], &y[45..], m);
+        w1.push_partials(&p1, &q1, 45).unwrap();
+        w2.push_partials(&p2, &q2, 45).unwrap();
+        w1.merge(&w2).unwrap();
+        assert_eq!(w1.rows_seen(), n);
+        let a = all.solve().unwrap();
+        let b = w1.solve().unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            // the f32 *test helper* sums 90 terms in one pass vs 45+45:
+            // rounding differs by design; the accumulator itself is f64
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let m = 8;
+        let acc = GramAccumulator::new(m, 1e-8);
+        assert!(acc.solve().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut acc = GramAccumulator::new(4, 1e-8);
+        assert!(acc.push_partials(&[0.0; 9], &[0.0; 4], 3).is_err());
+        assert!(acc.push_partials(&[0.0; 16], &[0.0; 3], 3).is_err());
+    }
+
+    #[test]
+    fn gram_and_tsqr_agree() {
+        // identical data through both strategies
+        let (n, m) = (200, 5);
+        let (h, y) = random_h_y(n, m, 3);
+        let mut gram = GramAccumulator::new(m, 1e-12);
+        let (p, q) = partials(&h, &y, m);
+        gram.push_partials(&p, &q, n).unwrap();
+
+        let mut tsqr = TsqrAccumulator::new(m);
+        let hmat = Matrix::from_f32(n, m, &h);
+        let yv: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        tsqr.push_block(&hmat, &yv).unwrap();
+
+        let a = gram.solve().unwrap();
+        let b = tsqr.solve().unwrap();
+        for (x, z) in a.iter().zip(&b) {
+            assert!((x - z).abs() < 1e-3, "{x} vs {z}");
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Row-block batching: dataset → fixed-shape blocks + validity masks.
+//!
+//! HLO executables have static shapes; the coordinator streams any dataset
+//! length through blocks of `rows` samples. The tail block is zero-padded
+//! and its padded rows masked out (the `elm_gram` graph multiplies rows by
+//! the mask before accumulating, so padding contributes exactly zero).
+
+use crate::data::window::Windowed;
+
+/// One fixed-shape block in artifact layout.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// (rows, s, q) row-major
+    pub x: Vec<f32>,
+    /// (rows, q)
+    pub yhist: Vec<f32>,
+    /// (rows,)
+    pub y: Vec<f32>,
+    /// (rows,) 1.0 = real row, 0.0 = padding
+    pub mask: Vec<f32>,
+    /// number of real rows (== mask.sum())
+    pub valid: usize,
+    /// index of the first real row within the source dataset
+    pub offset: usize,
+}
+
+/// Iterator of fixed-shape blocks over a windowed dataset.
+pub struct RowBlockBatcher<'a> {
+    data: &'a Windowed,
+    rows: usize,
+    pos: usize,
+}
+
+impl<'a> RowBlockBatcher<'a> {
+    pub fn new(data: &'a Windowed, rows: usize) -> RowBlockBatcher<'a> {
+        assert!(rows > 0);
+        RowBlockBatcher { data, rows, pos: 0 }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.data.n.div_ceil(self.rows)
+    }
+}
+
+impl<'a> Iterator for RowBlockBatcher<'a> {
+    type Item = Block;
+
+    fn next(&mut self) -> Option<Block> {
+        if self.pos >= self.data.n {
+            return None;
+        }
+        let lo = self.pos;
+        let hi = (lo + self.rows).min(self.data.n);
+        let valid = hi - lo;
+        let (s, q, rows) = (self.data.s, self.data.q, self.rows);
+
+        let mut x = vec![0f32; rows * s * q];
+        let mut yhist = vec![0f32; rows * q];
+        let mut y = vec![0f32; rows];
+        let mut mask = vec![0f32; rows];
+        x[..valid * s * q].copy_from_slice(&self.data.x[lo * s * q..hi * s * q]);
+        yhist[..valid * q].copy_from_slice(&self.data.yhist[lo * q..hi * q]);
+        y[..valid].copy_from_slice(&self.data.y[lo..hi]);
+        mask[..valid].fill(1.0);
+
+        self.pos = hi;
+        Some(Block { x, yhist, y, mask, valid, offset: lo })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, q: usize) -> Windowed {
+        let series: Vec<f64> = (0..n + q).map(|i| i as f64).collect();
+        Windowed::from_series(&series, q).unwrap()
+    }
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        let w = toy(100, 4);
+        let blocks: Vec<Block> = RowBlockBatcher::new(&w, 32).collect();
+        assert_eq!(blocks.len(), 4);
+        let total: usize = blocks.iter().map(|b| b.valid).sum();
+        assert_eq!(total, 100);
+        // offsets tile the dataset
+        let mut seen = 0;
+        for b in &blocks {
+            assert_eq!(b.offset, seen);
+            seen += b.valid;
+        }
+    }
+
+    #[test]
+    fn tail_block_is_padded_and_masked() {
+        let w = toy(70, 3);
+        let blocks: Vec<Block> = RowBlockBatcher::new(&w, 32).collect();
+        let tail = blocks.last().unwrap();
+        assert_eq!(tail.valid, 6);
+        assert_eq!(tail.mask.iter().map(|&m| m as usize).sum::<usize>(), 6);
+        // padded region must be zero
+        assert!(tail.x[6 * 3..].iter().all(|&v| v == 0.0));
+        assert!(tail.y[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn block_content_matches_source() {
+        let w = toy(64, 5);
+        let blocks: Vec<Block> = RowBlockBatcher::new(&w, 32).collect();
+        let b1 = &blocks[1];
+        assert_eq!(b1.offset, 32);
+        assert_eq!(&b1.x[..5], w.x_row(32));
+        assert_eq!(b1.y[0], w.y[32]);
+        assert_eq!(&b1.yhist[..5], w.yhist_row(32));
+    }
+
+    #[test]
+    fn exact_multiple_has_no_padding() {
+        let w = toy(64, 2);
+        let blocks: Vec<Block> = RowBlockBatcher::new(&w, 32).collect();
+        assert_eq!(blocks.len(), 2);
+        assert!(blocks.iter().all(|b| b.valid == 32));
+        assert!(blocks.iter().all(|b| b.mask.iter().all(|&m| m == 1.0)));
+    }
+
+    #[test]
+    fn n_blocks_matches_iteration() {
+        for n in [1usize, 31, 32, 33, 255, 256, 257] {
+            let w = toy(n, 2);
+            let batcher = RowBlockBatcher::new(&w, 32);
+            let expected = batcher.n_blocks();
+            assert_eq!(batcher.count(), expected, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Experiment job descriptions: the (dataset × arch × M × BS × variant)
+//! grid the report emitters and benches iterate.
+
+use anyhow::Result;
+
+use crate::data::spec::{registry, DatasetSpec};
+use crate::elm::Arch;
+
+/// One training-run description.
+#[derive(Debug, Clone)]
+pub struct TrainJob {
+    pub dataset: DatasetSpec,
+    pub arch: Arch,
+    pub m: usize,
+    /// thread-block size / tile width (16 or 32 in the paper)
+    pub bs: usize,
+    /// "basic" (Alg 2) or "opt" (Alg 3)
+    pub variant: &'static str,
+    pub seed: u64,
+    /// dataset scale for measured runs (1.0 = the paper's full size)
+    pub scale: f64,
+}
+
+impl TrainJob {
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{} M={} BS={} {}",
+            self.dataset.name,
+            self.arch.name(),
+            self.m,
+            self.bs,
+            self.variant
+        )
+    }
+
+    /// Number of windowed samples at this job's scale.
+    pub fn n_samples(&self) -> usize {
+        let n = (self.dataset.n_instances as f64 * self.scale).round() as usize;
+        n.saturating_sub(self.dataset.q).max(1)
+    }
+}
+
+/// Fig 3 grid: all datasets × all archs, M = 50, Basic + Opt(BS 16/32).
+pub fn fig3_jobs(scale: f64, seed: u64) -> Vec<TrainJob> {
+    let mut jobs = Vec::new();
+    for d in registry() {
+        for arch in crate::elm::ALL_ARCHS {
+            for (variant, bs) in [("basic", 16), ("opt", 16), ("opt", 32)] {
+                jobs.push(TrainJob {
+                    dataset: d.clone(),
+                    arch,
+                    m: 50,
+                    bs,
+                    variant,
+                    seed,
+                    scale,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+/// Fig 4 grid: M sweep at BS = 32 (opt).
+pub fn fig4_jobs(scale: f64, seed: u64) -> Vec<TrainJob> {
+    let mut jobs = Vec::new();
+    for d in registry() {
+        // the M sweep is lowered for Q = 10 datasets (manifest grid)
+        if d.q != 10 {
+            continue;
+        }
+        for arch in crate::elm::ALL_ARCHS {
+            for m in [5usize, 10, 20, 50, 100] {
+                jobs.push(TrainJob {
+                    dataset: d.clone(),
+                    arch,
+                    m,
+                    bs: 32,
+                    variant: "opt",
+                    seed,
+                    scale,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+/// Table 4 grid: per-dataset M selection, 5 repetitions.
+pub fn table4_jobs(scale: f64, seeds: &[u64]) -> Vec<TrainJob> {
+    let mut jobs = Vec::new();
+    for d in registry() {
+        for arch in crate::elm::ALL_ARCHS {
+            for &seed in seeds {
+                jobs.push(TrainJob {
+                    dataset: d.clone(),
+                    arch,
+                    m: d.table4_m,
+                    bs: 32,
+                    variant: "opt",
+                    seed,
+                    scale,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+/// Resolve a dataset by name or fail with the known names.
+pub fn dataset(name: &str) -> Result<DatasetSpec> {
+    crate::data::spec::by_name(name).ok_or_else(|| {
+        let names: Vec<&str> = registry().iter().map(|d| d.name).collect();
+        anyhow::anyhow!("unknown dataset {name:?}; known: {names:?}")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_grid_size() {
+        // 10 datasets × 6 archs × 3 variant-configs
+        assert_eq!(fig3_jobs(1.0, 0).len(), 180);
+    }
+
+    #[test]
+    fn fig4_grid_only_q10() {
+        let jobs = fig4_jobs(1.0, 0);
+        assert!(jobs.iter().all(|j| j.dataset.q == 10));
+        // 6 Q=10 datasets × 6 archs × 5 Ms
+        assert_eq!(jobs.len(), 6 * 6 * 5);
+    }
+
+    #[test]
+    fn table4_grid_m_selection() {
+        let jobs = table4_jobs(1.0, &[1, 2, 3, 4, 5]);
+        assert_eq!(jobs.len(), 10 * 6 * 5);
+        for j in &jobs {
+            assert_eq!(j.m, j.dataset.table4_m);
+        }
+    }
+
+    #[test]
+    fn n_samples_scales() {
+        let j = &fig3_jobs(0.1, 0)[0];
+        let full = &fig3_jobs(1.0, 0)[0];
+        assert!(j.n_samples() < full.n_samples());
+        assert!(j.n_samples() > 0);
+    }
+
+    #[test]
+    fn dataset_lookup() {
+        assert!(dataset("aemo").is_ok());
+        let err = dataset("nope").unwrap_err().to_string();
+        assert!(err.contains("aemo"));
+    }
+}

@@ -1,0 +1,25 @@
+//! The L3 coordinator: streaming parallel ELM training over PJRT.
+//!
+//! The paper's contribution is the parallel H kernel; the coordinator is
+//! what makes it a deployable trainer:
+//!
+//! * [`batcher`] — slices a windowed dataset into the fixed-shape row
+//!   blocks the AOT executables expect, zero-padding the tail block and
+//!   emitting the validity mask the `elm_gram` graph applies.
+//! * [`accumulator`] — folds per-block (HᵀH, HᵀY) partials (or raw H
+//!   blocks via TSQR) into the normal-equation state and solves for β.
+//! * [`pipeline`] — `PrElmTrainer`, the parallel counterpart of
+//!   `elm::SrElmModel::train`: block producer → engine pool → accumulator,
+//!   with the Fig-6 phase breakdown recorded per run.
+//! * [`job`] — experiment descriptions (arch × dataset × M × variant) used
+//!   by the report emitters and benches.
+
+pub mod accumulator;
+pub mod batcher;
+pub mod job;
+pub mod pipeline;
+
+pub use accumulator::{GramAccumulator, SolveStrategy};
+pub use batcher::{Block, RowBlockBatcher};
+pub use job::TrainJob;
+pub use pipeline::{PrElmTrainer, TrainBreakdown};

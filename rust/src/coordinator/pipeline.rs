@@ -1,0 +1,333 @@
+//! `PrElmTrainer` — the parallel ELM trainer (Basic/Opt-PR-ELM, L3 side).
+//!
+//! Training streams the dataset through the AOT `elm_gram` executables:
+//!
+//! ```text
+//!   RowBlockBatcher ──▶ worker threads ──▶ EnginePool (PJRT) ──▶ partials
+//!        (producer)      (one per engine)        │
+//!                                                ▼
+//!                       in-order fold ──▶ GramAccumulator ──▶ β solve
+//! ```
+//!
+//! Partials are folded in block order (buffered re-sequencing), so the
+//! result is bit-deterministic regardless of worker count — the §7.3
+//! robustness requirement.
+//!
+//! NARMAX trains with the same two-pass ELS as the sequential baseline;
+//! the residuals for pass 2 come from a parallel `elm_predict` sweep with
+//! pass-1 β (one refinement pass — DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::accumulator::GramAccumulator;
+use crate::coordinator::batcher::{Block, RowBlockBatcher};
+use crate::data::window::Windowed;
+use crate::elm::trainer::{shift_history, SrElmModel};
+use crate::elm::{Arch, ElmParams};
+use crate::runtime::{ArtifactMeta, Buf, EnginePool, Manifest};
+
+/// Fig-6 style phase breakdown of one training run (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainBreakdown {
+    /// random parameter initialization
+    pub init_s: f64,
+    /// host→device literal creation (engine h2d delta)
+    pub h2d_s: f64,
+    /// artifact execution (H + partial sums)
+    pub exec_s: f64,
+    /// device→host output fetch
+    pub d2h_s: f64,
+    /// β solve (Cholesky/QR on the accumulated system)
+    pub solve_s: f64,
+    /// end-to-end wall clock
+    pub total_s: f64,
+    pub blocks: usize,
+}
+
+/// The parallel trainer: owns the manifest + engine pool handles.
+pub struct PrElmTrainer {
+    pool: EnginePool,
+    manifest: Manifest,
+    /// ridge λ for the Gram solve
+    pub lambda: f64,
+    /// run two-pass ELS for NARMAX (needs a matching elm_predict artifact)
+    pub narmax_els: bool,
+}
+
+impl PrElmTrainer {
+    pub fn new(artifacts_dir: &Path, workers: usize) -> Result<PrElmTrainer> {
+        Ok(PrElmTrainer {
+            pool: EnginePool::new(artifacts_dir, workers)?,
+            manifest: Manifest::load(artifacts_dir)?,
+            lambda: 1e-6,
+            narmax_els: true,
+        })
+    }
+
+    pub fn pool(&self) -> &EnginePool {
+        &self.pool
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Parallel ELM training; returns the trained model and the phase
+    /// breakdown.
+    pub fn train(
+        &self,
+        arch: Arch,
+        data: &Windowed,
+        m: usize,
+        seed: u64,
+    ) -> Result<(SrElmModel, TrainBreakdown)> {
+        let t_all = Instant::now();
+        let meta = self
+            .manifest
+            .find("elm_gram", arch.name(), data.q, m)
+            .context("selecting gram artifact")?
+            .clone();
+        let stats0 = self.pool.stats();
+
+        let t0 = Instant::now();
+        let params = ElmParams::init(arch, data.s, data.q, m, seed);
+        let init_s = t0.elapsed().as_secs_f64();
+
+        let mut bd = TrainBreakdown { init_s, ..Default::default() };
+
+        // pass 1 (and only pass for non-NARMAX): zero error history
+        let beta = self.gram_pass(&meta, &params, data, None, &mut bd)?;
+        let beta = if arch == Arch::Narmax && self.narmax_els {
+            // residuals from a parallel predict sweep with pass-1 β
+            let model1 = SrElmModel { params: params.clone(), beta };
+            let yhat = self.predict_with_ehist(&model1, data, None)?;
+            let resid: Vec<f32> = data
+                .y
+                .iter()
+                .zip(&yhat)
+                .map(|(&y, &p)| y - p as f32)
+                .collect();
+            let ehist = shift_history(&resid, data.q);
+            self.gram_pass(&meta, &params, data, Some(&ehist), &mut bd)?
+        } else {
+            beta
+        };
+
+        let stats1 = self.pool.stats();
+        bd.h2d_s = stats1.h2d_s - stats0.h2d_s;
+        bd.exec_s = stats1.exec_s - stats0.exec_s;
+        bd.d2h_s = stats1.d2h_s - stats0.d2h_s;
+        bd.total_s = t_all.elapsed().as_secs_f64();
+        Ok((SrElmModel { params, beta }, bd))
+    }
+
+    /// One streaming gram pass → β.
+    fn gram_pass(
+        &self,
+        meta: &ArtifactMeta,
+        params: &ElmParams,
+        data: &Windowed,
+        ehist: Option<&[f32]>,
+        bd: &mut TrainBreakdown,
+    ) -> Result<Vec<f64>> {
+        let m = params.m;
+        // NARMAX needs stronger regularization (see TrainOptions::NARMAX_RIDGE)
+        let lambda = if params.arch == Arch::Narmax {
+            self.lambda.max(crate::elm::TrainOptions::NARMAX_RIDGE)
+        } else {
+            self.lambda
+        };
+        let mut acc = GramAccumulator::new(m, lambda);
+        let blocks: Vec<Block> = RowBlockBatcher::new(data, meta.rows).collect();
+        bd.blocks += blocks.len();
+
+        let n_workers = self.pool.n_workers();
+        let (result_tx, result_rx) = channel::<(usize, Result<(Vec<f32>, Vec<f32>, usize)>)>();
+
+        std::thread::scope(|scope| -> Result<()> {
+            // dispatch: blocks are sharded over workers by index so each
+            // worker thread drives its own engine (cache affinity)
+            for wid in 0..n_workers {
+                let tx = result_tx.clone();
+                let blocks = &blocks;
+                let pool = &self.pool;
+                let meta = &meta;
+                let params = &params;
+                scope.spawn(move || {
+                    for (idx, block) in blocks.iter().enumerate() {
+                        if idx % n_workers != wid {
+                            continue;
+                        }
+                        let res = (|| {
+                            let inputs =
+                                assemble_gram_inputs(meta, params, block, ehist, data.q)?;
+                            let out = pool.run_on(wid, &meta.name, inputs)?;
+                            let hth = out
+                                .first()
+                                .ok_or_else(|| anyhow!("gram artifact returned no outputs"))?;
+                            let hty =
+                                out.get(1).ok_or_else(|| anyhow!("gram missing hty"))?;
+                            Ok((hth.data.clone(), hty.data.clone(), block.valid))
+                        })();
+                        if tx.send((idx, res)).is_err() {
+                            return; // receiver gone: abort quietly
+                        }
+                    }
+                });
+            }
+            drop(result_tx);
+
+            // in-order fold for determinism
+            let mut pending: BTreeMap<usize, (Vec<f32>, Vec<f32>, usize)> = BTreeMap::new();
+            let mut next = 0usize;
+            for (idx, res) in result_rx {
+                pending.insert(idx, res?);
+                while let Some(p) = pending.remove(&next) {
+                    acc.push_partials(&p.0, &p.1, p.2)?;
+                    next += 1;
+                }
+            }
+            if next != blocks.len() {
+                return Err(anyhow!("folded {next} of {} blocks", blocks.len()));
+            }
+            Ok(())
+        })?;
+
+        let t0 = Instant::now();
+        let beta = acc.solve()?;
+        bd.solve_s += t0.elapsed().as_secs_f64();
+        Ok(beta)
+    }
+
+    /// Parallel block predict through the `elm_predict` artifacts.
+    /// For NARMAX, `ehist` supplies the error feedback (None → zeros —
+    /// callers run the two-pass refinement, see `predict`).
+    pub fn predict_with_ehist(
+        &self,
+        model: &SrElmModel,
+        data: &Windowed,
+        ehist: Option<&[f32]>,
+    ) -> Result<Vec<f64>> {
+        let params = &model.params;
+        let meta = self
+            .manifest
+            .find("elm_predict", params.arch.name(), data.q, params.m)
+            .context("selecting predict artifact")?
+            .clone();
+        let beta_f32: Vec<f32> = model.beta.iter().map(|&b| b as f32).collect();
+        let blocks: Vec<Block> = RowBlockBatcher::new(data, meta.rows).collect();
+        let mut out = vec![0f64; data.n];
+        let n_workers = self.pool.n_workers();
+        let (tx, rx) = channel::<(usize, Result<Vec<f32>>)>();
+
+        std::thread::scope(|scope| -> Result<()> {
+            for wid in 0..n_workers {
+                let tx = tx.clone();
+                let blocks = &blocks;
+                let pool = &self.pool;
+                let meta = &meta;
+                let beta_f32 = &beta_f32;
+                scope.spawn(move || {
+                    for (idx, block) in blocks.iter().enumerate() {
+                        if idx % n_workers != wid {
+                            continue;
+                        }
+                        let res = (|| {
+                            let mut inputs =
+                                assemble_h_inputs(meta, params, block, ehist, data.q)?;
+                            inputs.push(Buf::new(vec![params.m], beta_f32.clone()));
+                            let o = pool.run_on(wid, &meta.name, inputs)?;
+                            Ok(o.into_iter()
+                                .next()
+                                .ok_or_else(|| anyhow!("predict returned nothing"))?
+                                .data)
+                        })();
+                        if tx.send((idx, res)).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for (idx, res) in rx {
+                let yhat = res?;
+                let block = &blocks[idx];
+                for r in 0..block.valid {
+                    out[block.offset + r] = yhat[r] as f64;
+                }
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// One-step-ahead predictions; NARMAX refines once with the first
+    /// pass's residuals (parallel ELS, DESIGN.md §2).
+    pub fn predict(&self, model: &SrElmModel, data: &Windowed) -> Result<Vec<f64>> {
+        if model.params.arch == Arch::Narmax {
+            let y0 = self.predict_with_ehist(model, data, None)?;
+            let resid: Vec<f32> =
+                data.y.iter().zip(&y0).map(|(&y, &p)| y - p as f32).collect();
+            let ehist = shift_history(&resid, data.q);
+            return self.predict_with_ehist(model, data, Some(&ehist));
+        }
+        self.predict_with_ehist(model, data, None)
+    }
+
+    /// Test RMSE through the parallel predict path.
+    pub fn rmse(&self, model: &SrElmModel, data: &Windowed) -> Result<f64> {
+        let pred = self.predict(model, data)?;
+        let truth: Vec<f64> = data.y.iter().map(|&v| v as f64).collect();
+        Ok(crate::data::stats::rmse(&pred, &truth))
+    }
+}
+
+/// Inputs for the gram graph: x, [yhist, ehist], params..., y, mask.
+fn assemble_gram_inputs(
+    meta: &ArtifactMeta,
+    params: &ElmParams,
+    block: &Block,
+    ehist: Option<&[f32]>,
+    q: usize,
+) -> Result<Vec<Buf>> {
+    let mut inputs = assemble_h_inputs(meta, params, block, ehist, q)?;
+    // gram appends y and mask after the params
+    inputs.push(Buf::new(vec![meta.rows], block.y.clone()));
+    inputs.push(Buf::new(vec![meta.rows], block.mask.clone()));
+    Ok(inputs)
+}
+
+/// Inputs shared by elm_h / elm_predict / elm_gram prefixes.
+fn assemble_h_inputs(
+    meta: &ArtifactMeta,
+    params: &ElmParams,
+    block: &Block,
+    ehist: Option<&[f32]>,
+    q: usize,
+) -> Result<Vec<Buf>> {
+    let mut inputs = Vec::with_capacity(meta.inputs.len());
+    for spec in &meta.inputs {
+        let buf = match spec.name.as_str() {
+            "x" => Buf::new(spec.shape.clone(), block.x.clone()),
+            "yhist" => Buf::new(spec.shape.clone(), block.yhist.clone()),
+            "ehist" => {
+                let mut e = vec![0f32; spec.len()];
+                if let Some(full) = ehist {
+                    let lo = block.offset * q;
+                    let hi = (block.offset + block.valid) * q;
+                    e[..block.valid * q].copy_from_slice(&full[lo..hi]);
+                }
+                Buf::new(spec.shape.clone(), e)
+            }
+            "y" | "mask" | "beta" => continue, // appended by the caller
+            name => Buf::new(spec.shape.clone(), params.buf(name).to_vec()),
+        };
+        inputs.push(buf);
+    }
+    Ok(inputs)
+}

@@ -1,0 +1,136 @@
+//! Minimal CSV loader so users can run the trainers on *real* series, not
+//! only the Table-3 generators: one numeric column (selectable by index or
+//! header name), `#`-comments and blank lines skipped, non-numeric cells
+//! rejected with row context.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Parse a CSV file into one numeric column.
+pub fn load_column(path: &Path, column: &str) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    load_column_str(&text, column)
+}
+
+/// `column` is a 0-based index ("2") or a header name ("load_mw").
+pub fn load_column_str(text: &str, column: &str) -> Result<Vec<f64>> {
+    let mut lines = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'));
+    let first = match lines.next() {
+        Some(l) => l,
+        None => bail!("empty CSV"),
+    };
+    let first_cells = split_row(first);
+
+    // resolve column index; detect whether the first row is a header
+    let (idx, header_consumed) = match column.parse::<usize>() {
+        Ok(i) => {
+            let is_header = first_cells.get(i).map_or(false, |c| c.parse::<f64>().is_err());
+            (i, is_header)
+        }
+        Err(_) => {
+            let i = first_cells
+                .iter()
+                .position(|c| c.eq_ignore_ascii_case(column))
+                .with_context(|| {
+                    format!("column {column:?} not in header {first_cells:?}")
+                })?;
+            (i, true)
+        }
+    };
+
+    let mut out = Vec::new();
+    let mut push = |cells: &[String], line_no: usize| -> Result<()> {
+        let cell = cells
+            .get(idx)
+            .with_context(|| format!("row {line_no}: no column {idx}"))?;
+        let v: f64 = cell
+            .parse()
+            .with_context(|| format!("row {line_no}: {cell:?} is not numeric"))?;
+        out.push(v);
+        Ok(())
+    };
+    if !header_consumed {
+        push(&first_cells, 1)?;
+    }
+    for (i, line) in lines.enumerate() {
+        push(&split_row(line), i + 2)?;
+    }
+    if out.is_empty() {
+        bail!("no data rows");
+    }
+    Ok(out)
+}
+
+/// Split one CSV row (double-quoted fields with `""` escapes supported).
+fn split_row(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                cells.push(cur.trim().to_string());
+                cur.clear();
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur.trim().to_string());
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_by_header_name() {
+        let csv = "time,load_mw\n1,10.5\n2,11.25\n3,9.0\n";
+        assert_eq!(load_column_str(csv, "load_mw").unwrap(), vec![10.5, 11.25, 9.0]);
+    }
+
+    #[test]
+    fn loads_by_index_headerless() {
+        let csv = "1.0,2.0\n3.0,4.0\n";
+        assert_eq!(load_column_str(csv, "1").unwrap(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn loads_by_index_with_header() {
+        let csv = "a,b\n1,2\n3,4\n";
+        assert_eq!(load_column_str(csv, "1").unwrap(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let csv = "# generated\n\nvalue\n1\n\n# mid comment\n2\n";
+        assert_eq!(load_column_str(csv, "value").unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let csv = "name,v\n\"a,b\",3.5\n\"say \"\"hi\"\"\",4.5\n";
+        assert_eq!(load_column_str(csv, "v").unwrap(), vec![3.5, 4.5]);
+    }
+
+    #[test]
+    fn errors_have_row_context() {
+        let csv = "v\n1.0\nnot_a_number\n";
+        let err = format!("{:#}", load_column_str(csv, "v").unwrap_err());
+        assert!(err.contains("row 3"), "{err}");
+        let err2 = format!("{:#}", load_column_str("a,b\n1,2\n", "zzz").unwrap_err());
+        assert!(err2.contains("zzz"), "{err2}");
+        assert!(load_column_str("", "0").is_err());
+        assert!(load_column_str("header_only\n", "0").is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Min-max normalization fitted on the training split only (no test-set
+//! leakage). The paper's RMSE magnitudes indicate normalized targets; we
+//! report RMSE on the [0, 1] scale and note the paper's "large output =>
+//! large RMSE" observation in EXPERIMENTS.md.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct MinMax {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl MinMax {
+    /// Fit on a slice (typically the training prefix).
+    pub fn fit(xs: &[f64]) -> Result<MinMax> {
+        if xs.is_empty() {
+            bail!("cannot fit normalizer on empty slice");
+        }
+        let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if !(lo.is_finite() && hi.is_finite()) {
+            bail!("non-finite values in normalizer input");
+        }
+        Ok(MinMax { lo, hi })
+    }
+
+    #[inline]
+    pub fn apply(&self, x: f64) -> f64 {
+        let span = (self.hi - self.lo).max(1e-12);
+        (x - self.lo) / span
+    }
+
+    #[inline]
+    pub fn invert(&self, z: f64) -> f64 {
+        let span = (self.hi - self.lo).max(1e-12);
+        self.lo + z * span
+    }
+
+    pub fn apply_all(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.apply(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_train_to_unit_interval() {
+        let xs = vec![-5.0, 0.0, 10.0, 2.5];
+        let n = MinMax::fit(&xs).unwrap();
+        let z = n.apply_all(&xs);
+        assert_eq!(z[0], 0.0);
+        assert_eq!(z[2], 1.0);
+        assert!(z.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn round_trips() {
+        let xs = vec![3.0, 7.0, 11.0];
+        let n = MinMax::fit(&xs).unwrap();
+        for &x in &xs {
+            assert!((n.invert(n.apply(x)) - x).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn test_values_can_exceed_unit_interval() {
+        // values outside the train range extrapolate, by design
+        let n = MinMax::fit(&[0.0, 1.0]).unwrap();
+        assert!(n.apply(2.0) > 1.0);
+        assert!(n.apply(-1.0) < 0.0);
+    }
+
+    #[test]
+    fn degenerate_range_does_not_divide_by_zero() {
+        let n = MinMax::fit(&[5.0, 5.0]).unwrap();
+        assert!(n.apply(5.0).is_finite());
+    }
+
+    #[test]
+    fn rejects_empty_and_nan() {
+        assert!(MinMax::fit(&[]).is_err());
+        assert!(MinMax::fit(&[f64::NAN]).is_err());
+    }
+}

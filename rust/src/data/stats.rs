@@ -1,0 +1,107 @@
+//! Streaming summary statistics (Welford) used by the generators' tests and
+//! the Table 3 report.
+
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn of(xs: &[f64]) -> Stats {
+        let mut s = Stats::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let se: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t) * (p - t)).sum();
+    (se / pred.len() as f64).sqrt()
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
+    let r = rmse(pred, truth);
+    r * r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 * 0.3 - 7.0).collect();
+        let s = Stats::of(&xs);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((s.mean() - mean).abs() < 1e-9);
+        assert!((s.var() - var).abs() < 1e-6);
+        assert_eq!(s.min(), *xs.iter().min_by(|a, b| a.total_cmp(b)).unwrap());
+        assert_eq!(s.max(), *xs.iter().max_by(|a, b| a.total_cmp(b)).unwrap());
+    }
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        let a = vec![1.0, 2.0, 3.0];
+        assert_eq!(rmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let p = vec![0.0, 0.0];
+        let t = vec![3.0, 4.0];
+        assert!((rmse(&p, &t) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert!((mse(&p, &t) - 12.5).abs() < 1e-9);
+    }
+}

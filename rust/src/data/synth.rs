@@ -1,0 +1,265 @@
+//! Synthetic time-series generators, one per Table-3 benchmark.
+//!
+//! Each generator produces the dataset's qualitative temporal structure;
+//! `fit_stats` then affinely rescales to the published mean/std and clamps
+//! to the published min/max. Determinism: same (n, seed) → same series.
+
+use crate::util::rng::Rng;
+
+/// Affine-rescale `xs` to the target mean/std, then clamp to [min, max].
+/// Clamping perturbs the moments slightly — the spec tests allow ~10%.
+pub fn fit_stats(xs: &mut [f64], mean_t: f64, std_t: f64, min_t: f64, max_t: f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-12);
+    for x in xs.iter_mut() {
+        *x = mean_t + std_t * (*x - mean) / std;
+        *x = x.clamp(min_t, max_t);
+    }
+}
+
+/// Japan population: per-region census levels as *panel data* — a fixed
+/// set of regions with log-normal scale spread (std ≈ mean, max ≫ mean)
+/// cycled each "year" with slow per-region growth. Interleaving keeps the
+/// train/test marginals aligned (the real dataset is region×year panels).
+pub fn japan_population(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let k = 8usize; // regions (cycle fits inside a Q = 10 lag window)
+    let levels: Vec<f64> = (0..k).map(|_| (rng.normal() * 1.6).exp()).collect();
+    let growth: Vec<f64> = (0..k).map(|_| 1.0 + rng.range(-0.002, 0.004)).collect();
+    (0..n)
+        .map(|i| {
+            let region = i % k;
+            let year = (i / k) as f64;
+            levels[region] * growth[region].powf(year) * (1.0 + 0.01 * rng.normal())
+        })
+        .collect()
+}
+
+/// Quebec births: daily counts with weekly cycle, mild annual cycle, noise.
+pub fn quebec_births(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let t = i as f64;
+            let weekly = (2.0 * std::f64::consts::PI * t / 7.0).sin();
+            let annual = (2.0 * std::f64::consts::PI * t / 365.25).sin();
+            weekly * 0.8 + annual * 0.5 + rng.normal() * 0.7
+        })
+        .collect()
+}
+
+/// Exoplanet (Kepler light curves): near-flat flux with deep transit dips
+/// and occasional flares — extremely heavy lower tail.
+pub fn exoplanet(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0usize;
+    while i < n {
+        // flat segment with photon noise
+        let seg = (50 + rng.below(200)).min(n - i);
+        for _ in 0..seg {
+            out.push(rng.normal() * 0.05);
+        }
+        i += seg;
+        if i >= n {
+            break;
+        }
+        // transit dip (deep negative) or flare (positive), short
+        let ev = (3 + rng.below(12)).min(n - i);
+        let depth = if rng.uniform() < 0.8 { -rng.range(5.0, 40.0) } else { rng.range(2.0, 12.0) };
+        for k in 0..ev {
+            let shape = (k as f64 / ev as f64 * std::f64::consts::PI).sin();
+            out.push(depth * shape + rng.normal() * 0.05);
+        }
+        i += ev;
+    }
+    out
+}
+
+/// SP500 index level: geometric random walk with drift (1950→present).
+pub fn sp500(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut v: f64 = 0.0; // log-price
+    (0..n)
+        .map(|_| {
+            v += 0.0004 + 0.01 * rng.normal();
+            v.exp()
+        })
+        .collect()
+}
+
+/// AEMO electricity demand: strong daily + weekly seasonality (half-hourly).
+pub fn aemo(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let t = i as f64;
+            let daily = (2.0 * std::f64::consts::PI * t / 48.0).sin();
+            let weekly = (2.0 * std::f64::consts::PI * t / (48.0 * 7.0)).sin();
+            let annual = (2.0 * std::f64::consts::PI * t / (48.0 * 365.0)).cos();
+            daily * 1.0 + weekly * 0.3 + annual * 0.5 + rng.normal() * 0.25
+        })
+        .collect()
+}
+
+/// Hourly weather (temperature, Kelvin): annual + daily cycles.
+pub fn hourly_weather(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut drift = 0.0;
+    (0..n)
+        .map(|i| {
+            let t = i as f64;
+            let annual = (2.0 * std::f64::consts::PI * t / (24.0 * 365.0)).sin();
+            let daily = (2.0 * std::f64::consts::PI * t / 24.0).sin();
+            drift = 0.995 * drift + 0.1 * rng.normal();
+            annual * 1.2 + daily * 0.4 + drift
+        })
+        .collect()
+}
+
+/// PJM hourly energy consumption (MW): daily/weekly cycles + load noise.
+pub fn energy_consumption(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut drift = 0.0;
+    (0..n)
+        .map(|i| {
+            let t = i as f64;
+            let daily = (2.0 * std::f64::consts::PI * t / 24.0).sin();
+            let weekly = if ((t / 24.0) as u64) % 7 >= 5 { -0.5 } else { 0.2 };
+            drift = 0.99 * drift + 0.05 * rng.normal();
+            daily + weekly + drift + rng.normal() * 0.15
+        })
+        .collect()
+}
+
+/// UCI electricity load (substation level): bursty nonnegative load with
+/// huge dynamic range (values up to ~1e15 in the paper's units).
+pub fn electricity_load(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut level: f64 = 0.0;
+    (0..n)
+        .map(|i| {
+            let t = i as f64;
+            level = 0.999 * level + 0.05 * rng.normal();
+            let daily = (2.0 * std::f64::consts::PI * t / 96.0).sin();
+            // occasional outage: drop to zero
+            if rng.uniform() < 0.01 {
+                -10.0
+            } else {
+                (level + 0.8 * daily).exp()
+            }
+        })
+        .collect()
+}
+
+/// S&P-500 per-company stock prices: many independent geometric walks
+/// concatenated — heavy right tail across companies.
+pub fn stock_prices(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    let mut remaining = n;
+    while remaining > 0 {
+        let seg = (200 + rng.below(1000)).min(remaining);
+        let scale = (rng.normal() * 2.0).exp(); // company price scale
+        let mut logp: f64 = 0.0;
+        for _ in 0..seg {
+            logp += 0.0003 + 0.02 * rng.normal();
+            out.push(scale * logp.exp());
+        }
+        remaining -= seg;
+    }
+    out
+}
+
+/// PMSM motor temperature: slow thermal response to load cycles.
+pub fn temperature(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut temp = 0.0;
+    let mut load = 0.0;
+    (0..n)
+        .map(|_| {
+            if rng.uniform() < 0.002 {
+                load = rng.range(-1.0, 1.5); // new operating point
+            }
+            // first-order thermal lag toward the load-dependent steady state
+            temp += 0.01 * (load - temp) + 0.01 * rng.normal();
+            temp
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stats::Stats;
+
+    #[test]
+    fn fit_stats_hits_targets() {
+        let mut rng = Rng::new(1);
+        let mut xs: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        fit_stats(&mut xs, 100.0, 15.0, 0.0, 1000.0);
+        let s = Stats::of(&xs);
+        assert!((s.mean() - 100.0).abs() < 2.0);
+        assert!((s.std() - 15.0).abs() < 2.0);
+        assert!(s.min() >= 0.0 && s.max() <= 1000.0);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        for f in [quebec_births, sp500, aemo, temperature] {
+            let a = f(500, &mut Rng::new(9));
+            let b = f(500, &mut Rng::new(9));
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn generators_have_requested_length() {
+        for f in [
+            japan_population,
+            quebec_births,
+            exoplanet,
+            sp500,
+            aemo,
+            hourly_weather,
+            energy_consumption,
+            electricity_load,
+            stock_prices,
+            temperature,
+        ] {
+            assert_eq!(f(1234, &mut Rng::new(3)).len(), 1234);
+        }
+    }
+
+    #[test]
+    fn exoplanet_has_heavy_lower_tail() {
+        let xs = exoplanet(20_000, &mut Rng::new(5));
+        let s = Stats::of(&xs);
+        assert!(s.min() < s.mean() - 10.0 * s.std().max(1e-9) || s.min() < -5.0);
+    }
+
+    #[test]
+    fn sp500_is_positive_and_growing() {
+        let xs = sp500(50_000, &mut Rng::new(6));
+        assert!(xs.iter().all(|&x| x > 0.0));
+        let first = Stats::of(&xs[..5000]).mean();
+        let last = Stats::of(&xs[45_000..]).mean();
+        assert!(last > first, "geometric drift should grow: {first} -> {last}");
+    }
+
+    #[test]
+    fn aemo_has_daily_cycle() {
+        // autocorrelation at lag 48 (one day) should be clearly positive
+        let xs = aemo(20_000, &mut Rng::new(7));
+        let s = Stats::of(&xs);
+        let (mean, var) = (s.mean(), s.var());
+        let ac: f64 = xs[..xs.len() - 48]
+            .iter()
+            .zip(&xs[48..])
+            .map(|(a, b)| (a - mean) * (b - mean))
+            .sum::<f64>()
+            / ((xs.len() - 48) as f64 * var);
+        assert!(ac > 0.4, "lag-48 autocorrelation {ac}");
+    }
+
+    #[test]
+    fn temperature_is_smooth() {
+        // thermal lag: successive diffs must be small vs the overall range
+        let xs = temperature(50_000, &mut Rng::new(8));
+        let s = Stats::of(&xs);
+        let max_step = xs.windows(2).map(|w| (w[1] - w[0]).abs()).fold(0.0, f64::max);
+        assert!(max_step < 0.2 * (s.max() - s.min()));
+    }
+}

@@ -1,0 +1,137 @@
+//! Lag-window embedding: series → (X ∈ n×S×Q, Y ∈ n, yhist ∈ n×Q).
+//!
+//! Sample i covers series steps [i, i+Q): `x[i, 0, t] = y(i+t)` for
+//! t = 0..Q, target `Y[i] = y(i+Q)`. The Jordan/NARMAX feedback history is
+//! `yhist[i, k-1] = y(i+Q-k)` (the window read backwards) — teacher
+//! forcing per DESIGN.md §2. S = 1 (univariate) throughout the benchmarks;
+//! the layout keeps the S axis so multivariate extensions slot in.
+
+use anyhow::{bail, Result};
+
+/// A windowed dataset in the exact f32 layouts the artifacts consume.
+#[derive(Debug, Clone)]
+pub struct Windowed {
+    pub n: usize,
+    pub s: usize,
+    pub q: usize,
+    /// row-major (n, s, q)
+    pub x: Vec<f32>,
+    /// (n,)
+    pub y: Vec<f32>,
+    /// row-major (n, q): yhist[i][k-1] = y(t-k), teacher-forced feedback
+    pub yhist: Vec<f32>,
+}
+
+impl Windowed {
+    pub fn from_series(series: &[f64], q: usize) -> Result<Windowed> {
+        if series.len() <= q {
+            bail!("series of {} too short for Q = {q}", series.len());
+        }
+        let n = series.len() - q;
+        let s = 1usize;
+        let mut x = vec![0f32; n * s * q];
+        let mut y = vec![0f32; n];
+        let mut yhist = vec![0f32; n * q];
+        for i in 0..n {
+            for t in 0..q {
+                x[i * q + t] = series[i + t] as f32;
+            }
+            y[i] = series[i + q] as f32;
+            for k in 1..=q {
+                yhist[i * q + (k - 1)] = series[i + q - k] as f32;
+            }
+        }
+        Ok(Windowed { n, s, q, x, y, yhist })
+    }
+
+    /// Split at a fraction: (train, test), sequential (time-ordered).
+    pub fn split(&self, train_frac: f64) -> (Windowed, Windowed) {
+        let n_train = ((self.n as f64 * train_frac).round() as usize).clamp(1, self.n - 1);
+        (self.slice(0, n_train), self.slice(n_train, self.n))
+    }
+
+    /// Rows [lo, hi).
+    pub fn slice(&self, lo: usize, hi: usize) -> Windowed {
+        assert!(lo <= hi && hi <= self.n);
+        let sq = self.s * self.q;
+        Windowed {
+            n: hi - lo,
+            s: self.s,
+            q: self.q,
+            x: self.x[lo * sq..hi * sq].to_vec(),
+            y: self.y[lo..hi].to_vec(),
+            yhist: self.yhist[lo * self.q..hi * self.q].to_vec(),
+        }
+    }
+
+    /// One row's X window (s*q values).
+    pub fn x_row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.s * self.q..(i + 1) * self.s * self.q]
+    }
+
+    pub fn yhist_row(&self, i: usize) -> &[f32] {
+        &self.yhist[i * self.q..(i + 1) * self.q]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(n: usize) -> Vec<f64> {
+        (0..n).map(|i| i as f64).collect()
+    }
+
+    #[test]
+    fn window_alignment() {
+        let w = Windowed::from_series(&series(20), 4).unwrap();
+        assert_eq!(w.n, 16);
+        // sample 0: x = [0,1,2,3], y = 4
+        assert_eq!(w.x_row(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(w.y[0], 4.0);
+        // yhist[0][k-1] = y(4-k) = [3,2,1,0]
+        assert_eq!(w.yhist_row(0), &[3.0, 2.0, 1.0, 0.0]);
+        // sample 7: x = [7..11), y = 11
+        assert_eq!(w.x_row(7), &[7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(w.y[7], 11.0);
+    }
+
+    #[test]
+    fn yhist_is_reversed_window() {
+        let w = Windowed::from_series(&series(30), 5).unwrap();
+        for i in 0..w.n {
+            let xr = w.x_row(i);
+            let yh = w.yhist_row(i);
+            for k in 0..5 {
+                assert_eq!(yh[k], xr[5 - 1 - k]);
+            }
+        }
+    }
+
+    #[test]
+    fn split_is_sequential_and_disjoint() {
+        let w = Windowed::from_series(&series(104), 4).unwrap();
+        let (tr, te) = w.split(0.8);
+        assert_eq!(tr.n, 80);
+        assert_eq!(te.n, 20);
+        assert_eq!(tr.y[79], w.y[79]);
+        assert_eq!(te.y[0], w.y[80]);
+    }
+
+    #[test]
+    fn split_extremes_clamped() {
+        let w = Windowed::from_series(&series(14), 4).unwrap();
+        let (tr, te) = w.split(0.0);
+        assert_eq!(tr.n, 1);
+        assert!(te.n >= 1);
+        let (tr2, te2) = w.split(1.0);
+        assert_eq!(te2.n, 1);
+        assert!(tr2.n >= 1);
+    }
+
+    #[test]
+    fn too_short_series_rejected() {
+        assert!(Windowed::from_series(&series(4), 4).is_err());
+        assert!(Windowed::from_series(&series(5), 4).is_ok());
+    }
+}

@@ -1,0 +1,30 @@
+//! Scalar f32 activations; f32 to stay comparable with the XLA artifacts.
+
+#[inline(always)]
+pub fn tanh(x: f32) -> f32 {
+    x.tanh()
+}
+
+#[inline(always)]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for x in [-3.0f32, -0.5, 0.0, 1.25, 8.0] {
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert!(sigmoid(40.0) > 0.999_999);
+        assert!(sigmoid(-40.0) < 1e-6);
+        assert!((tanh(40.0) - 1.0).abs() < 1e-6);
+    }
+}

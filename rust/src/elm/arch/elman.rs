@@ -1,0 +1,67 @@
+//! Elman recurrence (Eq 6): diagonal self-feedback over the last Q states.
+
+use crate::elm::activation::tanh;
+use crate::elm::params::ElmParams;
+
+use super::wx_at;
+
+/// One sample: h_j(t) = g(w_j·x(t) + b_j + Σ_{k=1..t} α[j,k] h_j(t−k)).
+pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let w = p.buf("w");
+    let b = p.buf("b");
+    let alpha = p.buf("alpha"); // (m, q): alpha[j*q + (k-1)]
+    let mut hist = vec![0f32; q * m]; // hist[(k-1)*m + j] = h_j(t-k)
+    for t in 0..q {
+        for j in 0..m {
+            let mut acc = wx_at(w, x, s, q, m, j, t) + b[j];
+            for k in 1..=t.min(q) {
+                acc += alpha[j * q + (k - 1)] * hist[(k - 1) * m + j];
+            }
+            out[j] = tanh(acc);
+        }
+        // shift history: hist[k] <- hist[k-1], hist[0] <- h(t)
+        for k in (1..q).rev() {
+            let (lo, hi) = hist.split_at_mut(k * m);
+            hi[..m].copy_from_slice(&lo[(k - 1) * m..k * m]);
+        }
+        hist[..m].copy_from_slice(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::params::Arch;
+
+    #[test]
+    fn zero_alpha_is_feedforward() {
+        let (s, q, m) = (2, 4, 3);
+        let mut p = ElmParams::init(Arch::Elman, s, q, m, 5);
+        p.bufs[2].iter_mut().for_each(|a| *a = 0.0);
+        let x: Vec<f32> = (0..s * q).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &mut out);
+        let w = p.buf("w");
+        let b = p.buf("b");
+        for j in 0..m {
+            let want = (wx_at(w, &x, s, q, m, j, q - 1) + b[j]).tanh();
+            assert!((out[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn one_step_recurrence_exact() {
+        let (s, q, m) = (1, 2, 2);
+        let p = ElmParams::init(Arch::Elman, s, q, m, 9);
+        let x = vec![0.7f32, -0.4];
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &mut out);
+        let (w, b, alpha) = (p.buf("w"), p.buf("b"), p.buf("alpha"));
+        for j in 0..m {
+            let h1 = (w[j] * x[0] + b[j]).tanh();
+            let want = (w[j] * x[1] + b[j] + alpha[j * q] * h1).tanh();
+            assert!((out[j] - want).abs() < 1e-6);
+        }
+    }
+}

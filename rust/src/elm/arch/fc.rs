@@ -1,0 +1,92 @@
+//! Fully connected recurrence (Eq 9): every neuron sees every neuron's
+//! history — the most compute-heavy architecture (Table 2).
+
+use crate::elm::activation::tanh;
+use crate::elm::params::ElmParams;
+
+use super::wx_at;
+
+/// One sample: h_j(t) = g(w_j·x(t) + b_j + Σ_{k=1..t} Σ_l α[j,l,k] h_l(t−k)).
+pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let w = p.buf("w");
+    let b = p.buf("b");
+    let alpha = p.buf("alpha"); // (m, m, q): alpha[(j*m + l)*q + (k-1)]
+    let mut hist = vec![0f32; q * m]; // hist[(k-1)*m + l] = h_l(t-k)
+    let mut cur = vec![0f32; m];
+    for t in 0..q {
+        for j in 0..m {
+            let mut acc = wx_at(w, x, s, q, m, j, t) + b[j];
+            for k in 1..=t.min(q) {
+                let hrow = &hist[(k - 1) * m..k * m];
+                let arow = &alpha[j * m * q..];
+                for (l, hv) in hrow.iter().enumerate() {
+                    acc += arow[l * q + (k - 1)] * hv;
+                }
+            }
+            cur[j] = tanh(acc);
+        }
+        for k in (1..q).rev() {
+            let (lo, hi) = hist.split_at_mut(k * m);
+            hi[..m].copy_from_slice(&lo[(k - 1) * m..k * m]);
+        }
+        hist[..m].copy_from_slice(&cur);
+        out.copy_from_slice(&cur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::arch::elman;
+    use crate::elm::params::Arch;
+
+    #[test]
+    fn diagonal_alpha_reduces_to_elman() {
+        let (s, q, m) = (1, 4, 3);
+        let pe = ElmParams::init(Arch::Elman, s, q, m, 12);
+        // FC params with alpha[j,l,k] = delta_jl * elman_alpha[j,k]
+        let mut pf = ElmParams::init(Arch::Fc, s, q, m, 12);
+        pf.bufs[0] = pe.buf("w").to_vec();
+        pf.bufs[1] = pe.buf("b").to_vec();
+        let ae = pe.buf("alpha");
+        let mut af = vec![0f32; m * m * q];
+        for j in 0..m {
+            for k in 0..q {
+                af[(j * m + j) * q + k] = ae[j * q + k];
+            }
+        }
+        pf.bufs[2] = af;
+        let x = vec![0.5f32, -0.2, 0.8, 0.1];
+        let mut fe = vec![0f32; m];
+        let mut ff = vec![0f32; m];
+        elman::h_row(&pe, &x, &mut fe);
+        h_row(&pf, &x, &mut ff);
+        for j in 0..m {
+            assert!((fe[j] - ff[j]).abs() < 1e-6, "{} vs {}", fe[j], ff[j]);
+        }
+    }
+
+    #[test]
+    fn cross_neuron_coupling_matters() {
+        let (s, q, m) = (1, 3, 2);
+        let p = ElmParams::init(Arch::Fc, s, q, m, 13);
+        let x = vec![0.4f32, 0.2, -0.1];
+        let mut a = vec![0f32; m];
+        h_row(&p, &x, &mut a);
+        // zero the off-diagonal coupling: result must change
+        let mut p2 = p.clone();
+        for j in 0..m {
+            for l in 0..m {
+                if l != j {
+                    for k in 0..q {
+                        p2.bufs[2][(j * m + l) * q + k] = 0.0;
+                    }
+                }
+            }
+        }
+        let mut b = vec![0f32; m];
+        h_row(&p2, &x, &mut b);
+        assert!(a.iter().zip(&b).any(|(x, y)| (x - y).abs() > 1e-7));
+    }
+}

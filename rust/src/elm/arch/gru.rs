@@ -1,0 +1,71 @@
+//! GRU recurrence (Eq 11), diagonal. Gate order: [z, r, f] — matching
+//! `python/compile/kernels/gru.py`.
+
+use crate::elm::activation::{sigmoid, tanh};
+use crate::elm::params::ElmParams;
+
+/// One sample: runs the 3-gate diagonal cell over the window.
+pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let w3 = p.buf("w3"); // (s, 3, m)
+    let u3 = p.buf("u3"); // (3, m)
+    let b3 = p.buf("b3"); // (3, m)
+    let mut f_prev = vec![0f32; m];
+    for t in 0..q {
+        for j in 0..m {
+            let wx = |g: usize| -> f32 {
+                let mut acc = 0f32;
+                for si in 0..s {
+                    acc += w3[(si * 3 + g) * m + j] * x[si * q + t];
+                }
+                acc
+            };
+            let z = sigmoid(wx(0) + u3[j] * f_prev[j] + b3[j]);
+            let r = sigmoid(wx(1) + u3[m + j] * f_prev[j] + b3[m + j]);
+            let cand = tanh(wx(2) + u3[2 * m + j] * (r * f_prev[j]) + b3[2 * m + j]);
+            out[j] = (1.0 - z) * f_prev[j] + z * cand;
+        }
+        f_prev.copy_from_slice(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::params::Arch;
+
+    #[test]
+    fn closed_update_gate_freezes_zero_state() {
+        let (s, q, m) = (1, 4, 3);
+        let mut p = ElmParams::init(Arch::Gru, s, q, m, 30);
+        for j in 0..m {
+            p.bufs[2][j] = -30.0; // b3 z-gate → z = 0
+            p.bufs[1][j] = 0.0; // u3 z-gate
+        }
+        let x = vec![0.5f32, -0.3, 0.2, 0.9];
+        let mut out = vec![1f32; m];
+        h_row(&p, &x, &mut out);
+        for j in 0..m {
+            assert!(out[j].abs() < 1e-5, "state must stay at f(0) = 0");
+        }
+    }
+
+    #[test]
+    fn open_update_gate_is_memoryless() {
+        let (s, q, m) = (1, 4, 2);
+        let mut p = ElmParams::init(Arch::Gru, s, q, m, 31);
+        for j in 0..m {
+            p.bufs[2][j] = 30.0; // z = 1
+            p.bufs[1][j] = 0.0;
+            p.bufs[1][2 * m + j] = 0.0; // candidate ignores state
+        }
+        let x = vec![0.1f32, 0.7, -0.2, 0.4];
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &mut out);
+        let (w3, b3) = (p.buf("w3"), p.buf("b3"));
+        for j in 0..m {
+            let want = (w3[2 * m + j] * x[q - 1] + b3[2 * m + j]).tanh();
+            assert!((out[j] - want).abs() < 1e-4);
+        }
+    }
+}

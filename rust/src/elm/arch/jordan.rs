@@ -1,0 +1,61 @@
+//! Jordan recurrence (Eq 7): output feedback, teacher-forced during
+//! training — H(Q) is a direct function of the inputs (DESIGN.md §2).
+
+use crate::elm::activation::tanh;
+use crate::elm::params::ElmParams;
+
+use super::wx_at;
+
+/// One sample: h_j = g(w_j·x(Q) + b_j + Σ_k α[j,k] y(t−k)).
+pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], out: &mut [f32]) {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let w = p.buf("w");
+    let b = p.buf("b");
+    let alpha = p.buf("alpha");
+    debug_assert_eq!(yhist.len(), q);
+    for j in 0..m {
+        let mut acc = wx_at(w, x, s, q, m, j, q - 1) + b[j];
+        for k in 0..q {
+            acc += alpha[j * q + k] * yhist[k];
+        }
+        out[j] = tanh(acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::params::Arch;
+
+    #[test]
+    fn zero_history_is_feedforward() {
+        let (s, q, m) = (1, 5, 4);
+        let p = ElmParams::init(Arch::Jordan, s, q, m, 2);
+        let x: Vec<f32> = (0..q).map(|i| i as f32 * 0.1).collect();
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &vec![0.0; q], &mut out);
+        let (w, b) = (p.buf("w"), p.buf("b"));
+        for j in 0..m {
+            let want = (w[j] * x[q - 1] + b[j]).tanh();
+            assert!((out[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn feedback_shifts_preactivation_linearly() {
+        let (s, q, m) = (1, 3, 2);
+        let p = ElmParams::init(Arch::Jordan, s, q, m, 4);
+        let x = vec![0.1f32, 0.2, 0.3];
+        let yh = vec![0.5f32, -0.2, 0.1];
+        let mut a = vec![0f32; m];
+        let mut bq = vec![0f32; m];
+        h_row(&p, &x, &vec![0.0; q], &mut a);
+        h_row(&p, &x, &yh, &mut bq);
+        let alpha = p.buf("alpha");
+        for j in 0..m {
+            let delta: f32 = (0..q).map(|k| alpha[j * q + k] * yh[k]).sum();
+            let want = (a[j].atanh() + delta).tanh();
+            assert!((bq[j] - want).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! LSTM recurrence (Eq 10), diagonal: each neuron's gates see only its own
+//! f(t−1). Gate order on the stacked axis: [o, c~, λ (forget), in] —
+//! matching `python/compile/kernels/lstm.py`.
+
+use crate::elm::activation::{sigmoid, tanh};
+use crate::elm::params::ElmParams;
+
+/// One sample: runs the 4-gate diagonal cell over the window.
+pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let w4 = p.buf("w4"); // (s, 4, m): w4[(si*4 + g)*m + j]
+    let u4 = p.buf("u4"); // (4, m)
+    let b4 = p.buf("b4"); // (4, m)
+    let mut f_prev = vec![0f32; m];
+    let mut c_prev = vec![0f32; m];
+    for t in 0..q {
+        for j in 0..m {
+            let mut pre = [0f32; 4];
+            for g in 0..4 {
+                let mut acc = u4[g * m + j] * f_prev[j] + b4[g * m + j];
+                for si in 0..s {
+                    acc += w4[(si * 4 + g) * m + j] * x[si * q + t];
+                }
+                pre[g] = acc;
+            }
+            let o = sigmoid(pre[0]);
+            let c_tilde = tanh(pre[1]);
+            let lam = sigmoid(pre[2]);
+            let inp = sigmoid(pre[3]);
+            let c = lam * c_prev[j] + inp * c_tilde;
+            c_prev[j] = c;
+            out[j] = o * tanh(c);
+        }
+        f_prev.copy_from_slice(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::params::Arch;
+
+    #[test]
+    fn closed_forget_gate_forgets() {
+        let (s, q, m) = (1, 5, 2);
+        let mut p = ElmParams::init(Arch::Lstm, s, q, m, 20);
+        // forget gate (g=2) hard closed; kill all recurrent terms
+        for j in 0..m {
+            p.bufs[2][2 * m + j] = -30.0; // b4 lambda
+            for g in 0..4 {
+                p.bufs[1][g * m + j] = 0.0; // u4
+            }
+        }
+        let mut x1 = vec![0.2f32; q];
+        let mut out1 = vec![0f32; m];
+        h_row(&p, &x1, &mut out1);
+        // scramble everything but the last step: output must not change
+        for v in x1.iter_mut().take(q - 1) {
+            *v = 5.0;
+        }
+        let mut out2 = vec![0f32; m];
+        h_row(&p, &x1, &mut out2);
+        for j in 0..m {
+            assert!((out1[j] - out2[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_step_matches_closed_form() {
+        let (s, q, m) = (1, 1, 3);
+        let p = ElmParams::init(Arch::Lstm, s, q, m, 21);
+        let x = vec![0.6f32];
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &mut out);
+        let (w4, b4) = (p.buf("w4"), p.buf("b4"));
+        for j in 0..m {
+            let pre = |g: usize| w4[g * m + j] * x[0] + b4[g * m + j];
+            let c = sigmoid(pre(2)) * 0.0 + sigmoid(pre(3)) * pre(1).tanh();
+            let want = sigmoid(pre(0)) * c.tanh();
+            assert!((out[j] - want).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! The six H recurrences (Eq 6-11) as plain sequential scalar code — the
+//! S-R-ELM baseline. `h_row` computes one sample's H(Q) row; the trainer
+//! loops it over the dataset exactly like Algorithm 1.
+//!
+//! Input contract per sample (matching `data::Windowed`):
+//! * `x`     — the lag window, row-major (S, Q): x[s*Q + t]
+//! * `yhist` — target history, yhist[k-1] = y(t-k)   (jordan/narmax)
+//! * `ehist` — residual history, same alignment      (narmax)
+
+pub mod elman;
+pub mod fc;
+pub mod gru;
+pub mod jordan;
+pub mod lstm;
+pub mod narmax;
+
+use super::params::{Arch, ElmParams};
+
+/// Dispatch: one sample's H row (length M).
+pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), p.s * p.q);
+    debug_assert_eq!(out.len(), p.m);
+    match p.arch {
+        Arch::Elman => elman::h_row(p, x, out),
+        Arch::Jordan => jordan::h_row(p, x, yhist, out),
+        Arch::Narmax => narmax::h_row(p, x, yhist, ehist, out),
+        Arch::Fc => fc::h_row(p, x, out),
+        Arch::Lstm => lstm::h_row(p, x, out),
+        Arch::Gru => gru::h_row(p, x, out),
+    }
+}
+
+/// Input projection helper: w[:, j] · x[:, t] for row-major w (S, M) and
+/// x (S, Q) — the dot product of Alg 2 line 6.
+#[inline]
+pub(crate) fn wx_at(w: &[f32], x: &[f32], s: usize, q: usize, m: usize, j: usize, t: usize) -> f32 {
+    let mut acc = 0f32;
+    for si in 0..s {
+        acc += w[si * m + j] * x[si * q + t];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::ALL_ARCHS;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_archs_produce_finite_bounded_rows() {
+        let (s, q, m) = (2, 6, 5);
+        let mut rng = Rng::new(3);
+        for arch in ALL_ARCHS {
+            let p = ElmParams::init(arch, s, q, m, 11);
+            let x: Vec<f32> = rng.normals_f32(s * q);
+            let yh: Vec<f32> = rng.normals_f32(q).iter().map(|v| v * 0.1).collect();
+            let eh: Vec<f32> = rng.normals_f32(q).iter().map(|v| v * 0.1).collect();
+            let mut out = vec![0f32; m];
+            h_row(&p, &x, &yh, &eh, &mut out);
+            for v in &out {
+                assert!(v.is_finite() && v.abs() <= 1.0 + 1e-5, "{arch:?}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn wx_at_matches_naive() {
+        let (s, q, m) = (3, 4, 2);
+        let w: Vec<f32> = (0..s * m).map(|i| i as f32 * 0.5).collect();
+        let x: Vec<f32> = (0..s * q).map(|i| (i as f32).sin()).collect();
+        for j in 0..m {
+            for t in 0..q {
+                let naive: f32 = (0..s).map(|si| w[si * m + j] * x[si * q + t]).sum();
+                assert_eq!(wx_at(&w, &x, s, q, m, j, t), naive);
+            }
+        }
+    }
+}

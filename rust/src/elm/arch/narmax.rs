@@ -1,0 +1,65 @@
+//! NARMAX recurrence (Eq 8): exogenous output + error feedback (F = R = Q).
+//! The error history comes from the two-pass extended-least-squares trainer.
+
+use crate::elm::activation::tanh;
+use crate::elm::params::ElmParams;
+
+use super::wx_at;
+
+/// One sample: h_j = g(w_j·x(Q) + b_j + Σ_l W'[j,l] y(t−l) + Σ_l W''[j,l] e(t−l)).
+pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [f32]) {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let w = p.buf("w");
+    let b = p.buf("b");
+    let wp = p.buf("wp");
+    let wpp = p.buf("wpp");
+    debug_assert_eq!(yhist.len(), q);
+    debug_assert_eq!(ehist.len(), q);
+    for j in 0..m {
+        let mut acc = wx_at(w, x, s, q, m, j, q - 1) + b[j];
+        for l in 0..q {
+            acc += wp[j * q + l] * yhist[l] + wpp[j * q + l] * ehist[l];
+        }
+        out[j] = tanh(acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::arch::jordan;
+    use crate::elm::params::Arch;
+
+    #[test]
+    fn zero_error_matches_jordan_with_wp_as_alpha() {
+        let (s, q, m) = (1, 4, 3);
+        let pn = ElmParams::init(Arch::Narmax, s, q, m, 6);
+        // build a Jordan with identical (w, b) and alpha := wp
+        let mut pj = ElmParams::init(Arch::Jordan, s, q, m, 6);
+        pj.bufs[0] = pn.buf("w").to_vec();
+        pj.bufs[1] = pn.buf("b").to_vec();
+        pj.bufs[2] = pn.buf("wp").to_vec();
+        let x = vec![0.3f32, -0.1, 0.2, 0.5];
+        let yh = vec![0.2f32, 0.1, -0.3, 0.4];
+        let mut a = vec![0f32; m];
+        let mut b_ = vec![0f32; m];
+        h_row(&pn, &x, &yh, &vec![0.0; q], &mut a);
+        jordan::h_row(&pj, &x, &yh, &mut b_);
+        for j in 0..m {
+            assert!((a[j] - b_[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_feedback_contributes() {
+        let (s, q, m) = (1, 3, 2);
+        let p = ElmParams::init(Arch::Narmax, s, q, m, 8);
+        let x = vec![0.1f32, 0.0, 0.2];
+        let yh = vec![0.1f32, 0.2, 0.3];
+        let mut a = vec![0f32; m];
+        let mut b = vec![0f32; m];
+        h_row(&p, &x, &yh, &vec![0.0; q], &mut a);
+        h_row(&p, &x, &yh, &[0.5, -0.5, 0.25], &mut b);
+        assert!(a.iter().zip(&b).any(|(x, y)| (x - y).abs() > 1e-6));
+    }
+}

@@ -1,0 +1,28 @@
+//! S-R-ELM: the sequential non-iterative RNN trainer (Algorithm 1).
+//!
+//! This is the paper's CPU baseline (adopted from Rizk & Awad 2019): build
+//! the hidden design matrix H by running each architecture's recurrence
+//! (Eq 6-11) sample by sample with plain scalar loops, then solve
+//! `min ‖Hβ − Y‖` by QR. Deliberately *not* vectorized — this is the
+//! comparator the parallel pipeline's speedups are measured against, so it
+//! mirrors what a straightforward NumPy-free sequential implementation does.
+//!
+//! The architecture recurrences live in [`arch`], one module each, and are
+//! bit-compatible (up to f32 rounding) with the Pallas kernels — the
+//! integration tests in `rust/tests/pipeline.rs` check rust-vs-artifact
+//! numerics on shared inputs.
+
+pub mod activation;
+pub mod arch;
+pub mod online;
+pub mod params;
+pub mod stacked;
+pub mod trainer;
+
+pub use online::OnlineElm;
+pub use params::{param_specs, Arch, ElmParams};
+pub use stacked::StackedElmModel;
+pub use trainer::{SrElmModel, TrainOptions};
+
+pub const ALL_ARCHS: [Arch; 6] =
+    [Arch::Elman, Arch::Jordan, Arch::Narmax, Arch::Fc, Arch::Lstm, Arch::Gru];

@@ -1,0 +1,218 @@
+//! Online sequential ELM (OS-ELM, Park & Kim 2017 — §3.1.2 of the paper):
+//! recursive least squares over streaming H blocks, so β stays current as
+//! samples arrive without re-solving from scratch.
+//!
+//! State: P = (HᵀH + λI)⁻¹ and β. Block update (Sherman-Morrison-Woodbury):
+//!
+//! ```text
+//!   K = P Hᵀ (I + H P Hᵀ)⁻¹
+//!   β ← β + K (y − H β)
+//!   P ← P − K H P
+//! ```
+//!
+//! This composes with the coordinator's row-block streaming: the same
+//! `elm_h` artifacts produce H blocks; this module folds them. The
+//! invariant (tested): after any prefix of blocks, β equals the batch
+//! ridge solution over the rows seen so far.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{cholesky_solve, Matrix};
+
+/// Recursive least-squares state for one output.
+pub struct OnlineElm {
+    m: usize,
+    /// P = (HᵀH + λI)⁻¹, kept symmetric
+    p: Matrix,
+    beta: Vec<f64>,
+    rows_seen: usize,
+    lambda: f64,
+}
+
+impl OnlineElm {
+    /// λ > 0 initializes P = I/λ (ridge prior), so updates are defined
+    /// from the first row.
+    pub fn new(m: usize, lambda: f64) -> OnlineElm {
+        assert!(lambda > 0.0, "online ELM needs a ridge prior");
+        let mut p = Matrix::zeros(m, m);
+        for i in 0..m {
+            p[(i, i)] = 1.0 / lambda;
+        }
+        OnlineElm { m, p, beta: vec![0.0; m], rows_seen: 0, lambda }
+    }
+
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    pub fn rows_seen(&self) -> usize {
+        self.rows_seen
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Fold one H block (r × M, f32 artifact layout) and its targets.
+    pub fn update_block(&mut self, h: &[f32], y: &[f32], rows: usize) -> Result<()> {
+        if h.len() != rows * self.m || y.len() != rows {
+            bail!(
+                "online update shapes: h {} y {} vs rows {} x M {}",
+                h.len(),
+                y.len(),
+                rows,
+                self.m
+            );
+        }
+        if rows == 0 {
+            return Ok(());
+        }
+        let hb = Matrix::from_f32(rows, self.m, h);
+        // S = I + H P Hᵀ  (r × r, SPD)
+        let ph_t = {
+            // P Hᵀ: M × r
+            let mut out = Matrix::zeros(self.m, rows);
+            for i in 0..self.m {
+                for r in 0..rows {
+                    let mut s = 0.0;
+                    for k in 0..self.m {
+                        s += self.p[(i, k)] * hb[(r, k)];
+                    }
+                    out[(i, r)] = s;
+                }
+            }
+            out
+        };
+        let mut s_mat = hb.matmul(&ph_t); // r × r
+        for i in 0..rows {
+            s_mat[(i, i)] += 1.0;
+        }
+        // K = P Hᵀ S⁻¹ — solve S Xᵀ = (P Hᵀ)ᵀ column by column via Cholesky
+        let mut k = Matrix::zeros(self.m, rows);
+        for col in 0..self.m {
+            // rhs = row `col` of P Hᵀ as a vector over r
+            let rhs: Vec<f64> = (0..rows).map(|r| ph_t[(col, r)]).collect();
+            let x = cholesky_solve(&s_mat, &rhs)?;
+            for r in 0..rows {
+                k[(col, r)] = x[r];
+            }
+        }
+        // β += K (y − H β)
+        let resid: Vec<f64> = (0..rows)
+            .map(|r| {
+                let pred: f64 =
+                    (0..self.m).map(|j| hb[(r, j)] * self.beta[j]).sum();
+                y[r] as f64 - pred
+            })
+            .collect();
+        let delta = k.matvec(&resid);
+        for (b, d) in self.beta.iter_mut().zip(&delta) {
+            *b += d;
+        }
+        // P ← P − K (H P) ; H P = (P Hᵀ)ᵀ
+        for i in 0..self.m {
+            for j in 0..self.m {
+                let mut s = 0.0;
+                for r in 0..rows {
+                    s += k[(i, r)] * ph_t[(j, r)];
+                }
+                self.p[(i, j)] -= s;
+            }
+        }
+        // re-symmetrize (float drift)
+        for i in 0..self.m {
+            for j in 0..i {
+                let avg = 0.5 * (self.p[(i, j)] + self.p[(j, i)]);
+                self.p[(i, j)] = avg;
+                self.p[(j, i)] = avg;
+            }
+        }
+        self.rows_seen += rows;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix as M;
+    use crate::util::rng::Rng;
+
+    fn batch_ridge(h: &[f32], y: &[f32], n: usize, m: usize, lambda: f64) -> Vec<f64> {
+        let hm = M::from_f32(n, m, h);
+        let mut g = hm.gram();
+        for i in 0..m {
+            g[(i, i)] += lambda;
+        }
+        let yv: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let c = hm.t_matvec(&yv);
+        cholesky_solve(&g, &c).unwrap()
+    }
+
+    fn random_problem(n: usize, m: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let h: Vec<f32> = (0..n * m).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        (h, y)
+    }
+
+    #[test]
+    fn online_equals_batch_after_every_prefix() {
+        let (n, m, lambda) = (96usize, 6usize, 1e-3);
+        let (h, y) = random_problem(n, m, 1);
+        let mut online = OnlineElm::new(m, lambda);
+        let block = 16;
+        let mut seen = 0;
+        while seen < n {
+            let hi = (seen + block).min(n);
+            online
+                .update_block(&h[seen * m..hi * m], &y[seen..hi], hi - seen)
+                .unwrap();
+            seen = hi;
+            if seen >= m {
+                let batch = batch_ridge(&h[..seen * m], &y[..seen], seen, m, lambda);
+                for (a, b) in online.beta().iter().zip(&batch) {
+                    assert!((a - b).abs() < 1e-6, "prefix {seen}: {a} vs {b}");
+                }
+            }
+        }
+        assert_eq!(online.rows_seen(), n);
+    }
+
+    #[test]
+    fn block_size_does_not_matter() {
+        let (n, m, lambda) = (80usize, 5usize, 1e-2);
+        let (h, y) = random_problem(n, m, 2);
+        let mut by_1 = OnlineElm::new(m, lambda);
+        let mut by_all = OnlineElm::new(m, lambda);
+        for i in 0..n {
+            by_1.update_block(&h[i * m..(i + 1) * m], &y[i..i + 1], 1).unwrap();
+        }
+        by_all.update_block(&h, &y, n).unwrap();
+        for (a, b) in by_1.beta().iter().zip(by_all.beta()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_block_is_noop() {
+        let mut o = OnlineElm::new(4, 1e-2);
+        let before = o.beta().to_vec();
+        o.update_block(&[], &[], 0).unwrap();
+        assert_eq!(o.beta(), &before[..]);
+        assert_eq!(o.rows_seen(), 0);
+    }
+
+    #[test]
+    fn shape_errors_rejected() {
+        let mut o = OnlineElm::new(4, 1e-2);
+        assert!(o.update_block(&[0.0; 7], &[0.0; 2], 2).is_err());
+        assert!(o.update_block(&[0.0; 8], &[0.0; 3], 2).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "ridge prior")]
+    fn zero_lambda_rejected() {
+        let _ = OnlineElm::new(3, 0.0);
+    }
+}

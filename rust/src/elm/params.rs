@@ -1,0 +1,196 @@
+//! Random ELM parameters, stored as flat f32 buffers in the artifact ABI
+//! order (mirrors `python/compile/common.py::param_specs` exactly — this is
+//! the cross-layer contract).
+//!
+//! Initialization: input weights and biases ~ U(-1, 1) (the classic ELM
+//! regime); feedback weights are scaled by the number of summed feedback
+//! terms (1/Q diagonal, 1/(QM) fully connected) so the Q-term recurrent sums
+//! stay O(1) and tanh does not saturate into rank collapse — DESIGN.md §2.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Elman,
+    Jordan,
+    Narmax,
+    Fc,
+    Lstm,
+    Gru,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Elman => "elman",
+            Arch::Jordan => "jordan",
+            Arch::Narmax => "narmax",
+            Arch::Fc => "fc",
+            Arch::Lstm => "lstm",
+            Arch::Gru => "gru",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Arch> {
+        Ok(match s {
+            "elman" => Arch::Elman,
+            "jordan" => Arch::Jordan,
+            "narmax" => Arch::Narmax,
+            "fc" | "fully_connected" => Arch::Fc,
+            "lstm" => Arch::Lstm,
+            "gru" => Arch::Gru,
+            other => bail!("unknown architecture {other:?}"),
+        })
+    }
+
+    /// Does H(t) feed back hidden state (vs exogenous-only feedback)?
+    pub fn is_recurrent(&self) -> bool {
+        !matches!(self, Arch::Jordan | Arch::Narmax)
+    }
+
+    /// Does the H computation consume the target history (teacher forcing)?
+    pub fn uses_yhist(&self) -> bool {
+        matches!(self, Arch::Jordan | Arch::Narmax)
+    }
+
+    /// Does the H computation consume the error history (NARMAX ELS)?
+    pub fn uses_ehist(&self) -> bool {
+        matches!(self, Arch::Narmax)
+    }
+}
+
+/// (name, shape) list in ABI order — must match python param_specs.
+pub fn param_specs(arch: Arch, s: usize, q: usize, m: usize) -> Vec<(&'static str, Vec<usize>)> {
+    match arch {
+        Arch::Elman | Arch::Jordan => {
+            vec![("w", vec![s, m]), ("b", vec![m]), ("alpha", vec![m, q])]
+        }
+        Arch::Narmax => vec![
+            ("w", vec![s, m]),
+            ("b", vec![m]),
+            ("wp", vec![m, q]),
+            ("wpp", vec![m, q]),
+        ],
+        Arch::Fc => vec![("w", vec![s, m]), ("b", vec![m]), ("alpha", vec![m, m, q])],
+        Arch::Lstm => vec![("w4", vec![s, 4, m]), ("u4", vec![4, m]), ("b4", vec![4, m])],
+        Arch::Gru => vec![("w3", vec![s, 3, m]), ("u3", vec![3, m]), ("b3", vec![3, m])],
+    }
+}
+
+/// The fixed random parameters of one ELM-trained RNN.
+#[derive(Debug, Clone)]
+pub struct ElmParams {
+    pub arch: Arch,
+    pub s: usize,
+    pub q: usize,
+    pub m: usize,
+    /// flat buffers in ABI order
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl ElmParams {
+    /// Draw the paper's random weights (deterministic in `seed`).
+    pub fn init(arch: Arch, s: usize, q: usize, m: usize, seed: u64) -> ElmParams {
+        let mut rng = Rng::new(seed);
+        let specs = param_specs(arch, s, q, m);
+        let bufs = specs
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let scale = feedback_scale(arch, name, q, m);
+                let mut rr = rng.fork(fx(name));
+                rr.weights(n).into_iter().map(|w| w * scale).collect()
+            })
+            .collect();
+        ElmParams { arch, s, q, m, bufs }
+    }
+
+    /// Buffer by ABI name.
+    pub fn buf(&self, name: &str) -> &[f32] {
+        let specs = param_specs(self.arch, self.s, self.q, self.m);
+        let idx = specs
+            .iter()
+            .position(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("{} has no param {name}", self.arch.name()));
+        &self.bufs[idx]
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// Feedback terms are summed over Q (diagonal) or Q*M (fully connected);
+/// scale to keep the sums O(1).
+fn feedback_scale(arch: Arch, name: &str, q: usize, m: usize) -> f32 {
+    match (arch, name) {
+        (Arch::Fc, "alpha") => 1.0 / (q as f32 * m as f32),
+        (_, "alpha") | (_, "wp") | (_, "wpp") => 1.0 / q as f32,
+        _ => 1.0,
+    }
+}
+
+fn fx(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_python_abi() {
+        // shapes mirrored from python/compile/common.py
+        let specs = param_specs(Arch::Lstm, 3, 7, 5);
+        assert_eq!(specs[0], ("w4", vec![3, 4, 5]));
+        assert_eq!(specs[1], ("u4", vec![4, 5]));
+        assert_eq!(specs[2], ("b4", vec![4, 5]));
+        let specs = param_specs(Arch::Fc, 2, 4, 6);
+        assert_eq!(specs[2], ("alpha", vec![6, 6, 4]));
+        let specs = param_specs(Arch::Narmax, 1, 10, 8);
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[3], ("wpp", vec![8, 10]));
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let a = ElmParams::init(Arch::Elman, 1, 10, 8, 42);
+        let b = ElmParams::init(Arch::Elman, 1, 10, 8, 42);
+        assert_eq!(a.bufs, b.bufs);
+        for w in a.buf("w") {
+            assert!(w.abs() <= 1.0);
+        }
+        for al in a.buf("alpha") {
+            assert!(al.abs() <= 0.1 + 1e-6, "alpha scaled by 1/Q");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = ElmParams::init(Arch::Gru, 1, 5, 4, 1);
+        let b = ElmParams::init(Arch::Gru, 1, 5, 4, 2);
+        assert_ne!(a.bufs, b.bufs);
+    }
+
+    #[test]
+    fn buf_lookup_by_name() {
+        let p = ElmParams::init(Arch::Narmax, 2, 6, 3, 7);
+        assert_eq!(p.buf("w").len(), 6);
+        assert_eq!(p.buf("wpp").len(), 18);
+    }
+
+    #[test]
+    fn arch_parse_round_trip() {
+        for a in crate::elm::ALL_ARCHS {
+            assert_eq!(Arch::parse(a.name()).unwrap(), a);
+        }
+        assert!(Arch::parse("transformer").is_err());
+    }
+}

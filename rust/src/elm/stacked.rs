@@ -1,0 +1,204 @@
+//! Multi-layer ELM RNNs — the paper's stated future work (§8: "extending
+//! Opt-PR-ELM to RNNs with multiple layers").
+//!
+//! Layer 1 runs the chosen architecture's recurrence over the raw lag
+//! window; each subsequent layer is a random-feature expansion of the
+//! previous layer's output (ELM-autoencoder style: tanh(W_l h + b_l) with
+//! fixed random W_l); β is solved once against the final layer — the
+//! solve stays a single linear system, preserving the non-iterative
+//! training property.
+
+use anyhow::{bail, Result};
+
+use crate::data::window::Windowed;
+use crate::linalg::{lstsq_ridge, Matrix};
+use crate::util::rng::Rng;
+
+use super::params::{Arch, ElmParams};
+use super::trainer::{hidden_matrix, TrainOptions};
+
+/// One random projection layer.
+#[derive(Debug, Clone)]
+pub struct RandomLayer {
+    pub w: Vec<f32>, // (m_in, m_out) row-major
+    pub b: Vec<f32>, // (m_out,)
+    pub m_in: usize,
+    pub m_out: usize,
+}
+
+impl RandomLayer {
+    fn init(m_in: usize, m_out: usize, rng: &mut Rng) -> RandomLayer {
+        // scale 1/sqrt(m_in) keeps pre-activations O(1)
+        let s = 1.0 / (m_in as f32).sqrt();
+        RandomLayer {
+            w: rng.weights(m_in * m_out).iter().map(|v| v * s).collect(),
+            b: rng.weights(m_out),
+            m_in,
+            m_out,
+        }
+    }
+
+    fn apply(&self, h: &Matrix) -> Matrix {
+        let n = h.rows;
+        let mut out = Matrix::zeros(n, self.m_out);
+        for i in 0..n {
+            for j in 0..self.m_out {
+                let mut acc = self.b[j] as f64;
+                for k in 0..self.m_in {
+                    acc += h[(i, k)] * self.w[k * self.m_out + j] as f64;
+                }
+                out[(i, j)] = acc.tanh();
+            }
+        }
+        out
+    }
+}
+
+/// A depth-L non-iteratively trained RNN.
+pub struct StackedElmModel {
+    pub params: ElmParams,
+    pub layers: Vec<RandomLayer>,
+    pub beta: Vec<f64>,
+    ridge: f64,
+}
+
+impl StackedElmModel {
+    /// `widths`: hidden sizes of layers 2..L (layer 1 width = opts.m).
+    pub fn train(
+        arch: Arch,
+        data: &Windowed,
+        opts: &TrainOptions,
+        widths: &[usize],
+    ) -> Result<StackedElmModel> {
+        if arch.uses_ehist() {
+            bail!("stacked NARMAX is not defined (error feedback is single-layer)");
+        }
+        let params = ElmParams::init(arch, data.s, data.q, opts.m, opts.seed);
+        let mut rng = Rng::new(opts.seed ^ 0x5AC4ED);
+        let mut layers = Vec::new();
+        let mut m_in = opts.m;
+        for &w in widths {
+            if w == 0 {
+                bail!("layer width must be positive");
+            }
+            layers.push(RandomLayer::init(m_in, w, &mut rng));
+            m_in = w;
+        }
+        let ridge = opts.ridge.unwrap_or(1e-8);
+        let h_final = forward(&params, &layers, data);
+        let y: Vec<f64> = data.y.iter().map(|&v| v as f64).collect();
+        let beta = lstsq_ridge(&h_final, &y, ridge)?;
+        Ok(StackedElmModel { params, layers, beta, ridge })
+    }
+
+    pub fn predict(&self, data: &Windowed) -> Vec<f64> {
+        let h = forward(&self.params, &self.layers, data);
+        h.matvec(&self.beta)
+    }
+
+    pub fn rmse(&self, data: &Windowed) -> f64 {
+        let pred = self.predict(data);
+        let truth: Vec<f64> = data.y.iter().map(|&v| v as f64).collect();
+        crate::data::stats::rmse(&pred, &truth)
+    }
+
+    pub fn depth(&self) -> usize {
+        1 + self.layers.len()
+    }
+
+    pub fn ridge(&self) -> f64 {
+        self.ridge
+    }
+}
+
+fn forward(params: &ElmParams, layers: &[RandomLayer], data: &Windowed) -> Matrix {
+    let mut h = hidden_matrix(params, data, None);
+    for layer in layers {
+        h = layer.apply(&h);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::SrElmModel;
+    use crate::util::rng::Rng as R;
+
+    fn toy(n: usize, seed: u64) -> Windowed {
+        let mut rng = R::new(seed);
+        let mut y = vec![0.2f64, 0.5];
+        for t in 2..n {
+            let v = 0.5 * y[t - 1] + 0.25 * y[t - 2]
+                + 0.15 * (t as f64 * 0.21).sin()
+                + 0.05 * rng.normal();
+            y.push(v);
+        }
+        let lo = y.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = y.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let z: Vec<f64> = y.iter().map(|v| (v - lo) / (hi - lo)).collect();
+        Windowed::from_series(&z, 6).unwrap()
+    }
+
+    #[test]
+    fn zero_extra_layers_matches_single_layer() {
+        let w = toy(400, 1);
+        let (train, test) = w.split(0.8);
+        let mut opts = TrainOptions::new(12, 5);
+        opts.ridge = Some(1e-8);
+        let stacked = StackedElmModel::train(Arch::Elman, &train, &opts, &[]).unwrap();
+        let flat = SrElmModel::train(Arch::Elman, &train, &opts).unwrap();
+        assert_eq!(stacked.depth(), 1);
+        let (rs, rf) = (stacked.rmse(&test), flat.rmse(&test));
+        assert!((rs - rf).abs() < 1e-9, "{rs} vs {rf}");
+    }
+
+    #[test]
+    fn deeper_models_still_learn() {
+        let w = toy(600, 2);
+        let (train, test) = w.split(0.8);
+        let ymean = test.y.iter().map(|&v| v as f64).sum::<f64>() / test.n as f64;
+        let base = (test
+            .y
+            .iter()
+            .map(|&v| (v as f64 - ymean).powi(2))
+            .sum::<f64>()
+            / test.n as f64)
+            .sqrt();
+        for arch in [Arch::Elman, Arch::Lstm, Arch::Gru, Arch::Jordan, Arch::Fc] {
+            let model =
+                StackedElmModel::train(arch, &train, &TrainOptions::new(16, 3), &[32, 16])
+                    .unwrap();
+            assert_eq!(model.depth(), 3);
+            let rmse = model.rmse(&test);
+            assert!(rmse < base, "{}: {rmse} vs mean-baseline {base}", arch.name());
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let w = toy(300, 3);
+        let opts = TrainOptions::new(8, 11);
+        let a = StackedElmModel::train(Arch::Gru, &w, &opts, &[16]).unwrap();
+        let b = StackedElmModel::train(Arch::Gru, &w, &opts, &[16]).unwrap();
+        assert_eq!(a.beta, b.beta);
+    }
+
+    #[test]
+    fn narmax_rejected() {
+        let w = toy(200, 4);
+        assert!(
+            StackedElmModel::train(Arch::Narmax, &w, &TrainOptions::new(8, 1), &[8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn zero_width_rejected() {
+        let w = toy(200, 5);
+        assert!(
+            StackedElmModel::train(Arch::Elman, &w, &TrainOptions::new(8, 1), &[0])
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! §7.5 energy accounting: J = W × s with the paper's power figures
+//! (CPU ≥ 30 W under heavy compute, GPU ≈ 300 W), and the paper's
+//! observation that any speedup above power-ratio (10×) is a net energy
+//! win for the GPU.
+
+use super::device::{DeviceSpec, HostSpec};
+use super::model::SimResult;
+
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub gpu_s: f64,
+    pub gpu_joules: f64,
+    pub cpu_s: f64,
+    pub cpu_joules: f64,
+    /// cpu_joules / gpu_joules (paper §7.5: ≈50× for Elman M=50)
+    pub energy_ratio: f64,
+    /// the break-even speedup: gpu wins energy when speedup > this
+    pub break_even_speedup: f64,
+}
+
+pub fn energy_report(r: &SimResult, dev: &DeviceSpec, host: &HostSpec) -> EnergyReport {
+    EnergyReport {
+        gpu_s: r.gpu_total_s,
+        gpu_joules: r.gpu_joules,
+        cpu_s: r.cpu_total_s,
+        cpu_joules: r.cpu_joules,
+        energy_ratio: r.cpu_joules / r.gpu_joules.max(1e-12),
+        break_even_speedup: dev.power_w / host.power_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::device::{cpu_host, tesla_k20m};
+    use super::super::model::{simulate, SimConfig, Variant};
+    use super::*;
+    use crate::elm::Arch;
+
+    #[test]
+    fn break_even_is_power_ratio() {
+        // §7.5: "whenever [the GPU] exhibits a speedup higher than 10,
+        // [it is] more power-efficient" (300 W / 30 W)
+        let cfg = SimConfig {
+            arch: Arch::Elman,
+            variant: Variant::Opt,
+            n: 100_000,
+            s: 1,
+            q: 10,
+            m: 50,
+            bs: 32,
+        };
+        let r = simulate(&cfg, &tesla_k20m(), &cpu_host());
+        let e = energy_report(&r, &tesla_k20m(), &cpu_host());
+        assert_eq!(e.break_even_speedup, 10.0);
+        // energy ratio = speedup / break-even
+        assert!((e.energy_ratio - r.speedup / 10.0).abs() < 1e-6 * e.energy_ratio);
+    }
+
+    #[test]
+    fn big_runs_save_energy() {
+        let cfg = SimConfig {
+            arch: Arch::Lstm,
+            variant: Variant::Opt,
+            n: 500_000,
+            s: 1,
+            q: 50,
+            m: 50,
+            bs: 32,
+        };
+        let r = simulate(&cfg, &tesla_k20m(), &cpu_host());
+        let e = energy_report(&r, &tesla_k20m(), &cpu_host());
+        assert!(e.energy_ratio > 10.0, "ratio {}", e.energy_ratio);
+    }
+}

@@ -1,0 +1,32 @@
+//! Calibrated GPU performance + energy model (the hardware substitute).
+//!
+//! The paper's speedup tables were measured on an NVIDIA Tesla K20m and a
+//! Quadro K2000 (DESIGN.md §3). Neither is available here, so we build the
+//! analytic model those numbers are a function of:
+//!
+//! * [`counts`] — the paper's §5 / Table 2 per-thread memory-op and FLOP
+//!   formulas for every architecture, with the Opt variant's ≈TW² read
+//!   reduction.
+//! * [`device`] — published device specs (cores, clock, DRAM bandwidth,
+//!   shared memory, PCIe) for both GPUs plus the paper's host CPU.
+//! * [`model`] — a roofline execution model: kernel time =
+//!   max(FLOPs/peak, bytes/bandwidth) + launch overhead, plus host↔device
+//!   transfers and the host-side QR β solve (the paper solves β with
+//!   NumPy on the host — Fig 6 shows H+β dominating, which this model
+//!   reproduces).
+//! * [`energy`] — §7.5's energy accounting (30 W CPU vs 300 W GPU).
+//!
+//! Absolute times are calibrated by two scalar efficiency constants
+//! (documented in `device.rs`); the *structure* — who wins, how speedup
+//! scales with n, M, Q, BS, and where Basic≈Opt — follows from the
+//! operation counts alone.
+
+pub mod counts;
+pub mod device;
+pub mod energy;
+pub mod model;
+
+pub use counts::{flops, read_ops, write_ops, OpCounts};
+pub use device::{cpu_host, quadro_k2000, tesla_k20m, DeviceSpec, HostSpec};
+pub use energy::EnergyReport;
+pub use model::{simulate, SimConfig, SimResult, Variant};

@@ -1,0 +1,273 @@
+//! The roofline execution model that regenerates the paper's speedups.
+//!
+//! One training run decomposes exactly as the paper's Fig 6:
+//!
+//! ```text
+//!   t_total = t_init + t_h2d + t_H + t_d2h + t_beta
+//! ```
+//!
+//! * `t_H`   — the H kernel: max(FLOPs / peak, bytes / DRAM-bandwidth)
+//!             per launch + launch overhead; Basic vs Opt differ in the
+//!             bytes term by ≈TW² (Table 2 / counts.rs).
+//! * `t_h2d` — X, W, α, b transfers; `t_d2h` — H back to the host (the
+//!             paper's pipeline solves β on the host with NumPy, §4.2).
+//! * `t_beta`— Householder QR of the n×M H on the host: ≈ 2nM² FLOPs.
+//! * sequential S-R-ELM: the same FLOPs through the host's scalar loop
+//!             plus the identical β solve.
+//!
+//! The occupancy term caps effective GPU throughput when the grid is too
+//! small to fill the device — this is what makes small datasets show
+//! small speedups (paper: 24× on Japan population vs 522× on Temperature).
+
+use crate::elm::Arch;
+
+use super::counts::{flops, op_counts};
+use super::device::{DeviceSpec, HostSpec};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Basic,
+    Opt,
+}
+
+/// One simulated configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub arch: Arch,
+    pub variant: Variant,
+    /// samples
+    pub n: usize,
+    pub s: usize,
+    pub q: usize,
+    pub m: usize,
+    /// thread-block edge (BS = TW): 16 or 32
+    pub bs: usize,
+}
+
+/// Simulated timings (seconds) — the Fig 6 decomposition.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    pub init_s: f64,
+    pub h2d_s: f64,
+    pub kernel_s: f64,
+    pub d2h_s: f64,
+    pub beta_s: f64,
+    pub gpu_total_s: f64,
+    /// sequential S-R-ELM on the host
+    pub cpu_total_s: f64,
+    pub speedup: f64,
+    /// §7.5 energy
+    pub gpu_joules: f64,
+    pub cpu_joules: f64,
+}
+
+/// Fraction of peak the kernel can use given the launch geometry: a grid
+/// smaller than the device's thread capacity leaves SMs idle.
+fn occupancy(cfg: &SimConfig, dev: &DeviceSpec) -> f64 {
+    let total_threads = (cfg.n * cfg.m) as f64;
+    // each SM can keep ~2048 threads in flight on Kepler
+    let device_threads = (dev.sm_count * 2048) as f64;
+    (total_threads / device_threads).min(1.0).max(1.0 / device_threads)
+}
+
+/// ALU efficiency of the kernel's instruction mix (transcendentals +
+/// address arithmetic keep real kernels well under peak FMA throughput).
+const KERNEL_EFF: f64 = 0.35;
+
+/// Per-run session overhead: CUDA context + device allocations (the
+/// paper's Numba pipeline pays this on every training run). Calibrated
+/// against the paper's small-dataset speedups (≈24× on Japan population:
+/// fixed costs, not the kernel, bound the speedup there).
+const SESSION_OVERHEAD_S: f64 = 0.03;
+
+pub fn simulate(cfg: &SimConfig, dev: &DeviceSpec, host: &HostSpec) -> SimResult {
+    let threads = (cfg.n * cfg.m) as f64;
+    let c = op_counts(cfg.arch, cfg.variant, cfg.s, cfg.q, cfg.m, cfg.bs);
+
+    // --- GPU side -------------------------------------------------------
+    let total_flops = c.flops * threads;
+    let total_bytes = (c.reads + c.writes) * 4.0 * threads;
+    let occ = occupancy(cfg, dev);
+    let compute_s = total_flops / (dev.peak_flops() * KERNEL_EFF * occ);
+    let memory_s = total_bytes / (dev.mem_bw_gbs * 1e9);
+    let kernel_s = compute_s.max(memory_s) + dev.launch_overhead_s;
+
+    // transfers (Fig 6: "transfer to" carries X, W, α, b; "transfer from"
+    // carries H for the host-side β solve, then β back)
+    let x_bytes = (cfg.n * cfg.s * cfg.q) as f64 * 4.0;
+    let param_bytes = param_count(cfg.arch, cfg.s, cfg.q, cfg.m) * 4.0;
+    let h_bytes = (cfg.n * cfg.m) as f64 * 4.0;
+    let h2d_s = (x_bytes + param_bytes) / (dev.pcie_gbs * 1e9) + 20e-6;
+    let d2h_s = (h_bytes + cfg.m as f64 * 4.0) / (dev.pcie_gbs * 1e9) + 20e-6;
+
+    // host-side β solve: Householder QR ≈ 2nM² + back-substitution
+    let beta_flops = 2.0 * cfg.n as f64 * (cfg.m * cfg.m) as f64;
+    let beta_s = beta_flops / host.dense_flops + 1e-4;
+
+    // init: RNG for the parameter buffers (measured <0.01% in the paper)
+    let init_s = param_count(cfg.arch, cfg.s, cfg.q, cfg.m) / 1e9 + 1e-6;
+
+    let gpu_total_s = SESSION_OVERHEAD_S + init_s + h2d_s + kernel_s + d2h_s + beta_s;
+
+    // --- sequential side (two-term host model — see device.rs) -----------
+    let seq_flops = flops(cfg.arch, cfg.s as f64, cfg.q as f64, cfg.m as f64) * threads;
+    let cpu_total_s =
+        threads * host.per_thread_overhead + seq_flops / host.dense_flops + beta_s;
+
+    SimResult {
+        init_s,
+        h2d_s,
+        kernel_s,
+        d2h_s,
+        beta_s,
+        gpu_total_s,
+        cpu_total_s,
+        speedup: cpu_total_s / gpu_total_s,
+        gpu_joules: gpu_total_s * dev.power_w,
+        cpu_joules: cpu_total_s * host.power_w,
+    }
+}
+
+/// Total random-parameter count per architecture.
+fn param_count(arch: Arch, s: usize, q: usize, m: usize) -> f64 {
+    let specs = crate::elm::param_specs(arch, s, q, m);
+    specs
+        .iter()
+        .map(|(_n, shape)| shape.iter().product::<usize>() as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::device::{cpu_host, quadro_k2000, tesla_k20m};
+    use super::*;
+    use crate::data::spec::registry;
+
+    fn sim(name: &str, arch: Arch, variant: Variant, m: usize, bs: usize) -> SimResult {
+        let d = registry().into_iter().find(|d| d.name == name).unwrap();
+        let cfg = SimConfig {
+            arch,
+            variant,
+            n: d.n_instances - d.q_paper.min(64),
+            s: 1,
+            q: d.q_paper.min(64),
+            m,
+            bs,
+        };
+        simulate(&cfg, &tesla_k20m(), &cpu_host())
+    }
+
+    #[test]
+    fn speedup_grows_with_dataset_size() {
+        // §7.1: 25× small → ~400× large for Elman Basic
+        let small = sim("japan_population", Arch::Elman, Variant::Basic, 50, 32);
+        let large = sim("temperature", Arch::Elman, Variant::Basic, 50, 32);
+        assert!(small.speedup > 3.0 && small.speedup < 150.0, "{}", small.speedup);
+        assert!(large.speedup > 100.0, "{}", large.speedup);
+        assert!(large.speedup > 3.0 * small.speedup);
+    }
+
+    #[test]
+    fn paper_anchor_elman_temperature() {
+        // Table 5: Elman/Tesla/Temperature Opt(BS=32) speedup = 522.
+        // The model must land within ~2× of the paper's number.
+        let r = sim("temperature", Arch::Elman, Variant::Opt, 50, 32);
+        assert!(
+            r.speedup > 522.0 / 2.0 && r.speedup < 522.0 * 2.0,
+            "Opt speedup {} vs paper 522",
+            r.speedup
+        );
+    }
+
+    #[test]
+    fn opt_beats_basic_when_q_large() {
+        // §7.1: Opt ≥ Basic when Q > BS (hourly weather Q = 50 > 32)
+        let b = sim("hourly_weather", Arch::Elman, Variant::Basic, 50, 32);
+        let o = sim("hourly_weather", Arch::Elman, Variant::Opt, 50, 32);
+        assert!(o.gpu_total_s <= b.gpu_total_s);
+        assert!(o.speedup >= b.speedup);
+    }
+
+    #[test]
+    fn basic_close_to_opt_when_q_small() {
+        // §7.1: with Q = 10 < BS, num_tiles = 1 and the two variants are
+        // within a few percent (the paper observes near-identical bars)
+        let b = sim("aemo", Arch::Elman, Variant::Basic, 50, 32);
+        let o = sim("aemo", Arch::Elman, Variant::Opt, 50, 32);
+        let ratio = b.gpu_total_s / o.gpu_total_s;
+        assert!(ratio < 1.6, "basic/opt = {ratio} should be close at Q=10");
+    }
+
+    #[test]
+    fn tesla_beats_quadro_everywhere() {
+        // Table 5: Tesla consistently above Quadro
+        for name in ["japan_population", "aemo", "temperature"] {
+            let d = registry().into_iter().find(|d| d.name == name).unwrap();
+            let cfg = SimConfig {
+                arch: Arch::Lstm,
+                variant: Variant::Opt,
+                n: d.n_instances,
+                s: 1,
+                q: d.q,
+                m: 50,
+                bs: 32,
+            };
+            let t = simulate(&cfg, &tesla_k20m(), &cpu_host());
+            let q = simulate(&cfg, &quadro_k2000(), &cpu_host());
+            assert!(t.speedup >= q.speedup, "{name}: tesla {} quadro {}", t.speedup, q.speedup);
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_m() {
+        // Fig 4's qualitative claim: speedup grows as M grows (the paper
+        // reports ~20× growth from M=5 to M=100 on GRU/energy). The
+        // host-side β solve is O(nM²), so the curve flattens at large M;
+        // we assert clear growth from the low end and no collapse.
+        // Growth holds through the kernel-bound regime (M = 5 → 20); at
+        // M ≥ 50 the O(nM²) host β solve flattens/caps the curve in this
+        // model (deviation from Fig 4's monotone growth is analyzed in
+        // EXPERIMENTS.md — the paper's sequential python costs also grow
+        // with M, which the two-constant host model does not capture).
+        let s5 = sim("energy_consumption", Arch::Gru, Variant::Opt, 5, 32).speedup;
+        let s10 = sim("energy_consumption", Arch::Gru, Variant::Opt, 10, 32).speedup;
+        let s20 = sim("energy_consumption", Arch::Gru, Variant::Opt, 20, 32).speedup;
+        let s100 = sim("energy_consumption", Arch::Gru, Variant::Opt, 100, 32).speedup;
+        assert!(s10 > s5, "m=10 {s10} vs m=5 {s5}");
+        assert!(s20 > s10, "m=20 {s20} vs m=10 {s10}");
+        assert!(s100 > 0.5 * s5, "m=100 {s100} collapsed vs m=5 {s5}");
+    }
+
+    #[test]
+    fn energy_anchor_section_7_5() {
+        // §7.5: Elman M=50 — Opt-PR-ELM 3.71 s / 1113 J vs S-R-ELM ≈32 min
+        // on the CPU (57.6 kJ at 30 W). Anchor within a factor of ~2.5.
+        let r = sim("temperature", Arch::Elman, Variant::Opt, 50, 32);
+        assert!(
+            r.gpu_total_s > 3.71 / 2.5 && r.gpu_total_s < 3.71 * 2.5,
+            "gpu {} s vs paper 3.71 s",
+            r.gpu_total_s
+        );
+        assert!(
+            r.cpu_total_s > 1920.0 / 2.5 && r.cpu_total_s < 1920.0 * 2.5,
+            "cpu {} s vs paper ~1920 s",
+            r.cpu_total_s
+        );
+        assert!(r.cpu_joules > 10.0 * r.gpu_joules, "energy ratio (paper: 50×)");
+    }
+
+    #[test]
+    fn decomposition_sums_to_total() {
+        let r = sim("aemo", Arch::Lstm, Variant::Opt, 10, 32);
+        let sum = r.init_s + r.h2d_s + r.kernel_s + r.d2h_s + r.beta_s;
+        assert!((sum + super::SESSION_OVERHEAD_S - r.gpu_total_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig6_h_and_beta_dominate() {
+        // Fig 6: compute-H + compute-β take the major share; init < 0.01%
+        let r = sim("japan_population", Arch::Lstm, Variant::Opt, 10, 32);
+        assert!(r.init_s < 0.01 * r.gpu_total_s);
+        assert!(r.h2d_s > r.d2h_s * 0.2, "h2d carries more data than d2h");
+    }
+}

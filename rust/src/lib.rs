@@ -1,0 +1,33 @@
+//! # opt-pr-elm
+//!
+//! Production reproduction of *"An Optimized and Energy-Efficient Parallel
+//! Implementation of Non-Iteratively Trained Recurrent Neural Networks"*
+//! (El Zini, Rizk, Awad, 2019).
+//!
+//! The crate is the L3 layer of a three-layer stack (see `DESIGN.md`):
+//!
+//! * [`runtime`] loads AOT-compiled HLO artifacts (lowered from JAX/Pallas by
+//!   `python/compile/aot.py`) onto a PJRT CPU client and executes them —
+//!   python never runs on the training path.
+//! * [`coordinator`] streams datasets through fixed-shape row blocks,
+//!   accumulates the ELM normal equations (or TSQR factors) and solves for
+//!   the output weights β.
+//! * [`elm`] is the sequential S-R-ELM baseline (the paper's comparator),
+//!   [`bptt`] the parallel-BPTT comparator driver, [`gpusim`] the calibrated
+//!   GPU performance/energy model that regenerates the paper's speedup
+//!   tables, [`data`] the ten Table-3 benchmark generators, and [`linalg`]
+//!   the dense QR/TSQR/Cholesky substrate.
+
+pub mod bptt;
+pub mod coordinator;
+pub mod data;
+pub mod elm;
+pub mod gpusim;
+pub mod linalg;
+pub mod report;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

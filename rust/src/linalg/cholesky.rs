@@ -1,0 +1,94 @@
+//! Cholesky factorization + SPD solve for the ridge-regularized normal
+//! equations `(HᵀH + λI) β = HᵀY` — the coordinator's streaming path and
+//! the rank-deficiency fallback of the QR solve.
+
+use anyhow::{bail, Result};
+
+use super::matrix::Matrix;
+use super::solve::{solve_lower_triangular, solve_upper_triangular};
+
+/// Lower-triangular L with A = L Lᵀ. Fails on non-SPD input.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    if a.rows != a.cols {
+        bail!("cholesky requires a square matrix, got {}x{}", a.rows, a.cols);
+    }
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (s = {s:.3e})");
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A x = b for SPD A via Cholesky.
+pub fn cholesky_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(a)?;
+    let y = solve_lower_triangular(&l, b)?;
+    let lt = l.transpose();
+    solve_upper_triangular(&lt, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::random(n + 3, n, &mut rng);
+        let mut g = a.gram();
+        for i in 0..n {
+            g[(i, i)] += 0.5; // safely SPD
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let llt = l.matmul(&l.transpose());
+        assert!(llt.max_abs_diff(&a) < 1e-10);
+        for i in 0..8 {
+            for j in i + 1..8 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        let a = spd(12, 2);
+        let x_true: Vec<f64> = (0..12).map(|i| (i as f64 * 0.3).cos()).collect();
+        let b = a.matvec(&x_true);
+        let x = cholesky_solve(&a, &b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Matrix::identity(3);
+        a[(1, 1)] = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(cholesky(&Matrix::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Row-major dense f64 matrix. Deliberately small: exactly the operations
+//! the ELM solve and the tests need, no general-purpose BLAS ambitions.
+//! (f64 so the rust-side solves do not add float error on top of the f32
+//! artifacts; H blocks are widened on accumulation.)
+
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Matrix { rows: r, cols: c, data: rows.concat() }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// self * other  (naive ijk with row-major accumulation: fine at M<=128)
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for j in 0..other.cols {
+                    out_row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// self * v
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|i| dot(self.row(i), v)).collect()
+    }
+
+    /// selfᵀ * v
+    pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            let vi = v[i];
+            for j in 0..self.cols {
+                out[j] += r[j] * vi;
+            }
+        }
+        out
+    }
+
+    /// selfᵀ * self (Gram), exploiting symmetry.
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..n {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in a..n {
+                    g[(a, b)] += ra * r[b];
+                }
+            }
+        }
+        for a in 0..n {
+            for b in 0..a {
+                g[(a, b)] = g[(b, a)];
+            }
+        }
+        g
+    }
+
+    /// Vertical stack.
+    pub fn vstack(top: &Matrix, bottom: &Matrix) -> Matrix {
+        assert_eq!(top.cols, bottom.cols);
+        let mut data = Vec::with_capacity((top.rows + bottom.rows) * top.cols);
+        data.extend_from_slice(&top.data);
+        data.extend_from_slice(&bottom.data);
+        Matrix { rows: top.rows + bottom.rows, cols: top.cols, data }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(4, 4, &mut rng);
+        let i = Matrix::identity(4);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random(3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gram_equals_explicit() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(10, 4, &mut rng);
+        let g = a.gram();
+        let explicit = a.transpose().matmul(&a);
+        assert!(g.max_abs_diff(&explicit) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::random(5, 3, &mut rng);
+        let v = vec![1.0, -2.0, 0.5];
+        let mv = a.matvec(&v);
+        let vm = Matrix::from_vec(3, 1, v.clone());
+        let full = a.matmul(&vm);
+        for i in 0..5 {
+            assert!((mv[i] - full[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn t_matvec_is_transpose_matvec() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::random(6, 4, &mut rng);
+        let v: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        let got = a.t_matvec(&v);
+        let want = a.transpose().matvec(&v);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn vstack_shapes() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 3);
+        let s = Matrix::vstack(&a, &b);
+        assert_eq!((s.rows, s.cols), (6, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,24 @@
+//! Dense linear algebra substrate for the ELM solve (β = H†Y, §4.2).
+//!
+//! The paper replaces the explicit Moore-Penrose pseudo-inverse with a QR
+//! factorization + back-substitution. We provide:
+//!
+//! * [`qr`] — Householder QR (the reference factorization),
+//! * [`tsqr`] — communication-avoiding tall-skinny QR over row blocks (the
+//!   "parallel QR" of the abstract; the coordinator's streaming accumulator),
+//! * [`cholesky`] — SPD factorization for the ridge-regularized normal
+//!   equations `(HᵀH + λI) β = HᵀY` (rank-deficiency fallback),
+//! * [`solve`] — triangular solves and the user-facing least-squares entry
+//!   points.
+
+pub mod cholesky;
+pub mod matrix;
+pub mod qr;
+pub mod solve;
+pub mod tsqr;
+
+pub use cholesky::cholesky_solve;
+pub use matrix::Matrix;
+pub use qr::{householder_qr, QrFactors};
+pub use solve::{lstsq_qr, lstsq_ridge, solve_lower_triangular, solve_upper_triangular};
+pub use tsqr::TsqrAccumulator;

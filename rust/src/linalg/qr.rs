@@ -1,0 +1,211 @@
+//! Householder QR (the paper's §4.2 factorization, reference version).
+//!
+//! `householder_qr` produces the compact factors: R (upper triangular,
+//! n×n for an m×n input with m >= n) and the Householder vectors, with
+//! `apply_qt` to form Qᵀb without materializing Q — exactly what the ELM
+//! solve needs (`z = QᵀY`, then back-substitute `Rβ = z`).
+
+use anyhow::{bail, Result};
+
+use super::matrix::Matrix;
+
+/// Compact QR factors of an m×n matrix (m >= n).
+pub struct QrFactors {
+    /// Householder vectors stored below the diagonal of the working copy;
+    /// column j's vector is v_j with v_j[j] = 1 implied.
+    work: Matrix,
+    /// beta_j = 2 / (v_jᵀ v_j)
+    betas: Vec<f64>,
+    pub m: usize,
+    pub n: usize,
+}
+
+/// Householder QR with column-norm stability (no pivoting: ELM design
+/// matrices are dense and generically full-rank; the ridge path covers the
+/// degenerate case).
+pub fn householder_qr(a: &Matrix) -> Result<QrFactors> {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        bail!("householder_qr requires rows >= cols, got {m}x{n}");
+    }
+    let mut w = a.clone();
+    let mut betas = vec![0.0; n];
+
+    for j in 0..n {
+        // norm of the j-th column below (and including) the diagonal
+        let mut norm2 = 0.0;
+        for i in j..m {
+            norm2 += w[(i, j)] * w[(i, j)];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            continue;
+        }
+        let alpha = if w[(j, j)] >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1 ; store v (normalized so v[j] = 1)
+        let v0 = w[(j, j)] - alpha;
+        // v0 can't be 0 since alpha has opposite sign of x0 (or x0 == 0)
+        let mut vtv = v0 * v0;
+        for i in j + 1..m {
+            vtv += w[(i, j)] * w[(i, j)];
+        }
+        let beta = 2.0 * v0 * v0 / vtv; // after normalization by v0
+        // normalize: v[i] /= v0
+        for i in j + 1..m {
+            w[(i, j)] /= v0;
+        }
+        // apply H = I - beta v vᵀ to the trailing submatrix
+        for col in j + 1..n {
+            // s = vᵀ w[:, col]
+            let mut s = w[(j, col)];
+            for i in j + 1..m {
+                s += w[(i, j)] * w[(i, col)];
+            }
+            s *= beta;
+            w[(j, col)] -= s;
+            for i in j + 1..m {
+                let vij = w[(i, j)];
+                w[(i, col)] -= s * vij;
+            }
+        }
+        w[(j, j)] = alpha;
+        betas[j] = beta;
+    }
+    Ok(QrFactors { work: w, betas, m, n })
+}
+
+impl QrFactors {
+    /// The n×n upper-triangular R.
+    pub fn r(&self) -> Matrix {
+        let mut r = Matrix::zeros(self.n, self.n);
+        for i in 0..self.n {
+            for j in i..self.n {
+                r[(i, j)] = self.work[(i, j)];
+            }
+        }
+        r
+    }
+
+    /// Apply Qᵀ to a length-m vector in place; the first n entries are then
+    /// the projection used by the least-squares solve.
+    pub fn apply_qt(&self, b: &mut [f64]) {
+        assert_eq!(b.len(), self.m);
+        for j in 0..self.n {
+            let beta = self.betas[j];
+            if beta == 0.0 {
+                continue;
+            }
+            // s = vᵀ b (v[j] = 1 implied)
+            let mut s = b[j];
+            for i in j + 1..self.m {
+                s += self.work[(i, j)] * b[i];
+            }
+            s *= beta;
+            b[j] -= s;
+            for i in j + 1..self.m {
+                b[i] -= s * self.work[(i, j)];
+            }
+        }
+    }
+
+    /// Reconstruct the full m×n Q (test/diagnostic use only).
+    pub fn q(&self) -> Matrix {
+        let mut q = Matrix::zeros(self.m, self.n);
+        for (i, col) in (0..self.n).enumerate() {
+            // apply Q to e_i: Q = H_0 H_1 ... H_{n-1}; Q e_i = H_0 (... (H_{n-1} e_i))
+            let mut e = vec![0.0; self.m];
+            e[col] = 1.0;
+            for j in (0..self.n).rev() {
+                let beta = self.betas[j];
+                if beta == 0.0 {
+                    continue;
+                }
+                let mut s = e[j];
+                for k in j + 1..self.m {
+                    s += self.work[(k, j)] * e[k];
+                }
+                s *= beta;
+                e[j] -= s;
+                for k in j + 1..self.m {
+                    e[k] -= s * self.work[(k, j)];
+                }
+            }
+            for k in 0..self.m {
+                q[(k, i)] = e[k];
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_qr(m: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::random(m, n, &mut rng);
+        let f = householder_qr(&a).unwrap();
+        let q = f.q();
+        let r = f.r();
+        // A = Q R
+        let qr = q.matmul(&r);
+        assert!(qr.max_abs_diff(&a) < 1e-10, "A != QR for {m}x{n}");
+        // QᵀQ = I
+        let qtq = q.transpose().matmul(&q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(n)) < 1e-10);
+        // R upper triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        check_qr(8, 8, 1);
+        check_qr(20, 5, 2);
+        check_qr(100, 30, 3);
+        check_qr(5, 1, 4);
+    }
+
+    #[test]
+    fn qt_application_matches_explicit() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::random(12, 4, &mut rng);
+        let f = householder_qr(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let mut qtb = b.clone();
+        f.apply_qt(&mut qtb);
+        let explicit = f.q().t_matvec(&b);
+        for j in 0..4 {
+            assert!((qtb[j] - explicit[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn wide_matrix_rejected() {
+        let a = Matrix::zeros(3, 5);
+        assert!(householder_qr(&a).is_err());
+    }
+
+    #[test]
+    fn rank_deficient_does_not_panic() {
+        // duplicate columns: QR still completes (R has a zero diagonal)
+        let mut rng = Rng::new(10);
+        let a = Matrix::random(10, 2, &mut rng);
+        let mut dup = Matrix::zeros(10, 4);
+        for i in 0..10 {
+            dup[(i, 0)] = a[(i, 0)];
+            dup[(i, 1)] = a[(i, 1)];
+            dup[(i, 2)] = a[(i, 0)];
+            dup[(i, 3)] = a[(i, 1)];
+        }
+        let f = householder_qr(&dup).unwrap();
+        let qr = f.q().matmul(&f.r());
+        assert!(qr.max_abs_diff(&dup) < 1e-10);
+    }
+}

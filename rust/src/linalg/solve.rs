@@ -1,0 +1,197 @@
+//! Triangular solves and the user-facing least-squares entry points.
+
+use anyhow::{bail, Result};
+
+use super::cholesky::cholesky_solve;
+use super::matrix::Matrix;
+use super::qr::householder_qr;
+
+/// Solve L y = b for lower-triangular L (forward substitution).
+pub fn solve_lower_triangular(l: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = l.rows;
+    if l.cols != n || b.len() != n {
+        bail!("triangular solve shape mismatch");
+    }
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        let d = l[(i, i)];
+        if d.abs() < 1e-300 {
+            bail!("singular triangular system at row {i}");
+        }
+        y[i] = s / d;
+    }
+    Ok(y)
+}
+
+/// Solve R x = b for upper-triangular R (back substitution — Alg. §4.2).
+pub fn solve_upper_triangular(r: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = r.rows;
+    if r.cols != n || b.len() != n {
+        bail!("triangular solve shape mismatch");
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= r[(i, k)] * x[k];
+        }
+        let d = r[(i, i)];
+        if d.abs() < 1e-300 {
+            bail!("singular triangular system at row {i}");
+        }
+        x[i] = s / d;
+    }
+    Ok(x)
+}
+
+/// Least squares min ‖Ax − b‖ via Householder QR: the paper's §4.2 method
+/// (QR then back-substitution, never forming the pseudo-inverse).
+pub fn lstsq_qr(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    if b.len() != a.rows {
+        bail!("lstsq shape mismatch: A is {}x{}, b has {}", a.rows, a.cols, b.len());
+    }
+    let f = householder_qr(a)?;
+    let mut z = b.to_vec();
+    f.apply_qt(&mut z);
+    let r = f.r();
+    // Rank check on R's diagonal, relative to the largest pivot: a
+    // near-zero pivot means H is (numerically) rank-deficient — random
+    // features can collide — and back-substitution would amplify noise.
+    let max_diag = (0..r.rows).map(|i| r[(i, i)].abs()).fold(0.0, f64::max);
+    let deficient =
+        max_diag == 0.0 || (0..r.rows).any(|i| r[(i, i)].abs() < 1e-10 * max_diag);
+    if deficient {
+        return lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8);
+    }
+    match solve_upper_triangular(&r, &z[..a.cols]) {
+        Ok(x) => Ok(x),
+        Err(_) => lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8),
+    }
+}
+
+/// Ridge least squares from the already-accumulated normal equations:
+/// solves (G + λI) x = c. This is the coordinator's streaming path — G and
+/// c come from the `elm_gram` artifacts block by block.
+pub fn lstsq_ridge_from_parts(g: &Matrix, c: &[f64], lambda: f64) -> Result<Vec<f64>> {
+    let n = g.rows;
+    if g.cols != n || c.len() != n {
+        bail!("ridge shape mismatch");
+    }
+    let mut greg = g.clone();
+    // scale-invariant regularization: λ relative to mean diagonal
+    let mean_diag = (0..n).map(|i| g[(i, i)]).sum::<f64>() / n as f64;
+    let reg = lambda * mean_diag.max(1e-12);
+    for i in 0..n {
+        greg[(i, i)] += reg;
+    }
+    cholesky_solve(&greg, c)
+}
+
+/// Ridge least squares from (A, b) directly.
+pub fn lstsq_ridge(a: &Matrix, b: &[f64], lambda: f64) -> Result<Vec<f64>> {
+    lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn triangular_solves_invert() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(6, 6, &mut rng);
+        let mut l = Matrix::zeros(6, 6);
+        let mut r = Matrix::zeros(6, 6);
+        for i in 0..6 {
+            for j in 0..6 {
+                if i >= j {
+                    l[(i, j)] = a[(i, j)] + if i == j { 3.0 } else { 0.0 };
+                }
+                if j >= i {
+                    r[(i, j)] = a[(i, j)] + if i == j { 3.0 } else { 0.0 };
+                }
+            }
+        }
+        let x: Vec<f64> = (0..6).map(|i| i as f64 - 2.0).collect();
+        let bl = l.matvec(&x);
+        let br = r.matvec(&x);
+        let xl = solve_lower_triangular(&l, &bl).unwrap();
+        let xr = solve_upper_triangular(&r, &br).unwrap();
+        for i in 0..6 {
+            assert!((xl[i] - x[i]).abs() < 1e-10);
+            assert!((xr[i] - x[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lstsq_exact_on_square() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random(5, 5, &mut rng);
+        let x_true = vec![1.0, -1.0, 2.0, 0.5, -0.25];
+        let b = a.matvec(&x_true);
+        let x = lstsq_qr(&a, &b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lstsq_minimizes_residual() {
+        // overdetermined: residual must be orthogonal to the column space
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(40, 6, &mut rng);
+        let b: Vec<f64> = (0..40).map(|i| (i as f64 * 0.17).sin()).collect();
+        let x = lstsq_qr(&a, &b).unwrap();
+        let ax = a.matvec(&x);
+        let resid: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let at_r = a.t_matvec(&resid);
+        for v in at_r {
+            assert!(v.abs() < 1e-8, "residual not orthogonal: {v}");
+        }
+    }
+
+    #[test]
+    fn ridge_matches_qr_when_well_conditioned() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::random(60, 8, &mut rng);
+        let b: Vec<f64> = (0..60).map(|i| (i as f64 * 0.11).cos()).collect();
+        let xq = lstsq_qr(&a, &b).unwrap();
+        let xr = lstsq_ridge(&a, &b, 1e-12).unwrap();
+        for (q, r) in xq.iter().zip(&xr) {
+            assert!((q - r).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_falls_back() {
+        // exactly duplicated column: QR hits a zero pivot, ridge kicks in
+        let mut rng = Rng::new(5);
+        let base = Matrix::random(30, 3, &mut rng);
+        let mut a = Matrix::zeros(30, 4);
+        for i in 0..30 {
+            for j in 0..3 {
+                a[(i, j)] = base[(i, j)];
+            }
+            a[(i, 3)] = base[(i, 0)]; // dup of column 0
+        }
+        let b: Vec<f64> = (0..30).map(|i| i as f64 * 0.05).collect();
+        let x = lstsq_qr(&a, &b).unwrap();
+        assert!(x.iter().all(|v| v.is_finite()));
+        // the fit must still be as good as the rank-3 solution
+        let x3 = lstsq_qr(&base, &b).unwrap();
+        let r4: f64 = {
+            let ax = a.matvec(&x);
+            b.iter().zip(&ax).map(|(bi, ai)| (bi - ai) * (bi - ai)).sum()
+        };
+        let r3: f64 = {
+            let ax = base.matvec(&x3);
+            b.iter().zip(&ax).map(|(bi, ai)| (bi - ai) * (bi - ai)).sum()
+        };
+        assert!(r4 <= r3 + 1e-6);
+    }
+}

@@ -1,0 +1,245 @@
+//! TSQR — communication-avoiding tall-skinny QR over row blocks.
+//!
+//! This is the "parallel QR factorization" of the paper's abstract, and the
+//! exact-factorization twin of the streaming Gram accumulator: each incoming
+//! H block is reduced to an upper-triangular (R, QᵀY-partial) pair, and
+//! pairs are merged by re-factorizing their vertical stack. The final R and
+//! z = QᵀY give β by back-substitution without ever materializing H.
+//!
+//! Numerically this avoids the condition-number squaring of the normal
+//! equations — the reason the paper uses QR rather than the explicit
+//! pseudo-inverse.
+
+use anyhow::{bail, Result};
+
+use super::matrix::Matrix;
+use super::qr::householder_qr;
+use super::solve::solve_upper_triangular;
+
+/// Streaming TSQR state: R (n×n upper triangular) and z = Qᵀy (length n).
+pub struct TsqrAccumulator {
+    n: usize,
+    /// current reduced factor, None until the first block arrives
+    r: Option<Matrix>,
+    z: Vec<f64>,
+    rows_seen: usize,
+}
+
+impl TsqrAccumulator {
+    pub fn new(n_cols: usize) -> TsqrAccumulator {
+        TsqrAccumulator { n: n_cols, r: None, z: vec![0.0; n_cols], rows_seen: 0 }
+    }
+
+    pub fn rows_seen(&self) -> usize {
+        self.rows_seen
+    }
+
+    /// Fold one (H block, y block) pair into the reduced factors.
+    pub fn push_block(&mut self, h: &Matrix, y: &[f64]) -> Result<()> {
+        if h.cols != self.n {
+            bail!("block has {} cols, accumulator expects {}", h.cols, self.n);
+        }
+        if h.rows != y.len() {
+            bail!("block rows {} != y len {}", h.rows, y.len());
+        }
+        if h.rows == 0 {
+            return Ok(());
+        }
+        // Local QR of the new block (pad if the block is shorter than n).
+        let (hb, yb) = if h.rows < self.n {
+            let mut padded = Matrix::zeros(self.n, self.n);
+            for i in 0..h.rows {
+                padded.row_mut(i).copy_from_slice(h.row(i));
+            }
+            let mut ypad = vec![0.0; self.n];
+            ypad[..y.len()].copy_from_slice(y);
+            (padded, ypad)
+        } else {
+            (h.clone(), y.to_vec())
+        };
+        let f = householder_qr(&hb)?;
+        let mut zb = yb;
+        f.apply_qt(&mut zb);
+        let r_new = f.r();
+        let z_new = zb[..self.n].to_vec();
+
+        match self.r.take() {
+            None => {
+                self.r = Some(r_new);
+                self.z = z_new;
+            }
+            Some(r_old) => {
+                // merge: QR of [R_old; R_new] (2n × n)
+                let stacked = Matrix::vstack(&r_old, &r_new);
+                let f2 = householder_qr(&stacked)?;
+                let mut zz = Vec::with_capacity(2 * self.n);
+                zz.extend_from_slice(&self.z);
+                zz.extend_from_slice(&z_new);
+                f2.apply_qt(&mut zz);
+                self.r = Some(f2.r());
+                self.z = zz[..self.n].to_vec();
+            }
+        }
+        self.rows_seen += h.rows;
+        Ok(())
+    }
+
+    /// Merge another accumulator (tree reduction across workers).
+    pub fn merge(&mut self, other: TsqrAccumulator) -> Result<()> {
+        if other.n != self.n {
+            bail!("accumulator width mismatch");
+        }
+        let Some(r_other) = other.r else { return Ok(()) };
+        match self.r.take() {
+            None => {
+                self.r = Some(r_other);
+                self.z = other.z;
+            }
+            Some(r_old) => {
+                let stacked = Matrix::vstack(&r_old, &r_other);
+                let f = householder_qr(&stacked)?;
+                let mut zz = Vec::with_capacity(2 * self.n);
+                zz.extend_from_slice(&self.z);
+                zz.extend_from_slice(&other.z);
+                f.apply_qt(&mut zz);
+                self.r = Some(f.r());
+                self.z = zz[..self.n].to_vec();
+            }
+        }
+        self.rows_seen += other.rows_seen;
+        Ok(())
+    }
+
+    /// Solve R β = z by back-substitution.
+    pub fn solve(&self) -> Result<Vec<f64>> {
+        let Some(r) = &self.r else { bail!("no blocks accumulated") };
+        if self.rows_seen < self.n {
+            bail!("underdetermined: {} rows < {} cols", self.rows_seen, self.n);
+        }
+        solve_upper_triangular(r, &self.z)
+    }
+
+    /// |R| diagnostic: the Gram matrix equals RᵀR (test hook).
+    pub fn r_factor(&self) -> Option<&Matrix> {
+        self.r.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve::lstsq_qr;
+    use crate::util::rng::Rng;
+
+    fn random_problem(rows: usize, cols: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::random(rows, cols, &mut rng);
+        let b: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        (a, b)
+    }
+
+    fn blocks_of(a: &Matrix, b: &[f64], block: usize) -> Vec<(Matrix, Vec<f64>)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < a.rows {
+            let end = (i + block).min(a.rows);
+            let rows: Vec<Vec<f64>> = (i..end).map(|r| a.row(r).to_vec()).collect();
+            out.push((Matrix::from_rows(&rows), b[i..end].to_vec()));
+            i = end;
+        }
+        out
+    }
+
+    #[test]
+    fn tsqr_matches_direct_qr() {
+        let (a, b) = random_problem(200, 7, 1);
+        let direct = lstsq_qr(&a, &b).unwrap();
+        for block in [7usize, 16, 33, 200] {
+            let mut acc = TsqrAccumulator::new(7);
+            for (hb, yb) in blocks_of(&a, &b, block) {
+                acc.push_block(&hb, &yb).unwrap();
+            }
+            let beta = acc.solve().unwrap();
+            for (g, w) in beta.iter().zip(&direct) {
+                assert!((g - w).abs() < 1e-8, "block={block}");
+            }
+        }
+    }
+
+    #[test]
+    fn tsqr_handles_short_blocks() {
+        // blocks narrower than n (fewer rows than columns) must still work
+        let (a, b) = random_problem(50, 10, 2);
+        let mut acc = TsqrAccumulator::new(10);
+        for (hb, yb) in blocks_of(&a, &b, 3) {
+            acc.push_block(&hb, &yb).unwrap();
+        }
+        let direct = lstsq_qr(&a, &b).unwrap();
+        let beta = acc.solve().unwrap();
+        for (g, w) in beta.iter().zip(&direct) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let (a, b) = random_problem(120, 5, 3);
+        let blocks = blocks_of(&a, &b, 30);
+        // sequential
+        let mut seq = TsqrAccumulator::new(5);
+        for (hb, yb) in &blocks {
+            seq.push_block(hb, yb).unwrap();
+        }
+        // two workers + merge
+        let mut w1 = TsqrAccumulator::new(5);
+        let mut w2 = TsqrAccumulator::new(5);
+        for (i, (hb, yb)) in blocks.iter().enumerate() {
+            if i % 2 == 0 {
+                w1.push_block(hb, yb).unwrap();
+            } else {
+                w2.push_block(hb, yb).unwrap();
+            }
+        }
+        w1.merge(w2).unwrap();
+        let b1 = seq.solve().unwrap();
+        let b2 = w1.solve().unwrap();
+        for (g, w) in b1.iter().zip(&b2) {
+            assert!((g - w).abs() < 1e-9);
+        }
+        assert_eq!(w1.rows_seen(), 120);
+    }
+
+    #[test]
+    fn gram_identity() {
+        // RᵀR must equal HᵀH (up to float error)
+        let (a, b) = random_problem(80, 6, 4);
+        let mut acc = TsqrAccumulator::new(6);
+        for (hb, yb) in blocks_of(&a, &b, 16) {
+            acc.push_block(&hb, &yb).unwrap();
+        }
+        let r = acc.r_factor().unwrap();
+        let rtr = r.transpose().matmul(r);
+        assert!(rtr.max_abs_diff(&a.gram()) < 1e-9);
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let (a, b) = random_problem(4, 6, 5);
+        let mut acc = TsqrAccumulator::new(6);
+        acc.push_block(&a, &b).unwrap();
+        assert!(acc.solve().is_err());
+    }
+
+    #[test]
+    fn empty_accumulator_rejected() {
+        let acc = TsqrAccumulator::new(3);
+        assert!(acc.solve().is_err());
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let mut acc = TsqrAccumulator::new(4);
+        let (a, b) = random_problem(8, 6, 6);
+        assert!(acc.push_block(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! `repro` — the opt-pr-elm command line.
+//!
+//! ```text
+//! repro report <table2|table3|table4|table5|table6|fig3|fig4|fig5|fig6|energy|all>
+//!        [--scale 0.02] [--workers 2] [--seed 7] [--reps 3] [--out results]
+//! repro train --dataset aemo --arch lstm [--m 50] [--scale 0.05] [--seq]
+//! repro artifacts            # list the AOT executables in the manifest
+//! repro datasets             # list the Table-3 benchmark registry
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use opt_pr_elm::coordinator::PrElmTrainer;
+use opt_pr_elm::data::spec::registry;
+use opt_pr_elm::elm::{Arch, SrElmModel, TrainOptions};
+use opt_pr_elm::report::{run_report, write_report, ReportCtx, ALL_REPORTS};
+use opt_pr_elm::runtime::{default_artifacts_dir, Manifest};
+use opt_pr_elm::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "report" => cmd_report(&mut args),
+        "train" => cmd_train(&mut args),
+        "artifacts" => cmd_artifacts(&mut args),
+        "datasets" => cmd_datasets(&mut args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+repro — Opt-PR-ELM reproduction (see DESIGN.md)
+  repro report <id|all> [--scale F] [--workers N] [--seed S] [--reps R] [--out DIR]
+      ids: table2 table3 table4 table5 table6 fig3 fig4 fig5 fig6 energy
+  repro train --dataset NAME --arch ARCH [--m M] [--scale F] [--seq] [--workers N]
+  repro artifacts
+  repro datasets
+";
+
+fn ctx_from(args: &mut Args) -> Result<ReportCtx> {
+    let mut ctx = ReportCtx::new(default_artifacts_dir());
+    if let Some(dir) = args.opt("artifacts") {
+        ctx.artifacts = PathBuf::from(dir);
+    }
+    ctx.scale = args.opt_or("scale", "0.02").parse()?;
+    ctx.workers = args.opt_usize("workers", 8)?;
+    ctx.seed = args.opt_u64("seed", 7)?;
+    ctx.reps = args.opt_usize("reps", 3)?;
+    Ok(ctx)
+}
+
+fn cmd_report(args: &mut Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let out = PathBuf::from(args.opt_or("out", "results"));
+    let ctx = ctx_from(args)?;
+    args.finish()?;
+    let ids: Vec<&str> = if id == "all" {
+        let mut v = ALL_REPORTS.to_vec();
+        v.push("energy");
+        v
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        eprintln!("== running {id} (scale {}, workers {}) ==", ctx.scale, ctx.workers);
+        let t0 = std::time::Instant::now();
+        let tables = run_report(id, &ctx)?;
+        for t in &tables {
+            println!("{}", t.to_markdown());
+        }
+        let path = write_report(id, &tables, &out)?;
+        eprintln!("wrote {path:?} in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &mut Args) -> Result<()> {
+    let dataset = args.opt_or("dataset", "aemo");
+    let arch = Arch::parse(&args.opt_or("arch", "elman"))?;
+    let m = args.opt_usize("m", 50)?;
+    let scale: f64 = args.opt_or("scale", "0.05").parse()?;
+    let workers = args.opt_usize("workers", 2)?;
+    let seed = args.opt_u64("seed", 7)?;
+    let seq = args.flag("seq");
+    args.finish()?;
+
+    let spec = opt_pr_elm::coordinator::job::dataset(&dataset)?;
+    let (train, test) = opt_pr_elm::report::prep::prepare(&spec, scale, seed)?;
+    println!(
+        "{}: {} train / {} test windows (Q={}, M={m})",
+        spec.name, train.n, test.n, train.q
+    );
+    let t0 = std::time::Instant::now();
+    if seq {
+        let model = SrElmModel::train(arch, &train, &TrainOptions::new(m, seed))?;
+        println!(
+            "S-R-ELM ({}): {:.3}s, test RMSE {:.5}",
+            arch.name(),
+            t0.elapsed().as_secs_f64(),
+            model.rmse(&test)
+        );
+    } else {
+        let trainer = PrElmTrainer::new(&default_artifacts_dir(), workers)?;
+        let (model, bd) = trainer.train(arch, &train, m, seed)?;
+        println!(
+            "Opt-PR-ELM ({}): {:.3}s total (init {:.4} h2d {:.4} exec {:.4} d2h {:.4} solve {:.4}), \
+             {} blocks, test RMSE {:.5}",
+            arch.name(),
+            t0.elapsed().as_secs_f64(),
+            bd.init_s,
+            bd.h2d_s,
+            bd.exec_s,
+            bd.d2h_s,
+            bd.solve_s,
+            bd.blocks,
+            trainer.rmse(&model, &test)?
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let mut count = 0usize;
+    for a in manifest.all() {
+        println!(
+            "{:<42} kind={:<12} arch={:<7} rows={:<4} q={:<3} m={}",
+            a.name, a.kind, a.arch, a.rows, a.q, a.m
+        );
+        count += 1;
+    }
+    eprintln!("{count} artifacts in {:?}", manifest.dir);
+    Ok(())
+}
+
+fn cmd_datasets(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    for d in registry() {
+        println!(
+            "{:<20} {:<7} n={:<7} Q={:<5} train={}% M(table4)={}",
+            d.name,
+            d.category.label(),
+            d.n_instances,
+            d.q,
+            d.train_pct,
+            d.table4_m
+        );
+    }
+    Ok(())
+}

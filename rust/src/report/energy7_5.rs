@@ -1,0 +1,45 @@
+//! §7.5 energy efficiency: the paper's headline numbers (Elman, M = 50:
+//! 3.71 s / 1113 J on the GPU vs 32 min / 57.6 kJ on the CPU) regenerated
+//! through gpusim, plus the break-even analysis for every dataset.
+
+use anyhow::Result;
+
+use crate::data::spec::registry;
+use crate::elm::Arch;
+use crate::gpusim::energy::energy_report;
+use crate::gpusim::{cpu_host, simulate, tesla_k20m, SimConfig, Variant};
+use crate::util::table::Table;
+
+use super::ReportCtx;
+
+pub fn emit(_ctx: &ReportCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "§7.5 — energy (gpusim, Elman M=50, Opt BS=32, Tesla K20m @ 300 W vs host @ 30 W)",
+        &["Dataset", "GPU s", "GPU J", "CPU s", "CPU J", "energy ratio", "break-even speedup"],
+    );
+    let dev = tesla_k20m();
+    let host = cpu_host();
+    for d in registry() {
+        let cfg = SimConfig {
+            arch: Arch::Elman,
+            variant: Variant::Opt,
+            n: d.n_instances.saturating_sub(d.q_paper.min(64)),
+            s: 1,
+            q: d.q_paper.min(64),
+            m: 50,
+            bs: 32,
+        };
+        let r = simulate(&cfg, &dev, &host);
+        let e = energy_report(&r, &dev, &host);
+        t.row(vec![
+            d.name.to_string(),
+            format!("{:.3}", e.gpu_s),
+            format!("{:.0}", e.gpu_joules),
+            format!("{:.1}", e.cpu_s),
+            format!("{:.0}", e.cpu_joules),
+            format!("{:.1}", e.energy_ratio),
+            format!("{:.0}", e.break_even_speedup),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,70 @@
+//! Fig 3: speedup of Basic-PR-ELM vs Opt-PR-ELM (BS 16 / 32) per
+//! architecture across the ten datasets, M = 50 — regenerated through the
+//! gpusim model at the paper's full sizes. The crossover structure the
+//! paper discusses (§7.1: Basic ≈ Opt when Q ≤ BS, Opt wins when Q > BS)
+//! falls out of the Table-2 read counts.
+
+use anyhow::Result;
+
+use crate::data::spec::registry;
+use crate::elm::ALL_ARCHS;
+use crate::gpusim::{cpu_host, simulate, tesla_k20m, SimConfig, Variant};
+use crate::util::table::Table;
+
+use super::ReportCtx;
+
+pub fn emit(_ctx: &ReportCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for arch in ALL_ARCHS {
+        let mut t = Table::new(
+            &format!("Fig 3 — {} speedup, M=50 (gpusim, Tesla K20m)", arch.name()),
+            &["Dataset", "Q", "Basic", "Opt BS=16", "Opt BS=32"],
+        );
+        for d in registry() {
+            let mk = |variant, bs| SimConfig {
+                arch,
+                variant,
+                n: d.n_instances.saturating_sub(d.q_paper.min(64)),
+                s: 1,
+                q: d.q_paper.min(64),
+                m: 50,
+                bs,
+            };
+            let host = cpu_host();
+            let dev = tesla_k20m();
+            let b = simulate(&mk(Variant::Basic, 16), &dev, &host);
+            let o16 = simulate(&mk(Variant::Opt, 16), &dev, &host);
+            let o32 = simulate(&mk(Variant::Opt, 32), &dev, &host);
+            t.row(vec![
+                d.name.to_string(),
+                d.q_paper.min(64).to_string(),
+                format!("{:.0}", b.speedup),
+                format!("{:.0}", o16.speedup),
+                format!("{:.0}", o32.speedup),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn opt32_never_slower_than_basic() {
+        let ctx = ReportCtx::new(PathBuf::from("artifacts"));
+        for t in emit(&ctx).unwrap() {
+            // columns: dataset, q, basic, o16, o32
+            let csv = t.to_csv();
+            for line in csv.lines().skip(1) {
+                let cols: Vec<&str> = line.split(',').collect();
+                let basic: f64 = cols[2].parse().unwrap();
+                let o32: f64 = cols[4].parse().unwrap();
+                assert!(o32 >= basic * 0.99, "{line}");
+            }
+        }
+    }
+}

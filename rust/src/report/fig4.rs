@@ -1,0 +1,69 @@
+//! Fig 4: Opt-PR-ELM (BS=32) speedup as M grows 5 → 100 — gpusim at the
+//! paper's sizes plus the measured pipeline-vs-sequential sweep at
+//! `ctx.scale` on this machine.
+
+use anyhow::Result;
+
+use crate::coordinator::PrElmTrainer;
+use crate::data::spec::registry;
+use crate::elm::{SrElmModel, TrainOptions, ALL_ARCHS};
+use crate::gpusim::{cpu_host, simulate, tesla_k20m, SimConfig, Variant};
+use crate::util::table::Table;
+use crate::util::timer::time_once;
+
+use super::prep::prepare;
+use super::ReportCtx;
+
+const MS: [usize; 5] = [5, 10, 20, 50, 100];
+
+pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
+    // modeled: all six archs on a representative dataset per size class
+    let mut model_t = Table::new(
+        "Fig 4 — Opt-PR-ELM (BS=32) speedup vs M (gpusim, Tesla, energy_consumption)",
+        &["Architecture", "M=5", "M=10", "M=20", "M=50", "M=100"],
+    );
+    let d = registry().into_iter().find(|d| d.name == "energy_consumption").unwrap();
+    for arch in ALL_ARCHS {
+        let mut row = vec![arch.name().to_string()];
+        for m in MS {
+            let cfg = SimConfig {
+                arch,
+                variant: Variant::Opt,
+                n: d.n_instances - d.q,
+                s: 1,
+                q: d.q,
+                m,
+                bs: 32,
+            };
+            let r = simulate(&cfg, &tesla_k20m(), &cpu_host());
+            row.push(format!("{:.0}", r.speedup));
+        }
+        model_t.row(row);
+    }
+
+    // measured: this machine's pipeline vs sequential at ctx.scale
+    let trainer = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+    let mut meas_t = Table::new(
+        &format!(
+            "Fig 4 (measured) — pipeline vs sequential speedup vs M, energy_consumption @ scale {}",
+            ctx.scale
+        ),
+        &["Architecture", "M=5", "M=10", "M=20", "M=50", "M=100"],
+    );
+    for arch in ALL_ARCHS {
+        let mut row = vec![arch.name().to_string()];
+        for m in MS {
+            let min_n = ((3 * m + 16 + d.q) as f64 / d.train_frac()) as usize + d.q;
+            let scale = ctx.scale.max(min_n as f64 / d.n_instances as f64);
+            let (train, _test) = prepare(&d, scale, ctx.seed)?;
+            let _ = trainer.train(arch, &train, m, ctx.seed)?; // warm-up compile
+            let (_s, seq_t) = time_once(|| {
+                SrElmModel::train(arch, &train, &TrainOptions::new(m, ctx.seed)).unwrap()
+            });
+            let (_p, par_t) = time_once(|| trainer.train(arch, &train, m, ctx.seed).unwrap());
+            row.push(format!("{:.1}", seq_t.as_secs_f64() / par_t.as_secs_f64()));
+        }
+        meas_t.row(row);
+    }
+    Ok(vec![model_t, meas_t])
+}

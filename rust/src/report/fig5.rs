@@ -1,0 +1,69 @@
+//! Fig 5: MSE vs wall-clock — P-BPTT's convergence curve against the
+//! Opt-PR-ELM single-shot point (Japan population, LSTM, M = 10).
+//! Fully measured on this machine.
+
+use anyhow::Result;
+
+use crate::bptt::{BpttArch, BpttTrainer};
+use crate::coordinator::PrElmTrainer;
+use crate::data::spec::by_name;
+use crate::elm::Arch;
+use crate::util::table::Table;
+
+use super::prep::prepare;
+use super::ReportCtx;
+
+pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
+    let d = by_name("japan_population").expect("registry");
+    // japan is small; run it at full size like the paper
+    let scale = ctx.scale.max(1.0);
+    let (train, test) = prepare(&d, scale, ctx.seed)?;
+
+    // P-BPTT curve
+    let bptt = BpttTrainer::new(&ctx.artifacts)?;
+    let (bptt_model, log) = bptt.train(BpttArch::Lstm, &train, 10, ctx.seed)?;
+    let bptt_test_mse = bptt.mse(&bptt_model, &test)?;
+
+    // Opt-PR-ELM point (warm-up first: steady-state time, not compile)
+    let elm = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+    let _ = elm.train(Arch::Lstm, &train, 10, ctx.seed)?;
+    let t0 = std::time::Instant::now();
+    let (elm_model, _bd) = elm.train(Arch::Lstm, &train, 10, ctx.seed)?;
+    let elm_time = t0.elapsed().as_secs_f64();
+    let elm_rmse = elm.rmse(&elm_model, &test)?;
+    let elm_mse = elm_rmse * elm_rmse;
+
+    let mut curve = Table::new(
+        "Fig 5 — P-BPTT MSE vs time (Japan population, LSTM, M=10)",
+        &["t (s)", "step", "minibatch MSE"],
+    );
+    // subsample the curve to ~40 points
+    let stride = (log.points.len() / 40).max(1);
+    for p in log.points.iter().step_by(stride) {
+        curve.row(vec![format!("{:.4}", p.t_s), p.step.to_string(), format!("{:.6}", p.mse)]);
+    }
+
+    let mut summary = Table::new(
+        "Fig 5 summary — Opt-PR-ELM point vs P-BPTT",
+        &["algorithm", "time to result (s)", "test MSE"],
+    );
+    summary.row(vec![
+        "Opt-PR-ELM".to_string(),
+        format!("{elm_time:.4}"),
+        format!("{elm_mse:.6}"),
+    ]);
+    summary.row(vec![
+        "P-BPTT (10 epochs)".to_string(),
+        format!("{:.4}", log.total_s),
+        format!("{bptt_test_mse:.6}"),
+    ]);
+    // time for BPTT to first reach the ELM's MSE (the paper's 69 s point)
+    if let Some(p) = log.points.iter().find(|p| p.mse <= elm_mse) {
+        summary.row(vec![
+            "P-BPTT @ ELM-level MSE".to_string(),
+            format!("{:.4}", p.t_s),
+            format!("{:.6}", p.mse),
+        ]);
+    }
+    Ok(vec![curve, summary])
+}

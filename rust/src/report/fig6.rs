@@ -1,0 +1,80 @@
+//! Fig 6: runtime decomposition of Opt-PR-ELM (Japan population, M = 10):
+//! init / transfer-to / compute-H(+partials) / transfer-from / solve-β.
+//! Measured from the pipeline's phase clocks, alongside the gpusim model's
+//! decomposition at the paper's scale.
+
+use anyhow::Result;
+
+use crate::coordinator::PrElmTrainer;
+use crate::data::spec::by_name;
+use crate::elm::ALL_ARCHS;
+use crate::gpusim::{cpu_host, simulate, tesla_k20m, SimConfig, Variant};
+use crate::util::table::Table;
+
+use super::prep::prepare;
+use super::ReportCtx;
+
+pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
+    let d = by_name("japan_population").expect("registry");
+    let scale = ctx.scale.max(0.5);
+    let (train, _test) = prepare(&d, scale, ctx.seed)?;
+    let trainer = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+
+    let mut meas = Table::new(
+        &format!(
+            "Fig 6 (measured) — Opt-PR-ELM phase decomposition (s), japan_population M=10 @ scale {scale}"
+        ),
+        &[
+            "Architecture",
+            "init",
+            "h2d*",
+            "exec H+gram*",
+            "d2h*",
+            "solve β",
+            "total (wall)",
+            "blocks",
+        ], // * cumulative across engine workers: may exceed wall clock
+    );
+    for arch in ALL_ARCHS {
+        // warm-up: compile the executables so the measured run is steady-state
+        let _ = trainer.train(arch, &train, 10, ctx.seed)?;
+        let (_m, bd) = trainer.train(arch, &train, 10, ctx.seed)?;
+        meas.row(vec![
+            arch.name().to_string(),
+            format!("{:.5}", bd.init_s),
+            format!("{:.5}", bd.h2d_s),
+            format!("{:.5}", bd.exec_s),
+            format!("{:.5}", bd.d2h_s),
+            format!("{:.5}", bd.solve_s),
+            format!("{:.5}", bd.total_s),
+            bd.blocks.to_string(),
+        ]);
+    }
+
+    let mut model = Table::new(
+        "Fig 6 (gpusim, paper size) — Tesla K20m decomposition (s), japan_population M=10",
+        &["Architecture", "init", "h2d", "kernel", "d2h", "beta", "total"],
+    );
+    for arch in ALL_ARCHS {
+        let cfg = SimConfig {
+            arch,
+            variant: Variant::Opt,
+            n: d.n_instances - d.q,
+            s: 1,
+            q: d.q,
+            m: 10,
+            bs: 32,
+        };
+        let r = simulate(&cfg, &tesla_k20m(), &cpu_host());
+        model.row(vec![
+            arch.name().to_string(),
+            format!("{:.6}", r.init_s),
+            format!("{:.6}", r.h2d_s),
+            format!("{:.6}", r.kernel_s),
+            format!("{:.6}", r.d2h_s),
+            format!("{:.6}", r.beta_s),
+            format!("{:.6}", r.gpu_total_s),
+        ]);
+    }
+    Ok(vec![meas, model])
+}

@@ -1,0 +1,82 @@
+//! Report emitters: one module per paper table / figure (DESIGN.md §4).
+//!
+//! Every emitter regenerates the corresponding artifact of the paper's
+//! evaluation section — measured on this machine where the experiment is
+//! measurable (accuracy, runtimes of our own pipeline vs comparators) and
+//! through the calibrated `gpusim` model where the paper's hardware is
+//! being substituted (GPU speedups, energy). Emitters return
+//! [`crate::util::table::Table`]s; `run_report` writes them under
+//! `results/` as markdown + CSV.
+
+pub mod energy7_5;
+pub mod fig3;
+pub mod prep;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::table::Table;
+
+/// Shared knobs for the measured experiments.
+#[derive(Debug, Clone)]
+pub struct ReportCtx {
+    pub artifacts: PathBuf,
+    /// dataset scale for measured runs (1.0 = the paper's full sizes)
+    pub scale: f64,
+    /// engine-pool workers for the parallel pipeline
+    pub workers: usize,
+    pub seed: u64,
+    /// repetitions for ± std columns (the paper uses 5)
+    pub reps: usize,
+}
+
+impl ReportCtx {
+    pub fn new(artifacts: PathBuf) -> ReportCtx {
+        ReportCtx { artifacts, scale: 0.02, workers: 8, seed: 7, reps: 3 }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_REPORTS: [&str; 9] =
+    ["table2", "table3", "table4", "table5", "table6", "fig3", "fig4", "fig5", "fig6"];
+
+/// Run one experiment by id ("energy" = §7.5) and return its tables.
+pub fn run_report(id: &str, ctx: &ReportCtx) -> Result<Vec<Table>> {
+    match id {
+        "table2" => table2::emit(),
+        "table3" => table3::emit(ctx),
+        "table4" => table4::emit(ctx),
+        "table5" => table5::emit(ctx),
+        "table6" => table6::emit(ctx),
+        "fig3" => fig3::emit(ctx),
+        "fig4" => fig4::emit(ctx),
+        "fig5" => fig5::emit(ctx),
+        "fig6" => fig6::emit(ctx),
+        "energy" => energy7_5::emit(ctx),
+        other => bail!("unknown report {other:?}; known: {ALL_REPORTS:?} + energy"),
+    }
+}
+
+/// Write tables under `out_dir/<id>.md` (+ one CSV per table).
+pub fn write_report(id: &str, tables: &[Table], out_dir: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(out_dir).context("creating results dir")?;
+    let md_path = out_dir.join(format!("{id}.md"));
+    let mut md = String::new();
+    for (i, t) in tables.iter().enumerate() {
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+        let csv_path = out_dir.join(format!("{id}_{i}.csv"));
+        std::fs::write(&csv_path, t.to_csv())?;
+    }
+    std::fs::write(&md_path, md)?;
+    Ok(md_path)
+}

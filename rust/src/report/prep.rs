@@ -1,0 +1,48 @@
+//! Shared dataset preparation for the measured experiments: generate →
+//! fit min-max on the train prefix → window → sequential split.
+
+use anyhow::Result;
+
+use crate::data::spec::DatasetSpec;
+use crate::data::window::Windowed;
+use crate::data::MinMax;
+
+pub fn prepare(spec: &DatasetSpec, scale: f64, seed: u64) -> Result<(Windowed, Windowed)> {
+    let series = spec.generate(scale, seed);
+    let split_at = ((series.len() as f64 * spec.train_frac()) as usize)
+        .clamp(1, series.len() - 1);
+    let norm = MinMax::fit(&series[..split_at])?;
+    let z = norm.apply_all(&series);
+    let w = Windowed::from_series(&z, spec.q)?;
+    Ok(w.split(spec.train_frac()))
+}
+
+/// mean ± std over a set of measurements.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec::registry;
+
+    #[test]
+    fn prepares_all_datasets() {
+        for d in registry() {
+            let (tr, te) = prepare(&d, 0.01, 3).unwrap();
+            assert!(tr.n > 0 && te.n > 0);
+            assert_eq!(tr.q, d.q);
+        }
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,71 @@
+//! Table 2: per-thread memory operations and FLOPs per architecture —
+//! the paper's symbolic formulas plus evaluations at the benchmark shapes.
+
+use anyhow::Result;
+
+use crate::elm::{Arch, ALL_ARCHS};
+use crate::gpusim::counts::{mem_to_flop_ratio, op_counts};
+use crate::gpusim::Variant;
+use crate::util::table::Table;
+
+fn formula(arch: Arch) -> (&'static str, &'static str, &'static str) {
+    match arch {
+        Arch::Elman => ("Q(2S+Q+2)", "Q", "Q(2S+Q+2)"),
+        Arch::Jordan => ("Q(2S+1+(Q+1)(1/2+M))", "Q", "Q(2S+1+(Q+1)/2(2SM+M))"),
+        Arch::Narmax => ("Q(2S+1)+2(2F+M+R)", "Q", "Q(2S+1+2F+R(2+2SM+M))"),
+        Arch::Fc => ("Q(2S+1+2MQ)", "Q", "Q(2S+Q+2QM)"),
+        Arch::Lstm => ("Q(5S+13)", "5Q", "Q(8S+18)"),
+        Arch::Gru => ("Q(4S+8)", "3Q", "Q(3S+17)"),
+    }
+}
+
+pub fn emit() -> Result<Vec<Table>> {
+    let mut sym = Table::new(
+        "Table 2 — Basic-PR-ELM per-thread operation counts (paper formulas)",
+        &["Architecture", "# Read Ops", "# Write Ops", "FLOPS"],
+    );
+    for arch in ALL_ARCHS {
+        let (r, w, f) = formula(arch);
+        sym.row(vec![arch.name().to_string(), r.into(), w.into(), f.into()]);
+    }
+
+    let mut eval = Table::new(
+        "Table 2 (evaluated) — S=1, Q=50, M=50, TW=32",
+        &[
+            "Architecture",
+            "reads (basic)",
+            "reads (opt)",
+            "writes",
+            "FLOPs",
+            "mem/FLOP (basic)",
+            "mem/FLOP (opt)",
+        ],
+    );
+    for arch in ALL_ARCHS {
+        let b = op_counts(arch, Variant::Basic, 1, 50, 50, 32);
+        let o = op_counts(arch, Variant::Opt, 1, 50, 50, 32);
+        eval.row(vec![
+            arch.name().to_string(),
+            format!("{:.0}", b.reads),
+            format!("{:.2}", o.reads),
+            format!("{:.0}", b.writes),
+            format!("{:.0}", b.flops),
+            format!("{:.3}", mem_to_flop_ratio(&b)),
+            format!("{:.4}", mem_to_flop_ratio(&o)),
+        ]);
+    }
+    Ok(vec![sym, eval])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_six_rows_each() {
+        let tables = emit().unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), 6);
+        assert_eq!(tables[1].n_rows(), 6);
+    }
+}

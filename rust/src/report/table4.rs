@@ -1,0 +1,58 @@
+//! Table 4: average RMSE ± std of S-R-ELM vs Opt-PR-ELM across the ten
+//! datasets and six architectures — the §7.3 robustness experiment,
+//! *measured* (both trainers run here; no simulation involved).
+
+use anyhow::Result;
+
+use crate::coordinator::PrElmTrainer;
+use crate::data::spec::registry;
+use crate::elm::{SrElmModel, TrainOptions, ALL_ARCHS};
+use crate::util::table::{sci, Table};
+
+use super::prep::{mean_std, prepare};
+use super::ReportCtx;
+
+pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
+    let trainer = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+    let mut t = Table::new(
+        &format!(
+            "Table 4 — test RMSE (±std over {} runs) S-R-ELM vs Opt-PR-ELM @ scale {}",
+            ctx.reps, ctx.scale
+        ),
+        &["Dataset", "Algorithm", "elman", "jordan", "narmax", "fc", "lstm", "gru"],
+    );
+    for d in registry() {
+        let m = d.table4_m;
+        // guarantee a well-conditioned system: train rows ≥ 8M + 32 (at
+        // ~3M the random tanh features are near-collinear and the
+        // sequential QR path amplifies noise — exoplanet M=100)
+        let min_n = ((8 * m + 32 + d.q) as f64 / d.train_frac()) as usize + d.q;
+        let scale = ctx.scale.max(min_n as f64 / d.n_instances as f64);
+        let (train, test) = prepare(&d, scale, ctx.seed)?;
+        let mut seq_cells = Vec::new();
+        let mut par_cells = Vec::new();
+        for arch in ALL_ARCHS {
+            let mut seq_r = Vec::new();
+            let mut par_r = Vec::new();
+            for rep in 0..ctx.reps {
+                let seed = ctx.seed + 100 * rep as u64;
+                let seq =
+                    SrElmModel::train(arch, &train, &TrainOptions::new(m, seed))?;
+                seq_r.push(seq.rmse(&test));
+                let (par, _bd) = trainer.train(arch, &train, m, seed)?;
+                par_r.push(trainer.rmse(&par, &test)?);
+            }
+            let (sm, ss) = mean_std(&seq_r);
+            let (pm, ps) = mean_std(&par_r);
+            seq_cells.push(format!("{} ± {}", sci(sm), sci(ss)));
+            par_cells.push(format!("{} ± {}", sci(pm), sci(ps)));
+        }
+        let mut row_s = vec![d.name.to_string(), "S-R-ELM".to_string()];
+        row_s.extend(seq_cells);
+        t.row(row_s);
+        let mut row_p = vec![String::new(), "Opt-PR-ELM".to_string()];
+        row_p.extend(par_cells);
+        t.row(row_p);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,83 @@
+//! Table 5: Opt-PR-ELM (BS=32, M=50) speedups on the Tesla K20m and the
+//! Quadro K2000 — regenerated through the calibrated `gpusim` model at the
+//! paper's full dataset sizes, plus a *measured* column: this machine's
+//! parallel pipeline (PJRT) vs the sequential S-R-ELM at `ctx.scale`.
+
+use anyhow::Result;
+
+use crate::coordinator::PrElmTrainer;
+use crate::data::spec::registry;
+use crate::elm::{SrElmModel, TrainOptions, ALL_ARCHS};
+use crate::gpusim::{cpu_host, quadro_k2000, simulate, tesla_k20m, SimConfig, Variant};
+use crate::util::table::Table;
+use crate::util::timer::time_once;
+
+use super::prep::prepare;
+use super::ReportCtx;
+
+pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
+    let trainer = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+    let m = 50usize;
+    let mut t = Table::new(
+        "Table 5 — Opt-PR-ELM (BS=32, M=50) speedup per GPU (gpusim @ paper sizes) \
+         + measured CPU pipeline speedup",
+        &["Architecture", "GPU", "japan", "quebec", "exo", "sp500", "aemo", "weather", "energy", "elec", "stock", "temp"],
+    );
+    let datasets = registry();
+    for arch in ALL_ARCHS {
+        for (dev_name, dev) in [("Tesla", tesla_k20m()), ("Quadro", quadro_k2000())] {
+            let mut row = vec![arch.name().to_string(), dev_name.to_string()];
+            for d in &datasets {
+                let cfg = SimConfig {
+                    arch,
+                    variant: Variant::Opt,
+                    n: d.n_instances.saturating_sub(d.q_paper.min(64)),
+                    s: 1,
+                    q: d.q_paper.min(64),
+                    m,
+                    bs: 32,
+                };
+                let r = simulate(&cfg, &dev, &cpu_host());
+                row.push(format!("{:.0}", r.speedup));
+            }
+            t.row(row);
+        }
+    }
+
+    // measured column: this testbed, Q ∈ {10, 50} datasets (M = 50 grams)
+    let mut meas = Table::new(
+        &format!(
+            "Table 5 (measured on this machine) — PJRT pipeline vs sequential S-R-ELM, \
+             M=50 @ scale {}",
+            ctx.scale
+        ),
+        &["Dataset", "Architecture", "seq (s)", "parallel (s)", "speedup"],
+    );
+    // representative subset at sizes where parallelism is visible: the
+    // full medium dataset and 20% of a large one (Q = 10; the Q = 50 FC
+    // sequential baseline would take minutes per cell)
+    for (name, floor) in [("aemo", 1.0), ("energy_consumption", 0.2)] {
+        let d = datasets.iter().find(|d| d.name == name).expect("registry");
+        let scale = ctx.scale.max(floor);
+        let (train, _test) = prepare(d, scale, ctx.seed)?;
+        for arch in ALL_ARCHS {
+            // warm-up run: compile the executables on every worker so the
+            // timed run measures execution, not jit (the paper's averages
+            // likewise exclude one-time CUDA jit)
+            let _ = trainer.train(arch, &train, m, ctx.seed)?;
+            let (_m1, seq_t) = time_once(|| {
+                SrElmModel::train(arch, &train, &TrainOptions::new(m, ctx.seed)).unwrap()
+            });
+            let (res, par_t) = time_once(|| trainer.train(arch, &train, m, ctx.seed).unwrap());
+            let _ = res;
+            meas.row(vec![
+                d.name.to_string(),
+                arch.name().to_string(),
+                format!("{:.3}", seq_t.as_secs_f64()),
+                format!("{:.3}", par_t.as_secs_f64()),
+                format!("{:.1}", seq_t.as_secs_f64() / par_t.as_secs_f64()),
+            ]);
+        }
+    }
+    Ok(vec![t, meas])
+}

@@ -1,0 +1,60 @@
+//! Table 6: runtime of Opt-PR-ELM vs P-BPTT (fc / lstm / gru, M = 10) —
+//! fully *measured*: both trainers run on this machine through their AOT
+//! executables (the paper ran both on the same Tesla K20m; we run both on
+//! the same PJRT CPU client, preserving the comparison's symmetry).
+
+use anyhow::Result;
+
+use crate::bptt::{BpttArch, BpttTrainer};
+use crate::coordinator::PrElmTrainer;
+use crate::data::spec::registry;
+use crate::elm::Arch;
+use crate::util::table::Table;
+use crate::util::timer::time_once;
+
+use super::prep::prepare;
+use super::ReportCtx;
+
+pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
+    let elm = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+    let bptt = BpttTrainer::new(&ctx.artifacts)?;
+    let m = 10usize;
+    let mut t = Table::new(
+        &format!(
+            "Table 6 — runtime (s): Opt-PR-ELM vs P-BPTT (M=10, 10 epochs, batch 64) @ scale {}",
+            ctx.scale
+        ),
+        &[
+            "Dataset", "FC elm", "FC bptt", "FC ratio", "LSTM elm", "LSTM bptt", "LSTM ratio",
+            "GRU elm", "GRU bptt", "GRU ratio",
+        ],
+    );
+    for d in registry() {
+        if d.q != 10 && d.q != 50 {
+            continue; // bptt artifacts cover Q ∈ {10, 50}; exoplanet (64) excluded
+        }
+        // bptt needs ≥ 1 full batch of 64 plus elm needs ≥ M rows
+        let min_n = ((200 + d.q) as f64 / d.train_frac()) as usize + d.q;
+        let scale = ctx.scale.max(min_n as f64 / d.n_instances as f64);
+        let (train, _test) = prepare(&d, scale, ctx.seed)?;
+        let mut row = vec![d.name.to_string()];
+        for (elm_arch, bptt_arch) in [
+            (Arch::Fc, BpttArch::Fc),
+            (Arch::Lstm, BpttArch::Lstm),
+            (Arch::Gru, BpttArch::Gru),
+        ] {
+            // warm-up: exclude one-time executable compilation from both
+            let _ = elm.train(elm_arch, &train, m, ctx.seed)?;
+            let (_m1, t_elm) =
+                time_once(|| elm.train(elm_arch, &train, m, ctx.seed).unwrap());
+            let (_m2, t_bptt) =
+                time_once(|| bptt.train(bptt_arch, &train, m, ctx.seed).unwrap());
+            let (e, b) = (t_elm.as_secs_f64(), t_bptt.as_secs_f64());
+            row.push(format!("{e:.2}"));
+            row.push(format!("{b:.2}"));
+            row.push(format!("{:.0}", b / e));
+        }
+        t.row(row);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,216 @@
+//! Single-threaded PJRT executor: text-parse → compile (cached) → execute.
+//!
+//! `Engine` owns a `PjRtClient` (`!Send`); thread-safe access goes through
+//! [`super::pool::EnginePool`]. The execute path validates every input
+//! against the manifest ABI before touching PJRT, so shape bugs surface as
+//! readable errors rather than XLA aborts.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// A host-side f32 tensor (the only dtype in the ABI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buf {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Buf {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Buf {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Buf { dims, data }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Buf {
+        Buf { dims: vec![data.len()], data }
+    }
+
+    pub fn scalarish(v: f32) -> Buf {
+        Buf { dims: vec![1], data: vec![v] }
+    }
+}
+
+/// Owns the PJRT client and the compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// cumulative phase timings (Fig 6 decomposition)
+    pub stats: EngineStats,
+}
+
+/// Cumulative time spent in each phase of artifact execution — the paper's
+/// Fig 6 runtime decomposition (h2d = literal creation / transfer-in,
+/// d2h = output fetch / transfer-out).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub compile_s: f64,
+    pub h2d_s: f64,
+    pub exec_s: f64,
+    pub d2h_s: f64,
+    pub executions: u64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Pre-compile an artifact (idempotent).
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&meta);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.stats.compile_s += t0.elapsed().as_secs_f64();
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute by artifact name with positional inputs; returns the output
+    /// tuple as host bufs (order per `meta.outputs`).
+    pub fn run(&mut self, name: &str, inputs: &[Buf]) -> Result<Vec<Buf>> {
+        self.prepare(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        validate_inputs(&meta, inputs)?;
+        let exe = self.cache.get(name).expect("prepared above");
+
+        // h2d: host vecs -> literals
+        let t0 = std::time::Instant::now();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for b in inputs {
+            let dims: Vec<i64> = b.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&b.data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        self.stats.h2d_s += t0.elapsed().as_secs_f64();
+
+        // execute
+        let t1 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        self.stats.exec_s += t1.elapsed().as_secs_f64();
+
+        // d2h: buffers -> literals -> host vecs (root is a tuple)
+        let t2 = std::time::Instant::now();
+        let root = result[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact {name}: {} outputs, manifest declares {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>()?;
+            out.push(Buf::new(dims, data));
+        }
+        self.stats.d2h_s += t2.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+        Ok(out)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn validate_inputs(meta: &ArtifactMeta, inputs: &[Buf]) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        bail!(
+            "artifact {}: got {} inputs, ABI declares {}",
+            meta.name,
+            inputs.len(),
+            meta.inputs.len()
+        );
+    }
+    for (b, spec) in inputs.iter().zip(&meta.inputs) {
+        if b.data.len() != spec.len() {
+            bail!(
+                "artifact {} input {:?}: got {} elements, ABI wants {:?} = {}",
+                meta.name,
+                spec.name,
+                b.data.len(),
+                spec.shape,
+                spec.len()
+            );
+        }
+        if b.dims != spec.shape {
+            bail!(
+                "artifact {} input {:?}: dims {:?} != ABI {:?}",
+                meta.name,
+                spec.name,
+                b.dims,
+                spec.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buf_constructors() {
+        let b = Buf::vec(vec![1.0, 2.0]);
+        assert_eq!(b.dims, vec![2]);
+        let s = Buf::scalarish(3.0);
+        assert_eq!(s.data, vec![3.0]);
+    }
+
+    #[test]
+    fn input_validation_catches_arity_and_shape() {
+        let meta = ArtifactMeta {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            kind: "elm_h".into(),
+            arch: "elman".into(),
+            variant: "opt".into(),
+            rows: 4,
+            block_rows: 2,
+            s: 1,
+            q: 3,
+            m: 2,
+            inputs: vec![super::super::manifest::InputSpec {
+                name: "x".into(),
+                shape: vec![4, 1, 3],
+            }],
+            outputs: vec!["h".into()],
+        };
+        assert!(validate_inputs(&meta, &[]).is_err());
+        let wrong_len = Buf::vec(vec![0.0; 5]);
+        assert!(validate_inputs(&meta, &[wrong_len]).is_err());
+        let wrong_dims = Buf::new(vec![12], vec![0.0; 12]);
+        assert!(validate_inputs(&meta, &[wrong_dims]).is_err());
+        let ok = Buf::new(vec![4, 1, 3], vec![0.0; 12]);
+        assert!(validate_inputs(&meta, &[ok]).is_ok());
+    }
+}

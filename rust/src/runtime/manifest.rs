@@ -1,0 +1,179 @@
+//! The artifact ABI: names, kinds, shapes — parsed from manifest.json.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One input's declared name and shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One compiled executable's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub arch: String,
+    pub variant: String,
+    pub rows: usize,
+    pub block_rows: usize,
+    pub s: usize,
+    pub q: usize,
+    pub m: usize,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// The full artifact registry.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let mut by_name = BTreeMap::new();
+        for e in root.get("artifacts")?.as_arr()? {
+            let meta = ArtifactMeta {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                kind: e.get("kind")?.as_str()?.to_string(),
+                arch: e.get("arch")?.as_str()?.to_string(),
+                variant: e.get("variant")?.as_str()?.to_string(),
+                rows: e.get("rows")?.as_usize()?,
+                block_rows: e.get("block_rows")?.as_usize()?,
+                s: e.get("s")?.as_usize()?,
+                q: e.get("q")?.as_usize()?,
+                m: e.get("m")?.as_usize()?,
+                inputs: e
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|i| {
+                        Ok(InputSpec {
+                            name: i.get("name")?.as_str()?.to_string(),
+                            shape: i
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<_>>()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|o| Ok(o.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+            };
+            if by_name.insert(meta.name.clone(), meta).is_some() {
+                bail!("duplicate artifact name in manifest");
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Find the unique artifact matching (kind, arch, q, m).
+    pub fn find(&self, kind: &str, arch: &str, q: usize, m: usize) -> Result<&ArtifactMeta> {
+        let mut hits = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == kind && a.arch == arch && a.q == q && a.m == m);
+        let first = hits.next().ok_or_else(|| {
+            anyhow!("no artifact for kind={kind} arch={arch} q={q} m={m} — extend python/compile/manifest.py")
+        })?;
+        if hits.next().is_some() {
+            bail!("ambiguous artifact selection for kind={kind} arch={arch} q={q} m={m}");
+        }
+        Ok(first)
+    }
+
+    pub fn all(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.by_name.values()
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "elm_gram_elman_r256_s1_q10_m50", "file": "elm_gram_elman_r256_s1_q10_m50.hlo.txt",
+         "kind": "elm_gram", "arch": "elman", "variant": "opt",
+         "rows": 256, "block_rows": 32, "s": 1, "q": 10, "m": 50,
+         "inputs": [{"name": "x", "shape": [256, 1, 10], "dtype": "f32"},
+                    {"name": "w", "shape": [1, 50], "dtype": "f32"}],
+         "outputs": ["hth", "hty"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.find("elm_gram", "elman", 10, 50).unwrap();
+        assert_eq!(a.rows, 256);
+        assert_eq!(a.inputs[0].name, "x");
+        assert_eq!(a.inputs[0].len(), 2560);
+        assert_eq!(a.outputs, vec!["hth", "hty"]);
+    }
+
+    #[test]
+    fn missing_artifact_is_helpful() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let err = m.find("elm_gram", "elman", 99, 50).unwrap_err().to_string();
+        assert!(err.contains("manifest.py"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.all().count() >= 80, "expected the full grid");
+            // every ELM artifact's first input is the x block
+            for a in m.all().filter(|a| a.kind.starts_with("elm_")) {
+                assert_eq!(a.inputs[0].name, "x");
+                assert_eq!(a.inputs[0].shape, vec![a.rows, a.s, a.q]);
+            }
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them from rust.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (the ABI emitted by
+//!   `python/compile/aot.py`): per-artifact input names/shapes and outputs.
+//! * [`engine`] — a single-threaded executor owning a `PjRtClient`
+//!   (`Rc`-based in the xla crate, hence `!Send`): text-parse → compile →
+//!   execute, with a compiled-executable cache.
+//! * [`pool`] — `EnginePool`: N worker threads, each owning an `Engine`,
+//!   fed over channels — the crate's thread-safe execution facade.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+pub mod pool;
+
+pub use engine::{Buf, Engine};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use pool::EnginePool;
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // honor an override for tests / deployments
+    if let Ok(d) = std::env::var("OPT_PR_ELM_ARTIFACTS") {
+        return d.into();
+    }
+    // walk up from cwd until an artifacts/manifest.json is found
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! `EnginePool`: thread-safe facade over N engine threads.
+//!
+//! The xla crate's `PjRtClient` is `Rc`-based (`!Send`), so each worker
+//! thread owns its own client + executable cache; requests are dispatched
+//! round-robin over channels. One worker is plenty for correctness paths;
+//! benches can raise `workers` for inter-block parallelism.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::{Buf, Engine, EngineStats};
+
+enum Req {
+    Run { name: String, inputs: Vec<Buf>, reply: Sender<Result<Vec<Buf>>> },
+    Prepare { name: String, reply: Sender<Result<()>> },
+    Stats { reply: Sender<EngineStats> },
+    Shutdown,
+}
+
+struct Worker {
+    tx: Mutex<Sender<Req>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Thread-safe pool of PJRT engine threads.
+pub struct EnginePool {
+    workers: Vec<Worker>,
+    next: AtomicUsize,
+}
+
+impl EnginePool {
+    /// Spin up `n_workers` engine threads over `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path, n_workers: usize) -> Result<EnginePool> {
+        let n = n_workers.max(1);
+        let mut workers = Vec::with_capacity(n);
+        for wid in 0..n {
+            let (tx, rx) = channel::<Req>();
+            let dir = artifacts_dir.to_path_buf();
+            // engine construction happens on the worker thread (!Send);
+            // surface construction errors through the first request instead
+            let handle = std::thread::Builder::new()
+                .name(format!("pjrt-engine-{wid}"))
+                .spawn(move || {
+                    let mut engine = Engine::new(&dir);
+                    for req in rx {
+                        match req {
+                            Req::Run { name, inputs, reply } => {
+                                let res = match &mut engine {
+                                    Ok(e) => e.run(&name, &inputs),
+                                    Err(e) => Err(anyhow!("engine init failed: {e:#}")),
+                                };
+                                let _ = reply.send(res);
+                            }
+                            Req::Prepare { name, reply } => {
+                                let res = match &mut engine {
+                                    Ok(e) => e.prepare(&name),
+                                    Err(e) => Err(anyhow!("engine init failed: {e:#}")),
+                                };
+                                let _ = reply.send(res);
+                            }
+                            Req::Stats { reply } => {
+                                let s = engine
+                                    .as_ref()
+                                    .map(|e| e.stats)
+                                    .unwrap_or_default();
+                                let _ = reply.send(s);
+                            }
+                            Req::Shutdown => break,
+                        }
+                    }
+                })
+                .context("spawning engine thread")?;
+            workers.push(Worker { tx: Mutex::new(tx), handle: Some(handle) });
+        }
+        Ok(EnginePool { workers, next: AtomicUsize::new(0) })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn send(&self, wid: usize, req: Req) -> Result<()> {
+        let tx = self.workers[wid].tx.lock().expect("pool poisoned");
+        tx.send(req).map_err(|_| anyhow!("engine thread {wid} is gone"))
+    }
+
+    /// Execute on the next worker (round-robin).
+    pub fn run(&self, name: &str, inputs: Vec<Buf>) -> Result<Vec<Buf>> {
+        let wid = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        self.run_on(wid, name, inputs)
+    }
+
+    /// Execute on a specific worker (cache affinity).
+    pub fn run_on(&self, wid: usize, name: &str, inputs: Vec<Buf>) -> Result<Vec<Buf>> {
+        let (reply, rx) = channel();
+        self.send(wid, Req::Run { name: name.to_string(), inputs, reply })?;
+        rx.recv().map_err(|_| anyhow!("engine thread {wid} dropped the reply"))?
+    }
+
+    /// Compile `name` on every worker (warm-up before timed runs).
+    pub fn prepare_all(&self, name: &str) -> Result<()> {
+        let mut rxs = Vec::new();
+        for wid in 0..self.workers.len() {
+            let (reply, rx) = channel();
+            self.send(wid, Req::Prepare { name: name.to_string(), reply })?;
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv().map_err(|_| anyhow!("engine thread dropped prepare reply"))??;
+        }
+        Ok(())
+    }
+
+    /// Aggregate phase timings across workers (Fig 6 decomposition).
+    pub fn stats(&self) -> EngineStats {
+        let mut total = EngineStats::default();
+        for wid in 0..self.workers.len() {
+            let (reply, rx) = channel();
+            if self.send(wid, Req::Stats { reply }).is_ok() {
+                if let Ok(s) = rx.recv() {
+                    total.compile_s += s.compile_s;
+                    total.h2d_s += s.h2d_s;
+                    total.exec_s += s.exec_s;
+                    total.d2h_s += s.d2h_s;
+                    total.executions += s.executions;
+                }
+            }
+        }
+        total
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            if let Ok(tx) = w.tx.lock() {
+                let _ = tx.send(Req::Shutdown);
+            }
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny argv parser: `repro <command> [--key value] [--flag]`.
+//!
+//! Replaces clap in the offline build. Unknown options are an error so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let v: Vec<String> = argv.into_iter().collect();
+        let mut args = Args {
+            command: v.first().cloned().unwrap_or_default(),
+            ..Args::default()
+        };
+        let mut i = 1;
+        while i < v.len() {
+            let a = &v[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare flag
+                if let Some((k, val)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), val.to_string());
+                } else if i + 1 < v.len() && !v[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), v[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&mut self, key: &str) -> Option<&str> {
+        self.known.push(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&mut self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&mut self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn opt_u64(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Call after all opt()/flag() lookups: rejects unknown options.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.options.keys() {
+            if !self.known.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        let mut a = parse(&["report", "table4", "--seed", "7", "--arch=lstm"]);
+        assert_eq!(a.command, "report");
+        assert_eq!(a.positional, vec!["table4"]);
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert_eq!(a.opt("arch"), Some("lstm"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flags_and_lookahead() {
+        let mut a = parse(&["train", "--verbose", "--m", "50"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("m", 10).unwrap(), 50);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn adjacent_flags() {
+        let mut a = parse(&["x", "--fast", "--check"]);
+        assert!(a.flag("fast"));
+        assert!(a.flag("check"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse(&["x", "--oops", "1"]);
+        let _ = a.opt("other");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse(&["x"]);
+        assert_eq!(a.opt_or("mode", "fast"), "fast");
+        assert_eq!(a.opt_usize("n", 3).unwrap(), 3);
+    }
+}

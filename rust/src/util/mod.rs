@@ -1,0 +1,10 @@
+//! Small self-contained substrates: RNG, JSON, CLI parsing, tables, timing.
+//!
+//! These replace crates that are unavailable in the offline build
+//! (rand, serde_json, clap, criterion) — see the note in `Cargo.toml`.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod timer;

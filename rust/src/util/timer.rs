@@ -1,0 +1,87 @@
+//! Wall-clock timing + a tiny bench harness (criterion replacement).
+//!
+//! `bench()` runs warmup iterations, then measures until a time budget or
+//! iteration cap is reached, and reports mean / p50 / p95 like a criterion
+//! summary line. Used by every `rust/benches/*.rs` (harness = false).
+
+use std::time::{Duration, Instant};
+
+/// Measure one closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.iters
+        )
+    }
+}
+
+/// Criterion-style measurement loop: `warmup` unmeasured runs, then measure
+/// until `budget` elapses (at least 3, at most `max_iters` runs).
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    budget: Duration,
+    max_iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 3 || start.elapsed() < budget) && samples.len() < max_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let mean = total / samples.len() as u32;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    BenchResult { name: name.to_string(), iters: samples.len(), mean, p50: p(0.5), p95: p(0.95) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_at_least_three() {
+        let r = bench("noop", 1, Duration::from_millis(1), 1000, || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn bench_respects_max_iters() {
+        let r = bench("capped", 0, Duration::from_secs(10), 5, || ());
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

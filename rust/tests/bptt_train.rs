@@ -1,0 +1,94 @@
+//! P-BPTT driver integration: the AOT train step must actually learn, and
+//! the loss log must be the Fig-5-shaped decreasing curve.
+
+use opt_pr_elm::bptt::{BpttArch, BpttTrainer};
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::runtime::default_artifacts_dir;
+use opt_pr_elm::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn toy_series(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut y = vec![0.2f64, 0.4];
+    for t in 2..n {
+        let v = 0.55 * y[t - 1] + 0.25 * y[t - 2]
+            + 0.1 * (t as f64 * 0.2).sin()
+            + 0.03 * rng.normal();
+        y.push(v);
+    }
+    let lo = y.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = y.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    y.iter().map(|v| (v - lo) / (hi - lo)).collect()
+}
+
+#[test]
+fn bptt_learns_all_three_archs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let trainer = BpttTrainer::new(&default_artifacts_dir()).unwrap();
+    let series = toy_series(1400, 3);
+    let w = Windowed::from_series(&series, 10).unwrap();
+    let (train, test) = w.split(0.8);
+
+    for arch in [BpttArch::Fc, BpttArch::Lstm, BpttArch::Gru] {
+        let (model, log) = trainer.train(arch, &train, 10, 7).unwrap();
+        assert_eq!(log.epochs, 10);
+        assert!(log.steps >= 10);
+        let first: f64 =
+            log.points.iter().take(3).map(|p| p.mse).sum::<f64>() / 3.0;
+        let last: f64 = log
+            .points
+            .iter()
+            .rev()
+            .take(3)
+            .map(|p| p.mse)
+            .sum::<f64>()
+            / 3.0;
+        assert!(
+            last < 0.5 * first,
+            "{}: loss {first} -> {last} did not halve",
+            arch.name()
+        );
+        // timestamps are monotone and positive
+        for w in log.points.windows(2) {
+            assert!(w[1].t_s >= w[0].t_s);
+        }
+        let test_mse = trainer.mse(&model, &test).unwrap();
+        assert!(test_mse.is_finite() && test_mse < first, "{}", arch.name());
+        println!(
+            "{:>4}: mse {first:.4} -> {last:.4}, test {test_mse:.4}, {:.2}s / {} steps",
+            arch.name(),
+            log.total_s,
+            log.steps
+        );
+    }
+}
+
+#[test]
+fn bptt_deterministic_in_seed() {
+    if !artifacts_ready() {
+        return;
+    }
+    let trainer = BpttTrainer::new(&default_artifacts_dir()).unwrap();
+    let series = toy_series(400, 5);
+    let w = Windowed::from_series(&series, 10).unwrap();
+    let (a, _) = trainer.train(BpttArch::Gru, &w, 10, 42).unwrap();
+    let (b, _) = trainer.train(BpttArch::Gru, &w, 10, 42).unwrap();
+    assert_eq!(a.params, b.params);
+}
+
+#[test]
+fn bptt_rejects_tiny_dataset() {
+    if !artifacts_ready() {
+        return;
+    }
+    let trainer = BpttTrainer::new(&default_artifacts_dir()).unwrap();
+    let series = toy_series(40, 1); // 30 windows < batch 64
+    let w = Windowed::from_series(&series, 10).unwrap();
+    assert!(trainer.train(BpttArch::Fc, &w, 10, 1).is_err());
+}

@@ -1,0 +1,139 @@
+//! Property tests over the coordinator substrate (no PJRT needed):
+//! batching coverage, mask correctness, accumulator algebra.
+
+use opt_pr_elm::coordinator::batcher::RowBlockBatcher;
+use opt_pr_elm::coordinator::GramAccumulator;
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::testing::prop;
+
+fn toy_windowed(g: &mut prop::Gen, q: usize, n_rows: usize) -> Windowed {
+    let series = g.vec_f64(n_rows + q, -1.0, 1.0);
+    Windowed::from_series(&series, q).unwrap()
+}
+
+#[test]
+fn batcher_tiles_exactly_property() {
+    prop::check(80, |g| {
+        let q = g.size(1, 8);
+        let n = 1 + g.size(0, 700);
+        let rows = 1 + g.size(0, 300);
+        let w = toy_windowed(g, q, n);
+        let blocks: Vec<_> = RowBlockBatcher::new(&w, rows).collect();
+        let total: usize = blocks.iter().map(|b| b.valid).sum();
+        prop::assert_prop(total == w.n, format!("covered {total} of {}", w.n))?;
+        // offsets are contiguous, block shapes fixed
+        let mut pos = 0;
+        for b in &blocks {
+            prop::assert_prop(b.offset == pos, "contiguous offsets")?;
+            prop::assert_prop(b.x.len() == rows * w.s * w.q, "x padded shape")?;
+            prop::assert_prop(b.mask.len() == rows, "mask shape")?;
+            let mask_sum: f32 = b.mask.iter().sum();
+            prop::assert_prop(mask_sum as usize == b.valid, "mask sums to valid")?;
+            pos += b.valid;
+        }
+        // every block except possibly the last is full
+        for b in &blocks[..blocks.len().saturating_sub(1)] {
+            prop::assert_prop(b.valid == rows, "interior blocks full")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_padding_is_zero_property() {
+    prop::check(50, |g| {
+        let q = g.size(1, 6);
+        let n = 1 + g.size(0, 150);
+        let rows = n + 1 + g.size(0, 64); // force padding
+        let w = toy_windowed(g, q, n);
+        let blocks: Vec<_> = RowBlockBatcher::new(&w, rows).collect();
+        prop::assert_prop(blocks.len() == 1, "single padded block")?;
+        let b = &blocks[0];
+        let pad_x = &b.x[b.valid * w.s * w.q..];
+        let pad_y = &b.y[b.valid..];
+        prop::assert_prop(pad_x.iter().all(|&v| v == 0.0), "x padding zero")?;
+        prop::assert_prop(pad_y.iter().all(|&v| v == 0.0), "y padding zero")?;
+        prop::assert_prop(
+            b.mask[b.valid..].iter().all(|&v| v == 0.0),
+            "mask padding zero",
+        )
+    });
+}
+
+#[test]
+fn gram_accumulation_is_order_invariant_property() {
+    // folding partials in any order gives the same solution (f64 fold of
+    // identical summands — merge() is commutative here)
+    prop::check(30, |g| {
+        let m = 2 + g.size(0, 6);
+        let n_blocks = 2 + g.size(0, 6);
+        // random per-block partials (symmetric PSD-ish: outer products)
+        let mut partials = Vec::new();
+        for _ in 0..n_blocks {
+            let v = g.vec_f32(m, -1.0, 1.0);
+            let mut hth = vec![0f32; m * m];
+            let mut hty = vec![0f32; m];
+            for a in 0..m {
+                for b in 0..m {
+                    hth[a * m + b] = v[a] * v[b] + if a == b { 1.0 } else { 0.0 };
+                }
+                hty[a] = v[a] * 0.5;
+            }
+            partials.push((hth, hty));
+        }
+        let solve_in_order = |idx: Vec<usize>| -> Result<Vec<f64>, String> {
+            let mut acc = GramAccumulator::new(m, 1e-10);
+            for &i in &idx {
+                acc.push_partials(&partials[i].0, &partials[i].1, m)
+                    .map_err(|e| e.to_string())?;
+            }
+            acc.solve().map_err(|e| e.to_string())
+        };
+        let fwd = solve_in_order((0..n_blocks).collect())?;
+        let rev = solve_in_order((0..n_blocks).rev().collect())?;
+        let worst = fwd
+            .iter()
+            .zip(&rev)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        prop::assert_close(worst, 0.0, 1e-9, "order invariance")
+    });
+}
+
+#[test]
+fn merge_matches_sequential_property() {
+    prop::check(30, |g| {
+        let m = 2 + g.size(0, 5);
+        let k = 2 + g.size(0, 5);
+        let mut seq = GramAccumulator::new(m, 1e-10);
+        let mut left = GramAccumulator::new(m, 1e-10);
+        let mut right = GramAccumulator::new(m, 1e-10);
+        for i in 0..k {
+            let v = g.vec_f32(m, -1.0, 1.0);
+            let mut hth = vec![0f32; m * m];
+            let mut hty = vec![0f32; m];
+            for a in 0..m {
+                for b in 0..m {
+                    hth[a * m + b] = v[a] * v[b] + if a == b { 0.7 } else { 0.0 };
+                }
+                hty[a] = v[a];
+            }
+            seq.push_partials(&hth, &hty, m).map_err(|e| e.to_string())?;
+            if i % 2 == 0 {
+                left.push_partials(&hth, &hty, m).map_err(|e| e.to_string())?;
+            } else {
+                right.push_partials(&hth, &hty, m).map_err(|e| e.to_string())?;
+            }
+        }
+        left.merge(&right).map_err(|e| e.to_string())?;
+        prop::assert_prop(left.rows_seen() == seq.rows_seen(), "rows merged")?;
+        let a = seq.solve().map_err(|e| e.to_string())?;
+        let b = left.solve().map_err(|e| e.to_string())?;
+        let worst = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        prop::assert_close(worst, 0.0, 1e-8, "merge == sequential")
+    });
+}

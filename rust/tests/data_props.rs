@@ -1,0 +1,105 @@
+//! Property tests over the data substrate: windowing alignment, splits,
+//! normalization, and generator statistics.
+
+use opt_pr_elm::data::spec::registry;
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::data::{MinMax, Stats};
+use opt_pr_elm::testing::prop;
+
+#[test]
+fn window_alignment_property() {
+    prop::check(60, |g| {
+        let q = g.size(1, 20);
+        let n = q + 1 + g.size(0, 200);
+        let series = g.vec_f64(n, -5.0, 5.0);
+        let w = Windowed::from_series(&series, q).map_err(|e| e.to_string())?;
+        prop::assert_prop(w.n == n - q, "window count")?;
+        // spot-check a random row
+        let i = g.size(0, w.n - 1);
+        for t in 0..q {
+            prop::assert_close(
+                w.x_row(i)[t] as f64,
+                series[i + t],
+                1e-6,
+                &format!("x[{i},{t}]"),
+            )?;
+        }
+        prop::assert_close(w.y[i] as f64, series[i + q], 1e-6, "target")?;
+        // yhist is the reversed window
+        for k in 1..=q {
+            prop::assert_close(
+                w.yhist_row(i)[k - 1] as f64,
+                series[i + q - k],
+                1e-6,
+                "yhist",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn split_partition_property() {
+    prop::check(60, |g| {
+        let q = g.size(1, 8);
+        let n = q + 2 + g.size(0, 300);
+        let series = g.vec_f64(n, 0.0, 1.0);
+        let w = Windowed::from_series(&series, q).map_err(|e| e.to_string())?;
+        let frac = g.f64(0.0, 1.0);
+        let (tr, te) = w.split(frac);
+        prop::assert_prop(tr.n + te.n == w.n, "partition covers")?;
+        prop::assert_prop(tr.n >= 1 && te.n >= 1, "both nonempty")?;
+        // boundary continuity: first test row is the (tr.n)-th source row
+        prop::assert_close(te.y[0] as f64, w.y[tr.n] as f64, 0.0, "boundary")
+    });
+}
+
+#[test]
+fn minmax_normalization_property() {
+    prop::check(60, |g| {
+        let n = g.size(2, 500);
+        let xs = g.vec_f64(n, -1e6, 1e6);
+        let nm = MinMax::fit(&xs).map_err(|e| e.to_string())?;
+        let z = nm.apply_all(&xs);
+        let s = Stats::of(&z);
+        prop::assert_prop(s.min() >= -1e-9 && s.max() <= 1.0 + 1e-9, "unit range")?;
+        // round trip
+        let i = g.size(0, n - 1);
+        prop::assert_close(nm.invert(z[i]), xs[i], 1e-6 * (1.0 + xs[i].abs()), "invert")
+    });
+}
+
+#[test]
+fn generators_respect_bounds_property() {
+    // every dataset, several scales/seeds: published min/max are hard bounds
+    prop::check(20, |g| {
+        let specs = registry();
+        let d = g.pick(&specs);
+        let scale = g.f64(0.01, 0.05);
+        let seed = g.u64();
+        let xs = d.generate(scale, seed);
+        let s = Stats::of(&xs);
+        prop::assert_prop(
+            s.min() >= d.min - 1e-9 && s.max() <= d.max + 1e-9,
+            format!("{}: [{}, {}] outside published bounds", d.name, s.min(), s.max()),
+        )?;
+        prop::assert_prop(xs.iter().all(|v| v.is_finite()), "finite")
+    });
+}
+
+#[test]
+fn window_slice_composition_property() {
+    prop::check(40, |g| {
+        let q = g.size(1, 6);
+        let n = q + 10 + g.size(0, 100);
+        let series = g.vec_f64(n, -2.0, 2.0);
+        let w = Windowed::from_series(&series, q).map_err(|e| e.to_string())?;
+        let lo = g.size(0, w.n - 2);
+        let hi = lo + 1 + g.size(0, w.n - lo - 1);
+        let s = w.slice(lo, hi);
+        prop::assert_prop(s.n == hi - lo, "slice len")?;
+        let i = g.size(0, s.n - 1);
+        prop::assert_prop(s.x_row(i) == w.x_row(lo + i), "slice x rows")?;
+        prop::assert_prop(s.y[i] == w.y[lo + i], "slice y")
+    });
+}

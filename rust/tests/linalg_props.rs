@@ -1,0 +1,144 @@
+//! Property tests over the linalg substrate: QR/TSQR/Cholesky invariants
+//! on randomized shapes and conditioning.
+
+use opt_pr_elm::linalg::{
+    cholesky_solve, householder_qr, lstsq_qr, lstsq_ridge, solve_upper_triangular, Matrix,
+    TsqrAccumulator,
+};
+use opt_pr_elm::testing::prop;
+use opt_pr_elm::util::rng::Rng;
+
+fn random_matrix(g: &mut prop::Gen, rows: usize, cols: usize) -> Matrix {
+    let mut rng = Rng::new(g.u64());
+    Matrix::random(rows, cols, &mut rng)
+}
+
+#[test]
+fn qr_reconstruction_property() {
+    prop::check(60, |g| {
+        let n = g.size(1, 12);
+        let m = n + g.size(0, 40);
+        let a = random_matrix(g, m, n);
+        let f = householder_qr(&a).map_err(|e| e.to_string())?;
+        let qr = f.q().matmul(&f.r());
+        prop::assert_close(qr.max_abs_diff(&a), 0.0, 1e-9, &format!("A=QR {m}x{n}"))
+    });
+}
+
+#[test]
+fn qr_orthonormality_property() {
+    prop::check(40, |g| {
+        let n = g.size(1, 10);
+        let m = n + g.size(0, 30);
+        let a = random_matrix(g, m, n);
+        let q = householder_qr(&a).map_err(|e| e.to_string())?.q();
+        let qtq = q.transpose().matmul(&q);
+        prop::assert_close(qtq.max_abs_diff(&Matrix::identity(n)), 0.0, 1e-9, "QtQ=I")
+    });
+}
+
+#[test]
+fn lstsq_residual_orthogonality_property() {
+    prop::check(40, |g| {
+        let n = g.size(1, 8);
+        let m = n + 2 + g.size(0, 50);
+        let a = random_matrix(g, m, n);
+        let b = g.normals(m);
+        let x = lstsq_qr(&a, &b).map_err(|e| e.to_string())?;
+        let ax = a.matvec(&x);
+        let resid: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let at_r = a.t_matvec(&resid);
+        let worst = at_r.iter().fold(0.0f64, |acc, v| acc.max(v.abs()));
+        prop::assert_close(worst, 0.0, 1e-7, "Aᵀr = 0")
+    });
+}
+
+#[test]
+fn tsqr_equals_direct_qr_property() {
+    prop::check(25, |g| {
+        let n = g.size(1, 8);
+        let rows = n + 4 + g.size(0, 120);
+        let a = random_matrix(g, rows, n);
+        let b = g.normals(rows);
+        let direct = lstsq_qr(&a, &b).map_err(|e| e.to_string())?;
+        let block = g.size(1, 40);
+        let mut acc = TsqrAccumulator::new(n);
+        let mut i = 0;
+        while i < rows {
+            let hi = (i + block).min(rows);
+            let rows_vec: Vec<Vec<f64>> = (i..hi).map(|r| a.row(r).to_vec()).collect();
+            acc.push_block(&Matrix::from_rows(&rows_vec), &b[i..hi])
+                .map_err(|e| e.to_string())?;
+            i = hi;
+        }
+        let beta = acc.solve().map_err(|e| e.to_string())?;
+        let worst = beta
+            .iter()
+            .zip(&direct)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        prop::assert_close(worst, 0.0, 1e-7, &format!("tsqr block={block}"))
+    });
+}
+
+#[test]
+fn cholesky_solve_property() {
+    prop::check(40, |g| {
+        let n = g.size(1, 10);
+        let a = random_matrix(g, n + 3, n);
+        let mut spd = a.gram();
+        for i in 0..n {
+            spd[(i, i)] += 1.0;
+        }
+        let x_true = g.normals(n);
+        let b = spd.matvec(&x_true);
+        let x = cholesky_solve(&spd, &b).map_err(|e| e.to_string())?;
+        let worst = x
+            .iter()
+            .zip(&x_true)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f64, f64::max);
+        prop::assert_close(worst, 0.0, 1e-6, "chol solve")
+    });
+}
+
+#[test]
+fn ridge_shrinks_toward_zero_property() {
+    // ‖β(λ_big)‖ <= ‖β(λ_small)‖ : monotone shrinkage
+    prop::check(25, |g| {
+        let n = g.size(2, 8);
+        let m = n + 5 + g.size(0, 40);
+        let a = random_matrix(g, m, n);
+        let b = g.normals(m);
+        let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let small = lstsq_ridge(&a, &b, 1e-10).map_err(|e| e.to_string())?;
+        let big = lstsq_ridge(&a, &b, 10.0).map_err(|e| e.to_string())?;
+        prop::assert_prop(
+            norm(&big) <= norm(&small) + 1e-9,
+            format!("‖β(10)‖={} > ‖β(1e-10)‖={}", norm(&big), norm(&small)),
+        )
+    });
+}
+
+#[test]
+fn upper_solve_inverts_property() {
+    prop::check(40, |g| {
+        let n = g.size(1, 10);
+        let a = random_matrix(g, n, n);
+        let mut r = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = a[(i, j)] + if i == j { 2.0 } else { 0.0 };
+            }
+        }
+        let x = g.normals(n);
+        let b = r.matvec(&x);
+        let got = solve_upper_triangular(&r, &b).map_err(|e| e.to_string())?;
+        let worst = got
+            .iter()
+            .zip(&x)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f64, f64::max);
+        prop::assert_close(worst, 0.0, 1e-8, "back substitution")
+    });
+}

@@ -1,0 +1,215 @@
+//! End-to-end coordinator test: the parallel trainer (PJRT artifacts +
+//! streaming Gram accumulation) must reproduce the sequential S-R-ELM
+//! baseline — same β (up to f32 accumulation) and same test RMSE.
+
+use opt_pr_elm::coordinator::PrElmTrainer;
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::{Arch, SrElmModel, TrainOptions, ALL_ARCHS};
+use opt_pr_elm::runtime::default_artifacts_dir;
+use opt_pr_elm::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+/// Learnable AR series in [0, 1] with enough noise + frequency mix that
+/// the random-feature matrix H is decently conditioned (β comparisons
+/// between f32 and f64 accumulation are meaningless at cond(HᵀH) ≫ 1e8).
+fn toy_series(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut y = vec![0.3f64, 0.45];
+    for t in 2..n {
+        let v = 0.45 * y[t - 1] + 0.2 * y[t - 2]
+            + 0.15 * (t as f64 * 0.15).sin()
+            + 0.1 * (t as f64 * 0.71).cos()
+            + 0.12 * rng.normal();
+        y.push(v);
+    }
+    let lo = y.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = y.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    y.iter().map(|v| (v - lo) / (hi - lo)).collect()
+}
+
+#[test]
+fn parallel_matches_sequential_all_archs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut trainer = PrElmTrainer::new(&default_artifacts_dir(), 2).unwrap();
+    trainer.lambda = 1e-4; // matched with the sequential ridge below
+    let series = toy_series(900, 3);
+    let w = Windowed::from_series(&series, 10).unwrap();
+    let (train, test) = w.split(0.8);
+    let m = 10usize;
+
+    for arch in ALL_ARCHS {
+        let seed = 17;
+        // sequential baseline (ridge solve matching the pipeline's λ)
+        let mut opts = TrainOptions::new(m, seed);
+        opts.ridge = Some(1e-4);
+        let seq = SrElmModel::train(arch, &train, &opts).unwrap();
+        // parallel pipeline
+        let (par, bd) = trainer.train(arch, &train, m, seed).unwrap();
+
+        // β agreement is relative: the Gram system's conditioning
+        // amplifies the f32-accumulation noise in the coefficient space,
+        // so the functional (RMSE) agreement below is the primary check.
+        let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let dbeta: Vec<f64> = seq.beta.iter().zip(&par.beta).map(|(a, b)| a - b).collect();
+        let rel_dbeta = norm(&dbeta) / (1.0 + norm(&seq.beta));
+        assert!(rel_dbeta < 0.05, "{}: ‖Δβ‖rel = {rel_dbeta}", arch.name());
+
+        let rmse_seq = seq.rmse(&test);
+        let rmse_par = trainer.rmse(&par, &test).unwrap();
+        assert!(
+            (rmse_seq - rmse_par).abs() < 5e-3 || (rmse_par / rmse_seq) < 1.10,
+            "{}: rmse seq {rmse_seq} vs par {rmse_par}",
+            arch.name()
+        );
+        assert!(bd.blocks > 0 && bd.total_s > 0.0);
+        println!(
+            "{:>7}: Δβ={rel_dbeta:.2e} rmse seq={rmse_seq:.4} par={rmse_par:.4} blocks={}",
+            arch.name(),
+            bd.blocks
+        );
+    }
+}
+
+#[test]
+fn parallel_training_is_deterministic_across_worker_counts() {
+    if !artifacts_ready() {
+        return;
+    }
+    let series = toy_series(700, 5);
+    let w = Windowed::from_series(&series, 10).unwrap();
+    let t1 = PrElmTrainer::new(&default_artifacts_dir(), 1).unwrap();
+    let t3 = PrElmTrainer::new(&default_artifacts_dir(), 3).unwrap();
+    let (m1, _) = t1.train(Arch::Lstm, &w, 10, 99).unwrap();
+    let (m3, _) = t3.train(Arch::Lstm, &w, 10, 99).unwrap();
+    // in-order fold ⇒ identical accumulation regardless of worker count
+    assert_eq!(m1.beta, m3.beta, "determinism across worker counts");
+}
+
+#[test]
+fn padding_does_not_change_solution() {
+    if !artifacts_ready() {
+        return;
+    }
+    // n chosen so the tail block is nearly empty (1 valid row)
+    let mut trainer = PrElmTrainer::new(&default_artifacts_dir(), 1).unwrap();
+    trainer.lambda = 1e-4;
+    let series_a = toy_series(256 + 10 + 1, 7); // n = 257 → blocks 256 + 1
+    let wa = Windowed::from_series(&series_a, 10).unwrap();
+    assert_eq!(wa.n, 257);
+    let (model, _) = trainer.train(Arch::Elman, &wa, 10, 5).unwrap();
+    // sequential reference on identical data
+    let mut opts = TrainOptions::new(10, 5);
+    opts.ridge = Some(1e-4);
+    let seq = SrElmModel::train(Arch::Elman, &wa, &opts).unwrap();
+    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let dbeta: Vec<f64> = model.beta.iter().zip(&seq.beta).map(|(a, b)| a - b).collect();
+    let rel = norm(&dbeta) / (1.0 + norm(&seq.beta));
+    assert!(rel < 0.05, "padded-tail drift {rel}");
+    // and the padded-pipeline model must predict as well as the reference
+    let r_par = trainer.rmse(&model, &wa).unwrap();
+    let r_seq = seq.rmse(&wa);
+    assert!((r_par - r_seq).abs() < 5e-3, "rmse drift: par {r_par} seq {r_seq}");
+}
+
+#[test]
+fn breakdown_phases_are_populated() {
+    if !artifacts_ready() {
+        return;
+    }
+    let trainer = PrElmTrainer::new(&default_artifacts_dir(), 1).unwrap();
+    let series = toy_series(600, 11);
+    let w = Windowed::from_series(&series, 10).unwrap();
+    let (_m, bd) = trainer.train(Arch::Gru, &w, 10, 1).unwrap();
+    assert!(bd.exec_s > 0.0, "exec phase must be measured");
+    assert!(bd.h2d_s > 0.0, "h2d phase must be measured");
+    assert!(bd.d2h_s >= 0.0);
+    assert!(bd.solve_s > 0.0);
+    assert!(bd.total_s >= bd.exec_s);
+    // Fig 6 claim: init is negligible
+    assert!(bd.init_s < bd.total_s * 0.25, "init {} vs total {}", bd.init_s, bd.total_s);
+}
+
+#[test]
+fn narmax_els_improves_or_matches_single_pass() {
+    if !artifacts_ready() {
+        return;
+    }
+    let series = toy_series(800, 13);
+    let w = Windowed::from_series(&series, 10).unwrap();
+    let (train, test) = w.split(0.8);
+    let mut trainer = PrElmTrainer::new(&default_artifacts_dir(), 1).unwrap();
+    let (els, _) = trainer.train(Arch::Narmax, &train, 10, 21).unwrap();
+    let rmse_els = trainer.rmse(&els, &test).unwrap();
+    trainer.narmax_els = false;
+    let (single, _) = trainer.train(Arch::Narmax, &train, 10, 21).unwrap();
+    let rmse_single = trainer.rmse(&single, &test).unwrap();
+    assert!(
+        rmse_els <= rmse_single * 1.25,
+        "ELS {rmse_els} much worse than single-pass {rmse_single}"
+    );
+}
+
+#[test]
+fn online_elm_streams_artifact_h_blocks() {
+    // OS-ELM extension: stream H blocks straight out of the elm_h
+    // artifacts into the recursive least-squares state; the result must
+    // match the batch ridge solution over the same rows.
+    if !artifacts_ready() {
+        return;
+    }
+    use opt_pr_elm::coordinator::batcher::RowBlockBatcher;
+    use opt_pr_elm::elm::{ElmParams, OnlineElm};
+    use opt_pr_elm::runtime::{Buf, EnginePool, Manifest};
+
+    let dir = default_artifacts_dir();
+    let pool = EnginePool::new(&dir, 1).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let meta = manifest.find("elm_h", "elman", 10, 50).unwrap().clone();
+
+    let series = toy_series(600, 21);
+    let w = Windowed::from_series(&series, 10).unwrap();
+    let params = ElmParams::init(Arch::Elman, w.s, w.q, meta.m, 4);
+    let lambda = 1e-3;
+    let mut online = OnlineElm::new(meta.m, lambda);
+    let mut all_h: Vec<f32> = Vec::new();
+    let mut all_y: Vec<f32> = Vec::new();
+    for block in RowBlockBatcher::new(&w, meta.rows) {
+        let mut inputs = Vec::new();
+        for spec in &meta.inputs {
+            let buf = match spec.name.as_str() {
+                "x" => Buf::new(spec.shape.clone(), block.x.clone()),
+                "yhist" => Buf::new(spec.shape.clone(), block.yhist.clone()),
+                "ehist" => Buf::new(spec.shape.clone(), vec![0f32; spec.len()]),
+                name => Buf::new(spec.shape.clone(), params.buf(name).to_vec()),
+            };
+            inputs.push(buf);
+        }
+        let h = pool.run(&meta.name, inputs).unwrap().remove(0);
+        let valid = block.valid;
+        online
+            .update_block(&h.data[..valid * meta.m], &block.y[..valid], valid)
+            .unwrap();
+        all_h.extend_from_slice(&h.data[..valid * meta.m]);
+        all_y.extend_from_slice(&block.y[..valid]);
+    }
+    assert_eq!(online.rows_seen(), w.n);
+
+    // batch ridge over the same H
+    let hm = opt_pr_elm::linalg::Matrix::from_f32(w.n, meta.m, &all_h);
+    let mut g = hm.gram();
+    for i in 0..meta.m {
+        g[(i, i)] += lambda;
+    }
+    let yv: Vec<f64> = all_y.iter().map(|&v| v as f64).collect();
+    let c = hm.t_matvec(&yv);
+    let batch = opt_pr_elm::linalg::cholesky_solve(&g, &c).unwrap();
+    for (a, b) in online.beta().iter().zip(&batch) {
+        assert!((a - b).abs() < 1e-5, "online {a} vs batch {b}");
+    }
+}

@@ -1,0 +1,239 @@
+//! Runtime ⇄ artifact smoke: the Pallas-lowered H kernels executed through
+//! PJRT must match the sequential rust recurrences on identical inputs.
+//! This is the cross-layer golden test tying L1/L2 (python, build time) to
+//! L3 (rust, run time) without any cross-language RNG coupling: rust
+//! generates both the data and the weights.
+
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::{trainer, Arch, ElmParams};
+use opt_pr_elm::runtime::{default_artifacts_dir, Buf, EnginePool, Manifest};
+use opt_pr_elm::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn toy_windowed(n_rows: usize, q: usize, seed: u64) -> Windowed {
+    let mut rng = Rng::new(seed);
+    let mut series = vec![0.5f64];
+    for t in 1..(n_rows + q) {
+        let prev: f64 = series[t - 1];
+        let v: f64 = 0.7 * prev + 0.1 * (t as f64 * 0.3).sin() + 0.05 * rng.normal();
+        series.push(v.clamp(-3.0, 3.0));
+    }
+    Windowed::from_series(&series, q).unwrap()
+}
+
+/// Assemble the elm_h ABI input list: x, [yhist, ehist], params...
+fn h_inputs(meta: &opt_pr_elm::runtime::ArtifactMeta, w: &Windowed, p: &ElmParams) -> Vec<Buf> {
+    let mut inputs = Vec::new();
+    for spec in &meta.inputs {
+        let buf = match spec.name.as_str() {
+            "x" => Buf::new(spec.shape.clone(), w.x.clone()),
+            "yhist" => Buf::new(spec.shape.clone(), w.yhist.clone()),
+            "ehist" => Buf::new(spec.shape.clone(), vec![0f32; spec.len()]),
+            name => Buf::new(spec.shape.clone(), p.buf(name).to_vec()),
+        };
+        inputs.push(buf);
+    }
+    inputs
+}
+
+#[test]
+fn elm_h_artifacts_match_sequential_recurrences() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let pool = EnginePool::new(&dir, 1).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+
+    for arch_name in ["elman", "jordan", "narmax", "fc", "lstm", "gru"] {
+        let meta = manifest.find("elm_h", arch_name, 10, 50).unwrap().clone();
+        let arch = Arch::parse(arch_name).unwrap();
+        let w = toy_windowed(meta.rows, meta.q, 42);
+        assert_eq!(w.n, meta.rows);
+        let params = ElmParams::init(arch, meta.s, meta.q, meta.m, 7);
+
+        let out = pool.run(&meta.name, h_inputs(&meta, &w, &params)).unwrap();
+        assert_eq!(out.len(), 1, "{arch_name}");
+        let h_pjrt = &out[0];
+        assert_eq!(h_pjrt.dims, vec![meta.rows, meta.m]);
+
+        let h_seq = trainer::hidden_matrix(&params, &w, None);
+        let mut max_err = 0f64;
+        for i in 0..meta.rows {
+            for j in 0..meta.m {
+                let a = h_pjrt.data[i * meta.m + j] as f64;
+                let b = h_seq[(i, j)];
+                max_err = max_err.max((a - b).abs());
+            }
+        }
+        assert!(max_err < 2e-4, "{arch_name}: max |pjrt - seq| = {max_err}");
+        println!("{arch_name}: max_err = {max_err:.2e} OK");
+    }
+}
+
+#[test]
+fn gram_artifact_matches_h_products() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let pool = EnginePool::new(&dir, 1).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let meta = manifest.find("elm_gram", "elman", 10, 50).unwrap().clone();
+    let arch = Arch::parse("elman").unwrap();
+    let w = toy_windowed(meta.rows, meta.q, 9);
+    let params = ElmParams::init(arch, meta.s, meta.q, meta.m, 3);
+
+    let mut inputs = Vec::new();
+    for spec in &meta.inputs {
+        let buf = match spec.name.as_str() {
+            "x" => Buf::new(spec.shape.clone(), w.x.clone()),
+            "y" => Buf::new(spec.shape.clone(), w.y.clone()),
+            "mask" => Buf::new(spec.shape.clone(), vec![1f32; meta.rows]),
+            name => Buf::new(spec.shape.clone(), params.buf(name).to_vec()),
+        };
+        inputs.push(buf);
+    }
+    let out = pool.run(&meta.name, inputs).unwrap();
+    assert_eq!(out.len(), 2);
+    let (hth, hty) = (&out[0], &out[1]);
+    assert_eq!(hth.dims, vec![meta.m, meta.m]);
+    assert_eq!(hty.dims, vec![meta.m]);
+
+    // compare against sequential H products (f32 gram accumulates error:
+    // tolerance scaled for n = 256 terms)
+    let h = trainer::hidden_matrix(&params, &w, None);
+    let g = h.gram();
+    let y: Vec<f64> = w.y.iter().map(|&v| v as f64).collect();
+    let c = h.t_matvec(&y);
+    let mut max_g = 0f64;
+    for a in 0..meta.m {
+        for b in 0..meta.m {
+            max_g = max_g.max((hth.data[a * meta.m + b] as f64 - g[(a, b)]).abs());
+        }
+    }
+    let max_c = (0..meta.m)
+        .map(|j| (hty.data[j] as f64 - c[j]).abs())
+        .fold(0f64, f64::max);
+    assert!(max_g < 1e-2, "HtH err {max_g}");
+    assert!(max_c < 1e-2, "HtY err {max_c}");
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let pool = EnginePool::new(&dir, 1).unwrap();
+    let err = pool.run("elm_h_elman_r256_s1_q10_m50", vec![]).unwrap_err();
+    assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+    let err2 = pool.run("no_such_artifact", vec![]).unwrap_err();
+    assert!(format!("{err2:#}").contains("manifest"), "{err2:#}");
+}
+
+#[test]
+fn pool_round_robin_with_two_workers() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let pool = EnginePool::new(&dir, 2).unwrap();
+    assert_eq!(pool.n_workers(), 2);
+    let manifest = Manifest::load(&dir).unwrap();
+    let meta = manifest.find("elm_h", "elman", 10, 50).unwrap().clone();
+    let w = toy_windowed(meta.rows, meta.q, 1);
+    let p = ElmParams::init(Arch::Elman, meta.s, meta.q, meta.m, 1);
+    let inputs = h_inputs(&meta, &w, &p);
+    let a = pool.run(&meta.name, inputs.clone()).unwrap();
+    let b = pool.run(&meta.name, inputs).unwrap();
+    assert_eq!(a[0].data, b[0].data, "workers must agree bit-for-bit");
+    let stats = pool.stats();
+    assert_eq!(stats.executions, 2);
+}
+
+#[test]
+fn corrupt_hlo_file_yields_error_not_crash() {
+    if !artifacts_ready() {
+        return;
+    }
+    // stage a corrupt artifact in a temp dir with a valid manifest entry
+    let tmp = std::env::temp_dir().join(format!("optprelm_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let manifest_json = r#"{
+      "artifacts": [
+        {"name": "bad", "file": "bad.hlo.txt", "kind": "elm_h", "arch": "elman",
+         "variant": "opt", "rows": 4, "block_rows": 2, "s": 1, "q": 2, "m": 2,
+         "inputs": [{"name": "x", "shape": [4, 1, 2], "dtype": "f32"}],
+         "outputs": ["h"]}
+      ]
+    }"#;
+    std::fs::write(tmp.join("manifest.json"), manifest_json).unwrap();
+    std::fs::write(tmp.join("bad.hlo.txt"), "HloModule utterly { broken").unwrap();
+    let pool = EnginePool::new(&tmp, 1).unwrap();
+    let err = pool
+        .run("bad", vec![Buf::new(vec![4, 1, 2], vec![0.0; 8])])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad") || msg.contains("pars"), "{msg}");
+    // the engine thread must survive the failure
+    let err2 = pool.run("bad", vec![]).unwrap_err();
+    assert!(!format!("{err2:#}").is_empty());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn missing_artifact_file_is_reported() {
+    if !artifacts_ready() {
+        return;
+    }
+    let tmp = std::env::temp_dir().join(format!("optprelm_missing_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let manifest_json = r#"{
+      "artifacts": [
+        {"name": "ghost", "file": "ghost.hlo.txt", "kind": "elm_h", "arch": "elman",
+         "variant": "opt", "rows": 4, "block_rows": 2, "s": 1, "q": 2, "m": 2,
+         "inputs": [{"name": "x", "shape": [4, 1, 2], "dtype": "f32"}],
+         "outputs": ["h"]}
+      ]
+    }"#;
+    std::fs::write(tmp.join("manifest.json"), manifest_json).unwrap();
+    let pool = EnginePool::new(&tmp, 1).unwrap();
+    let err = pool
+        .run("ghost", vec![Buf::new(vec![4, 1, 2], vec![0.0; 8])])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn pool_survives_many_concurrent_callers() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let pool = std::sync::Arc::new(EnginePool::new(&dir, 3).unwrap());
+    let manifest = Manifest::load(&dir).unwrap();
+    let meta = manifest.find("elm_h", "gru", 10, 50).unwrap().clone();
+    let w = toy_windowed(meta.rows, meta.q, 2);
+    let p = ElmParams::init(Arch::Gru, meta.s, meta.q, meta.m, 2);
+    let inputs = h_inputs(&meta, &w, &p);
+    let mut handles = Vec::new();
+    for _ in 0..12 {
+        let pool = pool.clone();
+        let name = meta.name.clone();
+        let inputs = inputs.clone();
+        handles.push(std::thread::spawn(move || {
+            pool.run(&name, inputs).unwrap()[0].data.clone()
+        }));
+    }
+    let first = handles.remove(0).join().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), first, "all callers see identical results");
+    }
+}
