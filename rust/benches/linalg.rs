@@ -1,47 +1,193 @@
-//! Microbenches for the β-solve substrate: Householder QR vs TSQR vs the
-//! ridge/Cholesky path at ELM-shaped sizes (tall-skinny, M ≤ 100).
+//! Microbenches for the β-solve substrate: blocked QR vs the seed scalar
+//! reference, tiled GEMM/Gram vs the naive loops, TSQR streaming vs the
+//! parallel tree — at ELM-shaped sizes (tall-skinny, M ≤ 100).
+//!
+//! Besides the human-readable summary lines, the run emits a
+//! machine-readable `BENCH_linalg.json` (op, shape, ns/iter, GFLOP/s, and
+//! the speedup over the seed reference where one exists) so future PRs
+//! have a perf trajectory to regress against. Override the output path
+//! with `BENCH_LINALG_OUT=…`.
 
 use std::time::Duration;
 
-use opt_pr_elm::linalg::{householder_qr, lstsq_qr, lstsq_ridge, Matrix, TsqrAccumulator};
+use opt_pr_elm::linalg::{
+    householder_qr, householder_qr_reference, lstsq_qr, lstsq_ridge, lstsq_tsqr,
+    solve_upper_triangular, Matrix, TsqrAccumulator,
+};
+use opt_pr_elm::util::json::{num, obj, s, Json};
 use opt_pr_elm::util::rng::Rng;
-use opt_pr_elm::util::timer::bench;
+use opt_pr_elm::util::timer::{bench, BenchResult};
+
+/// One emitted measurement.
+struct Rec {
+    op: String,
+    shape: String,
+    ns_per_iter: f64,
+    gflops: f64,
+    speedup_vs_reference: Option<f64>,
+}
+
+fn push(records: &mut Vec<Rec>, r: &BenchResult, op: &str, shape: &str, flops: f64) -> f64 {
+    println!("{}", r.summary());
+    let ns = r.mean_secs() * 1e9;
+    let gflops = if flops > 0.0 && ns > 0.0 { flops / ns } else { 0.0 };
+    records.push(Rec {
+        op: op.to_string(),
+        shape: shape.to_string(),
+        ns_per_iter: ns,
+        gflops,
+        speedup_vs_reference: None,
+    });
+    ns
+}
+
+/// The seed's unblocked gram loop (zero-skip branch and all), kept here as
+/// the measurement baseline.
+fn gram_reference(a: &Matrix) -> Matrix {
+    let n = a.cols;
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..a.rows {
+        let r = a.row(i);
+        for x in 0..n {
+            let rx = r[x];
+            if rx == 0.0 {
+                continue;
+            }
+            for y in x..n {
+                g[(x, y)] += rx * r[y];
+            }
+        }
+    }
+    for x in 0..n {
+        for y in 0..x {
+            g[(x, y)] = g[(y, x)];
+        }
+    }
+    g
+}
+
+/// Least squares through the seed scalar QR (the speedup baseline).
+fn lstsq_qr_reference(a: &Matrix, b: &[f64]) -> Vec<f64> {
+    let f = householder_qr_reference(a).unwrap();
+    let mut z = b.to_vec();
+    f.apply_qt(&mut z);
+    solve_upper_triangular(&f.r(), &z[..a.cols]).unwrap()
+}
 
 fn main() {
     let budget = Duration::from_millis(400);
+    let mut records: Vec<Rec> = Vec::new();
     println!("== linalg microbench (β solve substrate) ==");
+
     for (n, m) in [(1000usize, 20usize), (5000, 50), (20000, 50), (5000, 100)] {
         let mut rng = Rng::new(1);
         let a = Matrix::random(n, m, &mut rng);
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let shape = format!("{n}x{m}");
+        let qr_flops = 2.0 * n as f64 * (m * m) as f64 - 2.0 / 3.0 * (m * m * m) as f64;
+        let gram_flops = (n * m * (m + 1)) as f64;
 
-        let r = bench(&format!("householder_qr {n}x{m}"), 1, budget, 50, || {
+        let r = bench(&format!("householder_qr {shape}"), 1, budget, 50, || {
             householder_qr(&a).unwrap()
         });
-        println!("{}", r.summary());
+        let t_blk = push(&mut records, &r, "householder_qr", &shape, qr_flops);
+        let r = bench(&format!("householder_qr_ref {shape}"), 1, budget, 50, || {
+            householder_qr_reference(&a).unwrap()
+        });
+        let t_ref = push(&mut records, &r, "householder_qr_ref", &shape, qr_flops);
+        mark_speedup(&mut records, t_ref / t_blk);
+        println!("  -> blocked QR speedup vs seed scalar: {:.2}x", t_ref / t_blk);
 
-        let r = bench(&format!("lstsq_qr {n}x{m}"), 1, budget, 50, || {
+        let r = bench(&format!("lstsq_qr {shape}"), 1, budget, 50, || {
             lstsq_qr(&a, &b).unwrap()
         });
-        println!("{}", r.summary());
+        let t_blk = push(&mut records, &r, "lstsq_qr", &shape, qr_flops);
+        let r = bench(&format!("lstsq_qr_ref {shape}"), 1, budget, 50, || {
+            lstsq_qr_reference(&a, &b)
+        });
+        let t_ref = push(&mut records, &r, "lstsq_qr_ref", &shape, qr_flops);
+        mark_speedup(&mut records, t_ref / t_blk);
+        println!("  -> lstsq_qr speedup vs seed scalar: {:.2}x", t_ref / t_blk);
 
-        let r = bench(&format!("lstsq_ridge {n}x{m}"), 1, budget, 50, || {
+        let r = bench(&format!("lstsq_ridge {shape}"), 1, budget, 50, || {
             lstsq_ridge(&a, &b, 1e-8).unwrap()
         });
-        println!("{}", r.summary());
+        push(&mut records, &r, "lstsq_ridge", &shape, gram_flops);
 
-        let r = bench(&format!("tsqr(block=256) {n}x{m}"), 1, budget, 50, || {
+        let r = bench(&format!("gram {shape}"), 1, budget, 50, || a.gram());
+        let t_blk = push(&mut records, &r, "gram", &shape, gram_flops);
+        let r = bench(&format!("gram_ref {shape}"), 1, budget, 50, || {
+            gram_reference(&a)
+        });
+        let t_ref = push(&mut records, &r, "gram_ref", &shape, gram_flops);
+        mark_speedup(&mut records, t_ref / t_blk);
+        println!("  -> gram speedup vs seed scalar: {:.2}x", t_ref / t_blk);
+
+        let r = bench(&format!("tsqr(block=256) {shape}"), 1, budget, 50, || {
             let mut acc = TsqrAccumulator::new(m);
             let mut i = 0;
             while i < n {
                 let hi = (i + 256).min(n);
-                let rows: Vec<Vec<f64>> = (i..hi).map(|r| a.row(r).to_vec()).collect();
-                acc.push_block(&Matrix::from_rows(&rows), &b[i..hi]).unwrap();
+                acc.push_block(a.submatrix(i, hi, 0, m), &b[i..hi]).unwrap();
                 i = hi;
             }
             acc.solve().unwrap()
         });
-        println!("{}", r.summary());
+        push(&mut records, &r, "tsqr_stream", &shape, qr_flops);
+
+        for workers in [1usize, 2, 4, 8] {
+            let r = bench(
+                &format!("lstsq_tsqr(w={workers}) {shape}"),
+                1,
+                budget,
+                50,
+                || lstsq_tsqr(&a, &b, workers).unwrap(),
+            );
+            push(&mut records, &r, &format!("lstsq_tsqr_w{workers}"), &shape, qr_flops);
+        }
         println!();
     }
+
+    // square GEMM: the kernel behind the QR trailing updates and h_block
+    for dim in [128usize, 384] {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random(dim, dim, &mut rng);
+        let b = Matrix::random(dim, dim, &mut rng);
+        let shape = format!("{dim}x{dim}x{dim}");
+        let flops = 2.0 * (dim * dim * dim) as f64;
+        let r = bench(&format!("matmul {shape}"), 1, budget, 50, || a.matmul(&b));
+        push(&mut records, &r, "matmul", &shape, flops);
+    }
+    println!();
+
+    let out_path = std::env::var("BENCH_LINALG_OUT")
+        .unwrap_or_else(|_| "BENCH_linalg.json".to_string());
+    let json = Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("op", s(&r.op)),
+                    ("shape", s(&r.shape)),
+                    ("ns_per_iter", num(r.ns_per_iter)),
+                    ("gflops", num(r.gflops)),
+                ];
+                if let Some(x) = r.speedup_vs_reference {
+                    pairs.push(("speedup_vs_reference", num(x)));
+                }
+                obj(pairs)
+            })
+            .collect(),
+    );
+    match std::fs::write(&out_path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {out_path} ({} records)", records.len()),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}
+
+/// Attach the measured speedup to the non-reference record of the pair
+/// just pushed (records[len-2]).
+fn mark_speedup(records: &mut [Rec], speedup: f64) {
+    let i = records.len() - 2;
+    records[i].speedup_vs_reference = Some(speedup);
 }

@@ -140,13 +140,18 @@ impl BpttTrainer {
         Ok((model, log))
     }
 
-    /// Batched predictions via the `bptt_predict` artifact (padded tail).
+    /// Batched predictions via the `bptt_predict` artifact (padded tail);
+    /// without a matching artifact (offline builds) the batched-GEMM CPU
+    /// forward pass computes the same recurrence host-side. Manifest
+    /// *errors* (e.g. ambiguous selection) still propagate.
     pub fn predict(&self, model: &BpttModel, data: &Windowed) -> Result<Vec<f64>> {
-        let meta = self
+        let meta = match self
             .manifest
-            .find("bptt_predict", model.arch.name(), data.q, model.m)
-            .context("selecting bptt_predict artifact")?
-            .clone();
+            .find_optional("bptt_predict", model.arch.name(), data.q, model.m)?
+        {
+            Some(meta) => meta.clone(),
+            None => return Ok(super::forward::forward_cpu(model, data)),
+        };
         let b = meta.rows;
         let sq = data.s * data.q;
         let mut out = vec![0f64; data.n];

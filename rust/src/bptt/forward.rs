@@ -1,0 +1,186 @@
+//! Batched CPU forward pass for the BPTT comparator models.
+//!
+//! Semantics mirror `python/compile/bptt.py::_forward` exactly (full —
+//! not diagonal — cells; gate orders fc: none, lstm: [i, f, g, o],
+//! gru: [z, r, n]). The per-step work is fused into batched GEMMs through
+//! the tiled [`Matrix::matmul`], Appleyard-style:
+//!
+//! * the input projections of *all* timesteps are one (B·Q, S)×(S, G·M)
+//!   GEMM up front (`x @ wx`),
+//! * each timestep is then one (B, M)×(M, G·M) GEMM for the recurrent
+//!   term (`h @ wh`) plus elementwise gate math over the batch.
+//!
+//! This is the artifact-free predict path: `BpttTrainer::predict` falls
+//! back to it when no `bptt_predict` executable is in the manifest (e.g.
+//! offline builds), and it doubles as the CPU oracle for the AOT graph.
+
+use crate::data::window::Windowed;
+use crate::elm::activation::{sigmoid, tanh};
+use crate::elm::arch::block_ranges;
+use crate::linalg::Matrix;
+
+use super::driver::BpttModel;
+use super::init::BpttArch;
+
+/// Rows per forward chunk (bounds the lifted-projection buffer).
+const CHUNK: usize = 256;
+
+/// One-step-ahead predictions for every row of `data`.
+pub fn forward_cpu(model: &BpttModel, data: &Windowed) -> Vec<f64> {
+    let mut out = Vec::with_capacity(data.n);
+    for (lo, hi) in block_ranges(data.n, CHUNK) {
+        forward_chunk(model, data, lo, hi, &mut out);
+    }
+    out
+}
+
+fn forward_chunk(model: &BpttModel, data: &Windowed, lo: usize, hi: usize, out: &mut Vec<f64>) {
+    let (s, q, m) = (model.s, model.q, model.m);
+    let g = model.arch.gates();
+    let gm = g * m;
+    let b_rows = hi - lo;
+    let wx = Matrix::from_f32(s, gm, &model.params[0]);
+    let wh = Matrix::from_f32(m, gm, &model.params[1]);
+    let bias = &model.params[2];
+    let wo = &model.params[3];
+    let bo = model.params[4][0] as f64;
+
+    // lift every timestep's input projection into one GEMM: (B·Q, S) @ (S, G·M)
+    let mut xb = Matrix::zeros(b_rows * q, s);
+    for i in 0..b_rows {
+        let xi = data.x_row(lo + i);
+        for si in 0..s {
+            for t in 0..q {
+                xb[(i * q + t, si)] = xi[si * q + t] as f64;
+            }
+        }
+    }
+    let zx_all = xb.matmul(&wx); // (B·Q, G·M)
+
+    let mut h = Matrix::zeros(b_rows, m);
+    let mut c = Matrix::zeros(b_rows, m); // lstm cell state (unused otherwise)
+    for t in 0..q {
+        let zh = h.matmul(&wh); // (B, G·M): the per-step batched GEMM
+        for i in 0..b_rows {
+            let zx = zx_all.row(i * q + t);
+            let zh_row = zh.row(i);
+            match model.arch {
+                BpttArch::Fc => {
+                    for j in 0..m {
+                        let pre = (zx[j] + zh_row[j]) as f32 + bias[j];
+                        h[(i, j)] = tanh(pre) as f64;
+                    }
+                }
+                BpttArch::Lstm => {
+                    for j in 0..m {
+                        let z = |gi: usize| {
+                            (zx[gi * m + j] + zh_row[gi * m + j]) as f32 + bias[gi * m + j]
+                        };
+                        let ig = sigmoid(z(0));
+                        let fg = sigmoid(z(1));
+                        let gg = tanh(z(2));
+                        let og = sigmoid(z(3));
+                        let cn = fg as f64 * c[(i, j)] + (ig * gg) as f64;
+                        c[(i, j)] = cn;
+                        h[(i, j)] = og as f64 * (cn as f32).tanh() as f64;
+                    }
+                }
+                BpttArch::Gru => {
+                    for j in 0..m {
+                        // python keeps zx (with bias) and zh separate: the
+                        // candidate gate multiplies zh by r before adding
+                        let zxg = |gi: usize| zx[gi * m + j] as f32 + bias[gi * m + j];
+                        let zhg = |gi: usize| zh_row[gi * m + j] as f32;
+                        let zg = sigmoid(zxg(0) + zhg(0));
+                        let rg = sigmoid(zxg(1) + zhg(1));
+                        let ng = tanh(zxg(2) + rg * zhg(2));
+                        let prev = h[(i, j)] as f32;
+                        h[(i, j)] = ((1.0 - zg) * prev + zg * ng) as f64;
+                    }
+                }
+            }
+        }
+    }
+    for i in 0..b_rows {
+        let mut yhat = bo;
+        let hrow = h.row(i);
+        for j in 0..m {
+            yhat += hrow[j] * wo[j] as f64;
+        }
+        out.push(yhat);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bptt::init::{bptt_param_shapes, init_params};
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize, q: usize, seed: u64) -> Windowed {
+        let mut rng = Rng::new(seed);
+        let series: Vec<f64> = (0..n + q).map(|_| rng.range(0.0, 1.0)).collect();
+        Windowed::from_series(&series, q).unwrap()
+    }
+
+    fn model(arch: BpttArch, s: usize, q: usize, m: usize, seed: u64) -> BpttModel {
+        BpttModel { arch, s, q, m, params: init_params(arch, s, m, seed) }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let w = toy(300, 6, 1);
+        for arch in [BpttArch::Fc, BpttArch::Lstm, BpttArch::Gru] {
+            let mdl = model(arch, w.s, w.q, 8, 2);
+            let y = forward_cpu(&mdl, &w);
+            assert_eq!(y.len(), w.n);
+            assert!(y.iter().all(|v| v.is_finite()), "{}", arch.name());
+        }
+    }
+
+    #[test]
+    fn fc_zero_recurrence_is_closed_form() {
+        // wh = 0 ⇒ h(Q) = tanh(x_{Q-1} @ wx + b); with zero bias init the
+        // prediction is wo · tanh(x_last · wx)
+        let (s, q, m) = (1usize, 4usize, 3usize);
+        let w = toy(50, q, 3);
+        let mut mdl = model(BpttArch::Fc, s, q, m, 4);
+        mdl.params[1].iter_mut().for_each(|v| *v = 0.0); // wh
+        let y = forward_cpu(&mdl, &w);
+        let wx = &mdl.params[0];
+        let wo = &mdl.params[3];
+        for i in 0..w.n {
+            let xl = w.x_row(i)[q - 1];
+            let mut want = mdl.params[4][0] as f64;
+            for j in 0..m {
+                want += ((xl * wx[j]).tanh() * wo[j]) as f64;
+            }
+            assert!((y[i] - want).abs() < 1e-5, "row {i}: {} vs {want}", y[i]);
+        }
+    }
+
+    #[test]
+    fn chunking_does_not_change_results() {
+        // n > CHUNK exercises the chunk seam; the recurrence is per-sample,
+        // so rows on BOTH sides of the boundary must match a single-row
+        // recomputation bit for bit (catches state leaking across chunks)
+        let w = toy(CHUNK + 37, 5, 5);
+        let mdl = model(BpttArch::Gru, w.s, w.q, 6, 6);
+        let full = forward_cpu(&mdl, &w);
+        for i in [0usize, 10, CHUNK - 1, CHUNK, CHUNK + 5, CHUNK + 36] {
+            let one = forward_cpu(&mdl, &w.slice(i, i + 1));
+            assert_eq!(full[i], one[0], "row {i}");
+        }
+    }
+
+    #[test]
+    fn param_shapes_consistent_with_forward() {
+        for arch in [BpttArch::Fc, BpttArch::Lstm, BpttArch::Gru] {
+            let shapes = bptt_param_shapes(arch, 2, 5);
+            let params = init_params(arch, 2, 5, 1);
+            for ((_, shape), buf) in shapes.iter().zip(&params) {
+                assert_eq!(shape.iter().product::<usize>(), buf.len());
+            }
+        }
+    }
+}

@@ -8,7 +8,9 @@
 //! Matching the paper's setup: 10 epochs, batch 64, MSE loss, Adam.
 
 pub mod driver;
+pub mod forward;
 pub mod init;
 
 pub use driver::{BpttModel, BpttTrainer, LossPoint, TrainLog};
+pub use forward::forward_cpu;
 pub use init::{bptt_param_shapes, init_params, BpttArch};

@@ -221,7 +221,7 @@ mod tests {
         let mut tsqr = TsqrAccumulator::new(m);
         let hmat = Matrix::from_f32(n, m, &h);
         let yv: Vec<f64> = y.iter().map(|&v| v as f64).collect();
-        tsqr.push_block(&hmat, &yv).unwrap();
+        tsqr.push_block(hmat, &yv).unwrap();
 
         let a = gram.solve().unwrap();
         let b = tsqr.solve().unwrap();

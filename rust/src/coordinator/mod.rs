@@ -10,7 +10,9 @@
 //!   blocks via TSQR) into the normal-equation state and solves for β.
 //! * [`pipeline`] — `PrElmTrainer`, the parallel counterpart of
 //!   `elm::SrElmModel::train`: block producer → engine pool → accumulator,
-//!   with the Fig-6 phase breakdown recorded per run.
+//!   with the Fig-6 phase breakdown recorded per run; and `CpuElmTrainer`,
+//!   the same pipeline with the batched `arch::h_block` kernels on worker
+//!   threads instead of PJRT (offline / no-artifact deployments).
 //! * [`job`] — experiment descriptions (arch × dataset × M × variant) used
 //!   by the report emitters and benches.
 
@@ -22,4 +24,4 @@ pub mod pipeline;
 pub use accumulator::{GramAccumulator, SolveStrategy};
 pub use batcher::{Block, RowBlockBatcher};
 pub use job::TrainJob;
-pub use pipeline::{PrElmTrainer, TrainBreakdown};
+pub use pipeline::{CpuElmTrainer, PrElmTrainer, TrainBreakdown};

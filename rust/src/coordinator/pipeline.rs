@@ -22,13 +22,17 @@ use std::path::Path;
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::accumulator::GramAccumulator;
+use crate::coordinator::accumulator::{GramAccumulator, SolveStrategy};
 use crate::coordinator::batcher::{Block, RowBlockBatcher};
 use crate::data::window::Windowed;
+use crate::elm::arch::{block_ranges, h_block_range};
 use crate::elm::trainer::{shift_history, SrElmModel};
-use crate::elm::{Arch, ElmParams};
+use crate::elm::{Arch, ElmParams, TrainOptions};
+use crate::linalg::solve::{lstsq_ridge_from_parts, upper_triangular_deficient};
+use crate::linalg::tsqr::par_map;
+use crate::linalg::{Matrix, TsqrAccumulator};
 use crate::runtime::{ArtifactMeta, Buf, EnginePool, Manifest};
 
 /// Fig-6 style phase breakdown of one training run (seconds).
@@ -287,6 +291,259 @@ impl PrElmTrainer {
     }
 }
 
+/// CPU-native parallel ELM trainer: the same block → accumulate → solve
+/// pipeline as [`PrElmTrainer`], with the H blocks produced by the batched
+/// [`h_block`] kernels on scoped worker threads instead of PJRT artifacts.
+/// This is the offline twin of the coordinator, and the path that
+/// exercises the blocked linalg substrate end to end.
+///
+/// # Determinism (§7.3)
+///
+/// Block boundaries are fixed by `block_rows` alone, per-block work is
+/// independent, and both reductions are worker-count invariant — Gram
+/// partials fold in block order, the TSQR strategy reduces over a fixed
+/// pairwise tree — so β is bit-identical for any `workers`.
+pub struct CpuElmTrainer {
+    pub workers: usize,
+    /// samples per H block (fixed: part of the deterministic result)
+    pub block_rows: usize,
+    pub strategy: SolveStrategy,
+    /// ridge λ for the Gram strategy (NARMAX raises it to its floor)
+    pub lambda: f64,
+}
+
+impl CpuElmTrainer {
+    pub fn new(workers: usize) -> CpuElmTrainer {
+        CpuElmTrainer {
+            workers: workers.max(1),
+            block_rows: 256,
+            strategy: SolveStrategy::Tsqr,
+            lambda: 1e-6,
+        }
+    }
+
+    /// Parallel CPU training; returns the trained model and the phase
+    /// breakdown (`exec_s` = H-block computation, `solve_s` = reduction +
+    /// β solve).
+    pub fn train(
+        &self,
+        archk: Arch,
+        data: &Windowed,
+        m: usize,
+        seed: u64,
+    ) -> Result<(SrElmModel, TrainBreakdown)> {
+        let t_all = Instant::now();
+        let t0 = Instant::now();
+        let params = ElmParams::init(archk, data.s, data.q, m, seed);
+        let mut bd =
+            TrainBreakdown { init_s: t0.elapsed().as_secs_f64(), ..Default::default() };
+
+        let beta = if archk == Arch::Narmax {
+            // two-pass ELS: pass 1 keeps its H blocks so the residual
+            // sweep is an H₁·β₁ matvec, not a full H recomputation
+            let lambda = self.lambda.max(TrainOptions::NARMAX_RIDGE);
+            let yhat = self.narmax_pass1(&params, data, lambda, &mut bd)?;
+            let resid: Vec<f32> =
+                data.y.iter().zip(&yhat).map(|(&y, &p)| y - p as f32).collect();
+            let ehist = shift_history(&resid, data.q);
+            self.solve_pass(&params, data, Some(&ehist), &mut bd)?
+        } else {
+            self.solve_pass(&params, data, None, &mut bd)?
+        };
+        bd.total_s = t_all.elapsed().as_secs_f64();
+        Ok((SrElmModel { params, beta }, bd))
+    }
+
+    /// NARMAX pass 1 (e ≡ 0): parallel H blocks → in-order Gram fold →
+    /// ridge β₁ → in-order H·β₁ predictions, all from one set of blocks.
+    fn narmax_pass1(
+        &self,
+        params: &ElmParams,
+        data: &Windowed,
+        lambda: f64,
+        bd: &mut TrainBreakdown,
+    ) -> Result<Vec<f64>> {
+        let m = params.m;
+        let ranges = block_ranges(data.n, self.block_rows);
+        bd.blocks += ranges.len();
+        let t0 = Instant::now();
+        let blocks = par_map(ranges, self.workers, |(lo, hi)| {
+            Ok(compute_h_block(params, data, None, lo, hi))
+        })?;
+        let idx: Vec<usize> = (0..blocks.len()).collect();
+        let partials = par_map(idx, self.workers, |i| {
+            let (h, y) = &blocks[i];
+            Ok((h.gram(), h.t_matvec(y), h.rows))
+        })?;
+        bd.exec_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let (g, c) = fold_partials(&partials, m)?;
+        let beta1 = lstsq_ridge_from_parts(&g, &c, lambda)?;
+        let mut yhat = Vec::with_capacity(data.n);
+        for (h, _) in &blocks {
+            yhat.extend(h.matvec(&beta1));
+        }
+        bd.solve_s += t1.elapsed().as_secs_f64();
+        Ok(yhat)
+    }
+
+    /// One streaming pass over the dataset → β.
+    fn solve_pass(
+        &self,
+        params: &ElmParams,
+        data: &Windowed,
+        ehist: Option<&[f32]>,
+        bd: &mut TrainBreakdown,
+    ) -> Result<Vec<f64>> {
+        let m = params.m;
+        let ranges = block_ranges(data.n, self.block_rows);
+        bd.blocks += ranges.len();
+        // NARMAX always takes the ridge path (see TrainOptions::NARMAX_RIDGE)
+        let use_gram =
+            self.strategy == SolveStrategy::Gram || params.arch == Arch::Narmax;
+
+        let lambda = if params.arch == Arch::Narmax {
+            self.lambda.max(TrainOptions::NARMAX_RIDGE)
+        } else {
+            self.lambda
+        };
+
+        if use_gram {
+            return self.gram_solve(params, data, ehist, lambda, bd);
+        }
+        let t0 = Instant::now();
+        let blocks = par_map(ranges, self.workers, |(lo, hi)| {
+            Ok(compute_h_block(params, data, ehist, lo, hi))
+        })?;
+        bd.exec_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let acc = TsqrAccumulator::reduce(m, blocks, self.workers)?;
+        if acc.rows_seen() < m {
+            bail!("underdetermined: {} rows < M = {m}", acc.rows_seen());
+        }
+        // same rank guard as lstsq_qr: collapsed random features make R's
+        // diagonal underflow; fall back to the ridge normal equations
+        // instead of amplifying noise. The fallback recomputes H — a
+        // deliberate trade: precomputing Gram partials "just in case"
+        // would tax every healthy run for a rare degenerate one.
+        let deficient = acc.r_factor().map_or(true, upper_triangular_deficient);
+        if deficient {
+            bd.solve_s += t1.elapsed().as_secs_f64();
+            return self.gram_solve(params, data, ehist, lambda.max(1e-8), bd);
+        }
+        match acc.solve() {
+            Ok(beta) => {
+                bd.solve_s += t1.elapsed().as_secs_f64();
+                Ok(beta)
+            }
+            Err(_) => {
+                bd.solve_s += t1.elapsed().as_secs_f64();
+                self.gram_solve(params, data, ehist, lambda.max(1e-8), bd)
+            }
+        }
+    }
+
+    /// Parallel Gram pass: per-block (HᵀH, HᵀY) partials computed on
+    /// worker threads (exec_s), folded in block order and ridge-solved
+    /// (solve_s). Also the TSQR strategy's rank-deficiency fallback.
+    fn gram_solve(
+        &self,
+        params: &ElmParams,
+        data: &Windowed,
+        ehist: Option<&[f32]>,
+        lambda: f64,
+        bd: &mut TrainBreakdown,
+    ) -> Result<Vec<f64>> {
+        let m = params.m;
+        let ranges = block_ranges(data.n, self.block_rows);
+        let t0 = Instant::now();
+        let partials = par_map(ranges, self.workers, |(lo, hi)| {
+            let (h, y) = compute_h_block(params, data, ehist, lo, hi);
+            let g = h.gram();
+            let c = h.t_matvec(&y);
+            Ok((g, c, h.rows))
+        })?;
+        bd.exec_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let (g, c) = fold_partials(&partials, m)?;
+        let beta = lstsq_ridge_from_parts(&g, &c, lambda)?;
+        bd.solve_s += t1.elapsed().as_secs_f64();
+        Ok(beta)
+    }
+
+    /// Parallel block predictions: H block × β per chunk, in order.
+    fn predict_blocks(
+        &self,
+        model: &SrElmModel,
+        data: &Windowed,
+        ehist: Option<&[f32]>,
+    ) -> Result<Vec<f64>> {
+        let ranges = block_ranges(data.n, self.block_rows);
+        let parts = par_map(ranges, self.workers, |(lo, hi)| {
+            let (h, _y) = compute_h_block(&model.params, data, ehist, lo, hi);
+            Ok(h.matvec(&model.beta))
+        })?;
+        Ok(parts.concat())
+    }
+
+    /// One-step-ahead predictions; NARMAX refines once with the first
+    /// pass's residuals (parallel ELS, mirroring `PrElmTrainer::predict`).
+    pub fn predict(&self, model: &SrElmModel, data: &Windowed) -> Result<Vec<f64>> {
+        if model.params.arch == Arch::Narmax {
+            let y0 = self.predict_blocks(model, data, None)?;
+            let resid: Vec<f32> =
+                data.y.iter().zip(&y0).map(|(&y, &p)| y - p as f32).collect();
+            let ehist = shift_history(&resid, data.q);
+            return self.predict_blocks(model, data, Some(&ehist));
+        }
+        self.predict_blocks(model, data, None)
+    }
+
+    /// Test RMSE through the parallel CPU predict path.
+    pub fn rmse(&self, model: &SrElmModel, data: &Windowed) -> Result<f64> {
+        let pred = self.predict(model, data)?;
+        let truth: Vec<f64> = data.y.iter().map(|&v| v as f64).collect();
+        Ok(crate::data::stats::rmse(&pred, &truth))
+    }
+}
+
+/// In-block-order fold of (HᵀH, HᵀY, rows) partials — the fold order is
+/// fixed by block index, never by worker schedule (§7.3 determinism).
+fn fold_partials(
+    partials: &[(Matrix, Vec<f64>, usize)],
+    m: usize,
+) -> Result<(Matrix, Vec<f64>)> {
+    let mut g = Matrix::zeros(m, m);
+    let mut c = vec![0.0f64; m];
+    let mut rows = 0usize;
+    for (gl, cl, rl) in partials {
+        for (gv, lv) in g.data_mut().iter_mut().zip(gl.data()) {
+            *gv += lv;
+        }
+        for (cv, lv) in c.iter_mut().zip(cl) {
+            *cv += lv;
+        }
+        rows += rl;
+    }
+    if rows < m {
+        bail!("underdetermined: {rows} rows < M = {m}");
+    }
+    Ok((g, c))
+}
+
+/// One batched H block + widened targets for rows [lo, hi).
+fn compute_h_block(
+    params: &ElmParams,
+    data: &Windowed,
+    ehist: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+) -> (Matrix, Vec<f64>) {
+    let h = h_block_range(params, data, ehist, lo, hi);
+    let y = data.y[lo..hi].iter().map(|&v| v as f64).collect();
+    (h, y)
+}
+
 /// Inputs for the gram graph: x, [yhist, ehist], params..., y, mask.
 fn assemble_gram_inputs(
     meta: &ArtifactMeta,
@@ -330,4 +587,112 @@ fn assemble_h_inputs(
         inputs.push(buf);
     }
     Ok(inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::{SrElmModel, TrainOptions, ALL_ARCHS};
+    use crate::util::rng::Rng;
+
+    fn toy_windowed(n: usize, q: usize, seed: u64) -> Windowed {
+        let mut rng = Rng::new(seed);
+        let mut y = vec![0.3f64, 0.45];
+        for t in 2..n + q {
+            let v = 0.5 * y[t - 1] + 0.22 * y[t - 2]
+                + 0.12 * (t as f64 * 0.17).sin()
+                + 0.05 * rng.normal();
+            y.push(v);
+        }
+        let lo = y.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = y.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let z: Vec<f64> = y.iter().map(|v| (v - lo) / (hi - lo)).collect();
+        Windowed::from_series(&z, q).unwrap()
+    }
+
+    #[test]
+    fn cpu_trainer_matches_sequential_exact_ls() {
+        // TSQR strategy is exact least squares: must agree with the
+        // sequential QR solve on the same H (up to factorization rounding)
+        let w = toy_windowed(500, 6, 1);
+        for archk in [Arch::Elman, Arch::Lstm, Arch::Gru, Arch::Fc, Arch::Jordan] {
+            let seq = SrElmModel::train(archk, &w, &TrainOptions::new(12, 7)).unwrap();
+            let cpu = CpuElmTrainer::new(4);
+            let (par, bd) = cpu.train(archk, &w, 12, 7).unwrap();
+            assert!(bd.blocks > 0);
+            let worst = seq
+                .beta
+                .iter()
+                .zip(&par.beta)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(worst < 1e-6, "{}: |seq - cpu| = {worst}", archk.name());
+        }
+    }
+
+    #[test]
+    fn cpu_trainer_bit_identical_across_worker_counts() {
+        let w = toy_windowed(700, 5, 2);
+        for strategy in [SolveStrategy::Tsqr, SolveStrategy::Gram] {
+            for archk in ALL_ARCHS {
+                let mut base: Option<Vec<f64>> = None;
+                for workers in [1usize, 2, 4, 8] {
+                    let mut t = CpuElmTrainer::new(workers);
+                    t.strategy = strategy;
+                    t.block_rows = 64;
+                    let (model, _) = t.train(archk, &w, 10, 3).unwrap();
+                    match &base {
+                        None => base = Some(model.beta),
+                        Some(b) => assert_eq!(
+                            b, &model.beta,
+                            "{}/{strategy:?}: β differs at workers={workers}",
+                            archk.name()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_trainer_narmax_two_pass_is_finite_and_learns() {
+        let w = toy_windowed(600, 6, 3);
+        let (train, test) = w.split(0.8);
+        let cpu = CpuElmTrainer::new(2);
+        let (model, _) = cpu.train(Arch::Narmax, &train, 12, 5).unwrap();
+        assert!(model.beta.iter().all(|b| b.is_finite()));
+        let ymean = test.y.iter().map(|&v| v as f64).sum::<f64>() / test.n as f64;
+        let base = (test
+            .y
+            .iter()
+            .map(|&v| (v as f64 - ymean).powi(2))
+            .sum::<f64>()
+            / test.n as f64)
+            .sqrt();
+        let rmse = cpu.rmse(&model, &test).unwrap();
+        assert!(rmse < base, "narmax rmse {rmse} vs mean baseline {base}");
+    }
+
+    #[test]
+    fn cpu_trainer_rejects_underdetermined() {
+        let w = toy_windowed(30, 4, 4);
+        let mut t = CpuElmTrainer::new(2);
+        t.strategy = SolveStrategy::Gram;
+        assert!(t.train(Arch::Elman, &w, 64, 1).is_err());
+    }
+
+    #[test]
+    fn block_ranges_tile_exactly() {
+        for (n, rows) in [(0usize, 10usize), (5, 10), (10, 10), (101, 25)] {
+            let r = block_ranges(n, rows);
+            let total: usize = r.iter().map(|(lo, hi)| hi - lo).sum();
+            assert_eq!(total, n);
+            let mut pos = 0;
+            for (lo, hi) in r {
+                assert_eq!(lo, pos);
+                assert!(hi > lo);
+                pos = hi;
+            }
+        }
+    }
 }

@@ -2,8 +2,9 @@
 
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
+use crate::linalg::Matrix;
 
-use super::wx_at;
+use super::{lift_wx, wx_at, SampleBlock};
 
 /// One sample: h_j(t) = g(w_j·x(t) + b_j + Σ_{k=1..t} α[j,k] h_j(t−k)).
 pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
@@ -27,6 +28,41 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
         }
         hist[..m].copy_from_slice(out);
     }
+}
+
+/// Whole row block: the input projections come from one block-wide GEMM
+/// (`lift_wx`); the diagonal recurrence then runs per sample on the
+/// precomputed values.
+pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    let (q, m) = (p.q, p.m);
+    let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
+    let b = p.buf("b");
+    let alpha = p.buf("alpha"); // (m, q): alpha[j*q + (k-1)]
+    let mut h = Matrix::zeros(blk.rows, m);
+    let mut hist = vec![0f32; q * m]; // hist[(k-1)*m + j] = h_j(t-k)
+    let mut cur = vec![0f32; m];
+    for i in 0..blk.rows {
+        hist.iter_mut().for_each(|v| *v = 0.0);
+        for t in 0..q {
+            let wrow = wx.row(i * q + t);
+            for j in 0..m {
+                let mut acc = wrow[j] as f32 + b[j];
+                for k in 1..=t.min(q) {
+                    acc += alpha[j * q + (k - 1)] * hist[(k - 1) * m + j];
+                }
+                cur[j] = tanh(acc);
+            }
+            for k in (1..q).rev() {
+                let (lo, hi) = hist.split_at_mut(k * m);
+                hi[..m].copy_from_slice(&lo[(k - 1) * m..k * m]);
+            }
+            hist[..m].copy_from_slice(&cur);
+        }
+        for j in 0..m {
+            h[(i, j)] = cur[j] as f64;
+        }
+    }
+    h
 }
 
 #[cfg(test)]

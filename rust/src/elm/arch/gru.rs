@@ -3,6 +3,9 @@
 
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::params::ElmParams;
+use crate::linalg::Matrix;
+
+use super::{lift_wx, SampleBlock};
 
 /// One sample: runs the 3-gate diagonal cell over the window.
 pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
@@ -27,6 +30,38 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
         }
         f_prev.copy_from_slice(out);
     }
+}
+
+/// Whole row block: one (rows·q) × 3m GEMM lifts every gate's input
+/// projection (`w3` is row-major (s, 3m)); the diagonal cell then runs per
+/// sample on the precomputed values.
+pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    let (q, m) = (p.q, p.m);
+    let wx3 = lift_wx(p.buf("w3"), 3, blk, p.s, q, m);
+    let u3 = p.buf("u3"); // (3, m)
+    let b3 = p.buf("b3"); // (3, m)
+    let mut h = Matrix::zeros(blk.rows, m);
+    let mut f_prev = vec![0f32; m];
+    let mut cur = vec![0f32; m];
+    for i in 0..blk.rows {
+        f_prev.iter_mut().for_each(|v| *v = 0.0);
+        for t in 0..q {
+            let wrow = wx3.row(i * q + t);
+            for j in 0..m {
+                let wx = |g: usize| wrow[g * m + j] as f32;
+                let z = sigmoid(wx(0) + u3[j] * f_prev[j] + b3[j]);
+                let r = sigmoid(wx(1) + u3[m + j] * f_prev[j] + b3[m + j]);
+                let cand =
+                    tanh(wx(2) + u3[2 * m + j] * (r * f_prev[j]) + b3[2 * m + j]);
+                cur[j] = (1.0 - z) * f_prev[j] + z * cand;
+            }
+            f_prev.copy_from_slice(&cur);
+        }
+        for j in 0..m {
+            h[(i, j)] = cur[j] as f64;
+        }
+    }
+    h
 }
 
 #[cfg(test)]

@@ -3,8 +3,9 @@
 
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
+use crate::linalg::Matrix;
 
-use super::wx_at;
+use super::{history_matrix, transposed_param, wx_at, SampleBlock};
 
 /// One sample: h_j = g(w_j·x(Q) + b_j + Σ_k α[j,k] y(t−k)).
 pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], out: &mut [f32]) {
@@ -20,6 +21,34 @@ pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], out: &mut [f32]) {
         }
         out[j] = tanh(acc);
     }
+}
+
+/// Whole row block. Jordan has no hidden-state recurrence (the feedback is
+/// the teacher-forced target history), so the entire block is two GEMMs —
+/// X_last·W + Yhist·αᵀ — plus bias and elementwise tanh.
+pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let rows = blk.rows;
+    // x at t = Q−1 only (Eq 7 reads the window head)
+    let mut xl = Matrix::zeros(rows, s);
+    for i in 0..rows {
+        let xi = blk.x_row(i, s, q);
+        for si in 0..s {
+            xl[(i, si)] = xi[si * q + (q - 1)] as f64;
+        }
+    }
+    let pre = xl.matmul(&Matrix::from_f32(s, m, p.buf("w")));
+    let fb = history_matrix(blk.yhist, rows, q)
+        .matmul(&transposed_param(p.buf("alpha"), m, q));
+    let b = p.buf("b");
+    let mut h = Matrix::zeros(rows, m);
+    for i in 0..rows {
+        for j in 0..m {
+            let acc = (pre[(i, j)] + fb[(i, j)]) as f32 + b[j];
+            h[(i, j)] = tanh(acc) as f64;
+        }
+    }
+    h
 }
 
 #[cfg(test)]

@@ -4,6 +4,9 @@
 
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::params::ElmParams;
+use crate::linalg::Matrix;
+
+use super::{lift_wx, SampleBlock};
 
 /// One sample: runs the 4-gate diagonal cell over the window.
 pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
@@ -33,6 +36,45 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
         }
         f_prev.copy_from_slice(out);
     }
+}
+
+/// Whole row block: all four gate input projections for every sample and
+/// timestep come from one (rows·q) × 4m GEMM — `w4`'s (s, 4, m) layout is
+/// row-major (s, 4m), so it feeds the lift unchanged — then the diagonal
+/// cell runs per sample on the precomputed pre-activations.
+pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    let (q, m) = (p.q, p.m);
+    let wx4 = lift_wx(p.buf("w4"), 4, blk, p.s, q, m);
+    let u4 = p.buf("u4"); // (4, m)
+    let b4 = p.buf("b4"); // (4, m)
+    let mut h = Matrix::zeros(blk.rows, m);
+    let mut f_prev = vec![0f32; m];
+    let mut c_prev = vec![0f32; m];
+    let mut cur = vec![0f32; m];
+    for i in 0..blk.rows {
+        f_prev.iter_mut().for_each(|v| *v = 0.0);
+        c_prev.iter_mut().for_each(|v| *v = 0.0);
+        for t in 0..q {
+            let wrow = wx4.row(i * q + t);
+            for j in 0..m {
+                let pre = |g: usize| {
+                    u4[g * m + j] * f_prev[j] + b4[g * m + j] + wrow[g * m + j] as f32
+                };
+                let o = sigmoid(pre(0));
+                let c_tilde = tanh(pre(1));
+                let lam = sigmoid(pre(2));
+                let inp = sigmoid(pre(3));
+                let c = lam * c_prev[j] + inp * c_tilde;
+                c_prev[j] = c;
+                cur[j] = o * tanh(c);
+            }
+            f_prev.copy_from_slice(&cur);
+        }
+        for j in 0..m {
+            h[(i, j)] = cur[j] as f64;
+        }
+    }
+    h
 }
 
 #[cfg(test)]

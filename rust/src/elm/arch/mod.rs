@@ -1,6 +1,14 @@
-//! The six H recurrences (Eq 6-11) as plain sequential scalar code — the
-//! S-R-ELM baseline. `h_row` computes one sample's H(Q) row; the trainer
-//! loops it over the dataset exactly like Algorithm 1.
+//! The six H recurrences (Eq 6-11). Two entry points per architecture:
+//!
+//! * `h_row` — one sample, plain sequential scalar code: the S-R-ELM
+//!   baseline, exactly Algorithm 1.
+//! * `h_block` — a whole row block at once. The input projections (the
+//!   `wx_at` dots of Alg 2 line 6) are *lifted out of the recurrence* into
+//!   one tiled GEMM over the entire block (`lift_wx`); only the recurrent
+//!   part still walks the window sample by sample. Jordan and NARMAX have
+//!   no hidden-state recurrence, so their whole H block is pure GEMM +
+//!   elementwise tanh. This is the Appleyard-style batched-GEMM fusion the
+//!   paper's speedups rest on, on the CPU side.
 //!
 //! Input contract per sample (matching `data::Windowed`):
 //! * `x`     — the lag window, row-major (S, Q): x[s*Q + t]
@@ -14,7 +22,132 @@ pub mod jordan;
 pub mod lstm;
 pub mod narmax;
 
+use crate::linalg::Matrix;
+
 use super::params::{Arch, ElmParams};
+
+/// A row block of samples in the `data::Windowed` layouts.
+pub struct SampleBlock<'a> {
+    pub rows: usize,
+    /// (rows, s, q) row-major
+    pub x: &'a [f32],
+    /// (rows, q)
+    pub yhist: &'a [f32],
+    /// (rows, q) — all zeros when the architecture ignores it
+    pub ehist: &'a [f32],
+}
+
+impl SampleBlock<'_> {
+    pub fn x_row(&self, i: usize, s: usize, q: usize) -> &[f32] {
+        &self.x[i * s * q..(i + 1) * s * q]
+    }
+}
+
+/// Dispatch: H for a whole row block, (rows × M) widened to f64.
+pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    debug_assert_eq!(blk.x.len(), blk.rows * p.s * p.q);
+    debug_assert_eq!(blk.yhist.len(), blk.rows * p.q);
+    debug_assert_eq!(blk.ehist.len(), blk.rows * p.q);
+    match p.arch {
+        Arch::Elman => elman::h_block(p, blk),
+        Arch::Jordan => jordan::h_block(p, blk),
+        Arch::Narmax => narmax::h_block(p, blk),
+        Arch::Fc => fc::h_block(p, blk),
+        Arch::Lstm => lstm::h_block(p, blk),
+        Arch::Gru => gru::h_block(p, blk),
+    }
+}
+
+/// Lift the input projections of a whole block into one GEMM:
+/// returns (rows·q) × (gates·m) with entry [(i·q + t), g·m + j] =
+/// Σ_si x[i, si, t] · w[si, g, j] — every `wx_at` dot of the block at once.
+/// (`w` is row-major (s, gates·m), which is exactly how the per-arch
+/// buffers `w`, `w3`, `w4` are laid out.)
+pub(crate) fn lift_wx(
+    w: &[f32],
+    gates: usize,
+    blk: &SampleBlock,
+    s: usize,
+    q: usize,
+    m: usize,
+) -> Matrix {
+    let gm = gates * m;
+    debug_assert_eq!(w.len(), s * gm);
+    let rows = blk.rows;
+    // Xb: (rows·q, s) — the lag windows transposed so timesteps are rows
+    let mut xb = Matrix::zeros(rows * q, s);
+    for i in 0..rows {
+        let xi = blk.x_row(i, s, q);
+        for si in 0..s {
+            for t in 0..q {
+                xb[(i * q + t, si)] = xi[si * q + t] as f64;
+            }
+        }
+    }
+    let wm = Matrix::from_f32(s, gm, w);
+    xb.matmul(&wm)
+}
+
+/// Fixed block tiling of [0, n) — the one block-boundary definition every
+/// batched-H driver (trainer, CPU pipeline, BPTT forward) shares, so the
+/// deterministic-result argument never depends on the call site.
+pub fn block_ranges(n: usize, rows: usize) -> Vec<(usize, usize)> {
+    let rows = rows.max(1);
+    let mut out = Vec::with_capacity(n.div_ceil(rows));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + rows).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Batched H for rows [lo, hi) of a windowed dataset; zeros are
+/// substituted when the error history is absent.
+pub fn h_block_range(
+    p: &ElmParams,
+    data: &crate::data::window::Windowed,
+    ehist: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+) -> Matrix {
+    let (s, q) = (data.s, data.q);
+    let rows = hi - lo;
+    let zeros;
+    let eh = match ehist {
+        Some(e) => &e[lo * q..hi * q],
+        None => {
+            zeros = vec![0f32; rows * q];
+            &zeros[..]
+        }
+    };
+    let blk = SampleBlock {
+        rows,
+        x: &data.x[lo * s * q..hi * s * q],
+        yhist: &data.yhist[lo * q..hi * q],
+        ehist: eh,
+    };
+    h_block(p, &blk)
+}
+
+/// Widen a (rows, q) f32 history slab to an f64 matrix (GEMM operand).
+pub(crate) fn history_matrix(h: &[f32], rows: usize, q: usize) -> Matrix {
+    Matrix::from_f32(rows, q, h)
+}
+
+/// Transposed f32 parameter buffer (rows_in, cols_in) → (cols_in, rows_in)
+/// f64 matrix — feedback weights enter the GEMM as their transpose.
+pub(crate) fn transposed_param(buf: &[f32], rows_in: usize, cols_in: usize) -> Matrix {
+    debug_assert_eq!(buf.len(), rows_in * cols_in);
+    let mut t = Matrix::zeros(cols_in, rows_in);
+    for r in 0..rows_in {
+        for c in 0..cols_in {
+            t[(c, r)] = buf[r * cols_in + c] as f64;
+        }
+    }
+    t
+}
 
 /// Dispatch: one sample's H row (length M).
 pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [f32]) {
@@ -60,6 +193,42 @@ mod tests {
             h_row(&p, &x, &yh, &eh, &mut out);
             for v in &out {
                 assert!(v.is_finite() && v.abs() <= 1.0 + 1e-5, "{arch:?}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn h_block_matches_h_row_all_archs() {
+        let (s, q, m) = (2, 5, 4);
+        let rows = 9;
+        let mut rng = Rng::new(77);
+        let x: Vec<f32> = rng.normals_f32(rows * s * q);
+        let yh: Vec<f32> =
+            rng.normals_f32(rows * q).iter().map(|v| v * 0.1).collect();
+        let eh: Vec<f32> =
+            rng.normals_f32(rows * q).iter().map(|v| v * 0.1).collect();
+        for arch in ALL_ARCHS {
+            let p = ElmParams::init(arch, s, q, m, 5);
+            let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+            let hb = h_block(&p, &blk);
+            assert_eq!((hb.rows, hb.cols), (rows, m));
+            let mut out = vec![0f32; m];
+            for i in 0..rows {
+                h_row(
+                    &p,
+                    &x[i * s * q..(i + 1) * s * q],
+                    &yh[i * q..(i + 1) * q],
+                    &eh[i * q..(i + 1) * q],
+                    &mut out,
+                );
+                for j in 0..m {
+                    assert!(
+                        (hb[(i, j)] - out[j] as f64).abs() < 1e-5,
+                        "{arch:?} row {i} col {j}: {} vs {}",
+                        hb[(i, j)],
+                        out[j]
+                    );
+                }
             }
         }
     }

@@ -3,8 +3,9 @@
 
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
+use crate::linalg::Matrix;
 
-use super::wx_at;
+use super::{history_matrix, transposed_param, wx_at, SampleBlock};
 
 /// One sample: h_j = g(w_j·x(Q) + b_j + Σ_l W'[j,l] y(t−l) + Σ_l W''[j,l] e(t−l)).
 pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [f32]) {
@@ -22,6 +23,35 @@ pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [
         }
         out[j] = tanh(acc);
     }
+}
+
+/// Whole row block. Like Jordan, NARMAX is recurrence-free given the two
+/// histories, so the block is three GEMMs — X_last·W + Yhist·W′ᵀ +
+/// Ehist·W″ᵀ — plus bias and tanh.
+pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    let (s, q, m) = (p.s, p.q, p.m);
+    let rows = blk.rows;
+    let mut xl = Matrix::zeros(rows, s);
+    for i in 0..rows {
+        let xi = blk.x_row(i, s, q);
+        for si in 0..s {
+            xl[(i, si)] = xi[si * q + (q - 1)] as f64;
+        }
+    }
+    let pre = xl.matmul(&Matrix::from_f32(s, m, p.buf("w")));
+    let fb_y = history_matrix(blk.yhist, rows, q)
+        .matmul(&transposed_param(p.buf("wp"), m, q));
+    let fb_e = history_matrix(blk.ehist, rows, q)
+        .matmul(&transposed_param(p.buf("wpp"), m, q));
+    let b = p.buf("b");
+    let mut h = Matrix::zeros(rows, m);
+    for i in 0..rows {
+        for j in 0..m {
+            let acc = (pre[(i, j)] + fb_y[(i, j)] + fb_e[(i, j)]) as f32 + b[j];
+            h[(i, j)] = tanh(acc) as f64;
+        }
+    }
+    h
 }
 
 #[cfg(test)]

@@ -2,10 +2,15 @@
 //!
 //! This is the paper's CPU baseline (adopted from Rizk & Awad 2019): build
 //! the hidden design matrix H by running each architecture's recurrence
-//! (Eq 6-11) sample by sample with plain scalar loops, then solve
-//! `min ‖Hβ − Y‖` by QR. Deliberately *not* vectorized — this is the
-//! comparator the parallel pipeline's speedups are measured against, so it
-//! mirrors what a straightforward NumPy-free sequential implementation does.
+//! (Eq 6-11), then solve `min ‖Hβ − Y‖` by QR. The trainer now computes H
+//! in row blocks through the batched `arch::h_block` kernels (input
+//! projections lifted into one GEMM per block), so the report tables that
+//! time `SrElmModel::train` as "sequential" measure against this batched
+//! single-threaded path — parallel-vs-sequential speedups are therefore
+//! *conservative* relative to the paper's plain scalar loop. That scalar
+//! loop survives as `arch::h_row` / `trainer::hidden_matrix_reference`:
+//! the oracle the batched path is tested against, and the seed baseline
+//! `benches/linalg.rs` quantifies the batching win against.
 //!
 //! The architecture recurrences live in [`arch`], one module each, and are
 //! bit-compatible (up to f32 rounding) with the Pallas kernels — the

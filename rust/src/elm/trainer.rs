@@ -1,7 +1,8 @@
-//! S-R-ELM (Algorithm 1): sequential train + predict.
+//! S-R-ELM (Algorithm 1): train + predict.
 //!
 //! 1. randomly assign W, α, b          (`ElmParams::init`)
-//! 2. compute H(Q) row by row          (Eq 6-11, `arch::h_row`)
+//! 2. compute H(Q) in row blocks       (Eq 6-11, batched `arch::h_block`;
+//!    `hidden_matrix_reference` keeps the row-by-row Algorithm-1 loop)
 //! 3. β = H†Y via QR back-substitution (`linalg::lstsq_qr`)
 //!
 //! NARMAX trains with two-pass extended least squares (DESIGN.md §2):
@@ -128,9 +129,33 @@ impl SrElmModel {
     }
 }
 
-/// H as an n×M f64 matrix (rows via the sequential recurrences).
-/// `ehist` overrides the error history (NARMAX); None → zeros.
+/// Row-block height for the batched H computation: big enough that the
+/// `lift_wx` GEMM amortizes, small enough that the lifted projections
+/// ((rows·q) × g·m f64) stay cache-resident.
+pub const H_BLOCK_ROWS: usize = 256;
+
+/// H as an n×M f64 matrix, computed block-wise through the batched
+/// [`arch::h_block`] kernels (the input projections of each block are one
+/// GEMM). `ehist` overrides the error history (NARMAX); None → zeros.
 pub fn hidden_matrix(params: &ElmParams, data: &Windowed, ehist: Option<&[f32]>) -> Matrix {
+    let mut h = Matrix::zeros(data.n, params.m);
+    for (lo, hi) in arch::block_ranges(data.n, H_BLOCK_ROWS) {
+        let hb = arch::h_block_range(params, data, ehist, lo, hi);
+        for r in 0..hi - lo {
+            h.row_mut(lo + r).copy_from_slice(hb.row(r));
+        }
+    }
+    h
+}
+
+/// Row-by-row H via the sequential scalar recurrences — the Algorithm-1
+/// baseline the batched path is validated against (and the paper's CPU
+/// comparator for the speedup tables).
+pub fn hidden_matrix_reference(
+    params: &ElmParams,
+    data: &Windowed,
+    ehist: Option<&[f32]>,
+) -> Matrix {
     let m = params.m;
     let mut h = Matrix::zeros(data.n, m);
     let zeros = vec![0f32; data.q];
@@ -252,6 +277,19 @@ mod tests {
         let r2 = m2.rmse(&w);
         // ELS with error feedback must not be (much) worse in-sample
         assert!(r2 < m1 * 1.5, "ELS r2={r2} vs pass1={m1}");
+    }
+
+    #[test]
+    fn batched_hidden_matrix_matches_reference() {
+        let series = toy_series(300, 9);
+        let w = Windowed::from_series(&series, 7).unwrap();
+        for archk in ALL_ARCHS {
+            let params = ElmParams::init(archk, w.s, w.q, 10, 3);
+            let batched = hidden_matrix(&params, &w, None);
+            let reference = hidden_matrix_reference(&params, &w, None);
+            let diff = batched.max_abs_diff(&reference);
+            assert!(diff < 1e-5, "{}: |batched - ref| = {diff}", archk.name());
+        }
     }
 
     #[test]

@@ -4,10 +4,13 @@
 
 use anyhow::{bail, Result};
 
-use super::matrix::Matrix;
+use super::matrix::{dot, Matrix};
 use super::solve::{solve_lower_triangular, solve_upper_triangular};
 
 /// Lower-triangular L with A = L Lᵀ. Fails on non-SPD input.
+///
+/// Row-major friendly: the k-sum over already-computed entries is a dot of
+/// two contiguous row prefixes (rows i and j), not a strided column walk.
 pub fn cholesky(a: &Matrix) -> Result<Matrix> {
     if a.rows != a.cols {
         bail!("cholesky requires a square matrix, got {}x{}", a.rows, a.cols);
@@ -16,10 +19,7 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix> {
     let mut l = Matrix::zeros(n, n);
     for i in 0..n {
         for j in 0..=i {
-            let mut s = a[(i, j)];
-            for k in 0..j {
-                s -= l[(i, k)] * l[(j, k)];
-            }
+            let s = a[(i, j)] - dot(&l.row(i)[..j], &l.row(j)[..j]);
             if i == j {
                 if s <= 0.0 {
                     bail!("matrix not positive definite at pivot {i} (s = {s:.3e})");

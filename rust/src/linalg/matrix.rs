@@ -1,7 +1,29 @@
-//! Row-major dense f64 matrix. Deliberately small: exactly the operations
-//! the ELM solve and the tests need, no general-purpose BLAS ambitions.
+//! Row-major dense f64 matrix with cache-blocked kernels for the two hot
+//! products of the ELM solve: `matmul` (GEMM) and `gram` (HᵀH).
 //! (f64 so the rust-side solves do not add float error on top of the f32
 //! artifacts; H blocks are widened on accumulation.)
+//!
+//! # Blocking scheme
+//!
+//! `matmul` packs one `KC × NC` (64×64) panel of B at a time into a
+//! contiguous scratch buffer, then streams rows of A through it with a
+//! 4-wide unrolled AXPY inner kernel — the packed panel (32 KiB) stays in
+//! L1 while A and the output are touched sequentially. `gram` uses a
+//! 4-row microkernel that rank-4-updates the upper triangle, quartering
+//! the G write traffic relative to the row-at-a-time loop.
+//!
+//! # Determinism
+//!
+//! Tile sizes are compile-time constants, so results are bit-identical
+//! run to run. `matmul` additionally accumulates each output element's
+//! k-terms in ascending order (outer `kk` tiles ascend, `p` ascends
+//! within a tile) and is therefore bit-identical to the unblocked ijk
+//! loop — a test asserts this. `gram` is deterministic but *not*
+//! bit-identical to the seed's row-at-a-time loop: the rank-4 microkernel
+//! sums four rows' products before the single add into G (tests bound the
+//! difference at 1e-12). There is deliberately *no* skip of zero
+//! multiplicands: `0 × ∞` must produce NaN, and a data-dependent branch
+//! mispredicts on dense data.
 
 use std::fmt;
 
@@ -70,6 +92,10 @@ impl Matrix {
         &self.data
     }
 
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
@@ -88,20 +114,32 @@ impl Matrix {
         t
     }
 
-    /// self * other  (naive ijk with row-major accumulation: fine at M<=128)
+    /// self * other — cache-blocked GEMM (packed B panel, 4-wide inner
+    /// kernel; see the module docs for the blocking/determinism story).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        if m == 0 || k == 0 || n == 0 {
+            return out;
+        }
+        let mut pack = vec![0.0f64; KC * NC];
+        for kk in (0..k).step_by(KC) {
+            let kb = KC.min(k - kk);
+            for jj in (0..n).step_by(NC) {
+                let jb = NC.min(n - jj);
+                // pack the B panel rows kk..kk+kb, cols jj..jj+jb
+                for p in 0..kb {
+                    let base = (kk + p) * n + jj;
+                    pack[p * jb..p * jb + jb]
+                        .copy_from_slice(&other.data[base..base + jb]);
                 }
-                let orow = other.row(k);
-                let out_row = out.row_mut(i);
-                for j in 0..other.cols {
-                    out_row[j] += a * orow[j];
+                for i in 0..m {
+                    let arow = &self.data[i * k + kk..i * k + kk + kb];
+                    let orow = &mut out.data[i * n + jj..i * n + jj + jb];
+                    for (p, &a) in arow.iter().enumerate() {
+                        axpy4(a, &pack[p * jb..p * jb + jb], orow);
+                    }
                 }
             }
         }
@@ -128,21 +166,37 @@ impl Matrix {
         out
     }
 
-    /// selfᵀ * self (Gram), exploiting symmetry.
+    /// selfᵀ * self (Gram), exploiting symmetry: rank-4 updates of the
+    /// upper triangle (4-row microkernel), mirrored at the end.
     pub fn gram(&self) -> Matrix {
         let n = self.cols;
         let mut g = Matrix::zeros(n, n);
-        for i in 0..self.rows {
-            let r = self.row(i);
+        let rows = self.rows;
+        let mut i = 0;
+        while i + 4 <= rows {
+            let r0 = &self.data[i * n..(i + 1) * n];
+            let r1 = &self.data[(i + 1) * n..(i + 2) * n];
+            let r2 = &self.data[(i + 2) * n..(i + 3) * n];
+            let r3 = &self.data[(i + 3) * n..(i + 4) * n];
             for a in 0..n {
-                let ra = r[a];
-                if ra == 0.0 {
-                    continue;
-                }
+                let (x0, x1, x2, x3) = (r0[a], r1[a], r2[a], r3[a]);
+                let grow = &mut g.data[a * n..(a + 1) * n];
                 for b in a..n {
-                    g[(a, b)] += ra * r[b];
+                    grow[b] += x0 * r0[b] + x1 * r1[b] + x2 * r2[b] + x3 * r3[b];
                 }
             }
+            i += 4;
+        }
+        while i < rows {
+            let r = &self.data[i * n..(i + 1) * n];
+            for a in 0..n {
+                let ra = r[a];
+                let grow = &mut g.data[a * n..(a + 1) * n];
+                for b in a..n {
+                    grow[b] += ra * r[b];
+                }
+            }
+            i += 1;
         }
         for a in 0..n {
             for b in 0..a {
@@ -150,6 +204,19 @@ impl Matrix {
             }
         }
         g
+    }
+
+    /// Copy of the rectangular block rows [r0, r1) × cols [c0, c1).
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let (rb, cb) = (r1 - r0, c1 - c0);
+        let mut out = Matrix::zeros(rb, cb);
+        for i in 0..rb {
+            let base = (r0 + i) * self.cols + c0;
+            out.data[i * cb..(i + 1) * cb]
+                .copy_from_slice(&self.data[base..base + cb]);
+        }
+        out
     }
 
     /// Vertical stack.
@@ -189,6 +256,31 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
+    }
+}
+
+/// GEMM panel depth (k-tile). 64×64 f64 = 32 KiB: one packed panel per L1.
+pub(crate) const KC: usize = 64;
+/// GEMM panel width (j-tile).
+pub(crate) const NC: usize = 64;
+
+/// out += a * x, 4-wide unrolled. Each out[j] sees exactly one add per
+/// call, so element-wise accumulation order is untouched by the unroll.
+#[inline]
+fn axpy4(a: f64, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        out[j] += a * x[j];
+        out[j + 1] += a * x[j + 1];
+        out[j + 2] += a * x[j + 2];
+        out[j + 3] += a * x[j + 3];
+        j += 4;
+    }
+    while j < n {
+        out[j] += a * x[j];
+        j += 1;
     }
 }
 
@@ -266,5 +358,59 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    /// Unblocked ijk reference (the seed implementation, minus the
+    /// zero-skip branch) for validating the tiled kernel.
+    fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                let v = a[(i, k)];
+                for j in 0..b.cols {
+                    out[(i, j)] += v * b[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_bit_identical_to_naive() {
+        // shapes straddling the 64-wide tile boundaries
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 5, 3), (64, 64, 64),
+            (65, 64, 63), (100, 129, 65), (3, 200, 130)]
+        {
+            let mut rng = Rng::new((m * 1000 + k * 10 + n) as u64);
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let blocked = a.matmul(&b);
+            let naive = matmul_naive(&a, &b);
+            assert_eq!(blocked, naive, "{m}x{k}x{n} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn matmul_propagates_non_finite() {
+        // 0 * inf must be NaN — the seed's zero-skip branch dropped it
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Matrix::from_vec(2, 1, vec![f64::INFINITY, 2.0]);
+        let c = a.matmul(&b);
+        assert!(c[(0, 0)].is_nan(), "0*inf skipped: {}", c[(0, 0)]);
+        let g = Matrix::from_vec(2, 2, vec![0.0, f64::INFINITY, 1.0, 1.0]).gram();
+        assert!(g.data().iter().any(|v| v.is_nan()), "gram dropped NaN");
+    }
+
+    #[test]
+    fn gram_tail_rows_covered() {
+        // rows % 4 != 0 exercises the scalar tail after the microkernel
+        for rows in [1usize, 2, 3, 4, 5, 7, 9] {
+            let mut rng = Rng::new(rows as u64 + 100);
+            let a = Matrix::random(rows, 6, &mut rng);
+            let g = a.gram();
+            let explicit = a.transpose().matmul(&a);
+            assert!(g.max_abs_diff(&explicit) < 1e-12, "rows={rows}");
+        }
     }
 }

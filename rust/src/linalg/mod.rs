@@ -1,15 +1,22 @@
-//! Dense linear algebra substrate for the ELM solve (β = H†Y, §4.2).
+//! Dense linear algebra substrate for the ELM solve (β = H†Y, §4.2) —
+//! blocked and multi-threaded on the hot paths.
 //!
 //! The paper replaces the explicit Moore-Penrose pseudo-inverse with a QR
 //! factorization + back-substitution. We provide:
 //!
-//! * [`qr`] — Householder QR (the reference factorization),
+//! * [`matrix`] — cache-tiled GEMM (packed 64×64 B panels, 4-wide inner
+//!   kernel) and a rank-4 Gram microkernel,
+//! * [`qr`] — blocked panel Householder QR in the compact-WY
+//!   representation (trailing updates as GEMMs); the unblocked scalar loop
+//!   survives as `householder_qr_reference`,
 //! * [`tsqr`] — communication-avoiding tall-skinny QR over row blocks (the
-//!   "parallel QR" of the abstract; the coordinator's streaming accumulator),
+//!   "parallel QR" of the abstract): streaming left-fold plus a
+//!   fixed-topology parallel tree reduction that is bit-identical for any
+//!   worker count,
 //! * [`cholesky`] — SPD factorization for the ridge-regularized normal
 //!   equations `(HᵀH + λI) β = HᵀY` (rank-deficiency fallback),
 //! * [`solve`] — triangular solves and the user-facing least-squares entry
-//!   points.
+//!   points, including the parallel `lstsq_tsqr`.
 
 pub mod cholesky;
 pub mod matrix;
@@ -19,6 +26,8 @@ pub mod tsqr;
 
 pub use cholesky::cholesky_solve;
 pub use matrix::Matrix;
-pub use qr::{householder_qr, QrFactors};
-pub use solve::{lstsq_qr, lstsq_ridge, solve_lower_triangular, solve_upper_triangular};
+pub use qr::{householder_qr, householder_qr_owned, householder_qr_reference, QrFactors};
+pub use solve::{
+    lstsq_qr, lstsq_ridge, lstsq_tsqr, solve_lower_triangular, solve_upper_triangular,
+};
 pub use tsqr::TsqrAccumulator;

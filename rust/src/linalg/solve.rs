@@ -48,6 +48,15 @@ pub fn solve_upper_triangular(r: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     Ok(x)
 }
 
+/// Relative rank check on an upper-triangular factor's diagonal: a pivot
+/// below 1e-10 of the largest means the system is numerically
+/// rank-deficient — random features can collide — and back-substitution
+/// would amplify noise. Shared by the QR and TSQR solve paths.
+pub(crate) fn upper_triangular_deficient(r: &Matrix) -> bool {
+    let max_diag = (0..r.rows).map(|i| r[(i, i)].abs()).fold(0.0, f64::max);
+    max_diag == 0.0 || (0..r.rows).any(|i| r[(i, i)].abs() < 1e-10 * max_diag)
+}
+
 /// Least squares min ‖Ax − b‖ via Householder QR: the paper's §4.2 method
 /// (QR then back-substitution, never forming the pseudo-inverse).
 pub fn lstsq_qr(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
@@ -58,16 +67,45 @@ pub fn lstsq_qr(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     let mut z = b.to_vec();
     f.apply_qt(&mut z);
     let r = f.r();
-    // Rank check on R's diagonal, relative to the largest pivot: a
-    // near-zero pivot means H is (numerically) rank-deficient — random
-    // features can collide — and back-substitution would amplify noise.
-    let max_diag = (0..r.rows).map(|i| r[(i, i)].abs()).fold(0.0, f64::max);
-    let deficient =
-        max_diag == 0.0 || (0..r.rows).any(|i| r[(i, i)].abs() < 1e-10 * max_diag);
-    if deficient {
+    if upper_triangular_deficient(&r) {
         return lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8);
     }
     match solve_upper_triangular(&r, &z[..a.cols]) {
+        Ok(x) => Ok(x),
+        Err(_) => lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8),
+    }
+}
+
+/// Least squares via the parallel TSQR tree (§4.2): A is split into
+/// fixed-height row blocks (independent of `workers` — only the workers
+/// executing the tree vary), each factored independently, then reduced
+/// pairwise. Bit-identical for any `workers` (see [`super::tsqr`]); the
+/// answer matches [`lstsq_qr`] to factorization rounding, including the
+/// same rank-deficiency guard and ridge fallback.
+pub fn lstsq_tsqr(a: &Matrix, b: &[f64], workers: usize) -> Result<Vec<f64>> {
+    if b.len() != a.rows {
+        bail!("lstsq shape mismatch: A is {}x{}, b has {}", a.rows, a.cols, b.len());
+    }
+    if a.rows < a.cols {
+        bail!("lstsq_tsqr requires rows >= cols, got {}x{}", a.rows, a.cols);
+    }
+    // block height: tall enough to amortize the per-block QR, fixed so the
+    // tree shape (and therefore the bits) never depends on `workers`
+    let block = (4 * a.cols).max(256);
+    let mut blocks = Vec::with_capacity(a.rows.div_ceil(block));
+    let mut i = 0;
+    while i < a.rows {
+        let hi = (i + block).min(a.rows);
+        blocks.push((a.submatrix(i, hi, 0, a.cols), b[i..hi].to_vec()));
+        i = hi;
+    }
+    let acc = super::tsqr::TsqrAccumulator::reduce(a.cols, blocks, workers)?;
+    // TSQR's R has the same diagonal magnitudes as the direct QR's, so the
+    // lstsq_qr rank guard applies unchanged
+    if acc.r_factor().map_or(true, upper_triangular_deficient) {
+        return lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8);
+    }
+    match acc.solve() {
         Ok(x) => Ok(x),
         Err(_) => lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8),
     }
@@ -165,6 +203,37 @@ mod tests {
         for (q, r) in xq.iter().zip(&xr) {
             assert!((q - r).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn tsqr_matches_qr_and_falls_back_when_deficient() {
+        let mut rng = Rng::new(6);
+        // well-conditioned: tree solve ≈ direct solve
+        let a = Matrix::random(300, 7, &mut rng);
+        let b: Vec<f64> = (0..300).map(|i| (i as f64 * 0.13).sin()).collect();
+        let xq = lstsq_qr(&a, &b).unwrap();
+        let xt = lstsq_tsqr(&a, &b, 4).unwrap();
+        for (p, q) in xt.iter().zip(&xq) {
+            assert!((p - q).abs() < 1e-8, "{p} vs {q}");
+        }
+        // duplicated column: both paths must take the identical ridge
+        // fallback instead of back-substituting through a noise pivot
+        let mut dup = Matrix::zeros(300, 8);
+        for i in 0..300 {
+            for j in 0..7 {
+                dup[(i, j)] = a[(i, j)];
+            }
+            dup[(i, 7)] = a[(i, 0)];
+        }
+        let xq = lstsq_qr(&dup, &b).unwrap();
+        let xt = lstsq_tsqr(&dup, &b, 4).unwrap();
+        assert!(xt.iter().all(|v| v.is_finite()));
+        for (p, q) in xt.iter().zip(&xq) {
+            assert!((p - q).abs() < 1e-9, "ridge fallbacks differ: {p} vs {q}");
+        }
+        // underdetermined stays an error (parity with householder_qr)
+        let wide = Matrix::zeros(3, 5);
+        assert!(lstsq_tsqr(&wide, &[0.0; 3], 2).is_err());
     }
 
     #[test]

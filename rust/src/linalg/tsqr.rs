@@ -6,14 +6,32 @@
 //! pairs are merged by re-factorizing their vertical stack. The final R and
 //! z = QᵀY give β by back-substitution without ever materializing H.
 //!
-//! Numerically this avoids the condition-number squaring of the normal
+//! Two reduction modes:
+//!
+//! * **Streaming** ([`TsqrAccumulator::push_block`]) — left-fold, one block
+//!   at a time, blocks taken *by value* (no clone on the hot path). This is
+//!   the coordinator's online mode.
+//! * **Tree** ([`TsqrAccumulator::reduce`]) — the §4.2 parallel reduction:
+//!   every block is factored to its (R, z) leaf independently (sharded over
+//!   `std::thread::scope` workers), then leaves are merged pairwise,
+//!   level by level, in index order — log₂(blocks) merge depth.
+//!
+//! # Determinism
+//!
+//! The tree topology is a function of the block list alone — pairs (2i,
+//! 2i+1) at every level, odd tail passed through — and never of the worker
+//! count. Workers only execute disjoint subtrees, so the reduced (R, z) is
+//! bit-identical for any worker count (the §7.3 robustness requirement);
+//! the tests pin this at 1/2/4/8 workers.
+//!
+//! Numerically TSQR avoids the condition-number squaring of the normal
 //! equations — the reason the paper uses QR rather than the explicit
 //! pseudo-inverse.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::matrix::Matrix;
-use super::qr::householder_qr;
+use super::qr::householder_qr_owned;
 use super::solve::solve_upper_triangular;
 
 /// Streaming TSQR state: R (n×n upper triangular) and z = Qᵀy (length n).
@@ -25,6 +43,43 @@ pub struct TsqrAccumulator {
     rows_seen: usize,
 }
 
+/// One reduced leaf/internal node of the TSQR tree.
+type Reduced = (Matrix, Vec<f64>);
+
+/// Factor one (H, y) block to its (R, z) pair, padding short blocks.
+fn block_factors(n: usize, h: Matrix, y: &[f64]) -> Result<Reduced> {
+    let (hb, yb) = if h.rows < n {
+        let mut padded = Matrix::zeros(n, n);
+        for i in 0..h.rows {
+            padded.row_mut(i).copy_from_slice(h.row(i));
+        }
+        let mut ypad = vec![0.0; n];
+        ypad[..y.len()].copy_from_slice(y);
+        (padded, ypad)
+    } else {
+        (h, y.to_vec())
+    };
+    let f = householder_qr_owned(hb)?;
+    let mut zb = yb;
+    f.apply_qt(&mut zb);
+    let r = f.r();
+    zb.truncate(n);
+    Ok((r, zb))
+}
+
+/// Merge two reduced pairs: QR of [R_a; R_b] (2n × n).
+fn merge_pair(n: usize, a: Reduced, b: Reduced) -> Result<Reduced> {
+    let stacked = Matrix::vstack(&a.0, &b.0);
+    let f = householder_qr_owned(stacked)?;
+    let mut zz = Vec::with_capacity(2 * n);
+    zz.extend_from_slice(&a.1);
+    zz.extend_from_slice(&b.1);
+    f.apply_qt(&mut zz);
+    let r = f.r();
+    zz.truncate(n);
+    Ok((r, zz))
+}
+
 impl TsqrAccumulator {
     pub fn new(n_cols: usize) -> TsqrAccumulator {
         TsqrAccumulator { n: n_cols, r: None, z: vec![0.0; n_cols], rows_seen: 0 }
@@ -34,8 +89,9 @@ impl TsqrAccumulator {
         self.rows_seen
     }
 
-    /// Fold one (H block, y block) pair into the reduced factors.
-    pub fn push_block(&mut self, h: &Matrix, y: &[f64]) -> Result<()> {
+    /// Fold one (H block, y block) pair into the reduced factors. The
+    /// block is taken by value: the local QR factors it in place.
+    pub fn push_block(&mut self, h: Matrix, y: &[f64]) -> Result<()> {
         if h.cols != self.n {
             bail!("block has {} cols, accumulator expects {}", h.cols, self.n);
         }
@@ -45,46 +101,25 @@ impl TsqrAccumulator {
         if h.rows == 0 {
             return Ok(());
         }
-        // Local QR of the new block (pad if the block is shorter than n).
-        let (hb, yb) = if h.rows < self.n {
-            let mut padded = Matrix::zeros(self.n, self.n);
-            for i in 0..h.rows {
-                padded.row_mut(i).copy_from_slice(h.row(i));
-            }
-            let mut ypad = vec![0.0; self.n];
-            ypad[..y.len()].copy_from_slice(y);
-            (padded, ypad)
-        } else {
-            (h.clone(), y.to_vec())
-        };
-        let f = householder_qr(&hb)?;
-        let mut zb = yb;
-        f.apply_qt(&mut zb);
-        let r_new = f.r();
-        let z_new = zb[..self.n].to_vec();
-
+        let rows = h.rows;
+        let (r_new, z_new) = block_factors(self.n, h, y)?;
         match self.r.take() {
             None => {
                 self.r = Some(r_new);
                 self.z = z_new;
             }
             Some(r_old) => {
-                // merge: QR of [R_old; R_new] (2n × n)
-                let stacked = Matrix::vstack(&r_old, &r_new);
-                let f2 = householder_qr(&stacked)?;
-                let mut zz = Vec::with_capacity(2 * self.n);
-                zz.extend_from_slice(&self.z);
-                zz.extend_from_slice(&z_new);
-                f2.apply_qt(&mut zz);
-                self.r = Some(f2.r());
-                self.z = zz[..self.n].to_vec();
+                let z_old = std::mem::take(&mut self.z);
+                let (r, z) = merge_pair(self.n, (r_old, z_old), (r_new, z_new))?;
+                self.r = Some(r);
+                self.z = z;
             }
         }
-        self.rows_seen += h.rows;
+        self.rows_seen += rows;
         Ok(())
     }
 
-    /// Merge another accumulator (tree reduction across workers).
+    /// Merge another accumulator (pairwise tree-reduction step).
     pub fn merge(&mut self, other: TsqrAccumulator) -> Result<()> {
         if other.n != self.n {
             bail!("accumulator width mismatch");
@@ -96,18 +131,60 @@ impl TsqrAccumulator {
                 self.z = other.z;
             }
             Some(r_old) => {
-                let stacked = Matrix::vstack(&r_old, &r_other);
-                let f = householder_qr(&stacked)?;
-                let mut zz = Vec::with_capacity(2 * self.n);
-                zz.extend_from_slice(&self.z);
-                zz.extend_from_slice(&other.z);
-                f.apply_qt(&mut zz);
-                self.r = Some(f.r());
-                self.z = zz[..self.n].to_vec();
+                let z_old = std::mem::take(&mut self.z);
+                let (r, z) =
+                    merge_pair(self.n, (r_old, z_old), (r_other, other.z))?;
+                self.r = Some(r);
+                self.z = z;
             }
         }
         self.rows_seen += other.rows_seen;
         Ok(())
+    }
+
+    /// Parallel tree reduction over a block list: leaves sharded across
+    /// `workers` scoped threads, then in-order pairwise merges at log₂
+    /// depth. Bit-identical for any `workers` (see module docs).
+    pub fn reduce(
+        n_cols: usize,
+        blocks: Vec<(Matrix, Vec<f64>)>,
+        workers: usize,
+    ) -> Result<TsqrAccumulator> {
+        let mut rows_total = 0usize;
+        for (h, y) in &blocks {
+            if h.cols != n_cols {
+                bail!("block has {} cols, reduce expects {n_cols}", h.cols);
+            }
+            if h.rows != y.len() {
+                bail!("block rows {} != y len {}", h.rows, y.len());
+            }
+            rows_total += h.rows;
+        }
+        let blocks: Vec<(Matrix, Vec<f64>)> =
+            blocks.into_iter().filter(|(h, _)| h.rows > 0).collect();
+        if blocks.is_empty() {
+            return Ok(TsqrAccumulator::new(n_cols));
+        }
+
+        // leaves: every block factored independently, in parallel
+        let mut level =
+            par_map(blocks, workers, move |(h, y)| block_factors(n_cols, h, &y))?;
+
+        // in-order pairwise merges until one node remains
+        while level.len() > 1 {
+            let mut pairs = Vec::with_capacity(level.len() / 2 + 1);
+            let mut it = level.into_iter();
+            while let (Some(a), b) = (it.next(), it.next()) {
+                pairs.push((a, b));
+            }
+            level = par_map(pairs, workers, move |(a, b)| match b {
+                Some(b) => merge_pair(n_cols, a, b),
+                None => Ok(a), // odd tail passes through
+            })?;
+        }
+
+        let (r, z) = level.pop().expect("non-empty level");
+        Ok(TsqrAccumulator { n: n_cols, r: Some(r), z, rows_seen: rows_total })
     }
 
     /// Solve R β = z by back-substitution.
@@ -123,6 +200,58 @@ impl TsqrAccumulator {
     pub fn r_factor(&self) -> Option<&Matrix> {
         self.r.as_ref()
     }
+
+    /// The reduced right-hand side z = Qᵀy (test hook).
+    pub fn z_factor(&self) -> &[f64] {
+        &self.z
+    }
+}
+
+/// Order-preserving parallel map over owned items: contiguous chunks are
+/// handed to `workers` scoped threads and the per-chunk outputs are
+/// reassembled in chunk order, so the result is independent of scheduling.
+/// (Shared with the coordinator's CPU pipeline.)
+pub(crate) fn par_map<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Result<Vec<U>>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> Result<U> + Sync,
+{
+    let total = items.len();
+    let workers = workers.max(1).min(total.max(1));
+    if workers == 1 {
+        return items.into_iter().map(&f).collect();
+    }
+    // contiguous chunks, sizes differing by at most one
+    let base = total / workers;
+    let extra = total % workers;
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
+    let mut rest = items;
+    for w in 0..workers {
+        let take = base + usize::from(w < extra);
+        let tail = rest.split_off(take.min(rest.len()));
+        chunks.push(rest);
+        rest = tail;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                scope.spawn(move || {
+                    chunk.into_iter().map(f).collect::<Result<Vec<U>>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(total);
+        for h in handles {
+            let part = h
+                .join()
+                .map_err(|_| anyhow!("TSQR worker thread panicked"))??;
+            out.extend(part);
+        }
+        Ok(out)
+    })
 }
 
 #[cfg(test)]
@@ -143,8 +272,7 @@ mod tests {
         let mut i = 0;
         while i < a.rows {
             let end = (i + block).min(a.rows);
-            let rows: Vec<Vec<f64>> = (i..end).map(|r| a.row(r).to_vec()).collect();
-            out.push((Matrix::from_rows(&rows), b[i..end].to_vec()));
+            out.push((a.submatrix(i, end, 0, a.cols), b[i..end].to_vec()));
             i = end;
         }
         out
@@ -157,7 +285,7 @@ mod tests {
         for block in [7usize, 16, 33, 200] {
             let mut acc = TsqrAccumulator::new(7);
             for (hb, yb) in blocks_of(&a, &b, block) {
-                acc.push_block(&hb, &yb).unwrap();
+                acc.push_block(hb, &yb).unwrap();
             }
             let beta = acc.solve().unwrap();
             for (g, w) in beta.iter().zip(&direct) {
@@ -172,7 +300,7 @@ mod tests {
         let (a, b) = random_problem(50, 10, 2);
         let mut acc = TsqrAccumulator::new(10);
         for (hb, yb) in blocks_of(&a, &b, 3) {
-            acc.push_block(&hb, &yb).unwrap();
+            acc.push_block(hb, &yb).unwrap();
         }
         let direct = lstsq_qr(&a, &b).unwrap();
         let beta = acc.solve().unwrap();
@@ -187,17 +315,17 @@ mod tests {
         let blocks = blocks_of(&a, &b, 30);
         // sequential
         let mut seq = TsqrAccumulator::new(5);
-        for (hb, yb) in &blocks {
-            seq.push_block(hb, yb).unwrap();
+        for (hb, yb) in blocks.clone() {
+            seq.push_block(hb, &yb).unwrap();
         }
         // two workers + merge
         let mut w1 = TsqrAccumulator::new(5);
         let mut w2 = TsqrAccumulator::new(5);
-        for (i, (hb, yb)) in blocks.iter().enumerate() {
+        for (i, (hb, yb)) in blocks.into_iter().enumerate() {
             if i % 2 == 0 {
-                w1.push_block(hb, yb).unwrap();
+                w1.push_block(hb, &yb).unwrap();
             } else {
-                w2.push_block(hb, yb).unwrap();
+                w2.push_block(hb, &yb).unwrap();
             }
         }
         w1.merge(w2).unwrap();
@@ -210,12 +338,58 @@ mod tests {
     }
 
     #[test]
+    fn tree_reduce_bit_identical_across_worker_counts() {
+        let (a, b) = random_problem(610, 9, 8);
+        let blocks = blocks_of(&a, &b, 47); // 13 blocks, odd tails in the tree
+        let base = TsqrAccumulator::reduce(9, blocks.clone(), 1).unwrap();
+        let base_beta = base.solve().unwrap();
+        for workers in [2usize, 4, 8] {
+            let acc = TsqrAccumulator::reduce(9, blocks.clone(), workers).unwrap();
+            assert_eq!(
+                acc.r_factor().unwrap(),
+                base.r_factor().unwrap(),
+                "R differs at workers={workers}"
+            );
+            assert_eq!(acc.z_factor(), base.z_factor(), "z differs at {workers}");
+            assert_eq!(acc.solve().unwrap(), base_beta, "β differs at {workers}");
+            assert_eq!(acc.rows_seen(), 610);
+        }
+    }
+
+    #[test]
+    fn tree_reduce_matches_streaming_fold() {
+        let (a, b) = random_problem(300, 6, 9);
+        let blocks = blocks_of(&a, &b, 50);
+        let tree = TsqrAccumulator::reduce(6, blocks.clone(), 4).unwrap();
+        let mut stream = TsqrAccumulator::new(6);
+        for (hb, yb) in blocks {
+            stream.push_block(hb, &yb).unwrap();
+        }
+        let (bt, bs) = (tree.solve().unwrap(), stream.solve().unwrap());
+        for (g, w) in bt.iter().zip(&bs) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_single_and_empty() {
+        let (a, b) = random_problem(40, 4, 10);
+        let one = TsqrAccumulator::reduce(4, vec![(a.clone(), b.clone())], 4).unwrap();
+        let direct = lstsq_qr(&a, &b).unwrap();
+        for (g, w) in one.solve().unwrap().iter().zip(&direct) {
+            assert!((g - w).abs() < 1e-8);
+        }
+        let empty = TsqrAccumulator::reduce(4, vec![], 4).unwrap();
+        assert!(empty.solve().is_err());
+    }
+
+    #[test]
     fn gram_identity() {
         // RᵀR must equal HᵀH (up to float error)
         let (a, b) = random_problem(80, 6, 4);
         let mut acc = TsqrAccumulator::new(6);
         for (hb, yb) in blocks_of(&a, &b, 16) {
-            acc.push_block(&hb, &yb).unwrap();
+            acc.push_block(hb, &yb).unwrap();
         }
         let r = acc.r_factor().unwrap();
         let rtr = r.transpose().matmul(r);
@@ -226,7 +400,7 @@ mod tests {
     fn underdetermined_rejected() {
         let (a, b) = random_problem(4, 6, 5);
         let mut acc = TsqrAccumulator::new(6);
-        acc.push_block(&a, &b).unwrap();
+        acc.push_block(a, &b).unwrap();
         assert!(acc.solve().is_err());
     }
 
@@ -240,6 +414,7 @@ mod tests {
     fn width_mismatch_rejected() {
         let mut acc = TsqrAccumulator::new(4);
         let (a, b) = random_problem(8, 6, 6);
-        assert!(acc.push_block(&a, &b).is_err());
+        assert!(acc.push_block(a, &b).is_err());
+        assert!(TsqrAccumulator::reduce(4, vec![random_problem(8, 6, 7)], 2).is_err());
     }
 }

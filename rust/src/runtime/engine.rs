@@ -11,6 +11,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactMeta, Manifest};
+// Offline builds compile against the API-compatible shim; the `pjrt`
+// feature switches every `xla::` path below to the real crate.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_shim as xla;
 
 /// A host-side f32 tensor (the only dtype in the ABI).
 #[derive(Debug, Clone, PartialEq)]

@@ -109,17 +109,32 @@ impl Manifest {
 
     /// Find the unique artifact matching (kind, arch, q, m).
     pub fn find(&self, kind: &str, arch: &str, q: usize, m: usize) -> Result<&ArtifactMeta> {
+        self.find_optional(kind, arch, q, m)?.ok_or_else(|| {
+            anyhow!("no artifact for kind={kind} arch={arch} q={q} m={m} — extend python/compile/manifest.py")
+        })
+    }
+
+    /// Like [`Manifest::find`], but absence is `Ok(None)` — for callers
+    /// with a CPU fallback. Ambiguous manifests are still a hard error
+    /// (that is a configuration bug, not a missing artifact).
+    pub fn find_optional(
+        &self,
+        kind: &str,
+        arch: &str,
+        q: usize,
+        m: usize,
+    ) -> Result<Option<&ArtifactMeta>> {
         let mut hits = self
             .by_name
             .values()
             .filter(|a| a.kind == kind && a.arch == arch && a.q == q && a.m == m);
-        let first = hits.next().ok_or_else(|| {
-            anyhow!("no artifact for kind={kind} arch={arch} q={q} m={m} — extend python/compile/manifest.py")
-        })?;
+        let Some(first) = hits.next() else {
+            return Ok(None);
+        };
         if hits.next().is_some() {
             bail!("ambiguous artifact selection for kind={kind} arch={arch} q={q} m={m}");
         }
-        Ok(first)
+        Ok(Some(first))
     }
 
     pub fn all(&self) -> impl Iterator<Item = &ArtifactMeta> {

@@ -15,6 +15,8 @@
 pub mod engine;
 pub mod manifest;
 pub mod pool;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_shim;
 
 pub use engine::{Buf, Engine};
 pub use manifest::{ArtifactMeta, Manifest};

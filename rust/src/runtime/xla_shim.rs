@@ -1,0 +1,160 @@
+//! Offline stand-in for the PJRT-backed `xla` crate.
+//!
+//! The engine is written against the real crate's API (`PjRtClient`,
+//! `Literal`, `HloModuleProto`, …). Deployment builds enable the `pjrt`
+//! feature and link the real crate; the default (offline) build compiles
+//! against this shim instead, so the whole runtime layer type-checks and
+//! the rest of the crate — linalg, elm, coordinator CPU paths — is fully
+//! usable without an XLA toolchain on the machine.
+//!
+//! Every construction entry point reports [`Error::unavailable`], and the
+//! engine surfaces that as a readable "engine init failed" error through
+//! [`super::pool::EnginePool`]; artifact-dependent tests skip themselves
+//! when no manifest is present, so the shim never silently fakes results.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `anyhow` interop.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error {
+            msg: format!(
+                "{what}: PJRT runtime unavailable (offline build; \
+                 enable the `pjrt` feature and link the xla crate)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal: flat f32 payload + dims (the only dtype in our ABI).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error {
+                msg: format!("cannot reshape {} elements to {dims:?}", self.data.len()),
+            });
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (never constructible offline).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The client handle; `cpu()` is the engine's first call and the single
+/// point where the offline build reports itself.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+}

@@ -66,8 +66,7 @@ fn tsqr_equals_direct_qr_property() {
         let mut i = 0;
         while i < rows {
             let hi = (i + block).min(rows);
-            let rows_vec: Vec<Vec<f64>> = (i..hi).map(|r| a.row(r).to_vec()).collect();
-            acc.push_block(&Matrix::from_rows(&rows_vec), &b[i..hi])
+            acc.push_block(a.submatrix(i, hi, 0, n), &b[i..hi])
                 .map_err(|e| e.to_string())?;
             i = hi;
         }
