@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Bench-smoke gate for the linalg microbench.
+
+Usage: check_bench.py BENCH_linalg.json benches/linalg_baseline.json
+
+Validates that the bench emitted well-formed JSON containing every
+expected op key, then compares the measured *speedup ratios* (threaded vs
+single-thread, blocked vs seed reference) against the checked-in
+baseline: a drop of more than `regression_margin` (default 25%) below a
+baseline ratio fails the job. Ratios, not absolute times, keep the gate
+portable across CI hardware generations.
+"""
+
+import json
+import sys
+
+
+def die(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        die(f"usage: {sys.argv[0]} BENCH_linalg.json linalg_baseline.json")
+    bench_path, baseline_path = sys.argv[1], sys.argv[2]
+
+    try:
+        with open(bench_path) as f:
+            recs = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        die(f"cannot parse {bench_path}: {e}")
+    with open(baseline_path) as f:
+        base = json.load(f)
+
+    if not isinstance(recs, list) or not recs:
+        die(f"{bench_path}: expected a non-empty record array")
+    for i, r in enumerate(recs):
+        for key in ("op", "shape", "ns_per_iter", "gflops"):
+            if key not in r:
+                die(f"record {i} missing {key!r}: {r}")
+        if not isinstance(r["op"], str) or not r["op"]:
+            die(f"record {i} has a bad op: {r}")
+        if not (float(r["ns_per_iter"]) > 0):
+            die(f"record {i} has non-positive ns_per_iter: {r}")
+
+    ops = {r["op"] for r in recs}
+    missing = [op for op in base["required_ops"] if op not in ops]
+    if missing:
+        die(f"missing op keys: {missing} (present: {sorted(ops)})")
+    print(f"ok: {len(recs)} records, all {len(base['required_ops'])} op keys present")
+
+    # threaded floors scale with the bench machine's worker count (the
+    # bench's `meta` record carries it in gflops): a 2-vCPU CI runner is
+    # not held to an 8-core threaded-speedup baseline
+    workers = 1.0
+    for r in recs:
+        if r["op"] == "meta":
+            workers = max(1.0, float(r["gflops"]))
+            break
+    threaded_keys = set(base.get("threaded_keys", []))
+
+    margin = float(base.get("regression_margin", 0.25))
+    failures = []
+    for key, want in base["min_speedups"].items():
+        op, _, shape = key.partition("@")
+        cands = [
+            r
+            for r in recs
+            if r["op"] == op
+            and (not shape or r["shape"] == shape)
+            and "speedup_vs_reference" in r
+        ]
+        if not cands:
+            failures.append(f"{key}: no record carries a speedup_vs_reference")
+            continue
+        got = max(float(r["speedup_vs_reference"]) for r in cands)
+        want = float(want)
+        if key in threaded_keys:
+            want = min(want, 0.6 * workers)
+        floor = want * (1.0 - margin)
+        status = "ok" if got >= floor else "REGRESSION"
+        print(
+            f"{status}: {key}: speedup {got:.2f}x "
+            f"(baseline {want:.2f}x, floor {floor:.2f}x, workers {workers:.0f})"
+        )
+        if got < floor:
+            failures.append(
+                f"{key}: speedup {got:.2f}x fell below floor {floor:.2f}x "
+                f"(baseline {want:.2f}x - {margin:.0%} margin)"
+            )
+
+    if failures:
+        die("; ".join(failures))
+    print("bench gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,13 +6,16 @@
 //! machine-readable `BENCH_linalg.json` (op, shape, ns/iter, GFLOP/s, and
 //! the speedup over the seed reference where one exists) so future PRs
 //! have a perf trajectory to regress against. Override the output path
-//! with `BENCH_LINALG_OUT=…`.
+//! with `BENCH_LINALG_OUT=…`; set `BENCH_LINALG_QUICK=1` for the CI
+//! smoke mode (smaller budgets and shapes, every op key still emitted —
+//! `ci/check_bench.py` gates the speedup ratios against
+//! `benches/linalg_baseline.json`).
 
 use std::time::Duration;
 
 use opt_pr_elm::linalg::{
     householder_qr, householder_qr_reference, lstsq_qr, lstsq_ridge, lstsq_tsqr,
-    solve_upper_triangular, Matrix, TsqrAccumulator,
+    solve_upper_triangular, Matrix, ParallelPolicy, TsqrAccumulator,
 };
 use opt_pr_elm::util::json::{num, obj, s, Json};
 use opt_pr_elm::util::rng::Rng;
@@ -75,11 +78,31 @@ fn lstsq_qr_reference(a: &Matrix, b: &[f64]) -> Vec<f64> {
 }
 
 fn main() {
-    let budget = Duration::from_millis(400);
+    let quick = std::env::var("BENCH_LINALG_QUICK").map_or(false, |v| v != "0" && !v.is_empty());
+    let budget = Duration::from_millis(if quick { 150 } else { 400 });
+    let threaded = ParallelPolicy::auto();
     let mut records: Vec<Rec> = Vec::new();
-    println!("== linalg microbench (β solve substrate) ==");
+    println!(
+        "== linalg microbench (β solve substrate){} — threaded policy: {} workers ==",
+        if quick { " [quick]" } else { "" },
+        threaded.workers
+    );
+    // meta record: lets the CI gate scale the threaded-speedup floors to
+    // the machine it actually ran on (gflops field carries the count)
+    records.push(Rec {
+        op: "meta".to_string(),
+        shape: format!("workers={}", threaded.workers),
+        ns_per_iter: 1.0,
+        gflops: threaded.workers as f64,
+        speedup_vs_reference: None,
+    });
 
-    for (n, m) in [(1000usize, 20usize), (5000, 50), (20000, 50), (5000, 100)] {
+    let tall: &[(usize, usize)] = if quick {
+        &[(1000, 20), (5000, 50)]
+    } else {
+        &[(1000, 20), (5000, 50), (20000, 50), (5000, 100)]
+    };
+    for &(n, m) in tall {
         let mut rng = Rng::new(1);
         let a = Matrix::random(n, m, &mut rng);
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
@@ -95,7 +118,7 @@ fn main() {
             householder_qr_reference(&a).unwrap()
         });
         let t_ref = push(&mut records, &r, "householder_qr_ref", &shape, qr_flops);
-        mark_speedup(&mut records, t_ref / t_blk);
+        mark_speedup_at(&mut records, 2, t_ref / t_blk);
         println!("  -> blocked QR speedup vs seed scalar: {:.2}x", t_ref / t_blk);
 
         let r = bench(&format!("lstsq_qr {shape}"), 1, budget, 50, || {
@@ -106,7 +129,7 @@ fn main() {
             lstsq_qr_reference(&a, &b)
         });
         let t_ref = push(&mut records, &r, "lstsq_qr_ref", &shape, qr_flops);
-        mark_speedup(&mut records, t_ref / t_blk);
+        mark_speedup_at(&mut records, 2, t_ref / t_blk);
         println!("  -> lstsq_qr speedup vs seed scalar: {:.2}x", t_ref / t_blk);
 
         let r = bench(&format!("lstsq_ridge {shape}"), 1, budget, 50, || {
@@ -114,14 +137,41 @@ fn main() {
         });
         push(&mut records, &r, "lstsq_ridge", &shape, gram_flops);
 
+        // panel-resident Qᵀb vs the seed column-at-a-time loop, on each
+        // path's own factors (what lstsq_qr / lstsq_qr_reference execute)
+        let qt_flops = 4.0 * (n * m) as f64;
+        let f_blk = householder_qr(&a).unwrap();
+        let f_ref = householder_qr_reference(&a).unwrap();
+        let r = bench(&format!("apply_qt {shape}"), 1, budget, 200, || {
+            let mut z = b.clone();
+            f_blk.apply_qt(&mut z);
+            z
+        });
+        let t_blk = push(&mut records, &r, "apply_qt", &shape, qt_flops);
+        let r = bench(&format!("apply_qt_ref {shape}"), 1, budget, 200, || {
+            let mut z = b.clone();
+            f_ref.apply_qt(&mut z);
+            z
+        });
+        let t_ref = push(&mut records, &r, "apply_qt_ref", &shape, qt_flops);
+        mark_speedup_at(&mut records, 2, t_ref / t_blk);
+        println!("  -> panel apply_qt speedup vs column loop: {:.2}x", t_ref / t_blk);
+
         let r = bench(&format!("gram {shape}"), 1, budget, 50, || a.gram());
         let t_blk = push(&mut records, &r, "gram", &shape, gram_flops);
         let r = bench(&format!("gram_ref {shape}"), 1, budget, 50, || {
             gram_reference(&a)
         });
         let t_ref = push(&mut records, &r, "gram_ref", &shape, gram_flops);
-        mark_speedup(&mut records, t_ref / t_blk);
+        mark_speedup_at(&mut records, 2, t_ref / t_blk);
         println!("  -> gram speedup vs seed scalar: {:.2}x", t_ref / t_blk);
+
+        let r = bench(&format!("gram_threaded {shape}"), 1, budget, 50, || {
+            a.gram_with(threaded)
+        });
+        let t_thr = push(&mut records, &r, "gram_threaded", &shape, gram_flops);
+        mark_speedup_at(&mut records, 1, t_blk / t_thr);
+        println!("  -> threaded gram speedup vs single-thread: {:.2}x", t_blk / t_thr);
 
         let r = bench(&format!("tsqr(block=256) {shape}"), 1, budget, 50, || {
             let mut acc = TsqrAccumulator::new(m);
@@ -141,22 +191,33 @@ fn main() {
                 1,
                 budget,
                 50,
-                || lstsq_tsqr(&a, &b, workers).unwrap(),
+                || lstsq_tsqr(&a, &b, ParallelPolicy::with_workers(workers)).unwrap(),
             );
             push(&mut records, &r, &format!("lstsq_tsqr_w{workers}"), &shape, qr_flops);
         }
         println!();
     }
 
-    // square GEMM: the kernel behind the QR trailing updates and h_block
-    for dim in [128usize, 384] {
+    // square GEMM: the kernel behind the QR trailing updates and h_block;
+    // 512 is the acceptance shape for the threaded speedup gate
+    let dims: &[usize] = if quick { &[128, 512] } else { &[128, 384, 512] };
+    for &dim in dims {
         let mut rng = Rng::new(2);
         let a = Matrix::random(dim, dim, &mut rng);
         let b = Matrix::random(dim, dim, &mut rng);
         let shape = format!("{dim}x{dim}x{dim}");
         let flops = 2.0 * (dim * dim * dim) as f64;
         let r = bench(&format!("matmul {shape}"), 1, budget, 50, || a.matmul(&b));
-        push(&mut records, &r, "matmul", &shape, flops);
+        let t_seq = push(&mut records, &r, "matmul", &shape, flops);
+        let r = bench(&format!("matmul_threaded {shape}"), 1, budget, 50, || {
+            a.matmul_with(&b, threaded)
+        });
+        let t_thr = push(&mut records, &r, "matmul_threaded", &shape, flops);
+        mark_speedup_at(&mut records, 1, t_seq / t_thr);
+        println!(
+            "  -> threaded matmul {dim} speedup vs single-thread: {:.2}x",
+            t_seq / t_thr
+        );
     }
     println!();
 
@@ -185,9 +246,11 @@ fn main() {
     }
 }
 
-/// Attach the measured speedup to the non-reference record of the pair
-/// just pushed (records[len-2]).
-fn mark_speedup(records: &mut [Rec], speedup: f64) {
-    let i = records.len() - 2;
+/// Attach the measured speedup to the record `back` positions from the
+/// end: 1 = the record just pushed (threaded-vs-single-thread pairs,
+/// reference measured earlier), 2 = the non-reference record of a
+/// (new, reference) pair just pushed.
+fn mark_speedup_at(records: &mut [Rec], back: usize, speedup: f64) {
+    let i = records.len() - back;
     records[i].speedup_vs_reference = Some(speedup);
 }

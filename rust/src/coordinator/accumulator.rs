@@ -1,6 +1,6 @@
 //! Normal-equation / TSQR accumulation of per-block partials.
 //!
-//! Two solve strategies, selectable per job:
+//! Three solve strategies, selectable per job:
 //!
 //! * `Gram` — fold the (HᵀH, HᵀY) partials the `elm_gram` artifacts emit
 //!   (f32 on the wire, widened to f64 on accumulation), solve the ridge
@@ -8,6 +8,11 @@
 //! * `Tsqr` — fold raw H blocks (`elm_h` artifacts) into the
 //!   communication-avoiding QR accumulator. Exact least squares (no
 //!   condition-number squaring); O(R·M) traffic per block.
+//! * `DirectQr` — assemble the full H in block order and run the threaded
+//!   blocked Householder QR (`lstsq_qr_with`). O(N·M) memory — the only
+//!   non-streaming strategy — but **bit-identical to the sequential
+//!   `lstsq_qr` path** at any worker count: the conformance anchor the
+//!   architecture-sweep e2e suite pins all six architectures to.
 
 use anyhow::{bail, Result};
 
@@ -17,6 +22,7 @@ use crate::linalg::{Matrix, TsqrAccumulator};
 pub enum SolveStrategy {
     Gram,
     Tsqr,
+    DirectQr,
 }
 
 /// Streaming (HᵀH, HᵀY) accumulator (f64).
@@ -109,6 +115,13 @@ impl BetaAccumulator {
         match strategy {
             SolveStrategy::Gram => BetaAccumulator::Gram(GramAccumulator::new(m, 1e-8)),
             SolveStrategy::Tsqr => BetaAccumulator::Tsqr(TsqrAccumulator::new(m)),
+            // refuse rather than silently substitute TSQR bits: DirectQr's
+            // whole contract is bit-equality with the sequential lstsq_qr,
+            // which no streaming accumulator can honor
+            SolveStrategy::DirectQr => panic!(
+                "DirectQr is not a streaming strategy; use CpuElmTrainer, which \
+                 assembles H and runs the threaded lstsq_qr_with"
+            ),
         }
     }
 

@@ -30,9 +30,9 @@ use crate::data::window::Windowed;
 use crate::elm::arch::{block_ranges, h_block_range};
 use crate::elm::trainer::{shift_history, SrElmModel};
 use crate::elm::{Arch, ElmParams, TrainOptions};
-use crate::linalg::solve::{lstsq_ridge_from_parts, upper_triangular_deficient};
-use crate::linalg::tsqr::par_map;
-use crate::linalg::{Matrix, TsqrAccumulator};
+use crate::linalg::policy::par_map;
+use crate::linalg::solve::{lstsq_qr_with, lstsq_ridge_from_parts, upper_triangular_deficient};
+use crate::linalg::{Matrix, ParallelPolicy, TsqrAccumulator};
 use crate::runtime::{ArtifactMeta, Buf, EnginePool, Manifest};
 
 /// Fig-6 style phase breakdown of one training run (seconds).
@@ -300,11 +300,16 @@ impl PrElmTrainer {
 /// # Determinism (§7.3)
 ///
 /// Block boundaries are fixed by `block_rows` alone, per-block work is
-/// independent, and both reductions are worker-count invariant — Gram
+/// independent, and every reduction is worker-count invariant — Gram
 /// partials fold in block order, the TSQR strategy reduces over a fixed
-/// pairwise tree — so β is bit-identical for any `workers`.
+/// pairwise tree, the DirectQr strategy runs the threaded QR whose GEMM
+/// splits are fixed schedules — so β is bit-identical for any
+/// `policy.workers`. DirectQr additionally produces the *same bits* as
+/// the sequential `lstsq_qr` on the assembled H (the e2e conformance
+/// anchor).
 pub struct CpuElmTrainer {
-    pub workers: usize,
+    /// the one worker-count knob, shared with every threaded linalg path
+    pub policy: ParallelPolicy,
     /// samples per H block (fixed: part of the deterministic result)
     pub block_rows: usize,
     pub strategy: SolveStrategy,
@@ -314,8 +319,12 @@ pub struct CpuElmTrainer {
 
 impl CpuElmTrainer {
     pub fn new(workers: usize) -> CpuElmTrainer {
+        CpuElmTrainer::with_policy(ParallelPolicy::with_workers(workers))
+    }
+
+    pub fn with_policy(policy: ParallelPolicy) -> CpuElmTrainer {
         CpuElmTrainer {
-            workers: workers.max(1),
+            policy,
             block_rows: 256,
             strategy: SolveStrategy::Tsqr,
             lambda: 1e-6,
@@ -367,11 +376,11 @@ impl CpuElmTrainer {
         let ranges = block_ranges(data.n, self.block_rows);
         bd.blocks += ranges.len();
         let t0 = Instant::now();
-        let blocks = par_map(ranges, self.workers, |(lo, hi)| {
+        let blocks = par_map(ranges, self.policy, |(lo, hi)| {
             Ok(compute_h_block(params, data, None, lo, hi))
         })?;
         let idx: Vec<usize> = (0..blocks.len()).collect();
-        let partials = par_map(idx, self.workers, |i| {
+        let partials = par_map(idx, self.policy, |i| {
             let (h, y) = &blocks[i];
             Ok((h.gram(), h.t_matvec(y), h.rows))
         })?;
@@ -412,12 +421,43 @@ impl CpuElmTrainer {
             return self.gram_solve(params, data, ehist, lambda, bd);
         }
         let t0 = Instant::now();
-        let blocks = par_map(ranges, self.workers, |(lo, hi)| {
+        let blocks = par_map(ranges, self.policy, |(lo, hi)| {
             Ok(compute_h_block(params, data, ehist, lo, hi))
         })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
+
+        if self.strategy == SolveStrategy::DirectQr {
+            // assemble H in block order and run the threaded direct QR —
+            // bit-identical to the sequential `lstsq_qr` on the same H at
+            // any worker count (the e2e conformance anchor). The internal
+            // rank guard falls back to the deterministic chunked-Gram
+            // ridge, so no outer fallback is needed on Ok.
+            let t1 = Instant::now();
+            let mut h = Matrix::zeros(data.n, m);
+            let mut y = Vec::with_capacity(data.n);
+            let mut row = 0usize;
+            // consume the block list so each block frees right after its
+            // rows are copied (halves the transient 2x H footprint)
+            for (hb, yb) in blocks {
+                for r in 0..hb.rows {
+                    h.row_mut(row + r).copy_from_slice(hb.row(r));
+                }
+                row += hb.rows;
+                y.extend(yb);
+            }
+            if row < m {
+                bail!("underdetermined: {row} rows < M = {m}");
+            }
+            let out = lstsq_qr_with(&h, &y, self.policy);
+            bd.solve_s += t1.elapsed().as_secs_f64();
+            return match out {
+                Ok(beta) => Ok(beta),
+                Err(_) => self.gram_solve(params, data, ehist, lambda.max(1e-8), bd),
+            };
+        }
+
         let t1 = Instant::now();
-        let acc = TsqrAccumulator::reduce(m, blocks, self.workers)?;
+        let acc = TsqrAccumulator::reduce(m, blocks, self.policy)?;
         if acc.rows_seen() < m {
             bail!("underdetermined: {} rows < M = {m}", acc.rows_seen());
         }
@@ -457,7 +497,7 @@ impl CpuElmTrainer {
         let m = params.m;
         let ranges = block_ranges(data.n, self.block_rows);
         let t0 = Instant::now();
-        let partials = par_map(ranges, self.workers, |(lo, hi)| {
+        let partials = par_map(ranges, self.policy, |(lo, hi)| {
             let (h, y) = compute_h_block(params, data, ehist, lo, hi);
             let g = h.gram();
             let c = h.t_matvec(&y);
@@ -479,7 +519,7 @@ impl CpuElmTrainer {
         ehist: Option<&[f32]>,
     ) -> Result<Vec<f64>> {
         let ranges = block_ranges(data.n, self.block_rows);
-        let parts = par_map(ranges, self.workers, |(lo, hi)| {
+        let parts = par_map(ranges, self.policy, |(lo, hi)| {
             let (h, _y) = compute_h_block(&model.params, data, ehist, lo, hi);
             Ok(h.matvec(&model.beta))
         })?;
@@ -633,7 +673,9 @@ mod tests {
     #[test]
     fn cpu_trainer_bit_identical_across_worker_counts() {
         let w = toy_windowed(700, 5, 2);
-        for strategy in [SolveStrategy::Tsqr, SolveStrategy::Gram] {
+        for strategy in
+            [SolveStrategy::Tsqr, SolveStrategy::Gram, SolveStrategy::DirectQr]
+        {
             for archk in ALL_ARCHS {
                 let mut base: Option<Vec<f64>> = None;
                 for workers in [1usize, 2, 4, 8] {

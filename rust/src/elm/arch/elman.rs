@@ -31,17 +31,68 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
 }
 
 /// Whole row block: the input projections come from one block-wide GEMM
-/// (`lift_wx`); the diagonal recurrence then runs per sample on the
-/// precomputed values.
+/// (`lift_wx`); the diagonal recurrence then advances **four samples in
+/// lockstep** (lane-contiguous state, index `[j·4 + lane]`, matching the
+/// Gram microkernel's width) so the per-j loop streams four independent
+/// accumulators per alpha load. Lanes never mix, so every sample's value
+/// is bit-identical to the scalar tail path (and to `h_row` up to the
+/// lifted-GEMM association, bounded by the property tests).
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
     let (q, m) = (p.q, p.m);
     let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
     let b = p.buf("b");
     let alpha = p.buf("alpha"); // (m, q): alpha[j*q + (k-1)]
     let mut h = Matrix::zeros(blk.rows, m);
+
+    // 4-wide sample groups: hist4[((k-1)*m + j)*4 + lane] = h_j(t-k) of
+    // sample i0 + lane
+    let mut hist4 = vec![0f32; q * m * 4];
+    let mut cur4 = vec![0f32; m * 4];
+    let full = blk.rows - blk.rows % 4;
+    for i0 in (0..full).step_by(4) {
+        hist4.iter_mut().for_each(|v| *v = 0.0);
+        for t in 0..q {
+            let w0 = wx.row(i0 * q + t);
+            let w1 = wx.row((i0 + 1) * q + t);
+            let w2 = wx.row((i0 + 2) * q + t);
+            let w3 = wx.row((i0 + 3) * q + t);
+            for j in 0..m {
+                let bj = b[j];
+                let mut a0 = w0[j] as f32 + bj;
+                let mut a1 = w1[j] as f32 + bj;
+                let mut a2 = w2[j] as f32 + bj;
+                let mut a3 = w3[j] as f32 + bj;
+                for k in 1..=t.min(q) {
+                    let al = alpha[j * q + (k - 1)];
+                    let hb = ((k - 1) * m + j) * 4;
+                    a0 += al * hist4[hb];
+                    a1 += al * hist4[hb + 1];
+                    a2 += al * hist4[hb + 2];
+                    a3 += al * hist4[hb + 3];
+                }
+                let cb = j * 4;
+                cur4[cb] = tanh(a0);
+                cur4[cb + 1] = tanh(a1);
+                cur4[cb + 2] = tanh(a2);
+                cur4[cb + 3] = tanh(a3);
+            }
+            for k in (1..q).rev() {
+                let (lo, hi) = hist4.split_at_mut(k * m * 4);
+                hi[..m * 4].copy_from_slice(&lo[(k - 1) * m * 4..k * m * 4]);
+            }
+            hist4[..m * 4].copy_from_slice(&cur4);
+        }
+        for l in 0..4 {
+            for j in 0..m {
+                h[(i0 + l, j)] = cur4[j * 4 + l] as f64;
+            }
+        }
+    }
+
+    // scalar tail (rows % 4): the original per-sample recurrence
     let mut hist = vec![0f32; q * m]; // hist[(k-1)*m + j] = h_j(t-k)
     let mut cur = vec![0f32; m];
-    for i in 0..blk.rows {
+    for i in full..blk.rows {
         hist.iter_mut().for_each(|v| *v = 0.0);
         for t in 0..q {
             let wrow = wx.row(i * q + t);

@@ -33,17 +33,54 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
 }
 
 /// Whole row block: one (rows·q) × 3m GEMM lifts every gate's input
-/// projection (`w3` is row-major (s, 3m)); the diagonal cell then runs per
-/// sample on the precomputed values.
+/// projection (`w3` is row-major (s, 3m)); the diagonal cell then advances
+/// **four samples in lockstep** (lane-contiguous state, index
+/// `[j·4 + lane]`): one u3/b3 load drives four independent cells. Lanes
+/// never mix, so each sample is bit-identical to the scalar tail.
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
     let (q, m) = (p.q, p.m);
     let wx3 = lift_wx(p.buf("w3"), 3, blk, p.s, q, m);
     let u3 = p.buf("u3"); // (3, m)
     let b3 = p.buf("b3"); // (3, m)
     let mut h = Matrix::zeros(blk.rows, m);
+
+    let mut f_prev4 = vec![0f32; m * 4];
+    let mut cur4 = vec![0f32; m * 4];
+    let full = blk.rows - blk.rows % 4;
+    for i0 in (0..full).step_by(4) {
+        f_prev4.iter_mut().for_each(|v| *v = 0.0);
+        for t in 0..q {
+            let w0 = wx3.row(i0 * q + t);
+            let w1 = wx3.row((i0 + 1) * q + t);
+            let w2 = wx3.row((i0 + 2) * q + t);
+            let w3r = wx3.row((i0 + 3) * q + t);
+            let wl = [w0, w1, w2, w3r];
+            for j in 0..m {
+                let jb = j * 4;
+                let (uz, ur, uf) = (u3[j], u3[m + j], u3[2 * m + j]);
+                let (bz, br, bf) = (b3[j], b3[m + j], b3[2 * m + j]);
+                for l in 0..4 {
+                    let fp = f_prev4[jb + l];
+                    let wx = |g: usize| wl[l][g * m + j] as f32;
+                    let z = sigmoid(wx(0) + uz * fp + bz);
+                    let r = sigmoid(wx(1) + ur * fp + br);
+                    let cand = tanh(wx(2) + uf * (r * fp) + bf);
+                    cur4[jb + l] = (1.0 - z) * fp + z * cand;
+                }
+            }
+            f_prev4.copy_from_slice(&cur4);
+        }
+        for l in 0..4 {
+            for j in 0..m {
+                h[(i0 + l, j)] = cur4[j * 4 + l] as f64;
+            }
+        }
+    }
+
+    // scalar tail (rows % 4): the original per-sample cell
     let mut f_prev = vec![0f32; m];
     let mut cur = vec![0f32; m];
-    for i in 0..blk.rows {
+    for i in full..blk.rows {
         f_prev.iter_mut().for_each(|v| *v = 0.0);
         for t in 0..q {
             let wrow = wx3.row(i * q + t);

@@ -41,17 +41,58 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
 /// Whole row block: all four gate input projections for every sample and
 /// timestep come from one (rows·q) × 4m GEMM — `w4`'s (s, 4, m) layout is
 /// row-major (s, 4m), so it feeds the lift unchanged — then the diagonal
-/// cell runs per sample on the precomputed pre-activations.
+/// cell advances **four samples in lockstep** (lane-contiguous f/c state,
+/// index `[j·4 + lane]`): one u4/b4 load drives four independent cells.
+/// Lanes never mix, so each sample is bit-identical to the scalar tail.
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
     let (q, m) = (p.q, p.m);
     let wx4 = lift_wx(p.buf("w4"), 4, blk, p.s, q, m);
     let u4 = p.buf("u4"); // (4, m)
     let b4 = p.buf("b4"); // (4, m)
     let mut h = Matrix::zeros(blk.rows, m);
+
+    let mut f_prev4 = vec![0f32; m * 4];
+    let mut c_prev4 = vec![0f32; m * 4];
+    let mut cur4 = vec![0f32; m * 4];
+    let full = blk.rows - blk.rows % 4;
+    for i0 in (0..full).step_by(4) {
+        f_prev4.iter_mut().for_each(|v| *v = 0.0);
+        c_prev4.iter_mut().for_each(|v| *v = 0.0);
+        for t in 0..q {
+            let w0 = wx4.row(i0 * q + t);
+            let w1 = wx4.row((i0 + 1) * q + t);
+            let w2 = wx4.row((i0 + 2) * q + t);
+            let w3 = wx4.row((i0 + 3) * q + t);
+            let wl = [w0, w1, w2, w3];
+            for j in 0..m {
+                let jb = j * 4;
+                for l in 0..4 {
+                    let fp = f_prev4[jb + l];
+                    let pre =
+                        |g: usize| u4[g * m + j] * fp + b4[g * m + j] + wl[l][g * m + j] as f32;
+                    let o = sigmoid(pre(0));
+                    let c_tilde = tanh(pre(1));
+                    let lam = sigmoid(pre(2));
+                    let inp = sigmoid(pre(3));
+                    let c = lam * c_prev4[jb + l] + inp * c_tilde;
+                    c_prev4[jb + l] = c;
+                    cur4[jb + l] = o * tanh(c);
+                }
+            }
+            f_prev4.copy_from_slice(&cur4);
+        }
+        for l in 0..4 {
+            for j in 0..m {
+                h[(i0 + l, j)] = cur4[j * 4 + l] as f64;
+            }
+        }
+    }
+
+    // scalar tail (rows % 4): the original per-sample cell
     let mut f_prev = vec![0f32; m];
     let mut c_prev = vec![0f32; m];
     let mut cur = vec![0f32; m];
-    for i in 0..blk.rows {
+    for i in full..blk.rows {
         f_prev.iter_mut().for_each(|v| *v = 0.0);
         c_prev.iter_mut().for_each(|v| *v = 0.0);
         for t in 0..q {

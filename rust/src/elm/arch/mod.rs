@@ -90,17 +90,12 @@ pub(crate) fn lift_wx(
 
 /// Fixed block tiling of [0, n) — the one block-boundary definition every
 /// batched-H driver (trainer, CPU pipeline, BPTT forward) shares, so the
-/// deterministic-result argument never depends on the call site.
+/// deterministic-result argument never depends on the call site. Delegates
+/// to the linalg substrate's fixed-split schedule
+/// ([`crate::linalg::policy::fixed_tiles`]): block boundaries depend on
+/// (n, rows) alone, never on a worker count.
 pub fn block_ranges(n: usize, rows: usize) -> Vec<(usize, usize)> {
-    let rows = rows.max(1);
-    let mut out = Vec::with_capacity(n.div_ceil(rows));
-    let mut lo = 0;
-    while lo < n {
-        let hi = (lo + rows).min(n);
-        out.push((lo, hi));
-        lo = hi;
-    }
-    out
+    crate::linalg::policy::fixed_tiles(n, rows)
 }
 
 /// Batched H for rows [lo, hi) of a windowed dataset; zeros are

@@ -24,9 +24,24 @@
 //! difference at 1e-12). There is deliberately *no* skip of zero
 //! multiplicands: `0 × ∞` must produce NaN, and a data-dependent branch
 //! mispredicts on dense data.
+//!
+//! # Threading
+//!
+//! `matmul_with` shards the GEMM over *output row tiles* ([`MM_ROW_TILE`]
+//! rows each, boundaries fixed by the shape alone): every output element
+//! is computed start-to-finish by exactly one worker with the identical
+//! inner kernel, so the threaded product is **bit-identical** to the
+//! sequential `matmul` at any [`ParallelPolicy`] worker count.
+//! `gram_with` shards over *input row chunks* ([`GRAM_ROW_CHUNK`] rows,
+//! again shape-fixed) and folds the partial Grams in chunk order; the
+//! result is bit-identical across worker counts (including 1) but — like
+//! the rank-4 microkernel itself — reassociates sums relative to the
+//! single-chunk path, so matrices with more than one chunk are pinned to
+//! the explicit AᵀA oracle by tolerance, not bits.
 
 use std::fmt;
 
+use super::policy::{fixed_tiles, par_map, ParallelPolicy};
 use crate::util::rng::Rng;
 
 #[derive(Clone, PartialEq)]
@@ -118,9 +133,37 @@ impl Matrix {
     /// kernel; see the module docs for the blocking/determinism story).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
-        if m == 0 || k == 0 || n == 0 {
+        self.matmul_rows(other, 0, self.rows)
+    }
+
+    /// Threaded GEMM: output rows sharded over fixed [`MM_ROW_TILE`]-high
+    /// tiles executed by `policy.workers` threads. Bit-identical to
+    /// [`Matrix::matmul`] at any worker count (each output element is
+    /// produced by one worker running the identical kernel).
+    pub fn matmul_with(&self, other: &Matrix, policy: ParallelPolicy) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, n) = (self.rows, other.cols);
+        if policy.workers <= 1 || m < 2 * MM_ROW_TILE {
+            return self.matmul(other);
+        }
+        let tiles = fixed_tiles(m, MM_ROW_TILE);
+        let slabs = par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows(other, i0, i1)))
+            .expect("matmul worker thread panicked");
+        let mut data = Vec::with_capacity(m * n);
+        for slab in slabs {
+            data.extend_from_slice(&slab.data);
+        }
+        Matrix { rows: m, cols: n, data }
+    }
+
+    /// GEMM restricted to output rows [i0, i1): the shared kernel behind
+    /// `matmul` (full range) and `matmul_with` (one tile per call). Row
+    /// independence makes every split bit-equivalent.
+    fn matmul_rows(&self, other: &Matrix, i0: usize, i1: usize) -> Matrix {
+        debug_assert!(i0 <= i1 && i1 <= self.rows);
+        let (k, n) = (self.cols, other.cols);
+        let mut out = Matrix::zeros(i1 - i0, n);
+        if i1 == i0 || k == 0 || n == 0 {
             return out;
         }
         let mut pack = vec![0.0f64; KC * NC];
@@ -134,9 +177,9 @@ impl Matrix {
                     pack[p * jb..p * jb + jb]
                         .copy_from_slice(&other.data[base..base + jb]);
                 }
-                for i in 0..m {
+                for i in i0..i1 {
                     let arow = &self.data[i * k + kk..i * k + kk + kb];
-                    let orow = &mut out.data[i * n + jj..i * n + jj + jb];
+                    let orow = &mut out.data[(i - i0) * n + jj..(i - i0) * n + jj + jb];
                     for (p, &a) in arow.iter().enumerate() {
                         axpy4(a, &pack[p * jb..p * jb + jb], orow);
                     }
@@ -169,10 +212,44 @@ impl Matrix {
     /// selfᵀ * self (Gram), exploiting symmetry: rank-4 updates of the
     /// upper triangle (4-row microkernel), mirrored at the end.
     pub fn gram(&self) -> Matrix {
+        let mut g = self.gram_rows(0, self.rows);
+        mirror_upper(&mut g);
+        g
+    }
+
+    /// Threaded Gram: input rows sharded over fixed [`GRAM_ROW_CHUNK`]-high
+    /// chunks, per-chunk partial Grams folded in chunk order. Bit-identical
+    /// at any [`ParallelPolicy`] worker count (the chunk schedule and fold
+    /// order never depend on `workers`); single-chunk inputs are
+    /// bit-identical to [`Matrix::gram`].
+    pub fn gram_with(&self, policy: ParallelPolicy) -> Matrix {
+        let chunks = fixed_tiles(self.rows, GRAM_ROW_CHUNK);
+        if chunks.len() <= 1 {
+            return self.gram();
+        }
+        let partials = par_map(chunks, policy, |(lo, hi)| Ok(self.gram_rows(lo, hi)))
+            .expect("gram worker thread panicked");
         let n = self.cols;
         let mut g = Matrix::zeros(n, n);
-        let rows = self.rows;
-        let mut i = 0;
+        for p in partials {
+            for (gv, pv) in g.data.iter_mut().zip(&p.data) {
+                *gv += pv;
+            }
+        }
+        mirror_upper(&mut g);
+        g
+    }
+
+    /// Upper-triangle Gram accumulation over rows [r0, r1) — the shared
+    /// microkernel behind `gram` (full range, then mirrored) and
+    /// `gram_with` (one chunk per call). No mirroring here so partials can
+    /// be folded cheaply.
+    fn gram_rows(&self, lo: usize, hi: usize) -> Matrix {
+        debug_assert!(lo <= hi && hi <= self.rows);
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        let rows = hi;
+        let mut i = lo;
         while i + 4 <= rows {
             let r0 = &self.data[i * n..(i + 1) * n];
             let r1 = &self.data[(i + 1) * n..(i + 2) * n];
@@ -197,11 +274,6 @@ impl Matrix {
                 }
             }
             i += 1;
-        }
-        for a in 0..n {
-            for b in 0..a {
-                g[(a, b)] = g[(b, a)];
-            }
         }
         g
     }
@@ -263,6 +335,23 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
 pub(crate) const KC: usize = 64;
 /// GEMM panel width (j-tile).
 pub(crate) const NC: usize = 64;
+/// Output-row tile height of the threaded GEMM. Fixed (never derived from
+/// the worker count): the split schedule is part of the determinism
+/// contract, and 64 rows amortize the per-tile B-panel repacking to < 2%.
+pub(crate) const MM_ROW_TILE: usize = 64;
+/// Input-row chunk height of the threaded Gram fold (multiple of the
+/// 4-row microkernel). Fixed for the same reason as [`MM_ROW_TILE`].
+pub(crate) const GRAM_ROW_CHUNK: usize = 512;
+
+/// Mirror the accumulated upper triangle into the lower one.
+fn mirror_upper(g: &mut Matrix) {
+    let n = g.cols;
+    for a in 0..n {
+        for b in 0..a {
+            g[(a, b)] = g[(b, a)];
+        }
+    }
+}
 
 /// out += a * x, 4-wide unrolled. Each out[j] sees exactly one add per
 /// call, so element-wise accumulation order is untouched by the unroll.
@@ -400,6 +489,53 @@ mod tests {
         assert!(c[(0, 0)].is_nan(), "0*inf skipped: {}", c[(0, 0)]);
         let g = Matrix::from_vec(2, 2, vec![0.0, f64::INFINITY, 1.0, 1.0]).gram();
         assert!(g.data().iter().any(|v| v.is_nan()), "gram dropped NaN");
+    }
+
+    #[test]
+    fn threaded_matmul_bit_identical_to_sequential() {
+        // spans several MM_ROW_TILE tiles so the threading actually splits
+        for &(m, k, n) in &[(129usize, 40usize, 33usize), (256, 64, 64), (300, 7, 130)] {
+            let mut rng = Rng::new((m + k + n) as u64);
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let seq = a.matmul(&b);
+            for workers in [1usize, 2, 4, 8] {
+                let par = a.matmul_with(&b, ParallelPolicy::with_workers(workers));
+                assert_eq!(par, seq, "{m}x{k}x{n} differs at workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matmul_degenerate_shapes() {
+        let p = ParallelPolicy::with_workers(4);
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        assert_eq!(a.matmul_with(&b, p), a.matmul(&b));
+        let a = Matrix::from_vec(1, 1, vec![2.0]);
+        let b = Matrix::from_vec(1, 1, vec![-3.0]);
+        assert_eq!(a.matmul_with(&b, p)[(0, 0)], -6.0);
+    }
+
+    #[test]
+    fn threaded_gram_worker_invariant_and_close_to_explicit() {
+        // > 1 chunk so the fold is exercised
+        let mut rng = Rng::new(42);
+        let a = Matrix::random(GRAM_ROW_CHUNK * 2 + 37, 9, &mut rng);
+        let base = a.gram_with(ParallelPolicy::sequential());
+        for workers in [2usize, 4, 8] {
+            let g = a.gram_with(ParallelPolicy::with_workers(workers));
+            assert_eq!(g, base, "gram bits differ at workers={workers}");
+        }
+        let explicit = a.transpose().matmul(&a);
+        assert!(base.max_abs_diff(&explicit) < 1e-9);
+    }
+
+    #[test]
+    fn gram_with_single_chunk_matches_gram() {
+        let mut rng = Rng::new(43);
+        let a = Matrix::random(GRAM_ROW_CHUNK - 1, 6, &mut rng);
+        assert_eq!(a.gram_with(ParallelPolicy::with_workers(8)), a.gram());
     }
 
     #[test]

@@ -16,18 +16,27 @@
 //! * [`cholesky`] — SPD factorization for the ridge-regularized normal
 //!   equations `(HᵀH + λI) β = HᵀY` (rank-deficiency fallback),
 //! * [`solve`] — triangular solves and the user-facing least-squares entry
-//!   points, including the parallel `lstsq_tsqr`.
+//!   points, including the parallel `lstsq_tsqr`,
+//! * [`policy`] — [`ParallelPolicy`], the single worker-count knob every
+//!   threaded path shares, and the fixed-split schedules behind the
+//!   bit-identical-at-any-worker-count determinism contract.
 
 pub mod cholesky;
 pub mod matrix;
+pub mod policy;
 pub mod qr;
 pub mod solve;
 pub mod tsqr;
 
 pub use cholesky::cholesky_solve;
 pub use matrix::Matrix;
-pub use qr::{householder_qr, householder_qr_owned, householder_qr_reference, QrFactors};
+pub use policy::ParallelPolicy;
+pub use qr::{
+    householder_qr, householder_qr_owned, householder_qr_owned_with,
+    householder_qr_reference, householder_qr_with, QrFactors,
+};
 pub use solve::{
-    lstsq_qr, lstsq_ridge, lstsq_tsqr, solve_lower_triangular, solve_upper_triangular,
+    lstsq_qr, lstsq_qr_with, lstsq_ridge, lstsq_tsqr, solve_lower_triangular,
+    solve_upper_triangular,
 };
 pub use tsqr::TsqrAccumulator;

@@ -1,0 +1,184 @@
+//! `ParallelPolicy` — the one knob every threaded linalg path shares.
+//!
+//! The substrate's determinism contract (the paper's §7.3 robustness
+//! requirement) is: **work is split along schedules that depend only on
+//! problem shape and compile-time tile constants, never on the worker
+//! count**. Workers then execute disjoint pieces of that fixed schedule and
+//! the pieces are reduced in schedule order. Under that discipline the
+//! worker count can only change *when* a piece is computed, not *what* is
+//! computed or *in which order* partial results are folded — so every
+//! threaded kernel is bit-identical at 1, 2, 4, 8, … workers:
+//!
+//! * [`Matrix::matmul_with`](super::Matrix::matmul_with) — output row
+//!   tiles are disjoint, each computed by the identical inner kernel, so
+//!   the result is bit-identical to the sequential tiled GEMM.
+//! * [`Matrix::gram_with`](super::Matrix::gram_with) — fixed input row
+//!   chunks, partial Grams folded in chunk order.
+//! * [`TsqrAccumulator::reduce`](super::TsqrAccumulator::reduce) — fixed
+//!   pairwise tree over fixed-height row blocks.
+//! * `householder_qr_with` / `lstsq_qr_with` — the trailing panel updates
+//!   are `matmul_with` GEMMs, so the factors inherit the GEMM's bit
+//!   stability.
+//!
+//! Callers plumb one `ParallelPolicy` value instead of ad-hoc `workers:
+//! usize` arguments; `CpuElmTrainer` and the report timers construct it
+//! once per run.
+
+use anyhow::{anyhow, Result};
+
+/// Worker-count policy for the threaded linalg paths. Carries no split
+/// information on purpose: splits are fixed by the kernels (see the module
+/// docs), the policy only says how many threads execute them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelPolicy {
+    /// Number of worker threads (>= 1). 1 means run on the caller thread.
+    pub workers: usize,
+}
+
+impl ParallelPolicy {
+    /// Single-threaded: everything runs on the caller's thread.
+    pub fn sequential() -> ParallelPolicy {
+        ParallelPolicy { workers: 1 }
+    }
+
+    /// Explicit worker count (clamped to >= 1).
+    pub fn with_workers(workers: usize) -> ParallelPolicy {
+        ParallelPolicy { workers: workers.max(1) }
+    }
+
+    /// One worker per available core, capped at 8 (the ELM solve saturates
+    /// memory bandwidth before it saturates more cores than that).
+    pub fn auto() -> ParallelPolicy {
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        ParallelPolicy { workers: cores.clamp(1, 8) }
+    }
+}
+
+impl Default for ParallelPolicy {
+    fn default() -> ParallelPolicy {
+        ParallelPolicy::sequential()
+    }
+}
+
+/// Fixed tiling of `[0, n)` into `(lo, hi)` ranges of height `tile` (the
+/// last tile may be short). The boundaries are a function of `(n, tile)`
+/// alone — **never** of a worker count — which is what makes every parallel
+/// schedule over these tiles reduce identically (see the module docs).
+pub fn fixed_tiles(n: usize, tile: usize) -> Vec<(usize, usize)> {
+    let tile = tile.max(1);
+    let mut out = Vec::with_capacity(n.div_ceil(tile));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + tile).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Order-preserving parallel map over owned items: contiguous chunks are
+/// handed to `policy.workers` scoped threads and the per-chunk outputs are
+/// reassembled in chunk order, so the result is independent of scheduling.
+/// (Shared by the TSQR tree, the threaded GEMM/Gram, and the coordinator's
+/// CPU pipeline.)
+pub(crate) fn par_map<T, U, F>(items: Vec<T>, policy: ParallelPolicy, f: F) -> Result<Vec<U>>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> Result<U> + Sync,
+{
+    let total = items.len();
+    let workers = policy.workers.max(1).min(total.max(1));
+    if workers == 1 {
+        return items.into_iter().map(&f).collect();
+    }
+    // contiguous chunks, sizes differing by at most one
+    let base = total / workers;
+    let extra = total % workers;
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
+    let mut rest = items;
+    for w in 0..workers {
+        let take = base + usize::from(w < extra);
+        let tail = rest.split_off(take.min(rest.len()));
+        chunks.push(rest);
+        rest = tail;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                scope.spawn(move || {
+                    chunk.into_iter().map(f).collect::<Result<Vec<U>>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(total);
+        for h in handles {
+            let part = h
+                .join()
+                .map_err(|_| anyhow!("parallel worker thread panicked"))??;
+            out.extend(part);
+        }
+        Ok(out)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_tiles_cover_exactly() {
+        for (n, tile) in [(0usize, 7usize), (1, 7), (7, 7), (8, 7), (100, 32)] {
+            let tiles = fixed_tiles(n, tile);
+            let total: usize = tiles.iter().map(|(lo, hi)| hi - lo).sum();
+            assert_eq!(total, n);
+            let mut pos = 0;
+            for (lo, hi) in tiles {
+                assert_eq!(lo, pos);
+                assert!(hi > lo && hi - lo <= tile);
+                pos = hi;
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_tiles_ignore_zero_tile() {
+        assert_eq!(fixed_tiles(3, 0), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn par_map_preserves_order_any_workers() {
+        let items: Vec<usize> = (0..37).collect();
+        let want: Vec<usize> = items.iter().map(|x| x * 3).collect();
+        for workers in [1usize, 2, 4, 8, 64] {
+            let got = par_map(items.clone(), ParallelPolicy::with_workers(workers), |x| {
+                Ok(x * 3)
+            })
+            .unwrap();
+            assert_eq!(got, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_map_propagates_errors() {
+        let items: Vec<usize> = (0..10).collect();
+        let res = par_map(items, ParallelPolicy::with_workers(4), |x| {
+            if x == 7 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn policy_constructors_clamp() {
+        assert_eq!(ParallelPolicy::with_workers(0).workers, 1);
+        assert_eq!(ParallelPolicy::sequential().workers, 1);
+        let auto = ParallelPolicy::auto().workers;
+        assert!((1..=8).contains(&auto));
+    }
+}

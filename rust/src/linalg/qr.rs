@@ -12,24 +12,31 @@
 //!   C ← C − V · Tᵀ · (Vᵀ C)                         (trailing update)
 //! ```
 //!
-//! The factor layout is unchanged from the classic algorithm — Householder
-//! vectors below the diagonal of `work` (unit diagonal implied), `betas`
-//! alongside — so `r()`, `apply_qt()` and `q()` are representation-
-//! agnostic. `householder_qr_reference` keeps the unblocked
-//! column-at-a-time loop as the numerical baseline the property tests
-//! compare against.
+//! The packed panels and their T factors are **kept** on the factor object
+//! (`panels` / `ts`): [`QrFactors::apply_qt`] applies Qᵀ panel by panel as
+//! three small dense ops per panel (s = Vᵀb, u = Tᵀs, b −= V·u) over the
+//! contiguous panel storage, instead of the seed's column-at-a-time walk
+//! over the strided `work` matrix. `householder_qr_reference` keeps the
+//! unblocked loop (and the column-at-a-time [`QrFactors::apply_qt_reference`])
+//! as the numerical baseline the property tests compare against.
 //!
 //! # Determinism
 //!
-//! The panel width is a compile-time constant and the factorization is
-//! single-threaded, so results are bit-identical run to run. For inputs
-//! with n ≤ PANEL the blocked path degenerates to the reference loop and
-//! is bit-identical to it; beyond that the trailing GEMM reassociates the
-//! update sums, which the tests bound at 1e-10.
+//! The panel width is a compile-time constant and the factorization's only
+//! threaded pieces are the trailing-update GEMMs, routed through
+//! [`Matrix::matmul_with`] — which is bit-identical to the sequential GEMM
+//! at any [`ParallelPolicy`] worker count — so the factors (and therefore
+//! Qᵀb and R) are bit-identical for any worker count. For inputs with
+//! n ≤ PANEL the blocked path degenerates to the reference loop and its
+//! `work`/`betas` are bit-identical to it; beyond that the trailing GEMM
+//! reassociates the update sums, which the tests bound at 1e-10. The
+//! panel-resident `apply_qt` likewise reassociates relative to the
+//! column-at-a-time loop (bounded by tests, not bitwise).
 
 use anyhow::{bail, Result};
 
 use super::matrix::Matrix;
+use super::policy::ParallelPolicy;
 
 /// Panel width of the blocked factorization.
 pub const PANEL: usize = 32;
@@ -41,6 +48,16 @@ pub struct QrFactors {
     work: Matrix,
     /// beta_j = 2 / (v_jᵀ v_j)
     betas: Vec<f64>,
+    /// Packed column-major panels (ml×nb each, ml = m − j0): the
+    /// panel-resident V factors `apply_qt` streams. Empty on the
+    /// reference path. Deliberate space-for-time trade: this duplicates
+    /// the subdiagonal of `work` (~m·n f64, transient — factors are
+    /// dropped right after the solve's single Qᵀb) so the apply walks
+    /// contiguous memory instead of stride-n columns.
+    panels: Vec<Vec<f64>>,
+    /// Per-panel upper-triangular T of the compact-WY form (parallel to
+    /// `panels`). Empty on the reference path.
+    ts: Vec<Matrix>,
     pub m: usize,
     pub n: usize,
 }
@@ -49,28 +66,46 @@ pub struct QrFactors {
 /// matrices are dense and generically full-rank; the ridge path covers the
 /// degenerate case.
 pub fn householder_qr(a: &Matrix) -> Result<QrFactors> {
-    householder_qr_owned(a.clone())
+    householder_qr_owned_with(a.clone(), ParallelPolicy::sequential())
+}
+
+/// Blocked QR with the trailing updates threaded per `policy`. Bit-
+/// identical to [`householder_qr`] at any worker count (see module docs).
+pub fn householder_qr_with(a: &Matrix, policy: ParallelPolicy) -> Result<QrFactors> {
+    householder_qr_owned_with(a.clone(), policy)
 }
 
 /// Blocked QR taking the input by value — the TSQR accumulator's path,
 /// which would otherwise clone every block.
 pub fn householder_qr_owned(a: Matrix) -> Result<QrFactors> {
+    householder_qr_owned_with(a, ParallelPolicy::sequential())
+}
+
+/// By-value blocked QR with threaded trailing updates.
+pub fn householder_qr_owned_with(a: Matrix, policy: ParallelPolicy) -> Result<QrFactors> {
     let (m, n) = (a.rows, a.cols);
     if m < n {
         bail!("householder_qr requires rows >= cols, got {m}x{n}");
     }
     let mut w = a;
     let mut betas = vec![0.0; n];
+    let mut panels = Vec::with_capacity(n.div_ceil(PANEL));
+    let mut ts = Vec::with_capacity(n.div_ceil(PANEL));
     let mut j0 = 0;
     while j0 < n {
         let nb = PANEL.min(n - j0);
-        factor_panel(&mut w, &mut betas, j0, nb);
+        let pan = factor_panel(&mut w, &mut betas, j0, nb);
+        let vt = panel_vt(&pan, m - j0, nb);
+        let v = vt.transpose(); // shared by T construction and the trailing GEMM
+        let t = panel_t(&vt, &v, &betas[j0..j0 + nb]);
         if j0 + nb < n {
-            apply_panel_to_trailing(&mut w, &betas, j0, nb);
+            apply_panel_to_trailing(&mut w, &vt, &v, &t, j0, nb, policy);
         }
+        panels.push(pan);
+        ts.push(t);
         j0 += nb;
     }
-    Ok(QrFactors { work: w, betas, m, n })
+    Ok(QrFactors { work: w, betas, panels, ts, m, n })
 }
 
 /// Unblocked column-at-a-time Householder QR — the seed implementation,
@@ -124,12 +159,15 @@ pub fn householder_qr_reference(a: &Matrix) -> Result<QrFactors> {
         w[(j, j)] = alpha;
         betas[j] = beta;
     }
-    Ok(QrFactors { work: w, betas, m, n })
+    Ok(QrFactors { work: w, betas, panels: Vec::new(), ts: Vec::new(), m, n })
 }
 
 /// Factor columns [j0, j0+nb) on a packed column-major copy of the panel
-/// (rows j0..m), then write the factored panel back into `w`.
-fn factor_panel(w: &mut Matrix, betas: &mut [f64], j0: usize, nb: usize) {
+/// (rows j0..m), write the factored panel back into `w`, and return the
+/// packed copy (column c holds R values above the diagonal, alpha at it,
+/// and the normalized Householder tail below — `apply_qt` streams the
+/// tails).
+fn factor_panel(w: &mut Matrix, betas: &mut [f64], j0: usize, nb: usize) -> Vec<f64> {
     let m = w.rows;
     let n = w.cols;
     let ml = m - j0; // local row count
@@ -190,33 +228,32 @@ fn factor_panel(w: &mut Matrix, betas: &mut [f64], j0: usize, nb: usize) {
             w.data_mut()[base + c] = pan[c * ml + i];
         }
     }
+    pan
 }
 
-/// Apply the panel's accumulated reflectors to the trailing matrix:
-/// C ← C − V Tᵀ (Vᵀ C), with V read back out of `w`'s subdiagonal.
-fn apply_panel_to_trailing(w: &mut Matrix, betas: &[f64], j0: usize, nb: usize) {
-    let m = w.rows;
-    let n = w.cols;
-    let ml = m - j0;
-    let c0 = j0 + nb;
-
-    // Vᵀ: row c = panel column c with implied unit diagonal, zeros above
+/// Vᵀ of a factored packed panel: row c = panel column c with implied unit
+/// diagonal, zeros above it (the R values stored there are masked out).
+fn panel_vt(pan: &[f64], ml: usize, nb: usize) -> Matrix {
     let mut vt = Matrix::zeros(nb, ml);
     for c in 0..nb {
         let row = vt.row_mut(c);
         row[c] = 1.0;
-        for i in c + 1..ml {
-            row[i] = w[(j0 + i, j0 + c)];
-        }
+        row[c + 1..ml].copy_from_slice(&pan[c * ml + c + 1..(c + 1) * ml]);
     }
-    let v = vt.transpose();
+    vt
+}
 
-    // forward-columnwise T (LAPACK larft): T[c][c] = beta_c,
-    // T[0..c, c] = -beta_c * T[0..c, 0..c] * (Vᵀ v_c)
-    let vtv = vt.matmul(&v);
+/// Forward-columnwise T of the compact-WY form (LAPACK larft):
+/// T[c][c] = beta_c, T[0..c, c] = -beta_c * T[0..c, 0..c] * (Vᵀ v_c).
+/// A zero beta (H_c = I) yields an all-zero row and column c.
+/// `v` must be `vt.transpose()` (the caller shares it with the trailing
+/// update).
+fn panel_t(vt: &Matrix, v: &Matrix, betas: &[f64]) -> Matrix {
+    let nb = vt.rows;
+    let vtv = vt.matmul(v);
     let mut t = Matrix::zeros(nb, nb);
     for c in 0..nb {
-        let bc = betas[j0 + c];
+        let bc = betas[c];
         if bc == 0.0 {
             continue; // H_c = I: zero row/column in T
         }
@@ -229,12 +266,31 @@ fn apply_panel_to_trailing(w: &mut Matrix, betas: &[f64], j0: usize, nb: usize) 
         }
         t[(c, c)] = bc;
     }
+    t
+}
+
+/// Apply the panel's accumulated reflectors to the trailing matrix:
+/// C ← C − V Tᵀ (Vᵀ C), GEMMs threaded per `policy`. `v` must be
+/// `vt.transpose()` (shared with `panel_t`).
+fn apply_panel_to_trailing(
+    w: &mut Matrix,
+    vt: &Matrix,
+    v: &Matrix,
+    t: &Matrix,
+    j0: usize,
+    nb: usize,
+    policy: ParallelPolicy,
+) {
+    let m = w.rows;
+    let n = w.cols;
+    let ml = m - j0;
+    let c0 = j0 + nb;
 
     // three GEMMs on the trailing block
     let c_mat = w.submatrix(j0, m, c0, n);
-    let w1 = vt.matmul(&c_mat); // nb × nt
-    let w2 = t.transpose().matmul(&w1); // nb × nt
-    let d = v.matmul(&w2); // ml × nt
+    let w1 = vt.matmul_with(&c_mat, policy); // nb × nt
+    let w2 = t.transpose().matmul(&w1); // nb × nt (tiny: stays sequential)
+    let d = v.matmul_with(&w2, policy); // ml × nt
     let nt = n - c0;
     for i in 0..ml {
         let base = (j0 + i) * n + c0;
@@ -258,7 +314,61 @@ impl QrFactors {
 
     /// Apply Qᵀ to a length-m vector in place; the first n entries are then
     /// the projection used by the least-squares solve.
+    ///
+    /// Blocked factors take the panel-resident path: per panel,
+    /// s = Vᵀ b_panel, u = Tᵀ s, b_panel −= V u — three contiguous passes
+    /// over the packed panel instead of a strided walk per column.
+    /// Reference factors (no stored panels) fall back to the
+    /// column-at-a-time loop.
     pub fn apply_qt(&self, b: &mut [f64]) {
+        assert_eq!(b.len(), self.m);
+        if self.panels.is_empty() && self.n > 0 {
+            self.apply_qt_reference(b);
+            return;
+        }
+        let mut s = [0.0f64; PANEL];
+        let mut u = [0.0f64; PANEL];
+        for (pi, (pan, t)) in self.panels.iter().zip(&self.ts).enumerate() {
+            let j0 = pi * PANEL;
+            let ml = self.m - j0;
+            let nb = t.rows;
+            let bl = &mut b[j0..];
+            // s = Vᵀ b (v_c diagonal 1 implied, tails contiguous in pan)
+            for c in 0..nb {
+                let tail = &pan[c * ml + c + 1..(c + 1) * ml];
+                let mut acc = bl[c];
+                for (vx, bx) in tail.iter().zip(&bl[c + 1..ml]) {
+                    acc += vx * bx;
+                }
+                s[c] = acc;
+            }
+            // u = Tᵀ s (T upper triangular: u[c] sums rows 0..=c)
+            for c in 0..nb {
+                let mut acc = 0.0;
+                for r in 0..=c {
+                    acc += t[(r, c)] * s[r];
+                }
+                u[c] = acc;
+            }
+            // b -= V u
+            for c in 0..nb {
+                let uc = u[c];
+                if uc == 0.0 {
+                    continue; // zero-beta column (H_c = I) contributes nothing
+                }
+                bl[c] -= uc;
+                let tail = &pan[c * ml + c + 1..(c + 1) * ml];
+                for (vx, bx) in tail.iter().zip(&mut bl[c + 1..ml]) {
+                    *bx -= uc * vx;
+                }
+            }
+        }
+    }
+
+    /// The seed's column-at-a-time Qᵀb — the oracle the panel-resident
+    /// path is pinned to by the property tests, and the execution path for
+    /// reference factors.
+    pub fn apply_qt_reference(&self, b: &mut [f64]) {
         assert_eq!(b.len(), self.m);
         for j in 0..self.n {
             let beta = self.betas[j];
@@ -305,6 +415,16 @@ impl QrFactors {
             }
         }
         q
+    }
+
+    /// Test hook: the per-column betas (shared by both factor layouts).
+    pub fn betas(&self) -> &[f64] {
+        &self.betas
+    }
+
+    /// Test hook: the working matrix holding R and the reflector tails.
+    pub fn work(&self) -> &Matrix {
+        &self.work
     }
 }
 
@@ -369,6 +489,24 @@ mod tests {
     }
 
     #[test]
+    fn threaded_qr_bit_identical_across_worker_counts() {
+        // the trailing updates are matmul_with GEMMs: the factors must be
+        // bit-identical whatever the policy says
+        let mut rng = Rng::new(31);
+        let a = Matrix::random(300, 80, &mut rng);
+        let base = householder_qr(&a).unwrap();
+        for workers in [2usize, 4, 8] {
+            let f = householder_qr_with(&a, ParallelPolicy::with_workers(workers)).unwrap();
+            assert_eq!(f.work, base.work, "work differs at workers={workers}");
+            assert_eq!(f.betas, base.betas, "betas differ at workers={workers}");
+            assert_eq!(f.ts.len(), base.ts.len());
+            for (tw, tb) in f.ts.iter().zip(&base.ts) {
+                assert_eq!(tw, tb, "T differs at workers={workers}");
+            }
+        }
+    }
+
+    #[test]
     fn qt_application_matches_explicit() {
         let mut rng = Rng::new(9);
         let a = Matrix::random(12, 4, &mut rng);
@@ -379,6 +517,28 @@ mod tests {
         let explicit = f.q().t_matvec(&b);
         for j in 0..4 {
             assert!((qtb[j] - explicit[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn panel_qt_matches_column_loop_multi_panel() {
+        // same factors, both application paths: the panel-resident Qᵀb
+        // must track the column-at-a-time oracle over the full vector
+        for &(m, n, seed) in &[(150usize, 50usize, 41u64), (90, 90, 42), (400, 96, 43)] {
+            let mut rng = Rng::new(seed);
+            let a = Matrix::random(m, n, &mut rng);
+            let f = householder_qr(&a).unwrap();
+            let b: Vec<f64> = (0..m).map(|i| (i as f64 * 0.37).cos()).collect();
+            let mut blocked = b.clone();
+            let mut scalar = b;
+            f.apply_qt(&mut blocked);
+            f.apply_qt_reference(&mut scalar);
+            let worst = blocked
+                .iter()
+                .zip(&scalar)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f64, f64::max);
+            assert!(worst < 1e-9, "{m}x{n}: panel vs column Qᵀb drift {worst}");
         }
     }
 
@@ -417,5 +577,15 @@ mod tests {
         let f = householder_qr(&a).unwrap();
         let qr = f.q().matmul(&f.r());
         assert!(qr.max_abs_diff(&a) < 1e-10);
+        // and the panel-resident Qᵀb must agree with the column loop
+        // around the identity reflector
+        let b: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+        let mut blocked = b.clone();
+        let mut scalar = b;
+        f.apply_qt(&mut blocked);
+        f.apply_qt_reference(&mut scalar);
+        for (x, y) in blocked.iter().zip(&scalar) {
+            assert!((x - y).abs() < 1e-10);
+        }
     }
 }

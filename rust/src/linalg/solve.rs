@@ -1,10 +1,17 @@
 //! Triangular solves and the user-facing least-squares entry points.
+//!
+//! Every entry point has a `ParallelPolicy`-threaded form (`lstsq_qr_with`,
+//! `lstsq_tsqr`); the policy-free names are sequential wrappers. The
+//! threaded forms are **bit-identical** to their sequential twins at any
+//! worker count — the GEMM/Gram/TSQR splits are fixed schedules (see
+//! [`super::policy`]) — so callers may thread freely without changing β.
 
 use anyhow::{bail, Result};
 
 use super::cholesky::cholesky_solve;
 use super::matrix::Matrix;
-use super::qr::householder_qr;
+use super::policy::ParallelPolicy;
+use super::qr::householder_qr_with;
 
 /// Solve L y = b for lower-triangular L (forward substitution).
 pub fn solve_lower_triangular(l: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
@@ -59,30 +66,40 @@ pub(crate) fn upper_triangular_deficient(r: &Matrix) -> bool {
 
 /// Least squares min ‖Ax − b‖ via Householder QR: the paper's §4.2 method
 /// (QR then back-substitution, never forming the pseudo-inverse).
+/// Sequential wrapper around [`lstsq_qr_with`].
 pub fn lstsq_qr(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    lstsq_qr_with(a, b, ParallelPolicy::sequential())
+}
+
+/// Least squares via the blocked Householder QR with the trailing-update
+/// GEMMs (and the rank-deficiency ridge fallback's Gram) threaded per
+/// `policy`. Bit-identical to [`lstsq_qr`] at any worker count: the GEMM
+/// row tiles and Gram chunks are fixed schedules, and Qᵀb runs the
+/// panel-resident single-threaded path either way.
+pub fn lstsq_qr_with(a: &Matrix, b: &[f64], policy: ParallelPolicy) -> Result<Vec<f64>> {
     if b.len() != a.rows {
         bail!("lstsq shape mismatch: A is {}x{}, b has {}", a.rows, a.cols, b.len());
     }
-    let f = householder_qr(a)?;
+    let f = householder_qr_with(a, policy)?;
     let mut z = b.to_vec();
     f.apply_qt(&mut z);
     let r = f.r();
     if upper_triangular_deficient(&r) {
-        return lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8);
+        return lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8);
     }
     match solve_upper_triangular(&r, &z[..a.cols]) {
         Ok(x) => Ok(x),
-        Err(_) => lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8),
+        Err(_) => lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8),
     }
 }
 
 /// Least squares via the parallel TSQR tree (§4.2): A is split into
-/// fixed-height row blocks (independent of `workers` — only the workers
-/// executing the tree vary), each factored independently, then reduced
-/// pairwise. Bit-identical for any `workers` (see [`super::tsqr`]); the
-/// answer matches [`lstsq_qr`] to factorization rounding, including the
-/// same rank-deficiency guard and ridge fallback.
-pub fn lstsq_tsqr(a: &Matrix, b: &[f64], workers: usize) -> Result<Vec<f64>> {
+/// fixed-height row blocks (independent of the worker count — only the
+/// workers executing the tree vary), each factored independently, then
+/// reduced pairwise. Bit-identical for any `policy.workers` (see
+/// [`super::tsqr`]); the answer matches [`lstsq_qr`] to factorization
+/// rounding, including the same rank-deficiency guard and ridge fallback.
+pub fn lstsq_tsqr(a: &Matrix, b: &[f64], policy: ParallelPolicy) -> Result<Vec<f64>> {
     if b.len() != a.rows {
         bail!("lstsq shape mismatch: A is {}x{}, b has {}", a.rows, a.cols, b.len());
     }
@@ -90,7 +107,7 @@ pub fn lstsq_tsqr(a: &Matrix, b: &[f64], workers: usize) -> Result<Vec<f64>> {
         bail!("lstsq_tsqr requires rows >= cols, got {}x{}", a.rows, a.cols);
     }
     // block height: tall enough to amortize the per-block QR, fixed so the
-    // tree shape (and therefore the bits) never depends on `workers`
+    // tree shape (and therefore the bits) never depends on the worker count
     let block = (4 * a.cols).max(256);
     let mut blocks = Vec::with_capacity(a.rows.div_ceil(block));
     let mut i = 0;
@@ -99,15 +116,15 @@ pub fn lstsq_tsqr(a: &Matrix, b: &[f64], workers: usize) -> Result<Vec<f64>> {
         blocks.push((a.submatrix(i, hi, 0, a.cols), b[i..hi].to_vec()));
         i = hi;
     }
-    let acc = super::tsqr::TsqrAccumulator::reduce(a.cols, blocks, workers)?;
+    let acc = super::tsqr::TsqrAccumulator::reduce(a.cols, blocks, policy)?;
     // TSQR's R has the same diagonal magnitudes as the direct QR's, so the
     // lstsq_qr rank guard applies unchanged
     if acc.r_factor().map_or(true, upper_triangular_deficient) {
-        return lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8);
+        return lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8);
     }
     match acc.solve() {
         Ok(x) => Ok(x),
-        Err(_) => lstsq_ridge_from_parts(&a.gram(), &a.t_matvec(b), 1e-8),
+        Err(_) => lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8),
     }
 }
 
@@ -212,7 +229,7 @@ mod tests {
         let a = Matrix::random(300, 7, &mut rng);
         let b: Vec<f64> = (0..300).map(|i| (i as f64 * 0.13).sin()).collect();
         let xq = lstsq_qr(&a, &b).unwrap();
-        let xt = lstsq_tsqr(&a, &b, 4).unwrap();
+        let xt = lstsq_tsqr(&a, &b, ParallelPolicy::with_workers(4)).unwrap();
         for (p, q) in xt.iter().zip(&xq) {
             assert!((p - q).abs() < 1e-8, "{p} vs {q}");
         }
@@ -226,14 +243,26 @@ mod tests {
             dup[(i, 7)] = a[(i, 0)];
         }
         let xq = lstsq_qr(&dup, &b).unwrap();
-        let xt = lstsq_tsqr(&dup, &b, 4).unwrap();
+        let xt = lstsq_tsqr(&dup, &b, ParallelPolicy::with_workers(4)).unwrap();
         assert!(xt.iter().all(|v| v.is_finite()));
         for (p, q) in xt.iter().zip(&xq) {
             assert!((p - q).abs() < 1e-9, "ridge fallbacks differ: {p} vs {q}");
         }
         // underdetermined stays an error (parity with householder_qr)
         let wide = Matrix::zeros(3, 5);
-        assert!(lstsq_tsqr(&wide, &[0.0; 3], 2).is_err());
+        assert!(lstsq_tsqr(&wide, &[0.0; 3], ParallelPolicy::with_workers(2)).is_err());
+    }
+
+    #[test]
+    fn threaded_lstsq_qr_bit_identical_to_sequential() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::random(500, 60, &mut rng);
+        let b: Vec<f64> = (0..500).map(|i| (i as f64 * 0.07).sin()).collect();
+        let base = lstsq_qr(&a, &b).unwrap();
+        for workers in [2usize, 4, 8] {
+            let x = lstsq_qr_with(&a, &b, ParallelPolicy::with_workers(workers)).unwrap();
+            assert_eq!(x, base, "β bits differ at workers={workers}");
+        }
     }
 
     #[test]

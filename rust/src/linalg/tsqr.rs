@@ -13,8 +13,9 @@
 //!   the coordinator's online mode.
 //! * **Tree** ([`TsqrAccumulator::reduce`]) — the §4.2 parallel reduction:
 //!   every block is factored to its (R, z) leaf independently (sharded over
-//!   `std::thread::scope` workers), then leaves are merged pairwise,
-//!   level by level, in index order — log₂(blocks) merge depth.
+//!   `std::thread::scope` workers per the [`ParallelPolicy`]), then leaves
+//!   are merged pairwise, level by level, in index order — log₂(blocks)
+//!   merge depth.
 //!
 //! # Determinism
 //!
@@ -28,9 +29,10 @@
 //! equations — the reason the paper uses QR rather than the explicit
 //! pseudo-inverse.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use super::matrix::Matrix;
+use super::policy::{par_map, ParallelPolicy};
 use super::qr::householder_qr_owned;
 use super::solve::solve_upper_triangular;
 
@@ -143,12 +145,12 @@ impl TsqrAccumulator {
     }
 
     /// Parallel tree reduction over a block list: leaves sharded across
-    /// `workers` scoped threads, then in-order pairwise merges at log₂
-    /// depth. Bit-identical for any `workers` (see module docs).
+    /// `policy.workers` scoped threads, then in-order pairwise merges at
+    /// log₂ depth. Bit-identical for any worker count (see module docs).
     pub fn reduce(
         n_cols: usize,
         blocks: Vec<(Matrix, Vec<f64>)>,
-        workers: usize,
+        policy: ParallelPolicy,
     ) -> Result<TsqrAccumulator> {
         let mut rows_total = 0usize;
         for (h, y) in &blocks {
@@ -168,7 +170,7 @@ impl TsqrAccumulator {
 
         // leaves: every block factored independently, in parallel
         let mut level =
-            par_map(blocks, workers, move |(h, y)| block_factors(n_cols, h, &y))?;
+            par_map(blocks, policy, move |(h, y)| block_factors(n_cols, h, &y))?;
 
         // in-order pairwise merges until one node remains
         while level.len() > 1 {
@@ -177,7 +179,7 @@ impl TsqrAccumulator {
             while let (Some(a), b) = (it.next(), it.next()) {
                 pairs.push((a, b));
             }
-            level = par_map(pairs, workers, move |(a, b)| match b {
+            level = par_map(pairs, policy, move |(a, b)| match b {
                 Some(b) => merge_pair(n_cols, a, b),
                 None => Ok(a), // odd tail passes through
             })?;
@@ -205,53 +207,6 @@ impl TsqrAccumulator {
     pub fn z_factor(&self) -> &[f64] {
         &self.z
     }
-}
-
-/// Order-preserving parallel map over owned items: contiguous chunks are
-/// handed to `workers` scoped threads and the per-chunk outputs are
-/// reassembled in chunk order, so the result is independent of scheduling.
-/// (Shared with the coordinator's CPU pipeline.)
-pub(crate) fn par_map<T, U, F>(items: Vec<T>, workers: usize, f: F) -> Result<Vec<U>>
-where
-    T: Send,
-    U: Send,
-    F: Fn(T) -> Result<U> + Sync,
-{
-    let total = items.len();
-    let workers = workers.max(1).min(total.max(1));
-    if workers == 1 {
-        return items.into_iter().map(&f).collect();
-    }
-    // contiguous chunks, sizes differing by at most one
-    let base = total / workers;
-    let extra = total % workers;
-    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
-    let mut rest = items;
-    for w in 0..workers {
-        let take = base + usize::from(w < extra);
-        let tail = rest.split_off(take.min(rest.len()));
-        chunks.push(rest);
-        rest = tail;
-    }
-    let f = &f;
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = chunks
-            .into_iter()
-            .map(|chunk| {
-                scope.spawn(move || {
-                    chunk.into_iter().map(f).collect::<Result<Vec<U>>>()
-                })
-            })
-            .collect();
-        let mut out = Vec::with_capacity(total);
-        for h in handles {
-            let part = h
-                .join()
-                .map_err(|_| anyhow!("TSQR worker thread panicked"))??;
-            out.extend(part);
-        }
-        Ok(out)
-    })
 }
 
 #[cfg(test)]
@@ -341,10 +296,17 @@ mod tests {
     fn tree_reduce_bit_identical_across_worker_counts() {
         let (a, b) = random_problem(610, 9, 8);
         let blocks = blocks_of(&a, &b, 47); // 13 blocks, odd tails in the tree
-        let base = TsqrAccumulator::reduce(9, blocks.clone(), 1).unwrap();
+        let base =
+            TsqrAccumulator::reduce(9, blocks.clone(), ParallelPolicy::sequential())
+                .unwrap();
         let base_beta = base.solve().unwrap();
         for workers in [2usize, 4, 8] {
-            let acc = TsqrAccumulator::reduce(9, blocks.clone(), workers).unwrap();
+            let acc = TsqrAccumulator::reduce(
+                9,
+                blocks.clone(),
+                ParallelPolicy::with_workers(workers),
+            )
+            .unwrap();
             assert_eq!(
                 acc.r_factor().unwrap(),
                 base.r_factor().unwrap(),
@@ -360,7 +322,9 @@ mod tests {
     fn tree_reduce_matches_streaming_fold() {
         let (a, b) = random_problem(300, 6, 9);
         let blocks = blocks_of(&a, &b, 50);
-        let tree = TsqrAccumulator::reduce(6, blocks.clone(), 4).unwrap();
+        let tree =
+            TsqrAccumulator::reduce(6, blocks.clone(), ParallelPolicy::with_workers(4))
+                .unwrap();
         let mut stream = TsqrAccumulator::new(6);
         for (hb, yb) in blocks {
             stream.push_block(hb, &yb).unwrap();
@@ -374,12 +338,18 @@ mod tests {
     #[test]
     fn tree_reduce_single_and_empty() {
         let (a, b) = random_problem(40, 4, 10);
-        let one = TsqrAccumulator::reduce(4, vec![(a.clone(), b.clone())], 4).unwrap();
+        let one = TsqrAccumulator::reduce(
+            4,
+            vec![(a.clone(), b.clone())],
+            ParallelPolicy::with_workers(4),
+        )
+        .unwrap();
         let direct = lstsq_qr(&a, &b).unwrap();
         for (g, w) in one.solve().unwrap().iter().zip(&direct) {
             assert!((g - w).abs() < 1e-8);
         }
-        let empty = TsqrAccumulator::reduce(4, vec![], 4).unwrap();
+        let empty =
+            TsqrAccumulator::reduce(4, vec![], ParallelPolicy::with_workers(4)).unwrap();
         assert!(empty.solve().is_err());
     }
 
@@ -415,6 +385,11 @@ mod tests {
         let mut acc = TsqrAccumulator::new(4);
         let (a, b) = random_problem(8, 6, 6);
         assert!(acc.push_block(a, &b).is_err());
-        assert!(TsqrAccumulator::reduce(4, vec![random_problem(8, 6, 7)], 2).is_err());
+        assert!(TsqrAccumulator::reduce(
+            4,
+            vec![random_problem(8, 6, 7)],
+            ParallelPolicy::with_workers(2)
+        )
+        .is_err());
     }
 }

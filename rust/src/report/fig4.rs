@@ -1,13 +1,16 @@
 //! Fig 4: Opt-PR-ELM (BS=32) speedup as M grows 5 → 100 — gpusim at the
 //! paper's sizes plus the measured pipeline-vs-sequential sweep at
-//! `ctx.scale` on this machine.
+//! `ctx.scale` on this machine. The measured sweep runs the CPU parallel
+//! trainer (`CpuElmTrainer`, threaded via one [`ParallelPolicy`]), so it
+//! needs no PJRT artifacts and works on offline builds.
 
 use anyhow::Result;
 
-use crate::coordinator::PrElmTrainer;
+use crate::coordinator::CpuElmTrainer;
 use crate::data::spec::registry;
 use crate::elm::{SrElmModel, TrainOptions, ALL_ARCHS};
 use crate::gpusim::{cpu_host, simulate, tesla_k20m, SimConfig, Variant};
+use crate::linalg::ParallelPolicy;
 use crate::util::table::Table;
 use crate::util::timer::time_once;
 
@@ -41,12 +44,14 @@ pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
         model_t.row(row);
     }
 
-    // measured: this machine's pipeline vs sequential at ctx.scale
-    let trainer = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+    // measured: this machine's CPU parallel pipeline vs sequential at
+    // ctx.scale, one ParallelPolicy for the whole sweep
+    let trainer = CpuElmTrainer::with_policy(ParallelPolicy::with_workers(ctx.workers));
     let mut meas_t = Table::new(
         &format!(
-            "Fig 4 (measured) — pipeline vs sequential speedup vs M, energy_consumption @ scale {}",
-            ctx.scale
+            "Fig 4 (measured) — CPU pipeline ({} workers) vs sequential speedup vs M, \
+             energy_consumption @ scale {}",
+            trainer.policy.workers, ctx.scale
         ),
         &["Architecture", "M=5", "M=10", "M=20", "M=50", "M=100"],
     );
@@ -56,7 +61,7 @@ pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
             let min_n = ((3 * m + 16 + d.q) as f64 / d.train_frac()) as usize + d.q;
             let scale = ctx.scale.max(min_n as f64 / d.n_instances as f64);
             let (train, _test) = prepare(&d, scale, ctx.seed)?;
-            let _ = trainer.train(arch, &train, m, ctx.seed)?; // warm-up compile
+            let _ = trainer.train(arch, &train, m, ctx.seed)?; // warm-up
             let (_s, seq_t) = time_once(|| {
                 SrElmModel::train(arch, &train, &TrainOptions::new(m, ctx.seed)).unwrap()
             });

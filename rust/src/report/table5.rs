@@ -1,14 +1,18 @@
 //! Table 5: Opt-PR-ELM (BS=32, M=50) speedups on the Tesla K20m and the
 //! Quadro K2000 — regenerated through the calibrated `gpusim` model at the
 //! paper's full dataset sizes, plus a *measured* column: this machine's
-//! parallel pipeline (PJRT) vs the sequential S-R-ELM at `ctx.scale`.
+//! parallel CPU pipeline (`CpuElmTrainer`, threaded via one
+//! [`ParallelPolicy`]) vs the sequential S-R-ELM at `ctx.scale`. The
+//! measured column needs no PJRT artifacts, so the emitter runs on
+//! offline builds.
 
 use anyhow::Result;
 
-use crate::coordinator::PrElmTrainer;
+use crate::coordinator::CpuElmTrainer;
 use crate::data::spec::registry;
 use crate::elm::{SrElmModel, TrainOptions, ALL_ARCHS};
 use crate::gpusim::{cpu_host, quadro_k2000, simulate, tesla_k20m, SimConfig, Variant};
+use crate::linalg::ParallelPolicy;
 use crate::util::table::Table;
 use crate::util::timer::time_once;
 
@@ -16,7 +20,7 @@ use super::prep::prepare;
 use super::ReportCtx;
 
 pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
-    let trainer = PrElmTrainer::new(&ctx.artifacts, ctx.workers)?;
+    let trainer = CpuElmTrainer::with_policy(ParallelPolicy::with_workers(ctx.workers));
     let m = 50usize;
     let mut t = Table::new(
         "Table 5 — Opt-PR-ELM (BS=32, M=50) speedup per GPU (gpusim @ paper sizes) \
@@ -47,9 +51,9 @@ pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
     // measured column: this testbed, Q ∈ {10, 50} datasets (M = 50 grams)
     let mut meas = Table::new(
         &format!(
-            "Table 5 (measured on this machine) — PJRT pipeline vs sequential S-R-ELM, \
-             M=50 @ scale {}",
-            ctx.scale
+            "Table 5 (measured on this machine) — CPU parallel pipeline \
+             ({} workers) vs sequential S-R-ELM, M=50 @ scale {}",
+            trainer.policy.workers, ctx.scale
         ),
         &["Dataset", "Architecture", "seq (s)", "parallel (s)", "speedup"],
     );
@@ -61,9 +65,10 @@ pub fn emit(ctx: &ReportCtx) -> Result<Vec<Table>> {
         let scale = ctx.scale.max(floor);
         let (train, _test) = prepare(d, scale, ctx.seed)?;
         for arch in ALL_ARCHS {
-            // warm-up run: compile the executables on every worker so the
-            // timed run measures execution, not jit (the paper's averages
-            // likewise exclude one-time CUDA jit)
+            // warm-up run: touch every code path once so the timed run
+            // measures steady-state execution (page faults, allocator and
+            // branch-predictor warmth), mirroring the paper's averages
+            // which exclude one-time CUDA jit
             let _ = trainer.train(arch, &train, m, ctx.seed)?;
             let (_m1, seq_t) = time_once(|| {
                 SrElmModel::train(arch, &train, &TrainOptions::new(m, ctx.seed)).unwrap()

