@@ -43,6 +43,10 @@ def main() -> None:
             die(f"record {i} has a bad op: {r}")
         if not (float(r["ns_per_iter"]) > 0):
             die(f"record {i} has non-positive ns_per_iter: {r}")
+        # gbps (achieved bandwidth vs the compulsory-traffic model) is
+        # informational but must be well-formed when present
+        if "gbps" in r and float(r["gbps"]) < 0:
+            die(f"record {i} has negative gbps: {r}")
 
     ops = {r["op"] for r in recs}
     missing = [op for op in base["required_ops"] if op not in ops]

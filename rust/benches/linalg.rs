@@ -1,21 +1,29 @@
 //! Microbenches for the β-solve substrate: blocked QR vs the seed scalar
-//! reference, tiled GEMM/Gram vs the naive loops, TSQR streaming vs the
-//! parallel tree — at ELM-shaped sizes (tall-skinny, M ≤ 100).
+//! reference, tiled GEMM/Gram vs the naive loops, the accumulate-widen
+//! (f32 wire / f64 accumulate) kernels vs their f64 twins, TSQR streaming
+//! vs the parallel tree, and the GEMM-lifted FC `h_block` vs its scalar
+//! loop — at ELM-shaped sizes (tall-skinny, M ≤ 100).
 //!
 //! Besides the human-readable summary lines, the run emits a
-//! machine-readable `BENCH_linalg.json` (op, shape, ns/iter, GFLOP/s, and
-//! the speedup over the seed reference where one exists) so future PRs
-//! have a perf trajectory to regress against. Override the output path
-//! with `BENCH_LINALG_OUT=…`; set `BENCH_LINALG_QUICK=1` for the CI
+//! machine-readable `BENCH_linalg.json` (op, shape, ns/iter, GFLOP/s,
+//! GB/s, and the speedup over the reference where one exists) so future
+//! PRs have a perf trajectory to regress against. The GB/s figure is
+//! *achieved bandwidth against the compulsory-traffic model* (operands
+//! read once + result written once, at wire width); it exists to make the
+//! halved-traffic claim of the widen kernels measurable — compare
+//! `matmul` vs `matmul_widen` bytes at equal FLOPs. Override the output
+//! path with `BENCH_LINALG_OUT=…`; set `BENCH_LINALG_QUICK=1` for the CI
 //! smoke mode (smaller budgets and shapes, every op key still emitted —
 //! `ci/check_bench.py` gates the speedup ratios against
 //! `benches/linalg_baseline.json`).
 
 use std::time::Duration;
 
+use opt_pr_elm::elm::arch::{fc, SampleBlock};
+use opt_pr_elm::elm::{Arch, ElmParams};
 use opt_pr_elm::linalg::{
     householder_qr, householder_qr_reference, lstsq_qr, lstsq_ridge, lstsq_tsqr,
-    solve_upper_triangular, Matrix, ParallelPolicy, TsqrAccumulator,
+    solve_upper_triangular, Matrix, MatrixF32, ParallelPolicy, TsqrAccumulator,
 };
 use opt_pr_elm::util::json::{num, obj, s, Json};
 use opt_pr_elm::util::rng::Rng;
@@ -27,18 +35,29 @@ struct Rec {
     shape: String,
     ns_per_iter: f64,
     gflops: f64,
+    /// achieved bandwidth vs the compulsory-traffic model (GB/s)
+    gbps: f64,
     speedup_vs_reference: Option<f64>,
 }
 
-fn push(records: &mut Vec<Rec>, r: &BenchResult, op: &str, shape: &str, flops: f64) -> f64 {
+fn push(
+    records: &mut Vec<Rec>,
+    r: &BenchResult,
+    op: &str,
+    shape: &str,
+    flops: f64,
+    bytes: f64,
+) -> f64 {
     println!("{}", r.summary());
     let ns = r.mean_secs() * 1e9;
     let gflops = if flops > 0.0 && ns > 0.0 { flops / ns } else { 0.0 };
+    let gbps = if bytes > 0.0 && ns > 0.0 { bytes / ns } else { 0.0 };
     records.push(Rec {
         op: op.to_string(),
         shape: shape.to_string(),
         ns_per_iter: ns,
         gflops,
+        gbps,
         speedup_vs_reference: None,
     });
     ns
@@ -94,6 +113,7 @@ fn main() {
         shape: format!("workers={}", threaded.workers),
         ns_per_iter: 1.0,
         gflops: threaded.workers as f64,
+        gbps: 0.0,
         speedup_vs_reference: None,
     });
 
@@ -109,37 +129,42 @@ fn main() {
         let shape = format!("{n}x{m}");
         let qr_flops = 2.0 * n as f64 * (m * m) as f64 - 2.0 / 3.0 * (m * m * m) as f64;
         let gram_flops = (n * m * (m + 1)) as f64;
+        // compulsory traffic: A in + factors/G out, at wire width
+        let qr_bytes = 8.0 * 2.0 * (n * m) as f64;
+        let gram_bytes = 8.0 * ((n * m) as f64 + (m * m) as f64);
+        let gram_widen_bytes = 4.0 * (n * m) as f64 + 8.0 * (m * m) as f64;
 
         let r = bench(&format!("householder_qr {shape}"), 1, budget, 50, || {
             householder_qr(&a).unwrap()
         });
-        let t_blk = push(&mut records, &r, "householder_qr", &shape, qr_flops);
+        let t_blk = push(&mut records, &r, "householder_qr", &shape, qr_flops, qr_bytes);
         let r = bench(&format!("householder_qr_ref {shape}"), 1, budget, 50, || {
             householder_qr_reference(&a).unwrap()
         });
-        let t_ref = push(&mut records, &r, "householder_qr_ref", &shape, qr_flops);
+        let t_ref = push(&mut records, &r, "householder_qr_ref", &shape, qr_flops, qr_bytes);
         mark_speedup_at(&mut records, 2, t_ref / t_blk);
         println!("  -> blocked QR speedup vs seed scalar: {:.2}x", t_ref / t_blk);
 
         let r = bench(&format!("lstsq_qr {shape}"), 1, budget, 50, || {
             lstsq_qr(&a, &b).unwrap()
         });
-        let t_blk = push(&mut records, &r, "lstsq_qr", &shape, qr_flops);
+        let t_blk = push(&mut records, &r, "lstsq_qr", &shape, qr_flops, qr_bytes);
         let r = bench(&format!("lstsq_qr_ref {shape}"), 1, budget, 50, || {
             lstsq_qr_reference(&a, &b)
         });
-        let t_ref = push(&mut records, &r, "lstsq_qr_ref", &shape, qr_flops);
+        let t_ref = push(&mut records, &r, "lstsq_qr_ref", &shape, qr_flops, qr_bytes);
         mark_speedup_at(&mut records, 2, t_ref / t_blk);
         println!("  -> lstsq_qr speedup vs seed scalar: {:.2}x", t_ref / t_blk);
 
         let r = bench(&format!("lstsq_ridge {shape}"), 1, budget, 50, || {
             lstsq_ridge(&a, &b, 1e-8).unwrap()
         });
-        push(&mut records, &r, "lstsq_ridge", &shape, gram_flops);
+        push(&mut records, &r, "lstsq_ridge", &shape, gram_flops, gram_bytes);
 
         // panel-resident Qᵀb vs the seed column-at-a-time loop, on each
         // path's own factors (what lstsq_qr / lstsq_qr_reference execute)
         let qt_flops = 4.0 * (n * m) as f64;
+        let qt_bytes = 8.0 * ((n * m) as f64 + n as f64);
         let f_blk = householder_qr(&a).unwrap();
         let f_ref = householder_qr_reference(&a).unwrap();
         let r = bench(&format!("apply_qt {shape}"), 1, budget, 200, || {
@@ -147,29 +172,40 @@ fn main() {
             f_blk.apply_qt(&mut z);
             z
         });
-        let t_blk = push(&mut records, &r, "apply_qt", &shape, qt_flops);
+        let t_blk = push(&mut records, &r, "apply_qt", &shape, qt_flops, qt_bytes);
         let r = bench(&format!("apply_qt_ref {shape}"), 1, budget, 200, || {
             let mut z = b.clone();
             f_ref.apply_qt(&mut z);
             z
         });
-        let t_ref = push(&mut records, &r, "apply_qt_ref", &shape, qt_flops);
+        let t_ref = push(&mut records, &r, "apply_qt_ref", &shape, qt_flops, qt_bytes);
         mark_speedup_at(&mut records, 2, t_ref / t_blk);
         println!("  -> panel apply_qt speedup vs column loop: {:.2}x", t_ref / t_blk);
 
         let r = bench(&format!("gram {shape}"), 1, budget, 50, || a.gram());
-        let t_blk = push(&mut records, &r, "gram", &shape, gram_flops);
+        let t_blk = push(&mut records, &r, "gram", &shape, gram_flops, gram_bytes);
         let r = bench(&format!("gram_ref {shape}"), 1, budget, 50, || {
             gram_reference(&a)
         });
-        let t_ref = push(&mut records, &r, "gram_ref", &shape, gram_flops);
+        let t_ref = push(&mut records, &r, "gram_ref", &shape, gram_flops, gram_bytes);
         mark_speedup_at(&mut records, 2, t_ref / t_blk);
         println!("  -> gram speedup vs seed scalar: {:.2}x", t_ref / t_blk);
+
+        // accumulate-widen Gram: f32 operand stream, f64 accumulator —
+        // same FLOPs, half the operand bytes (speedup recorded vs the f64
+        // tiled gram just measured)
+        let a32 = MatrixF32::from_matrix(&a);
+        let r = bench(&format!("gram_widen {shape}"), 1, budget, 50, || {
+            a32.gram_widen(ParallelPolicy::sequential())
+        });
+        let t_widen = push(&mut records, &r, "gram_widen", &shape, gram_flops, gram_widen_bytes);
+        mark_speedup_at(&mut records, 1, t_blk / t_widen);
+        println!("  -> widen gram speedup vs f64 gram: {:.2}x", t_blk / t_widen);
 
         let r = bench(&format!("gram_threaded {shape}"), 1, budget, 50, || {
             a.gram_with(threaded)
         });
-        let t_thr = push(&mut records, &r, "gram_threaded", &shape, gram_flops);
+        let t_thr = push(&mut records, &r, "gram_threaded", &shape, gram_flops, gram_bytes);
         mark_speedup_at(&mut records, 1, t_blk / t_thr);
         println!("  -> threaded gram speedup vs single-thread: {:.2}x", t_blk / t_thr);
 
@@ -183,7 +219,7 @@ fn main() {
             }
             acc.solve().unwrap()
         });
-        push(&mut records, &r, "tsqr_stream", &shape, qr_flops);
+        push(&mut records, &r, "tsqr_stream", &shape, qr_flops, qr_bytes);
 
         for workers in [1usize, 2, 4, 8] {
             let r = bench(
@@ -193,7 +229,7 @@ fn main() {
                 50,
                 || lstsq_tsqr(&a, &b, ParallelPolicy::with_workers(workers)).unwrap(),
             );
-            push(&mut records, &r, &format!("lstsq_tsqr_w{workers}"), &shape, qr_flops);
+            push(&mut records, &r, &format!("lstsq_tsqr_w{workers}"), &shape, qr_flops, qr_bytes);
         }
         println!();
     }
@@ -207,19 +243,64 @@ fn main() {
         let b = Matrix::random(dim, dim, &mut rng);
         let shape = format!("{dim}x{dim}x{dim}");
         let flops = 2.0 * (dim * dim * dim) as f64;
+        let d2 = (dim * dim) as f64;
+        let mm_bytes = 8.0 * 3.0 * d2;
+        let widen_bytes = 4.0 * 2.0 * d2 + 8.0 * d2;
         let r = bench(&format!("matmul {shape}"), 1, budget, 50, || a.matmul(&b));
-        let t_seq = push(&mut records, &r, "matmul", &shape, flops);
+        let t_seq = push(&mut records, &r, "matmul", &shape, flops, mm_bytes);
         let r = bench(&format!("matmul_threaded {shape}"), 1, budget, 50, || {
             a.matmul_with(&b, threaded)
         });
-        let t_thr = push(&mut records, &r, "matmul_threaded", &shape, flops);
+        let t_thr = push(&mut records, &r, "matmul_threaded", &shape, flops, mm_bytes);
         mark_speedup_at(&mut records, 1, t_seq / t_thr);
         println!(
             "  -> threaded matmul {dim} speedup vs single-thread: {:.2}x",
             t_seq / t_thr
         );
+
+        // accumulate-widen GEMM: half the operand traffic of the f64 GEMM
+        // at identical FLOPs and tile schedule
+        let a32 = MatrixF32::from_matrix(&a);
+        let b32 = MatrixF32::from_matrix(&b);
+        let r = bench(&format!("matmul_widen {shape}"), 1, budget, 50, || {
+            a32.matmul_widen(&b32, ParallelPolicy::sequential())
+        });
+        let t_widen = push(&mut records, &r, "matmul_widen", &shape, flops, widen_bytes);
+        mark_speedup_at(&mut records, 1, t_seq / t_widen);
+        println!(
+            "  -> widen matmul {dim} speedup vs f64 matmul: {:.2}x",
+            t_seq / t_widen
+        );
     }
     println!();
+
+    // GEMM-lifted FC h_block vs its scalar reference loop: the recurrence
+    // whose per-timestep work was a strided GEMV per sample
+    {
+        let (rows, s, q, m) =
+            if quick { (128usize, 1usize, 12usize, 48usize) } else { (256, 1, 16, 64) };
+        let p = ElmParams::init(Arch::Fc, s, q, m, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..rows * s * q).map(|_| rng.normal() as f32).collect();
+        let yh = vec![0f32; rows * q];
+        let eh = vec![0f32; rows * q];
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        let shape = format!("rows{rows}_q{q}_m{m}");
+        // recurrence flops: rows · Σ_t Σ_{k<=t} 2m² ≈ rows·q²·m²
+        let flops = rows as f64 * (q * q) as f64 * (m * m) as f64;
+        let bytes = 4.0 * ((rows * s * q) as f64 + (m * m * q) as f64) + 8.0 * (rows * m) as f64;
+        let r = bench(&format!("fc_h_block {shape}"), 1, budget, 50, || {
+            fc::h_block(&p, &blk)
+        });
+        let t_blk = push(&mut records, &r, "fc_h_block", &shape, flops, bytes);
+        let r = bench(&format!("fc_h_block_ref {shape}"), 1, budget, 50, || {
+            fc::h_block_reference(&p, &blk)
+        });
+        let t_ref = push(&mut records, &r, "fc_h_block_ref", &shape, flops, bytes);
+        mark_speedup_at(&mut records, 2, t_ref / t_blk);
+        println!("  -> batched FC h_block speedup vs scalar loop: {:.2}x", t_ref / t_blk);
+        println!();
+    }
 
     let out_path = std::env::var("BENCH_LINALG_OUT")
         .unwrap_or_else(|_| "BENCH_linalg.json".to_string());
@@ -232,6 +313,7 @@ fn main() {
                     ("shape", s(&r.shape)),
                     ("ns_per_iter", num(r.ns_per_iter)),
                     ("gflops", num(r.gflops)),
+                    ("gbps", num(r.gbps)),
                 ];
                 if let Some(x) = r.speedup_vs_reference {
                     pairs.push(("speedup_vs_reference", num(x)));
@@ -247,9 +329,9 @@ fn main() {
 }
 
 /// Attach the measured speedup to the record `back` positions from the
-/// end: 1 = the record just pushed (threaded-vs-single-thread pairs,
-/// reference measured earlier), 2 = the non-reference record of a
-/// (new, reference) pair just pushed.
+/// end: 1 = the record just pushed (threaded-vs-single-thread and
+/// widen-vs-f64 pairs, reference measured earlier), 2 = the non-reference
+/// record of a (new, reference) pair just pushed.
 fn mark_speedup_at(records: &mut [Rec], back: usize, speedup: f64) {
     let i = records.len() - back;
     records[i].speedup_vs_reference = Some(speedup);

@@ -17,7 +17,7 @@
 use crate::data::window::Windowed;
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::arch::block_ranges;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32, ParallelPolicy, Precision};
 
 use super::driver::BpttModel;
 use super::init::BpttArch;
@@ -25,42 +25,87 @@ use super::init::BpttArch;
 /// Rows per forward chunk (bounds the lifted-projection buffer).
 const CHUNK: usize = 256;
 
-/// One-step-ahead predictions for every row of `data`.
+/// One-step-ahead predictions for every row of `data` (f64 recurrent
+/// wire — see [`forward_cpu_with`] for the mixed-precision variant).
 pub fn forward_cpu(model: &BpttModel, data: &Windowed) -> Vec<f64> {
+    forward_cpu_with(model, data, Precision::F64)
+}
+
+/// One-step-ahead predictions with an explicit wire precision.
+///
+/// The lifted input projection `x @ wx` always runs on the f32 wire
+/// (both operands are f32 parameters/data, so the widen GEMM is
+/// bit-identical to the f64 one — see the `linalg::matrix32` contract).
+/// `precision` selects the wire of the per-step recurrent GEMM `h @ wh`:
+///
+/// * [`Precision::F64`] — the reference; `h` stays f64.
+/// * [`Precision::MixedF32`] — `h` is rounded to f32 per step and the
+///   GEMM accumulates wide, mirroring the AOT artifacts' f32 state. For
+///   the FC and GRU cells the hidden state is exactly f32-representable
+///   (FC: a tanh of an f32; GRU: an all-f32 gate update), so those paths
+///   are **bit-identical** to the f64 wire. Only LSTM drifts: its cell
+///   state `c` is carried in f64 (`fg·c + ig·gg` products), so rounding
+///   `h` to f32 per step changes bits — tests bound the output
+///   difference at 1e-4 on unit-scale data.
+pub fn forward_cpu_with(model: &BpttModel, data: &Windowed, precision: Precision) -> Vec<f64> {
     let mut out = Vec::with_capacity(data.n);
     for (lo, hi) in block_ranges(data.n, CHUNK) {
-        forward_chunk(model, data, lo, hi, &mut out);
+        forward_chunk(model, data, lo, hi, precision, &mut out);
     }
     out
 }
 
-fn forward_chunk(model: &BpttModel, data: &Windowed, lo: usize, hi: usize, out: &mut Vec<f64>) {
+fn forward_chunk(
+    model: &BpttModel,
+    data: &Windowed,
+    lo: usize,
+    hi: usize,
+    precision: Precision,
+    out: &mut Vec<f64>,
+) {
     let (s, q, m) = (model.s, model.q, model.m);
     let g = model.arch.gates();
     let gm = g * m;
     let b_rows = hi - lo;
-    let wx = Matrix::from_f32(s, gm, &model.params[0]);
-    let wh = Matrix::from_f32(m, gm, &model.params[1]);
+    let seq = ParallelPolicy::sequential();
+    let wx = MatrixF32::from_slice(s, gm, &model.params[0]);
+    // only the selected wire's wh representation is materialized
+    enum RecurrentW {
+        F64(Matrix),
+        Mixed(MatrixF32),
+    }
+    let wh = match precision {
+        Precision::F64 => RecurrentW::F64(Matrix::from_f32(m, gm, &model.params[1])),
+        Precision::MixedF32 => {
+            RecurrentW::Mixed(MatrixF32::from_slice(m, gm, &model.params[1]))
+        }
+    };
     let bias = &model.params[2];
     let wo = &model.params[3];
     let bo = model.params[4][0] as f64;
 
-    // lift every timestep's input projection into one GEMM: (B·Q, S) @ (S, G·M)
-    let mut xb = Matrix::zeros(b_rows * q, s);
+    // lift every timestep's input projection into one GEMM on the f32
+    // wire: (B·Q, S) @ (S, G·M), bit-identical to the f64 GEMM (f32
+    // sources, exact products)
+    let mut xb = MatrixF32::zeros(b_rows * q, s);
     for i in 0..b_rows {
         let xi = data.x_row(lo + i);
         for si in 0..s {
             for t in 0..q {
-                xb[(i * q + t, si)] = xi[si * q + t] as f64;
+                xb[(i * q + t, si)] = xi[si * q + t];
             }
         }
     }
-    let zx_all = xb.matmul(&wx); // (B·Q, G·M)
+    let zx_all = xb.matmul_widen(&wx, seq); // (B·Q, G·M)
 
     let mut h = Matrix::zeros(b_rows, m);
     let mut c = Matrix::zeros(b_rows, m); // lstm cell state (unused otherwise)
     for t in 0..q {
-        let zh = h.matmul(&wh); // (B, G·M): the per-step batched GEMM
+        // (B, G·M): the per-step batched GEMM, on the selected wire
+        let zh = match &wh {
+            RecurrentW::F64(w) => h.matmul(w),
+            RecurrentW::Mixed(w) => MatrixF32::from_matrix(&h).matmul_widen(w, seq),
+        };
         for i in 0..b_rows {
             let zx = zx_all.row(i * q + t);
             let zh_row = zh.row(i);
@@ -172,6 +217,9 @@ mod tests {
             assert_eq!(full[i], one[0], "row {i}");
         }
     }
+
+    // the mixed-wire contract (FC/GRU bit-identical, LSTM bounded) is
+    // pinned by the integration suite: tests/mixed_precision_props.rs
 
     #[test]
     fn param_shapes_consistent_with_forward() {

@@ -12,5 +12,5 @@ pub mod forward;
 pub mod init;
 
 pub use driver::{BpttModel, BpttTrainer, LossPoint, TrainLog};
-pub use forward::forward_cpu;
+pub use forward::{forward_cpu, forward_cpu_with};
 pub use init::{bptt_param_shapes, init_params, BpttArch};

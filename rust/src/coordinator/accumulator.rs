@@ -18,10 +18,20 @@ use anyhow::{bail, Result};
 
 use crate::linalg::{Matrix, TsqrAccumulator};
 
+/// Which β-solve pipeline a trainer runs (see the module docs for the
+/// trade-offs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SolveStrategy {
+    /// Fold (HᵀH, HᵀY) partials, ridge-solve by Cholesky. In
+    /// `CpuElmTrainer` this pipeline honors the `Precision` knob (f32
+    /// wire) — as do the NARMAX passes and the other strategies'
+    /// rank-deficiency fallbacks, which all route through it.
     Gram,
+    /// Fold raw H blocks into the communication-avoiding TSQR accumulator
+    /// (exact least squares).
     Tsqr,
+    /// Assemble H and run the threaded blocked QR — bit-identical to the
+    /// sequential `lstsq_qr` (the e2e conformance anchor).
     DirectQr,
 }
 
@@ -35,6 +45,7 @@ pub struct GramAccumulator {
 }
 
 impl GramAccumulator {
+    /// Empty M-wide accumulator with ridge λ.
     pub fn new(m: usize, lambda: f64) -> GramAccumulator {
         GramAccumulator { m, g: Matrix::zeros(m, m), c: vec![0.0; m], rows: 0, lambda }
     }
@@ -61,6 +72,7 @@ impl GramAccumulator {
         Ok(())
     }
 
+    /// Total valid rows folded in so far.
     pub fn rows_seen(&self) -> usize {
         self.rows
     }
@@ -104,13 +116,17 @@ impl GramAccumulator {
     }
 }
 
-/// Unified accumulator over both strategies.
+/// Unified accumulator over both streaming strategies.
 pub enum BetaAccumulator {
+    /// Normal-equation folding (ridge Cholesky solve).
     Gram(GramAccumulator),
+    /// Communication-avoiding QR folding (exact least squares).
     Tsqr(TsqrAccumulator),
 }
 
 impl BetaAccumulator {
+    /// Accumulator for a streaming strategy; panics on `DirectQr` (not a
+    /// streaming strategy — see the variant docs).
     pub fn new(strategy: SolveStrategy, m: usize) -> BetaAccumulator {
         match strategy {
             SolveStrategy::Gram => BetaAccumulator::Gram(GramAccumulator::new(m, 1e-8)),
@@ -125,6 +141,7 @@ impl BetaAccumulator {
         }
     }
 
+    /// Solve for β through whichever strategy this accumulator wraps.
     pub fn solve(&self) -> Result<Vec<f64>> {
         match self {
             BetaAccumulator::Gram(g) => g.solve(),

@@ -32,11 +32,13 @@ pub struct RowBlockBatcher<'a> {
 }
 
 impl<'a> RowBlockBatcher<'a> {
+    /// Batcher over `data` in fixed `rows`-high blocks (rows > 0).
     pub fn new(data: &'a Windowed, rows: usize) -> RowBlockBatcher<'a> {
         assert!(rows > 0);
         RowBlockBatcher { data, rows, pos: 0 }
     }
 
+    /// Number of blocks the iteration will yield (tail included).
     pub fn n_blocks(&self) -> usize {
         self.data.n.div_ceil(self.rows)
     }

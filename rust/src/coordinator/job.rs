@@ -9,19 +9,24 @@ use crate::elm::Arch;
 /// One training-run description.
 #[derive(Debug, Clone)]
 pub struct TrainJob {
+    /// Which Table-3 dataset to generate.
     pub dataset: DatasetSpec,
+    /// Which of the six architectures to train.
     pub arch: Arch,
+    /// Hidden width M.
     pub m: usize,
     /// thread-block size / tile width (16 or 32 in the paper)
     pub bs: usize,
     /// "basic" (Alg 2) or "opt" (Alg 3)
     pub variant: &'static str,
+    /// Random-parameter seed.
     pub seed: u64,
     /// dataset scale for measured runs (1.0 = the paper's full size)
     pub scale: f64,
 }
 
 impl TrainJob {
+    /// Human-readable job label for tables and logs.
     pub fn label(&self) -> String {
         format!(
             "{}/{} M={} BS={} {}",

@@ -15,6 +15,15 @@
 //!   threads instead of PJRT (offline / no-artifact deployments).
 //! * [`job`] — experiment descriptions (arch × dataset × M × variant) used
 //!   by the report emitters and benches.
+//!
+//! `CpuElmTrainer` honors the [`crate::linalg::Precision`] knob on its
+//! [`crate::linalg::ParallelPolicy`]: under `MixedF32` every
+//! Gram-pipeline fold (the Gram strategy, the NARMAX passes, the
+//! TSQR/DirectQr rank-deficiency fallbacks) streams H blocks over the
+//! f32 wire (`gram_widen`/`t_matvec_widen`, f64 accumulation — the
+//! artifact ABI's format), still bit-identical across worker counts.
+
+#![deny(missing_docs)]
 
 pub mod accumulator;
 pub mod batcher;

@@ -32,7 +32,7 @@ use crate::elm::trainer::{shift_history, SrElmModel};
 use crate::elm::{Arch, ElmParams, TrainOptions};
 use crate::linalg::policy::par_map;
 use crate::linalg::solve::{lstsq_qr_with, lstsq_ridge_from_parts, upper_triangular_deficient};
-use crate::linalg::{Matrix, ParallelPolicy, TsqrAccumulator};
+use crate::linalg::{Matrix, MatrixF32, ParallelPolicy, Precision, TsqrAccumulator};
 use crate::runtime::{ArtifactMeta, Buf, EnginePool, Manifest};
 
 /// Fig-6 style phase breakdown of one training run (seconds).
@@ -50,6 +50,7 @@ pub struct TrainBreakdown {
     pub solve_s: f64,
     /// end-to-end wall clock
     pub total_s: f64,
+    /// number of row blocks processed
     pub blocks: usize,
 }
 
@@ -64,6 +65,8 @@ pub struct PrElmTrainer {
 }
 
 impl PrElmTrainer {
+    /// Load the manifest under `artifacts_dir` and spin up `workers`
+    /// engines.
     pub fn new(artifacts_dir: &Path, workers: usize) -> Result<PrElmTrainer> {
         Ok(PrElmTrainer {
             pool: EnginePool::new(artifacts_dir, workers)?,
@@ -73,10 +76,12 @@ impl PrElmTrainer {
         })
     }
 
+    /// The engine pool executing the artifacts.
     pub fn pool(&self) -> &EnginePool {
         &self.pool
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -293,7 +298,8 @@ impl PrElmTrainer {
 
 /// CPU-native parallel ELM trainer: the same block → accumulate → solve
 /// pipeline as [`PrElmTrainer`], with the H blocks produced by the batched
-/// [`h_block`] kernels on scoped worker threads instead of PJRT artifacts.
+/// [`h_block`](crate::elm::arch::h_block) kernels on scoped worker threads
+/// instead of PJRT artifacts.
 /// This is the offline twin of the coordinator, and the path that
 /// exercises the blocked linalg substrate end to end.
 ///
@@ -307,21 +313,47 @@ impl PrElmTrainer {
 /// `policy.workers`. DirectQr additionally produces the *same bits* as
 /// the sequential `lstsq_qr` on the assembled H (the e2e conformance
 /// anchor).
+///
+/// # Mixed precision
+///
+/// `policy.precision` selects the Gram fold's wire format:
+/// [`Precision::MixedF32`] streams each H block over the f32 wire
+/// (`MatrixF32::gram_widen` / `t_matvec_widen`, f64 accumulation — the
+/// artifact ABI's format). The Gram kernel's operand reads — the O(rows·M²)
+/// part of the fold — halve; note the block is still *materialized* f64 by
+/// the arch kernels and rounded once per block (an O(rows·M) conversion
+/// pass), so the end-to-end win requires M large enough for the kernel to
+/// dominate. Producing H on the f32 wire at the arch kernels themselves
+/// is the ROADMAP follow-on that removes that conversion. The f32
+/// wire only changes per-block arithmetic, never block boundaries or fold
+/// order, so β stays bit-identical across worker counts; the per-block
+/// drift versus the f64 fold is bounded by one f32 storage rounding of H
+/// (see the [`crate::linalg::matrix32`] contract — zero for architectures
+/// whose H entries are f32 tanh outputs). The knob governs **every solve
+/// that goes through the Gram pipeline**: the Gram strategy, the NARMAX
+/// passes (NARMAX always ridge-solves via Gram whatever `strategy` says),
+/// and the rank-deficiency fallbacks of the TSQR/DirectQr strategies.
+/// Only the TSQR and DirectQr *primary* solves are always f64 — they are
+/// the reference paths the e2e suite anchors to.
 pub struct CpuElmTrainer {
-    /// the one worker-count knob, shared with every threaded linalg path
+    /// the one worker-count (+ wire precision) knob, shared with every
+    /// threaded linalg path
     pub policy: ParallelPolicy,
     /// samples per H block (fixed: part of the deterministic result)
     pub block_rows: usize,
+    /// which β-solve pipeline to run
     pub strategy: SolveStrategy,
     /// ridge λ for the Gram strategy (NARMAX raises it to its floor)
     pub lambda: f64,
 }
 
 impl CpuElmTrainer {
+    /// Trainer with `workers` threads and the default TSQR strategy.
     pub fn new(workers: usize) -> CpuElmTrainer {
         CpuElmTrainer::with_policy(ParallelPolicy::with_workers(workers))
     }
 
+    /// Trainer with an explicit policy (worker count + wire precision).
     pub fn with_policy(policy: ParallelPolicy) -> CpuElmTrainer {
         CpuElmTrainer {
             policy,
@@ -382,7 +414,7 @@ impl CpuElmTrainer {
         let idx: Vec<usize> = (0..blocks.len()).collect();
         let partials = par_map(idx, self.policy, |i| {
             let (h, y) = &blocks[i];
-            Ok((h.gram(), h.t_matvec(y), h.rows))
+            Ok(block_gram_partials(h, y, self.policy.precision))
         })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
@@ -484,7 +516,8 @@ impl CpuElmTrainer {
     }
 
     /// Parallel Gram pass: per-block (HᵀH, HᵀY) partials computed on
-    /// worker threads (exec_s), folded in block order and ridge-solved
+    /// worker threads (exec_s) — over the f32 wire when the policy says
+    /// [`Precision::MixedF32`] — folded in block order and ridge-solved
     /// (solve_s). Also the TSQR strategy's rank-deficiency fallback.
     fn gram_solve(
         &self,
@@ -499,9 +532,7 @@ impl CpuElmTrainer {
         let t0 = Instant::now();
         let partials = par_map(ranges, self.policy, |(lo, hi)| {
             let (h, y) = compute_h_block(params, data, ehist, lo, hi);
-            let g = h.gram();
-            let c = h.t_matvec(&y);
-            Ok((g, c, h.rows))
+            Ok(block_gram_partials(&h, &y, self.policy.precision))
         })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
@@ -569,6 +600,28 @@ fn fold_partials(
         bail!("underdetermined: {rows} rows < M = {m}");
     }
     Ok((g, c))
+}
+
+/// One block's (HᵀH, HᵀY, rows) partials at the requested wire precision.
+/// `MixedF32` rounds H once to f32 storage and runs the accumulate-widen
+/// kernels (f64 accumulation) — the fold that consumes the result is f64
+/// either way, so block order and fold determinism are unaffected.
+fn block_gram_partials(
+    h: &Matrix,
+    y: &[f64],
+    precision: Precision,
+) -> (Matrix, Vec<f64>, usize) {
+    match precision {
+        Precision::F64 => (h.gram(), h.t_matvec(y), h.rows),
+        Precision::MixedF32 => {
+            let hf = MatrixF32::from_matrix(h);
+            (
+                hf.gram_widen(ParallelPolicy::sequential()),
+                hf.t_matvec_widen(y),
+                h.rows,
+            )
+        }
+    }
 }
 
 /// One batched H block + widened targets for rows [lo, hi).
@@ -713,6 +766,50 @@ mod tests {
             .sqrt();
         let rmse = cpu.rmse(&model, &test).unwrap();
         assert!(rmse < base, "narmax rmse {rmse} vs mean baseline {base}");
+    }
+
+    #[test]
+    fn cpu_trainer_mixed_precision_gram_matches_f64_and_is_worker_invariant() {
+        use crate::linalg::Precision;
+        let w = toy_windowed(600, 5, 8);
+        for archk in ALL_ARCHS {
+            // f64 Gram reference
+            let mut t64 = CpuElmTrainer::new(2);
+            t64.strategy = SolveStrategy::Gram;
+            t64.block_rows = 64;
+            let (m64, _) = t64.train(archk, &w, 10, 3).unwrap();
+            // f32-wire Gram: bit-identical across workers, close to f64
+            let mut base: Option<Vec<f64>> = None;
+            for workers in [1usize, 2, 4, 8] {
+                let mut t = CpuElmTrainer::with_policy(
+                    ParallelPolicy::with_workers(workers)
+                        .with_precision(Precision::MixedF32),
+                );
+                t.strategy = SolveStrategy::Gram;
+                t.block_rows = 64;
+                let (model, _) = t.train(archk, &w, 10, 3).unwrap();
+                match &base {
+                    None => base = Some(model.beta),
+                    Some(b) => assert_eq!(
+                        b, &model.beta,
+                        "{}: mixed β differs at workers={workers}",
+                        archk.name()
+                    ),
+                }
+            }
+            let worst = m64
+                .beta
+                .iter()
+                .zip(base.as_ref().unwrap())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            let scale = m64.beta.iter().fold(0.0f64, |s, b| s.max(b.abs())).max(1.0);
+            assert!(
+                worst < 1e-2 * scale,
+                "{}: |f64 - mixed| = {worst} (scale {scale})",
+                archk.name()
+            );
+        }
     }
 
     #[test]

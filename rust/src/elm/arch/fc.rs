@@ -36,9 +36,75 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Whole row block: block-wide GEMM for the input projections, then the
-/// fully-connected recurrence per sample on the precomputed values.
+/// Whole row block, fully batched: the input projections come from one
+/// block-wide GEMM (`lift_wx`), and the fully-connected recurrence itself
+/// is lifted out of the per-sample loop — at timestep t the cross-neuron
+/// coupling of *every* sample in the block for lag k is one
+/// (rows × M) × (M × M) GEMM,
+///
+/// ```text
+///   Acc_t = WX_t + b + Σ_{k=1..t} H_{t−k} · A_kᵀ ,   H_t = tanh(Acc_t)
+/// ```
+///
+/// where `A_k[j, l] = alpha[j, l, k]` — the per-timestep GEMV of the old
+/// scalar loop (strided alpha walks, one sample at a time) becomes q
+/// tiled GEMMs per timestep, like the gate projections of the other five
+/// architectures. Accumulation is f64 (the GEMMs accumulate wide) with
+/// one f32 rounding at the tanh, so values match the scalar
+/// [`h_block_reference`] / [`h_row`] to f32 round-off (the property suite
+/// bounds it at 1e-5).
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    let (q, m) = (p.q, p.m);
+    let rows = blk.rows;
+    if q == 0 {
+        return Matrix::zeros(rows, m);
+    }
+    let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
+    let b = p.buf("b");
+    let alpha = p.buf("alpha"); // (m, m, q): alpha[(j*m + l)*q + (k-1)]
+    // A_kᵀ as f64 GEMM operands: akt[k-1][(l, j)] = alpha[j, l, k]
+    let akt: Vec<Matrix> = (1..=q)
+        .map(|k| {
+            let mut t = Matrix::zeros(m, m);
+            for j in 0..m {
+                for l in 0..m {
+                    t[(l, j)] = alpha[(j * m + l) * q + (k - 1)] as f64;
+                }
+            }
+            t
+        })
+        .collect();
+    // hs[t] = H at timestep t for the whole block (rows × m)
+    let mut hs: Vec<Matrix> = Vec::with_capacity(q);
+    let mut acc = Matrix::zeros(rows, m);
+    for t in 0..q {
+        for i in 0..rows {
+            let wrow = wx.row(i * q + t);
+            let arow = acc.row_mut(i);
+            for j in 0..m {
+                arow[j] = wrow[j] + b[j] as f64;
+            }
+        }
+        for k in 1..=t {
+            let coupling = hs[t - k].matmul(&akt[k - 1]);
+            for (av, cv) in acc.data_mut().iter_mut().zip(coupling.data()) {
+                *av += cv;
+            }
+        }
+        let mut ht = Matrix::zeros(rows, m);
+        for (hv, av) in ht.data_mut().iter_mut().zip(acc.data()) {
+            *hv = tanh(*av as f32) as f64;
+        }
+        hs.push(ht);
+    }
+    hs.pop().expect("q >= 1")
+}
+
+/// The pre-batching scalar block loop (per sample, per timestep, per
+/// neuron, strided alpha walks) — kept as the oracle `h_block` is
+/// property-tested against and the baseline `benches/linalg.rs` measures
+/// the GEMM lift against.
+pub fn h_block_reference(p: &ElmParams, blk: &SampleBlock) -> Matrix {
     let (q, m) = (p.q, p.m);
     let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
     let b = p.buf("b");
@@ -103,6 +169,38 @@ mod tests {
         h_row(&pf, &x, &mut ff);
         for j in 0..m {
             assert!((fe[j] - ff[j]).abs() < 1e-6, "{} vs {}", fe[j], ff[j]);
+        }
+    }
+
+    #[test]
+    fn batched_block_matches_scalar_reference() {
+        // the GEMM-lifted recurrence vs the per-sample scalar loop: only
+        // the accumulation width differs (f64 GEMM vs f32 running sum), so
+        // values must agree to f32 round-off
+        let (s, q, m) = (2, 6, 9);
+        let rows = 13; // not a multiple of anything interesting on purpose
+        let p = ElmParams::init(Arch::Fc, s, q, m, 31);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x: Vec<f32> = rng.normals_f32(rows * s * q);
+        let yh = vec![0f32; rows * q];
+        let eh = vec![0f32; rows * q];
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        let batched = h_block(&p, &blk);
+        let reference = h_block_reference(&p, &blk);
+        let diff = batched.max_abs_diff(&reference);
+        assert!(diff < 1e-5, "|batched - reference| = {diff}");
+        // and both must match the one-sample recurrence
+        let mut out = vec![0f32; m];
+        for i in 0..rows {
+            h_row(&p, &x[i * s * q..(i + 1) * s * q], &mut out);
+            for j in 0..m {
+                assert!(
+                    (batched[(i, j)] - out[j] as f64).abs() < 1e-5,
+                    "row {i} col {j}: {} vs {}",
+                    batched[(i, j)],
+                    out[j]
+                );
+            }
         }
     }
 

@@ -22,7 +22,7 @@ pub mod jordan;
 pub mod lstm;
 pub mod narmax;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32, ParallelPolicy};
 
 use super::params::{Arch, ElmParams};
 
@@ -63,6 +63,13 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
 /// Σ_si x[i, si, t] · w[si, g, j] — every `wx_at` dot of the block at once.
 /// (`w` is row-major (s, gates·m), which is exactly how the per-arch
 /// buffers `w`, `w3`, `w4` are laid out.)
+///
+/// Both operands are born f32 (the window data and the parameter
+/// buffers), so the GEMM runs on the f32 wire through
+/// [`MatrixF32::matmul_widen`]: half the operand traffic of the old
+/// widen-first f64 GEMM, and **bit-identical** to it — every f32×f32
+/// product is exact in f64 and the widen kernel accumulates in the same
+/// fixed tile order (see the `linalg::matrix32` contract).
 pub(crate) fn lift_wx(
     w: &[f32],
     gates: usize,
@@ -75,17 +82,17 @@ pub(crate) fn lift_wx(
     debug_assert_eq!(w.len(), s * gm);
     let rows = blk.rows;
     // Xb: (rows·q, s) — the lag windows transposed so timesteps are rows
-    let mut xb = Matrix::zeros(rows * q, s);
+    let mut xb = MatrixF32::zeros(rows * q, s);
     for i in 0..rows {
         let xi = blk.x_row(i, s, q);
         for si in 0..s {
             for t in 0..q {
-                xb[(i * q + t, si)] = xi[si * q + t] as f64;
+                xb[(i * q + t, si)] = xi[si * q + t];
             }
         }
     }
-    let wm = Matrix::from_f32(s, gm, w);
-    xb.matmul(&wm)
+    let wm = MatrixF32::from_slice(s, gm, w);
+    xb.matmul_widen(&wm, ParallelPolicy::sequential())
 }
 
 /// Fixed block tiling of [0, n) — the one block-boundary definition every
@@ -226,6 +233,32 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lift_wx_f32_wire_bit_identical_to_f64_gemm() {
+        // the f32-wire widen GEMM must reproduce the widen-first f64 GEMM
+        // bit for bit (both operands are f32 sources — exact products)
+        let (s, q, m) = (3, 5, 4);
+        let rows = 70;
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = rng.normals_f32(rows * s * q);
+        let w: Vec<f32> = rng.normals_f32(s * m);
+        let yh = vec![0f32; rows * q];
+        let eh = vec![0f32; rows * q];
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        let wire = lift_wx(&w, 1, &blk, s, q, m);
+        let mut xb = Matrix::zeros(rows * q, s);
+        for i in 0..rows {
+            let xi = blk.x_row(i, s, q);
+            for si in 0..s {
+                for t in 0..q {
+                    xb[(i * q + t, si)] = xi[si * q + t] as f64;
+                }
+            }
+        }
+        let reference = xb.matmul(&Matrix::from_f32(s, m, &w));
+        assert_eq!(wire, reference);
     }
 
     #[test]

@@ -5,12 +5,17 @@
 //!
 //! # Blocking scheme
 //!
-//! `matmul` packs one `KC × NC` (64×64) panel of B at a time into a
-//! contiguous scratch buffer, then streams rows of A through it with a
-//! 4-wide unrolled AXPY inner kernel — the packed panel (32 KiB) stays in
-//! L1 while A and the output are touched sequentially. `gram` uses a
-//! 4-row microkernel that rank-4-updates the upper triangle, quartering
-//! the G write traffic relative to the row-at-a-time loop.
+//! `matmul` packs B once per call into contiguous `KC × NC` (64×64)
+//! panels ([`PackedPanels`], built by shape-fixed `(kk, jj)` tile walk),
+//! then streams rows of A through each panel with a 4-wide unrolled AXPY
+//! inner kernel — the active panel (32 KiB) stays in L1 while A and the
+//! output are touched sequentially. The pack is **shared read-only by
+//! every output row tile** of the call: the threaded `matmul_with` builds
+//! it once and hands every worker the same panels instead of repacking B
+//! per row tile (the PR-2 layout repacked B `ceil(m / MM_ROW_TILE)`
+//! times). `gram` uses a 4-row microkernel that rank-4-updates the upper
+//! triangle, quartering the G write traffic relative to the
+//! row-at-a-time loop.
 //!
 //! # Determinism
 //!
@@ -44,9 +49,14 @@ use std::fmt;
 use super::policy::{fixed_tiles, par_map, ParallelPolicy};
 use crate::util::rng::Rng;
 
+/// Row-major dense f64 matrix — the substrate's working type. All blocked
+/// kernels (`matmul*`, `gram*`) live here; see the module docs for the
+/// blocking and determinism contract.
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
     data: Vec<f64>,
 }
@@ -69,10 +79,12 @@ impl fmt::Debug for Matrix {
 }
 
 impl Matrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// n×n identity.
     pub fn identity(n: usize) -> Matrix {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -81,6 +93,7 @@ impl Matrix {
         m
     }
 
+    /// Build from a slice of equal-length row vectors.
     pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -88,37 +101,46 @@ impl Matrix {
         Matrix { rows: r, cols: c, data: rows.concat() }
     }
 
+    /// Wrap an owned row-major buffer (length must equal rows·cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
+    /// Widen a row-major f32 buffer to f64 (exact — every f32 is
+    /// f64-representable).
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
     }
 
+    /// Standard-normal random matrix (deterministic in the `Rng` state).
     pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
         let data = (0..rows * cols).map(|_| rng.normal()).collect();
         Matrix { rows, cols, data }
     }
 
+    /// The row-major backing buffer.
     pub fn data(&self) -> &[f64] {
         &self.data
     }
 
+    /// Mutable row-major backing buffer.
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
 
+    /// Row `i` as a contiguous slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable contiguous slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// The cols×rows transpose (materialized copy).
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -129,25 +151,32 @@ impl Matrix {
         t
     }
 
-    /// self * other — cache-blocked GEMM (packed B panel, 4-wide inner
-    /// kernel; see the module docs for the blocking/determinism story).
+    /// self * other — cache-blocked GEMM: B is packed once into read-only
+    /// [`PackedPanels`], then rows of A stream through each panel with the
+    /// 4-wide inner kernel (see the module docs for the
+    /// blocking/determinism story).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        self.matmul_rows(other, 0, self.rows)
+        let pack = PackedPanels::pack(&other.data, other.rows, other.cols);
+        self.matmul_rows(&pack, 0, self.rows)
     }
 
     /// Threaded GEMM: output rows sharded over fixed [`MM_ROW_TILE`]-high
-    /// tiles executed by `policy.workers` threads. Bit-identical to
-    /// [`Matrix::matmul`] at any worker count (each output element is
-    /// produced by one worker running the identical kernel).
+    /// tiles executed by `policy.workers` threads, all reading **one
+    /// shared B-panel pack** built up front (packing cost paid once per
+    /// call, not once per row tile). Bit-identical to [`Matrix::matmul`]
+    /// at any worker count (each output element is produced by one worker
+    /// running the identical kernel; the pack only changes data layout,
+    /// never arithmetic order).
     pub fn matmul_with(&self, other: &Matrix, policy: ParallelPolicy) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, n) = (self.rows, other.cols);
         if policy.workers <= 1 || m < 2 * MM_ROW_TILE {
             return self.matmul(other);
         }
+        let pack = PackedPanels::pack(&other.data, other.rows, other.cols);
         let tiles = fixed_tiles(m, MM_ROW_TILE);
-        let slabs = par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows(other, i0, i1)))
+        let slabs = par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows(&pack, i0, i1)))
             .expect("matmul worker thread panicked");
         let mut data = Vec::with_capacity(m * n);
         for slab in slabs {
@@ -156,32 +185,26 @@ impl Matrix {
         Matrix { rows: m, cols: n, data }
     }
 
-    /// GEMM restricted to output rows [i0, i1): the shared kernel behind
-    /// `matmul` (full range) and `matmul_with` (one tile per call). Row
-    /// independence makes every split bit-equivalent.
-    fn matmul_rows(&self, other: &Matrix, i0: usize, i1: usize) -> Matrix {
+    /// GEMM restricted to output rows [i0, i1) over a prebuilt B pack: the
+    /// shared kernel behind `matmul` (full range) and `matmul_with` (one
+    /// tile per call, pack shared across tiles). Row independence makes
+    /// every split bit-equivalent.
+    fn matmul_rows(&self, pack: &PackedPanels<f64>, i0: usize, i1: usize) -> Matrix {
         debug_assert!(i0 <= i1 && i1 <= self.rows);
-        let (k, n) = (self.cols, other.cols);
+        debug_assert_eq!(self.cols, pack.k);
+        let (k, n) = (pack.k, pack.n);
         let mut out = Matrix::zeros(i1 - i0, n);
         if i1 == i0 || k == 0 || n == 0 {
             return out;
         }
-        let mut pack = vec![0.0f64; KC * NC];
-        for kk in (0..k).step_by(KC) {
-            let kb = KC.min(k - kk);
-            for jj in (0..n).step_by(NC) {
-                let jb = NC.min(n - jj);
-                // pack the B panel rows kk..kk+kb, cols jj..jj+jb
-                for p in 0..kb {
-                    let base = (kk + p) * n + jj;
-                    pack[p * jb..p * jb + jb]
-                        .copy_from_slice(&other.data[base..base + jb]);
-                }
+        for (ki, &(kk, kb)) in pack.k_tiles.iter().enumerate() {
+            for (ji, &(jj, jb)) in pack.j_tiles.iter().enumerate() {
+                let panel = pack.panel(ki, ji);
                 for i in i0..i1 {
                     let arow = &self.data[i * k + kk..i * k + kk + kb];
                     let orow = &mut out.data[(i - i0) * n + jj..(i - i0) * n + jj + jb];
                     for (p, &a) in arow.iter().enumerate() {
-                        axpy4(a, &pack[p * jb..p * jb + jb], orow);
+                        axpy4(a, &panel[p * jb..p * jb + jb], orow);
                     }
                 }
             }
@@ -300,10 +323,12 @@ impl Matrix {
         Matrix { rows: top.rows + bottom.rows, cols: top.cols, data }
     }
 
+    /// Frobenius norm √(Σ xᵢⱼ²).
     pub fn frobenius(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
+    /// Largest element-wise absolute difference (shape-checked).
     pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -332,19 +357,75 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
 }
 
 /// GEMM panel depth (k-tile). 64×64 f64 = 32 KiB: one packed panel per L1.
-pub(crate) const KC: usize = 64;
-/// GEMM panel width (j-tile).
-pub(crate) const NC: usize = 64;
+/// A compile-time constant — part of the documented fixed-tile schedule
+/// shared by [`Matrix::matmul`] and [`MatrixF32::matmul_widen`](super::MatrixF32::matmul_widen).
+pub const KC: usize = 64;
+/// GEMM panel width (j-tile); see [`KC`].
+pub const NC: usize = 64;
 /// Output-row tile height of the threaded GEMM. Fixed (never derived from
 /// the worker count): the split schedule is part of the determinism
-/// contract, and 64 rows amortize the per-tile B-panel repacking to < 2%.
-pub(crate) const MM_ROW_TILE: usize = 64;
+/// contract — `matmul_with`/`matmul_widen` shard output rows over exactly
+/// these tiles whatever the [`ParallelPolicy`] says.
+pub const MM_ROW_TILE: usize = 64;
 /// Input-row chunk height of the threaded Gram fold (multiple of the
-/// 4-row microkernel). Fixed for the same reason as [`MM_ROW_TILE`].
-pub(crate) const GRAM_ROW_CHUNK: usize = 512;
+/// 4-row microkernel). Fixed for the same reason as [`MM_ROW_TILE`];
+/// shared by `gram_with` and `gram_widen`.
+pub const GRAM_ROW_CHUNK: usize = 512;
 
-/// Mirror the accumulated upper triangle into the lower one.
-fn mirror_upper(g: &mut Matrix) {
+/// Read-only packed B panels of one GEMM call: B reorganized into
+/// contiguous [`KC`]×[`NC`] tiles by a shape-fixed `(kk, jj)` walk, built
+/// once and then shared by every output row tile (and every worker thread)
+/// of the call. Packing is pure data movement — the multiply/accumulate
+/// order of the consuming kernels is untouched, which is why the shared
+/// pack preserves the bit-identity contract. Generic over the element type
+/// so the f64 GEMM and the f32-wire widen GEMM reuse one layout.
+pub struct PackedPanels<T> {
+    /// Depth (rows of B) the pack was built from.
+    pub(crate) k: usize,
+    /// Width (cols of B) the pack was built from.
+    pub(crate) n: usize,
+    /// `(kk, kb)` per k-tile: start row and height.
+    pub(crate) k_tiles: Vec<(usize, usize)>,
+    /// `(jj, jb)` per j-tile: start col and width.
+    pub(crate) j_tiles: Vec<(usize, usize)>,
+    /// Panel `(ki, ji)` at `panels[ki * j_tiles.len() + ji]`, row-major
+    /// `kb × jb` within the panel.
+    panels: Vec<Vec<T>>,
+}
+
+impl<T: Copy> PackedPanels<T> {
+    /// Pack a row-major k×n buffer into panels (one allocation per panel,
+    /// `(kk, jj)` ascending — the same walk the consuming kernels take).
+    pub(crate) fn pack(data: &[T], k: usize, n: usize) -> PackedPanels<T> {
+        debug_assert_eq!(data.len(), k * n);
+        let k_tiles: Vec<(usize, usize)> =
+            fixed_tiles(k, KC).into_iter().map(|(lo, hi)| (lo, hi - lo)).collect();
+        let j_tiles: Vec<(usize, usize)> =
+            fixed_tiles(n, NC).into_iter().map(|(lo, hi)| (lo, hi - lo)).collect();
+        let mut panels = Vec::with_capacity(k_tiles.len() * j_tiles.len());
+        for &(kk, kb) in &k_tiles {
+            for &(jj, jb) in &j_tiles {
+                let mut p = Vec::with_capacity(kb * jb);
+                for r in 0..kb {
+                    let base = (kk + r) * n + jj;
+                    p.extend_from_slice(&data[base..base + jb]);
+                }
+                panels.push(p);
+            }
+        }
+        PackedPanels { k, n, k_tiles, j_tiles, panels }
+    }
+
+    /// The packed `kb × jb` panel at tile coordinates `(ki, ji)`.
+    #[inline]
+    pub(crate) fn panel(&self, ki: usize, ji: usize) -> &[T] {
+        &self.panels[ki * self.j_tiles.len() + ji]
+    }
+}
+
+/// Mirror the accumulated upper triangle into the lower one (shared by
+/// the f64 Gram and the widen Gram in `matrix32`).
+pub(crate) fn mirror_upper(g: &mut Matrix) {
     let n = g.cols;
     for a in 0..n {
         for b in 0..a {
@@ -373,6 +454,8 @@ fn axpy4(a: f64, x: &[f64], out: &mut [f64]) {
     }
 }
 
+/// Plain sequential dot product (ascending index order — the accumulation
+/// order every matvec-shaped path in the substrate shares).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());

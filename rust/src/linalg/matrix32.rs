@@ -1,0 +1,402 @@
+//! `MatrixF32` — f32-storage operands with **accumulate-widen** kernels:
+//! multiply f32 panels, accumulate into f64. This is the CPU mirror of the
+//! paper's wire format (H blocks are f32 in the artifact ABI while β is
+//! solved in higher precision): storing the wide GEMM/Gram operands in f32
+//! halves their memory traffic, and widening at the multiply keeps the
+//! solve's accumulation in f64.
+//!
+//! # Kernel contract (schedule, order, drift)
+//!
+//! Every widen kernel runs the **same fixed-tile schedule as its f64
+//! twin** — [`KC`](super::matrix::KC)×[`NC`](super::matrix::NC) packed B
+//! panels built once per call and shared read-only by all row tiles,
+//! [`MM_ROW_TILE`]-high output row tiles for the GEMM,
+//! [`GRAM_ROW_CHUNK`]-high input chunks folded in chunk order
+//! for the Gram — and accumulates each output element's terms in the same
+//! ascending `(kk, p)` order. Consequences, each pinned by tests:
+//!
+//! * **Worker invariance** — results are bit-identical at any
+//!   [`ParallelPolicy`] worker count, exactly like the f64 paths.
+//! * **Exactness on f32 sources** — an f32×f32 product widened to f64 is
+//!   exact (24+24 significand bits < 53), so when the operands' values are
+//!   exactly f32-representable the widen kernels return **bit-identical**
+//!   results to the f64 kernels on the widened operands: 0 ulp kernel
+//!   drift. This covers `lift_wx` (both operands come from f32 buffers)
+//!   and the H blocks of the recurrent architectures (tanh outputs cast
+//!   from f32).
+//! * **Bounded drift on f64 sources** — when a [`Matrix`] is rounded to
+//!   f32 storage ([`MatrixF32::from_matrix`]), the only error is that one
+//!   storage rounding (≤ 2⁻²⁴ relative per operand, values within normal
+//!   f32 range). Per element, versus the f64 reference on the unrounded
+//!   operands: `|Δ[i,j]| ≤ 2⁻²³·(|A|·|B|)[i,j]` for `matmul_widen` (two
+//!   rounded factors per term) and `|Δ[a,b]| ≤ 2⁻²³·(|A|ᵀ·|A|)[a,b]` for
+//!   `gram_widen` — i.e. at most ~2 f32 ulps scaled by the absolute-value
+//!   product, independent of the accumulation length because the
+//!   accumulator stays f64. The property suite asserts this element-wise
+//!   bound on random inputs.
+
+use std::fmt;
+
+use super::matrix::{mirror_upper, Matrix, PackedPanels, GRAM_ROW_CHUNK, MM_ROW_TILE};
+use super::policy::{fixed_tiles, par_map, ParallelPolicy};
+
+/// Row-major dense f32 matrix: the storage/wire type of the
+/// mixed-precision paths. Products of its entries are accumulated in f64
+/// by the `*_widen` kernels (see the module docs for the full contract).
+#[derive(Clone, PartialEq)]
+pub struct MatrixF32 {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for MatrixF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "MatrixF32 {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl MatrixF32 {
+    /// All-zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> MatrixF32 {
+        MatrixF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an owned row-major f32 buffer (length must equal rows·cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> MatrixF32 {
+        assert_eq!(data.len(), rows * cols);
+        MatrixF32 { rows, cols, data }
+    }
+
+    /// Copy a row-major f32 slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> MatrixF32 {
+        assert_eq!(data.len(), rows * cols);
+        MatrixF32 { rows, cols, data: data.to_vec() }
+    }
+
+    /// Round an f64 matrix to f32 storage (round-to-nearest; one rounding
+    /// of ≤ 2⁻²⁴ relative per entry for values in normal f32 range — the
+    /// entirety of the widen kernels' drift versus the f64 reference).
+    pub fn from_matrix(a: &Matrix) -> MatrixF32 {
+        MatrixF32 {
+            rows: a.rows,
+            cols: a.cols,
+            data: a.data().iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// Widen back to f64 (exact).
+    pub fn to_f64(&self) -> Matrix {
+        Matrix::from_f32(self.rows, self.cols, &self.data)
+    }
+
+    /// The row-major backing buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Row `i` as a contiguous slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// self * other with f32 operands and f64 accumulation — the
+    /// accumulate-widen GEMM.
+    ///
+    /// Schedule: B packed once into shared read-only
+    /// [`KC`](super::matrix::KC)×[`NC`](super::matrix::NC)
+    /// [`PackedPanels`], output rows sharded over fixed
+    /// [`MM_ROW_TILE`]-high tiles across `policy.workers` threads, each
+    /// element's k-terms accumulated in ascending `(kk, p)` order by a
+    /// 4-wide unrolled widening AXPY. Bit-identical at any worker count;
+    /// bit-identical to `self.to_f64().matmul(&other.to_f64())` (0 ulp
+    /// kernel drift — every f32×f32 product is exact in f64); within
+    /// `2⁻²³·(|A|·|B|)[i,j]` of the f64 reference when the operands were
+    /// rounded from f64 (see the module contract).
+    pub fn matmul_widen(&self, other: &MatrixF32, policy: ParallelPolicy) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul_widen shape mismatch");
+        let (m, n) = (self.rows, other.cols);
+        let pack = PackedPanels::pack(&other.data, other.rows, other.cols);
+        if policy.workers <= 1 || m < 2 * MM_ROW_TILE {
+            return self.matmul_rows_widen(&pack, 0, m);
+        }
+        let tiles = fixed_tiles(m, MM_ROW_TILE);
+        let slabs =
+            par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows_widen(&pack, i0, i1)))
+                .expect("matmul_widen worker thread panicked");
+        let mut data = Vec::with_capacity(m * n);
+        for slab in slabs {
+            data.extend_from_slice(slab.data());
+        }
+        Matrix::from_vec(m, n, data)
+    }
+
+    /// Widen GEMM restricted to output rows [i0, i1) over a prebuilt
+    /// shared pack — the exact structural mirror of the f64
+    /// `Matrix::matmul_rows`, with the widening at the multiply.
+    fn matmul_rows_widen(&self, pack: &PackedPanels<f32>, i0: usize, i1: usize) -> Matrix {
+        debug_assert!(i0 <= i1 && i1 <= self.rows);
+        debug_assert_eq!(self.cols, pack.k);
+        let (k, n) = (pack.k, pack.n);
+        let mut out = Matrix::zeros(i1 - i0, n);
+        if i1 == i0 || k == 0 || n == 0 {
+            return out;
+        }
+        for (ki, &(kk, kb)) in pack.k_tiles.iter().enumerate() {
+            for (ji, &(jj, jb)) in pack.j_tiles.iter().enumerate() {
+                let panel = pack.panel(ki, ji);
+                for i in i0..i1 {
+                    let arow = &self.data[i * k + kk..i * k + kk + kb];
+                    let orow =
+                        &mut out.data_mut()[(i - i0) * n + jj..(i - i0) * n + jj + jb];
+                    for (p, &a) in arow.iter().enumerate() {
+                        axpy4_widen(a, &panel[p * jb..p * jb + jb], orow);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// selfᵀ * self with f32 rows and f64 accumulation — the
+    /// accumulate-widen Gram.
+    ///
+    /// Schedule: input rows sharded over fixed [`GRAM_ROW_CHUNK`]-high
+    /// chunks, per-chunk partial Grams (4-row rank-4 microkernel, upper
+    /// triangle) folded in chunk order, mirrored at the end — structurally
+    /// identical to `Matrix::gram_with`. Bit-identical at any worker
+    /// count; bit-identical to `self.to_f64().gram_with(policy)` (exact
+    /// products); within `2⁻²³·(|A|ᵀ·|A|)[a,b]` of the f64 reference on
+    /// f64-rounded operands.
+    pub fn gram_widen(&self, policy: ParallelPolicy) -> Matrix {
+        let chunks = fixed_tiles(self.rows, GRAM_ROW_CHUNK);
+        if chunks.len() <= 1 {
+            let mut g = self.gram_rows_widen(0, self.rows);
+            mirror_upper(&mut g);
+            return g;
+        }
+        let partials = par_map(chunks, policy, |(lo, hi)| Ok(self.gram_rows_widen(lo, hi)))
+            .expect("gram_widen worker thread panicked");
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for p in partials {
+            for (gv, pv) in g.data_mut().iter_mut().zip(p.data()) {
+                *gv += pv;
+            }
+        }
+        mirror_upper(&mut g);
+        g
+    }
+
+    /// Upper-triangle widen-Gram over rows [lo, hi) — the f32-wire mirror
+    /// of `Matrix::gram_rows` (4-row microkernel, scalar tail, f64
+    /// accumulator, no mirroring so partials fold cheaply).
+    fn gram_rows_widen(&self, lo: usize, hi: usize) -> Matrix {
+        debug_assert!(lo <= hi && hi <= self.rows);
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        let rows = hi;
+        let mut i = lo;
+        while i + 4 <= rows {
+            let r0 = &self.data[i * n..(i + 1) * n];
+            let r1 = &self.data[(i + 1) * n..(i + 2) * n];
+            let r2 = &self.data[(i + 2) * n..(i + 3) * n];
+            let r3 = &self.data[(i + 3) * n..(i + 4) * n];
+            for a in 0..n {
+                let (x0, x1, x2, x3) =
+                    (r0[a] as f64, r1[a] as f64, r2[a] as f64, r3[a] as f64);
+                let grow = &mut g.data_mut()[a * n..(a + 1) * n];
+                for b in a..n {
+                    grow[b] += x0 * r0[b] as f64
+                        + x1 * r1[b] as f64
+                        + x2 * r2[b] as f64
+                        + x3 * r3[b] as f64;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let r = &self.data[i * n..(i + 1) * n];
+            for a in 0..n {
+                let ra = r[a] as f64;
+                let grow = &mut g.data_mut()[a * n..(a + 1) * n];
+                for b in a..n {
+                    grow[b] += ra * r[b] as f64;
+                }
+            }
+            i += 1;
+        }
+        g
+    }
+
+    /// self * v with f32 matrix entries widened at the multiply and an f64
+    /// accumulator, ascending index order — the widen mirror of
+    /// `Matrix::matvec` (bit-identical to it on f32-representable
+    /// entries).
+    pub fn matvec_widen(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(&h, &x)| h as f64 * x).sum())
+            .collect()
+    }
+
+    /// selfᵀ * v, widening at the multiply, f64 accumulator, same row-major
+    /// sweep (and therefore accumulation order) as `Matrix::t_matvec`.
+    pub fn t_matvec_widen(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            let vi = v[i];
+            for j in 0..self.cols {
+                out[j] += r[j] as f64 * vi;
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatrixF32 {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatrixF32 {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// out += a·x widening each f32 product to f64, 4-wide unrolled. Each
+/// out[j] sees exactly one add per call (same as the f64 `axpy4`), so the
+/// element-wise accumulation order matches the f64 kernel term for term.
+/// The f32×f32 product is computed in f64 and is therefore exact.
+#[inline]
+fn axpy4_widen(a: f32, x: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let a = a as f64;
+    let n = out.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        out[j] += a * x[j] as f64;
+        out[j + 1] += a * x[j + 1] as f64;
+        out[j + 2] += a * x[j + 2] as f64;
+        out[j + 3] += a * x[j + 3] as f64;
+        j += 4;
+    }
+    while j < n {
+        out[j] += a * x[j] as f64;
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_f32(rows: usize, cols: usize, seed: u64) -> MatrixF32 {
+        let mut rng = Rng::new(seed);
+        MatrixF32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn widen_matmul_bit_identical_to_f64_on_f32_sources() {
+        // operands born f32: every product is exact in f64, so the widen
+        // kernel must reproduce the f64 tiled GEMM bit for bit
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 5, 3), (65, 64, 63),
+            (100, 129, 65), (3, 200, 130)]
+        {
+            let a = random_f32(m, k, (m * 31 + k * 7 + n) as u64);
+            let b = random_f32(k, n, (m + k * 5 + n * 11) as u64);
+            let widen = a.matmul_widen(&b, ParallelPolicy::sequential());
+            let f64ref = a.to_f64().matmul(&b.to_f64());
+            assert_eq!(widen, f64ref, "{m}x{k}x{n} widen != widened f64");
+        }
+    }
+
+    #[test]
+    fn widen_matmul_bit_identical_across_worker_counts() {
+        for &(m, k, n) in &[(129usize, 40usize, 33usize), (256, 64, 64), (300, 7, 130)] {
+            let a = random_f32(m, k, (m + k + n) as u64);
+            let b = random_f32(k, n, (m * 2 + k + n) as u64);
+            let seq = a.matmul_widen(&b, ParallelPolicy::sequential());
+            for workers in [1usize, 2, 4, 8] {
+                let par = a.matmul_widen(&b, ParallelPolicy::with_workers(workers));
+                assert_eq!(par, seq, "{m}x{k}x{n} differs at workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn widen_gram_bit_identical_to_f64_and_worker_invariant() {
+        let a = random_f32(GRAM_ROW_CHUNK * 2 + 37, 9, 42);
+        let base = a.gram_widen(ParallelPolicy::sequential());
+        assert_eq!(base, a.to_f64().gram_with(ParallelPolicy::sequential()));
+        for workers in [2usize, 4, 8] {
+            let g = a.gram_widen(ParallelPolicy::with_workers(workers));
+            assert_eq!(g, base, "gram_widen bits differ at workers={workers}");
+        }
+        // single chunk degenerate
+        let s = random_f32(17, 6, 43);
+        assert_eq!(
+            s.gram_widen(ParallelPolicy::with_workers(8)),
+            s.to_f64().gram(),
+        );
+    }
+
+    #[test]
+    fn widen_matvecs_match_f64_on_f32_sources() {
+        let a = random_f32(23, 7, 5);
+        let v: Vec<f64> = (0..7).map(|i| (i as f64 * 0.3).cos()).collect();
+        assert_eq!(a.matvec_widen(&v), a.to_f64().matvec(&v));
+        let w: Vec<f64> = (0..23).map(|i| (i as f64 * 0.17).sin()).collect();
+        assert_eq!(a.t_matvec_widen(&w), a.to_f64().t_matvec(&w));
+    }
+
+    #[test]
+    fn widen_matmul_propagates_non_finite() {
+        // 0 × ∞ must still produce NaN through the widen path
+        let a = MatrixF32::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = MatrixF32::from_vec(2, 1, vec![f32::INFINITY, 2.0]);
+        let c = a.matmul_widen(&b, ParallelPolicy::sequential());
+        assert!(c[(0, 0)].is_nan(), "0*inf skipped: {}", c[(0, 0)]);
+        let g = MatrixF32::from_vec(2, 2, vec![0.0, f32::INFINITY, 1.0, 1.0])
+            .gram_widen(ParallelPolicy::sequential());
+        assert!(g.data().iter().any(|v| v.is_nan()), "gram_widen dropped NaN");
+    }
+
+    #[test]
+    fn round_trip_and_indexing() {
+        let mut m = MatrixF32::zeros(2, 3);
+        m[(1, 2)] = 4.5;
+        assert_eq!(m[(1, 2)], 4.5);
+        assert_eq!(m.row(1), &[0.0, 0.0, 4.5]);
+        let f = m.to_f64();
+        assert_eq!(f[(1, 2)], 4.5);
+        assert_eq!(MatrixF32::from_matrix(&f), m);
+    }
+}

@@ -1,11 +1,17 @@
 //! Dense linear algebra substrate for the ELM solve (β = H†Y, §4.2) —
-//! blocked and multi-threaded on the hot paths.
+//! blocked, multi-threaded, and mixed-precision on the hot paths.
 //!
 //! The paper replaces the explicit Moore-Penrose pseudo-inverse with a QR
 //! factorization + back-substitution. We provide:
 //!
-//! * [`matrix`] — cache-tiled GEMM (packed 64×64 B panels, 4-wide inner
-//!   kernel) and a rank-4 Gram microkernel,
+//! * [`matrix`] — cache-tiled GEMM (packed 64×64 B panels built once per
+//!   call and shared read-only by every row tile, 4-wide inner kernel)
+//!   and a rank-4 Gram microkernel,
+//! * [`matrix32`] — [`MatrixF32`], the f32-storage operand type, with the
+//!   accumulate-widen kernels `matmul_widen`/`gram_widen` (f32 wire, f64
+//!   accumulation — the paper's H-block format; same fixed-tile schedules
+//!   as the f64 kernels, so the determinism contract carries over
+//!   unchanged),
 //! * [`qr`] — blocked panel Householder QR in the compact-WY
 //!   representation (trailing updates as GEMMs); the unblocked scalar loop
 //!   survives as `householder_qr_reference`,
@@ -17,12 +23,16 @@
 //!   equations `(HᵀH + λI) β = HᵀY` (rank-deficiency fallback),
 //! * [`solve`] — triangular solves and the user-facing least-squares entry
 //!   points, including the parallel `lstsq_tsqr`,
-//! * [`policy`] — [`ParallelPolicy`], the single worker-count knob every
-//!   threaded path shares, and the fixed-split schedules behind the
-//!   bit-identical-at-any-worker-count determinism contract.
+//! * [`policy`] — [`ParallelPolicy`], the single worker-count (and
+//!   [`Precision`] wire-format) knob every threaded path shares, and the
+//!   fixed-split schedules behind the bit-identical-at-any-worker-count
+//!   determinism contract.
+
+#![deny(missing_docs)]
 
 pub mod cholesky;
 pub mod matrix;
+pub mod matrix32;
 pub mod policy;
 pub mod qr;
 pub mod solve;
@@ -30,7 +40,8 @@ pub mod tsqr;
 
 pub use cholesky::cholesky_solve;
 pub use matrix::Matrix;
-pub use policy::ParallelPolicy;
+pub use matrix32::MatrixF32;
+pub use policy::{ParallelPolicy, Precision};
 pub use qr::{
     householder_qr, householder_qr_owned, householder_qr_owned_with,
     householder_qr_reference, householder_qr_with, QrFactors,

@@ -22,35 +22,82 @@
 //!
 //! Callers plumb one `ParallelPolicy` value instead of ad-hoc `workers:
 //! usize` arguments; `CpuElmTrainer` and the report timers construct it
-//! once per run.
+//! once per run. The policy also carries the [`Precision`] wire-format
+//! knob consumed by the mixed-precision paths (`CpuElmTrainer`'s Gram
+//! fold, `bptt::forward_cpu_with`): the f32-wire kernels obey the same
+//! fixed-schedule discipline, so switching precision never weakens the
+//! worker-count bit-identity guarantee.
 
 use anyhow::{anyhow, Result};
 
-/// Worker-count policy for the threaded linalg paths. Carries no split
-/// information on purpose: splits are fixed by the kernels (see the module
-/// docs), the policy only says how many threads execute them.
+/// Numeric wire format of the substrate's mixed-precision paths.
+///
+/// The paper keeps H blocks f32 on the wire (the artifact ABI is f32) while
+/// β is solved in higher precision; [`Precision`] is the one knob that
+/// selects which wire format the CPU pipeline mirrors:
+///
+/// * [`Precision::F64`] — everything stays f64 end to end. This is the
+///   reference path every conformance test anchors to.
+/// * [`Precision::MixedF32`] — operands are stored/streamed as f32 and the
+///   kernels accumulate into f64 ([`MatrixF32::matmul_widen`] /
+///   [`MatrixF32::gram_widen`]), halving the memory traffic of the wide
+///   GEMM/Gram operands. For operands whose values are exactly
+///   f32-representable the widen kernels are **bit-identical** to the f64
+///   reference (every f32×f32 product is exact in f64 and the accumulation
+///   order is the same fixed schedule); for f64-sourced operands the drift
+///   is bounded by the one storage rounding (see the [`matrix32`] contract).
+///
+/// Either way the determinism contract is unchanged: results are
+/// bit-identical at any worker count.
+///
+/// [`MatrixF32::matmul_widen`]: super::MatrixF32::matmul_widen
+/// [`MatrixF32::gram_widen`]: super::MatrixF32::gram_widen
+/// [`matrix32`]: super::matrix32
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// f64 storage, f64 arithmetic — the conformance-tested reference.
+    #[default]
+    F64,
+    /// f32 storage/wire, f64 accumulation (the paper's H-block format).
+    MixedF32,
+}
+
+/// Worker-count (and wire-precision) policy for the threaded linalg paths.
+/// Carries no split information on purpose: splits are fixed by the kernels
+/// (see the module docs), the policy only says how many threads execute
+/// them and which wire format precision-aware callers use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelPolicy {
     /// Number of worker threads (>= 1). 1 means run on the caller thread.
     pub workers: usize,
+    /// Wire format for precision-aware paths (the `CpuElmTrainer` Gram fold
+    /// and `bptt::forward_cpu_with`); kernels that take f64 operands ignore
+    /// it. Defaults to [`Precision::F64`].
+    pub precision: Precision,
 }
 
 impl ParallelPolicy {
     /// Single-threaded: everything runs on the caller's thread.
     pub fn sequential() -> ParallelPolicy {
-        ParallelPolicy { workers: 1 }
+        ParallelPolicy { workers: 1, precision: Precision::F64 }
     }
 
     /// Explicit worker count (clamped to >= 1).
     pub fn with_workers(workers: usize) -> ParallelPolicy {
-        ParallelPolicy { workers: workers.max(1) }
+        ParallelPolicy { workers: workers.max(1), precision: Precision::F64 }
     }
 
     /// One worker per available core, capped at 8 (the ELM solve saturates
     /// memory bandwidth before it saturates more cores than that).
     pub fn auto() -> ParallelPolicy {
         let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
-        ParallelPolicy { workers: cores.clamp(1, 8) }
+        ParallelPolicy { workers: cores.clamp(1, 8), precision: Precision::F64 }
+    }
+
+    /// Same worker count, different wire precision (builder style).
+    pub fn with_precision(mut self, precision: Precision) -> ParallelPolicy {
+        self.precision = precision;
+        self
     }
 }
 
@@ -180,5 +227,16 @@ mod tests {
         assert_eq!(ParallelPolicy::sequential().workers, 1);
         let auto = ParallelPolicy::auto().workers;
         assert!((1..=8).contains(&auto));
+    }
+
+    #[test]
+    fn precision_defaults_to_f64_and_builds() {
+        assert_eq!(ParallelPolicy::sequential().precision, Precision::F64);
+        assert_eq!(ParallelPolicy::with_workers(4).precision, Precision::F64);
+        assert_eq!(ParallelPolicy::auto().precision, Precision::F64);
+        let p = ParallelPolicy::with_workers(4).with_precision(Precision::MixedF32);
+        assert_eq!(p.workers, 4);
+        assert_eq!(p.precision, Precision::MixedF32);
+        assert_eq!(Precision::default(), Precision::F64);
     }
 }

@@ -58,7 +58,9 @@ pub struct QrFactors {
     /// Per-panel upper-triangular T of the compact-WY form (parallel to
     /// `panels`). Empty on the reference path.
     ts: Vec<Matrix>,
+    /// Row count of the factored matrix.
     pub m: usize,
+    /// Column count of the factored matrix (m >= n).
     pub n: usize,
 }
 

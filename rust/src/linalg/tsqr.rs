@@ -83,10 +83,12 @@ fn merge_pair(n: usize, a: Reduced, b: Reduced) -> Result<Reduced> {
 }
 
 impl TsqrAccumulator {
+    /// Empty accumulator for an n-column design matrix.
     pub fn new(n_cols: usize) -> TsqrAccumulator {
         TsqrAccumulator { n: n_cols, r: None, z: vec![0.0; n_cols], rows_seen: 0 }
     }
 
+    /// Total rows folded in so far (the underdetermined-solve guard).
     pub fn rows_seen(&self) -> usize {
         self.rows_seen
     }

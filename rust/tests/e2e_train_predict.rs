@@ -13,6 +13,11 @@
 //! This is the suite that makes the threaded substrate safe to keep
 //! rewriting: any reassociation snuck into a "fast path" shows up here as
 //! a bit mismatch.
+//!
+//! The sweep also covers the **f32-wire** trainer (`Precision::MixedF32`,
+//! Gram strategy through `gram_widen`/`t_matvec_widen`): β must be
+//! bit-identical at 1/2/4/8 workers and the trained models must clear the
+//! same per-arch MSE ceilings as the f64 path.
 
 use opt_pr_elm::coordinator::accumulator::SolveStrategy;
 use opt_pr_elm::coordinator::CpuElmTrainer;
@@ -21,7 +26,7 @@ use opt_pr_elm::data::window::Windowed;
 use opt_pr_elm::data::MinMax;
 use opt_pr_elm::elm::trainer::hidden_matrix;
 use opt_pr_elm::elm::{Arch, ElmParams, ALL_ARCHS};
-use opt_pr_elm::linalg::lstsq_qr;
+use opt_pr_elm::linalg::{lstsq_qr, ParallelPolicy, Precision};
 use opt_pr_elm::util::rng::Rng;
 
 const M: usize = 12;
@@ -45,6 +50,18 @@ fn trainer(workers: usize) -> CpuElmTrainer {
     t.strategy = SolveStrategy::DirectQr;
     t.block_rows = 64; // several blocks per worker at this n
     t
+}
+
+/// Per-arch MSE ceilings on the normalized [0, 1] scale: loose sanity
+/// bounds (the strict claim is beating the mean predictor), NARMAX looser
+/// because its error-feedback loop adds prediction-time noise. One
+/// definition shared by the f64 and f32-wire sweeps so both enforce the
+/// same quality bar.
+fn ceiling(arch: Arch) -> f64 {
+    match arch {
+        Arch::Narmax => 0.10,
+        _ => 0.06,
+    }
 }
 
 #[test]
@@ -93,15 +110,6 @@ fn beta_bit_identical_to_sequential_lstsq_qr() {
 
 #[test]
 fn test_mse_finite_and_below_ceiling_all_archs() {
-    // per-arch MSE ceilings on the normalized [0, 1] scale: loose sanity
-    // bounds (the strict claim is beating the mean predictor), NARMAX
-    // looser because its error-feedback loop adds prediction-time noise
-    fn ceiling(arch: Arch) -> f64 {
-        match arch {
-            Arch::Narmax => 0.10,
-            _ => 0.06,
-        }
-    }
     let (train, test) = prepared();
     let ymean = test.y.iter().map(|&v| v as f64).sum::<f64>() / test.n as f64;
     let base_mse = test
@@ -125,6 +133,73 @@ fn test_mse_finite_and_below_ceiling_all_archs() {
         assert!(
             mse < base_mse,
             "{}: test MSE {mse} not better than mean predictor {base_mse}",
+            arch.name()
+        );
+    }
+}
+
+/// f32-wire trainer: Gram strategy streaming H over the mixed-precision
+/// kernels (`gram_widen`/`t_matvec_widen`).
+fn mixed_trainer(workers: usize) -> CpuElmTrainer {
+    let mut t = CpuElmTrainer::with_policy(
+        ParallelPolicy::with_workers(workers).with_precision(Precision::MixedF32),
+    );
+    t.strategy = SolveStrategy::Gram;
+    t.block_rows = 64;
+    t
+}
+
+#[test]
+fn f32_wire_beta_bit_identical_across_worker_counts_all_archs() {
+    // the mixed-precision acceptance: the f32-wire Gram pipeline must be
+    // just as worker-count-invariant as the f64 one, for all six archs
+    let (train, _test) = prepared();
+    for arch in ALL_ARCHS {
+        let mut base: Option<Vec<f64>> = None;
+        for workers in [1usize, 2, 4, 8] {
+            let (model, bd) = mixed_trainer(workers).train(arch, &train, M, SEED).unwrap();
+            assert!(bd.blocks > 0);
+            match &base {
+                None => base = Some(model.beta),
+                Some(b) => assert_eq!(
+                    b,
+                    &model.beta,
+                    "{}: f32-wire β bits differ at workers={workers}",
+                    arch.name()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_wire_trainer_stays_below_mse_ceilings_all_archs() {
+    // same shared per-arch ceilings as the f64 path: the f32 wire must not
+    // cost model quality (H entries are f32 tanh outputs — the wire is
+    // exact)
+    let (train, test) = prepared();
+    let ymean = test.y.iter().map(|&v| v as f64).sum::<f64>() / test.n as f64;
+    let base_mse = test
+        .y
+        .iter()
+        .map(|&v| (v as f64 - ymean).powi(2))
+        .sum::<f64>()
+        / test.n as f64;
+    for arch in ALL_ARCHS {
+        let t = mixed_trainer(4);
+        let (model, _) = t.train(arch, &train, M, SEED).unwrap();
+        let rmse = t.rmse(&model, &test).unwrap();
+        let mse = rmse * rmse;
+        assert!(mse.is_finite(), "{}: non-finite f32-wire MSE", arch.name());
+        assert!(
+            mse < ceiling(arch),
+            "{}: f32-wire test MSE {mse} above ceiling {}",
+            arch.name(),
+            ceiling(arch)
+        );
+        assert!(
+            mse < base_mse,
+            "{}: f32-wire test MSE {mse} not better than mean predictor {base_mse}",
             arch.name()
         );
     }

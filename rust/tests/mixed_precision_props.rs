@@ -1,0 +1,230 @@
+//! Conformance suite for the accumulate-widen (f32 wire / f64 accumulate)
+//! substrate, pinning the documented kernel contract of
+//! `linalg::matrix32`:
+//!
+//! * `matmul_widen` / `gram_widen` are **bit-identical across worker
+//!   counts** (same fixed tile schedule as the f64 kernels),
+//! * on f32-born operands they are **bit-identical to the f64 kernels**
+//!   (every f32×f32 product is exact in f64),
+//! * on f64-rounded operands the element-wise drift versus the f64
+//!   reference obeys the documented ulp bound
+//!   `|Δ[i,j]| ≤ 2⁻²³·(|A|·|B|)[i,j]` (one storage rounding per operand,
+//!   f64 accumulator — no length-dependent error growth),
+//! * the GEMM-lifted FC `h_block` matches its scalar reference and
+//!   `h_row` (property over random shapes),
+//! * the mixed-precision BPTT forward matches the f64 wire per its
+//!   contract (FC/GRU bitwise; LSTM bounded).
+
+use opt_pr_elm::bptt::init::{init_params, BpttArch};
+use opt_pr_elm::bptt::{forward_cpu_with, BpttModel};
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::arch::{fc, SampleBlock};
+use opt_pr_elm::elm::{Arch, ElmParams};
+use opt_pr_elm::linalg::{Matrix, MatrixF32, ParallelPolicy, Precision};
+use opt_pr_elm::testing::prop;
+use opt_pr_elm::util::rng::Rng;
+
+fn random_matrix(g: &mut prop::Gen, rows: usize, cols: usize) -> Matrix {
+    let mut rng = Rng::new(g.u64());
+    Matrix::random(rows, cols, &mut rng)
+}
+
+/// |A| (element-wise absolute value).
+fn abs_matrix(a: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.rows, a.cols);
+    for (o, v) in out.data_mut().iter_mut().zip(a.data()) {
+        *o = v.abs();
+    }
+    out
+}
+
+#[test]
+fn widen_matmul_worker_invariant_property() {
+    prop::check(30, |g| {
+        let (m, k, n) = match g.case % 4 {
+            0 => (0, 1 + g.size(0, 8), 1 + g.size(0, 8)),
+            1 => (1, 1, 1),
+            2 => (200 + g.size(0, 400), 1 + g.size(0, 4), 1 + g.size(0, 12)),
+            _ => (1 + g.size(0, 180), 1 + g.size(0, 90), 1 + g.size(0, 90)),
+        };
+        let a = MatrixF32::from_matrix(&random_matrix(g, m, k));
+        let b = MatrixF32::from_matrix(&random_matrix(g, k, n));
+        let seq = a.matmul_widen(&b, ParallelPolicy::sequential());
+        for workers in [2usize, 4, 8] {
+            let par = a.matmul_widen(&b, ParallelPolicy::with_workers(workers));
+            prop::assert_prop(
+                par == seq,
+                format!("matmul_widen {m}x{k}x{n} bits differ at workers={workers}"),
+            )?;
+        }
+        // and identical to the f64 tiled GEMM on the (exactly) widened
+        // operands — 0 ulp kernel drift
+        let f64ref = a.to_f64().matmul(&b.to_f64());
+        prop::assert_prop(
+            seq == f64ref,
+            format!("matmul_widen {m}x{k}x{n} != f64 GEMM on widened operands"),
+        )
+    });
+}
+
+#[test]
+fn widen_matmul_ulp_bound_vs_f64_reference_property() {
+    // f64-born operands: the only error is the f32 storage rounding,
+    // bounded element-wise by 2^-23 * (|A|·|B|)[i,j] whatever the depth k
+    prop::check(25, |g| {
+        let m = 1 + g.size(0, 60);
+        let k = 1 + g.size(0, 300);
+        let n = 1 + g.size(0, 60);
+        let a = random_matrix(g, m, k);
+        let b = random_matrix(g, k, n);
+        let widen = MatrixF32::from_matrix(&a)
+            .matmul_widen(&MatrixF32::from_matrix(&b), ParallelPolicy::sequential());
+        let reference = a.matmul(&b);
+        let envelope = abs_matrix(&a).matmul(&abs_matrix(&b));
+        // documented bound is 2^-23 · (|A|·|B|); 5% headroom covers the
+        // strictly-accounted 2^-48 second-order term and the f64
+        // accumulation difference between the two sums
+        let bound = 1.05 * (2.0f64).powi(-23);
+        for i in 0..m {
+            for j in 0..n {
+                let drift = (widen[(i, j)] - reference[(i, j)]).abs();
+                prop::assert_prop(
+                    drift <= bound * envelope[(i, j)] + 1e-300,
+                    format!(
+                        "({i},{j}) of {m}x{k}x{n}: drift {drift:e} exceeds \
+                         2^-23 * {:e}",
+                        envelope[(i, j)]
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn widen_gram_worker_invariant_and_ulp_bounded_property() {
+    prop::check(20, |g| {
+        let rows = match g.case % 4 {
+            0 => g.size(0, 3),
+            _ => 1 + g.size(0, 1400),
+        };
+        let cols = 1 + g.size(0, 20);
+        let a = random_matrix(g, rows, cols);
+        let a32 = MatrixF32::from_matrix(&a);
+        let base = a32.gram_widen(ParallelPolicy::sequential());
+        for workers in [2usize, 4, 8] {
+            let gthr = a32.gram_widen(ParallelPolicy::with_workers(workers));
+            prop::assert_prop(
+                gthr == base,
+                format!("gram_widen {rows}x{cols} bits differ at workers={workers}"),
+            )?;
+        }
+        // bit-identical to the f64 gram of the widened operand
+        prop::assert_prop(
+            base == a32.to_f64().gram_with(ParallelPolicy::sequential()),
+            format!("gram_widen {rows}x{cols} != f64 gram on widened operand"),
+        )?;
+        // ulp envelope vs the f64 reference on the unrounded operand
+        let reference = a.gram_with(ParallelPolicy::sequential());
+        let aabs = abs_matrix(&a);
+        let envelope = aabs.transpose().matmul(&aabs);
+        let bound = (2.0f64).powi(-23);
+        for x in 0..cols {
+            for y in 0..cols {
+                let drift = (base[(x, y)] - reference[(x, y)]).abs();
+                // gram_with reassociates vs the widen fold only through
+                // identical chunk schedules, so the envelope still holds
+                // with a small slack for the f64 fold's own rounding
+                prop::assert_prop(
+                    drift <= bound * envelope[(x, y)] + 1e-9 * envelope[(x, y)] + 1e-300,
+                    format!(
+                        "({x},{y}) of gram {rows}x{cols}: drift {drift:e} vs \
+                         envelope {:e}",
+                        envelope[(x, y)]
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fc_h_block_matches_h_row_property() {
+    // dedicated FC coverage at larger (q, m) than the all-arch sweep: the
+    // GEMM-lifted recurrence vs the scalar reference and the one-sample
+    // recurrence
+    prop::check(20, |g| {
+        let s = 1 + g.size(0, 2);
+        let q = 1 + g.size(0, 11);
+        let m = 1 + g.size(0, 17);
+        let rows = 1 + g.size(0, 50);
+        let x = g.vec_f32(rows * s * q, -1.0, 1.0);
+        let yh = vec![0f32; rows * q];
+        let eh = vec![0f32; rows * q];
+        let p = ElmParams::init(Arch::Fc, s, q, m, g.u64());
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        let batched = fc::h_block(&p, &blk);
+        let reference = fc::h_block_reference(&p, &blk);
+        prop::assert_close(
+            batched.max_abs_diff(&reference),
+            0.0,
+            1e-5,
+            &format!("fc h_block vs reference ({s},{q},{m}) rows={rows}"),
+        )?;
+        let mut out = vec![0f32; m];
+        for i in 0..rows {
+            fc::h_row(&p, &x[i * s * q..(i + 1) * s * q], &mut out);
+            for j in 0..m {
+                prop::assert_close(
+                    batched[(i, j)],
+                    out[j] as f64,
+                    1e-5,
+                    &format!("fc h_block vs h_row row {i} col {j}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_wire_bptt_forward_contract() {
+    let mut rng = Rng::new(3);
+    let series: Vec<f64> = (0..160).map(|_| rng.range(0.0, 1.0)).collect();
+    let w = Windowed::from_series(&series, 6).unwrap();
+    // FC and GRU: hidden state exactly f32-representable (all-f32 cell
+    // math) → identical bits on either wire
+    for arch in [BpttArch::Fc, BpttArch::Gru] {
+        let mdl = BpttModel {
+            arch,
+            s: w.s,
+            q: w.q,
+            m: 8,
+            params: init_params(arch, w.s, 8, 5),
+        };
+        assert_eq!(
+            forward_cpu_with(&mdl, &w, Precision::MixedF32),
+            forward_cpu_with(&mdl, &w, Precision::F64),
+            "{}: mixed wire changed bits",
+            arch.name()
+        );
+    }
+    // LSTM: f64 cell state → one f32 rounding of h per step, bounded drift
+    let mdl = BpttModel {
+        arch: BpttArch::Lstm,
+        s: w.s,
+        q: w.q,
+        m: 8,
+        params: init_params(BpttArch::Lstm, w.s, 8, 6),
+    };
+    let f64p = forward_cpu_with(&mdl, &w, Precision::F64);
+    let mixed = forward_cpu_with(&mdl, &w, Precision::MixedF32);
+    let worst = f64p
+        .iter()
+        .zip(&mixed)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(worst < 1e-4, "lstm: mixed-wire drift {worst}");
+}
