@@ -9,6 +9,14 @@ single-thread, blocked vs seed reference) against the checked-in
 baseline: a drop of more than `regression_margin` (default 25%) below a
 baseline ratio fails the job. Ratios, not absolute times, keep the gate
 portable across CI hardware generations.
+
+The bench's `meta` record must carry the machine's worker count in an
+explicit `workers` field; reading it from the `gflops` field (where old
+BENCH files smuggled it) is supported as a deprecated fallback for one
+release. A meta record carrying neither is rejected.
+
+`ci/test_check_bench.py` is the self-test for this gate — run it (pytest)
+before trusting a gate change.
 """
 
 import json
@@ -20,11 +28,29 @@ def die(msg: str) -> None:
     sys.exit(1)
 
 
-def main() -> None:
-    if len(sys.argv) != 3:
-        die(f"usage: {sys.argv[0]} BENCH_linalg.json linalg_baseline.json")
-    bench_path, baseline_path = sys.argv[1], sys.argv[2]
+def meta_workers(recs: list) -> float:
+    """Worker count of the machine the bench ran on, from the meta record.
 
+    Prefers the explicit `workers` field; falls back to the legacy
+    `gflops` smuggle (deprecated — kept one release so old BENCH files
+    still gate); dies when the meta record carries neither.
+    """
+    for r in recs:
+        if r.get("op") != "meta":
+            continue
+        if "workers" in r:
+            return max(1.0, float(r["workers"]))
+        if "gflops" in r:
+            print(
+                "WARN: meta record has no 'workers' field; falling back to "
+                "the deprecated gflops smuggle (regenerate BENCH_linalg.json)"
+            )
+            return max(1.0, float(r["gflops"]))
+        die("meta record carries neither 'workers' nor the legacy 'gflops'")
+    return 1.0  # no meta record: required_ops normally catches this first
+
+
+def run(bench_path: str, baseline_path: str) -> None:
     try:
         with open(bench_path) as f:
             recs = json.load(f)
@@ -36,11 +62,15 @@ def main() -> None:
     if not isinstance(recs, list) or not recs:
         die(f"{bench_path}: expected a non-empty record array")
     for i, r in enumerate(recs):
-        for key in ("op", "shape", "ns_per_iter", "gflops"):
+        for key in ("op", "shape", "ns_per_iter"):
             if key not in r:
                 die(f"record {i} missing {key!r}: {r}")
         if not isinstance(r["op"], str) or not r["op"]:
             die(f"record {i} has a bad op: {r}")
+        if r["op"] == "meta":
+            continue  # shape/throughput fields don't apply to metadata
+        if "gflops" not in r:
+            die(f"record {i} missing 'gflops': {r}")
         if not (float(r["ns_per_iter"]) > 0):
             die(f"record {i} has non-positive ns_per_iter: {r}")
         # gbps (achieved bandwidth vs the compulsory-traffic model) is
@@ -54,14 +84,9 @@ def main() -> None:
         die(f"missing op keys: {missing} (present: {sorted(ops)})")
     print(f"ok: {len(recs)} records, all {len(base['required_ops'])} op keys present")
 
-    # threaded floors scale with the bench machine's worker count (the
-    # bench's `meta` record carries it in gflops): a 2-vCPU CI runner is
-    # not held to an 8-core threaded-speedup baseline
-    workers = 1.0
-    for r in recs:
-        if r["op"] == "meta":
-            workers = max(1.0, float(r["gflops"]))
-            break
+    # threaded floors scale with the bench machine's worker count: a
+    # 2-vCPU CI runner is not held to an 8-core threaded-speedup baseline
+    workers = meta_workers(recs)
     threaded_keys = set(base.get("threaded_keys", []))
 
     margin = float(base.get("regression_margin", 0.25))
@@ -97,6 +122,12 @@ def main() -> None:
     if failures:
         die("; ".join(failures))
     print("bench gate passed")
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        die(f"usage: {sys.argv[0]} BENCH_linalg.json linalg_baseline.json")
+    run(sys.argv[1], sys.argv[2])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,118 @@
+"""Self-test for ci/check_bench.py (run with pytest, or directly).
+
+Exercises the paths a broken gate would silently wave through: a passing
+bench, a genuine speedup regression, a missing required op, and the three
+meta-record worker-count cases (explicit `workers` field, the deprecated
+gflops fallback, and neither — which must be rejected).
+"""
+
+import json
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+import check_bench  # noqa: E402
+
+
+def rec(op, shape="512x512x512", speedup=None, **extra):
+    r = {"op": op, "shape": shape, "ns_per_iter": 100.0, "gflops": 1.0, **extra}
+    if speedup is not None:
+        r["speedup_vs_reference"] = speedup
+    return r
+
+
+META = {"op": "meta", "shape": "workers=4", "ns_per_iter": 1.0, "workers": 4.0}
+
+BASELINE = {
+    "regression_margin": 0.25,
+    "threaded_keys": ["matmul_threaded@512x512x512"],
+    "required_ops": ["meta", "matmul", "matmul_threaded"],
+    # floor for a >= 8-worker machine: 2.7 * 0.75; capped at 0.6*workers
+    "min_speedups": {"matmul_threaded@512x512x512": 2.7},
+}
+
+
+def gate(recs, baseline=BASELINE):
+    """Run the gate on in-memory records; returns None on pass, raises
+    SystemExit on failure (check_bench.die calls sys.exit(1))."""
+    with tempfile.TemporaryDirectory() as d:
+        bench = pathlib.Path(d) / "BENCH_linalg.json"
+        base = pathlib.Path(d) / "baseline.json"
+        bench.write_text(json.dumps(recs))
+        base.write_text(json.dumps(baseline))
+        check_bench.run(str(bench), str(base))
+
+
+def expect_fail(recs, baseline=BASELINE):
+    try:
+        gate(recs, baseline)
+    except SystemExit as e:
+        assert e.code == 1, f"gate failed with unexpected code {e.code}"
+        return
+    raise AssertionError("gate passed but a FAIL was expected")
+
+
+def test_passes_on_healthy_bench():
+    # workers=4 caps the threaded floor at 0.6*4 = 2.4 → floor 1.8
+    gate([META, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
+
+
+def test_fails_on_speedup_regression():
+    expect_fail([META, rec("matmul"), rec("matmul_threaded", speedup=1.0)])
+
+
+def test_fails_on_missing_required_op():
+    expect_fail([META, rec("matmul_threaded", speedup=2.0)])  # no "matmul"
+
+
+def test_meta_workers_field_scales_threaded_floor():
+    # 2-worker machine: cap = 1.2, floor = 0.9 → 1.0x passes there
+    two = dict(META, workers=2.0)
+    gate([two, rec("matmul"), rec("matmul_threaded", speedup=1.0)])
+    # but the same 1.0x is a regression on an 8-worker machine (floor 2.02)
+    eight = dict(META, workers=8.0)
+    expect_fail([eight, rec("matmul"), rec("matmul_threaded", speedup=1.0)])
+
+
+def test_meta_gflops_fallback_still_honored():
+    # legacy BENCH file: worker count smuggled through gflops, no workers
+    legacy = {"op": "meta", "shape": "workers=2", "ns_per_iter": 1.0, "gflops": 2.0}
+    gate([legacy, rec("matmul"), rec("matmul_threaded", speedup=1.0)])
+
+
+def test_meta_missing_both_rejected():
+    bare = {"op": "meta", "shape": "workers=?", "ns_per_iter": 1.0}
+    expect_fail([bare, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
+
+
+def test_non_meta_record_must_carry_gflops():
+    bad = {"op": "matmul", "shape": "512x512x512", "ns_per_iter": 100.0}
+    expect_fail([META, bad, rec("matmul_threaded", speedup=2.0)])
+
+
+def test_malformed_bench_json_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        bench = pathlib.Path(d) / "BENCH_linalg.json"
+        base = pathlib.Path(d) / "baseline.json"
+        bench.write_text("not json")
+        base.write_text(json.dumps(BASELINE))
+        try:
+            check_bench.run(str(bench), str(base))
+        except SystemExit as e:
+            assert e.code == 1
+            return
+        raise AssertionError("malformed JSON passed the gate")
+
+
+if __name__ == "__main__":
+    failures = 0
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_") and callable(fn):
+            try:
+                fn()
+                print(f"ok: {name}")
+            except AssertionError as e:
+                failures += 1
+                print(f"FAIL: {name}: {e}", file=sys.stderr)
+    sys.exit(1 if failures else 0)

@@ -36,17 +36,20 @@ pub fn forward_cpu(model: &BpttModel, data: &Windowed) -> Vec<f64> {
 /// The lifted input projection `x @ wx` always runs on the f32 wire
 /// (both operands are f32 parameters/data, so the widen GEMM is
 /// bit-identical to the f64 one — see the `linalg::matrix32` contract).
-/// `precision` selects the wire of the per-step recurrent GEMM `h @ wh`:
+/// `precision` selects the wire the hidden state *lives on*:
 ///
-/// * [`Precision::F64`] — the reference; `h` stays f64.
-/// * [`Precision::MixedF32`] — `h` is rounded to f32 per step and the
-///   GEMM accumulates wide, mirroring the AOT artifacts' f32 state. For
-///   the FC and GRU cells the hidden state is exactly f32-representable
-///   (FC: a tanh of an f32; GRU: an all-f32 gate update), so those paths
-///   are **bit-identical** to the f64 wire. Only LSTM drifts: its cell
-///   state `c` is carried in f64 (`fg·c + ig·gg` products), so rounding
-///   `h` to f32 per step changes bits — tests bound the output
-///   difference at 1e-4 on unit-scale data.
+/// * [`Precision::F64`] — the reference; `h` stays f64 end to end.
+/// * [`Precision::MixedF32`] — `h` is **f32-born**: the state matrix is
+///   `MatrixF32`, gate outputs are stored into it directly, and the
+///   per-step recurrent GEMM `h @ wh` reads it through `matmul_widen` —
+///   no per-step f64 H materialization or rounding pass (the old wire
+///   rounded a fresh f64 `h` every step). For the FC and GRU cells the
+///   hidden state is exactly f32-representable (FC: a tanh of an f32;
+///   GRU: an all-f32 gate update), so those paths are **bit-identical**
+///   to the f64 wire. Only LSTM differs: its cell state `c` is carried in
+///   f64 (`fg·c + ig·gg` products), so `h = o·tanh(c)` rounds once at the
+///   f32 store — tests bound the output difference at 1e-4 on unit-scale
+///   data.
 pub fn forward_cpu_with(model: &BpttModel, data: &Windowed, precision: Precision) -> Vec<f64> {
     let mut out = Vec::with_capacity(data.n);
     for (lo, hi) in block_ranges(data.n, CHUNK) {
@@ -80,6 +83,30 @@ fn forward_chunk(
             RecurrentW::Mixed(MatrixF32::from_slice(m, gm, &model.params[1]))
         }
     };
+    // the hidden state lives on the selected wire: f32-born under
+    // MixedF32 (get/set are exact for the all-f32 FC/GRU updates; LSTM's
+    // f64 `o·tanh(c)` rounds once at the store, replacing the old
+    // per-step from_matrix rounding of a whole f64 state matrix)
+    enum HState {
+        F64(Matrix),
+        F32(MatrixF32),
+    }
+    impl HState {
+        #[inline]
+        fn get(&self, i: usize, j: usize) -> f64 {
+            match self {
+                HState::F64(h) => h[(i, j)],
+                HState::F32(h) => h[(i, j)] as f64,
+            }
+        }
+        #[inline]
+        fn set(&mut self, i: usize, j: usize, v: f64) {
+            match self {
+                HState::F64(h) => h[(i, j)] = v,
+                HState::F32(h) => h[(i, j)] = v as f32,
+            }
+        }
+    }
     let bias = &model.params[2];
     let wo = &model.params[3];
     let bo = model.params[4][0] as f64;
@@ -98,13 +125,18 @@ fn forward_chunk(
     }
     let zx_all = xb.matmul_widen(&wx, seq); // (B·Q, G·M)
 
-    let mut h = Matrix::zeros(b_rows, m);
+    let mut h = match precision {
+        Precision::F64 => HState::F64(Matrix::zeros(b_rows, m)),
+        Precision::MixedF32 => HState::F32(MatrixF32::zeros(b_rows, m)),
+    };
     let mut c = Matrix::zeros(b_rows, m); // lstm cell state (unused otherwise)
     for t in 0..q {
-        // (B, G·M): the per-step batched GEMM, on the selected wire
-        let zh = match &wh {
-            RecurrentW::F64(w) => h.matmul(w),
-            RecurrentW::Mixed(w) => MatrixF32::from_matrix(&h).matmul_widen(w, seq),
+        // (B, G·M): the per-step batched GEMM on the state's own wire —
+        // the f32-born state feeds matmul_widen directly
+        let zh = match (&h, &wh) {
+            (HState::F64(h), RecurrentW::F64(w)) => h.matmul(w),
+            (HState::F32(h32), RecurrentW::Mixed(w)) => h32.matmul_widen(w, seq),
+            _ => unreachable!("state and weight wires are selected together"),
         };
         for i in 0..b_rows {
             let zx = zx_all.row(i * q + t);
@@ -113,7 +145,7 @@ fn forward_chunk(
                 BpttArch::Fc => {
                     for j in 0..m {
                         let pre = (zx[j] + zh_row[j]) as f32 + bias[j];
-                        h[(i, j)] = tanh(pre) as f64;
+                        h.set(i, j, tanh(pre) as f64);
                     }
                 }
                 BpttArch::Lstm => {
@@ -127,7 +159,7 @@ fn forward_chunk(
                         let og = sigmoid(z(3));
                         let cn = fg as f64 * c[(i, j)] + (ig * gg) as f64;
                         c[(i, j)] = cn;
-                        h[(i, j)] = og as f64 * (cn as f32).tanh() as f64;
+                        h.set(i, j, og as f64 * (cn as f32).tanh() as f64);
                     }
                 }
                 BpttArch::Gru => {
@@ -139,8 +171,8 @@ fn forward_chunk(
                         let zg = sigmoid(zxg(0) + zhg(0));
                         let rg = sigmoid(zxg(1) + zhg(1));
                         let ng = tanh(zxg(2) + rg * zhg(2));
-                        let prev = h[(i, j)] as f32;
-                        h[(i, j)] = ((1.0 - zg) * prev + zg * ng) as f64;
+                        let prev = h.get(i, j) as f32;
+                        h.set(i, j, ((1.0 - zg) * prev + zg * ng) as f64);
                     }
                 }
             }
@@ -148,9 +180,8 @@ fn forward_chunk(
     }
     for i in 0..b_rows {
         let mut yhat = bo;
-        let hrow = h.row(i);
         for j in 0..m {
-            yhat += hrow[j] * wo[j] as f64;
+            yhat += h.get(i, j) * wo[j] as f64;
         }
         out.push(yhat);
     }

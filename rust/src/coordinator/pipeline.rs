@@ -27,12 +27,12 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::accumulator::{GramAccumulator, SolveStrategy};
 use crate::coordinator::batcher::{Block, RowBlockBatcher};
 use crate::data::window::Windowed;
-use crate::elm::arch::{block_ranges, h_block_range};
+use crate::elm::arch::{block_ranges, h_block_range_prec, HBlock};
 use crate::elm::trainer::{shift_history, SrElmModel};
 use crate::elm::{Arch, ElmParams, TrainOptions};
 use crate::linalg::policy::par_map;
 use crate::linalg::solve::{lstsq_qr_with, lstsq_ridge_from_parts, upper_triangular_deficient};
-use crate::linalg::{Matrix, MatrixF32, ParallelPolicy, Precision, TsqrAccumulator};
+use crate::linalg::{Matrix, ParallelPolicy, Precision, TsqrAccumulator};
 use crate::runtime::{ArtifactMeta, Buf, EnginePool, Manifest};
 
 /// Fig-6 style phase breakdown of one training run (seconds).
@@ -316,25 +316,27 @@ impl PrElmTrainer {
 ///
 /// # Mixed precision
 ///
-/// `policy.precision` selects the Gram fold's wire format:
-/// [`Precision::MixedF32`] streams each H block over the f32 wire
-/// (`MatrixF32::gram_widen` / `t_matvec_widen`, f64 accumulation — the
-/// artifact ABI's format). The Gram kernel's operand reads — the O(rows·M²)
-/// part of the fold — halve; note the block is still *materialized* f64 by
-/// the arch kernels and rounded once per block (an O(rows·M) conversion
-/// pass), so the end-to-end win requires M large enough for the kernel to
-/// dominate. Producing H on the f32 wire at the arch kernels themselves
-/// is the ROADMAP follow-on that removes that conversion. The f32
-/// wire only changes per-block arithmetic, never block boundaries or fold
-/// order, so β stays bit-identical across worker counts; the per-block
-/// drift versus the f64 fold is bounded by one f32 storage rounding of H
-/// (see the [`crate::linalg::matrix32`] contract — zero for architectures
-/// whose H entries are f32 tanh outputs). The knob governs **every solve
-/// that goes through the Gram pipeline**: the Gram strategy, the NARMAX
-/// passes (NARMAX always ridge-solves via Gram whatever `strategy` says),
-/// and the rank-deficiency fallbacks of the TSQR/DirectQr strategies.
-/// Only the TSQR and DirectQr *primary* solves are always f64 — they are
-/// the reference paths the e2e suite anchors to.
+/// `policy.precision` selects the wire format of the whole block pipeline.
+/// Under [`Precision::MixedF32`] every H block is **f32-born**: the arch
+/// kernels write their activations straight into `MatrixF32`
+/// ([`crate::elm::arch::h_block_f32`]) — no f64 materialization and no
+/// per-block rounding pass anywhere on the hot path — and every consumer
+/// takes the f32 block as-is. The Gram fold runs
+/// `MatrixF32::gram_widen`/`t_matvec_widen` (f64 accumulation, the
+/// artifact ABI's format), the TSQR strategy feeds f32 leaves to
+/// [`TsqrAccumulator::reduce_f32`] (widened exactly at the leaf QR, R/z
+/// f64), DirectQr widens exactly at assembly, and predictions use
+/// `matvec_widen`. Block memory and wire traffic halve end to end.
+///
+/// The f32 wire only changes storage width, never block boundaries or
+/// fold order, so β stays bit-identical across worker counts; and because
+/// H entries are f32 nonlinearity outputs (exactly representable on
+/// either wire), the TSQR and DirectQr solves are **bit-identical to
+/// their f64-precision twins** — they remain the reference paths the e2e
+/// suite anchors to. The Gram strategy's per-block partials are exact
+/// re-encodings too: both wires run the same fixed `GRAM_ROW_CHUNK`
+/// schedule (`gram_with` / `gram_widen`), so the partials — and hence β —
+/// are bit-identical at any `block_rows`.
 pub struct CpuElmTrainer {
     /// the one worker-count (+ wire precision) knob, shared with every
     /// threaded linalg path
@@ -409,12 +411,12 @@ impl CpuElmTrainer {
         bd.blocks += ranges.len();
         let t0 = Instant::now();
         let blocks = par_map(ranges, self.policy, |(lo, hi)| {
-            Ok(compute_h_block(params, data, None, lo, hi))
+            Ok(compute_h_block(params, data, None, lo, hi, self.policy.precision))
         })?;
         let idx: Vec<usize> = (0..blocks.len()).collect();
         let partials = par_map(idx, self.policy, |i| {
             let (h, y) = &blocks[i];
-            Ok(block_gram_partials(h, y, self.policy.precision))
+            Ok(block_gram_partials(h, y))
         })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
@@ -454,27 +456,44 @@ impl CpuElmTrainer {
         }
         let t0 = Instant::now();
         let blocks = par_map(ranges, self.policy, |(lo, hi)| {
-            Ok(compute_h_block(params, data, ehist, lo, hi))
+            Ok(compute_h_block(params, data, ehist, lo, hi, self.policy.precision))
         })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
 
         if self.strategy == SolveStrategy::DirectQr {
             // assemble H in block order and run the threaded direct QR —
             // bit-identical to the sequential `lstsq_qr` on the same H at
-            // any worker count (the e2e conformance anchor). The internal
-            // rank guard falls back to the deterministic chunked-Gram
-            // ridge, so no outer fallback is needed on Ok.
+            // any worker count (the e2e conformance anchor; f32-born
+            // blocks widen exactly at assembly, so MixedF32 keeps the
+            // anchor bit for bit). The internal rank guard falls back to
+            // the deterministic chunked-Gram ridge, so no outer fallback
+            // is needed on Ok.
             let t1 = Instant::now();
             let mut h = Matrix::zeros(data.n, m);
             let mut y = Vec::with_capacity(data.n);
             let mut row = 0usize;
             // consume the block list so each block frees right after its
-            // rows are copied (halves the transient 2x H footprint)
+            // rows are copied (halves the transient 2x H footprint);
+            // f32-born rows widen element-wise straight into h — no
+            // intermediate f64 block
             for (hb, yb) in blocks {
-                for r in 0..hb.rows {
-                    h.row_mut(row + r).copy_from_slice(hb.row(r));
+                match hb {
+                    HBlock::F64(hb) => {
+                        for r in 0..hb.rows {
+                            h.row_mut(row + r).copy_from_slice(hb.row(r));
+                        }
+                        row += hb.rows;
+                    }
+                    HBlock::F32(hb) => {
+                        for r in 0..hb.rows {
+                            let dst = h.row_mut(row + r);
+                            for (d, &s) in dst.iter_mut().zip(hb.row(r)) {
+                                *d = s as f64;
+                            }
+                        }
+                        row += hb.rows;
+                    }
                 }
-                row += hb.rows;
                 y.extend(yb);
             }
             if row < m {
@@ -489,7 +508,29 @@ impl CpuElmTrainer {
         }
 
         let t1 = Instant::now();
-        let acc = TsqrAccumulator::reduce(m, blocks, self.policy)?;
+        // the reduction takes the blocks on the wire they were born on:
+        // f32 leaves go straight to reduce_f32 (exact widen at the leaf
+        // QR), so no f64 H block ever materializes under MixedF32
+        let acc = match self.policy.precision {
+            Precision::F64 => TsqrAccumulator::reduce(
+                m,
+                blocks.into_iter().map(|(h, y)| (h.into_f64(), y)).collect(),
+                self.policy,
+            )?,
+            Precision::MixedF32 => TsqrAccumulator::reduce_f32(
+                m,
+                blocks
+                    .into_iter()
+                    .map(|(h, y)| match h {
+                        HBlock::F32(h) => (h, y),
+                        HBlock::F64(_) => {
+                            unreachable!("MixedF32 pipeline produced an f64 block")
+                        }
+                    })
+                    .collect(),
+                self.policy,
+            )?,
+        };
         if acc.rows_seen() < m {
             bail!("underdetermined: {} rows < M = {m}", acc.rows_seen());
         }
@@ -531,8 +572,8 @@ impl CpuElmTrainer {
         let ranges = block_ranges(data.n, self.block_rows);
         let t0 = Instant::now();
         let partials = par_map(ranges, self.policy, |(lo, hi)| {
-            let (h, y) = compute_h_block(params, data, ehist, lo, hi);
-            Ok(block_gram_partials(&h, &y, self.policy.precision))
+            let (h, y) = compute_h_block(params, data, ehist, lo, hi, self.policy.precision);
+            Ok(block_gram_partials(&h, &y))
         })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
@@ -551,7 +592,8 @@ impl CpuElmTrainer {
     ) -> Result<Vec<f64>> {
         let ranges = block_ranges(data.n, self.block_rows);
         let parts = par_map(ranges, self.policy, |(lo, hi)| {
-            let (h, _y) = compute_h_block(&model.params, data, ehist, lo, hi);
+            let (h, _y) =
+                compute_h_block(&model.params, data, ehist, lo, hi, self.policy.precision);
             Ok(h.matvec(&model.beta))
         })?;
         Ok(parts.concat())
@@ -602,37 +644,42 @@ fn fold_partials(
     Ok((g, c))
 }
 
-/// One block's (HᵀH, HᵀY, rows) partials at the requested wire precision.
-/// `MixedF32` rounds H once to f32 storage and runs the accumulate-widen
-/// kernels (f64 accumulation) — the fold that consumes the result is f64
-/// either way, so block order and fold determinism are unaffected.
-fn block_gram_partials(
-    h: &Matrix,
-    y: &[f64],
-    precision: Precision,
-) -> (Matrix, Vec<f64>, usize) {
-    match precision {
-        Precision::F64 => (h.gram(), h.t_matvec(y), h.rows),
-        Precision::MixedF32 => {
-            let hf = MatrixF32::from_matrix(h);
-            (
-                hf.gram_widen(ParallelPolicy::sequential()),
-                hf.t_matvec_widen(y),
-                h.rows,
-            )
-        }
+/// One block's (HᵀH, HᵀY, rows) partials on the wire the block was born
+/// on: f64 blocks run the f64 kernels, f32-born blocks run the
+/// accumulate-widen kernels directly — **no conversion pass in either
+/// direction**. The fold that consumes the result is f64 either way, so
+/// block order and fold determinism are unaffected; and since H entries
+/// are f32 nonlinearity outputs, the two wires produce bit-identical
+/// partials (the `linalg::matrix32` exactness contract). Both arms run
+/// the *same* fixed `GRAM_ROW_CHUNK` schedule (`gram_with` mirrors
+/// `gram_widen`), so the bit-identity holds at any `block_rows`, not
+/// just single-chunk blocks.
+fn block_gram_partials(h: &HBlock, y: &[f64]) -> (Matrix, Vec<f64>, usize) {
+    match h {
+        HBlock::F64(h) => (
+            h.gram_with(ParallelPolicy::sequential()),
+            h.t_matvec(y),
+            h.rows,
+        ),
+        HBlock::F32(hf) => (
+            hf.gram_widen(ParallelPolicy::sequential()),
+            hf.t_matvec_widen(y),
+            hf.rows,
+        ),
     }
 }
 
-/// One batched H block + widened targets for rows [lo, hi).
+/// One batched H block (on the wire `precision` selects — f32-born under
+/// `MixedF32`) + widened targets for rows [lo, hi).
 fn compute_h_block(
     params: &ElmParams,
     data: &Windowed,
     ehist: Option<&[f32]>,
     lo: usize,
     hi: usize,
-) -> (Matrix, Vec<f64>) {
-    let h = h_block_range(params, data, ehist, lo, hi);
+    precision: Precision,
+) -> (HBlock, Vec<f64>) {
+    let h = h_block_range_prec(params, data, ehist, lo, hi, precision);
     let y = data.y[lo..hi].iter().map(|&v| v as f64).collect();
     (h, y)
 }
@@ -670,6 +717,18 @@ fn assemble_h_inputs(
                 if let Some(full) = ehist {
                     let lo = block.offset * q;
                     let hi = (block.offset + block.valid) * q;
+                    if full.len() < hi {
+                        bail!(
+                            "ehist has {} values but block at offset {} needs \
+                             rows [{}, {}) at q = {q} (i.e. {} values); was the \
+                             residual history built for a shorter dataset?",
+                            full.len(),
+                            block.offset,
+                            block.offset,
+                            block.offset + block.valid,
+                            hi
+                        );
+                    }
                     e[..block.valid * q].copy_from_slice(&full[lo..hi]);
                 }
                 Buf::new(spec.shape.clone(), e)
@@ -810,6 +869,94 @@ mod tests {
                 archk.name()
             );
         }
+    }
+
+    #[test]
+    fn f32_born_blocks_keep_every_strategy_bit_identical_to_f64() {
+        // H entries are f32 nonlinearity outputs, so the f32-born wire is
+        // an exact re-encoding of the f64 one: every strategy (f32 Gram
+        // kernels, f32 TSQR leaves, DirectQr's exact widen-at-assembly)
+        // must reproduce the f64-precision β bit for bit — including the
+        // NARMAX two-pass ELS, whose residual sweep runs matvec_widen
+        let w = toy_windowed(500, 5, 9);
+        for strategy in
+            [SolveStrategy::Tsqr, SolveStrategy::Gram, SolveStrategy::DirectQr]
+        {
+            for archk in ALL_ARCHS {
+                let mut t64 = CpuElmTrainer::new(4);
+                t64.strategy = strategy;
+                t64.block_rows = 64;
+                let (m64, _) = t64.train(archk, &w, 10, 3).unwrap();
+                let mut t32 = CpuElmTrainer::with_policy(
+                    ParallelPolicy::with_workers(4).with_precision(Precision::MixedF32),
+                );
+                t32.strategy = strategy;
+                t32.block_rows = 64;
+                let (m32, _) = t32.train(archk, &w, 10, 3).unwrap();
+                assert_eq!(
+                    m64.beta,
+                    m32.beta,
+                    "{}/{strategy:?}: f32-born β differs from f64",
+                    archk.name()
+                );
+            }
+        }
+        // blocks taller than GRAM_ROW_CHUNK (512): both Gram wires run
+        // the same fixed chunk schedule, so the bit-identity must hold
+        // beyond single-chunk blocks too
+        let w_tall = toy_windowed(700, 5, 12);
+        let mut g64 = CpuElmTrainer::new(2);
+        g64.strategy = SolveStrategy::Gram;
+        g64.block_rows = 1024;
+        let (m64, _) = g64.train(Arch::Elman, &w_tall, 10, 3).unwrap();
+        let mut g32 = CpuElmTrainer::with_policy(
+            ParallelPolicy::with_workers(2).with_precision(Precision::MixedF32),
+        );
+        g32.strategy = SolveStrategy::Gram;
+        g32.block_rows = 1024;
+        let (m32, _) = g32.train(Arch::Elman, &w_tall, 10, 3).unwrap();
+        assert_eq!(m64.beta, m32.beta, "Gram bit-identity broke on a >512-row block");
+    }
+
+    #[test]
+    fn assemble_h_inputs_rejects_short_ehist() {
+        use crate::runtime::manifest::InputSpec;
+        let meta = ArtifactMeta {
+            name: "elm_predict_test".into(),
+            file: String::new(),
+            kind: "elm_predict".into(),
+            arch: "narmax".into(),
+            variant: String::new(),
+            rows: 4,
+            block_rows: 4,
+            s: 1,
+            q: 3,
+            m: 2,
+            inputs: vec![
+                InputSpec { name: "x".into(), shape: vec![4, 1, 3] },
+                InputSpec { name: "ehist".into(), shape: vec![4, 3] },
+            ],
+            outputs: vec![],
+        };
+        let params = ElmParams::init(Arch::Narmax, 1, 3, 2, 1);
+        let block = Block {
+            x: vec![0.0; 12],
+            yhist: vec![0.0; 12],
+            y: vec![0.0; 4],
+            mask: vec![1.0; 4],
+            valid: 4,
+            offset: 2,
+        };
+        // the block covers rows [2, 6) → needs 6·q = 18 ehist values
+        let short = vec![0f32; 12];
+        let err = assemble_h_inputs(&meta, &params, &block, Some(&short), 3)
+            .expect_err("short ehist must be rejected");
+        assert!(
+            err.to_string().contains("ehist has 12 values"),
+            "unhelpful error: {err}"
+        );
+        let ok = vec![0f32; 18];
+        assert!(assemble_h_inputs(&meta, &params, &block, Some(&ok), 3).is_ok());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32};
 
 use super::{lift_wx, wx_at, SampleBlock};
 
@@ -30,19 +30,28 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Whole row block: the input projections come from one block-wide GEMM
-/// (`lift_wx`); the diagonal recurrence then advances **four samples in
-/// lockstep** (lane-contiguous state, index `[j·4 + lane]`, matching the
-/// Gram microkernel's width) so the per-j loop streams four independent
-/// accumulators per alpha load. Lanes never mix, so every sample's value
-/// is bit-identical to the scalar tail path (and to `h_row` up to the
-/// lifted-GEMM association, bounded by the property tests).
+/// Whole row block, widened to f64 — an exact cast of [`h_block_f32`]
+/// (every H entry is an f32 tanh output, so the widening loses nothing).
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    h_block_f32(p, blk).to_f64()
+}
+
+/// Whole row block, **f32-born**: the input projections come from one
+/// block-wide GEMM (`lift_wx`); the diagonal recurrence then advances
+/// **four samples in lockstep** (lane-contiguous state, index
+/// `[j·4 + lane]`, matching the Gram microkernel's width) so the per-j
+/// loop streams four independent accumulators per alpha load. Lanes never
+/// mix, so every sample's value is bit-identical to the scalar tail path
+/// (and to `h_row` up to the lifted-GEMM association, bounded by the
+/// property tests). The activations are f32 tanh outputs and are stored
+/// straight into `MatrixF32` — no f64 materialization, half the block
+/// memory.
+pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
     let b = p.buf("b");
     let alpha = p.buf("alpha"); // (m, q): alpha[j*q + (k-1)]
-    let mut h = Matrix::zeros(blk.rows, m);
+    let mut h = MatrixF32::zeros(blk.rows, m);
 
     // 4-wide sample groups: hist4[((k-1)*m + j)*4 + lane] = h_j(t-k) of
     // sample i0 + lane
@@ -84,7 +93,7 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
         }
         for l in 0..4 {
             for j in 0..m {
-                h[(i0 + l, j)] = cur4[j * 4 + l] as f64;
+                h[(i0 + l, j)] = cur4[j * 4 + l];
             }
         }
     }
@@ -110,7 +119,7 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
             hist[..m].copy_from_slice(&cur);
         }
         for j in 0..m {
-            h[(i, j)] = cur[j] as f64;
+            h[(i, j)] = cur[j];
         }
     }
     h

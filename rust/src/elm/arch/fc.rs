@@ -3,7 +3,7 @@
 
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32, ParallelPolicy};
 
 use super::{lift_wx, wx_at, SampleBlock};
 
@@ -36,11 +36,19 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Whole row block, fully batched: the input projections come from one
-/// block-wide GEMM (`lift_wx`), and the fully-connected recurrence itself
-/// is lifted out of the per-sample loop — at timestep t the cross-neuron
-/// coupling of *every* sample in the block for lag k is one
-/// (rows × M) × (M × M) GEMM,
+/// Whole row block, widened to f64 — an exact cast of [`h_block_f32`]
+/// (every H entry is an f32 tanh output, exactly representable; the f32
+/// coupling GEMMs are bit-identical to the old f64 ones per the
+/// `linalg::matrix32` contract).
+pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    h_block_f32(p, blk).to_f64()
+}
+
+/// Whole row block, fully batched and **f32-born**: the input projections
+/// come from one block-wide GEMM (`lift_wx`), and the fully-connected
+/// recurrence itself is lifted out of the per-sample loop — at timestep t
+/// the cross-neuron coupling of *every* sample in the block for lag k is
+/// one (rows × M) × (M × M) GEMM,
 ///
 /// ```text
 ///   Acc_t = WX_t + b + Σ_{k=1..t} H_{t−k} · A_kᵀ ,   H_t = tanh(Acc_t)
@@ -49,33 +57,39 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
 /// where `A_k[j, l] = alpha[j, l, k]` — the per-timestep GEMV of the old
 /// scalar loop (strided alpha walks, one sample at a time) becomes q
 /// tiled GEMMs per timestep, like the gate projections of the other five
-/// architectures. Accumulation is f64 (the GEMMs accumulate wide) with
-/// one f32 rounding at the tanh, so values match the scalar
-/// [`h_block_reference`] / [`h_row`] to f32 round-off (the property suite
-/// bounds it at 1e-5).
-pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+/// architectures. Both coupling operands are f32-born (H_t is a tanh
+/// output, A_k an f32 parameter buffer), so the GEMMs run on the f32 wire
+/// through [`MatrixF32::matmul_widen`] — **bit-identical** to the
+/// widen-first f64 GEMMs they replace (exact f32×f32 products, same tile
+/// schedule) at half the operand traffic, with the per-timestep history
+/// slabs `hs` resident in f32. Accumulation is f64 (the widen GEMMs
+/// accumulate wide) with one f32 rounding at the tanh, so values match
+/// the scalar [`h_block_reference`] / [`h_row`] to f32 round-off (the
+/// property suite bounds it at 1e-5).
+pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let rows = blk.rows;
     if q == 0 {
-        return Matrix::zeros(rows, m);
+        return MatrixF32::zeros(rows, m);
     }
     let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
     let b = p.buf("b");
     let alpha = p.buf("alpha"); // (m, m, q): alpha[(j*m + l)*q + (k-1)]
-    // A_kᵀ as f64 GEMM operands: akt[k-1][(l, j)] = alpha[j, l, k]
-    let akt: Vec<Matrix> = (1..=q)
+    // A_kᵀ as f32-wire GEMM operands: akt[k-1][(l, j)] = alpha[j, l, k]
+    let akt: Vec<MatrixF32> = (1..=q)
         .map(|k| {
-            let mut t = Matrix::zeros(m, m);
+            let mut t = MatrixF32::zeros(m, m);
             for j in 0..m {
                 for l in 0..m {
-                    t[(l, j)] = alpha[(j * m + l) * q + (k - 1)] as f64;
+                    t[(l, j)] = alpha[(j * m + l) * q + (k - 1)];
                 }
             }
             t
         })
         .collect();
-    // hs[t] = H at timestep t for the whole block (rows × m)
-    let mut hs: Vec<Matrix> = Vec::with_capacity(q);
+    let seq = ParallelPolicy::sequential();
+    // hs[t] = H at timestep t for the whole block (rows × m), f32 resident
+    let mut hs: Vec<MatrixF32> = Vec::with_capacity(q);
     let mut acc = Matrix::zeros(rows, m);
     for t in 0..q {
         for i in 0..rows {
@@ -86,14 +100,14 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
             }
         }
         for k in 1..=t {
-            let coupling = hs[t - k].matmul(&akt[k - 1]);
+            let coupling = hs[t - k].matmul_widen(&akt[k - 1], seq);
             for (av, cv) in acc.data_mut().iter_mut().zip(coupling.data()) {
                 *av += cv;
             }
         }
-        let mut ht = Matrix::zeros(rows, m);
+        let mut ht = MatrixF32::zeros(rows, m);
         for (hv, av) in ht.data_mut().iter_mut().zip(acc.data()) {
-            *hv = tanh(*av as f32) as f64;
+            *hv = tanh(*av as f32);
         }
         hs.push(ht);
     }

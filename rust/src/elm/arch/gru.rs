@@ -3,7 +3,7 @@
 
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::params::ElmParams;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32};
 
 use super::{lift_wx, SampleBlock};
 
@@ -32,17 +32,25 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Whole row block: one (rows·q) × 3m GEMM lifts every gate's input
-/// projection (`w3` is row-major (s, 3m)); the diagonal cell then advances
-/// **four samples in lockstep** (lane-contiguous state, index
-/// `[j·4 + lane]`): one u3/b3 load drives four independent cells. Lanes
-/// never mix, so each sample is bit-identical to the scalar tail.
+/// Whole row block, widened to f64 — an exact cast of [`h_block_f32`]
+/// (every H entry is an all-f32 gate update, exactly representable).
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    h_block_f32(p, blk).to_f64()
+}
+
+/// Whole row block, **f32-born**: one (rows·q) × 3m GEMM lifts every
+/// gate's input projection (`w3` is row-major (s, 3m)); the diagonal cell
+/// then advances **four samples in lockstep** (lane-contiguous state,
+/// index `[j·4 + lane]`): one u3/b3 load drives four independent cells.
+/// Lanes never mix, so each sample is bit-identical to the scalar tail.
+/// The gate math is all-f32 and the outputs land straight in `MatrixF32`
+/// — no f64 materialization.
+pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let wx3 = lift_wx(p.buf("w3"), 3, blk, p.s, q, m);
     let u3 = p.buf("u3"); // (3, m)
     let b3 = p.buf("b3"); // (3, m)
-    let mut h = Matrix::zeros(blk.rows, m);
+    let mut h = MatrixF32::zeros(blk.rows, m);
 
     let mut f_prev4 = vec![0f32; m * 4];
     let mut cur4 = vec![0f32; m * 4];
@@ -72,7 +80,7 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
         }
         for l in 0..4 {
             for j in 0..m {
-                h[(i0 + l, j)] = cur4[j * 4 + l] as f64;
+                h[(i0 + l, j)] = cur4[j * 4 + l];
             }
         }
     }
@@ -95,7 +103,7 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
             f_prev.copy_from_slice(&cur);
         }
         for j in 0..m {
-            h[(i, j)] = cur[j] as f64;
+            h[(i, j)] = cur[j];
         }
     }
     h

@@ -4,7 +4,7 @@
 
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::params::ElmParams;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32};
 
 use super::{lift_wx, SampleBlock};
 
@@ -38,18 +38,26 @@ pub fn h_row(p: &ElmParams, x: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Whole row block: all four gate input projections for every sample and
-/// timestep come from one (rows·q) × 4m GEMM — `w4`'s (s, 4, m) layout is
-/// row-major (s, 4m), so it feeds the lift unchanged — then the diagonal
-/// cell advances **four samples in lockstep** (lane-contiguous f/c state,
-/// index `[j·4 + lane]`): one u4/b4 load drives four independent cells.
-/// Lanes never mix, so each sample is bit-identical to the scalar tail.
+/// Whole row block, widened to f64 — an exact cast of [`h_block_f32`]
+/// (every H entry is an f32 `o·tanh(c)` product, exactly representable).
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    h_block_f32(p, blk).to_f64()
+}
+
+/// Whole row block, **f32-born**: all four gate input projections for
+/// every sample and timestep come from one (rows·q) × 4m GEMM — `w4`'s
+/// (s, 4, m) layout is row-major (s, 4m), so it feeds the lift unchanged —
+/// then the diagonal cell advances **four samples in lockstep**
+/// (lane-contiguous f/c state, index `[j·4 + lane]`): one u4/b4 load
+/// drives four independent cells. Lanes never mix, so each sample is
+/// bit-identical to the scalar tail. The cell math is all-f32 and the
+/// outputs land straight in `MatrixF32` — no f64 materialization.
+pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let wx4 = lift_wx(p.buf("w4"), 4, blk, p.s, q, m);
     let u4 = p.buf("u4"); // (4, m)
     let b4 = p.buf("b4"); // (4, m)
-    let mut h = Matrix::zeros(blk.rows, m);
+    let mut h = MatrixF32::zeros(blk.rows, m);
 
     let mut f_prev4 = vec![0f32; m * 4];
     let mut c_prev4 = vec![0f32; m * 4];
@@ -83,7 +91,7 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
         }
         for l in 0..4 {
             for j in 0..m {
-                h[(i0 + l, j)] = cur4[j * 4 + l] as f64;
+                h[(i0 + l, j)] = cur4[j * 4 + l];
             }
         }
     }
@@ -112,7 +120,7 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
             f_prev.copy_from_slice(&cur);
         }
         for j in 0..m {
-            h[(i, j)] = cur[j] as f64;
+            h[(i, j)] = cur[j];
         }
     }
     h

@@ -1,14 +1,21 @@
-//! The six H recurrences (Eq 6-11). Two entry points per architecture:
+//! The six H recurrences (Eq 6-11). Entry points per architecture:
 //!
 //! * `h_row` — one sample, plain sequential scalar code: the S-R-ELM
 //!   baseline, exactly Algorithm 1.
-//! * `h_block` — a whole row block at once. The input projections (the
-//!   `wx_at` dots of Alg 2 line 6) are *lifted out of the recurrence* into
-//!   one tiled GEMM over the entire block (`lift_wx`); only the recurrent
-//!   part still walks the window sample by sample. Jordan and NARMAX have
-//!   no hidden-state recurrence, so their whole H block is pure GEMM +
-//!   elementwise tanh. This is the Appleyard-style batched-GEMM fusion the
-//!   paper's speedups rest on, on the CPU side.
+//! * `h_block_f32` — a whole row block at once, **f32-born**: the input
+//!   projections (the `wx_at` dots of Alg 2 line 6) are *lifted out of
+//!   the recurrence* into one tiled GEMM over the entire block
+//!   (`lift_wx`); only the recurrent part still walks the window sample
+//!   by sample. Jordan and NARMAX have no hidden-state recurrence, so
+//!   their whole H block is pure GEMM + elementwise tanh. This is the
+//!   Appleyard-style batched-GEMM fusion the paper's speedups rest on, on
+//!   the CPU side. Every activation is an f32 nonlinearity output, so the
+//!   block is written straight into `MatrixF32` — the paper's f32 H-block
+//!   ABI, at half the f64 footprint.
+//! * `h_block` — the same block widened to f64 (an exact cast: nothing is
+//!   computed differently and nothing is lost). The single implementation
+//!   per architecture is the f32 kernel; [`HBlock`] dispatches which wire
+//!   a caller gets.
 //!
 //! Input contract per sample (matching `data::Windowed`):
 //! * `x`     — the lag window, row-major (S, Q): x[s*Q + t]
@@ -22,7 +29,7 @@ pub mod jordan;
 pub mod lstm;
 pub mod narmax;
 
-use crate::linalg::{Matrix, MatrixF32, ParallelPolicy};
+use crate::linalg::{Matrix, MatrixF32, ParallelPolicy, Precision};
 
 use super::params::{Arch, ElmParams};
 
@@ -43,18 +50,120 @@ impl SampleBlock<'_> {
     }
 }
 
-/// Dispatch: H for a whole row block, (rows × M) widened to f64.
+/// A precision-dispatched H block: the f64 wire carries [`Matrix`], the
+/// f32 wire carries the **f32-born** [`MatrixF32`] straight from the arch
+/// kernels (no f64 materialization, no rounding pass). The two variants
+/// hold the *same values* — every H entry is an f32 nonlinearity output,
+/// so `F64` is an exact widening of `F32` — which is what lets every
+/// consumer (Gram fold, TSQR leaves, DirectQr assembly, predictions)
+/// dispatch on the variant without changing results.
+pub enum HBlock {
+    /// f64-materialized H (the [`Precision::F64`] wire).
+    F64(Matrix),
+    /// f32-born H (the [`Precision::MixedF32`] wire).
+    F32(MatrixF32),
+}
+
+impl HBlock {
+    /// Row count of the block, whatever the wire.
+    pub fn rows(&self) -> usize {
+        match self {
+            HBlock::F64(h) => h.rows,
+            HBlock::F32(h) => h.rows,
+        }
+    }
+
+    /// Column count (M) of the block, whatever the wire.
+    pub fn cols(&self) -> usize {
+        match self {
+            HBlock::F64(h) => h.cols,
+            HBlock::F32(h) => h.cols,
+        }
+    }
+
+    /// Widen to f64 by value — the identity on the `F64` variant and an
+    /// exact cast on the f32-born one (H entries are f32 nonlinearity
+    /// outputs).
+    pub fn into_f64(self) -> Matrix {
+        match self {
+            HBlock::F64(h) => h,
+            HBlock::F32(h) => h.to_f64(),
+        }
+    }
+
+    /// H · v on the block's own wire: f64 `matvec` or the widen mirror
+    /// `matvec_widen` — bit-identical to each other on f32-born H (see
+    /// the `linalg::matrix32` contract), so predictions never depend on
+    /// which wire produced the block.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        match self {
+            HBlock::F64(h) => h.matvec(v),
+            HBlock::F32(h) => h.matvec_widen(v),
+        }
+    }
+}
+
+/// Check the block's buffer lengths against the params' (s, q) at the
+/// public kernel boundary. These are real asserts (not `debug_assert!`):
+/// a mis-sized `SampleBlock` would silently read wrong strides in release
+/// builds otherwise. The inner loops keep `debug_assert!`.
+fn assert_block_shape(p: &ElmParams, blk: &SampleBlock) {
+    assert_eq!(
+        blk.x.len(),
+        blk.rows * p.s * p.q,
+        "SampleBlock.x has {} values, expected rows*s*q = {}*{}*{}",
+        blk.x.len(),
+        blk.rows,
+        p.s,
+        p.q
+    );
+    assert_eq!(
+        blk.yhist.len(),
+        blk.rows * p.q,
+        "SampleBlock.yhist has {} values, expected rows*q = {}*{}",
+        blk.yhist.len(),
+        blk.rows,
+        p.q
+    );
+    assert_eq!(
+        blk.ehist.len(),
+        blk.rows * p.q,
+        "SampleBlock.ehist has {} values, expected rows*q = {}*{}",
+        blk.ehist.len(),
+        blk.rows,
+        p.q
+    );
+}
+
+/// Dispatch: H for a whole row block, (rows × M) widened to f64 — an
+/// exact cast of [`h_block_f32`] (see [`HBlock`]).
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
-    debug_assert_eq!(blk.x.len(), blk.rows * p.s * p.q);
-    debug_assert_eq!(blk.yhist.len(), blk.rows * p.q);
-    debug_assert_eq!(blk.ehist.len(), blk.rows * p.q);
+    h_block_f32(p, blk).to_f64()
+}
+
+/// Dispatch: H for a whole row block, (rows × M) **f32-born** — the
+/// activations are f32 nonlinearity outputs and are stored straight into
+/// [`MatrixF32`], so the `MixedF32` wire never materializes (or rounds)
+/// an f64 block.
+pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
+    assert_block_shape(p, blk);
     match p.arch {
-        Arch::Elman => elman::h_block(p, blk),
-        Arch::Jordan => jordan::h_block(p, blk),
-        Arch::Narmax => narmax::h_block(p, blk),
-        Arch::Fc => fc::h_block(p, blk),
-        Arch::Lstm => lstm::h_block(p, blk),
-        Arch::Gru => gru::h_block(p, blk),
+        Arch::Elman => elman::h_block_f32(p, blk),
+        Arch::Jordan => jordan::h_block_f32(p, blk),
+        Arch::Narmax => narmax::h_block_f32(p, blk),
+        Arch::Fc => fc::h_block_f32(p, blk),
+        Arch::Lstm => lstm::h_block_f32(p, blk),
+        Arch::Gru => gru::h_block_f32(p, blk),
+    }
+}
+
+/// Dispatch: H for a whole row block on the wire `precision` selects —
+/// [`Precision::F64`] widens the f32-born kernel output (exact),
+/// [`Precision::MixedF32`] hands the f32 block through untouched.
+pub fn h_block_prec(p: &ElmParams, blk: &SampleBlock, precision: Precision) -> HBlock {
+    match precision {
+        Precision::F64 => HBlock::F64(h_block(p, blk)),
+        Precision::MixedF32 => HBlock::F32(h_block_f32(p, blk)),
     }
 }
 
@@ -105,8 +214,8 @@ pub fn block_ranges(n: usize, rows: usize) -> Vec<(usize, usize)> {
     crate::linalg::policy::fixed_tiles(n, rows)
 }
 
-/// Batched H for rows [lo, hi) of a windowed dataset; zeros are
-/// substituted when the error history is absent.
+/// Batched H for rows [lo, hi) of a windowed dataset, widened to f64;
+/// zeros are substituted when the error history is absent.
 pub fn h_block_range(
     p: &ElmParams,
     data: &crate::data::window::Windowed,
@@ -114,11 +223,40 @@ pub fn h_block_range(
     lo: usize,
     hi: usize,
 ) -> Matrix {
+    h_block_range_prec(p, data, ehist, lo, hi, Precision::F64).into_f64()
+}
+
+/// Batched H for rows [lo, hi) on the wire `precision` selects (the
+/// `MixedF32` variant is f32-born end to end). The range and the optional
+/// error-history buffer are validated here — the public boundary — so a
+/// mis-sized caller fails with a message instead of a silent stride bug
+/// (or an opaque slice panic) in release builds.
+pub fn h_block_range_prec(
+    p: &ElmParams,
+    data: &crate::data::window::Windowed,
+    ehist: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+    precision: Precision,
+) -> HBlock {
     let (s, q) = (data.s, data.q);
+    assert!(
+        lo <= hi && hi <= data.n,
+        "h_block_range rows [{lo}, {hi}) out of bounds for n = {}",
+        data.n
+    );
     let rows = hi - lo;
     let zeros;
     let eh = match ehist {
-        Some(e) => &e[lo * q..hi * q],
+        Some(e) => {
+            assert!(
+                e.len() >= hi * q,
+                "ehist has {} values, rows [{lo}, {hi}) at q = {q} need {}",
+                e.len(),
+                hi * q
+            );
+            &e[lo * q..hi * q]
+        }
         None => {
             zeros = vec![0f32; rows * q];
             &zeros[..]
@@ -130,7 +268,7 @@ pub fn h_block_range(
         yhist: &data.yhist[lo * q..hi * q],
         ehist: eh,
     };
-    h_block(p, &blk)
+    h_block_prec(p, &blk, precision)
 }
 
 /// Widen a (rows, q) f32 history slab to an f64 matrix (GEMM operand).

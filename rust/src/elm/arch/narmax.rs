@@ -3,7 +3,7 @@
 
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, MatrixF32};
 
 use super::{history_matrix, transposed_param, wx_at, SampleBlock};
 
@@ -25,10 +25,17 @@ pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [
     }
 }
 
-/// Whole row block. Like Jordan, NARMAX is recurrence-free given the two
-/// histories, so the block is three GEMMs — X_last·W + Yhist·W′ᵀ +
-/// Ehist·W″ᵀ — plus bias and tanh.
+/// Whole row block, widened to f64 — an exact cast of [`h_block_f32`]
+/// (every H entry is an f32 tanh output, exactly representable).
 pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
+    h_block_f32(p, blk).to_f64()
+}
+
+/// Whole row block, **f32-born**. Like Jordan, NARMAX is recurrence-free
+/// given the two histories, so the block is three GEMMs — X_last·W +
+/// Yhist·W′ᵀ + Ehist·W″ᵀ — plus bias and tanh, written straight into
+/// `MatrixF32`.
+pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let (s, q, m) = (p.s, p.q, p.m);
     let rows = blk.rows;
     let mut xl = Matrix::zeros(rows, s);
@@ -44,11 +51,11 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
     let fb_e = history_matrix(blk.ehist, rows, q)
         .matmul(&transposed_param(p.buf("wpp"), m, q));
     let b = p.buf("b");
-    let mut h = Matrix::zeros(rows, m);
+    let mut h = MatrixF32::zeros(rows, m);
     for i in 0..rows {
         for j in 0..m {
             let acc = (pre[(i, j)] + fb_y[(i, j)] + fb_e[(i, j)]) as f32 + b[j];
-            h[(i, j)] = tanh(acc) as f64;
+            h[(i, j)] = tanh(acc);
         }
     }
     h

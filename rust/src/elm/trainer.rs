@@ -14,9 +14,9 @@
 use anyhow::Result;
 
 use crate::data::window::Windowed;
-use crate::linalg::{lstsq_qr, lstsq_ridge, Matrix};
+use crate::linalg::{lstsq_qr, lstsq_ridge, Matrix, MatrixF32, Precision};
 
-use super::arch;
+use super::arch::{self, HBlock};
 use super::params::{Arch, ElmParams};
 
 #[derive(Debug, Clone)]
@@ -138,14 +138,47 @@ pub const H_BLOCK_ROWS: usize = 256;
 /// [`arch::h_block`] kernels (the input projections of each block are one
 /// GEMM). `ehist` overrides the error history (NARMAX); None → zeros.
 pub fn hidden_matrix(params: &ElmParams, data: &Windowed, ehist: Option<&[f32]>) -> Matrix {
-    let mut h = Matrix::zeros(data.n, params.m);
-    for (lo, hi) in arch::block_ranges(data.n, H_BLOCK_ROWS) {
-        let hb = arch::h_block_range(params, data, ehist, lo, hi);
-        for r in 0..hi - lo {
-            h.row_mut(lo + r).copy_from_slice(hb.row(r));
+    hidden_matrix_prec(params, data, ehist, Precision::F64).into_f64()
+}
+
+/// H assembled on the wire `precision` selects: [`Precision::F64`]
+/// returns the n×M f64 matrix [`hidden_matrix`] has always returned;
+/// [`Precision::MixedF32`] stitches the **f32-born** blocks into one
+/// `MatrixF32` — same values (H entries are f32 nonlinearity outputs),
+/// half the footprint, and no f64 materialization or rounding pass
+/// anywhere between the kernels and the consumer.
+pub fn hidden_matrix_prec(
+    params: &ElmParams,
+    data: &Windowed,
+    ehist: Option<&[f32]>,
+    precision: Precision,
+) -> HBlock {
+    match precision {
+        Precision::F64 => {
+            let mut h = Matrix::zeros(data.n, params.m);
+            for (lo, hi) in arch::block_ranges(data.n, H_BLOCK_ROWS) {
+                let hb = arch::h_block_range(params, data, ehist, lo, hi);
+                for r in 0..hi - lo {
+                    h.row_mut(lo + r).copy_from_slice(hb.row(r));
+                }
+            }
+            HBlock::F64(h)
+        }
+        Precision::MixedF32 => {
+            let mut h = MatrixF32::zeros(data.n, params.m);
+            for (lo, hi) in arch::block_ranges(data.n, H_BLOCK_ROWS) {
+                match arch::h_block_range_prec(params, data, ehist, lo, hi, precision) {
+                    HBlock::F32(hb) => {
+                        for r in 0..hi - lo {
+                            h.row_mut(lo + r).copy_from_slice(hb.row(r));
+                        }
+                    }
+                    HBlock::F64(_) => unreachable!("MixedF32 range produced f64"),
+                }
+            }
+            HBlock::F32(h)
         }
     }
-    h
 }
 
 /// Row-by-row H via the sequential scalar recurrences — the Algorithm-1

@@ -108,9 +108,20 @@ impl MatrixF32 {
         &self.data
     }
 
+    /// Mutable access to the row-major backing buffer (the f32-born
+    /// `h_block` kernels fill blocks through this).
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
     /// Row `i` as a contiguous slice.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i` as a mutable contiguous slice (block-assembly helper).
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     /// self * other with f32 operands and f64 accumulation — the

@@ -17,6 +17,19 @@
 //!   are merged pairwise, level by level, in index order — log₂(blocks)
 //!   merge depth.
 //!
+//! # f32-wire leaves
+//!
+//! Both modes also ingest **f32-born blocks**
+//! ([`TsqrAccumulator::push_block_f32`] / [`TsqrAccumulator::reduce_f32`]):
+//! the H block stays [`MatrixF32`] — half the traffic — all the way to its
+//! leaf, where it is widened *exactly* (f32 → f64 loses nothing) into the
+//! QR working matrix. R and z stay f64, so the merge tree, the fixed
+//! reduction topology, and [`TsqrAccumulator::solve`] are untouched; on
+//! blocks whose values are f32-representable (every `arch::h_block_f32`
+//! output) the reduced (R, z) is **bit-identical** to the f64 path's.
+//! Nothing rounds f64 → f32 anywhere in the accumulator — the leaves are
+//! born f32 upstream or stay f64.
+//!
 //! # Determinism
 //!
 //! The tree topology is a function of the block list alone — pairs (2i,
@@ -32,9 +45,43 @@
 use anyhow::{bail, Result};
 
 use super::matrix::Matrix;
+use super::matrix32::MatrixF32;
 use super::policy::{par_map, ParallelPolicy};
 use super::qr::householder_qr_owned;
 use super::solve::solve_upper_triangular;
+
+/// Leaf operand abstraction shared by the f64 and f32-wire tree
+/// reductions: a leaf only needs its shape and an (exact, for f32) widen
+/// into the f64 QR working matrix.
+trait LeafBlock: Send {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn widen(self) -> Matrix;
+}
+
+impl LeafBlock for Matrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn widen(self) -> Matrix {
+        self
+    }
+}
+
+impl LeafBlock for MatrixF32 {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn widen(self) -> Matrix {
+        self.to_f64()
+    }
+}
 
 /// Streaming TSQR state: R (n×n upper triangular) and z = Qᵀy (length n).
 pub struct TsqrAccumulator {
@@ -123,6 +170,17 @@ impl TsqrAccumulator {
         Ok(())
     }
 
+    /// Fold one **f32-born** (H block, y block) pair into the reduced
+    /// factors: the block arrives as `MatrixF32` (half the wire traffic)
+    /// and is widened exactly into the leaf QR — bit-identical to
+    /// [`TsqrAccumulator::push_block`] on the widened block, R/z stay f64.
+    pub fn push_block_f32(&mut self, h: MatrixF32, y: &[f64]) -> Result<()> {
+        if h.cols != self.n {
+            bail!("block has {} cols, accumulator expects {}", h.cols, self.n);
+        }
+        self.push_block(h.to_f64(), y)
+    }
+
     /// Merge another accumulator (pairwise tree-reduction step).
     pub fn merge(&mut self, other: TsqrAccumulator) -> Result<()> {
         if other.n != self.n {
@@ -154,25 +212,49 @@ impl TsqrAccumulator {
         blocks: Vec<(Matrix, Vec<f64>)>,
         policy: ParallelPolicy,
     ) -> Result<TsqrAccumulator> {
+        TsqrAccumulator::reduce_leaves(n_cols, blocks, policy)
+    }
+
+    /// [`TsqrAccumulator::reduce`] over **f32-born blocks**: the same
+    /// fixed-topology tree, with each leaf's `MatrixF32` widened exactly
+    /// into the f64 QR at the moment it is factored. Bit-identical to the
+    /// f64 `reduce` on blocks whose values are f32-representable (see the
+    /// module's f32-wire section), and for any worker count.
+    pub fn reduce_f32(
+        n_cols: usize,
+        blocks: Vec<(MatrixF32, Vec<f64>)>,
+        policy: ParallelPolicy,
+    ) -> Result<TsqrAccumulator> {
+        TsqrAccumulator::reduce_leaves(n_cols, blocks, policy)
+    }
+
+    /// The shared tree-reduction core behind `reduce`/`reduce_f32`.
+    fn reduce_leaves<B: LeafBlock>(
+        n_cols: usize,
+        blocks: Vec<(B, Vec<f64>)>,
+        policy: ParallelPolicy,
+    ) -> Result<TsqrAccumulator> {
         let mut rows_total = 0usize;
         for (h, y) in &blocks {
-            if h.cols != n_cols {
-                bail!("block has {} cols, reduce expects {n_cols}", h.cols);
+            if h.cols() != n_cols {
+                bail!("block has {} cols, reduce expects {n_cols}", h.cols());
             }
-            if h.rows != y.len() {
-                bail!("block rows {} != y len {}", h.rows, y.len());
+            if h.rows() != y.len() {
+                bail!("block rows {} != y len {}", h.rows(), y.len());
             }
-            rows_total += h.rows;
+            rows_total += h.rows();
         }
-        let blocks: Vec<(Matrix, Vec<f64>)> =
-            blocks.into_iter().filter(|(h, _)| h.rows > 0).collect();
+        let blocks: Vec<(B, Vec<f64>)> =
+            blocks.into_iter().filter(|(h, _)| h.rows() > 0).collect();
         if blocks.is_empty() {
             return Ok(TsqrAccumulator::new(n_cols));
         }
 
-        // leaves: every block factored independently, in parallel
-        let mut level =
-            par_map(blocks, policy, move |(h, y)| block_factors(n_cols, h, &y))?;
+        // leaves: every block factored independently, in parallel (f32
+        // leaves widen exactly here, right at the factorization)
+        let mut level = par_map(blocks, policy, move |(h, y)| {
+            block_factors(n_cols, h.widen(), &y)
+        })?;
 
         // in-order pairwise merges until one node remains
         while level.len() > 1 {
@@ -353,6 +435,71 @@ mod tests {
         let empty =
             TsqrAccumulator::reduce(4, vec![], ParallelPolicy::with_workers(4)).unwrap();
         assert!(empty.solve().is_err());
+    }
+
+    #[test]
+    fn f32_leaves_bit_identical_to_f64_path() {
+        // f32-born blocks (values exactly f32-representable) must reduce
+        // to the identical (R, z) as the f64 path on the widened blocks —
+        // both through the tree and the streaming fold
+        let (a0, b) = random_problem(230, 8, 12);
+        let a32 = MatrixF32::from_matrix(&a0); // test-side f32 birth
+        let a = a32.to_f64();
+        let blocks64 = blocks_of(&a, &b, 41);
+        let blocks32: Vec<(MatrixF32, Vec<f64>)> = blocks64
+            .iter()
+            .map(|(h, y)| (MatrixF32::from_matrix(h), y.clone()))
+            .collect();
+        let t64 =
+            TsqrAccumulator::reduce(8, blocks64.clone(), ParallelPolicy::with_workers(4))
+                .unwrap();
+        let t32 =
+            TsqrAccumulator::reduce_f32(8, blocks32.clone(), ParallelPolicy::with_workers(4))
+                .unwrap();
+        assert_eq!(t32.r_factor().unwrap(), t64.r_factor().unwrap(), "R differs");
+        assert_eq!(t32.z_factor(), t64.z_factor(), "z differs");
+        assert_eq!(t32.rows_seen(), t64.rows_seen());
+        assert_eq!(t32.solve().unwrap(), t64.solve().unwrap());
+        // streaming fold too
+        let mut s64 = TsqrAccumulator::new(8);
+        let mut s32 = TsqrAccumulator::new(8);
+        for ((h64, y), (h32, _)) in blocks64.into_iter().zip(blocks32) {
+            s64.push_block(h64, &y).unwrap();
+            s32.push_block_f32(h32, &y).unwrap();
+        }
+        assert_eq!(s32.r_factor().unwrap(), s64.r_factor().unwrap());
+        assert_eq!(s32.z_factor(), s64.z_factor());
+    }
+
+    #[test]
+    fn f32_reduce_worker_invariant_and_rejects_mismatch() {
+        let (a, b) = random_problem(300, 6, 13);
+        let blocks: Vec<(MatrixF32, Vec<f64>)> = blocks_of(&a, &b, 37)
+            .into_iter()
+            .map(|(h, y)| (MatrixF32::from_matrix(&h), y))
+            .collect();
+        let base =
+            TsqrAccumulator::reduce_f32(6, blocks.clone(), ParallelPolicy::sequential())
+                .unwrap();
+        for workers in [2usize, 4, 8] {
+            let acc = TsqrAccumulator::reduce_f32(
+                6,
+                blocks.clone(),
+                ParallelPolicy::with_workers(workers),
+            )
+            .unwrap();
+            assert_eq!(acc.r_factor().unwrap(), base.r_factor().unwrap());
+            assert_eq!(acc.z_factor(), base.z_factor());
+        }
+        // width mismatch rejected on both f32 entry points
+        let mut acc = TsqrAccumulator::new(4);
+        assert!(acc.push_block_f32(MatrixF32::zeros(8, 6), &[0.0; 8]).is_err());
+        assert!(TsqrAccumulator::reduce_f32(
+            4,
+            vec![(MatrixF32::zeros(8, 6), vec![0.0; 8])],
+            ParallelPolicy::with_workers(2)
+        )
+        .is_err());
     }
 
     #[test]

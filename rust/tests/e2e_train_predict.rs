@@ -14,10 +14,14 @@
 //! rewriting: any reassociation snuck into a "fast path" shows up here as
 //! a bit mismatch.
 //!
-//! The sweep also covers the **f32-wire** trainer (`Precision::MixedF32`,
-//! Gram strategy through `gram_widen`/`t_matvec_widen`): β must be
-//! bit-identical at 1/2/4/8 workers and the trained models must clear the
-//! same per-arch MSE ceilings as the f64 path.
+//! The sweep also covers the **f32-wire** trainer (`Precision::MixedF32`):
+//! H blocks are f32-born at the arch kernels and stay f32 to the Gram
+//! kernels (`gram_widen`/`t_matvec_widen`) or the TSQR leaves
+//! (`reduce_f32`, exact widen at the leaf QR). β must be bit-identical at
+//! 1/2/4/8 workers on every strategy, the QR-strategy β must reproduce
+//! the sequential `lstsq_qr` bits (the f32 wire is an exact re-encoding
+//! of H), and the trained models must clear the same per-arch MSE
+//! ceilings as the f64 path.
 
 use opt_pr_elm::coordinator::accumulator::SolveStrategy;
 use opt_pr_elm::coordinator::CpuElmTrainer;
@@ -200,6 +204,64 @@ fn f32_wire_trainer_stays_below_mse_ceilings_all_archs() {
         assert!(
             mse < base_mse,
             "{}: f32-wire test MSE {mse} not better than mean predictor {base_mse}",
+            arch.name()
+        );
+    }
+}
+
+/// f32-wire trainer on an arbitrary strategy (the f32-born blocks feed
+/// whichever reduction the strategy selects).
+fn mixed_trainer_with(workers: usize, strategy: SolveStrategy) -> CpuElmTrainer {
+    let mut t = CpuElmTrainer::with_policy(
+        ParallelPolicy::with_workers(workers).with_precision(Precision::MixedF32),
+    );
+    t.strategy = strategy;
+    t.block_rows = 64;
+    t
+}
+
+#[test]
+fn f32_born_tsqr_beta_bit_identical_across_worker_counts_all_archs() {
+    // the new f32-leaf TSQR reduction must be just as worker-invariant as
+    // the f64 tree (same fixed topology; leaves widen exactly)
+    let (train, _test) = prepared();
+    for arch in ALL_ARCHS {
+        let mut base: Option<Vec<f64>> = None;
+        for workers in [1usize, 2, 4, 8] {
+            let (model, _) = mixed_trainer_with(workers, SolveStrategy::Tsqr)
+                .train(arch, &train, M, SEED)
+                .unwrap();
+            match &base {
+                None => base = Some(model.beta),
+                Some(b) => assert_eq!(
+                    b,
+                    &model.beta,
+                    "{}: f32-leaf TSQR β bits differ at workers={workers}",
+                    arch.name()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_born_direct_qr_bit_identical_to_sequential_lstsq_qr() {
+    // strongest acceptance anchor: the f32-born pipeline widens exactly,
+    // so even under MixedF32 the DirectQr β must reproduce the
+    // sequential f64 lstsq_qr on the f64-assembled H, bit for bit
+    let (train, _test) = prepared();
+    let y: Vec<f64> = train.y.iter().map(|&v| v as f64).collect();
+    for arch in [Arch::Fc, Arch::Elman, Arch::Jordan, Arch::Lstm, Arch::Gru] {
+        let params = ElmParams::init(arch, train.s, train.q, M, SEED);
+        let h = hidden_matrix(&params, &train, None);
+        let seq = lstsq_qr(&h, &y).unwrap();
+        let (model, _) = mixed_trainer_with(4, SolveStrategy::DirectQr)
+            .train(arch, &train, M, SEED)
+            .unwrap();
+        assert_eq!(
+            model.beta,
+            seq,
+            "{}: f32-born DirectQr β != sequential lstsq_qr",
             arch.name()
         );
     }
