@@ -15,6 +15,15 @@ explicit `workers` field; reading it from the `gflops` field (where old
 BENCH files smuggled it) is supported as a deprecated fallback for one
 release. A meta record carrying neither is rejected.
 
+Since ISSUE 5 the meta record also carries `isa` — which SIMD path the
+bench dispatched ("avx2" / "scalar"). Baseline keys listed in
+`simd_keys` compare a dispatched microkernel against its scalar twin:
+their floors apply as written only when the meta says "avx2"; on any
+other path the two ops run identical code, so the floor is capped at
+parity (1.0) and a scalar-fallback runner is never misread as a SIMD
+regression. A missing `isa` field (pre-ISSUE-5 BENCH file) is treated
+as "scalar".
+
 `ci/test_check_bench.py` is the self-test for this gate — run it (pytest)
 before trusting a gate change.
 """
@@ -48,6 +57,18 @@ def meta_workers(recs: list) -> float:
             return max(1.0, float(r["gflops"]))
         die("meta record carries neither 'workers' nor the legacy 'gflops'")
     return 1.0  # no meta record: required_ops normally catches this first
+
+
+def meta_isa(recs: list) -> str:
+    """SIMD path the bench dispatched, from the meta record's `isa` field.
+
+    Pre-ISSUE-5 BENCH files have no `isa`; they predate the pinned-width
+    microkernels, so "scalar" is the faithful default.
+    """
+    for r in recs:
+        if r.get("op") == "meta":
+            return str(r.get("isa", "scalar"))
+    return "scalar"
 
 
 def run(bench_path: str, baseline_path: str) -> None:
@@ -84,10 +105,14 @@ def run(bench_path: str, baseline_path: str) -> None:
         die(f"missing op keys: {missing} (present: {sorted(ops)})")
     print(f"ok: {len(recs)} records, all {len(base['required_ops'])} op keys present")
 
-    # threaded floors scale with the bench machine's worker count: a
-    # 2-vCPU CI runner is not held to an 8-core threaded-speedup baseline
+    # threaded floors scale with the bench machine's worker count (a
+    # 2-vCPU CI runner is not held to an 8-core threaded-speedup
+    # baseline); SIMD-microkernel floors apply only when the meta record
+    # says the AVX2 path was dispatched
     workers = meta_workers(recs)
+    isa = meta_isa(recs)
     threaded_keys = set(base.get("threaded_keys", []))
+    simd_keys = set(base.get("simd_keys", []))
 
     margin = float(base.get("regression_margin", 0.25))
     failures = []
@@ -107,11 +132,14 @@ def run(bench_path: str, baseline_path: str) -> None:
         want = float(want)
         if key in threaded_keys:
             want = min(want, 0.6 * workers)
+        if key in simd_keys and isa != "avx2":
+            # dispatched == scalar on this runner: parity is the honest cap
+            want = min(want, 1.0)
         floor = want * (1.0 - margin)
         status = "ok" if got >= floor else "REGRESSION"
         print(
             f"{status}: {key}: speedup {got:.2f}x "
-            f"(baseline {want:.2f}x, floor {floor:.2f}x, workers {workers:.0f})"
+            f"(baseline {want:.2f}x, floor {floor:.2f}x, workers {workers:.0f}, isa {isa})"
         )
         if got < floor:
             failures.append(

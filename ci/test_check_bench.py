@@ -1,9 +1,12 @@
 """Self-test for ci/check_bench.py (run with pytest, or directly).
 
 Exercises the paths a broken gate would silently wave through: a passing
-bench, a genuine speedup regression, a missing required op, and the three
+bench, a genuine speedup regression, a missing required op, the three
 meta-record worker-count cases (explicit `workers` field, the deprecated
-gflops fallback, and neither — which must be rejected).
+gflops fallback, and neither — which must be rejected), and the ISSUE-5
+`isa`-aware SIMD-microkernel floors (gated as written on an "avx2" meta,
+capped at parity on a scalar/missing meta so non-AVX2 runners are not
+misread as regressions).
 """
 
 import json
@@ -89,6 +92,44 @@ def test_meta_missing_both_rejected():
 def test_non_meta_record_must_carry_gflops():
     bad = {"op": "matmul", "shape": "512x512x512", "ns_per_iter": 100.0}
     expect_fail([META, bad, rec("matmul_threaded", speedup=2.0)])
+
+
+SIMD_BASELINE = {
+    "regression_margin": 0.25,
+    "simd_keys": ["axpy_simd"],
+    "required_ops": ["meta", "axpy_simd", "axpy_scalar"],
+    # a hypothetical raised SIMD floor: 2.0 on an AVX2 runner (floor 1.5),
+    # capped at parity (floor 0.75) anywhere else
+    "min_speedups": {"axpy_simd": 2.0},
+}
+
+
+def simd_recs(speedup, isa):
+    meta = {"op": "meta", "shape": f"workers=4 isa={isa}", "ns_per_iter": 1.0,
+            "workers": 4.0}
+    if isa is not None:
+        meta["isa"] = isa
+    return [meta, rec("axpy_simd", shape="len4096", speedup=speedup),
+            rec("axpy_scalar", shape="len4096")]
+
+
+def test_simd_floor_gates_on_avx2_meta():
+    gate(simd_recs(1.8, "avx2"), SIMD_BASELINE)  # above floor 1.5
+    expect_fail(simd_recs(1.0, "avx2"), SIMD_BASELINE)  # parity is a regression
+
+
+def test_simd_floor_capped_on_scalar_runner():
+    # dispatched == scalar there: ~1.0 must pass (floor capped to 0.75) …
+    gate(simd_recs(0.97, "scalar"), SIMD_BASELINE)
+    # … but a real dispatcher overhead still fails
+    expect_fail(simd_recs(0.5, "scalar"), SIMD_BASELINE)
+
+
+def test_simd_floor_capped_when_isa_missing():
+    # pre-ISSUE-5 BENCH file: no isa field → treated as scalar
+    legacy = simd_recs(0.97, None)
+    assert "isa" not in legacy[0]
+    gate(legacy, SIMD_BASELINE)
 
 
 def test_malformed_bench_json_rejected():

@@ -23,7 +23,8 @@ use opt_pr_elm::elm::arch::{fc, SampleBlock};
 use opt_pr_elm::elm::{Arch, ElmParams};
 use opt_pr_elm::linalg::{
     householder_qr, householder_qr_reference, lstsq_qr, lstsq_ridge, lstsq_tsqr,
-    solve_upper_triangular, Matrix, MatrixF32, ParallelPolicy, TsqrAccumulator,
+    simd, solve_upper_triangular, FmaMode, Matrix, MatrixF32, ParallelPolicy,
+    TsqrAccumulator,
 };
 use opt_pr_elm::util::json::{num, obj, s, Json};
 use opt_pr_elm::util::rng::Rng;
@@ -43,6 +44,10 @@ struct Rec {
     /// `gflops`, though the smuggle is still emitted one release for old
     /// readers)
     workers: Option<f64>,
+    /// which SIMD path the run dispatched ("avx2" / "scalar") — set on the
+    /// `meta` record only, so the CI gate does not hold a scalar-fallback
+    /// runner to AVX2 microkernel floors
+    isa: Option<String>,
 }
 
 fn push(
@@ -65,6 +70,7 @@ fn push(
         gbps,
         speedup_vs_reference: None,
         workers: None,
+        isa: None,
     });
     ns
 }
@@ -108,22 +114,26 @@ fn main() {
     let threaded = ParallelPolicy::auto();
     let mut records: Vec<Rec> = Vec::new();
     println!(
-        "== linalg microbench (β solve substrate){} — threaded policy: {} workers ==",
+        "== linalg microbench (β solve substrate){} — threaded policy: {} workers, simd: {} ==",
         if quick { " [quick]" } else { "" },
-        threaded.workers
+        threaded.workers,
+        simd::isa_name()
     );
     // meta record: lets the CI gate scale the threaded-speedup floors to
-    // the machine it actually ran on. The count travels in the explicit
+    // the machine it actually ran on, and records which SIMD path was
+    // dispatched (`isa`) so microkernel floors are not misread on
+    // scalar-fallback runners. The worker count travels in the explicit
     // `workers` field; it is *also* still mirrored into gflops for one
     // release so pre-ISSUE-4 readers keep working.
     records.push(Rec {
         op: "meta".to_string(),
-        shape: format!("workers={}", threaded.workers),
+        shape: format!("workers={} isa={}", threaded.workers, simd::isa_name()),
         ns_per_iter: 1.0,
         gflops: threaded.workers as f64,
         gbps: 0.0,
         speedup_vs_reference: None,
         workers: Some(threaded.workers as f64),
+        isa: Some(simd::isa_name().to_string()),
     });
 
     let tall: &[(usize, usize)] = if quick {
@@ -327,6 +337,86 @@ fn main() {
         println!();
     }
 
+    // microkernel-level ops: the dispatched SIMD kernels against their
+    // scalar twins (the exact fallback code), at a panel-resident working
+    // set. On an AVX2 host these quantify the pinned-width win over the
+    // autovectorized scalar loops; on a scalar-fallback host the ratio is
+    // ~1.0 by construction (and the CI gate, reading the meta `isa`
+    // field, expects exactly that).
+    {
+        let len = 4096usize;
+        let reps = 64usize;
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f64; len];
+        let shape = format!("len{len}_reps{reps}");
+        let flops = 2.0 * (len * reps) as f64;
+        let bytes = 8.0 * 3.0 * (len * reps) as f64; // x in + out in/out
+        let r = bench(&format!("axpy_simd {shape}"), 1, budget, 400, || {
+            for i in 0..reps {
+                simd::axpy_f64(1e-3 * (i as f64 + 1.0), &x, &mut out);
+            }
+            out[0]
+        });
+        let t_simd = push(&mut records, &r, "axpy_simd", &shape, flops, bytes);
+        let r = bench(&format!("axpy_scalar {shape}"), 1, budget, 400, || {
+            for i in 0..reps {
+                simd::axpy_f64_scalar(1e-3 * (i as f64 + 1.0), &x, &mut out);
+            }
+            out[0]
+        });
+        let t_ref = push(&mut records, &r, "axpy_scalar", &shape, flops, bytes);
+        mark_speedup_at(&mut records, 2, t_ref / t_simd);
+        println!(
+            "  -> dispatched axpy ({}) speedup vs scalar twin: {:.2}x",
+            simd::isa_name(),
+            t_ref / t_simd
+        );
+
+        // rank-4 Gram row update: the register-dense kernel where the
+        // pinned-width path has the most to win (4 row streams + G row)
+        let n = 512usize;
+        let rows: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let mut grow = vec![0.0f64; n];
+        let gshape = format!("n{n}_reps{reps}");
+        let gflops_total = 8.0 * (n * reps) as f64; // 4 mul + 4 add per element
+        let gbytes = 8.0 * 6.0 * (n * reps) as f64; // 4 rows in + grow in/out
+        let r = bench(&format!("gram_microkernel {gshape}"), 1, budget, 400, || {
+            for i in 0..reps {
+                let xi = 1e-3 * (i as f64 + 1.0);
+                simd::gram4_f64(
+                    [xi, -xi, 0.5 * xi, 0.25 * xi],
+                    [&rows[0], &rows[1], &rows[2], &rows[3]],
+                    &mut grow,
+                    FmaMode::Exact,
+                );
+            }
+            grow[0]
+        });
+        let t_simd = push(&mut records, &r, "gram_microkernel", &gshape, gflops_total, gbytes);
+        let r = bench(&format!("gram_microkernel_scalar {gshape}"), 1, budget, 400, || {
+            for i in 0..reps {
+                let xi = 1e-3 * (i as f64 + 1.0);
+                simd::gram4_f64_scalar(
+                    [xi, -xi, 0.5 * xi, 0.25 * xi],
+                    [&rows[0], &rows[1], &rows[2], &rows[3]],
+                    &mut grow,
+                );
+            }
+            grow[0]
+        });
+        let t_ref =
+            push(&mut records, &r, "gram_microkernel_scalar", &gshape, gflops_total, gbytes);
+        mark_speedup_at(&mut records, 2, t_ref / t_simd);
+        println!(
+            "  -> dispatched gram microkernel ({}) speedup vs scalar twin: {:.2}x",
+            simd::isa_name(),
+            t_ref / t_simd
+        );
+        println!();
+    }
+
     let out_path = std::env::var("BENCH_LINALG_OUT")
         .unwrap_or_else(|_| "BENCH_linalg.json".to_string());
     let json = Json::Arr(
@@ -342,6 +432,9 @@ fn main() {
                 ];
                 if let Some(x) = r.workers {
                     pairs.push(("workers", num(x)));
+                }
+                if let Some(x) = &r.isa {
+                    pairs.push(("isa", s(x)));
                 }
                 if let Some(x) = r.speedup_vs_reference {
                     pairs.push(("speedup_vs_reference", num(x)));

@@ -3,7 +3,7 @@
 
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
-use crate::linalg::{Matrix, MatrixF32, ParallelPolicy};
+use crate::linalg::{Matrix, MatrixF32, PackedPanels, ParallelPolicy};
 
 use super::{lift_wx, wx_at, SampleBlock};
 
@@ -59,13 +59,17 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
 /// tiled GEMMs per timestep, like the gate projections of the other five
 /// architectures. Both coupling operands are f32-born (H_t is a tanh
 /// output, A_k an f32 parameter buffer), so the GEMMs run on the f32 wire
-/// through [`MatrixF32::matmul_widen`] — **bit-identical** to the
+/// through [`MatrixF32::matmul_widen_packed`] — **bit-identical** to the
 /// widen-first f64 GEMMs they replace (exact f32×f32 products, same tile
 /// schedule) at half the operand traffic, with the per-timestep history
-/// slabs `hs` resident in f32. Accumulation is f64 (the widen GEMMs
-/// accumulate wide) with one f32 rounding at the tanh, so values match
-/// the scalar [`h_block_reference`] / [`h_row`] to f32 round-off (the
-/// property suite bounds it at 1e-5).
+/// slabs `hs` resident in f32. Each `A_kᵀ` operand is packed into its
+/// [`PackedPanels`] GEMM layout **once** and the pack reused by every
+/// timestep that couples at lag k (lag k appears in `q−k` timesteps; the
+/// pack-per-call path repacked it each time — packing is pure data
+/// movement, so the reuse is bit-neutral). Accumulation is f64 (the widen
+/// GEMMs accumulate wide) with one f32 rounding at the tanh, so values
+/// match the scalar [`h_block_reference`] / [`h_row`] to f32 round-off
+/// (the property suite bounds it at 1e-5).
 pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let rows = blk.rows;
@@ -75,8 +79,11 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
     let b = p.buf("b");
     let alpha = p.buf("alpha"); // (m, m, q): alpha[(j*m + l)*q + (k-1)]
-    // A_kᵀ as f32-wire GEMM operands: akt[k-1][(l, j)] = alpha[j, l, k]
-    let akt: Vec<MatrixF32> = (1..=q)
+    // A_kᵀ as f32-wire GEMM operands, each packed once and reused across
+    // all timesteps coupling at lag k: akt[k-1] packs [(l, j)] = alpha[j, l, k].
+    // Lag k is consumed by the q−k timesteps t ∈ k..q, so lag q (and with it
+    // the whole vector when q == 1) is never read and never packed.
+    let akt_packs: Vec<PackedPanels<f32>> = (1..q)
         .map(|k| {
             let mut t = MatrixF32::zeros(m, m);
             for j in 0..m {
@@ -84,7 +91,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
                     t[(l, j)] = alpha[(j * m + l) * q + (k - 1)];
                 }
             }
-            t
+            t.pack_panels()
         })
         .collect();
     let seq = ParallelPolicy::sequential();
@@ -100,7 +107,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
             }
         }
         for k in 1..=t {
-            let coupling = hs[t - k].matmul_widen(&akt[k - 1], seq);
+            let coupling = hs[t - k].matmul_widen_packed(&akt_packs[k - 1], seq);
             for (av, cv) in acc.data_mut().iter_mut().zip(coupling.data()) {
                 *av += cv;
             }

@@ -7,15 +7,18 @@
 //!
 //! `matmul` packs B once per call into contiguous `KC × NC` (64×64)
 //! panels ([`PackedPanels`], built by shape-fixed `(kk, jj)` tile walk),
-//! then streams rows of A through each panel with a 4-wide unrolled AXPY
-//! inner kernel — the active panel (32 KiB) stays in L1 while A and the
+//! then streams rows of A through each panel **four at a time** with the
+//! register-tiled [`simd`](super::simd) microkernels: a 4×8 output tile
+//! held in accumulator registers across the panel's k loop on the AVX2
+//! path ([`simd::gemm_tile_f64`]), the pre-SIMD 4-wide AXPY loop on the
+//! scalar path — the active panel (32 KiB) stays in L1 while A and the
 //! output are touched sequentially. The pack is **shared read-only by
 //! every output row tile** of the call: the threaded `matmul_with` builds
 //! it once and hands every worker the same panels instead of repacking B
 //! per row tile (the PR-2 layout repacked B `ceil(m / MM_ROW_TILE)`
-//! times). `gram` uses a 4-row microkernel that rank-4-updates the upper
-//! triangle, quartering the G write traffic relative to the
-//! row-at-a-time loop.
+//! times). `gram` uses a 4-row microkernel ([`simd::gram4_f64`]) that
+//! rank-4-updates the upper triangle, quartering the G write traffic
+//! relative to the row-at-a-time loop.
 //!
 //! # Determinism
 //!
@@ -23,12 +26,17 @@
 //! run to run. `matmul` additionally accumulates each output element's
 //! k-terms in ascending order (outer `kk` tiles ascend, `p` ascends
 //! within a tile) and is therefore bit-identical to the unblocked ijk
-//! loop — a test asserts this. `gram` is deterministic but *not*
-//! bit-identical to the seed's row-at-a-time loop: the rank-4 microkernel
-//! sums four rows' products before the single add into G (tests bound the
-//! difference at 1e-12). There is deliberately *no* skip of zero
-//! multiplicands: `0 × ∞` must produce NaN, and a data-dependent branch
-//! mispredicts on dense data.
+//! loop — a test asserts this. The SIMD dispatch never weakens this: the
+//! AVX2 microkernels keep element-independent accumulators, separate
+//! mul+add, and the identical per-element operation sequence, so they are
+//! **bit-identical to the scalar kernels** (see the [`simd`](super::simd)
+//! contract; the only opt-out is the envelope-documented
+//! [`FmaMode::Relaxed`] knob on [`ParallelPolicy`]). `gram` is
+//! deterministic but *not* bit-identical to the seed's row-at-a-time
+//! loop: the rank-4 microkernel sums four rows' products before the
+//! single add into G (tests bound the difference at 1e-12). There is
+//! deliberately *no* skip of zero multiplicands: `0 × ∞` must produce
+//! NaN, and a data-dependent branch mispredicts on dense data.
 //!
 //! # Threading
 //!
@@ -47,6 +55,7 @@
 use std::fmt;
 
 use super::policy::{fixed_tiles, par_map, ParallelPolicy};
+use super::simd::{self, FmaMode};
 use crate::util::rng::Rng;
 
 /// Row-major dense f64 matrix — the substrate's working type. All blocked
@@ -152,13 +161,14 @@ impl Matrix {
     }
 
     /// self * other — cache-blocked GEMM: B is packed once into read-only
-    /// [`PackedPanels`], then rows of A stream through each panel with the
-    /// 4-wide inner kernel (see the module docs for the
-    /// blocking/determinism story).
+    /// [`PackedPanels`], then rows of A stream through each panel four at
+    /// a time with the register-tiled [`simd`](super::simd) microkernels
+    /// (see the module docs for the blocking/determinism story). Always
+    /// runs the exact ([`FmaMode::Exact`]) kernels.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let pack = PackedPanels::pack(&other.data, other.rows, other.cols);
-        self.matmul_rows(&pack, 0, self.rows)
+        self.matmul_rows(&pack, 0, self.rows, FmaMode::Exact)
     }
 
     /// Threaded GEMM: output rows sharded over fixed [`MM_ROW_TILE`]-high
@@ -167,17 +177,22 @@ impl Matrix {
     /// call, not once per row tile). Bit-identical to [`Matrix::matmul`]
     /// at any worker count (each output element is produced by one worker
     /// running the identical kernel; the pack only changes data layout,
-    /// never arithmetic order).
+    /// never arithmetic order) when `policy.fma` is [`FmaMode::Exact`]
+    /// (the default). Under [`FmaMode::Relaxed`] the result is still
+    /// bit-identical **across worker counts** (the schedule is fixed) but
+    /// drifts from the exact kernels within the envelope documented in
+    /// [`simd`](super::simd).
     pub fn matmul_with(&self, other: &Matrix, policy: ParallelPolicy) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, n) = (self.rows, other.cols);
-        if policy.workers <= 1 || m < 2 * MM_ROW_TILE {
-            return self.matmul(other);
-        }
         let pack = PackedPanels::pack(&other.data, other.rows, other.cols);
+        if policy.workers <= 1 || m < 2 * MM_ROW_TILE {
+            return self.matmul_rows(&pack, 0, m, policy.fma);
+        }
         let tiles = fixed_tiles(m, MM_ROW_TILE);
-        let slabs = par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows(&pack, i0, i1)))
-            .expect("matmul worker thread panicked");
+        let slabs =
+            par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows(&pack, i0, i1, policy.fma)))
+                .expect("matmul worker thread panicked");
         let mut data = Vec::with_capacity(m * n);
         for slab in slabs {
             data.extend_from_slice(&slab.data);
@@ -188,8 +203,11 @@ impl Matrix {
     /// GEMM restricted to output rows [i0, i1) over a prebuilt B pack: the
     /// shared kernel behind `matmul` (full range) and `matmul_with` (one
     /// tile per call, pack shared across tiles). Row independence makes
-    /// every split bit-equivalent.
-    fn matmul_rows(&self, pack: &PackedPanels<f64>, i0: usize, i1: usize) -> Matrix {
+    /// every split bit-equivalent. Rows go through the 4-row register-
+    /// tiled microkernel in quads, the ≤3 leftover rows through the 1-row
+    /// kernel — per output element the accumulation order (ascending
+    /// `(kk, p)`) is the same either way.
+    fn matmul_rows(&self, pack: &PackedPanels<f64>, i0: usize, i1: usize, fma: FmaMode) -> Matrix {
         debug_assert!(i0 <= i1 && i1 <= self.rows);
         debug_assert_eq!(self.cols, pack.k);
         let (k, n) = (pack.k, pack.n);
@@ -200,12 +218,34 @@ impl Matrix {
         for (ki, &(kk, kb)) in pack.k_tiles.iter().enumerate() {
             for (ji, &(jj, jb)) in pack.j_tiles.iter().enumerate() {
                 let panel = pack.panel(ki, ji);
-                for i in i0..i1 {
-                    let arow = &self.data[i * k + kk..i * k + kk + kb];
-                    let orow = &mut out.data[(i - i0) * n + jj..(i - i0) * n + jj + jb];
-                    for (p, &a) in arow.iter().enumerate() {
-                        axpy4(a, &panel[p * jb..p * jb + jb], orow);
-                    }
+                let mut i = i0;
+                while i + 4 <= i1 {
+                    let arow = |r: usize| {
+                        let base = (i + r) * k + kk;
+                        &self.data[base..base + kb]
+                    };
+                    let obase = (i - i0) * n + jj;
+                    simd::gemm_tile_f64(
+                        [arow(0), arow(1), arow(2), arow(3)],
+                        panel,
+                        jb,
+                        &mut out.data[obase..],
+                        n,
+                        fma,
+                    );
+                    i += 4;
+                }
+                while i < i1 {
+                    let base = i * k + kk;
+                    let obase = (i - i0) * n + jj;
+                    simd::gemm_row_f64(
+                        &self.data[base..base + kb],
+                        panel,
+                        jb,
+                        &mut out.data[obase..obase + jb],
+                        fma,
+                    );
+                    i += 1;
                 }
             }
         }
@@ -218,24 +258,24 @@ impl Matrix {
         (0..self.rows).map(|i| dot(self.row(i), v)).collect()
     }
 
-    /// selfᵀ * v
+    /// selfᵀ * v — the row-major AXPY fold (`out += vᵢ · rowᵢ`, ascending
+    /// i), dispatched through [`simd::axpy_f64`]; the SIMD path is
+    /// bit-identical to the scalar loop (multiplication commutes exactly,
+    /// each `out[j]` sees one add per row).
     pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.rows, v.len());
         let mut out = vec![0.0; self.cols];
         for i in 0..self.rows {
-            let r = self.row(i);
-            let vi = v[i];
-            for j in 0..self.cols {
-                out[j] += r[j] * vi;
-            }
+            simd::axpy_f64(v[i], self.row(i), &mut out);
         }
         out
     }
 
     /// selfᵀ * self (Gram), exploiting symmetry: rank-4 updates of the
-    /// upper triangle (4-row microkernel), mirrored at the end.
+    /// upper triangle (4-row microkernel), mirrored at the end. Always
+    /// runs the exact ([`FmaMode::Exact`]) kernels.
     pub fn gram(&self) -> Matrix {
-        let mut g = self.gram_rows(0, self.rows);
+        let mut g = self.gram_rows(0, self.rows, FmaMode::Exact);
         mirror_upper(&mut g);
         g
     }
@@ -244,13 +284,18 @@ impl Matrix {
     /// chunks, per-chunk partial Grams folded in chunk order. Bit-identical
     /// at any [`ParallelPolicy`] worker count (the chunk schedule and fold
     /// order never depend on `workers`); single-chunk inputs are
-    /// bit-identical to [`Matrix::gram`].
+    /// bit-identical to [`Matrix::gram`] under the default
+    /// [`FmaMode::Exact`]. `policy.fma` selects the contraction mode of
+    /// the rank-4 lanes (Relaxed: envelope-bounded drift, worker
+    /// invariance intact).
     pub fn gram_with(&self, policy: ParallelPolicy) -> Matrix {
         let chunks = fixed_tiles(self.rows, GRAM_ROW_CHUNK);
         if chunks.len() <= 1 {
-            return self.gram();
+            let mut g = self.gram_rows(0, self.rows, policy.fma);
+            mirror_upper(&mut g);
+            return g;
         }
-        let partials = par_map(chunks, policy, |(lo, hi)| Ok(self.gram_rows(lo, hi)))
+        let partials = par_map(chunks, policy, |(lo, hi)| Ok(self.gram_rows(lo, hi, policy.fma)))
             .expect("gram worker thread panicked");
         let n = self.cols;
         let mut g = Matrix::zeros(n, n);
@@ -266,8 +311,10 @@ impl Matrix {
     /// Upper-triangle Gram accumulation over rows [r0, r1) — the shared
     /// microkernel behind `gram` (full range, then mirrored) and
     /// `gram_with` (one chunk per call). No mirroring here so partials can
-    /// be folded cheaply.
-    fn gram_rows(&self, lo: usize, hi: usize) -> Matrix {
+    /// be folded cheaply. Row quads go through [`simd::gram4_f64`] (the
+    /// only kernel `fma` reaches); the ≤3 tail rows are plain AXPYs,
+    /// always exact.
+    fn gram_rows(&self, lo: usize, hi: usize, fma: FmaMode) -> Matrix {
         debug_assert!(lo <= hi && hi <= self.rows);
         let n = self.cols;
         let mut g = Matrix::zeros(n, n);
@@ -279,22 +326,16 @@ impl Matrix {
             let r2 = &self.data[(i + 2) * n..(i + 3) * n];
             let r3 = &self.data[(i + 3) * n..(i + 4) * n];
             for a in 0..n {
-                let (x0, x1, x2, x3) = (r0[a], r1[a], r2[a], r3[a]);
-                let grow = &mut g.data[a * n..(a + 1) * n];
-                for b in a..n {
-                    grow[b] += x0 * r0[b] + x1 * r1[b] + x2 * r2[b] + x3 * r3[b];
-                }
+                let x = [r0[a], r1[a], r2[a], r3[a]];
+                let grow = &mut g.data[a * n + a..(a + 1) * n];
+                simd::gram4_f64(x, [&r0[a..], &r1[a..], &r2[a..], &r3[a..]], grow, fma);
             }
             i += 4;
         }
         while i < rows {
             let r = &self.data[i * n..(i + 1) * n];
             for a in 0..n {
-                let ra = r[a];
-                let grow = &mut g.data[a * n..(a + 1) * n];
-                for b in a..n {
-                    grow[b] += ra * r[b];
-                }
+                simd::axpy_f64(r[a], &r[a..], &mut g.data[a * n + a..(a + 1) * n]);
             }
             i += 1;
         }
@@ -379,6 +420,26 @@ pub const GRAM_ROW_CHUNK: usize = 512;
 /// order of the consuming kernels is untouched, which is why the shared
 /// pack preserves the bit-identity contract. Generic over the element type
 /// so the f64 GEMM and the f32-wire widen GEMM reuse one layout.
+///
+/// # Panel-shape contract
+///
+/// The [`simd`](super::simd) microkernels read panels with unchecked
+/// lane-contiguous loads, so the shape invariants below are **asserted in
+/// release builds** (at the crate-internal `pack` constructor and at every
+/// `panel` fetch, plus a `panel.len() == kb·jb` re-check inside each
+/// microkernel call) rather than assumed:
+///
+/// * tile boundaries come from [`fixed_tiles`]`(k, KC)` / `(n, NC)`:
+///   every k-tile is exactly [`KC`] rows and every j-tile exactly [`NC`]
+///   columns **except possibly the last one of each axis**, which holds
+///   the remainder (`1..=KC` / `1..=NC` — never empty);
+/// * panel `(ki, ji)` is stored at `panels[ki · j_tiles.len() + ji]` as a
+///   dense row-major `kb × jb` slice (`kb = k_tiles[ki].1`,
+///   `jb = j_tiles[ji].1`): element `(p, j)` lives at `p·jb + j`, i.e.
+///   the panel's row stride is `jb` itself — there is **no padding**, so
+///   a consumer must use the tile's own `jb`, never [`NC`];
+/// * the pack source must be a dense row-major `k × n` buffer
+///   (`data.len() == k·n`, asserted).
 pub struct PackedPanels<T> {
     /// Depth (rows of B) the pack was built from.
     pub(crate) k: usize,
@@ -396,12 +457,33 @@ pub struct PackedPanels<T> {
 impl<T: Copy> PackedPanels<T> {
     /// Pack a row-major k×n buffer into panels (one allocation per panel,
     /// `(kk, jj)` ascending — the same walk the consuming kernels take).
+    /// Asserts the panel-shape contract (see the type docs) — including in
+    /// release builds, since the microkernels consume panels unchecked.
     pub(crate) fn pack(data: &[T], k: usize, n: usize) -> PackedPanels<T> {
-        debug_assert_eq!(data.len(), k * n);
+        assert_eq!(
+            data.len(),
+            k * n,
+            "PackedPanels::pack: buffer len {} != k*n = {}*{}",
+            data.len(),
+            k,
+            n
+        );
         let k_tiles: Vec<(usize, usize)> =
             fixed_tiles(k, KC).into_iter().map(|(lo, hi)| (lo, hi - lo)).collect();
         let j_tiles: Vec<(usize, usize)> =
             fixed_tiles(n, NC).into_iter().map(|(lo, hi)| (lo, hi - lo)).collect();
+        for (t, &(_, kb)) in k_tiles.iter().enumerate() {
+            assert!(
+                (kb == KC || t + 1 == k_tiles.len()) && kb > 0 && kb <= KC,
+                "PackedPanels::pack: interior k-tile {t} has height {kb} != KC={KC}"
+            );
+        }
+        for (t, &(_, jb)) in j_tiles.iter().enumerate() {
+            assert!(
+                (jb == NC || t + 1 == j_tiles.len()) && jb > 0 && jb <= NC,
+                "PackedPanels::pack: interior j-tile {t} has width {jb} != NC={NC}"
+            );
+        }
         let mut panels = Vec::with_capacity(k_tiles.len() * j_tiles.len());
         for &(kk, kb) in &k_tiles {
             for &(jj, jb) in &j_tiles {
@@ -410,16 +492,36 @@ impl<T: Copy> PackedPanels<T> {
                     let base = (kk + r) * n + jj;
                     p.extend_from_slice(&data[base..base + jb]);
                 }
+                assert_eq!(
+                    p.len(),
+                    kb * jb,
+                    "PackedPanels::pack: panel at (kk={kk}, jj={jj}) is not dense {kb}x{jb}"
+                );
                 panels.push(p);
             }
         }
         PackedPanels { k, n, k_tiles, j_tiles, panels }
     }
 
-    /// The packed `kb × jb` panel at tile coordinates `(ki, ji)`.
+    /// The packed `kb × jb` panel at tile coordinates `(ki, ji)`. Asserts
+    /// the coordinates are in range and the panel has its contracted
+    /// `kb·jb` length (release builds included — the consuming
+    /// microkernels do unchecked loads at `p·jb + j`).
     #[inline]
     pub(crate) fn panel(&self, ki: usize, ji: usize) -> &[T] {
-        &self.panels[ki * self.j_tiles.len() + ji]
+        assert!(
+            ki < self.k_tiles.len() && ji < self.j_tiles.len(),
+            "PackedPanels::panel: tile ({ki}, {ji}) out of range ({}x{} tiles)",
+            self.k_tiles.len(),
+            self.j_tiles.len()
+        );
+        let p = &self.panels[ki * self.j_tiles.len() + ji];
+        assert_eq!(
+            p.len(),
+            self.k_tiles[ki].1 * self.j_tiles[ji].1,
+            "PackedPanels::panel: panel ({ki}, {ji}) violates the kb*jb contract"
+        );
+        p
     }
 }
 
@@ -431,26 +533,6 @@ pub(crate) fn mirror_upper(g: &mut Matrix) {
         for b in 0..a {
             g[(a, b)] = g[(b, a)];
         }
-    }
-}
-
-/// out += a * x, 4-wide unrolled. Each out[j] sees exactly one add per
-/// call, so element-wise accumulation order is untouched by the unroll.
-#[inline]
-fn axpy4(a: f64, x: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(x.len(), out.len());
-    let n = out.len();
-    let mut j = 0;
-    while j + 4 <= n {
-        out[j] += a * x[j];
-        out[j + 1] += a * x[j + 1];
-        out[j + 2] += a * x[j + 2];
-        out[j + 3] += a * x[j + 3];
-        j += 4;
-    }
-    while j < n {
-        out[j] += a * x[j];
-        j += 1;
     }
 }
 
@@ -619,6 +701,72 @@ mod tests {
         let mut rng = Rng::new(43);
         let a = Matrix::random(GRAM_ROW_CHUNK - 1, 6, &mut rng);
         assert_eq!(a.gram_with(ParallelPolicy::with_workers(8)), a.gram());
+    }
+
+    #[test]
+    fn packed_panels_shape_contract() {
+        // shapes straddling the KC/NC boundaries: all interior tiles full,
+        // only the last tile of each axis short, every panel dense kb×jb
+        for &(k, n) in &[(1usize, 1usize), (63, 65), (64, 64), (65, 129), (200, 7)] {
+            let data: Vec<f64> = (0..k * n).map(|i| i as f64).collect();
+            let pack = PackedPanels::pack(&data, k, n);
+            assert_eq!(pack.k_tiles.iter().map(|&(_, kb)| kb).sum::<usize>(), k);
+            assert_eq!(pack.j_tiles.iter().map(|&(_, jb)| jb).sum::<usize>(), n);
+            for (ki, &(kk, kb)) in pack.k_tiles.iter().enumerate() {
+                for (ji, &(jj, jb)) in pack.j_tiles.iter().enumerate() {
+                    let p = pack.panel(ki, ji);
+                    assert_eq!(p.len(), kb * jb, "{k}x{n} panel ({ki},{ji})");
+                    // element (p, j) of the panel is B[kk+p, jj+j]
+                    for r in 0..kb {
+                        for c in 0..jb {
+                            assert_eq!(p[r * jb + c], ((kk + r) * n + jj + c) as f64);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer len")]
+    fn packed_panels_rejects_misshapen_buffer() {
+        let data = vec![0.0f64; 11]; // not 3*4
+        let _ = PackedPanels::pack(&data, 3, 4);
+    }
+
+    #[test]
+    fn gram_matches_scalar_kernel_oracle_bitwise() {
+        // pin the dispatched gram (SIMD on AVX2 hosts) to an oracle built
+        // from the *scalar* microkernels: cross-ISA bit-identity at the
+        // Matrix level, tail rows included
+        for rows in [1usize, 3, 4, 5, 8, 11] {
+            let mut rng = Rng::new(rows as u64 + 500);
+            let a = Matrix::random(rows, 9, &mut rng);
+            let n = a.cols;
+            let mut g = Matrix::zeros(n, n);
+            let mut i = 0;
+            while i + 4 <= rows {
+                let r: Vec<&[f64]> = (0..4).map(|r| a.row(i + r)).collect();
+                for c in 0..n {
+                    let x = [r[0][c], r[1][c], r[2][c], r[3][c]];
+                    simd::gram4_f64_scalar(
+                        x,
+                        [&r[0][c..], &r[1][c..], &r[2][c..], &r[3][c..]],
+                        &mut g.data[c * n + c..(c + 1) * n],
+                    );
+                }
+                i += 4;
+            }
+            while i < rows {
+                let r = a.row(i);
+                for c in 0..n {
+                    simd::axpy_f64_scalar(r[c], &r[c..], &mut g.data[c * n + c..(c + 1) * n]);
+                }
+                i += 1;
+            }
+            mirror_upper(&mut g);
+            assert_eq!(a.gram(), g, "rows={rows}: dispatched gram != scalar oracle");
+        }
     }
 
     #[test]

@@ -39,6 +39,7 @@ use std::fmt;
 
 use super::matrix::{mirror_upper, Matrix, PackedPanels, GRAM_ROW_CHUNK, MM_ROW_TILE};
 use super::policy::{fixed_tiles, par_map, ParallelPolicy};
+use super::simd::{self, FmaMode};
 
 /// Row-major dense f32 matrix: the storage/wire type of the
 /// mixed-precision paths. Products of its entries are accumulated in f64
@@ -131,22 +132,53 @@ impl MatrixF32 {
     /// [`KC`](super::matrix::KC)×[`NC`](super::matrix::NC)
     /// [`PackedPanels`], output rows sharded over fixed
     /// [`MM_ROW_TILE`]-high tiles across `policy.workers` threads, each
-    /// element's k-terms accumulated in ascending `(kk, p)` order by a
-    /// 4-wide unrolled widening AXPY. Bit-identical at any worker count;
+    /// element's k-terms accumulated in ascending `(kk, p)` order by the
+    /// register-tiled widen microkernels ([`simd::gemm_tile_widen`] /
+    /// [`simd::gemm_row_widen`] — 8-lane f32 wire on AVX2, the pre-SIMD
+    /// widening AXPY on the scalar path). Bit-identical at any worker count;
     /// bit-identical to `self.to_f64().matmul(&other.to_f64())` (0 ulp
     /// kernel drift — every f32×f32 product is exact in f64); within
     /// `2⁻²³·(|A|·|B|)[i,j]` of the f64 reference when the operands were
     /// rounded from f64 (see the module contract).
     pub fn matmul_widen(&self, other: &MatrixF32, policy: ParallelPolicy) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul_widen shape mismatch");
-        let (m, n) = (self.rows, other.cols);
-        let pack = PackedPanels::pack(&other.data, other.rows, other.cols);
+        self.matmul_widen_packed(&other.pack_panels(), policy)
+    }
+
+    /// The B-operand side of [`MatrixF32::matmul_widen`] as a reusable
+    /// artifact: pack `self` once into the read-only
+    /// [`KC`](super::matrix::KC)×[`NC`](super::matrix::NC)
+    /// [`PackedPanels`] layout the widen GEMM consumes. Callers that
+    /// multiply **many different A operands against the same B** (the FC
+    /// recurrence's per-timestep coupling GEMMs reuse each `A_kᵀ` up to
+    /// `q−k` times) build the pack once and call
+    /// [`MatrixF32::matmul_widen_packed`] per product, instead of paying
+    /// the pack on every call. Packing is pure data movement, so results
+    /// are bit-identical to the pack-per-call path.
+    pub fn pack_panels(&self) -> PackedPanels<f32> {
+        PackedPanels::pack(&self.data, self.rows, self.cols)
+    }
+
+    /// [`MatrixF32::matmul_widen`] against a prebuilt B pack (see
+    /// [`MatrixF32::pack_panels`]): `self · B` where `pack` was built from
+    /// B. Identical schedule, arithmetic order, and determinism contract
+    /// as `matmul_widen` — only the packing cost moves to the caller.
+    /// `self.cols` must equal the packed operand's row count (asserted).
+    pub fn matmul_widen_packed(&self, pack: &PackedPanels<f32>, policy: ParallelPolicy) -> Matrix {
+        assert_eq!(
+            self.cols,
+            pack.k,
+            "matmul_widen_packed: A cols {} != packed B rows {}",
+            self.cols,
+            pack.k
+        );
+        let (m, n) = (self.rows, pack.n);
         if policy.workers <= 1 || m < 2 * MM_ROW_TILE {
-            return self.matmul_rows_widen(&pack, 0, m);
+            return self.matmul_rows_widen(pack, 0, m, policy.fma);
         }
         let tiles = fixed_tiles(m, MM_ROW_TILE);
         let slabs =
-            par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows_widen(&pack, i0, i1)))
+            par_map(tiles, policy, |(i0, i1)| Ok(self.matmul_rows_widen(pack, i0, i1, policy.fma)))
                 .expect("matmul_widen worker thread panicked");
         let mut data = Vec::with_capacity(m * n);
         for slab in slabs {
@@ -157,8 +189,16 @@ impl MatrixF32 {
 
     /// Widen GEMM restricted to output rows [i0, i1) over a prebuilt
     /// shared pack — the exact structural mirror of the f64
-    /// `Matrix::matmul_rows`, with the widening at the multiply.
-    fn matmul_rows_widen(&self, pack: &PackedPanels<f32>, i0: usize, i1: usize) -> Matrix {
+    /// `Matrix::matmul_rows` (4-row register tiles + 1-row tails through
+    /// the [`simd`](super::simd) widen microkernels), with the widening at
+    /// the multiply.
+    fn matmul_rows_widen(
+        &self,
+        pack: &PackedPanels<f32>,
+        i0: usize,
+        i1: usize,
+        fma: FmaMode,
+    ) -> Matrix {
         debug_assert!(i0 <= i1 && i1 <= self.rows);
         debug_assert_eq!(self.cols, pack.k);
         let (k, n) = (pack.k, pack.n);
@@ -169,13 +209,34 @@ impl MatrixF32 {
         for (ki, &(kk, kb)) in pack.k_tiles.iter().enumerate() {
             for (ji, &(jj, jb)) in pack.j_tiles.iter().enumerate() {
                 let panel = pack.panel(ki, ji);
-                for i in i0..i1 {
-                    let arow = &self.data[i * k + kk..i * k + kk + kb];
-                    let orow =
-                        &mut out.data_mut()[(i - i0) * n + jj..(i - i0) * n + jj + jb];
-                    for (p, &a) in arow.iter().enumerate() {
-                        axpy4_widen(a, &panel[p * jb..p * jb + jb], orow);
-                    }
+                let mut i = i0;
+                while i + 4 <= i1 {
+                    let arow = |r: usize| {
+                        let base = (i + r) * k + kk;
+                        &self.data[base..base + kb]
+                    };
+                    let obase = (i - i0) * n + jj;
+                    simd::gemm_tile_widen(
+                        [arow(0), arow(1), arow(2), arow(3)],
+                        panel,
+                        jb,
+                        &mut out.data_mut()[obase..],
+                        n,
+                        fma,
+                    );
+                    i += 4;
+                }
+                while i < i1 {
+                    let base = i * k + kk;
+                    let obase = (i - i0) * n + jj;
+                    simd::gemm_row_widen(
+                        &self.data[base..base + kb],
+                        panel,
+                        jb,
+                        &mut out.data_mut()[obase..obase + jb],
+                        fma,
+                    );
+                    i += 1;
                 }
             }
         }
@@ -195,12 +256,13 @@ impl MatrixF32 {
     pub fn gram_widen(&self, policy: ParallelPolicy) -> Matrix {
         let chunks = fixed_tiles(self.rows, GRAM_ROW_CHUNK);
         if chunks.len() <= 1 {
-            let mut g = self.gram_rows_widen(0, self.rows);
+            let mut g = self.gram_rows_widen(0, self.rows, policy.fma);
             mirror_upper(&mut g);
             return g;
         }
-        let partials = par_map(chunks, policy, |(lo, hi)| Ok(self.gram_rows_widen(lo, hi)))
-            .expect("gram_widen worker thread panicked");
+        let partials =
+            par_map(chunks, policy, |(lo, hi)| Ok(self.gram_rows_widen(lo, hi, policy.fma)))
+                .expect("gram_widen worker thread panicked");
         let n = self.cols;
         let mut g = Matrix::zeros(n, n);
         for p in partials {
@@ -213,9 +275,10 @@ impl MatrixF32 {
     }
 
     /// Upper-triangle widen-Gram over rows [lo, hi) — the f32-wire mirror
-    /// of `Matrix::gram_rows` (4-row microkernel, scalar tail, f64
-    /// accumulator, no mirroring so partials fold cheaply).
-    fn gram_rows_widen(&self, lo: usize, hi: usize) -> Matrix {
+    /// of `Matrix::gram_rows` (4-row [`simd::gram4_widen`] microkernel,
+    /// exact AXPY tail rows, f64 accumulator, no mirroring so partials
+    /// fold cheaply).
+    fn gram_rows_widen(&self, lo: usize, hi: usize, fma: FmaMode) -> Matrix {
         debug_assert!(lo <= hi && hi <= self.rows);
         let n = self.cols;
         let mut g = Matrix::zeros(n, n);
@@ -227,26 +290,16 @@ impl MatrixF32 {
             let r2 = &self.data[(i + 2) * n..(i + 3) * n];
             let r3 = &self.data[(i + 3) * n..(i + 4) * n];
             for a in 0..n {
-                let (x0, x1, x2, x3) =
-                    (r0[a] as f64, r1[a] as f64, r2[a] as f64, r3[a] as f64);
-                let grow = &mut g.data_mut()[a * n..(a + 1) * n];
-                for b in a..n {
-                    grow[b] += x0 * r0[b] as f64
-                        + x1 * r1[b] as f64
-                        + x2 * r2[b] as f64
-                        + x3 * r3[b] as f64;
-                }
+                let x = [r0[a], r1[a], r2[a], r3[a]];
+                let grow = &mut g.data_mut()[a * n + a..(a + 1) * n];
+                simd::gram4_widen(x, [&r0[a..], &r1[a..], &r2[a..], &r3[a..]], grow, fma);
             }
             i += 4;
         }
         while i < rows {
             let r = &self.data[i * n..(i + 1) * n];
             for a in 0..n {
-                let ra = r[a] as f64;
-                let grow = &mut g.data_mut()[a * n..(a + 1) * n];
-                for b in a..n {
-                    grow[b] += ra * r[b] as f64;
-                }
+                simd::axpy_widen(r[a], &r[a..], &mut g.data_mut()[a * n + a..(a + 1) * n]);
             }
             i += 1;
         }
@@ -265,16 +318,14 @@ impl MatrixF32 {
     }
 
     /// selfᵀ * v, widening at the multiply, f64 accumulator, same row-major
-    /// sweep (and therefore accumulation order) as `Matrix::t_matvec`.
+    /// sweep (and therefore accumulation order) as `Matrix::t_matvec` —
+    /// dispatched through [`simd::axpy_wx`] (bit-identical to the scalar
+    /// fold on every ISA path).
     pub fn t_matvec_widen(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.rows, v.len());
         let mut out = vec![0.0f64; self.cols];
         for i in 0..self.rows {
-            let r = self.row(i);
-            let vi = v[i];
-            for j in 0..self.cols {
-                out[j] += r[j] as f64 * vi;
-            }
+            simd::axpy_wx(v[i], self.row(i), &mut out);
         }
         out
     }
@@ -294,29 +345,6 @@ impl std::ops::IndexMut<(usize, usize)> for MatrixF32 {
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
-    }
-}
-
-/// out += a·x widening each f32 product to f64, 4-wide unrolled. Each
-/// out[j] sees exactly one add per call (same as the f64 `axpy4`), so the
-/// element-wise accumulation order matches the f64 kernel term for term.
-/// The f32×f32 product is computed in f64 and is therefore exact.
-#[inline]
-fn axpy4_widen(a: f32, x: &[f32], out: &mut [f64]) {
-    debug_assert_eq!(x.len(), out.len());
-    let a = a as f64;
-    let n = out.len();
-    let mut j = 0;
-    while j + 4 <= n {
-        out[j] += a * x[j] as f64;
-        out[j + 1] += a * x[j + 1] as f64;
-        out[j + 2] += a * x[j + 2] as f64;
-        out[j + 3] += a * x[j + 3] as f64;
-        j += 4;
-    }
-    while j < n {
-        out[j] += a * x[j] as f64;
-        j += 1;
     }
 }
 
@@ -398,6 +426,28 @@ mod tests {
         let g = MatrixF32::from_vec(2, 2, vec![0.0, f32::INFINITY, 1.0, 1.0])
             .gram_widen(ParallelPolicy::sequential());
         assert!(g.data().iter().any(|v| v.is_nan()), "gram_widen dropped NaN");
+    }
+
+    #[test]
+    fn packed_reuse_bit_identical_to_pack_per_call() {
+        // one B pack shared by several A operands (the FC coupling-GEMM
+        // pattern) must reproduce the pack-per-call products bit for bit
+        let b = random_f32(40, 33, 77);
+        let pack = b.pack_panels();
+        for seed in 0..4u64 {
+            let a = random_f32(13 + 7 * seed as usize, 40, 100 + seed);
+            let per_call = a.matmul_widen(&b, ParallelPolicy::sequential());
+            let reused = a.matmul_widen_packed(&pack, ParallelPolicy::sequential());
+            assert_eq!(reused, per_call, "seed={seed}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_widen_packed")]
+    fn packed_shape_mismatch_rejected() {
+        let b = random_f32(8, 5, 1);
+        let a = random_f32(3, 9, 2); // cols 9 != packed rows 8
+        let _ = a.matmul_widen_packed(&b.pack_panels(), ParallelPolicy::sequential());
     }
 
     #[test]

@@ -24,9 +24,12 @@
 //! * [`solve`] — triangular solves and the user-facing least-squares entry
 //!   points, including the parallel `lstsq_tsqr`,
 //! * [`policy`] — [`ParallelPolicy`], the single worker-count (and
-//!   [`Precision`] wire-format) knob every threaded path shares, and the
-//!   fixed-split schedules behind the bit-identical-at-any-worker-count
-//!   determinism contract.
+//!   [`Precision`] wire-format / [`FmaMode`] contraction) knob every
+//!   threaded path shares, and the fixed-split schedules behind the
+//!   bit-identical-at-any-worker-count determinism contract,
+//! * [`simd`] — the pinned-width SIMD microkernels the GEMM/Gram inner
+//!   loops dispatch to at runtime (`std::arch` AVX2 register tiles with
+//!   the pre-SIMD scalar loops as both fallback and bit-identity oracle).
 
 #![deny(missing_docs)]
 
@@ -35,13 +38,15 @@ pub mod matrix;
 pub mod matrix32;
 pub mod policy;
 pub mod qr;
+pub mod simd;
 pub mod solve;
 pub mod tsqr;
 
 pub use cholesky::cholesky_solve;
-pub use matrix::Matrix;
+pub use matrix::{Matrix, PackedPanels};
 pub use matrix32::MatrixF32;
 pub use policy::{ParallelPolicy, Precision};
+pub use simd::{FmaMode, IsaPath};
 pub use qr::{
     householder_qr, householder_qr_owned, householder_qr_owned_with,
     householder_qr_reference, householder_qr_with, QrFactors,

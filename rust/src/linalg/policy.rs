@@ -26,9 +26,15 @@
 //! knob consumed by the mixed-precision paths (`CpuElmTrainer`'s Gram
 //! fold, `bptt::forward_cpu_with`): the f32-wire kernels obey the same
 //! fixed-schedule discipline, so switching precision never weakens the
-//! worker-count bit-identity guarantee.
+//! worker-count bit-identity guarantee. Likewise the SIMD dispatch of the
+//! [`simd`](super::simd) microkernels never changes results — the AVX2
+//! paths are bit-identical to the scalar fallback — and the one knob that
+//! *can* change bits, the [`FmaMode`] contraction mode, is opt-in,
+//! envelope-documented, and still worker-count invariant.
 
 use anyhow::{anyhow, Result};
+
+use super::simd::FmaMode;
 
 /// Numeric wire format of the substrate's mixed-precision paths.
 ///
@@ -74,29 +80,52 @@ pub struct ParallelPolicy {
     /// and `bptt::forward_cpu_with`); kernels that take f64 operands ignore
     /// it. Defaults to [`Precision::F64`].
     pub precision: Precision,
+    /// Fused-multiply-add contraction mode of the SIMD GEMM/Gram
+    /// microkernels. Defaults to [`FmaMode::Exact`] (bit-identical to the
+    /// scalar kernels). [`FmaMode::Relaxed`] is an opt-in throughput knob
+    /// with a documented error envelope (see [`simd`](super::simd)): it
+    /// relinquishes bit-identity with the exact kernels but **never** the
+    /// worker-count invariance — the split schedules stay fixed.
+    pub fma: FmaMode,
 }
 
 impl ParallelPolicy {
     /// Single-threaded: everything runs on the caller's thread.
     pub fn sequential() -> ParallelPolicy {
-        ParallelPolicy { workers: 1, precision: Precision::F64 }
+        ParallelPolicy { workers: 1, precision: Precision::F64, fma: FmaMode::Exact }
     }
 
     /// Explicit worker count (clamped to >= 1).
     pub fn with_workers(workers: usize) -> ParallelPolicy {
-        ParallelPolicy { workers: workers.max(1), precision: Precision::F64 }
+        ParallelPolicy {
+            workers: workers.max(1),
+            precision: Precision::F64,
+            fma: FmaMode::Exact,
+        }
     }
 
     /// One worker per available core, capped at 8 (the ELM solve saturates
     /// memory bandwidth before it saturates more cores than that).
     pub fn auto() -> ParallelPolicy {
         let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
-        ParallelPolicy { workers: cores.clamp(1, 8), precision: Precision::F64 }
+        ParallelPolicy {
+            workers: cores.clamp(1, 8),
+            precision: Precision::F64,
+            fma: FmaMode::Exact,
+        }
     }
 
     /// Same worker count, different wire precision (builder style).
     pub fn with_precision(mut self, precision: Precision) -> ParallelPolicy {
         self.precision = precision;
+        self
+    }
+
+    /// Same worker count and precision, different FMA contraction mode
+    /// (builder style). [`FmaMode::Relaxed`] only takes effect on hosts
+    /// with AVX2+FMA; everywhere else the kernels stay exact.
+    pub fn with_fma(mut self, fma: FmaMode) -> ParallelPolicy {
+        self.fma = fma;
         self
     }
 }
@@ -238,5 +267,19 @@ mod tests {
         assert_eq!(p.workers, 4);
         assert_eq!(p.precision, Precision::MixedF32);
         assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn fma_defaults_to_exact_and_builds() {
+        assert_eq!(ParallelPolicy::sequential().fma, FmaMode::Exact);
+        assert_eq!(ParallelPolicy::with_workers(4).fma, FmaMode::Exact);
+        assert_eq!(ParallelPolicy::auto().fma, FmaMode::Exact);
+        assert_eq!(FmaMode::default(), FmaMode::Exact);
+        let p = ParallelPolicy::with_workers(4)
+            .with_precision(Precision::MixedF32)
+            .with_fma(FmaMode::Relaxed);
+        assert_eq!(p.workers, 4);
+        assert_eq!(p.precision, Precision::MixedF32);
+        assert_eq!(p.fma, FmaMode::Relaxed);
     }
 }

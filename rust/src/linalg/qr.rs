@@ -26,7 +26,14 @@
 //! threaded pieces are the trailing-update GEMMs, routed through
 //! [`Matrix::matmul_with`] — which is bit-identical to the sequential GEMM
 //! at any [`ParallelPolicy`] worker count — so the factors (and therefore
-//! Qᵀb and R) are bit-identical for any worker count. For inputs with
+//! Qᵀb and R) are bit-identical for any worker count. The trailing GEMMs
+//! therefore also run on the [`simd`](super::simd) register-tiled
+//! microkernels, and the panel reflector applications use the dispatched
+//! element-independent `axpy_sub` (`c −= s·v`) — both bit-identical to
+//! their scalar twins, so SIMD dispatch never moves a factor bit. The
+//! in-panel *dots* (column norms, `vᵀc`) deliberately stay scalar: a SIMD
+//! horizontal reduction would reassociate the sum and break the pinned
+//! bit-identity with `householder_qr_reference` on n ≤ PANEL inputs. For inputs with
 //! n ≤ PANEL the blocked path degenerates to the reference loop and its
 //! `work`/`betas` are bit-identical to it; beyond that the trailing GEMM
 //! reassociates the update sums, which the tests bound at 1e-10. The
@@ -37,6 +44,7 @@ use anyhow::{bail, Result};
 
 use super::matrix::Matrix;
 use super::policy::ParallelPolicy;
+use super::simd;
 
 /// Panel width of the blocked factorization.
 pub const PANEL: usize = 32;
@@ -207,7 +215,11 @@ fn factor_panel(w: &mut Matrix, betas: &mut [f64], j0: usize, nb: usize) -> Vec<
         }
         vc[c] = alpha;
         betas[j0 + c] = beta;
-        // apply H_c to the remaining panel columns (contiguous slices)
+        // apply H_c to the remaining panel columns (contiguous slices).
+        // The dot stays scalar (a SIMD horizontal reduction would
+        // reassociate and break the bit-identity with the reference
+        // loop); the rank-1 update is element-independent, so it goes
+        // through the dispatched `axpy_sub` — bit-identical on every ISA.
         let vtail = &vc[c + 1..];
         for d in 0..nb - c - 1 {
             let col = &mut tail[d * ml..(d + 1) * ml];
@@ -217,9 +229,7 @@ fn factor_panel(w: &mut Matrix, betas: &mut [f64], j0: usize, nb: usize) -> Vec<
             }
             s *= beta;
             col[c] -= s;
-            for (vx, cx) in vtail.iter().zip(&mut col[c + 1..]) {
-                *cx -= s * vx;
-            }
+            simd::axpy_sub_f64(s, vtail, &mut col[c + 1..]);
         }
     }
 
@@ -352,7 +362,8 @@ impl QrFactors {
                 }
                 u[c] = acc;
             }
-            // b -= V u
+            // b -= V u (rank-1 updates through the dispatched `axpy_sub`
+            // — element-independent, bit-identical on every ISA path)
             for c in 0..nb {
                 let uc = u[c];
                 if uc == 0.0 {
@@ -360,9 +371,7 @@ impl QrFactors {
                 }
                 bl[c] -= uc;
                 let tail = &pan[c * ml + c + 1..(c + 1) * ml];
-                for (vx, bx) in tail.iter().zip(&mut bl[c + 1..ml]) {
-                    *bx -= uc * vx;
-                }
+                simd::axpy_sub_f64(uc, tail, &mut bl[c + 1..ml]);
             }
         }
     }

@@ -1,0 +1,1099 @@
+//! Pinned-width SIMD microkernels — the innermost arithmetic of the
+//! GEMM/Gram substrate, with runtime ISA dispatch and a bit-identity
+//! contract against the portable scalar kernels.
+//!
+//! The blocked kernels of [`matrix`](super::matrix) /
+//! [`matrix32`](super::matrix32) used to hand their inner loops
+//! (`axpy4` / `axpy4_widen`, the rank-4 Gram row update) to the
+//! autovectorizer. That code was vectorizer-*friendly* but the lane width
+//! was never pinned: a compiler upgrade, a cost-model change, or a cold
+//! inlining decision could silently drop the hot loops back to scalar
+//! issue. This module pins them: explicit `std::arch` AVX2 kernels
+//! (4-lane f64, 8-lane f32 wire) behind a one-time
+//! `is_x86_feature_detected!` dispatch, with the pre-SIMD scalar loops
+//! kept verbatim as the portable fallback *and* the reference the SIMD
+//! paths are bit-compared against.
+//!
+//! # Kernel families
+//!
+//! | kernel | shape | used by |
+//! |---|---|---|
+//! | [`gemm_tile_f64`] / [`gemm_tile_widen`] | 4×`jb` register tile (4×8 accumulators over a packed B panel) | `matmul_rows` / `matmul_rows_widen` |
+//! | [`gemm_row_f64`] / [`gemm_row_widen`] | 1×`jb` row tile (the ≤3 tail rows of a row block) | same |
+//! | [`gram4_f64`] / [`gram4_widen`] | rank-4 update of one G row segment | `gram_rows` / `gram_rows_widen` |
+//! | [`axpy_f64`] / [`axpy_widen`] / [`axpy_wx`] | `out[j] += a·x[j]` | Gram tail rows, `t_matvec`, `t_matvec_widen` |
+//! | [`axpy_sub_f64`] | `out[j] -= a·x[j]` | QR panel reflector application (`factor_panel`, `apply_qt`) |
+//!
+//! Every family comes in a dispatched flavor (listed above) and a public
+//! `*_scalar` twin. The scalar twins are not test scaffolding only — they
+//! are the exact code the dispatcher runs on non-AVX2 hardware (and under
+//! `OPT_PR_ELM_FORCE_SCALAR=1`), so pinning `dispatched ≡ scalar` in
+//! `tests/simd_props.rs` pins cross-ISA reproducibility.
+//!
+//! # Determinism contract
+//!
+//! The SIMD kernels are **bit-identical** to their scalar twins, at every
+//! shape (including all remainder-lane counts) and in both precisions, by
+//! construction:
+//!
+//! * accumulators are **element-independent** — no horizontal reductions,
+//!   no lane shuffles; out element `j` is touched only by lane `j % width`
+//!   of its own vector, in exactly the per-element operation sequence of
+//!   the scalar loop (ascending `p` within a panel, ascending `(kk, p)`
+//!   across panels);
+//! * multiplies and adds stay **separate** (`vmulpd` + `vaddpd`, never
+//!   contracted) unless [`FmaMode::Relaxed`] is requested, so every lane
+//!   performs the same two IEEE roundings the scalar expression performs;
+//! * widening conversions (`f32 → f64`) are exact in either ISA;
+//! * remainder lanes run the scalar expression itself.
+//!
+//! Zero multiplicands are never skipped (`0 × ∞` must stay NaN), matching
+//! the scalar kernels.
+//!
+//! # The `FmaMode::Relaxed` envelope
+//!
+//! [`FmaMode::Relaxed`] (opt-in via
+//! [`ParallelPolicy::with_fma`](super::ParallelPolicy::with_fma), default
+//! off) lets the vector lanes of the GEMM/Gram microkernels use fused
+//! multiply-add when the host has FMA. Each fused term drops the
+//! intermediate product rounding, so per output element the drift versus
+//! the exact kernels is bounded by the sum of those roundings:
+//!
+//! ```text
+//!   |C_relaxed[i,j] − C_exact[i,j]|  ≤  k · 2⁻⁵³ · (|A|·|B|)[i,j]
+//! ```
+//!
+//! (`k` = inner dimension; `(|A|·|B|)` the absolute-value product — the
+//! property suite asserts this bound element-wise). Worker-count
+//! invariance is **unchanged** under Relaxed: the schedule stays fixed and
+//! every element is still produced whole by one worker. What Relaxed gives
+//! up is only bit-identity with the scalar/exact kernels. Remainder lanes
+//! stay unfused (they run the scalar expression), and the scalar fallback
+//! ignores Relaxed entirely — both inside the documented envelope.
+
+use std::sync::OnceLock;
+
+/// Fused-multiply-add contraction mode of the SIMD GEMM/Gram microkernels.
+/// Carried by [`ParallelPolicy`](super::ParallelPolicy); see the module
+/// docs for the exact/relaxed contract and the Relaxed error envelope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FmaMode {
+    /// Separate multiply + add in every lane — bit-identical to the scalar
+    /// kernels. The default, and the mode every conformance suite pins.
+    #[default]
+    Exact,
+    /// Allow fused multiply-add in the vector lanes when the host has FMA
+    /// (falls back to [`FmaMode::Exact`] when it does not). Bounded drift,
+    /// documented in the module docs; worker-count bit-invariance is
+    /// preserved.
+    Relaxed,
+}
+
+/// Which instruction-set path the dispatched kernels execute on this host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsaPath {
+    /// Portable scalar kernels (the pre-SIMD inner loops, kept verbatim).
+    Scalar,
+    /// 256-bit AVX2 kernels: 4-lane f64, 8-lane f32 wire.
+    Avx2,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_avx2() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx2() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_fma() -> bool {
+    is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_fma() -> bool {
+    false
+}
+
+static ISA: OnceLock<IsaPath> = OnceLock::new();
+static FMA: OnceLock<bool> = OnceLock::new();
+
+/// The ISA path every dispatched kernel in this module executes, detected
+/// once per process (`is_x86_feature_detected!`) and cached. Setting
+/// `OPT_PR_ELM_FORCE_SCALAR=1` in the environment pins the scalar path on
+/// any hardware — the escape hatch for cross-ISA reproduction runs and for
+/// benchmarking the fallback.
+pub fn active_isa() -> IsaPath {
+    *ISA.get_or_init(|| {
+        let forced = std::env::var("OPT_PR_ELM_FORCE_SCALAR")
+            .is_ok_and(|v| v != "0" && !v.is_empty());
+        if !forced && detect_avx2() {
+            IsaPath::Avx2
+        } else {
+            IsaPath::Scalar
+        }
+    })
+}
+
+/// Lower-case name of the active ISA path (`"avx2"` / `"scalar"`) — what
+/// the bench meta record emits so regression gates know which path a
+/// `BENCH_linalg.json` measured.
+pub fn isa_name() -> &'static str {
+    match active_isa() {
+        IsaPath::Scalar => "scalar",
+        IsaPath::Avx2 => "avx2",
+    }
+}
+
+/// Whether [`FmaMode::Relaxed`] can actually fuse on this host: true only
+/// when the AVX2 path is active *and* the FMA feature is present. When
+/// false, Relaxed silently behaves as [`FmaMode::Exact`].
+pub fn fma_available() -> bool {
+    *FMA.get_or_init(|| active_isa() == IsaPath::Avx2 && detect_fma())
+}
+
+#[inline]
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn use_fma(fma: FmaMode) -> bool {
+    fma == FmaMode::Relaxed && fma_available()
+}
+
+// ---------------------------------------------------------------------------
+// scalar kernels — the pre-SIMD inner loops, verbatim. These are both the
+// non-x86 execution path and the bit-identity oracle for the AVX2 path.
+// ---------------------------------------------------------------------------
+
+/// `out[j] += a · x[j]`, scalar 4-wide unrolled (the pre-SIMD `axpy4`).
+/// Each `out[j]` sees exactly one add per call, so element-wise
+/// accumulation order is untouched by the unroll.
+pub fn axpy_f64_scalar(a: f64, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        out[j] += a * x[j];
+        out[j + 1] += a * x[j + 1];
+        out[j + 2] += a * x[j + 2];
+        out[j + 3] += a * x[j + 3];
+        j += 4;
+    }
+    while j < n {
+        out[j] += a * x[j];
+        j += 1;
+    }
+}
+
+/// `out[j] -= a · x[j]`, scalar — the reflector-application update of the
+/// QR panels (`c −= s·v`).
+pub fn axpy_sub_f64_scalar(a: f64, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        out[j] -= a * x[j];
+        out[j + 1] -= a * x[j + 1];
+        out[j + 2] -= a * x[j + 2];
+        out[j + 3] -= a * x[j + 3];
+        j += 4;
+    }
+    while j < n {
+        out[j] -= a * x[j];
+        j += 1;
+    }
+}
+
+/// `out[j] += a · x[j]` with f32 operands widened at the multiply into the
+/// f64 accumulator (the pre-SIMD `axpy4_widen`). The coefficient widening
+/// is exact, so this is precisely [`axpy_wx_scalar`] with `a` pre-widened —
+/// one body, bit for bit.
+pub fn axpy_widen_scalar(a: f32, x: &[f32], out: &mut [f64]) {
+    axpy_wx_scalar(a as f64, x, out);
+}
+
+/// `out[j] += a · (x[j] as f64)` with an f64 coefficient and an f32 vector
+/// (the `t_matvec_widen` fold: `out[j] += vᵢ · row[j]`).
+pub fn axpy_wx_scalar(a: f64, x: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        out[j] += a * x[j] as f64;
+        out[j + 1] += a * x[j + 1] as f64;
+        out[j + 2] += a * x[j + 2] as f64;
+        out[j + 3] += a * x[j + 3] as f64;
+        j += 4;
+    }
+    while j < n {
+        out[j] += a * x[j] as f64;
+        j += 1;
+    }
+}
+
+/// Shape contract shared by both GEMM tile flavors (scalar and SIMD):
+/// four equal-length A rows, a row-major `kb × jb` panel, and an output
+/// slab holding four `jb`-long rows at stride `ldo`. Real (release-mode)
+/// asserts — the microkernels index the panel as `panel[p·jb + j]` with
+/// unchecked loads, so a misshapen panel must fail loudly, never be
+/// misread (see the [`PackedPanels`](super::matrix::PackedPanels)
+/// contract).
+fn check_gemm_tile<T>(arows: &[&[T]; 4], panel: &[T], jb: usize, out_len: usize, ldo: usize) {
+    let kb = arows[0].len();
+    assert!(
+        arows.iter().all(|r| r.len() == kb),
+        "gemm tile: ragged A rows (expected 4 rows of {kb})"
+    );
+    assert_eq!(
+        panel.len(),
+        kb * jb,
+        "gemm tile: panel len {} != kb*jb = {}*{}",
+        panel.len(),
+        kb,
+        jb
+    );
+    assert!(jb <= ldo, "gemm tile: jb {jb} exceeds output stride {ldo}");
+    assert!(
+        out_len >= 3 * ldo + jb,
+        "gemm tile: out slab len {out_len} too short for 4 rows at stride {ldo} width {jb}"
+    );
+}
+
+/// Shape contract of the 1-row GEMM kernels: `panel` is `kb × jb`
+/// row-major, `out` exactly `jb` long.
+fn check_gemm_row<T>(arow: &[T], panel: &[T], jb: usize, out_len: usize) {
+    assert_eq!(
+        panel.len(),
+        arow.len() * jb,
+        "gemm row: panel len {} != kb*jb = {}*{}",
+        panel.len(),
+        arow.len(),
+        jb
+    );
+    assert_eq!(out_len, jb, "gemm row: out len {out_len} != jb {jb}");
+}
+
+/// 4-row GEMM tile, scalar: `out[r·ldo + j] += Σ_p arows[r][p] ·
+/// panel[p·jb + j]` — the pre-SIMD row-at-a-time AXPY loop over four rows.
+pub fn gemm_tile_f64_scalar(
+    arows: [&[f64]; 4],
+    panel: &[f64],
+    jb: usize,
+    out: &mut [f64],
+    ldo: usize,
+) {
+    check_gemm_tile(&arows, panel, jb, out.len(), ldo);
+    for (r, arow) in arows.iter().enumerate() {
+        let orow = &mut out[r * ldo..r * ldo + jb];
+        for (p, &a) in arow.iter().enumerate() {
+            axpy_f64_scalar(a, &panel[p * jb..(p + 1) * jb], orow);
+        }
+    }
+}
+
+/// 1-row GEMM tile, scalar (tail rows of a row block).
+pub fn gemm_row_f64_scalar(arow: &[f64], panel: &[f64], jb: usize, out: &mut [f64]) {
+    check_gemm_row(arow, panel, jb, out.len());
+    for (p, &a) in arow.iter().enumerate() {
+        axpy_f64_scalar(a, &panel[p * jb..(p + 1) * jb], out);
+    }
+}
+
+/// 4-row accumulate-widen GEMM tile, scalar: f32 operands, f64
+/// accumulators (the pre-SIMD widen AXPY loop over four rows).
+pub fn gemm_tile_widen_scalar(
+    arows: [&[f32]; 4],
+    panel: &[f32],
+    jb: usize,
+    out: &mut [f64],
+    ldo: usize,
+) {
+    check_gemm_tile(&arows, panel, jb, out.len(), ldo);
+    for (r, arow) in arows.iter().enumerate() {
+        let orow = &mut out[r * ldo..r * ldo + jb];
+        for (p, &a) in arow.iter().enumerate() {
+            axpy_widen_scalar(a, &panel[p * jb..(p + 1) * jb], orow);
+        }
+    }
+}
+
+/// 1-row accumulate-widen GEMM tile, scalar.
+pub fn gemm_row_widen_scalar(arow: &[f32], panel: &[f32], jb: usize, out: &mut [f64]) {
+    check_gemm_row(arow, panel, jb, out.len());
+    for (p, &a) in arow.iter().enumerate() {
+        axpy_widen_scalar(a, &panel[p * jb..(p + 1) * jb], out);
+    }
+}
+
+/// Rank-4 Gram row update, scalar: `grow[b] += x₀·r₀[b] + x₁·r₁[b] +
+/// x₂·r₂[b] + x₃·r₃[b]` with the sum associated left-to-right — the
+/// pre-SIMD 4-row Gram microkernel body, one G row segment per call.
+pub fn gram4_f64_scalar(x: [f64; 4], rs: [&[f64]; 4], grow: &mut [f64]) {
+    let n = grow.len();
+    assert!(
+        rs.iter().all(|r| r.len() == n),
+        "gram4: row segments must match the output segment length {n}"
+    );
+    for b in 0..n {
+        grow[b] += x[0] * rs[0][b] + x[1] * rs[1][b] + x[2] * rs[2][b] + x[3] * rs[3][b];
+    }
+}
+
+/// Rank-4 accumulate-widen Gram row update, scalar: f32 rows widened at
+/// the multiply, f64 accumulation, same left-to-right association as
+/// [`gram4_f64_scalar`].
+pub fn gram4_widen_scalar(x: [f32; 4], rs: [&[f32]; 4], grow: &mut [f64]) {
+    let n = grow.len();
+    assert!(
+        rs.iter().all(|r| r.len() == n),
+        "gram4_widen: row segments must match the output segment length {n}"
+    );
+    let (x0, x1, x2, x3) = (x[0] as f64, x[1] as f64, x[2] as f64, x[3] as f64);
+    for b in 0..n {
+        grow[b] += x0 * rs[0][b] as f64
+            + x1 * rs[1][b] as f64
+            + x2 * rs[2][b] as f64
+            + x3 * rs[3][b] as f64;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernels. Every body mirrors its scalar twin's per-element operation
+// sequence exactly (see the module docs); `$madd` is either separate
+// mul+add (exact) or vfmadd (relaxed). Remainder lanes run the scalar
+// expression inline.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// acc ← acc + a·b, separate mul + add (two IEEE roundings — the exact
+    /// mode's lane operation).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn madd_exact(a: __m256d, b: __m256d, acc: __m256d) -> __m256d {
+        _mm256_add_pd(acc, _mm256_mul_pd(a, b))
+    }
+
+    /// acc ← fma(a, b, acc), one rounding (the Relaxed mode's lane
+    /// operation).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn madd_fused(a: __m256d, b: __m256d, acc: __m256d) -> __m256d {
+        _mm256_fmadd_pd(a, b, acc)
+    }
+
+    macro_rules! axpy_like_body {
+        ($a:ident, $x:ident, $out:ident, $combine:ident, $scalar_op:tt) => {{
+            let n = $out.len();
+            let av = _mm256_set1_pd($a);
+            let xp = $x.as_ptr();
+            let op = $out.as_mut_ptr();
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let xv = _mm256_loadu_pd(xp.add(j));
+                let ov = _mm256_loadu_pd(op.add(j));
+                _mm256_storeu_pd(op.add(j), $combine(ov, _mm256_mul_pd(av, xv)));
+                j += 4;
+            }
+            while j < n {
+                *op.add(j) = *op.add(j) $scalar_op $a * *xp.add(j);
+                j += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_f64(a: f64, x: &[f64], out: &mut [f64]) {
+        axpy_like_body!(a, x, out, _mm256_add_pd, +)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_sub_f64(a: f64, x: &[f64], out: &mut [f64]) {
+        axpy_like_body!(a, x, out, _mm256_sub_pd, -)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_wx(a: f64, x: &[f32], out: &mut [f64]) {
+        let n = out.len();
+        let av = _mm256_set1_pd(a);
+        let xp = x.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let xv = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(j)));
+            let ov = _mm256_loadu_pd(op.add(j));
+            _mm256_storeu_pd(op.add(j), _mm256_add_pd(ov, _mm256_mul_pd(av, xv)));
+            j += 4;
+        }
+        while j < n {
+            *op.add(j) += a * *xp.add(j) as f64;
+            j += 1;
+        }
+    }
+
+    // 4×jb register-tiled GEMM: the 4×8 C tile lives in 8 ymm accumulators
+    // across the whole p loop (loaded from C once, stored once), B panel
+    // rows consumed lane-contiguously. Per C element the accumulation
+    // order over p is ascending — identical to the scalar AXPY loop.
+    macro_rules! gemm_tile_f64_body {
+        ($arows:ident, $panel:ident, $jb:ident, $out:ident, $ldo:ident, $madd:ident) => {{
+            let kb = $arows[0].len();
+            let pp = $panel.as_ptr();
+            let op = $out.as_mut_ptr();
+            let mut j = 0usize;
+            while j + 8 <= $jb {
+                let mut c00 = _mm256_loadu_pd(op.add(j));
+                let mut c01 = _mm256_loadu_pd(op.add(j + 4));
+                let mut c10 = _mm256_loadu_pd(op.add($ldo + j));
+                let mut c11 = _mm256_loadu_pd(op.add($ldo + j + 4));
+                let mut c20 = _mm256_loadu_pd(op.add(2 * $ldo + j));
+                let mut c21 = _mm256_loadu_pd(op.add(2 * $ldo + j + 4));
+                let mut c30 = _mm256_loadu_pd(op.add(3 * $ldo + j));
+                let mut c31 = _mm256_loadu_pd(op.add(3 * $ldo + j + 4));
+                for p in 0..kb {
+                    let b0 = _mm256_loadu_pd(pp.add(p * $jb + j));
+                    let b1 = _mm256_loadu_pd(pp.add(p * $jb + j + 4));
+                    let a0 = _mm256_set1_pd(*$arows[0].get_unchecked(p));
+                    c00 = $madd(a0, b0, c00);
+                    c01 = $madd(a0, b1, c01);
+                    let a1 = _mm256_set1_pd(*$arows[1].get_unchecked(p));
+                    c10 = $madd(a1, b0, c10);
+                    c11 = $madd(a1, b1, c11);
+                    let a2 = _mm256_set1_pd(*$arows[2].get_unchecked(p));
+                    c20 = $madd(a2, b0, c20);
+                    c21 = $madd(a2, b1, c21);
+                    let a3 = _mm256_set1_pd(*$arows[3].get_unchecked(p));
+                    c30 = $madd(a3, b0, c30);
+                    c31 = $madd(a3, b1, c31);
+                }
+                _mm256_storeu_pd(op.add(j), c00);
+                _mm256_storeu_pd(op.add(j + 4), c01);
+                _mm256_storeu_pd(op.add($ldo + j), c10);
+                _mm256_storeu_pd(op.add($ldo + j + 4), c11);
+                _mm256_storeu_pd(op.add(2 * $ldo + j), c20);
+                _mm256_storeu_pd(op.add(2 * $ldo + j + 4), c21);
+                _mm256_storeu_pd(op.add(3 * $ldo + j), c30);
+                _mm256_storeu_pd(op.add(3 * $ldo + j + 4), c31);
+                j += 8;
+            }
+            while j + 4 <= $jb {
+                let mut c0 = _mm256_loadu_pd(op.add(j));
+                let mut c1 = _mm256_loadu_pd(op.add($ldo + j));
+                let mut c2 = _mm256_loadu_pd(op.add(2 * $ldo + j));
+                let mut c3 = _mm256_loadu_pd(op.add(3 * $ldo + j));
+                for p in 0..kb {
+                    let b0 = _mm256_loadu_pd(pp.add(p * $jb + j));
+                    c0 = $madd(_mm256_set1_pd(*$arows[0].get_unchecked(p)), b0, c0);
+                    c1 = $madd(_mm256_set1_pd(*$arows[1].get_unchecked(p)), b0, c1);
+                    c2 = $madd(_mm256_set1_pd(*$arows[2].get_unchecked(p)), b0, c2);
+                    c3 = $madd(_mm256_set1_pd(*$arows[3].get_unchecked(p)), b0, c3);
+                }
+                _mm256_storeu_pd(op.add(j), c0);
+                _mm256_storeu_pd(op.add($ldo + j), c1);
+                _mm256_storeu_pd(op.add(2 * $ldo + j), c2);
+                _mm256_storeu_pd(op.add(3 * $ldo + j), c3);
+                j += 4;
+            }
+            while j < $jb {
+                let mut r = 0usize;
+                while r < 4 {
+                    let ar = $arows[r];
+                    let mut c = *op.add(r * $ldo + j);
+                    for p in 0..kb {
+                        c += *ar.get_unchecked(p) * *pp.add(p * $jb + j);
+                    }
+                    *op.add(r * $ldo + j) = c;
+                    r += 1;
+                }
+                j += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_tile_f64(
+        arows: [&[f64]; 4],
+        panel: &[f64],
+        jb: usize,
+        out: &mut [f64],
+        ldo: usize,
+    ) {
+        gemm_tile_f64_body!(arows, panel, jb, out, ldo, madd_exact)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn gemm_tile_f64_fma(
+        arows: [&[f64]; 4],
+        panel: &[f64],
+        jb: usize,
+        out: &mut [f64],
+        ldo: usize,
+    ) {
+        gemm_tile_f64_body!(arows, panel, jb, out, ldo, madd_fused)
+    }
+
+    // widen twin: f32 A entries broadcast as f64, f32 B lanes converted
+    // 4-at-a-time (exact) before the f64 madd.
+    macro_rules! gemm_tile_widen_body {
+        ($arows:ident, $panel:ident, $jb:ident, $out:ident, $ldo:ident, $madd:ident) => {{
+            let kb = $arows[0].len();
+            let pp = $panel.as_ptr();
+            let op = $out.as_mut_ptr();
+            let mut j = 0usize;
+            while j + 8 <= $jb {
+                let mut c00 = _mm256_loadu_pd(op.add(j));
+                let mut c01 = _mm256_loadu_pd(op.add(j + 4));
+                let mut c10 = _mm256_loadu_pd(op.add($ldo + j));
+                let mut c11 = _mm256_loadu_pd(op.add($ldo + j + 4));
+                let mut c20 = _mm256_loadu_pd(op.add(2 * $ldo + j));
+                let mut c21 = _mm256_loadu_pd(op.add(2 * $ldo + j + 4));
+                let mut c30 = _mm256_loadu_pd(op.add(3 * $ldo + j));
+                let mut c31 = _mm256_loadu_pd(op.add(3 * $ldo + j + 4));
+                for p in 0..kb {
+                    let b0 = _mm256_cvtps_pd(_mm_loadu_ps(pp.add(p * $jb + j)));
+                    let b1 = _mm256_cvtps_pd(_mm_loadu_ps(pp.add(p * $jb + j + 4)));
+                    let a0 = _mm256_set1_pd(*$arows[0].get_unchecked(p) as f64);
+                    c00 = $madd(a0, b0, c00);
+                    c01 = $madd(a0, b1, c01);
+                    let a1 = _mm256_set1_pd(*$arows[1].get_unchecked(p) as f64);
+                    c10 = $madd(a1, b0, c10);
+                    c11 = $madd(a1, b1, c11);
+                    let a2 = _mm256_set1_pd(*$arows[2].get_unchecked(p) as f64);
+                    c20 = $madd(a2, b0, c20);
+                    c21 = $madd(a2, b1, c21);
+                    let a3 = _mm256_set1_pd(*$arows[3].get_unchecked(p) as f64);
+                    c30 = $madd(a3, b0, c30);
+                    c31 = $madd(a3, b1, c31);
+                }
+                _mm256_storeu_pd(op.add(j), c00);
+                _mm256_storeu_pd(op.add(j + 4), c01);
+                _mm256_storeu_pd(op.add($ldo + j), c10);
+                _mm256_storeu_pd(op.add($ldo + j + 4), c11);
+                _mm256_storeu_pd(op.add(2 * $ldo + j), c20);
+                _mm256_storeu_pd(op.add(2 * $ldo + j + 4), c21);
+                _mm256_storeu_pd(op.add(3 * $ldo + j), c30);
+                _mm256_storeu_pd(op.add(3 * $ldo + j + 4), c31);
+                j += 8;
+            }
+            while j + 4 <= $jb {
+                let mut c0 = _mm256_loadu_pd(op.add(j));
+                let mut c1 = _mm256_loadu_pd(op.add($ldo + j));
+                let mut c2 = _mm256_loadu_pd(op.add(2 * $ldo + j));
+                let mut c3 = _mm256_loadu_pd(op.add(3 * $ldo + j));
+                for p in 0..kb {
+                    let b0 = _mm256_cvtps_pd(_mm_loadu_ps(pp.add(p * $jb + j)));
+                    c0 = $madd(_mm256_set1_pd(*$arows[0].get_unchecked(p) as f64), b0, c0);
+                    c1 = $madd(_mm256_set1_pd(*$arows[1].get_unchecked(p) as f64), b0, c1);
+                    c2 = $madd(_mm256_set1_pd(*$arows[2].get_unchecked(p) as f64), b0, c2);
+                    c3 = $madd(_mm256_set1_pd(*$arows[3].get_unchecked(p) as f64), b0, c3);
+                }
+                _mm256_storeu_pd(op.add(j), c0);
+                _mm256_storeu_pd(op.add($ldo + j), c1);
+                _mm256_storeu_pd(op.add(2 * $ldo + j), c2);
+                _mm256_storeu_pd(op.add(3 * $ldo + j), c3);
+                j += 4;
+            }
+            while j < $jb {
+                let mut r = 0usize;
+                while r < 4 {
+                    let ar = $arows[r];
+                    let mut c = *op.add(r * $ldo + j);
+                    for p in 0..kb {
+                        c += *ar.get_unchecked(p) as f64 * *pp.add(p * $jb + j) as f64;
+                    }
+                    *op.add(r * $ldo + j) = c;
+                    r += 1;
+                }
+                j += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_tile_widen(
+        arows: [&[f32]; 4],
+        panel: &[f32],
+        jb: usize,
+        out: &mut [f64],
+        ldo: usize,
+    ) {
+        gemm_tile_widen_body!(arows, panel, jb, out, ldo, madd_exact)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn gemm_tile_widen_fma(
+        arows: [&[f32]; 4],
+        panel: &[f32],
+        jb: usize,
+        out: &mut [f64],
+        ldo: usize,
+    ) {
+        gemm_tile_widen_body!(arows, panel, jb, out, ldo, madd_fused)
+    }
+
+    macro_rules! gemm_row_f64_body {
+        ($arow:ident, $panel:ident, $jb:ident, $out:ident, $madd:ident) => {{
+            let kb = $arow.len();
+            let pp = $panel.as_ptr();
+            let op = $out.as_mut_ptr();
+            let mut j = 0usize;
+            while j + 8 <= $jb {
+                let mut c0 = _mm256_loadu_pd(op.add(j));
+                let mut c1 = _mm256_loadu_pd(op.add(j + 4));
+                for p in 0..kb {
+                    let av = _mm256_set1_pd(*$arow.get_unchecked(p));
+                    c0 = $madd(av, _mm256_loadu_pd(pp.add(p * $jb + j)), c0);
+                    c1 = $madd(av, _mm256_loadu_pd(pp.add(p * $jb + j + 4)), c1);
+                }
+                _mm256_storeu_pd(op.add(j), c0);
+                _mm256_storeu_pd(op.add(j + 4), c1);
+                j += 8;
+            }
+            while j + 4 <= $jb {
+                let mut c0 = _mm256_loadu_pd(op.add(j));
+                for p in 0..kb {
+                    let av = _mm256_set1_pd(*$arow.get_unchecked(p));
+                    c0 = $madd(av, _mm256_loadu_pd(pp.add(p * $jb + j)), c0);
+                }
+                _mm256_storeu_pd(op.add(j), c0);
+                j += 4;
+            }
+            while j < $jb {
+                let mut c = *op.add(j);
+                for p in 0..kb {
+                    c += *$arow.get_unchecked(p) * *pp.add(p * $jb + j);
+                }
+                *op.add(j) = c;
+                j += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_row_f64(arow: &[f64], panel: &[f64], jb: usize, out: &mut [f64]) {
+        gemm_row_f64_body!(arow, panel, jb, out, madd_exact)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn gemm_row_f64_fma(arow: &[f64], panel: &[f64], jb: usize, out: &mut [f64]) {
+        gemm_row_f64_body!(arow, panel, jb, out, madd_fused)
+    }
+
+    macro_rules! gemm_row_widen_body {
+        ($arow:ident, $panel:ident, $jb:ident, $out:ident, $madd:ident) => {{
+            let kb = $arow.len();
+            let pp = $panel.as_ptr();
+            let op = $out.as_mut_ptr();
+            let mut j = 0usize;
+            while j + 8 <= $jb {
+                let mut c0 = _mm256_loadu_pd(op.add(j));
+                let mut c1 = _mm256_loadu_pd(op.add(j + 4));
+                for p in 0..kb {
+                    let av = _mm256_set1_pd(*$arow.get_unchecked(p) as f64);
+                    c0 = $madd(av, _mm256_cvtps_pd(_mm_loadu_ps(pp.add(p * $jb + j))), c0);
+                    c1 = $madd(av, _mm256_cvtps_pd(_mm_loadu_ps(pp.add(p * $jb + j + 4))), c1);
+                }
+                _mm256_storeu_pd(op.add(j), c0);
+                _mm256_storeu_pd(op.add(j + 4), c1);
+                j += 8;
+            }
+            while j + 4 <= $jb {
+                let mut c0 = _mm256_loadu_pd(op.add(j));
+                for p in 0..kb {
+                    let av = _mm256_set1_pd(*$arow.get_unchecked(p) as f64);
+                    c0 = $madd(av, _mm256_cvtps_pd(_mm_loadu_ps(pp.add(p * $jb + j))), c0);
+                }
+                _mm256_storeu_pd(op.add(j), c0);
+                j += 4;
+            }
+            while j < $jb {
+                let mut c = *op.add(j);
+                for p in 0..kb {
+                    c += *$arow.get_unchecked(p) as f64 * *pp.add(p * $jb + j) as f64;
+                }
+                *op.add(j) = c;
+                j += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_row_widen(arow: &[f32], panel: &[f32], jb: usize, out: &mut [f64]) {
+        gemm_row_widen_body!(arow, panel, jb, out, madd_exact)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn gemm_row_widen_fma(
+        arow: &[f32],
+        panel: &[f32],
+        jb: usize,
+        out: &mut [f64],
+    ) {
+        gemm_row_widen_body!(arow, panel, jb, out, madd_fused)
+    }
+
+    // rank-4 Gram row update: per output element the term sum keeps the
+    // scalar's left-to-right association (m0, then +m1, +m2, +m3), then one
+    // add into G — identical expression tree per lane.
+    macro_rules! gram4_f64_body {
+        ($x:ident, $rs:ident, $grow:ident, $madd:ident) => {{
+            let n = $grow.len();
+            let x0 = _mm256_set1_pd($x[0]);
+            let x1 = _mm256_set1_pd($x[1]);
+            let x2 = _mm256_set1_pd($x[2]);
+            let x3 = _mm256_set1_pd($x[3]);
+            let (r0, r1, r2, r3) =
+                ($rs[0].as_ptr(), $rs[1].as_ptr(), $rs[2].as_ptr(), $rs[3].as_ptr());
+            let gp = $grow.as_mut_ptr();
+            let mut b = 0usize;
+            while b + 4 <= n {
+                let mut t = _mm256_mul_pd(x0, _mm256_loadu_pd(r0.add(b)));
+                t = $madd(x1, _mm256_loadu_pd(r1.add(b)), t);
+                t = $madd(x2, _mm256_loadu_pd(r2.add(b)), t);
+                t = $madd(x3, _mm256_loadu_pd(r3.add(b)), t);
+                _mm256_storeu_pd(gp.add(b), _mm256_add_pd(_mm256_loadu_pd(gp.add(b)), t));
+                b += 4;
+            }
+            while b < n {
+                *gp.add(b) += $x[0] * *r0.add(b)
+                    + $x[1] * *r1.add(b)
+                    + $x[2] * *r2.add(b)
+                    + $x[3] * *r3.add(b);
+                b += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gram4_f64(x: [f64; 4], rs: [&[f64]; 4], grow: &mut [f64]) {
+        gram4_f64_body!(x, rs, grow, madd_exact)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn gram4_f64_fma(x: [f64; 4], rs: [&[f64]; 4], grow: &mut [f64]) {
+        gram4_f64_body!(x, rs, grow, madd_fused)
+    }
+
+    macro_rules! gram4_widen_body {
+        ($x:ident, $rs:ident, $grow:ident, $madd:ident) => {{
+            let n = $grow.len();
+            let (x0s, x1s, x2s, x3s) =
+                ($x[0] as f64, $x[1] as f64, $x[2] as f64, $x[3] as f64);
+            let x0 = _mm256_set1_pd(x0s);
+            let x1 = _mm256_set1_pd(x1s);
+            let x2 = _mm256_set1_pd(x2s);
+            let x3 = _mm256_set1_pd(x3s);
+            let (r0, r1, r2, r3) =
+                ($rs[0].as_ptr(), $rs[1].as_ptr(), $rs[2].as_ptr(), $rs[3].as_ptr());
+            let gp = $grow.as_mut_ptr();
+            let mut b = 0usize;
+            while b + 4 <= n {
+                let mut t = _mm256_mul_pd(x0, _mm256_cvtps_pd(_mm_loadu_ps(r0.add(b))));
+                t = $madd(x1, _mm256_cvtps_pd(_mm_loadu_ps(r1.add(b))), t);
+                t = $madd(x2, _mm256_cvtps_pd(_mm_loadu_ps(r2.add(b))), t);
+                t = $madd(x3, _mm256_cvtps_pd(_mm_loadu_ps(r3.add(b))), t);
+                _mm256_storeu_pd(gp.add(b), _mm256_add_pd(_mm256_loadu_pd(gp.add(b)), t));
+                b += 4;
+            }
+            while b < n {
+                *gp.add(b) += x0s * *r0.add(b) as f64
+                    + x1s * *r1.add(b) as f64
+                    + x2s * *r2.add(b) as f64
+                    + x3s * *r3.add(b) as f64;
+                b += 1;
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gram4_widen(x: [f32; 4], rs: [&[f32]; 4], grow: &mut [f64]) {
+        gram4_widen_body!(x, rs, grow, madd_exact)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn gram4_widen_fma(x: [f32; 4], rs: [&[f32]; 4], grow: &mut [f64]) {
+        gram4_widen_body!(x, rs, grow, madd_fused)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// `out[j] += a · x[j]` — dispatched (always exact; equal lengths
+/// asserted). Bit-identical to [`axpy_f64_scalar`] on every ISA path.
+pub fn axpy_f64(a: f64, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), out.len(), "axpy_f64: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        return unsafe { avx2::axpy_f64(a, x, out) };
+    }
+    axpy_f64_scalar(a, x, out);
+}
+
+/// `out[j] -= a · x[j]` — dispatched (always exact). Bit-identical to
+/// [`axpy_sub_f64_scalar`] on every ISA path.
+pub fn axpy_sub_f64(a: f64, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), out.len(), "axpy_sub_f64: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        return unsafe { avx2::axpy_sub_f64(a, x, out) };
+    }
+    axpy_sub_f64_scalar(a, x, out);
+}
+
+/// `out[j] += a · x[j]`, f32 operands widened at the multiply — dispatched
+/// (always exact). Bit-identical to [`axpy_widen_scalar`]; delegates to
+/// [`axpy_wx`] with the coefficient pre-widened (an exact conversion).
+pub fn axpy_widen(a: f32, x: &[f32], out: &mut [f64]) {
+    axpy_wx(a as f64, x, out);
+}
+
+/// `out[j] += a · (x[j] as f64)`, f64 coefficient × f32 vector —
+/// dispatched (always exact). Bit-identical to [`axpy_wx_scalar`].
+pub fn axpy_wx(a: f64, x: &[f32], out: &mut [f64]) {
+    assert_eq!(x.len(), out.len(), "axpy_wx: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        return unsafe { avx2::axpy_wx(a, x, out) };
+    }
+    axpy_wx_scalar(a, x, out);
+}
+
+/// 4-row register-tiled GEMM microkernel, dispatched: `out[r·ldo + j] +=
+/// Σ_p arows[r][p] · panel[p·jb + j]` for `r ∈ 0..4`, `j ∈ 0..jb`, over a
+/// row-major `kb × jb` [`PackedPanels`](super::matrix::PackedPanels)
+/// panel. Under [`FmaMode::Exact`] bit-identical to
+/// [`gemm_tile_f64_scalar`]; under [`FmaMode::Relaxed`] within the module
+/// envelope (and still worker-invariant).
+pub fn gemm_tile_f64(
+    arows: [&[f64]; 4],
+    panel: &[f64],
+    jb: usize,
+    out: &mut [f64],
+    ldo: usize,
+    fma: FmaMode,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        check_gemm_tile(&arows, panel, jb, out.len(), ldo);
+        if use_fma(fma) {
+            return unsafe { avx2::gemm_tile_f64_fma(arows, panel, jb, out, ldo) };
+        }
+        return unsafe { avx2::gemm_tile_f64(arows, panel, jb, out, ldo) };
+    }
+    let _ = fma;
+    gemm_tile_f64_scalar(arows, panel, jb, out, ldo);
+}
+
+/// 1-row GEMM microkernel, dispatched (the ≤3 tail rows of a row block).
+/// Same contract as [`gemm_tile_f64`] with `out` exactly `jb` long.
+pub fn gemm_row_f64(arow: &[f64], panel: &[f64], jb: usize, out: &mut [f64], fma: FmaMode) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        check_gemm_row(arow, panel, jb, out.len());
+        if use_fma(fma) {
+            return unsafe { avx2::gemm_row_f64_fma(arow, panel, jb, out) };
+        }
+        return unsafe { avx2::gemm_row_f64(arow, panel, jb, out) };
+    }
+    let _ = fma;
+    gemm_row_f64_scalar(arow, panel, jb, out);
+}
+
+/// 4-row accumulate-widen GEMM microkernel, dispatched: f32 operands
+/// (8-lane wire), f64 accumulators. Under [`FmaMode::Exact`] bit-identical
+/// to [`gemm_tile_widen_scalar`] — and therefore, on f32-born operands, to
+/// the f64 kernels on the widened operands.
+pub fn gemm_tile_widen(
+    arows: [&[f32]; 4],
+    panel: &[f32],
+    jb: usize,
+    out: &mut [f64],
+    ldo: usize,
+    fma: FmaMode,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        check_gemm_tile(&arows, panel, jb, out.len(), ldo);
+        if use_fma(fma) {
+            return unsafe { avx2::gemm_tile_widen_fma(arows, panel, jb, out, ldo) };
+        }
+        return unsafe { avx2::gemm_tile_widen(arows, panel, jb, out, ldo) };
+    }
+    let _ = fma;
+    gemm_tile_widen_scalar(arows, panel, jb, out, ldo);
+}
+
+/// 1-row accumulate-widen GEMM microkernel, dispatched.
+pub fn gemm_row_widen(arow: &[f32], panel: &[f32], jb: usize, out: &mut [f64], fma: FmaMode) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        check_gemm_row(arow, panel, jb, out.len());
+        if use_fma(fma) {
+            return unsafe { avx2::gemm_row_widen_fma(arow, panel, jb, out) };
+        }
+        return unsafe { avx2::gemm_row_widen(arow, panel, jb, out) };
+    }
+    let _ = fma;
+    gemm_row_widen_scalar(arow, panel, jb, out);
+}
+
+/// Rank-4 Gram row update, dispatched: `grow[b] += x₀·rs₀[b] + x₁·rs₁[b] +
+/// x₂·rs₂[b] + x₃·rs₃[b]` with the scalar's left-to-right term
+/// association in every lane. Under [`FmaMode::Exact`] bit-identical to
+/// [`gram4_f64_scalar`].
+pub fn gram4_f64(x: [f64; 4], rs: [&[f64]; 4], grow: &mut [f64], fma: FmaMode) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        let n = grow.len();
+        assert!(
+            rs.iter().all(|r| r.len() == n),
+            "gram4_f64: row segments must match the output segment length {n}"
+        );
+        if use_fma(fma) {
+            return unsafe { avx2::gram4_f64_fma(x, rs, grow) };
+        }
+        return unsafe { avx2::gram4_f64(x, rs, grow) };
+    }
+    let _ = fma;
+    gram4_f64_scalar(x, rs, grow);
+}
+
+/// Rank-4 accumulate-widen Gram row update, dispatched (f32 rows, f64
+/// accumulation). Under [`FmaMode::Exact`] bit-identical to
+/// [`gram4_widen_scalar`].
+pub fn gram4_widen(x: [f32; 4], rs: [&[f32]; 4], grow: &mut [f64], fma: FmaMode) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == IsaPath::Avx2 {
+        let n = grow.len();
+        assert!(
+            rs.iter().all(|r| r.len() == n),
+            "gram4_widen: row segments must match the output segment length {n}"
+        );
+        if use_fma(fma) {
+            return unsafe { avx2::gram4_widen_fma(x, rs, grow) };
+        }
+        return unsafe { avx2::gram4_widen(x, rs, grow) };
+    }
+    let _ = fma;
+    gram4_widen_scalar(x, rs, grow);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn randv32(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn isa_detection_is_cached_and_consistent() {
+        let first = active_isa();
+        assert_eq!(first, active_isa());
+        match first {
+            IsaPath::Scalar => assert_eq!(isa_name(), "scalar"),
+            IsaPath::Avx2 => assert_eq!(isa_name(), "avx2"),
+        }
+        if fma_available() {
+            assert_eq!(first, IsaPath::Avx2, "FMA requires the AVX2 path");
+        }
+    }
+
+    #[test]
+    fn dispatched_axpys_match_scalar_every_tail() {
+        for n in 0..=17 {
+            let x = randv(n, 10 + n as u64);
+            let x32 = randv32(n, 20 + n as u64);
+            let base = randv(n, 30 + n as u64);
+
+            let (mut d, mut s) = (base.clone(), base.clone());
+            axpy_f64(0.37, &x, &mut d);
+            axpy_f64_scalar(0.37, &x, &mut s);
+            assert!(bits_eq(&d, &s), "axpy_f64 n={n}");
+
+            let (mut d, mut s) = (base.clone(), base.clone());
+            axpy_sub_f64(0.37, &x, &mut d);
+            axpy_sub_f64_scalar(0.37, &x, &mut s);
+            assert!(bits_eq(&d, &s), "axpy_sub_f64 n={n}");
+
+            let (mut d, mut s) = (base.clone(), base.clone());
+            axpy_widen(0.37, &x32, &mut d);
+            axpy_widen_scalar(0.37, &x32, &mut s);
+            assert!(bits_eq(&d, &s), "axpy_widen n={n}");
+
+            let (mut d, mut s) = (base.clone(), base);
+            axpy_wx(0.37, &x32, &mut d);
+            axpy_wx_scalar(0.37, &x32, &mut s);
+            assert!(bits_eq(&d, &s), "axpy_wx n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_tile_dispatch_matches_scalar_every_tail() {
+        for jb in 1..=17usize {
+            for &kb in &[1usize, 5, 64] {
+                let ldo = jb + 3; // deliberately strided output
+                let a: Vec<Vec<f64>> =
+                    (0..4).map(|r| randv(kb, (jb * 10 + kb + r) as u64)).collect();
+                let panel = randv(kb * jb, (jb * 100 + kb) as u64);
+                let base = randv(3 * ldo + jb, (jb + kb) as u64);
+                let (mut d, mut s) = (base.clone(), base);
+                gemm_tile_f64(
+                    [&a[0], &a[1], &a[2], &a[3]],
+                    &panel,
+                    jb,
+                    &mut d,
+                    ldo,
+                    FmaMode::Exact,
+                );
+                gemm_tile_f64_scalar([&a[0], &a[1], &a[2], &a[3]], &panel, jb, &mut s, ldo);
+                assert!(bits_eq(&d, &s), "gemm_tile_f64 jb={jb} kb={kb}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram4_dispatch_matches_scalar_every_tail() {
+        for n in 1..=17usize {
+            let rows: Vec<Vec<f64>> = (0..4).map(|r| randv(n, (n + r) as u64)).collect();
+            let x = [0.3, -1.2, 0.07, 2.5];
+            let base = randv(n, 99 + n as u64);
+            let (mut d, mut s) = (base.clone(), base);
+            gram4_f64(x, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut d, FmaMode::Exact);
+            gram4_f64_scalar(x, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut s);
+            assert!(bits_eq(&d, &s), "gram4_f64 n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "panel len")]
+    fn misshapen_panel_rejected_in_release() {
+        let a = [1.0f64, 2.0];
+        let panel = vec![0.0f64; 5]; // kb*jb would be 2*3 = 6
+        let mut out = vec![0.0f64; 3];
+        gemm_row_f64(&a, &panel, 3, &mut out, FmaMode::Exact);
+    }
+}

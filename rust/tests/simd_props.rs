@@ -1,0 +1,389 @@
+//! SIMD-vs-scalar bit-identity property suite (ISSUE 5).
+//!
+//! The `linalg::simd` microkernels dispatch to AVX2 at runtime; this
+//! suite pins the contract that dispatch **never moves a bit**: every
+//! dispatched kernel is compared against its public `*_scalar` twin (the
+//! exact code the fallback path runs) across remainder-lane sweeps
+//! (`n % 8 ∈ 0..8`), degenerate shapes (0×n, 1×1, tall-skinny), NaN/inf
+//! propagation, both precisions, and 1/2/4/8 workers — plus the
+//! `FmaMode::Relaxed` envelope. On a non-AVX2 host the comparisons are
+//! trivially equal (dispatch == scalar), so the suite is green on every
+//! ISA; on an AVX2 host it is the cross-ISA reproducibility proof.
+
+use opt_pr_elm::linalg::{simd, FmaMode, Matrix, MatrixF32, ParallelPolicy};
+use opt_pr_elm::util::rng::Rng;
+
+fn randv(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn randv32(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::random(rows, cols, &mut rng)
+}
+
+fn random_f32(rows: usize, cols: usize, seed: u64) -> MatrixF32 {
+    MatrixF32::from_vec(rows, cols, randv32(rows * cols, seed))
+}
+
+/// Bit-level slice equality — NaN-safe (comparing payload bits, which
+/// `==` on floats is not).
+fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: bit mismatch at {i}: {x:e} vs {y:e}"
+        );
+    }
+}
+
+/// Unblocked ijk reference (scalar by construction) — the oracle the
+/// blocked + SIMD GEMM must reproduce bit for bit.
+fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let v = a[(i, k)];
+            for j in 0..b.cols {
+                out[(i, j)] += v * b[(k, j)];
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// kernel-level pairs: dispatched vs scalar twin, every remainder-lane count
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gemm_tile_f64_bits_match_scalar_across_tails() {
+    // jb 1..=17 covers jb % 8 ∈ 0..8 twice (8-lane, 4-lane, and scalar
+    // remainder columns); kb covers the 1, partial, and full panel depths
+    for jb in 1..=17usize {
+        for &kb in &[1usize, 5, 64] {
+            let ldo = jb + 3; // strided output slab, like a real C row
+            let a: Vec<Vec<f64>> =
+                (0..4).map(|r| randv(kb, (jb * 100 + kb * 10 + r) as u64)).collect();
+            let panel = randv(kb * jb, (jb * 7 + kb) as u64);
+            let base = randv(3 * ldo + jb, (jb * 13 + kb) as u64);
+            let (mut d, mut s) = (base.clone(), base);
+            simd::gemm_tile_f64(
+                [&a[0], &a[1], &a[2], &a[3]],
+                &panel,
+                jb,
+                &mut d,
+                ldo,
+                FmaMode::Exact,
+            );
+            simd::gemm_tile_f64_scalar([&a[0], &a[1], &a[2], &a[3]], &panel, jb, &mut s, ldo);
+            assert_bits_eq(&d, &s, &format!("gemm_tile_f64 jb={jb} kb={kb}"));
+        }
+    }
+}
+
+#[test]
+fn gemm_row_f64_bits_match_scalar_across_tails() {
+    for jb in 1..=17usize {
+        for &kb in &[1usize, 5, 64] {
+            let a = randv(kb, (jb + kb) as u64);
+            let panel = randv(kb * jb, (jb * 3 + kb) as u64);
+            let base = randv(jb, (jb * 5 + kb) as u64);
+            let (mut d, mut s) = (base.clone(), base);
+            simd::gemm_row_f64(&a, &panel, jb, &mut d, FmaMode::Exact);
+            simd::gemm_row_f64_scalar(&a, &panel, jb, &mut s);
+            assert_bits_eq(&d, &s, &format!("gemm_row_f64 jb={jb} kb={kb}"));
+        }
+    }
+}
+
+#[test]
+fn gemm_widen_kernels_bits_match_scalar_across_tails() {
+    for jb in 1..=17usize {
+        for &kb in &[1usize, 5, 64] {
+            let ldo = jb + 2;
+            let a: Vec<Vec<f32>> =
+                (0..4).map(|r| randv32(kb, (jb * 90 + kb * 9 + r) as u64)).collect();
+            let panel = randv32(kb * jb, (jb * 11 + kb) as u64);
+            let base = randv(3 * ldo + jb, (jb * 17 + kb) as u64);
+
+            let (mut d, mut s) = (base.clone(), base.clone());
+            simd::gemm_tile_widen(
+                [&a[0], &a[1], &a[2], &a[3]],
+                &panel,
+                jb,
+                &mut d,
+                ldo,
+                FmaMode::Exact,
+            );
+            simd::gemm_tile_widen_scalar([&a[0], &a[1], &a[2], &a[3]], &panel, jb, &mut s, ldo);
+            assert_bits_eq(&d, &s, &format!("gemm_tile_widen jb={jb} kb={kb}"));
+
+            let (mut d, mut s) = (base[..jb].to_vec(), base[..jb].to_vec());
+            simd::gemm_row_widen(&a[0], &panel, jb, &mut d, FmaMode::Exact);
+            simd::gemm_row_widen_scalar(&a[0], &panel, jb, &mut s);
+            assert_bits_eq(&d, &s, &format!("gemm_row_widen jb={jb} kb={kb}"));
+        }
+    }
+}
+
+#[test]
+fn gram_kernels_bits_match_scalar_across_tails() {
+    for n in 1..=17usize {
+        let rows: Vec<Vec<f64>> = (0..4).map(|r| randv(n, (n * 10 + r) as u64)).collect();
+        let rows32: Vec<Vec<f32>> = (0..4).map(|r| randv32(n, (n * 20 + r) as u64)).collect();
+        let x = [1.5, -0.25, 0.125, 3.0];
+        let x32 = [1.5f32, -0.25, 0.125, 3.0];
+        let base = randv(n, 400 + n as u64);
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::gram4_f64(x, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut d, FmaMode::Exact);
+        simd::gram4_f64_scalar(x, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut s);
+        assert_bits_eq(&d, &s, &format!("gram4_f64 n={n}"));
+
+        let (mut d, mut s) = (base.clone(), base);
+        simd::gram4_widen(
+            x32,
+            [&rows32[0], &rows32[1], &rows32[2], &rows32[3]],
+            &mut d,
+            FmaMode::Exact,
+        );
+        simd::gram4_widen_scalar(x32, [&rows32[0], &rows32[1], &rows32[2], &rows32[3]], &mut s);
+        assert_bits_eq(&d, &s, &format!("gram4_widen n={n}"));
+    }
+}
+
+#[test]
+fn axpy_family_bits_match_scalar_including_empty() {
+    for n in 0..=17usize {
+        let x = randv(n, 600 + n as u64);
+        let x32 = randv32(n, 700 + n as u64);
+        let base = randv(n, 800 + n as u64);
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::axpy_f64(-0.7, &x, &mut d);
+        simd::axpy_f64_scalar(-0.7, &x, &mut s);
+        assert_bits_eq(&d, &s, &format!("axpy_f64 n={n}"));
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::axpy_sub_f64(-0.7, &x, &mut d);
+        simd::axpy_sub_f64_scalar(-0.7, &x, &mut s);
+        assert_bits_eq(&d, &s, &format!("axpy_sub_f64 n={n}"));
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::axpy_widen(-0.7, &x32, &mut d);
+        simd::axpy_widen_scalar(-0.7, &x32, &mut s);
+        assert_bits_eq(&d, &s, &format!("axpy_widen n={n}"));
+
+        let (mut d, mut s) = (base.clone(), base);
+        simd::axpy_wx(-0.7, &x32, &mut d);
+        simd::axpy_wx_scalar(-0.7, &x32, &mut s);
+        assert_bits_eq(&d, &s, &format!("axpy_wx n={n}"));
+    }
+}
+
+#[test]
+fn kernels_propagate_nan_and_inf_identically() {
+    // 0 × ∞ → NaN must come out of the SIMD lanes exactly as it comes out
+    // of the scalar expression — same positions, same payload bits
+    for n in [3usize, 8, 11] {
+        let mut x = randv(n, 900 + n as u64);
+        x[1] = f64::INFINITY;
+        if n > 8 {
+            x[9] = f64::NEG_INFINITY;
+        }
+        let base = vec![0.0f64; n];
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::axpy_f64(0.0, &x, &mut d);
+        simd::axpy_f64_scalar(0.0, &x, &mut s);
+        assert!(d[1].is_nan(), "axpy dropped 0*inf at n={n}");
+        assert_bits_eq(&d, &s, &format!("axpy nan n={n}"));
+
+        // gram quad with an inf row and a zero coefficient
+        let rows: Vec<Vec<f64>> = (0..4)
+            .map(|r| {
+                let mut v = randv(n, (950 + n + r) as u64);
+                if r == 2 {
+                    v[0] = f64::INFINITY;
+                }
+                v
+            })
+            .collect();
+        let x4 = [1.0, 0.5, 0.0, -1.0]; // x[2] = 0 hits the inf row
+        let (mut d, mut s) = (base.clone(), base);
+        simd::gram4_f64(x4, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut d, FmaMode::Exact);
+        simd::gram4_f64_scalar(x4, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut s);
+        assert!(d[0].is_nan(), "gram4 dropped 0*inf at n={n}");
+        assert_bits_eq(&d, &s, &format!("gram4 nan n={n}"));
+    }
+
+    // widen GEMM: f32 inf through the conversion lanes
+    let a = MatrixF32::from_vec(1, 2, vec![0.0, 1.0]);
+    let b = MatrixF32::from_vec(2, 1, vec![f32::INFINITY, 2.0]);
+    let c = a.matmul_widen(&b, ParallelPolicy::sequential());
+    assert!(c[(0, 0)].is_nan(), "widen GEMM dispatch dropped 0*inf");
+}
+
+// ---------------------------------------------------------------------------
+// matrix-level: the dispatched substrate against scalar oracles and across
+// worker counts, both precisions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matmul_bit_identical_to_naive_across_remainder_sweep() {
+    // n sweeps a full 8-lane remainder cycle around the NC tile edge;
+    // m = 9 exercises one 4-row quad + 1 tail row, k spans two k-tiles
+    for n in 57..=72usize {
+        let a = random_matrix(9, 69, n as u64);
+        let b = random_matrix(69, n, 1000 + n as u64);
+        let got = a.matmul(&b);
+        let want = matmul_naive(&a, &b);
+        assert_eq!(got, want, "matmul 9x69x{n} != naive ijk");
+    }
+}
+
+#[test]
+fn matmul_degenerate_and_tall_skinny_shapes() {
+    let p = ParallelPolicy::with_workers(4);
+    // 0×n
+    let a = Matrix::zeros(0, 5);
+    let b = random_matrix(5, 3, 1);
+    assert_eq!(a.matmul(&b).rows, 0);
+    assert_eq!(a.matmul_with(&b, p), a.matmul(&b));
+    // n×0
+    let a = random_matrix(4, 6, 2);
+    let b = Matrix::zeros(6, 0);
+    assert_eq!(a.matmul(&b).cols, 0);
+    // 1×1
+    let a = Matrix::from_vec(1, 1, vec![3.0]);
+    let b = Matrix::from_vec(1, 1, vec![-0.5]);
+    assert_eq!(a.matmul(&b)[(0, 0)], -1.5);
+    // tall-skinny (the ELM H shape): SIMD GEMM == naive ijk
+    let a = random_matrix(513, 7, 3);
+    let b = random_matrix(7, 5, 4);
+    assert_eq!(a.matmul(&b), matmul_naive(&a, &b));
+    // f32 wire twins
+    let a32 = random_f32(513, 7, 5);
+    let b32 = random_f32(7, 5, 6);
+    assert_eq!(
+        a32.matmul_widen(&b32, ParallelPolicy::sequential()),
+        a32.to_f64().matmul(&b32.to_f64()),
+        "widen GEMM != widened f64 GEMM on tall-skinny"
+    );
+    let z32 = MatrixF32::zeros(0, 7);
+    assert_eq!(z32.matmul_widen(&b32, p).rows, 0);
+}
+
+#[test]
+fn dispatched_kernels_worker_invariant_both_precisions() {
+    // spans several MM_ROW_TILE tiles and a j remainder; 1/2/4/8 workers
+    let a = random_matrix(300, 70, 10);
+    let b = random_matrix(70, 66, 11);
+    let seq = a.matmul(&b);
+    let a32 = MatrixF32::from_matrix(&a);
+    let b32 = MatrixF32::from_matrix(&b);
+    let seq32 = a32.matmul_widen(&b32, ParallelPolicy::sequential());
+    let gseq = a.gram_with(ParallelPolicy::sequential());
+    let gseq32 = a32.gram_widen(ParallelPolicy::sequential());
+    for workers in [1usize, 2, 4, 8] {
+        let p = ParallelPolicy::with_workers(workers);
+        assert_eq!(a.matmul_with(&b, p), seq, "matmul workers={workers}");
+        assert_eq!(a32.matmul_widen(&b32, p), seq32, "matmul_widen workers={workers}");
+        assert_eq!(a.gram_with(p), gseq, "gram workers={workers}");
+        assert_eq!(a32.gram_widen(p), gseq32, "gram_widen workers={workers}");
+    }
+}
+
+#[test]
+fn t_matvec_dispatch_matches_scalar_fold() {
+    for rows in [1usize, 4, 37] {
+        let a = random_matrix(rows, 13, 20 + rows as u64);
+        let v = randv(rows, 30 + rows as u64);
+        // scalar oracle: the pre-SIMD row-major fold
+        let mut want = vec![0.0f64; a.cols];
+        for i in 0..rows {
+            simd::axpy_f64_scalar(v[i], a.row(i), &mut want);
+        }
+        assert_bits_eq(&a.t_matvec(&v), &want, &format!("t_matvec rows={rows}"));
+
+        let a32 = MatrixF32::from_matrix(&a);
+        let mut want32 = vec![0.0f64; a.cols];
+        for i in 0..rows {
+            simd::axpy_wx_scalar(v[i], a32.row(i), &mut want32);
+        }
+        assert_bits_eq(&a32.t_matvec_widen(&v), &want32, &format!("t_matvec_widen rows={rows}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the FmaMode::Relaxed envelope
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fma_relaxed_within_envelope_and_worker_invariant() {
+    let (m, k, n) = (130usize, 77usize, 66usize);
+    let a = random_matrix(m, k, 40);
+    let b = random_matrix(k, n, 41);
+    let exact = a.matmul_with(&b, ParallelPolicy::sequential());
+    let relaxed_seq =
+        a.matmul_with(&b, ParallelPolicy::sequential().with_fma(FmaMode::Relaxed));
+
+    // worker invariance holds in Relaxed mode too (fixed schedule)
+    for workers in [2usize, 4, 8] {
+        let p = ParallelPolicy::with_workers(workers).with_fma(FmaMode::Relaxed);
+        assert_eq!(a.matmul_with(&b, p), relaxed_seq, "relaxed workers={workers}");
+    }
+
+    if !simd::fma_available() {
+        // no FMA hardware (or scalar path forced): Relaxed must be a no-op
+        assert_eq!(relaxed_seq, exact, "Relaxed changed bits without FMA hardware");
+        return;
+    }
+    // documented envelope: |Δ[i,j]| ≤ k · 2⁻⁵³ · (|A|·|B|)[i,j]
+    let abs_a = Matrix::from_vec(m, k, a.data().iter().map(|v| v.abs()).collect());
+    let abs_b = Matrix::from_vec(k, n, b.data().iter().map(|v| v.abs()).collect());
+    let envelope = matmul_naive(&abs_a, &abs_b);
+    let scale = k as f64 * (2.0f64).powi(-53);
+    for i in 0..m {
+        for j in 0..n {
+            let delta = (relaxed_seq[(i, j)] - exact[(i, j)]).abs();
+            let bound = scale * envelope[(i, j)];
+            assert!(
+                delta <= bound,
+                "({i},{j}): |Δ|={delta:e} exceeds envelope {bound:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fma_relaxed_gram_worker_invariant_and_bounded() {
+    let a = random_matrix(1060, 9, 50); // > 2 GRAM_ROW_CHUNKs
+    let exact = a.gram_with(ParallelPolicy::sequential());
+    let relaxed = a.gram_with(ParallelPolicy::sequential().with_fma(FmaMode::Relaxed));
+    for workers in [2usize, 4, 8] {
+        let p = ParallelPolicy::with_workers(workers).with_fma(FmaMode::Relaxed);
+        assert_eq!(a.gram_with(p), relaxed, "relaxed gram workers={workers}");
+    }
+    if !simd::fma_available() {
+        assert_eq!(relaxed, exact, "Relaxed gram changed bits without FMA hardware");
+        return;
+    }
+    // crude but sufficient: relative drift bounded by rows · 2⁻⁵³ scale
+    let worst = relaxed.max_abs_diff(&exact);
+    let scale = exact.frobenius().max(1.0);
+    assert!(
+        worst <= a.rows as f64 * (2.0f64).powi(-50) * scale,
+        "relaxed gram drift {worst:e} out of envelope"
+    );
+}
