@@ -24,6 +24,13 @@ parity (1.0) and a scalar-fallback runner is never misread as a SIMD
 regression. A missing `isa` field (pre-ISSUE-5 BENCH file) is treated
 as "scalar".
 
+Since ISSUE 6 the meta record may carry `solve_report` — the
+degradation-ladder rung a healthy probe solve came back on. The value
+must be one of "primary"/"ridge"/"failed" (an unknown rung is a
+malformed BENCH file and fails the gate); "primary" is silent, anything
+else warns that the bench machine's solve substrate degraded before the
+perf numbers were taken. Absent is fine (pre-ISSUE-6 BENCH file).
+
 `ci/test_check_bench.py` is the self-test for this gate — run it (pytest)
 before trusting a gate change.
 """
@@ -71,6 +78,33 @@ def meta_isa(recs: list) -> str:
     return "scalar"
 
 
+KNOWN_RUNGS = ("primary", "ridge", "failed")
+
+
+def check_solve_report(recs: list) -> None:
+    """Validate the meta record's `solve_report` rung, when present.
+
+    Dies on a rung outside the SolveReport vocabulary (a malformed or
+    corrupted BENCH file); warns when the healthy probe solve did not come
+    back on the primary rung — perf numbers from a machine whose solve
+    substrate is already degrading are suspect, but not a hard failure.
+    """
+    for r in recs:
+        if r.get("op") != "meta" or "solve_report" not in r:
+            continue
+        rung = r["solve_report"]
+        if rung not in KNOWN_RUNGS:
+            die(
+                f"meta solve_report {rung!r} is not a known rung "
+                f"(expected one of {KNOWN_RUNGS})"
+            )
+        if rung != "primary":
+            print(
+                f"WARN: bench machine's healthy probe solve degraded to "
+                f"{rung!r} — perf numbers may reflect a ridge-fallback path"
+            )
+
+
 def run(bench_path: str, baseline_path: str) -> None:
     try:
         with open(bench_path) as f:
@@ -98,6 +132,8 @@ def run(bench_path: str, baseline_path: str) -> None:
         # informational but must be well-formed when present
         if "gbps" in r and float(r["gbps"]) < 0:
             die(f"record {i} has negative gbps: {r}")
+
+    check_solve_report(recs)
 
     ops = {r["op"] for r in recs}
     missing = [op for op in base["required_ops"] if op not in ops]

@@ -132,6 +132,24 @@ def test_simd_floor_capped_when_isa_missing():
     gate(legacy, SIMD_BASELINE)
 
 
+def test_solve_report_primary_and_absent_pass():
+    # ISSUE-6 meta: a primary rung is healthy …
+    primary = dict(META, solve_report="primary")
+    gate([primary, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
+    # … and a pre-ISSUE-6 BENCH file (no field) still gates
+    gate([META, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
+
+
+def test_solve_report_degraded_rung_warns_but_passes():
+    ridge = dict(META, solve_report="ridge")
+    gate([ridge, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
+
+
+def test_solve_report_unknown_rung_rejected():
+    bogus = dict(META, solve_report="panic")
+    expect_fail([bogus, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
+
+
 def test_malformed_bench_json_rejected():
     with tempfile.TemporaryDirectory() as d:
         bench = pathlib.Path(d) / "BENCH_linalg.json"

@@ -22,9 +22,9 @@ use std::time::Duration;
 use opt_pr_elm::elm::arch::{fc, SampleBlock};
 use opt_pr_elm::elm::{Arch, ElmParams};
 use opt_pr_elm::linalg::{
-    householder_qr, householder_qr_reference, lstsq_qr, lstsq_ridge, lstsq_tsqr,
-    simd, solve_upper_triangular, FmaMode, Matrix, MatrixF32, ParallelPolicy,
-    TsqrAccumulator,
+    householder_qr, householder_qr_reference, lstsq_qr, lstsq_qr_report,
+    lstsq_ridge, lstsq_tsqr, simd, solve_upper_triangular, FmaMode, Matrix,
+    MatrixF32, ParallelPolicy, TsqrAccumulator,
 };
 use opt_pr_elm::util::json::{num, obj, s, Json};
 use opt_pr_elm::util::rng::Rng;
@@ -48,6 +48,11 @@ struct Rec {
     /// `meta` record only, so the CI gate does not hold a scalar-fallback
     /// runner to AVX2 microkernel floors
     isa: Option<String>,
+    /// degradation-ladder rung a healthy probe solve reported ("primary" /
+    /// "ridge" / "failed") — set on the `meta` record only; the CI gate
+    /// dies on unknown rungs and warns when a bench machine's healthy
+    /// probe degraded off the primary path
+    solve_report: Option<String>,
 }
 
 fn push(
@@ -71,6 +76,7 @@ fn push(
         speedup_vs_reference: None,
         workers: None,
         isa: None,
+        solve_report: None,
     });
     ns
 }
@@ -125,6 +131,17 @@ fn main() {
     // scalar-fallback runners. The worker count travels in the explicit
     // `workers` field; it is *also* still mirrored into gflops for one
     // release so pre-ISSUE-4 readers keep working.
+    // healthy probe solve: a well-conditioned system must come back on the
+    // ladder's primary rung — anything else means this machine's solve
+    // substrate is degraded, which the CI gate warns about before holding
+    // its numbers to the perf floors
+    let probe_rung = {
+        let mut rng = Rng::new(7);
+        let a = Matrix::random(64, 8, &mut rng);
+        let b: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let (_, report) = lstsq_qr_report(&a, &b, threaded).expect("probe solve");
+        report.rung_name()
+    };
     records.push(Rec {
         op: "meta".to_string(),
         shape: format!("workers={} isa={}", threaded.workers, simd::isa_name()),
@@ -134,6 +151,7 @@ fn main() {
         speedup_vs_reference: None,
         workers: Some(threaded.workers as f64),
         isa: Some(simd::isa_name().to_string()),
+        solve_report: Some(probe_rung.to_string()),
     });
 
     let tall: &[(usize, usize)] = if quick {
@@ -435,6 +453,9 @@ fn main() {
                 }
                 if let Some(x) = &r.isa {
                     pairs.push(("isa", s(x)));
+                }
+                if let Some(x) = &r.solve_report {
+                    pairs.push(("solve_report", s(x)));
                 }
                 if let Some(x) = r.speedup_vs_reference {
                     pairs.push(("speedup_vs_reference", num(x)));

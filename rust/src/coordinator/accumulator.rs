@@ -17,6 +17,8 @@
 use anyhow::{bail, Result};
 
 use crate::linalg::{Matrix, TsqrAccumulator};
+use crate::robust::ladder::ridge_ladder_solve;
+use crate::robust::{SolveError, SolveReport, SolveStrategyKind};
 
 /// Which β-solve pipeline a trainer runs (see the module docs for the
 /// trade-offs).
@@ -78,24 +80,28 @@ impl GramAccumulator {
     }
 
     /// Solve (G + λI)β = c. The partials arrive as f32 sums, so a nearly
-    /// singular G can be numerically indefinite; escalate λ by 100× (up to
-    /// twice) until the Cholesky succeeds.
+    /// singular G can be numerically indefinite; [`Self::solve_reported`]
+    /// climbs the degradation ladder until a rung yields a finite β.
     pub fn solve(&self) -> Result<Vec<f64>> {
+        self.solve_reported().map(|(beta, _)| beta)
+    }
+
+    /// [`Self::solve`] returning the [`SolveReport`] alongside β: the base
+    /// λ is rung 0 (`primary`), and the escalation rungs come from the
+    /// uniform [`RIDGE_LADDER`](crate::robust::RIDGE_LADDER) — for the
+    /// default λ = 1e-6 those are the same 100× steps (1e-4, 1e-2) the
+    /// accumulator always escalated through, so recovery behavior (and
+    /// every recovered β bit) is unchanged; what's new is the report and
+    /// the finiteness gate on every rung.
+    pub fn solve_reported(&self) -> Result<(Vec<f64>, SolveReport)> {
+        let mut report = SolveReport::new(SolveStrategyKind::Gram);
         if self.rows < self.m {
-            bail!("underdetermined: {} rows < M = {}", self.rows, self.m);
+            return Err(
+                SolveError::Underdetermined { rows: self.rows, cols: self.m }.into()
+            );
         }
-        let mut lambda = self.lambda;
-        for attempt in 0..3 {
-            match crate::linalg::solve::lstsq_ridge_from_parts(&self.g, &self.c, lambda) {
-                Ok(beta) => return Ok(beta),
-                Err(e) if attempt < 2 => {
-                    let _ = e; // f32 noise made G indefinite: regularize harder
-                    lambda *= 100.0;
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        unreachable!()
+        let beta = ridge_ladder_solve(&self.g, &self.c, self.lambda, true, &mut report)?;
+        Ok((beta, report))
     }
 
     /// Merge a peer accumulator (tree reduction).
@@ -229,7 +235,27 @@ mod tests {
     fn underdetermined_rejected() {
         let m = 8;
         let acc = GramAccumulator::new(m, 1e-8);
-        assert!(acc.solve().is_err());
+        let err = acc.solve().unwrap_err();
+        assert_eq!(
+            *crate::robust::as_solve_error(&err).expect("typed error"),
+            crate::robust::SolveError::Underdetermined { rows: 0, cols: 8 }
+        );
+    }
+
+    #[test]
+    fn solve_reported_healthy_is_primary_and_bit_equal() {
+        use crate::robust::DegradationRung;
+        let (n, m) = (120, 6);
+        let (h, y) = random_h_y(n, m, 7);
+        let mut acc = GramAccumulator::new(m, 1e-10);
+        let (p, q) = partials(&h, &y, m);
+        acc.push_partials(&p, &q, n).unwrap();
+        let (beta, report) = acc.solve_reported().unwrap();
+        assert_eq!(report.strategy, SolveStrategyKind::Gram);
+        assert_eq!(report.rung, DegradationRung::Primary);
+        assert_eq!(report.effective_lambda, 1e-10);
+        // the plain solve() is the same call minus the report
+        assert_eq!(beta, acc.solve().unwrap());
     }
 
     #[test]

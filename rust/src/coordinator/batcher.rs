@@ -24,6 +24,54 @@ pub struct Block {
     pub offset: usize,
 }
 
+impl Block {
+    /// True when any value of any real row (x window, y history, target)
+    /// is NaN/Inf — the cheap screen before [`Block::quarantine_non_finite`].
+    pub fn has_non_finite(&self) -> bool {
+        let rows = self.mask.len();
+        let (sq, q) = (self.x.len() / rows, self.yhist.len() / rows);
+        (0..rows).any(|r| {
+            self.mask[r] != 0.0
+                && (!self.y[r].is_finite()
+                    || self.x[r * sq..(r + 1) * sq].iter().any(|v| !v.is_finite())
+                    || self.yhist[r * q..(r + 1) * q].iter().any(|v| !v.is_finite()))
+        })
+    }
+
+    /// Quarantine poisoned rows in place: any row whose x window, y
+    /// history, or target is non-finite is zeroed and masked out — so the
+    /// `elm_gram` graph (which multiplies rows by the mask before
+    /// accumulating) sees it contribute exactly zero — and `valid` drops
+    /// by the quarantined count (preserving the `valid == mask.sum()`
+    /// invariant). Returns how many rows were quarantined.
+    ///
+    /// Note: after quarantine the real rows are no longer necessarily a
+    /// contiguous prefix; the Gram path only uses `valid` as a row *count*,
+    /// which stays correct.
+    pub fn quarantine_non_finite(&mut self) -> usize {
+        let rows = self.mask.len();
+        let (sq, q) = (self.x.len() / rows, self.yhist.len() / rows);
+        let mut dropped = 0usize;
+        for r in 0..rows {
+            if self.mask[r] == 0.0 {
+                continue;
+            }
+            let bad = !self.y[r].is_finite()
+                || self.x[r * sq..(r + 1) * sq].iter().any(|v| !v.is_finite())
+                || self.yhist[r * q..(r + 1) * q].iter().any(|v| !v.is_finite());
+            if bad {
+                self.x[r * sq..(r + 1) * sq].fill(0.0);
+                self.yhist[r * q..(r + 1) * q].fill(0.0);
+                self.y[r] = 0.0;
+                self.mask[r] = 0.0;
+                dropped += 1;
+            }
+        }
+        self.valid -= dropped;
+        dropped
+    }
+}
+
 /// Iterator of fixed-shape blocks over a windowed dataset.
 pub struct RowBlockBatcher<'a> {
     data: &'a Windowed,
@@ -124,6 +172,29 @@ mod tests {
         assert_eq!(blocks.len(), 2);
         assert!(blocks.iter().all(|b| b.valid == 32));
         assert!(blocks.iter().all(|b| b.mask.iter().all(|&m| m == 1.0)));
+    }
+
+    #[test]
+    fn quarantine_zeroes_and_unmasks_poisoned_rows() {
+        let w = toy(20, 3);
+        let mut b = RowBlockBatcher::new(&w, 32).next().unwrap();
+        assert!(!b.has_non_finite());
+        assert_eq!(b.quarantine_non_finite(), 0); // clean block untouched
+        assert_eq!(b.valid, 20);
+
+        b.x[5 * 3 + 1] = f32::NAN; // row 5's window
+        b.y[9] = f32::INFINITY; // row 9's target
+        assert!(b.has_non_finite());
+        let dropped = b.quarantine_non_finite();
+        assert_eq!(dropped, 2);
+        assert_eq!(b.valid, 18);
+        assert_eq!(b.mask[5], 0.0);
+        assert_eq!(b.mask[9], 0.0);
+        assert!(b.x[5 * 3..6 * 3].iter().all(|&v| v == 0.0));
+        assert_eq!(b.y[9], 0.0);
+        // invariant: valid == mask.sum(); padding rows stay untouched
+        assert_eq!(b.mask.iter().map(|&m| m as usize).sum::<usize>(), b.valid);
+        assert!(!b.has_non_finite());
     }
 
     #[test]

@@ -45,6 +45,16 @@ impl TrainJob {
     }
 }
 
+/// Provenance label for solve/fold errors: identifies *which* training job
+/// a failed block belonged to (`kind/arch q=.. M=..`), without dragging a
+/// full [`TrainJob`] into the streaming pipeline. Used by the
+/// [`BlockFold`](crate::robust::SolveError::BlockFold) /
+/// [`FoldIncomplete`](crate::robust::SolveError::FoldIncomplete) error
+/// variants.
+pub fn solve_job_label(kind: &str, arch: &str, q: usize, m: usize) -> String {
+    format!("{kind}/{arch} q={q} M={m}")
+}
+
 /// Fig 3 grid: all datasets × all archs, M = 50, Basic + Opt(BS 16/32).
 pub fn fig3_jobs(scale: f64, seed: u64) -> Vec<TrainJob> {
     let mut jobs = Vec::new();
@@ -153,6 +163,12 @@ mod tests {
         let full = &fig3_jobs(1.0, 0)[0];
         assert!(j.n_samples() < full.n_samples());
         assert!(j.n_samples() > 0);
+    }
+
+    #[test]
+    fn solve_job_label_carries_provenance() {
+        let l = solve_job_label("elm_gram", "elman", 10, 50);
+        assert_eq!(l, "elm_gram/elman q=10 M=50");
     }
 
     #[test]

@@ -26,13 +26,19 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::accumulator::{GramAccumulator, SolveStrategy};
 use crate::coordinator::batcher::{Block, RowBlockBatcher};
+use crate::coordinator::job::solve_job_label;
 use crate::data::window::Windowed;
 use crate::elm::arch::{block_ranges, h_block_range_prec, HBlock};
 use crate::elm::trainer::{shift_history, SrElmModel};
 use crate::elm::{Arch, ElmParams, TrainOptions};
-use crate::linalg::policy::par_map;
-use crate::linalg::solve::{lstsq_qr_with, lstsq_ridge_from_parts, upper_triangular_deficient};
+use crate::linalg::matrix32::MatrixF32;
+use crate::linalg::policy::{par_map, par_map_isolated};
+use crate::linalg::solve::{diag_verdict, lstsq_qr_report};
 use crate::linalg::{Matrix, ParallelPolicy, Precision, TsqrAccumulator};
+use crate::robust::inject;
+use crate::robust::ladder::{all_finite, ridge_ladder_solve};
+use crate::robust::quarantine;
+use crate::robust::{DeficiencyVerdict, SolveError, SolveReport, SolveStrategyKind};
 use crate::runtime::{ArtifactMeta, Buf, EnginePool, Manifest};
 
 /// Fig-6 style phase breakdown of one training run (seconds).
@@ -52,6 +58,9 @@ pub struct TrainBreakdown {
     pub total_s: f64,
     /// number of row blocks processed
     pub blocks: usize,
+    /// how β was produced: strategy, degradation rung, rank verdict,
+    /// effective λ, retry count, quarantined rows (see [`SolveReport`])
+    pub solve_report: SolveReport,
 }
 
 /// The parallel trainer: owns the manifest + engine pool handles.
@@ -154,6 +163,9 @@ impl PrElmTrainer {
         let mut acc = GramAccumulator::new(m, lambda);
         let blocks: Vec<Block> = RowBlockBatcher::new(data, meta.rows).collect();
         bd.blocks += blocks.len();
+        // provenance label carried by every fold error from this pass
+        let label = solve_job_label(&meta.kind, &meta.arch, meta.q, m);
+        let quarantined = std::sync::atomic::AtomicUsize::new(0);
 
         let n_workers = self.pool.n_workers();
         let (result_tx, result_rx) = channel::<(usize, Result<(Vec<f32>, Vec<f32>, usize)>)>();
@@ -167,12 +179,30 @@ impl PrElmTrainer {
                 let pool = &self.pool;
                 let meta = &meta;
                 let params = &params;
+                let quarantined = &quarantined;
                 scope.spawn(move || {
                     for (idx, block) in blocks.iter().enumerate() {
                         if idx % n_workers != wid {
                             continue;
                         }
                         let res = (|| {
+                            // mask off poisoned rows before they reach the
+                            // artifact (the gram graph multiplies rows by
+                            // the mask, so a quarantined row contributes
+                            // exactly zero)
+                            let cleaned;
+                            let block = if block.has_non_finite() {
+                                let mut b = block.clone();
+                                let dropped = b.quarantine_non_finite();
+                                quarantined.fetch_add(
+                                    dropped,
+                                    std::sync::atomic::Ordering::Relaxed,
+                                );
+                                cleaned = b;
+                                &cleaned
+                            } else {
+                                block
+                            };
                             let inputs =
                                 assemble_gram_inputs(meta, params, block, ehist, data.q)?;
                             let out = pool.run_on(wid, &meta.name, inputs)?;
@@ -191,24 +221,41 @@ impl PrElmTrainer {
             }
             drop(result_tx);
 
-            // in-order fold for determinism
+            // in-order fold for determinism; every error carries its
+            // block index, block shape, and the job label
             let mut pending: BTreeMap<usize, (Vec<f32>, Vec<f32>, usize)> = BTreeMap::new();
             let mut next = 0usize;
             for (idx, res) in result_rx {
-                pending.insert(idx, res?);
+                let part = res.map_err(|e| {
+                    anyhow::Error::from(SolveError::block_fold(
+                        idx, meta.rows, m, &label, &e,
+                    ))
+                })?;
+                pending.insert(idx, part);
                 while let Some(p) = pending.remove(&next) {
-                    acc.push_partials(&p.0, &p.1, p.2)?;
+                    acc.push_partials(&p.0, &p.1, p.2).map_err(|e| {
+                        anyhow::Error::from(SolveError::block_fold(
+                            next, meta.rows, m, &label, &e,
+                        ))
+                    })?;
                     next += 1;
                 }
             }
             if next != blocks.len() {
-                return Err(anyhow!("folded {next} of {} blocks", blocks.len()));
+                return Err(SolveError::FoldIncomplete {
+                    folded: next,
+                    total: blocks.len(),
+                    job: label.clone(),
+                }
+                .into());
             }
             Ok(())
         })?;
 
         let t0 = Instant::now();
-        let beta = acc.solve()?;
+        let (beta, mut report) = acc.solve_reported()?;
+        report.quarantined_rows += quarantined.load(std::sync::atomic::Ordering::Relaxed);
+        bd.solve_report = report;
         bd.solve_s += t0.elapsed().as_secs_f64();
         Ok(beta)
     }
@@ -376,6 +423,17 @@ impl CpuElmTrainer {
         seed: u64,
     ) -> Result<(SrElmModel, TrainBreakdown)> {
         let t_all = Instant::now();
+        // fault-inject hook: corrupt the raw window *before* screening, so
+        // the quarantine is exercised exactly like a poisoned real dataset
+        // (no-op without the `fault-inject` feature)
+        let injected = inject_data_window(data);
+        let data = injected.as_ref().unwrap_or(data);
+        // input quarantine: drop non-finite rows up front — one NaN sample
+        // would otherwise turn the whole Gram fold (and β) into NaN. The
+        // clean path borrows `data` untouched (bit-identity).
+        let screened = quarantine::screen(data)?;
+        let quarantined = screened.dropped();
+        let data = screened.data();
         let t0 = Instant::now();
         let params = ElmParams::init(archk, data.s, data.q, m, seed);
         let mut bd =
@@ -393,6 +451,7 @@ impl CpuElmTrainer {
         } else {
             self.solve_pass(&params, data, None, &mut bd)?
         };
+        bd.solve_report.quarantined_rows += quarantined;
         bd.total_s = t_all.elapsed().as_secs_f64();
         Ok((SrElmModel { params, beta }, bd))
     }
@@ -410,18 +469,34 @@ impl CpuElmTrainer {
         let ranges = block_ranges(data.n, self.block_rows);
         bd.blocks += ranges.len();
         let t0 = Instant::now();
-        let blocks = par_map(ranges, self.policy, |(lo, hi)| {
-            Ok(compute_h_block(params, data, None, lo, hi, self.policy.precision))
-        })?;
+        let (blocks, exec_retries) =
+            par_map_isolated(&ranges, self.policy, |idx, &(lo, hi)| {
+                inject::maybe_panic(inject::Site::Worker, idx);
+                Ok(compute_h_block_inj(
+                    params,
+                    data,
+                    None,
+                    lo,
+                    hi,
+                    self.policy.precision,
+                    idx,
+                ))
+            })?;
         let idx: Vec<usize> = (0..blocks.len()).collect();
         let partials = par_map(idx, self.policy, |i| {
             let (h, y) = &blocks[i];
-            Ok(block_gram_partials(h, y))
+            checked_gram_partials(h, y, i, m)
         })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
         let (g, c) = fold_partials(&partials, m)?;
-        let beta1 = lstsq_ridge_from_parts(&g, &c, lambda)?;
+        let mut report = SolveReport::new(SolveStrategyKind::Gram);
+        report.retries = exec_retries;
+        // Gram is the primary strategy here, so the base λ is rung 0 of
+        // the ladder; pass 2's solve overwrites this report on success
+        let ladder = ridge_ladder_solve(&g, &c, lambda, true, &mut report);
+        bd.solve_report = report;
+        let beta1 = ladder?;
         let mut yhat = Vec::with_capacity(data.n);
         for (h, _) in &blocks {
             yhat.extend(h.matvec(&beta1));
@@ -452,12 +527,30 @@ impl CpuElmTrainer {
         };
 
         if use_gram {
-            return self.gram_solve(params, data, ehist, lambda, bd);
+            return self.gram_solve(
+                params,
+                data,
+                ehist,
+                lambda,
+                true,
+                SolveReport::new(SolveStrategyKind::Gram),
+                bd,
+            );
         }
         let t0 = Instant::now();
-        let blocks = par_map(ranges, self.policy, |(lo, hi)| {
-            Ok(compute_h_block(params, data, ehist, lo, hi, self.policy.precision))
-        })?;
+        let (blocks, exec_retries) =
+            par_map_isolated(&ranges, self.policy, |idx, &(lo, hi)| {
+                inject::maybe_panic(inject::Site::Worker, idx);
+                Ok(compute_h_block_inj(
+                    params,
+                    data,
+                    ehist,
+                    lo,
+                    hi,
+                    self.policy.precision,
+                    idx,
+                ))
+            })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
 
         if self.strategy == SolveStrategy::DirectQr {
@@ -497,13 +590,38 @@ impl CpuElmTrainer {
                 y.extend(yb);
             }
             if row < m {
-                bail!("underdetermined: {row} rows < M = {m}");
+                return Err(SolveError::Underdetermined { rows: row, cols: m }.into());
             }
-            let out = lstsq_qr_with(&h, &y, self.policy);
+            if row != y.len() {
+                // a truncated block shipped fewer H rows than targets —
+                // refuse to solve a silently misaligned system
+                return Err(SolveError::ShapeMismatch {
+                    context: "h assembly",
+                    detail: format!("assembled {row} H rows but {} targets", y.len()),
+                }
+                .into());
+            }
+            let out = lstsq_qr_report(&h, &y, self.policy);
             bd.solve_s += t1.elapsed().as_secs_f64();
             return match out {
-                Ok(beta) => Ok(beta),
-                Err(_) => self.gram_solve(params, data, ehist, lambda.max(1e-8), bd),
+                Ok((beta, mut report)) => {
+                    report.retries += exec_retries;
+                    bd.solve_report = report;
+                    Ok(beta)
+                }
+                Err(_) => {
+                    let mut report = SolveReport::new(SolveStrategyKind::Qr);
+                    report.retries = exec_retries + 1;
+                    self.gram_solve(
+                        params,
+                        data,
+                        ehist,
+                        lambda.max(1e-8),
+                        false,
+                        report,
+                        bd,
+                    )
+                }
             };
         }
 
@@ -532,55 +650,81 @@ impl CpuElmTrainer {
             )?,
         };
         if acc.rows_seen() < m {
-            bail!("underdetermined: {} rows < M = {m}", acc.rows_seen());
+            return Err(SolveError::Underdetermined { rows: acc.rows_seen(), cols: m }
+                .into());
         }
         // same rank guard as lstsq_qr: collapsed random features make R's
-        // diagonal underflow; fall back to the ridge normal equations
-        // instead of amplifying noise. The fallback recomputes H — a
-        // deliberate trade: precomputing Gram partials "just in case"
-        // would tax every healthy run for a rare degenerate one.
-        let deficient = acc.r_factor().map_or(true, upper_triangular_deficient);
-        if deficient {
-            bd.solve_s += t1.elapsed().as_secs_f64();
-            return self.gram_solve(params, data, ehist, lambda.max(1e-8), bd);
-        }
-        match acc.solve() {
-            Ok(beta) => {
-                bd.solve_s += t1.elapsed().as_secs_f64();
-                Ok(beta)
+        // diagonal underflow — and a poisoned leaf makes it non-finite;
+        // either way fall back to the ridge ladder on the normal equations
+        // instead of amplifying noise or propagating NaN into β. The
+        // fallback recomputes H — a deliberate trade: precomputing Gram
+        // partials "just in case" would tax every healthy run for a rare
+        // degenerate one.
+        let mut report = SolveReport::new(SolveStrategyKind::Tsqr);
+        report.retries = exec_retries;
+        report.verdict =
+            acc.r_factor().map_or(DeficiencyVerdict::NotChecked, diag_verdict);
+        if report.verdict.is_clean() {
+            if let Ok(beta) = acc.solve() {
+                if all_finite(&beta) {
+                    bd.solve_s += t1.elapsed().as_secs_f64();
+                    bd.solve_report = report;
+                    return Ok(beta);
+                }
             }
-            Err(_) => {
-                bd.solve_s += t1.elapsed().as_secs_f64();
-                self.gram_solve(params, data, ehist, lambda.max(1e-8), bd)
-            }
+            report.retries += 1;
         }
+        bd.solve_s += t1.elapsed().as_secs_f64();
+        self.gram_solve(params, data, ehist, lambda.max(1e-8), false, report, bd)
     }
 
     /// Parallel Gram pass: per-block (HᵀH, HᵀY) partials computed on
-    /// worker threads (exec_s) — over the f32 wire when the policy says
-    /// [`Precision::MixedF32`] — folded in block order and ridge-solved
-    /// (solve_s). Also the TSQR strategy's rank-deficiency fallback.
+    /// worker threads with retry-once panic isolation (exec_s) — over the
+    /// f32 wire when the policy says [`Precision::MixedF32`] — folded in
+    /// block order and solved through the ridge ladder (solve_s).
+    ///
+    /// When Gram is the primary strategy, `primary_is_ridge` is true and
+    /// the base λ is rung 0 of the ladder (`DegradationRung::Primary`); as
+    /// the TSQR/DirectQr rank-deficiency fallback the caller passes its
+    /// report (strategy + verdict + retries so far) and every rung counts
+    /// as degradation. `bd.solve_report` is set either way — including on
+    /// ladder exhaustion, so a typed failure still reports its attempts.
+    #[allow(clippy::too_many_arguments)]
     fn gram_solve(
         &self,
         params: &ElmParams,
         data: &Windowed,
         ehist: Option<&[f32]>,
         lambda: f64,
+        primary_is_ridge: bool,
+        mut report: SolveReport,
         bd: &mut TrainBreakdown,
     ) -> Result<Vec<f64>> {
         let m = params.m;
         let ranges = block_ranges(data.n, self.block_rows);
         let t0 = Instant::now();
-        let partials = par_map(ranges, self.policy, |(lo, hi)| {
-            let (h, y) = compute_h_block(params, data, ehist, lo, hi, self.policy.precision);
-            Ok(block_gram_partials(&h, &y))
-        })?;
+        let (partials, retries) =
+            par_map_isolated(&ranges, self.policy, |idx, &(lo, hi)| {
+                inject::maybe_panic(inject::Site::Worker, idx);
+                let (h, y) = compute_h_block_inj(
+                    params,
+                    data,
+                    ehist,
+                    lo,
+                    hi,
+                    self.policy.precision,
+                    idx,
+                );
+                checked_gram_partials(&h, &y, idx, m)
+            })?;
+        report.retries += retries;
         bd.exec_s += t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
         let (g, c) = fold_partials(&partials, m)?;
-        let beta = lstsq_ridge_from_parts(&g, &c, lambda)?;
+        let beta = ridge_ladder_solve(&g, &c, lambda, primary_is_ridge, &mut report);
         bd.solve_s += t1.elapsed().as_secs_f64();
-        Ok(beta)
+        bd.solve_report = report;
+        beta
     }
 
     /// Parallel block predictions: H block × β per chunk, in order.
@@ -639,9 +783,93 @@ fn fold_partials(
         rows += rl;
     }
     if rows < m {
-        bail!("underdetermined: {rows} rows < M = {m}");
+        return Err(SolveError::Underdetermined { rows, cols: m }.into());
     }
     Ok((g, c))
+}
+
+/// [`block_gram_partials`] with a typed shape guard (a truncated block's H
+/// no longer matches its targets) and the `GramPartial` fault-inject hook
+/// applied to the partial, keyed by the block index.
+fn checked_gram_partials(
+    h: &HBlock,
+    y: &[f64],
+    idx: usize,
+    m: usize,
+) -> Result<(Matrix, Vec<f64>, usize)> {
+    if h.rows() != y.len() {
+        return Err(SolveError::ShapeMismatch {
+            context: "gram partials",
+            detail: format!("block {idx}: {} H rows vs {} targets", h.rows(), y.len()),
+        }
+        .into());
+    }
+    let (mut g, c, rows) = block_gram_partials(h, y);
+    inject::corrupt_slice_f64(inject::Site::GramPartial, idx, g.data_mut(), m, m);
+    Ok((g, c, rows))
+}
+
+/// [`compute_h_block`] plus the `HBlock` fault-inject hooks: payload
+/// corruption on the block's own wire, then row truncation — both keyed by
+/// the block index (worker-count invariant), both no-ops without the
+/// `fault-inject` feature.
+fn compute_h_block_inj(
+    params: &ElmParams,
+    data: &Windowed,
+    ehist: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+    precision: Precision,
+    idx: usize,
+) -> (HBlock, Vec<f64>) {
+    let (mut h, y) = compute_h_block(params, data, ehist, lo, hi, precision);
+    match &mut h {
+        HBlock::F64(hb) => {
+            let (r, c) = (hb.rows, hb.cols);
+            inject::corrupt_slice_f64(inject::Site::HBlock, idx, hb.data_mut(), r, c);
+        }
+        HBlock::F32(hb) => {
+            let (r, c) = (hb.rows, hb.cols);
+            inject::corrupt_slice_f32(inject::Site::HBlock, idx, hb.data_mut(), r, c);
+        }
+    }
+    let rows = h.rows();
+    let keep = inject::truncated_rows(inject::Site::HBlock, idx, rows);
+    if keep < rows {
+        h = truncate_block(h, keep);
+    }
+    (h, y)
+}
+
+/// Drop all but the first `keep` rows of a block (the `TruncateRows`
+/// fault), on the block's own wire.
+fn truncate_block(h: HBlock, keep: usize) -> HBlock {
+    match h {
+        HBlock::F64(hb) => {
+            let cols = hb.cols;
+            HBlock::F64(hb.submatrix(0, keep, 0, cols))
+        }
+        HBlock::F32(hb) => {
+            let mut out = MatrixF32::zeros(keep, hb.cols);
+            for r in 0..keep {
+                out.row_mut(r).copy_from_slice(hb.row(r));
+            }
+            HBlock::F32(out)
+        }
+    }
+}
+
+/// `DataWindow` fault-inject hook: a corrupted clone of the raw window
+/// when the injector is armed for that site, None otherwise (the no-op
+/// path — `armed_for` is a compile-time `false` without the feature).
+fn inject_data_window(data: &Windowed) -> Option<Windowed> {
+    if !inject::armed_for(inject::Site::DataWindow) {
+        return None;
+    }
+    let mut w = data.clone();
+    let (n, sq) = (w.n, w.s * w.q);
+    inject::corrupt_slice_f32(inject::Site::DataWindow, 0, &mut w.x, n, sq);
+    Some(w)
 }
 
 /// One block's (HᵀH, HᵀY, rows) partials on the wire the block was born

@@ -24,7 +24,7 @@ pub mod params;
 pub mod stacked;
 pub mod trainer;
 
-pub use online::OnlineElm;
+pub use online::{OnlineElm, RlsOutcome};
 pub use params::{param_specs, Arch, ElmParams};
 pub use stacked::StackedElmModel;
 pub use trainer::{SrElmModel, TrainOptions};

@@ -14,10 +14,39 @@
 //! `elm_h` artifacts produce H blocks; this module folds them. The
 //! invariant (tested): after any prefix of blocks, β equals the batch
 //! ridge solution over the rows seen so far.
+//!
+//! # Divergence guard
+//!
+//! RLS can diverge: a poisoned input block, or covariance drift making
+//! S = I + H P Hᵀ numerically indefinite, would silently turn β/P into
+//! NaN and corrupt every later update. [`OnlineElm::update_block`] guards
+//! both ends — non-finite inputs are quarantined without touching state
+//! ([`RlsOutcome::QuarantinedInput`]), and an update whose new β or P is
+//! non-finite (or whose S-solve fails) is rolled back by resetting P to
+//! the ridge prior I/λ while keeping β ([`RlsOutcome::Reset`]), so the
+//! filter re-regularizes instead of propagating poison.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::linalg::{cholesky_solve, Matrix};
+use crate::robust::SolveError;
+
+/// What one [`OnlineElm::update_block`] call did to the filter state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RlsOutcome {
+    /// The block was folded in normally.
+    Applied,
+    /// The block contained non-finite values and was skipped; state is
+    /// untouched.
+    QuarantinedInput {
+        /// How many non-finite entries the screen found (h + y).
+        non_finite: usize,
+    },
+    /// The update diverged (S-solve failed, or the new β/P was
+    /// non-finite): the block was dropped and the covariance reset to the
+    /// ridge prior I/λ, keeping the current β.
+    Reset,
+}
 
 /// Recursive least-squares state for one output.
 pub struct OnlineElm {
@@ -27,6 +56,8 @@ pub struct OnlineElm {
     beta: Vec<f64>,
     rows_seen: usize,
     lambda: f64,
+    /// divergence-guard resets so far (see [`RlsOutcome::Reset`])
+    resets: u32,
 }
 
 impl OnlineElm {
@@ -38,7 +69,7 @@ impl OnlineElm {
         for i in 0..m {
             p[(i, i)] = 1.0 / lambda;
         }
-        OnlineElm { m, p, beta: vec![0.0; m], rows_seen: 0, lambda }
+        OnlineElm { m, p, beta: vec![0.0; m], rows_seen: 0, lambda, resets: 0 }
     }
 
     pub fn beta(&self) -> &[f64] {
@@ -53,19 +84,47 @@ impl OnlineElm {
         self.lambda
     }
 
+    /// Divergence-guard resets so far.
+    pub fn resets(&self) -> u32 {
+        self.resets
+    }
+
+    /// Reset the covariance to the ridge prior I/λ (keeping β) and record
+    /// it — the [`RlsOutcome::Reset`] recovery.
+    fn reset_covariance(&mut self) -> RlsOutcome {
+        self.p = Matrix::zeros(self.m, self.m);
+        for i in 0..self.m {
+            self.p[(i, i)] = 1.0 / self.lambda;
+        }
+        self.resets += 1;
+        RlsOutcome::Reset
+    }
+
     /// Fold one H block (r × M, f32 artifact layout) and its targets.
-    pub fn update_block(&mut self, h: &[f32], y: &[f32], rows: usize) -> Result<()> {
+    /// Reports what happened to the state (see [`RlsOutcome`]) — the guard
+    /// never lets a non-finite β or P survive this call.
+    pub fn update_block(&mut self, h: &[f32], y: &[f32], rows: usize) -> Result<RlsOutcome> {
         if h.len() != rows * self.m || y.len() != rows {
-            bail!(
-                "online update shapes: h {} y {} vs rows {} x M {}",
-                h.len(),
-                y.len(),
-                rows,
-                self.m
-            );
+            return Err(SolveError::ShapeMismatch {
+                context: "online update",
+                detail: format!(
+                    "h {} y {} vs rows {} x M {}",
+                    h.len(),
+                    y.len(),
+                    rows,
+                    self.m
+                ),
+            }
+            .into());
         }
         if rows == 0 {
-            return Ok(());
+            return Ok(RlsOutcome::Applied);
+        }
+        // input quarantine: a poisoned block must not touch β or P
+        let non_finite = h.iter().filter(|v| !v.is_finite()).count()
+            + y.iter().filter(|v| !v.is_finite()).count();
+        if non_finite > 0 {
+            return Ok(RlsOutcome::QuarantinedInput { non_finite });
         }
         let hb = Matrix::from_f32(rows, self.m, h);
         // S = I + H P Hᵀ  (r × r, SPD)
@@ -87,17 +146,21 @@ impl OnlineElm {
         for i in 0..rows {
             s_mat[(i, i)] += 1.0;
         }
-        // K = P Hᵀ S⁻¹ — solve S Xᵀ = (P Hᵀ)ᵀ column by column via Cholesky
+        // K = P Hᵀ S⁻¹ — solve S Xᵀ = (P Hᵀ)ᵀ column by column via
+        // Cholesky. Covariance drift can make S numerically indefinite;
+        // that is a divergence, not a caller error → reset-and-report.
         let mut k = Matrix::zeros(self.m, rows);
         for col in 0..self.m {
             // rhs = row `col` of P Hᵀ as a vector over r
             let rhs: Vec<f64> = (0..rows).map(|r| ph_t[(col, r)]).collect();
-            let x = cholesky_solve(&s_mat, &rhs)?;
+            let Ok(x) = cholesky_solve(&s_mat, &rhs) else {
+                return Ok(self.reset_covariance());
+            };
             for r in 0..rows {
                 k[(col, r)] = x[r];
             }
         }
-        // β += K (y − H β)
+        // β += K (y − H β) — staged so a diverged update can be dropped
         let resid: Vec<f64> = (0..rows)
             .map(|r| {
                 let pred: f64 =
@@ -106,29 +169,37 @@ impl OnlineElm {
             })
             .collect();
         let delta = k.matvec(&resid);
-        for (b, d) in self.beta.iter_mut().zip(&delta) {
-            *b += d;
-        }
+        let beta_new: Vec<f64> =
+            self.beta.iter().zip(&delta).map(|(b, d)| b + d).collect();
         // P ← P − K (H P) ; H P = (P Hᵀ)ᵀ
+        let mut p_new = self.p.clone();
         for i in 0..self.m {
             for j in 0..self.m {
                 let mut s = 0.0;
                 for r in 0..rows {
                     s += k[(i, r)] * ph_t[(j, r)];
                 }
-                self.p[(i, j)] -= s;
+                p_new[(i, j)] -= s;
             }
         }
         // re-symmetrize (float drift)
         for i in 0..self.m {
             for j in 0..i {
-                let avg = 0.5 * (self.p[(i, j)] + self.p[(j, i)]);
-                self.p[(i, j)] = avg;
-                self.p[(j, i)] = avg;
+                let avg = 0.5 * (p_new[(i, j)] + p_new[(j, i)]);
+                p_new[(i, j)] = avg;
+                p_new[(j, i)] = avg;
             }
         }
+        // divergence guard: only finite state may be committed
+        if !beta_new.iter().all(|v| v.is_finite())
+            || !p_new.data().iter().all(|v| v.is_finite())
+        {
+            return Ok(self.reset_covariance());
+        }
+        self.beta = beta_new;
+        self.p = p_new;
         self.rows_seen += rows;
-        Ok(())
+        Ok(RlsOutcome::Applied)
     }
 }
 
@@ -214,5 +285,58 @@ mod tests {
     #[should_panic(expected = "ridge prior")]
     fn zero_lambda_rejected() {
         let _ = OnlineElm::new(3, 0.0);
+    }
+
+    #[test]
+    fn poisoned_block_is_quarantined_without_touching_state() {
+        let (n, m, lambda) = (40usize, 4usize, 1e-2);
+        let (h, y) = random_problem(n, m, 5);
+        let mut o = OnlineElm::new(m, lambda);
+        o.update_block(&h, &y, n).unwrap();
+        let beta_before = o.beta().to_vec();
+        let rows_before = o.rows_seen();
+
+        let mut bad_h = h[..8 * m].to_vec();
+        bad_h[3] = f32::NAN;
+        bad_h[7] = f32::INFINITY;
+        let mut bad_y = y[..8].to_vec();
+        bad_y[0] = f32::NAN;
+        let out = o.update_block(&bad_h, &bad_y, 8).unwrap();
+        assert_eq!(out, RlsOutcome::QuarantinedInput { non_finite: 3 });
+        assert_eq!(o.beta(), &beta_before[..]);
+        assert_eq!(o.rows_seen(), rows_before);
+        assert_eq!(o.resets(), 0);
+
+        // the filter still works after the quarantine
+        let out = o.update_block(&h[..8 * m], &y[..8], 8).unwrap();
+        assert_eq!(out, RlsOutcome::Applied);
+        assert_eq!(o.rows_seen(), rows_before + 8);
+    }
+
+    #[test]
+    fn divergence_resets_covariance_and_keeps_finite_state() {
+        // P = I/λ with λ = 1e-240, and one row of f32::MAX entries:
+        // S = 1 + h P hᵀ ≈ 3·(3.4e38)²·1e240 overflows f64 to ∞, so the
+        // S-Cholesky must fail. The old code would have propagated that
+        // error (or NaN); the guard drops the block and resets P.
+        let m = 3usize;
+        let mut o = OnlineElm::new(m, 1e-240);
+        let huge = vec![f32::MAX; m];
+        let out = o.update_block(&huge, &[1.0], 1).unwrap();
+        assert_eq!(out, RlsOutcome::Reset);
+        assert_eq!(o.resets(), 1);
+        assert!(o.beta().iter().all(|v| v.is_finite()));
+        assert_eq!(o.rows_seen(), 0, "diverged block must not count");
+
+        // after the reset the filter accepts healthy rows again
+        let (h, y) = random_problem(8, m, 6);
+        for i in 0..8 {
+            let out =
+                o.update_block(&h[i * m..(i + 1) * m], &y[i..i + 1], 1).unwrap();
+            assert_eq!(out, RlsOutcome::Applied);
+        }
+        assert!(o.beta().iter().all(|v| v.is_finite()));
+        assert_eq!(o.rows_seen(), 8);
+        assert_eq!(o.resets(), 1);
     }
 }

@@ -25,6 +25,7 @@ pub mod elm;
 pub mod gpusim;
 pub mod linalg;
 pub mod report;
+pub mod robust;
 pub mod runtime;
 pub mod testing;
 pub mod util;

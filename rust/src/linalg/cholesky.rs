@@ -2,18 +2,28 @@
 //! equations `(HᵀH + λI) β = HᵀY` — the coordinator's streaming path and
 //! the rank-deficiency fallback of the QR solve.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
+
+use crate::robust::error::SolveError;
 
 use super::matrix::{dot, Matrix};
 use super::solve::{solve_lower_triangular, solve_upper_triangular};
 
-/// Lower-triangular L with A = L Lᵀ. Fails on non-SPD input.
+/// Lower-triangular L with A = L Lᵀ. Fails with a typed
+/// [`SolveError::NotPositiveDefinite`] on non-SPD input — including the
+/// NaN pivot case, which the naive `s <= 0.0` test silently passes (every
+/// NaN comparison is false) and which used to let a single poisoned Gram
+/// entry flow through the factor into β.
 ///
 /// Row-major friendly: the k-sum over already-computed entries is a dot of
 /// two contiguous row prefixes (rows i and j), not a strided column walk.
 pub fn cholesky(a: &Matrix) -> Result<Matrix> {
     if a.rows != a.cols {
-        bail!("cholesky requires a square matrix, got {}x{}", a.rows, a.cols);
+        return Err(SolveError::ShapeMismatch {
+            context: "cholesky",
+            detail: format!("requires a square matrix, got {}x{}", a.rows, a.cols),
+        }
+        .into());
     }
     let n = a.rows;
     let mut l = Matrix::zeros(n, n);
@@ -21,8 +31,10 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix> {
         for j in 0..=i {
             let s = a[(i, j)] - dot(&l.row(i)[..j], &l.row(j)[..j]);
             if i == j {
-                if s <= 0.0 {
-                    bail!("matrix not positive definite at pivot {i} (s = {s:.3e})");
+                if !s.is_finite() || s <= 0.0 {
+                    return Err(
+                        SolveError::NotPositiveDefinite { pivot: i, value: s }.into()
+                    );
                 }
                 l[(i, j)] = s.sqrt();
             } else {
@@ -44,6 +56,7 @@ pub fn cholesky_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::robust::error::as_solve_error;
     use crate::util::rng::Rng;
 
     fn spd(n: usize, seed: u64) -> Matrix {
@@ -84,7 +97,28 @@ mod tests {
     fn rejects_indefinite() {
         let mut a = Matrix::identity(3);
         a[(1, 1)] = -1.0;
-        assert!(cholesky(&a).is_err());
+        let err = cholesky(&a).unwrap_err();
+        match as_solve_error(&err).expect("typed error") {
+            SolveError::NotPositiveDefinite { pivot: 1, value } => {
+                assert!(*value <= 0.0);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_nan_pivot_instead_of_nan_factor() {
+        // `s <= 0.0` is false for NaN — without the finiteness guard a
+        // poisoned diagonal would sqrt into a NaN factor and a NaN β
+        let mut a = spd(4, 3);
+        a[(2, 2)] = f64::NAN;
+        let err = cholesky(&a).unwrap_err();
+        match as_solve_error(&err).expect("typed error") {
+            SolveError::NotPositiveDefinite { pivot: 2, value } => {
+                assert!(value.is_nan());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
     }
 
     #[test]

@@ -52,7 +52,7 @@ pub use qr::{
     householder_qr_reference, householder_qr_with, QrFactors,
 };
 pub use solve::{
-    lstsq_qr, lstsq_qr_with, lstsq_ridge, lstsq_tsqr, solve_lower_triangular,
-    solve_upper_triangular,
+    lstsq_qr, lstsq_qr_report, lstsq_qr_with, lstsq_ridge, lstsq_ridge_from_parts,
+    lstsq_tsqr, lstsq_tsqr_report, solve_lower_triangular, solve_upper_triangular,
 };
 pub use tsqr::TsqrAccumulator;

@@ -34,6 +34,8 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::robust::error::SolveError;
+
 use super::simd::FmaMode;
 
 /// Numeric wire format of the substrate's mixed-precision paths.
@@ -152,11 +154,44 @@ pub fn fixed_tiles(n: usize, tile: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Best-effort text of a caught panic payload (`&'static str` and `String`
+/// cover every `panic!` in this crate; anything else is opaque).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run `f(item)` with panic isolation: a panicking item becomes a typed
+/// [`SolveError::WorkerPanic`] carrying the item index and the panic
+/// message, instead of unwinding through the thread and poisoning the
+/// whole map.
+fn call_caught<T, U>(f: &(impl Fn(T) -> Result<U> + Sync), index: usize, item: T) -> Result<U> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item))) {
+        Ok(res) => res,
+        Err(p) => Err(SolveError::WorkerPanic {
+            index,
+            retried: false,
+            message: panic_message(&*p),
+        }
+        .into()),
+    }
+}
+
 /// Order-preserving parallel map over owned items: contiguous chunks are
 /// handed to `policy.workers` scoped threads and the per-chunk outputs are
 /// reassembled in chunk order, so the result is independent of scheduling.
 /// (Shared by the TSQR tree, the threaded GEMM/Gram, and the coordinator's
 /// CPU pipeline.)
+///
+/// A panicking item is caught and reported as a typed
+/// [`SolveError::WorkerPanic`] with the item's global index — it cannot be
+/// retried here because the closure consumes its item by value; callers
+/// that need retry-once semantics use [`par_map_isolated`].
 pub(crate) fn par_map<T, U, F>(items: Vec<T>, policy: ParallelPolicy, f: F) -> Result<Vec<U>>
 where
     T: Send,
@@ -166,31 +201,44 @@ where
     let total = items.len();
     let workers = policy.workers.max(1).min(total.max(1));
     if workers == 1 {
-        return items.into_iter().map(&f).collect();
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, item)| call_caught(&f, i, item))
+            .collect();
     }
-    // contiguous chunks, sizes differing by at most one
+    // contiguous chunks, sizes differing by at most one; each chunk
+    // remembers its global start index for panic provenance
     let base = total / workers;
     let extra = total % workers;
-    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
+    let mut chunks: Vec<(usize, Vec<T>)> = Vec::with_capacity(workers);
     let mut rest = items;
+    let mut start = 0usize;
     for w in 0..workers {
         let take = base + usize::from(w < extra);
         let tail = rest.split_off(take.min(rest.len()));
-        chunks.push(rest);
+        chunks.push((start, rest));
+        start += take;
         rest = tail;
     }
     let f = &f;
     std::thread::scope(|scope| {
         let handles: Vec<_> = chunks
             .into_iter()
-            .map(|chunk| {
+            .map(|(start, chunk)| {
                 scope.spawn(move || {
-                    chunk.into_iter().map(f).collect::<Result<Vec<U>>>()
+                    chunk
+                        .into_iter()
+                        .enumerate()
+                        .map(|(k, item)| call_caught(f, start + k, item))
+                        .collect::<Result<Vec<U>>>()
                 })
             })
             .collect();
         let mut out = Vec::with_capacity(total);
         for h in handles {
+            // per-item catch_unwind above makes a thread-level panic
+            // unreachable in practice; keep the backstop anyway
             let part = h
                 .join()
                 .map_err(|_| anyhow!("parallel worker thread panicked"))??;
@@ -198,6 +246,87 @@ where
         }
         Ok(out)
     })
+}
+
+/// [`par_map`] over *borrowed* items with **retry-once panic isolation**:
+/// the parallel phase catches any panicking item (recording which), then an
+/// in-order sequential pass re-runs each panicked item exactly once — a
+/// transient fault (the injection harness's `WorkerPanic`, a glitched
+/// allocation) recovers with the retry counted, while a deterministic panic
+/// surfaces as a typed [`SolveError::WorkerPanic`] with `retried: true`.
+///
+/// Returns the in-order outputs plus the number of retried items. Output
+/// bits are unaffected by retries: item `i`'s output is `f(i, &items[i])`
+/// whether it ran in the parallel phase or the retry pass.
+pub(crate) fn par_map_isolated<T, U, F>(
+    items: &[T],
+    policy: ParallelPolicy,
+    f: F,
+) -> Result<(Vec<U>, u32)>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> Result<U> + Sync,
+{
+    let total = items.len();
+    let workers = policy.workers.max(1).min(total.max(1));
+    let catch = |i: usize| {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, &items[i]))).ok()
+    };
+    // phase 1: parallel, panics caught per item (None = panicked)
+    let slots: Vec<Option<Result<U>>> = if workers == 1 {
+        (0..total).map(catch).collect()
+    } else {
+        let base = total / workers;
+        let extra = total % workers;
+        let mut bounds = Vec::with_capacity(workers);
+        let mut lo = 0usize;
+        for w in 0..workers {
+            let hi = lo + base + usize::from(w < extra);
+            bounds.push((lo, hi));
+            lo = hi;
+        }
+        let catch = &catch;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = bounds
+                .into_iter()
+                .map(|(lo, hi)| scope.spawn(move || (lo..hi).map(catch).collect::<Vec<_>>()))
+                .collect();
+            let mut out = Vec::with_capacity(total);
+            for h in handles {
+                let part = h
+                    .join()
+                    .map_err(|_| anyhow!("parallel worker thread panicked"))?;
+                out.extend(part);
+            }
+            Ok::<_, anyhow::Error>(out)
+        })?
+    };
+    // phase 2: in order — propagate Errs, retry panicked items once
+    let mut retries = 0u32;
+    let mut out = Vec::with_capacity(total);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(res) => out.push(res?),
+            None => {
+                retries += 1;
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f(i, &items[i])
+                })) {
+                    Ok(res) => out.push(res?),
+                    Err(p) => {
+                        return Err(SolveError::WorkerPanic {
+                            index: i,
+                            retried: true,
+                            message: panic_message(&*p),
+                        }
+                        .into())
+                    }
+                }
+            }
+        }
+    }
+    Ok((out, retries))
 }
 
 #[cfg(test)]
@@ -248,6 +377,70 @@ mod tests {
             }
         });
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn par_map_turns_panics_into_typed_errors() {
+        use crate::robust::error::as_solve_error;
+        let items: Vec<usize> = (0..16).collect();
+        for workers in [1usize, 4] {
+            let err = par_map(items.clone(), ParallelPolicy::with_workers(workers), |x| {
+                if x == 11 {
+                    panic!("chunk fault at {x}");
+                }
+                Ok(x)
+            })
+            .unwrap_err();
+            match as_solve_error(&err).expect("typed error") {
+                SolveError::WorkerPanic { index: 11, retried: false, message } => {
+                    assert!(message.contains("chunk fault"), "{message}");
+                }
+                other => panic!("wrong variant: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_isolated_retries_transient_panics_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let items: Vec<usize> = (0..20).collect();
+        for workers in [1usize, 4, 8] {
+            let fired = AtomicU32::new(0);
+            let (out, retries) = par_map_isolated(
+                &items,
+                ParallelPolicy::with_workers(workers),
+                |i, &x| {
+                    // item 7 panics exactly once (transient fault), then
+                    // succeeds on the sequential retry
+                    if i == 7 && fired.fetch_add(1, Ordering::SeqCst) == 0 {
+                        panic!("transient fault");
+                    }
+                    Ok(x * 2)
+                },
+            )
+            .unwrap();
+            assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+            assert_eq!(retries, 1, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_map_isolated_reports_persistent_panics_as_retried() {
+        use crate::robust::error::as_solve_error;
+        let items: Vec<usize> = (0..10).collect();
+        let err = par_map_isolated(&items, ParallelPolicy::with_workers(4), |i, &x| {
+            if i == 3 {
+                panic!("deterministic fault");
+            }
+            Ok(x)
+        })
+        .unwrap_err();
+        match as_solve_error(&err).expect("typed error") {
+            SolveError::WorkerPanic { index: 3, retried: true, message } => {
+                assert!(message.contains("deterministic fault"));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
     }
 
     #[test]

@@ -5,20 +5,64 @@
 //! threaded forms are **bit-identical** to their sequential twins at any
 //! worker count — the GEMM/Gram/TSQR splits are fixed schedules (see
 //! [`super::policy`]) — so callers may thread freely without changing β.
+//!
+//! # Failure semantics
+//!
+//! Failures are typed [`SolveError`](crate::robust::SolveError) values
+//! (wrapped in `anyhow::Error`), and the least-squares entry points
+//! degrade along the uniform ladder in [`crate::robust::ladder`]: primary
+//! QR/TSQR back-substitution → ridge normal equations with escalating λ →
+//! typed failure. The `_report` variants return the
+//! [`SolveReport`](crate::robust::SolveReport) describing which rung
+//! produced β; the plain names discard it. Pivot guards are **relative**
+//! (1e-10 of the largest |diagonal|, matching the rank-deficiency check),
+//! so consistently-scaled-small systems solve instead of tripping the old
+//! absolute `1e-300` bail, and non-finite pivots are reported as poisoned
+//! inputs rather than silently propagating NaN into β.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
+
+use crate::robust::error::SolveError;
+use crate::robust::ladder::{all_finite, ridge_ladder_solve, RIDGE_LADDER};
+use crate::robust::report::{DeficiencyVerdict, SolveReport, SolveStrategyKind};
 
 use super::cholesky::cholesky_solve;
 use super::matrix::Matrix;
 use super::policy::ParallelPolicy;
 use super::qr::householder_qr_with;
 
+/// Relative pivot/rank tolerance shared by the triangular solves and the
+/// deficiency verdict: a pivot below `1e-10 ×` the largest |diagonal| is
+/// treated as rank-collapsed.
+pub(crate) const RELATIVE_PIVOT_TOL: f64 = 1e-10;
+
+/// Pivot guard shared by both triangular solves: non-finite pivots are
+/// poisoned inputs, pivots below the *relative* tolerance are singular.
+fn check_pivot(d: f64, row: usize, max_diag: f64) -> Result<()> {
+    if !d.is_finite() {
+        return Err(SolveError::NonFinitePivot { row }.into());
+    }
+    if max_diag == 0.0 || d.abs() < RELATIVE_PIVOT_TOL * max_diag {
+        return Err(SolveError::SingularPivot { row, pivot: d, max_diag }.into());
+    }
+    Ok(())
+}
+
+fn max_abs_diag(m: &Matrix) -> f64 {
+    (0..m.rows).map(|i| m[(i, i)].abs()).fold(0.0, f64::max)
+}
+
 /// Solve L y = b for lower-triangular L (forward substitution).
 pub fn solve_lower_triangular(l: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     let n = l.rows;
     if l.cols != n || b.len() != n {
-        bail!("triangular solve shape mismatch");
+        return Err(SolveError::ShapeMismatch {
+            context: "triangular solve",
+            detail: format!("L is {}x{}, b has {}", l.rows, l.cols, b.len()),
+        }
+        .into());
     }
+    let max_diag = max_abs_diag(l);
     let mut y = vec![0.0; n];
     for i in 0..n {
         let mut s = b[i];
@@ -26,9 +70,7 @@ pub fn solve_lower_triangular(l: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
             s -= l[(i, k)] * y[k];
         }
         let d = l[(i, i)];
-        if d.abs() < 1e-300 {
-            bail!("singular triangular system at row {i}");
-        }
+        check_pivot(d, i, max_diag)?;
         y[i] = s / d;
     }
     Ok(y)
@@ -38,8 +80,13 @@ pub fn solve_lower_triangular(l: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
 pub fn solve_upper_triangular(r: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     let n = r.rows;
     if r.cols != n || b.len() != n {
-        bail!("triangular solve shape mismatch");
+        return Err(SolveError::ShapeMismatch {
+            context: "triangular solve",
+            detail: format!("R is {}x{}, b has {}", r.rows, r.cols, b.len()),
+        }
+        .into());
     }
+    let max_diag = max_abs_diag(r);
     let mut x = vec![0.0; n];
     for i in (0..n).rev() {
         let mut s = b[i];
@@ -47,21 +94,39 @@ pub fn solve_upper_triangular(r: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
             s -= r[(i, k)] * x[k];
         }
         let d = r[(i, i)];
-        if d.abs() < 1e-300 {
-            bail!("singular triangular system at row {i}");
-        }
+        check_pivot(d, i, max_diag)?;
         x[i] = s / d;
     }
     Ok(x)
 }
 
-/// Relative rank check on an upper-triangular factor's diagonal: a pivot
-/// below 1e-10 of the largest means the system is numerically
-/// rank-deficient — random features can collide — and back-substitution
-/// would amplify noise. Shared by the QR and TSQR solve paths.
+/// Rank verdict on an upper-triangular factor's diagonal: non-finite
+/// entries mean poisoned inputs, a pivot below [`RELATIVE_PIVOT_TOL`] of
+/// the largest means numerically collapsed features. Shared by the QR and
+/// TSQR solve paths (and, inverted, by [`upper_triangular_deficient`]).
+pub(crate) fn diag_verdict(r: &Matrix) -> DeficiencyVerdict {
+    for i in 0..r.rows {
+        if !r[(i, i)].is_finite() {
+            return DeficiencyVerdict::NonFinite { row: i };
+        }
+    }
+    let max_diag = max_abs_diag(r);
+    if max_diag == 0.0 {
+        return DeficiencyVerdict::RankDeficient { pivot: 0 };
+    }
+    for i in 0..r.rows {
+        if r[(i, i)].abs() < RELATIVE_PIVOT_TOL * max_diag {
+            return DeficiencyVerdict::RankDeficient { pivot: i };
+        }
+    }
+    DeficiencyVerdict::FullRank
+}
+
+/// True when back-substitution through `r` would amplify noise (rank
+/// collapse) or propagate poison (non-finite diagonal) — the guard the
+/// QR/TSQR strategies consult before their primary solve.
 pub(crate) fn upper_triangular_deficient(r: &Matrix) -> bool {
-    let max_diag = (0..r.rows).map(|i| r[(i, i)].abs()).fold(0.0, f64::max);
-    max_diag == 0.0 || (0..r.rows).any(|i| r[(i, i)].abs() < 1e-10 * max_diag)
+    !diag_verdict(r).is_clean()
 }
 
 /// Least squares min ‖Ax − b‖ via Householder QR: the paper's §4.2 method
@@ -71,26 +136,59 @@ pub fn lstsq_qr(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     lstsq_qr_with(a, b, ParallelPolicy::sequential())
 }
 
-/// Least squares via the blocked Householder QR with the trailing-update
-/// GEMMs (and the rank-deficiency ridge fallback's Gram) threaded per
-/// `policy`. Bit-identical to [`lstsq_qr`] at any worker count: the GEMM
-/// row tiles and Gram chunks are fixed schedules, and Qᵀb runs the
-/// panel-resident single-threaded path either way.
+/// [`lstsq_qr_with`] discarding the report.
 pub fn lstsq_qr_with(a: &Matrix, b: &[f64], policy: ParallelPolicy) -> Result<Vec<f64>> {
+    lstsq_qr_report(a, b, policy).map(|(x, _)| x)
+}
+
+/// Least squares via the blocked Householder QR with the trailing-update
+/// GEMMs (and any ridge-fallback Gram) threaded per `policy`, returning
+/// the [`SolveReport`] alongside β. Bit-identical to [`lstsq_qr`] at any
+/// worker count: the GEMM row tiles and Gram chunks are fixed schedules,
+/// and Qᵀb runs the panel-resident single-threaded path either way.
+///
+/// Degradation: a clean factor back-substitutes (rung `primary`); a
+/// deficient/poisoned factor — or a non-finite primary β — climbs the
+/// ridge ladder on the normal equations; exhaustion is a typed error.
+pub fn lstsq_qr_report(
+    a: &Matrix,
+    b: &[f64],
+    policy: ParallelPolicy,
+) -> Result<(Vec<f64>, SolveReport)> {
+    let mut report = SolveReport::new(SolveStrategyKind::Qr);
     if b.len() != a.rows {
-        bail!("lstsq shape mismatch: A is {}x{}, b has {}", a.rows, a.cols, b.len());
+        return Err(SolveError::ShapeMismatch {
+            context: "lstsq",
+            detail: format!("A is {}x{}, b has {}", a.rows, a.cols, b.len()),
+        }
+        .into());
     }
     let f = householder_qr_with(a, policy)?;
     let mut z = b.to_vec();
     f.apply_qt(&mut z);
     let r = f.r();
-    if upper_triangular_deficient(&r) {
-        return lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8);
+    report.verdict = diag_verdict(&r);
+    if report.verdict.is_clean() {
+        if let Ok(x) = solve_upper_triangular(&r, &z[..a.cols]) {
+            if all_finite(&x) {
+                return Ok((x, report));
+            }
+        }
+        report.retries += 1;
     }
-    match solve_upper_triangular(&r, &z[..a.cols]) {
-        Ok(x) => Ok(x),
-        Err(_) => lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8),
-    }
+    let beta = ridge_ladder_solve(
+        &a.gram_with(policy),
+        &a.t_matvec(b),
+        RIDGE_LADDER[0],
+        false,
+        &mut report,
+    )?;
+    Ok((beta, report))
+}
+
+/// [`lstsq_tsqr_report`] discarding the report.
+pub fn lstsq_tsqr(a: &Matrix, b: &[f64], policy: ParallelPolicy) -> Result<Vec<f64>> {
+    lstsq_tsqr_report(a, b, policy).map(|(x, _)| x)
 }
 
 /// Least squares via the parallel TSQR tree (§4.2): A is split into
@@ -98,13 +196,22 @@ pub fn lstsq_qr_with(a: &Matrix, b: &[f64], policy: ParallelPolicy) -> Result<Ve
 /// workers executing the tree vary), each factored independently, then
 /// reduced pairwise. Bit-identical for any `policy.workers` (see
 /// [`super::tsqr`]); the answer matches [`lstsq_qr`] to factorization
-/// rounding, including the same rank-deficiency guard and ridge fallback.
-pub fn lstsq_tsqr(a: &Matrix, b: &[f64], policy: ParallelPolicy) -> Result<Vec<f64>> {
+/// rounding, including the same rank verdict and the same ridge ladder.
+pub fn lstsq_tsqr_report(
+    a: &Matrix,
+    b: &[f64],
+    policy: ParallelPolicy,
+) -> Result<(Vec<f64>, SolveReport)> {
+    let mut report = SolveReport::new(SolveStrategyKind::Tsqr);
     if b.len() != a.rows {
-        bail!("lstsq shape mismatch: A is {}x{}, b has {}", a.rows, a.cols, b.len());
+        return Err(SolveError::ShapeMismatch {
+            context: "lstsq",
+            detail: format!("A is {}x{}, b has {}", a.rows, a.cols, b.len()),
+        }
+        .into());
     }
     if a.rows < a.cols {
-        bail!("lstsq_tsqr requires rows >= cols, got {}x{}", a.rows, a.cols);
+        return Err(SolveError::Underdetermined { rows: a.rows, cols: a.cols }.into());
     }
     // block height: tall enough to amortize the per-block QR, fixed so the
     // tree shape (and therefore the bits) never depends on the worker count
@@ -118,23 +225,38 @@ pub fn lstsq_tsqr(a: &Matrix, b: &[f64], policy: ParallelPolicy) -> Result<Vec<f
     }
     let acc = super::tsqr::TsqrAccumulator::reduce(a.cols, blocks, policy)?;
     // TSQR's R has the same diagonal magnitudes as the direct QR's, so the
-    // lstsq_qr rank guard applies unchanged
-    if acc.r_factor().map_or(true, upper_triangular_deficient) {
-        return lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8);
+    // lstsq_qr rank verdict applies unchanged
+    report.verdict = acc.r_factor().map_or(DeficiencyVerdict::NotChecked, diag_verdict);
+    if report.verdict.is_clean() {
+        if let Ok(x) = acc.solve() {
+            if all_finite(&x) {
+                return Ok((x, report));
+            }
+        }
+        report.retries += 1;
     }
-    match acc.solve() {
-        Ok(x) => Ok(x),
-        Err(_) => lstsq_ridge_from_parts(&a.gram_with(policy), &a.t_matvec(b), 1e-8),
-    }
+    let beta = ridge_ladder_solve(
+        &a.gram_with(policy),
+        &a.t_matvec(b),
+        RIDGE_LADDER[0],
+        false,
+        &mut report,
+    )?;
+    Ok((beta, report))
 }
 
 /// Ridge least squares from the already-accumulated normal equations:
 /// solves (G + λI) x = c. This is the coordinator's streaming path — G and
-/// c come from the `elm_gram` artifacts block by block.
+/// c come from the `elm_gram` artifacts block by block — and the rung
+/// primitive of the degradation ladder.
 pub fn lstsq_ridge_from_parts(g: &Matrix, c: &[f64], lambda: f64) -> Result<Vec<f64>> {
     let n = g.rows;
     if g.cols != n || c.len() != n {
-        bail!("ridge shape mismatch");
+        return Err(SolveError::ShapeMismatch {
+            context: "ridge solve",
+            detail: format!("G is {}x{}, c has {}", g.rows, g.cols, c.len()),
+        }
+        .into());
     }
     let mut greg = g.clone();
     // scale-invariant regularization: λ relative to mean diagonal
@@ -154,6 +276,8 @@ pub fn lstsq_ridge(a: &Matrix, b: &[f64], lambda: f64) -> Result<Vec<f64>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::robust::error::as_solve_error;
+    use crate::robust::report::DegradationRung;
     use crate::util::rng::Rng;
 
     #[test]
@@ -181,6 +305,50 @@ mod tests {
             assert!((xl[i] - x[i]).abs() < 1e-10);
             assert!((xr[i] - x[i]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn uniformly_tiny_systems_solve_with_relative_pivots() {
+        // every pivot is 1e-305 — far below the old absolute 1e-300 bail,
+        // but the system is perfectly conditioned (ratio 1.0), so the
+        // relative guard lets it solve
+        let n = 4;
+        let mut r = Matrix::zeros(n, n);
+        for i in 0..n {
+            r[(i, i)] = 1e-305;
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let b: Vec<f64> = x_true.iter().map(|&v| v * 1e-305).collect();
+        let x = solve_upper_triangular(&r, &b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+        }
+        let x = solve_lower_triangular(&r, &b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn relatively_tiny_pivot_is_a_typed_singular_error() {
+        let mut r = Matrix::identity(3);
+        r[(1, 1)] = 1e-12; // 1e-12 of max diag 1.0 — below the 1e-10 guard
+        let err = solve_upper_triangular(&r, &[1.0, 1.0, 1.0]).unwrap_err();
+        match as_solve_error(&err).expect("typed error") {
+            SolveError::SingularPivot { row: 1, .. } => {}
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nan_pivot_is_a_typed_poison_error_not_nan_output() {
+        let mut r = Matrix::identity(3);
+        r[(2, 2)] = f64::NAN;
+        let err = solve_upper_triangular(&r, &[1.0, 1.0, 1.0]).unwrap_err();
+        assert_eq!(
+            *as_solve_error(&err).expect("typed error"),
+            SolveError::NonFinitePivot { row: 2 }
+        );
     }
 
     #[test]
@@ -248,9 +416,59 @@ mod tests {
         for (p, q) in xt.iter().zip(&xq) {
             assert!((p - q).abs() < 1e-9, "ridge fallbacks differ: {p} vs {q}");
         }
-        // underdetermined stays an error (parity with householder_qr)
+        // underdetermined stays a (now typed) error
         let wide = Matrix::zeros(3, 5);
-        assert!(lstsq_tsqr(&wide, &[0.0; 3], ParallelPolicy::with_workers(2)).is_err());
+        let err =
+            lstsq_tsqr(&wide, &[0.0; 3], ParallelPolicy::with_workers(2)).unwrap_err();
+        assert_eq!(
+            *as_solve_error(&err).expect("typed"),
+            SolveError::Underdetermined { rows: 3, cols: 5 }
+        );
+    }
+
+    #[test]
+    fn reports_record_rung_and_verdict() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::random(120, 6, &mut rng);
+        let b: Vec<f64> = (0..120).map(|i| (i as f64 * 0.19).sin()).collect();
+        // healthy: primary rung, clean verdict, report-free twin bit-equal
+        for (x, rep) in [
+            lstsq_qr_report(&a, &b, ParallelPolicy::with_workers(2)).unwrap(),
+            lstsq_tsqr_report(&a, &b, ParallelPolicy::with_workers(2)).unwrap(),
+        ] {
+            assert!(all_finite(&x));
+            assert_eq!(rep.rung, DegradationRung::Primary);
+            assert!(rep.verdict.is_clean());
+            assert_eq!(rep.retries, 0);
+            assert_eq!(rep.effective_lambda, 0.0);
+        }
+        // duplicated column: ridge rung 1, deficient verdict, and the β
+        // bits equal the direct base-rung ridge call
+        let mut dup = Matrix::zeros(120, 7);
+        for i in 0..120 {
+            for j in 0..6 {
+                dup[(i, j)] = a[(i, j)];
+            }
+            dup[(i, 6)] = a[(i, 1)];
+        }
+        let want =
+            lstsq_ridge_from_parts(&dup.gram(), &dup.t_matvec(&b), RIDGE_LADDER[0])
+                .unwrap();
+        for (x, rep) in [
+            lstsq_qr_report(&dup, &b, ParallelPolicy::with_workers(2)).unwrap(),
+            lstsq_tsqr_report(&dup, &b, ParallelPolicy::with_workers(2)).unwrap(),
+        ] {
+            assert_eq!(x, want, "ladder base rung must be bit-identical");
+            assert_eq!(
+                rep.rung,
+                DegradationRung::Ridge { step: 1, lambda: RIDGE_LADDER[0] }
+            );
+            assert!(
+                matches!(rep.verdict, DeficiencyVerdict::RankDeficient { .. }),
+                "{:?}",
+                rep.verdict
+            );
+        }
     }
 
     #[test]

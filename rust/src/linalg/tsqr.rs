@@ -42,7 +42,10 @@
 //! equations — the reason the paper uses QR rather than the explicit
 //! pseudo-inverse.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
+
+use crate::robust::error::SolveError;
+use crate::robust::inject;
 
 use super::matrix::Matrix;
 use super::matrix32::MatrixF32;
@@ -80,6 +83,22 @@ impl LeafBlock for MatrixF32 {
     }
     fn widen(self) -> Matrix {
         self.to_f64()
+    }
+}
+
+/// Typed width-mismatch error shared by every block/merge entry point.
+fn width_mismatch(got: usize, want: usize) -> SolveError {
+    SolveError::ShapeMismatch {
+        context: "tsqr",
+        detail: format!("block has {got} cols, accumulator expects {want}"),
+    }
+}
+
+/// Typed rows-vs-targets mismatch error.
+fn rows_vs_y(rows: usize, y_len: usize) -> SolveError {
+    SolveError::ShapeMismatch {
+        context: "tsqr",
+        detail: format!("block rows {rows} != y len {y_len}"),
     }
 }
 
@@ -144,10 +163,10 @@ impl TsqrAccumulator {
     /// block is taken by value: the local QR factors it in place.
     pub fn push_block(&mut self, h: Matrix, y: &[f64]) -> Result<()> {
         if h.cols != self.n {
-            bail!("block has {} cols, accumulator expects {}", h.cols, self.n);
+            return Err(width_mismatch(h.cols, self.n).into());
         }
         if h.rows != y.len() {
-            bail!("block rows {} != y len {}", h.rows, y.len());
+            return Err(rows_vs_y(h.rows, y.len()).into());
         }
         if h.rows == 0 {
             return Ok(());
@@ -176,7 +195,7 @@ impl TsqrAccumulator {
     /// [`TsqrAccumulator::push_block`] on the widened block, R/z stay f64.
     pub fn push_block_f32(&mut self, h: MatrixF32, y: &[f64]) -> Result<()> {
         if h.cols != self.n {
-            bail!("block has {} cols, accumulator expects {}", h.cols, self.n);
+            return Err(width_mismatch(h.cols, self.n).into());
         }
         self.push_block(h.to_f64(), y)
     }
@@ -184,7 +203,7 @@ impl TsqrAccumulator {
     /// Merge another accumulator (pairwise tree-reduction step).
     pub fn merge(&mut self, other: TsqrAccumulator) -> Result<()> {
         if other.n != self.n {
-            bail!("accumulator width mismatch");
+            return Err(width_mismatch(other.n, self.n).into());
         }
         let Some(r_other) = other.r else { return Ok(()) };
         match self.r.take() {
@@ -237,23 +256,38 @@ impl TsqrAccumulator {
         let mut rows_total = 0usize;
         for (h, y) in &blocks {
             if h.cols() != n_cols {
-                bail!("block has {} cols, reduce expects {n_cols}", h.cols());
+                return Err(width_mismatch(h.cols(), n_cols).into());
             }
             if h.rows() != y.len() {
-                bail!("block rows {} != y len {}", h.rows(), y.len());
+                return Err(rows_vs_y(h.rows(), y.len()).into());
             }
             rows_total += h.rows();
         }
-        let blocks: Vec<(B, Vec<f64>)> =
-            blocks.into_iter().filter(|(h, _)| h.rows() > 0).collect();
+        let blocks: Vec<(usize, (B, Vec<f64>))> = blocks
+            .into_iter()
+            .filter(|(h, _)| h.rows() > 0)
+            .enumerate()
+            .collect();
         if blocks.is_empty() {
             return Ok(TsqrAccumulator::new(n_cols));
         }
 
         // leaves: every block factored independently, in parallel (f32
-        // leaves widen exactly here, right at the factorization)
-        let mut level = par_map(blocks, policy, move |(h, y)| {
-            block_factors(n_cols, h.widen(), &y)
+        // leaves widen exactly here, right at the factorization). The
+        // fault-inject hook corrupts the widened leaf keyed by its block
+        // index — stable across worker counts — and is a no-op without
+        // the `fault-inject` feature.
+        let mut level = par_map(blocks, policy, move |(idx, (h, y))| {
+            let mut hw = h.widen();
+            let (rows, cols) = (hw.rows, hw.cols);
+            inject::corrupt_slice_f64(
+                inject::Site::TsqrLeaf,
+                idx,
+                hw.data_mut(),
+                rows,
+                cols,
+            );
+            block_factors(n_cols, hw, &y)
         })?;
 
         // in-order pairwise merges until one node remains
@@ -275,9 +309,15 @@ impl TsqrAccumulator {
 
     /// Solve R β = z by back-substitution.
     pub fn solve(&self) -> Result<Vec<f64>> {
-        let Some(r) = &self.r else { bail!("no blocks accumulated") };
+        let Some(r) = &self.r else {
+            return Err(SolveError::EmptyAccumulator.into());
+        };
         if self.rows_seen < self.n {
-            bail!("underdetermined: {} rows < {} cols", self.rows_seen, self.n);
+            return Err(SolveError::Underdetermined {
+                rows: self.rows_seen,
+                cols: self.n,
+            }
+            .into());
         }
         solve_upper_triangular(r, &self.z)
     }

@@ -1,0 +1,293 @@
+//! `SolveError` — the typed failure taxonomy of the β-solve pipeline.
+//!
+//! Every way the solve substrate can refuse to produce β is one variant
+//! here, replacing the stringly `anyhow::bail!` messages that
+//! `solve.rs`/`tsqr.rs`/`cholesky.rs` used to emit. Public entry points
+//! still return `anyhow::Result` (the crate-wide convention), but the
+//! error *value* is a `SolveError`, so callers — the fleet coordinator,
+//! the fault-injection suite — can `downcast_ref::<SolveError>()` and
+//! branch on the failure class instead of grepping message strings.
+//!
+//! Design notes:
+//!
+//! * Variants carry owned, `Clone`-able payloads (indices, shapes, labels,
+//!   stringified sources) rather than boxed error chains, so a
+//!   `SolveError` can cross thread joins and be compared in tests.
+//! * Provenance variants ([`SolveError::BlockFold`],
+//!   [`SolveError::WorkerPanic`]) name the block/item index and job that
+//!   failed — the fix for the old `"folded {next} of {} blocks"` message
+//!   that said *how many* blocks folded but never *which one* poisoned
+//!   the fold.
+
+use std::fmt;
+
+/// Typed failure taxonomy for the β-solve pipeline (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveError {
+    /// Operand shapes disagree (A rows vs b length, G squareness, …).
+    ShapeMismatch {
+        /// Which operation detected the mismatch.
+        context: &'static str,
+        /// Human-readable shape detail, e.g. `"A is 30x8, b has 29"`.
+        detail: String,
+    },
+    /// A triangular pivot fell below the relative rank tolerance.
+    SingularPivot {
+        /// Row of the offending diagonal entry.
+        row: usize,
+        /// The pivot value.
+        pivot: f64,
+        /// Largest |diagonal| of the factor (the relative reference).
+        max_diag: f64,
+    },
+    /// A triangular or Cholesky pivot was NaN/Inf — upstream data poisoned
+    /// the factor. Distinct from [`SolveError::SingularPivot`] so callers
+    /// can tell "rank collapsed" from "inputs were non-finite".
+    NonFinitePivot {
+        /// Row of the offending diagonal entry.
+        row: usize,
+    },
+    /// Cholesky hit a non-positive (or non-finite) pivot: the matrix is
+    /// not positive definite (f32 partial noise or rank collapse).
+    NotPositiveDefinite {
+        /// Pivot index where the factorization failed.
+        pivot: usize,
+        /// The offending Schur-complement value (NaN when poisoned).
+        value: f64,
+    },
+    /// Fewer accumulated rows than unknowns — no strategy can solve this.
+    Underdetermined {
+        /// Rows seen by the accumulator / assembled H.
+        rows: usize,
+        /// Columns (hidden width M) of the system.
+        cols: usize,
+    },
+    /// A solve input (window, block, partial) contained NaN/Inf.
+    NonFiniteInput {
+        /// Which pipeline stage found the poison.
+        site: &'static str,
+        /// Index of the offending block/row within that stage.
+        index: usize,
+    },
+    /// The accumulator was asked to solve before any block arrived.
+    EmptyAccumulator,
+    /// Every rung of the ridge degradation ladder failed; β cannot be
+    /// produced for this system. `last` records the final rung's error.
+    LadderExhausted {
+        /// The base λ the ladder started from.
+        base_lambda: f64,
+        /// How many rungs (λ values) were attempted.
+        attempts: u32,
+        /// Stringified error of the last rung.
+        last: String,
+    },
+    /// A per-block computation failed inside a fold; carries the block's
+    /// index, shape, and the job it belonged to (the provenance the old
+    /// partial-fold message dropped).
+    BlockFold {
+        /// Index of the failing block in the fixed block schedule.
+        block: usize,
+        /// Rows of the failing block.
+        rows: usize,
+        /// Columns (hidden width M) of the failing block.
+        cols: usize,
+        /// Job label (dataset/arch/M) the block belonged to.
+        job: String,
+        /// Stringified underlying error.
+        source: String,
+    },
+    /// The in-order fold ended before every block arrived (a producer
+    /// stopped early). Carries the job label for provenance.
+    FoldIncomplete {
+        /// Blocks folded before the stream ended.
+        folded: usize,
+        /// Blocks the schedule expected.
+        total: usize,
+        /// Job label (dataset/arch/M) the fold belonged to.
+        job: String,
+    },
+    /// A worker-thread item panicked. `retried` says whether the
+    /// sequential retry also panicked (isolated par_map) or the panic was
+    /// caught on first execution (plain par_map, no retry semantics).
+    WorkerPanic {
+        /// Global item index (block index) that panicked.
+        index: usize,
+        /// Whether a sequential retry was attempted and also panicked.
+        retried: bool,
+        /// Panic payload rendered to text, when it was a string.
+        message: String,
+    },
+    /// Input quarantine dropped every row — nothing left to train on.
+    AllRowsQuarantined {
+        /// Rows the dataset had before screening.
+        rows: usize,
+    },
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolveError::ShapeMismatch { context, detail } => {
+                write!(f, "{context} shape mismatch: {detail}")
+            }
+            SolveError::SingularPivot { row, pivot, max_diag } => write!(
+                f,
+                "singular triangular system at row {row}: |pivot| = {:.3e} \
+                 below relative tolerance of max diag {:.3e}",
+                pivot.abs(),
+                max_diag
+            ),
+            SolveError::NonFinitePivot { row } => {
+                write!(f, "non-finite pivot at row {row}: factor is poisoned")
+            }
+            SolveError::NotPositiveDefinite { pivot, value } => write!(
+                f,
+                "matrix not positive definite at pivot {pivot} (s = {value:.3e})"
+            ),
+            SolveError::Underdetermined { rows, cols } => {
+                write!(f, "underdetermined: {rows} rows < {cols} cols")
+            }
+            SolveError::NonFiniteInput { site, index } => {
+                write!(f, "non-finite values in {site} at index {index}")
+            }
+            SolveError::EmptyAccumulator => write!(f, "no blocks accumulated"),
+            SolveError::LadderExhausted { base_lambda, attempts, last } => write!(
+                f,
+                "degradation ladder exhausted after {attempts} rungs \
+                 (base λ = {base_lambda:.1e}); last error: {last}"
+            ),
+            SolveError::BlockFold { block, rows, cols, job, source } => write!(
+                f,
+                "block {block} ({rows}x{cols}) of job {job} failed: {source}"
+            ),
+            SolveError::FoldIncomplete { folded, total, job } => {
+                write!(f, "folded {folded} of {total} blocks for job {job}")
+            }
+            SolveError::WorkerPanic { index, retried, message } => {
+                let phase = if *retried {
+                    "panicked again on sequential retry"
+                } else {
+                    "panicked"
+                };
+                if message.is_empty() {
+                    write!(f, "worker item {index} {phase}")
+                } else {
+                    write!(f, "worker item {index} {phase}: {message}")
+                }
+            }
+            SolveError::AllRowsQuarantined { rows } => write!(
+                f,
+                "input quarantine dropped all {rows} rows (every window \
+                 contained non-finite values)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+impl SolveError {
+    /// Wrap a per-block failure with its fold provenance (block index,
+    /// shape, job label) — the error chain the old fold message dropped.
+    pub fn block_fold(
+        block: usize,
+        rows: usize,
+        cols: usize,
+        job: &str,
+        source: &anyhow::Error,
+    ) -> SolveError {
+        SolveError::BlockFold {
+            block,
+            rows,
+            cols,
+            job: job.to_string(),
+            source: format!("{source:#}"),
+        }
+    }
+
+    /// Short kebab-case class name — stable across payload changes, used
+    /// by logs and the fault-injection suite's assertions.
+    pub fn class(&self) -> &'static str {
+        match self {
+            SolveError::ShapeMismatch { .. } => "shape-mismatch",
+            SolveError::SingularPivot { .. } => "singular-pivot",
+            SolveError::NonFinitePivot { .. } => "non-finite-pivot",
+            SolveError::NotPositiveDefinite { .. } => "not-positive-definite",
+            SolveError::Underdetermined { .. } => "underdetermined",
+            SolveError::NonFiniteInput { .. } => "non-finite-input",
+            SolveError::EmptyAccumulator => "empty-accumulator",
+            SolveError::LadderExhausted { .. } => "ladder-exhausted",
+            SolveError::BlockFold { .. } => "block-fold",
+            SolveError::FoldIncomplete { .. } => "fold-incomplete",
+            SolveError::WorkerPanic { .. } => "worker-panic",
+            SolveError::AllRowsQuarantined { .. } => "all-rows-quarantined",
+        }
+    }
+}
+
+/// Pull the `SolveError` out of an `anyhow::Error`, walking the context
+/// chain (test/diagnostic helper).
+pub fn as_solve_error(err: &anyhow::Error) -> Option<&SolveError> {
+    err.chain().find_map(|e| e.downcast_ref::<SolveError>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_informative() {
+        let e = SolveError::SingularPivot { row: 3, pivot: 1e-14, max_diag: 2.0 };
+        let s = e.to_string();
+        assert!(s.contains("row 3"), "{s}");
+        let e = SolveError::BlockFold {
+            block: 7,
+            rows: 256,
+            cols: 50,
+            job: "lorenz/elman M=50".into(),
+            source: "engine died".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("block 7") && s.contains("256x50") && s.contains("lorenz"), "{s}");
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let err: anyhow::Error = SolveError::EmptyAccumulator.into();
+        let err = err.context("while solving");
+        let found = as_solve_error(&err).expect("downcast");
+        assert_eq!(*found, SolveError::EmptyAccumulator);
+        assert_eq!(found.class(), "empty-accumulator");
+    }
+
+    #[test]
+    fn classes_are_distinct() {
+        let all = [
+            SolveError::ShapeMismatch { context: "x", detail: String::new() }.class(),
+            SolveError::SingularPivot { row: 0, pivot: 0.0, max_diag: 0.0 }.class(),
+            SolveError::NonFinitePivot { row: 0 }.class(),
+            SolveError::NotPositiveDefinite { pivot: 0, value: 0.0 }.class(),
+            SolveError::Underdetermined { rows: 0, cols: 1 }.class(),
+            SolveError::NonFiniteInput { site: "x", index: 0 }.class(),
+            SolveError::EmptyAccumulator.class(),
+            SolveError::LadderExhausted { base_lambda: 0.0, attempts: 0, last: String::new() }
+                .class(),
+            SolveError::BlockFold {
+                block: 0,
+                rows: 0,
+                cols: 0,
+                job: String::new(),
+                source: String::new(),
+            }
+            .class(),
+            SolveError::FoldIncomplete { folded: 0, total: 0, job: String::new() }.class(),
+            SolveError::WorkerPanic { index: 0, retried: false, message: String::new() }
+                .class(),
+            SolveError::AllRowsQuarantined { rows: 0 }.class(),
+        ];
+        let mut set = std::collections::HashSet::new();
+        for c in all {
+            assert!(set.insert(c), "duplicate class {c}");
+        }
+    }
+}

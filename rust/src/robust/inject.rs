@@ -1,0 +1,538 @@
+//! Deterministic, seed-keyed fault injection for the training pipeline.
+//!
+//! The harness corrupts the pipeline at five sites — data windows, H
+//! blocks, Gram partials, TSQR leaves, worker threads — with a taxonomy
+//! of faults (NaN/Inf payloads, denormal scaling, rank-collapsed columns,
+//! truncated blocks, injected worker panics). Whether a given (site,
+//! block-index) pair is corrupted is a pure function of the armed plan's
+//! seed and the index — **never** of the worker count or thread schedule —
+//! so an injected run is as reproducible as a healthy one (§7.3).
+//!
+//! # Zero cost when disabled
+//!
+//! The hook functions below ([`corrupt_slice_f64`], [`corrupt_slice_f32`],
+//! [`truncated_rows`], [`maybe_panic`], [`armed_for`]) are always
+//! callable, but without the `fault-inject` cargo feature they compile to
+//! `#[inline(always)]` no-ops: release builds carry no injection state,
+//! no locks, and no branches that matter. The arming API
+//! ([`arm`]/[`InjectorGuard`]/[`take_events`]) only exists under the
+//! feature.
+//!
+//! # Arming
+//!
+//! ```ignore
+//! let _g = robust::inject::arm(FaultPlan {
+//!     seed: 42,
+//!     site: Site::HBlock,
+//!     fault: Fault::NanPayload,
+//!     period: 1, // every index at the site
+//! });
+//! // ... run training; faults fire deterministically ...
+//! let events = robust::inject::take_events();
+//! ```
+//!
+//! `arm` holds a global mutex for the guard's lifetime, so concurrent
+//! tests serialize instead of cross-contaminating each other's plans. An
+//! injected worker panic fires **once per (site, index)**: the panic
+//! isolation's sequential retry then succeeds, which is exactly the
+//! recovery path the suite needs to demonstrate.
+
+/// Pipeline site a fault plan targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Site {
+    /// The windowed dataset before any block is cut (quarantine's input).
+    DataWindow,
+    /// A computed H block, before it reaches its consumer.
+    HBlock,
+    /// A per-block (HᵀH, HᵀY) Gram partial.
+    GramPartial,
+    /// A TSQR leaf, right before its local QR factorization.
+    TsqrLeaf,
+    /// A worker-thread item (panic injection).
+    Worker,
+}
+
+impl Site {
+    /// Stable lowercase name for logs and assertions.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::DataWindow => "data-window",
+            Site::HBlock => "h-block",
+            Site::GramPartial => "gram-partial",
+            Site::TsqrLeaf => "tsqr-leaf",
+            Site::Worker => "worker",
+        }
+    }
+}
+
+/// Fault class a plan injects at its site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fault {
+    /// Scatter NaN into the payload.
+    NanPayload,
+    /// Scatter ±Inf into the payload.
+    InfPayload,
+    /// Scale the whole payload into the denormal range.
+    DenormalScale,
+    /// Copy column 0 over the last column (rank collapse by duplication).
+    DuplicateColumns,
+    /// Overwrite column 0 with the constant 1.0 (rank collapse against
+    /// any bias-like feature).
+    ConstantColumn,
+    /// Halve the row count the consumer is told about (truncated block).
+    TruncateRows,
+    /// Panic the worker item (fires once per index; the retry succeeds).
+    WorkerPanic,
+}
+
+impl Fault {
+    /// Stable lowercase name for logs and assertions.
+    pub fn name(self) -> &'static str {
+        match self {
+            Fault::NanPayload => "nan-payload",
+            Fault::InfPayload => "inf-payload",
+            Fault::DenormalScale => "denormal-scale",
+            Fault::DuplicateColumns => "duplicate-columns",
+            Fault::ConstantColumn => "constant-column",
+            Fault::TruncateRows => "truncate-rows",
+            Fault::WorkerPanic => "worker-panic",
+        }
+    }
+}
+
+/// One armed injection campaign: which fault, where, how often.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed keying the per-index fire decision (deterministic).
+    pub seed: u64,
+    /// Site the faults target.
+    pub site: Site,
+    /// Fault class to inject.
+    pub fault: Fault,
+    /// Fire roughly one in `period` indices (deterministic in the seed);
+    /// `0`/`1` fire at every index of the site.
+    pub period: usize,
+}
+
+/// One fault that actually fired (drained via [`take_events`]).
+#[cfg(feature = "fault-inject")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectionEvent {
+    /// Site the fault fired at.
+    pub site: Site,
+    /// Index within the site's schedule.
+    pub index: usize,
+    /// Which fault class fired.
+    pub fault: Fault,
+}
+
+#[cfg(feature = "fault-inject")]
+mod active {
+    use super::{Fault, FaultPlan, InjectionEvent, Site};
+    use std::sync::{Mutex, MutexGuard, RwLock};
+
+    // arm() serializes campaigns across threads by holding ARM_LOCK for
+    // the guard's lifetime; assert failures in a test poison it, so every
+    // acquisition shrugs the poison off (the protected state is reset on
+    // each arm anyway).
+    static ARM_LOCK: Mutex<()> = Mutex::new(());
+    static PLAN: RwLock<Option<FaultPlan>> = RwLock::new(None);
+    static FIRED_PANICS: Mutex<Vec<(Site, usize)>> = Mutex::new(Vec::new());
+    static EVENTS: Mutex<Vec<InjectionEvent>> = Mutex::new(Vec::new());
+
+    /// RAII handle for an armed plan: disarms (and releases the global
+    /// arm lock) on drop.
+    pub struct InjectorGuard {
+        _lock: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for InjectorGuard {
+        fn drop(&mut self) {
+            *PLAN.write().unwrap_or_else(|e| e.into_inner()) = None;
+        }
+    }
+
+    /// Arm a fault plan; faults fire until the guard drops. Concurrent
+    /// arms (parallel tests) block here instead of interleaving.
+    pub fn arm(plan: FaultPlan) -> InjectorGuard {
+        let lock = ARM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        *PLAN.write().unwrap_or_else(|e| e.into_inner()) = Some(plan);
+        FIRED_PANICS.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        EVENTS.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        InjectorGuard { _lock: lock }
+    }
+
+    /// Drain the events fired since [`arm`] (order is nondeterministic
+    /// across worker threads; sort before comparing).
+    pub fn take_events() -> Vec<InjectionEvent> {
+        std::mem::take(&mut *EVENTS.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    fn plan() -> Option<FaultPlan> {
+        *PLAN.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn armed_for(site: Site) -> bool {
+        plan().is_some_and(|p| p.site == site)
+    }
+
+    /// The deterministic per-index fire decision: a pure function of
+    /// (plan.seed, index) — never of worker count or schedule.
+    fn fires(site: Site, index: usize) -> Option<Fault> {
+        let p = plan()?;
+        if p.site != site {
+            return None;
+        }
+        if p.period > 1 {
+            let mut rng = crate::util::rng::Rng::new(
+                p.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            if rng.next_u64() % p.period as u64 != 0 {
+                return None;
+            }
+        }
+        Some(p.fault)
+    }
+
+    fn log(site: Site, index: usize, fault: Fault) {
+        EVENTS
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(InjectionEvent { site, index, fault });
+    }
+
+    /// Shared payload corruption over a row-major slice; the f64/f32
+    /// hooks both funnel here via a generic scalar adapter.
+    fn corrupt<T: Copy>(
+        site: Site,
+        index: usize,
+        data: &mut [T],
+        rows: usize,
+        cols: usize,
+        nan: T,
+        inf: impl Fn(usize) -> T,
+        one: T,
+        denormal_scale: impl Fn(T) -> T,
+        seed_mix: u64,
+    ) -> bool {
+        let Some(fault) = fires(site, index) else { return false };
+        if data.is_empty() {
+            return false;
+        }
+        let fired = match fault {
+            Fault::NanPayload | Fault::InfPayload => {
+                let mut rng = crate::util::rng::Rng::new(seed_mix ^ index as u64);
+                let k = (data.len() / 64).max(1);
+                for j in 0..k {
+                    let pos = rng.below(data.len());
+                    data[pos] = match fault {
+                        Fault::NanPayload => nan,
+                        _ => inf(j),
+                    };
+                }
+                true
+            }
+            Fault::DenormalScale => {
+                for v in data.iter_mut() {
+                    *v = denormal_scale(*v);
+                }
+                true
+            }
+            Fault::DuplicateColumns => {
+                if cols < 2 {
+                    false
+                } else {
+                    for r in 0..rows {
+                        data[r * cols + cols - 1] = data[r * cols];
+                    }
+                    true
+                }
+            }
+            Fault::ConstantColumn => {
+                for r in 0..rows {
+                    data[r * cols] = one;
+                }
+                true
+            }
+            Fault::TruncateRows | Fault::WorkerPanic => false,
+        };
+        if fired {
+            log(site, index, fault);
+        }
+        fired
+    }
+
+    pub fn corrupt_slice_f64(
+        site: Site,
+        index: usize,
+        data: &mut [f64],
+        rows: usize,
+        cols: usize,
+    ) -> bool {
+        corrupt(
+            site,
+            index,
+            data,
+            rows,
+            cols,
+            f64::NAN,
+            |j| if j % 2 == 0 { f64::INFINITY } else { f64::NEG_INFINITY },
+            1.0,
+            |v| v * 1e-310,
+            0xF64,
+        )
+    }
+
+    pub fn corrupt_slice_f32(
+        site: Site,
+        index: usize,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+    ) -> bool {
+        corrupt(
+            site,
+            index,
+            data,
+            rows,
+            cols,
+            f32::NAN,
+            |j| if j % 2 == 0 { f32::INFINITY } else { f32::NEG_INFINITY },
+            1.0,
+            |v| v * 1e-42,
+            0xF32,
+        )
+    }
+
+    pub fn truncated_rows(site: Site, index: usize, rows: usize) -> usize {
+        match fires(site, index) {
+            Some(Fault::TruncateRows) if rows > 1 => {
+                log(site, index, Fault::TruncateRows);
+                rows / 2
+            }
+            _ => rows,
+        }
+    }
+
+    pub fn maybe_panic(site: Site, index: usize) {
+        if fires(site, index) != Some(Fault::WorkerPanic) {
+            return;
+        }
+        {
+            let mut fired = FIRED_PANICS.lock().unwrap_or_else(|e| e.into_inner());
+            if fired.contains(&(site, index)) {
+                return; // second execution (the retry) succeeds
+            }
+            fired.push((site, index));
+        }
+        log(site, index, Fault::WorkerPanic);
+        panic!("injected worker panic at {} index {index}", site.name());
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+pub use active::{arm, take_events, InjectorGuard};
+
+/// True when a plan targeting `site` is armed (lets callers skip
+/// fault-only work, e.g. cloning the dataset for window corruption).
+/// Always `false` without the `fault-inject` feature.
+#[cfg(feature = "fault-inject")]
+pub fn armed_for(site: Site) -> bool {
+    active::armed_for(site)
+}
+
+/// See the feature-gated twin; compiled to a constant without
+/// `fault-inject`.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn armed_for(_site: Site) -> bool {
+    false
+}
+
+/// Corrupt a row-major f64 payload at `site`/`index` per the armed plan;
+/// returns whether a fault fired. No-op without `fault-inject`.
+#[cfg(feature = "fault-inject")]
+pub fn corrupt_slice_f64(
+    site: Site,
+    index: usize,
+    data: &mut [f64],
+    rows: usize,
+    cols: usize,
+) -> bool {
+    active::corrupt_slice_f64(site, index, data, rows, cols)
+}
+
+/// See the feature-gated twin; compiled to a no-op without `fault-inject`.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn corrupt_slice_f64(
+    _site: Site,
+    _index: usize,
+    _data: &mut [f64],
+    _rows: usize,
+    _cols: usize,
+) -> bool {
+    false
+}
+
+/// Corrupt a row-major f32 payload at `site`/`index` per the armed plan;
+/// returns whether a fault fired. No-op without `fault-inject`.
+#[cfg(feature = "fault-inject")]
+pub fn corrupt_slice_f32(
+    site: Site,
+    index: usize,
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+) -> bool {
+    active::corrupt_slice_f32(site, index, data, rows, cols)
+}
+
+/// See the feature-gated twin; compiled to a no-op without `fault-inject`.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn corrupt_slice_f32(
+    _site: Site,
+    _index: usize,
+    _data: &mut [f32],
+    _rows: usize,
+    _cols: usize,
+) -> bool {
+    false
+}
+
+/// Row count the consumer should believe: halved when a `TruncateRows`
+/// plan fires at this (site, index), unchanged otherwise (and always
+/// unchanged without `fault-inject`).
+#[cfg(feature = "fault-inject")]
+pub fn truncated_rows(site: Site, index: usize, rows: usize) -> usize {
+    active::truncated_rows(site, index, rows)
+}
+
+/// See the feature-gated twin; identity without `fault-inject`.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn truncated_rows(_site: Site, _index: usize, rows: usize) -> usize {
+    rows
+}
+
+/// Panic the current worker item when a `WorkerPanic` plan fires at this
+/// (site, index) — once per index, so the sequential retry succeeds.
+/// No-op without `fault-inject`.
+#[cfg(feature = "fault-inject")]
+pub fn maybe_panic(site: Site, index: usize) {
+    active::maybe_panic(site, index)
+}
+
+/// See the feature-gated twin; no-op without `fault-inject`.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn maybe_panic(_site: Site, _index: usize) {}
+
+#[cfg(all(test, feature = "fault-inject"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_hooks_are_noops() {
+        // no plan armed (take the lock to keep parallel tests out)
+        let g = arm(FaultPlan {
+            seed: 1,
+            site: Site::Worker,
+            fault: Fault::WorkerPanic,
+            period: 1,
+        });
+        drop(g);
+        let mut data = vec![1.0f64; 8];
+        assert!(!corrupt_slice_f64(Site::HBlock, 0, &mut data, 2, 4));
+        assert_eq!(data, vec![1.0f64; 8]);
+        assert_eq!(truncated_rows(Site::HBlock, 0, 7), 7);
+        maybe_panic(Site::Worker, 3); // must not panic
+        assert!(!armed_for(Site::Worker));
+    }
+
+    #[test]
+    fn fire_pattern_is_deterministic_in_seed_and_index() {
+        let plan =
+            FaultPlan { seed: 9, site: Site::HBlock, fault: Fault::NanPayload, period: 3 };
+        let pattern = |p: FaultPlan| -> Vec<usize> {
+            let _g = arm(p);
+            let mut hits = Vec::new();
+            for idx in 0..64 {
+                let mut data = vec![1.0f64; 16];
+                if corrupt_slice_f64(Site::HBlock, idx, &mut data, 4, 4) {
+                    hits.push(idx);
+                }
+            }
+            hits
+        };
+        let a = pattern(plan);
+        let b = pattern(plan);
+        assert_eq!(a, b, "same seed must fire at the same indices");
+        assert!(!a.is_empty() && a.len() < 64, "period 3 fires a strict subset: {a:?}");
+        let c = pattern(FaultPlan { seed: 10, ..plan });
+        assert_ne!(a, c, "different seed, different pattern");
+    }
+
+    #[test]
+    fn payload_faults_do_what_they_say() {
+        let base = vec![0.5f64; 12];
+        let run = |fault: Fault| -> Vec<f64> {
+            let _g = arm(FaultPlan { seed: 3, site: Site::HBlock, fault, period: 1 });
+            let mut data = base.clone();
+            assert!(corrupt_slice_f64(Site::HBlock, 0, &mut data, 3, 4));
+            let ev = take_events();
+            assert_eq!(ev.len(), 1);
+            assert_eq!(ev[0].fault, fault);
+            data
+        };
+        assert!(run(Fault::NanPayload).iter().any(|v| v.is_nan()));
+        assert!(run(Fault::InfPayload).iter().any(|v| v.is_infinite()));
+        let den = run(Fault::DenormalScale);
+        assert!(den.iter().all(|v| v.is_finite() && v.abs() < f64::MIN_POSITIVE));
+        let dup = run(Fault::DuplicateColumns);
+        for r in 0..3 {
+            assert_eq!(dup[r * 4 + 3], dup[r * 4]);
+        }
+        let cst = run(Fault::ConstantColumn);
+        for r in 0..3 {
+            assert_eq!(cst[r * 4], 1.0);
+        }
+    }
+
+    #[test]
+    fn truncation_and_site_filtering() {
+        let _g = arm(FaultPlan {
+            seed: 5,
+            site: Site::HBlock,
+            fault: Fault::TruncateRows,
+            period: 1,
+        });
+        assert_eq!(truncated_rows(Site::HBlock, 2, 10), 5);
+        // other sites untouched
+        assert_eq!(truncated_rows(Site::TsqrLeaf, 2, 10), 10);
+        let mut data = vec![1.0f32; 8];
+        assert!(!corrupt_slice_f32(Site::GramPartial, 0, &mut data, 2, 4));
+        assert!(armed_for(Site::HBlock));
+        assert!(!armed_for(Site::Worker));
+    }
+
+    #[test]
+    fn worker_panic_fires_once_per_index() {
+        let _g = arm(FaultPlan {
+            seed: 7,
+            site: Site::Worker,
+            fault: Fault::WorkerPanic,
+            period: 1,
+        });
+        let caught = std::panic::catch_unwind(|| maybe_panic(Site::Worker, 4));
+        assert!(caught.is_err(), "first execution must panic");
+        maybe_panic(Site::Worker, 4); // retry: must not panic
+        let ev = take_events();
+        assert_eq!(ev, vec![InjectionEvent {
+            site: Site::Worker,
+            index: 4,
+            fault: Fault::WorkerPanic
+        }]);
+    }
+}

@@ -1,0 +1,165 @@
+//! The explicit degradation ladder: ridge normal equations with
+//! escalating λ, ending in a typed failure.
+//!
+//! Every solve strategy degrades the same way: primary factorization
+//! (QR/TSQR back-substitution, or the Gram strategy's ridge at its
+//! configured λ) → the rungs of [`RIDGE_LADDER`] → typed
+//! [`SolveError::LadderExhausted`]. Each rung's β is validated for
+//! finiteness before it is accepted — a rung that "succeeds" with NaN in
+//! it counts as failed, which closes the silent-NaN-β hole the old
+//! fallbacks had.
+//!
+//! Bit-compatibility: the first rung is exactly the call the pre-ladder
+//! code made (`lstsq_ridge_from_parts` at the caller's base λ), so any
+//! solve that used to succeed produces the identical β bits; the ladder
+//! only adds behavior where the old code errored out.
+
+use anyhow::Result;
+
+use crate::linalg::solve::lstsq_ridge_from_parts;
+use crate::linalg::Matrix;
+
+use super::error::SolveError;
+use super::report::{DegradationRung, SolveReport};
+
+/// The escalating ridge λ rungs (relative λ — see
+/// [`lstsq_ridge_from_parts`]'s scale-invariant regularization). Rungs at
+/// or below the caller's base λ are skipped.
+pub const RIDGE_LADDER: [f64; 3] = [1e-8, 1e-4, 1e-2];
+
+/// The λ sequence the ladder will attempt from a base λ: the base itself,
+/// then every [`RIDGE_LADDER`] rung strictly above it. A non-positive or
+/// non-finite base falls back to the ladder's first rung.
+pub fn ladder_lambdas(base: f64) -> Vec<f64> {
+    let base = if base > 0.0 && base.is_finite() { base } else { RIDGE_LADDER[0] };
+    let mut out = vec![base];
+    for &l in RIDGE_LADDER.iter() {
+        if l > base {
+            out.push(l);
+        }
+    }
+    out
+}
+
+/// True when every entry is finite (no NaN/Inf). The acceptance gate for
+/// every rung's β.
+pub fn all_finite(xs: &[f64]) -> bool {
+    xs.iter().all(|v| v.is_finite())
+}
+
+/// Climb the ridge ladder on an accumulated normal-equation system
+/// `(G + λI) β = c`, recording the outcome in `report`.
+///
+/// `primary_is_ridge` says whether the base-λ attempt *is* the strategy's
+/// primary solve (the Gram strategy) — recorded as
+/// [`DegradationRung::Primary`] — or a fallback from a failed QR/TSQR
+/// primary, where even the base-λ rung counts as degradation
+/// ([`DegradationRung::Ridge`] step 1). Every failed rung increments
+/// `report.retries`; exhaustion sets [`DegradationRung::Failed`] and
+/// returns a typed [`SolveError::LadderExhausted`].
+pub fn ridge_ladder_solve(
+    g: &Matrix,
+    c: &[f64],
+    base_lambda: f64,
+    primary_is_ridge: bool,
+    report: &mut SolveReport,
+) -> Result<Vec<f64>> {
+    let lambdas = ladder_lambdas(base_lambda);
+    let mut attempts = 0u32;
+    let mut last = String::new();
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        attempts += 1;
+        match lstsq_ridge_from_parts(g, c, lambda) {
+            Ok(beta) if all_finite(&beta) => {
+                report.rung = if primary_is_ridge && i == 0 {
+                    DegradationRung::Primary
+                } else {
+                    // with a ridge primary the base rung was step "0", so
+                    // escalations are steps 1.. either way
+                    let step = if primary_is_ridge { i as u32 } else { i as u32 + 1 };
+                    DegradationRung::Ridge { step, lambda }
+                };
+                report.effective_lambda = lambda;
+                return Ok(beta);
+            }
+            Ok(_) => {
+                report.retries += 1;
+                last = format!("rung λ={lambda:.1e} produced non-finite β");
+            }
+            Err(e) => {
+                report.retries += 1;
+                last = format!("rung λ={lambda:.1e}: {e:#}");
+            }
+        }
+    }
+    report.rung = DegradationRung::Failed;
+    Err(SolveError::LadderExhausted { base_lambda, attempts, last }.into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robust::error::as_solve_error;
+    use crate::robust::report::SolveStrategyKind;
+    use crate::util::rng::Rng;
+
+    fn gram_of(rows: usize, cols: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::random(rows, cols, &mut rng);
+        let b: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        (a.gram(), a.t_matvec(&b))
+    }
+
+    #[test]
+    fn lambda_sequence_skips_rungs_below_base() {
+        assert_eq!(ladder_lambdas(1e-8), vec![1e-8, 1e-4, 1e-2]);
+        assert_eq!(ladder_lambdas(1e-6), vec![1e-6, 1e-4, 1e-2]);
+        assert_eq!(ladder_lambdas(1e-3), vec![1e-3, 1e-2]);
+        assert_eq!(ladder_lambdas(0.5), vec![0.5]);
+        // degenerate bases fall back to the first rung
+        assert_eq!(ladder_lambdas(0.0), vec![1e-8, 1e-4, 1e-2]);
+        assert_eq!(ladder_lambdas(f64::NAN), vec![1e-8, 1e-4, 1e-2]);
+    }
+
+    #[test]
+    fn healthy_system_takes_base_rung_bit_identically() {
+        let (g, c) = gram_of(60, 6, 1);
+        let direct = lstsq_ridge_from_parts(&g, &c, 1e-6).unwrap();
+        let mut report = SolveReport::new(SolveStrategyKind::Gram);
+        let beta = ridge_ladder_solve(&g, &c, 1e-6, true, &mut report).unwrap();
+        assert_eq!(beta, direct, "base rung must be bit-identical to the direct call");
+        assert_eq!(report.rung, DegradationRung::Primary);
+        assert_eq!(report.effective_lambda, 1e-6);
+        assert_eq!(report.retries, 0);
+    }
+
+    #[test]
+    fn fallback_base_rung_counts_as_degradation() {
+        let (g, c) = gram_of(60, 6, 2);
+        let mut report = SolveReport::new(SolveStrategyKind::Tsqr);
+        let beta = ridge_ladder_solve(&g, &c, 1e-8, false, &mut report).unwrap();
+        assert!(all_finite(&beta));
+        assert_eq!(report.rung, DegradationRung::Ridge { step: 1, lambda: 1e-8 });
+    }
+
+    #[test]
+    fn poisoned_system_exhausts_with_typed_error() {
+        let mut g = Matrix::identity(4);
+        g[(2, 2)] = f64::NAN;
+        let c = vec![1.0; 4];
+        let mut report = SolveReport::new(SolveStrategyKind::Gram);
+        let err = ridge_ladder_solve(&g, &c, 1e-8, true, &mut report).unwrap_err();
+        let se = as_solve_error(&err).expect("typed error");
+        assert!(matches!(se, SolveError::LadderExhausted { attempts: 3, .. }), "{se}");
+        assert_eq!(report.rung, DegradationRung::Failed);
+        assert_eq!(report.retries, 3);
+    }
+
+    #[test]
+    fn finiteness_gate() {
+        assert!(all_finite(&[0.0, -1.0, 1e300]));
+        assert!(!all_finite(&[0.0, f64::NAN]));
+        assert!(!all_finite(&[f64::INFINITY]));
+        assert!(all_finite(&[]));
+    }
+}

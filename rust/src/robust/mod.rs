@@ -1,0 +1,39 @@
+//! Robustness substrate: typed solve failures, degradation ladder,
+//! input quarantine, and deterministic fault injection.
+//!
+//! The solve pipeline's robustness contract (the ground ROADMAP's fleet
+//! trainer stands on) is: **every training call either returns a finite β
+//! with a [`SolveReport`] recording how it was produced, or a typed
+//! [`SolveError`] — never a silent NaN β and never a propagated worker
+//! panic.** This module is that contract's home:
+//!
+//! * [`error`] — the [`SolveError`] taxonomy replacing the stringly
+//!   `anyhow` bails of `solve.rs`/`tsqr.rs`/`cholesky.rs`.
+//! * [`report`] — [`SolveReport`]: strategy, degradation rung, rank
+//!   verdict, effective λ, retries, quarantined rows; threaded through
+//!   `CpuElmTrainer`/`PrElmTrainer` in the `TrainBreakdown`.
+//! * [`ladder`] — the uniform degradation ladder (primary factorization →
+//!   escalating ridge λ → typed failure) all three `SolveStrategy`
+//!   variants share, with a β-finiteness gate on every rung.
+//! * [`quarantine`] — non-finite window screening before a poisoned row
+//!   reaches the Gram fold; the clean path borrows (bit-identity).
+//! * [`inject`] — the seed-keyed fault-injection harness behind the
+//!   `fault-inject` cargo feature (no-op hooks otherwise).
+//!
+//! Invariant inherited from PRs 2–5: when no fault is injected and no
+//! ladder rung fires, every β bit is unchanged — the robustness layer
+//! only *adds* behavior where the old code returned NaN, bailed with a
+//! string, or panicked.
+
+#![deny(missing_docs)]
+
+pub mod error;
+pub mod inject;
+pub mod ladder;
+pub mod quarantine;
+pub mod report;
+
+pub use error::{as_solve_error, SolveError};
+pub use ladder::{all_finite, ladder_lambdas, ridge_ladder_solve, RIDGE_LADDER};
+pub use quarantine::{screen, Screened};
+pub use report::{DeficiencyVerdict, DegradationRung, SolveReport, SolveStrategyKind};

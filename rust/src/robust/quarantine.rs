@@ -1,0 +1,142 @@
+//! Input quarantine: non-finite window screening before blocks poison
+//! the Gram fold.
+//!
+//! One NaN sample row turns an entire (HᵀH, HᵀY) fold — and hence β —
+//! into NaN. The screen runs once per training call, *before* the block
+//! schedule is cut: rows whose x-window, y-history, or target contain
+//! NaN/Inf are dropped, and the trainer proceeds on the surviving rows
+//! with the dropped count recorded in the
+//! [`SolveReport`](super::report::SolveReport).
+//!
+//! The clean path borrows: a dataset with no poisoned rows is returned
+//! as-is (`Screened::Clean`), so healthy runs see the identical
+//! `Windowed` value — same block boundaries, same bits — as before this
+//! module existed.
+
+use anyhow::Result;
+
+use crate::data::window::Windowed;
+
+use super::error::SolveError;
+
+/// Outcome of screening a windowed dataset.
+pub enum Screened<'a> {
+    /// No poisoned rows: the original dataset, borrowed untouched (the
+    /// bit-identity path).
+    Clean(&'a Windowed),
+    /// Some rows dropped: a filtered copy plus the dropped count.
+    Filtered {
+        /// The surviving rows, re-packed contiguously in order.
+        data: Windowed,
+        /// How many rows the screen dropped.
+        dropped: usize,
+    },
+}
+
+impl<'a> Screened<'a> {
+    /// The dataset to train on (original or filtered).
+    pub fn data(&self) -> &Windowed {
+        match self {
+            Screened::Clean(w) => w,
+            Screened::Filtered { data, .. } => data,
+        }
+    }
+
+    /// Rows the screen dropped (0 on the clean path).
+    pub fn dropped(&self) -> usize {
+        match self {
+            Screened::Clean(_) => 0,
+            Screened::Filtered { dropped, .. } => *dropped,
+        }
+    }
+}
+
+/// True when every value the row feeds into H (x window, y-history) and
+/// its target is finite.
+fn row_is_finite(w: &Windowed, i: usize) -> bool {
+    w.x_row(i).iter().all(|v| v.is_finite())
+        && w.yhist_row(i).iter().all(|v| v.is_finite())
+        && w.y[i].is_finite()
+}
+
+/// Screen a windowed dataset for non-finite rows (see the module docs).
+/// Errors with a typed [`SolveError::AllRowsQuarantined`] when nothing
+/// survives.
+pub fn screen(w: &Windowed) -> Result<Screened<'_>> {
+    let bad: Vec<usize> = (0..w.n).filter(|&i| !row_is_finite(w, i)).collect();
+    if bad.is_empty() {
+        return Ok(Screened::Clean(w));
+    }
+    if bad.len() == w.n {
+        return Err(SolveError::AllRowsQuarantined { rows: w.n }.into());
+    }
+    let sq = w.s * w.q;
+    let keep = w.n - bad.len();
+    let mut out = Windowed {
+        n: keep,
+        s: w.s,
+        q: w.q,
+        x: Vec::with_capacity(keep * sq),
+        y: Vec::with_capacity(keep),
+        yhist: Vec::with_capacity(keep * w.q),
+    };
+    for i in 0..w.n {
+        if row_is_finite(w, i) {
+            out.x.extend_from_slice(w.x_row(i));
+            out.yhist.extend_from_slice(w.yhist_row(i));
+            out.y.push(w.y[i]);
+        }
+    }
+    Ok(Screened::Filtered { data: out, dropped: bad.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robust::error::as_solve_error;
+
+    fn toy(n: usize, q: usize) -> Windowed {
+        let series: Vec<f64> = (0..n + q).map(|i| (i as f64 * 0.1).sin()).collect();
+        Windowed::from_series(&series, q).unwrap()
+    }
+
+    #[test]
+    fn clean_dataset_is_borrowed_untouched() {
+        let w = toy(50, 4);
+        let s = screen(&w).unwrap();
+        assert_eq!(s.dropped(), 0);
+        assert!(matches!(s, Screened::Clean(_)));
+        // same allocation, not a copy
+        assert!(std::ptr::eq(s.data(), &w));
+    }
+
+    #[test]
+    fn poisoned_rows_are_dropped_and_counted() {
+        let mut w = toy(50, 4);
+        w.x[3 * 4 + 1] = f32::NAN; // row 3's window
+        w.y[10] = f32::INFINITY; // row 10's target
+        w.yhist[20 * 4] = f32::NAN; // row 20's feedback history
+        let s = screen(&w).unwrap();
+        assert_eq!(s.dropped(), 3);
+        let d = s.data();
+        assert_eq!(d.n, 47);
+        assert!(d.x.iter().all(|v| v.is_finite()));
+        assert!(d.y.iter().all(|v| v.is_finite()));
+        assert!(d.yhist.iter().all(|v| v.is_finite()));
+        // surviving rows keep their content and order: old row 4 is new row 3
+        assert_eq!(d.x_row(3), w.x_row(4));
+        assert_eq!(d.y[3], w.y[4]);
+        assert_eq!(d.yhist_row(3), w.yhist_row(4));
+    }
+
+    #[test]
+    fn all_poisoned_is_a_typed_error() {
+        let mut w = toy(8, 3);
+        for v in w.y.iter_mut() {
+            *v = f32::NAN;
+        }
+        let err = screen(&w).unwrap_err();
+        let se = as_solve_error(&err).expect("typed error");
+        assert_eq!(*se, SolveError::AllRowsQuarantined { rows: 8 });
+    }
+}

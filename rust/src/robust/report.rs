@@ -1,0 +1,198 @@
+//! `SolveReport` — provenance of *how* a β was produced.
+//!
+//! Every trained model's solve carries one: which strategy ran, which
+//! degradation rung finally produced β, what the rank verdict on the
+//! triangular factor was, the effective ridge λ, how many retries (failed
+//! rungs + panic retries) it took, and how many input rows quarantine
+//! dropped. The report is `Copy` so it rides inside
+//! [`TrainBreakdown`](crate::coordinator::TrainBreakdown) without touching
+//! that struct's derive set.
+
+/// Which β-solve pipeline produced (or attempted) the solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolveStrategyKind {
+    /// No solve has run yet (the `Default` placeholder).
+    #[default]
+    Unspecified,
+    /// Householder QR on the assembled H (`lstsq_qr` / DirectQr strategy).
+    Qr,
+    /// Communication-avoiding TSQR tree over row blocks.
+    Tsqr,
+    /// Ridge normal equations folded from (HᵀH, HᵀY) partials.
+    Gram,
+    /// Recursive least squares (`elm::online`).
+    Online,
+}
+
+impl SolveStrategyKind {
+    /// Stable lowercase name for logs and bench metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            SolveStrategyKind::Unspecified => "unspecified",
+            SolveStrategyKind::Qr => "qr",
+            SolveStrategyKind::Tsqr => "tsqr",
+            SolveStrategyKind::Gram => "gram",
+            SolveStrategyKind::Online => "online",
+        }
+    }
+}
+
+/// Which rung of the degradation ladder produced β.
+///
+/// The ladder is: primary factorization (QR/TSQR back-substitution, or the
+/// Gram strategy's ridge at its configured λ) → ridge normal equations
+/// with escalating λ (see [`super::ladder::RIDGE_LADDER`]) → typed
+/// failure. `step` counts rungs taken *beyond* the primary, starting at 1.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum DegradationRung {
+    /// The strategy's primary solve succeeded — no degradation.
+    #[default]
+    Primary,
+    /// A ridge fallback rung produced β.
+    Ridge {
+        /// 1-based rung index beyond the primary solve.
+        step: u32,
+        /// The λ that succeeded (relative, see `lstsq_ridge_from_parts`).
+        lambda: f64,
+    },
+    /// Every rung failed; the solve returned a typed error.
+    Failed,
+}
+
+impl DegradationRung {
+    /// Stable rung family name: `"primary"`, `"ridge"`, or `"failed"` —
+    /// the vocabulary `ci/check_bench.py` validates in bench metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradationRung::Primary => "primary",
+            DegradationRung::Ridge { .. } => "ridge",
+            DegradationRung::Failed => "failed",
+        }
+    }
+
+    /// Detailed label, e.g. `"ridge[2]@1.0e-4"`.
+    pub fn label(self) -> String {
+        match self {
+            DegradationRung::Primary => "primary".to_string(),
+            DegradationRung::Ridge { step, lambda } => {
+                format!("ridge[{step}]@{lambda:.1e}")
+            }
+            DegradationRung::Failed => "failed".to_string(),
+        }
+    }
+}
+
+/// Rank verdict on the triangular factor the primary solve produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeficiencyVerdict {
+    /// The strategy never produced a factor to check (Gram path, or the
+    /// factorization itself failed).
+    #[default]
+    NotChecked,
+    /// Every pivot cleared the relative rank tolerance.
+    FullRank,
+    /// A pivot fell below the relative tolerance — collapsed features.
+    RankDeficient {
+        /// First deficient pivot row.
+        pivot: usize,
+    },
+    /// The factor diagonal contained NaN/Inf — poisoned inputs.
+    NonFinite {
+        /// First non-finite diagonal row.
+        row: usize,
+    },
+}
+
+impl DeficiencyVerdict {
+    /// True when the factor is safe to back-substitute through.
+    pub fn is_clean(self) -> bool {
+        matches!(self, DeficiencyVerdict::FullRank)
+    }
+}
+
+/// Provenance of one β solve (see the module docs). `Copy + Default` by
+/// design: it lives inside `TrainBreakdown`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SolveReport {
+    /// Which solve pipeline ran.
+    pub strategy: SolveStrategyKind,
+    /// Which degradation rung produced β.
+    pub rung: DegradationRung,
+    /// Rank verdict on the primary factor (when one was produced).
+    pub verdict: DeficiencyVerdict,
+    /// The ridge λ in effect for the rung that produced β (0.0 for an
+    /// unregularized primary QR/TSQR solve).
+    pub effective_lambda: f64,
+    /// Failed attempts before β: failed ladder rungs + worker-panic
+    /// retries.
+    pub retries: u32,
+    /// Input rows dropped by the non-finite quarantine screen.
+    pub quarantined_rows: usize,
+}
+
+impl SolveReport {
+    /// Fresh report for a strategy about to run its primary solve.
+    pub fn new(strategy: SolveStrategyKind) -> SolveReport {
+        SolveReport { strategy, ..SolveReport::default() }
+    }
+
+    /// Rung family name (`"primary"` / `"ridge"` / `"failed"`), the value
+    /// benches export as the `solve_report` metadata field.
+    pub fn rung_name(&self) -> &'static str {
+        self.rung.name()
+    }
+
+    /// One-line summary for logs:
+    /// `"tsqr primary λ=0.0e0 retries=0 quarantined=0"`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} λ={:.1e} retries={} quarantined={}",
+            self.strategy.name(),
+            self.rung.label(),
+            self.effective_lambda,
+            self.retries,
+            self.quarantined_rows
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_primary_unspecified() {
+        let r = SolveReport::default();
+        assert_eq!(r.strategy, SolveStrategyKind::Unspecified);
+        assert_eq!(r.rung, DegradationRung::Primary);
+        assert_eq!(r.verdict, DeficiencyVerdict::NotChecked);
+        assert_eq!(r.retries, 0);
+        assert_eq!(r.quarantined_rows, 0);
+    }
+
+    #[test]
+    fn rung_names_and_labels() {
+        assert_eq!(DegradationRung::Primary.name(), "primary");
+        let r = DegradationRung::Ridge { step: 2, lambda: 1e-4 };
+        assert_eq!(r.name(), "ridge");
+        assert!(r.label().starts_with("ridge[2]@"), "{}", r.label());
+        assert_eq!(DegradationRung::Failed.name(), "failed");
+    }
+
+    #[test]
+    fn summary_mentions_strategy_and_rung() {
+        let mut r = SolveReport::new(SolveStrategyKind::Tsqr);
+        r.rung = DegradationRung::Ridge { step: 1, lambda: 1e-8 };
+        r.retries = 1;
+        let s = r.summary();
+        assert!(s.contains("tsqr") && s.contains("ridge[1]") && s.contains("retries=1"), "{s}");
+    }
+
+    #[test]
+    fn verdict_cleanliness() {
+        assert!(DeficiencyVerdict::FullRank.is_clean());
+        assert!(!DeficiencyVerdict::NotChecked.is_clean());
+        assert!(!DeficiencyVerdict::RankDeficient { pivot: 0 }.is_clean());
+        assert!(!DeficiencyVerdict::NonFinite { row: 0 }.is_clean());
+    }
+}

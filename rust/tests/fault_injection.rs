@@ -1,0 +1,256 @@
+//! Fault-injection matrix: every fault class, at every site it applies
+//! to, through every solve strategy, at every worker count the CI matrix
+//! runs (`FAULT_MATRIX_WORKERS`).
+//!
+//! The contract under test (the robustness invariant): an injected run
+//! either returns a **finite β with a [`SolveReport`] rung** explaining
+//! how it recovered, or a **typed [`SolveError`]** — never a silent NaN
+//! β and never a propagated worker panic. And because fire decisions are
+//! keyed by (seed, block index) — not worker count — the *outcome* (β
+//! bits on recovery, error class on failure) is identical at any worker
+//! count.
+//!
+//! Only compiled with `--features fault-inject`; the plain test build
+//! carries none of this.
+
+#![cfg(feature = "fault-inject")]
+
+use opt_pr_elm::coordinator::accumulator::SolveStrategy;
+use opt_pr_elm::coordinator::pipeline::CpuElmTrainer;
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::Arch;
+use opt_pr_elm::robust::inject::{arm, take_events, Fault, FaultPlan, Site};
+use opt_pr_elm::robust::{as_solve_error, DegradationRung};
+use opt_pr_elm::util::rng::Rng;
+
+const STRATEGIES: [SolveStrategy; 3] =
+    [SolveStrategy::Gram, SolveStrategy::Tsqr, SolveStrategy::DirectQr];
+
+/// Worker counts to sweep: the CI fault-matrix job pins one count per
+/// matrix leg via `FAULT_MATRIX_WORKERS`; an unset env sweeps both a
+/// sequential and a parallel schedule locally.
+fn worker_counts() -> Vec<usize> {
+    match std::env::var("FAULT_MATRIX_WORKERS") {
+        Ok(v) => vec![v.parse().expect("FAULT_MATRIX_WORKERS must be a number")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn toy_windowed(n: usize, q: usize, seed: u64) -> Windowed {
+    let mut rng = Rng::new(seed);
+    let mut y = vec![0.3f64, 0.45];
+    for t in 2..n + q {
+        let v = 0.5 * y[t - 1] + 0.22 * y[t - 2]
+            + 0.12 * (t as f64 * 0.17).sin()
+            + 0.05 * rng.normal();
+        y.push(v);
+    }
+    Windowed::from_series(&y, q).unwrap()
+}
+
+fn trainer(workers: usize, strategy: SolveStrategy) -> CpuElmTrainer {
+    let mut t = CpuElmTrainer::new(workers);
+    t.strategy = strategy;
+    t.block_rows = 64;
+    t
+}
+
+/// Worker-count-invariant signature of one injected run: β bits + rung on
+/// recovery, or the typed error class on failure.
+#[derive(Debug, PartialEq)]
+enum Outcome {
+    Recovered { beta: Vec<f64>, rung: &'static str, quarantined: usize },
+    TypedError { class: &'static str },
+}
+
+/// Run one injected training and enforce the contract: finite β with a
+/// rung, or a typed error — and the injection actually fired.
+fn run_contract(
+    plan: FaultPlan,
+    strategy: SolveStrategy,
+    workers: usize,
+    w: &Windowed,
+) -> Outcome {
+    let guard = arm(plan);
+    let out = trainer(workers, strategy).train(Arch::Elman, w, 8, 3);
+    let events = take_events();
+    drop(guard);
+    assert!(
+        !events.is_empty(),
+        "{plan:?}/{strategy:?} w={workers}: campaign never fired (vacuous test)"
+    );
+    assert!(events.iter().all(|e| e.site == plan.site && e.fault == plan.fault));
+    match out {
+        Ok((model, bd)) => {
+            assert!(
+                model.beta.iter().all(|b| b.is_finite()),
+                "{plan:?}/{strategy:?} w={workers}: Ok with non-finite β — \
+                 the exact silent poisoning the harness exists to catch"
+            );
+            assert_ne!(bd.solve_report.rung, DegradationRung::Failed);
+            Outcome::Recovered {
+                beta: model.beta,
+                rung: bd.solve_report.rung_name(),
+                quarantined: bd.solve_report.quarantined_rows,
+            }
+        }
+        Err(e) => {
+            let se = as_solve_error(&e).unwrap_or_else(|| {
+                panic!("{plan:?}/{strategy:?} w={workers}: stringly error: {e}")
+            });
+            Outcome::TypedError { class: se.class() }
+        }
+    }
+}
+
+/// The full site × fault × strategy sweep: every leg honors the contract,
+/// and the outcome is identical at every worker count.
+#[test]
+fn fault_matrix_honors_the_contract_at_every_worker_count() {
+    let w = toy_windowed(260, 6, 1);
+    let plans = [
+        (Site::DataWindow, Fault::NanPayload),
+        (Site::DataWindow, Fault::InfPayload),
+        (Site::HBlock, Fault::NanPayload),
+        (Site::HBlock, Fault::InfPayload),
+        (Site::HBlock, Fault::DenormalScale),
+        (Site::HBlock, Fault::DuplicateColumns),
+        (Site::HBlock, Fault::ConstantColumn),
+        (Site::HBlock, Fault::TruncateRows),
+        (Site::TsqrLeaf, Fault::NanPayload),
+        (Site::Worker, Fault::WorkerPanic),
+    ];
+    for (site, fault) in plans {
+        for strategy in STRATEGIES {
+            // the TSQR-leaf site only exists on the TSQR path
+            if site == Site::TsqrLeaf && strategy != SolveStrategy::Tsqr {
+                continue;
+            }
+            // period 1: fire at every index — a sparser period on a
+            // 5-block dataset could deterministically never fire, which
+            // the vacuousness assert below would (correctly) reject
+            let plan = FaultPlan { seed: 42, site, fault, period: 1 };
+            let mut base: Option<Outcome> = None;
+            for workers in worker_counts() {
+                let out = run_contract(plan, strategy, workers, &w);
+                match &base {
+                    None => base = Some(out),
+                    Some(b) => assert_eq!(
+                        b, &out,
+                        "{site:?}/{fault:?}/{strategy:?}: outcome differs at \
+                         workers={workers}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Gram-partial corruption is Gram-strategy-specific: a NaN partial can
+/// never survive the ladder's finiteness gate, so the run must end in a
+/// typed ladder exhaustion — not a NaN β.
+#[test]
+fn nan_gram_partial_is_a_typed_ladder_exhaustion() {
+    let w = toy_windowed(260, 6, 2);
+    for workers in worker_counts() {
+        let plan = FaultPlan {
+            seed: 7,
+            site: Site::GramPartial,
+            fault: Fault::NanPayload,
+            period: 1,
+        };
+        let out = run_contract(plan, SolveStrategy::Gram, workers, &w);
+        assert_eq!(
+            out,
+            Outcome::TypedError { class: "ladder-exhausted" },
+            "workers={workers}"
+        );
+    }
+}
+
+/// A poisoned TSQR leaf must be *recovered from*: the R-factor verdict
+/// flags the non-finite diagonal and the trainer re-solves through the
+/// ridge ladder on clean, recomputed Gram partials.
+#[test]
+fn poisoned_tsqr_leaf_recovers_through_the_ridge_ladder() {
+    let w = toy_windowed(260, 6, 3);
+    for workers in worker_counts() {
+        let plan = FaultPlan {
+            seed: 11,
+            site: Site::TsqrLeaf,
+            fault: Fault::NanPayload,
+            period: 1,
+        };
+        let out = run_contract(plan, SolveStrategy::Tsqr, workers, &w);
+        match out {
+            Outcome::Recovered { rung, .. } => {
+                assert_eq!(rung, "ridge", "workers={workers}")
+            }
+            other => panic!("expected ridge recovery, got {other:?}"),
+        }
+    }
+}
+
+/// A corrupted data window is the quarantine's job: the poisoned rows are
+/// screened out, counted in the report, and training succeeds on the rest.
+#[test]
+fn corrupted_window_rows_are_quarantined_and_counted() {
+    let w = toy_windowed(260, 6, 4);
+    for strategy in STRATEGIES {
+        for workers in worker_counts() {
+            let plan = FaultPlan {
+                seed: 13,
+                site: Site::DataWindow,
+                fault: Fault::NanPayload,
+                period: 1,
+            };
+            let out = run_contract(plan, strategy, workers, &w);
+            match out {
+                Outcome::Recovered { quarantined, .. } => assert!(
+                    quarantined > 0,
+                    "{strategy:?} w={workers}: NaN window rows must be counted"
+                ),
+                other => panic!("{strategy:?}: expected recovery, got {other:?}"),
+            }
+        }
+    }
+}
+
+/// Injected worker panics are isolated, retried once sequentially, and
+/// reported — and because the retry recomputes the identical block, β is
+/// bit-identical to the healthy run.
+#[test]
+fn injected_worker_panics_are_retried_to_a_bit_identical_beta() {
+    let w = toy_windowed(260, 6, 5);
+    for strategy in STRATEGIES {
+        for workers in worker_counts() {
+            // healthy reference (no plan armed)
+            let (healthy, _) =
+                trainer(workers, strategy).train(Arch::Elman, &w, 8, 3).unwrap();
+            let plan = FaultPlan {
+                seed: 17,
+                site: Site::Worker,
+                fault: Fault::WorkerPanic,
+                period: 1,
+            };
+            let guard = arm(plan);
+            let res = trainer(workers, strategy).train(Arch::Elman, &w, 8, 3);
+            let events = take_events();
+            drop(guard);
+            assert!(!events.is_empty(), "panic campaign never fired");
+            let (model, bd) = res.unwrap_or_else(|e| {
+                panic!("{strategy:?} w={workers}: panic leaked as error: {e}")
+            });
+            assert!(
+                bd.solve_report.retries >= events.len() as u32,
+                "{strategy:?} w={workers}: {} panics but only {} retries reported",
+                events.len(),
+                bd.solve_report.retries
+            );
+            assert_eq!(
+                model.beta, healthy.beta,
+                "{strategy:?} w={workers}: retried β must match the healthy bits"
+            );
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Degradation-ladder conformance sweep (always on — no fault injection).
+//!
+//! Degenerate-but-finite inputs must never produce a NaN β or a stringly
+//! error: every strategy either solves on its primary path or climbs the
+//! ridge ladder deterministically, and the [`SolveReport`] says which.
+//! The sweep pins, for each architecture × strategy:
+//!
+//! * degenerate inputs (constant series, all-zero targets) → finite β,
+//!   with the *same* ladder rung at every worker count,
+//! * rank-deficient systems at the linalg entry points → the same rung
+//!   (`Ridge` step 1 at `RIDGE_LADDER[0]`) from QR and TSQR alike,
+//! * poisoned rows → quarantined + reported, β bit-equal to training on
+//!   the pre-filtered dataset,
+//! * fully-poisoned datasets → a typed [`SolveError::AllRowsQuarantined`],
+//! * healthy runs → `Primary` rung, zero retries, zero quarantined rows
+//!   (the bit-identity contract: the ladder's rung 0 *is* the old solve).
+
+use opt_pr_elm::coordinator::accumulator::SolveStrategy;
+use opt_pr_elm::coordinator::pipeline::CpuElmTrainer;
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::{Arch, ALL_ARCHS};
+use opt_pr_elm::linalg::{lstsq_qr_report, lstsq_tsqr_report, Matrix, ParallelPolicy};
+use opt_pr_elm::robust::{
+    as_solve_error, quarantine, DegradationRung, SolveError, RIDGE_LADDER,
+};
+use opt_pr_elm::util::rng::Rng;
+
+const STRATEGIES: [SolveStrategy; 3] =
+    [SolveStrategy::Gram, SolveStrategy::Tsqr, SolveStrategy::DirectQr];
+const WORKERS: [usize; 4] = [1, 2, 4, 8];
+
+fn toy_windowed(n: usize, q: usize, seed: u64) -> Windowed {
+    let mut rng = Rng::new(seed);
+    let mut y = vec![0.3f64, 0.45];
+    for t in 2..n + q {
+        let v = 0.5 * y[t - 1] + 0.22 * y[t - 2]
+            + 0.12 * (t as f64 * 0.17).sin()
+            + 0.05 * rng.normal();
+        y.push(v);
+    }
+    let lo = y.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = y.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let z: Vec<f64> = y.iter().map(|v| (v - lo) / (hi - lo)).collect();
+    Windowed::from_series(&z, q).unwrap()
+}
+
+fn trainer(workers: usize, strategy: SolveStrategy) -> CpuElmTrainer {
+    let mut t = CpuElmTrainer::new(workers);
+    t.strategy = strategy;
+    t.block_rows = 64;
+    t
+}
+
+#[test]
+fn constant_series_degrades_identically_at_every_worker_count() {
+    // a constant series makes every H row identical (rank 1 < M): the
+    // primary QR/TSQR paths must detect the deficiency and climb the
+    // ladder; Gram's ridge handles it on rung 0. Whatever rung fires, it
+    // must be the same rung — and the same β bits — at every worker count.
+    let w = Windowed::from_series(&vec![0.5f64; 208], 8).unwrap();
+    for strategy in STRATEGIES {
+        for arch in ALL_ARCHS {
+            let mut base: Option<(Vec<f64>, DegradationRung, u32)> = None;
+            for workers in WORKERS {
+                let (model, bd) = trainer(workers, strategy)
+                    .train(arch, &w, 10, 3)
+                    .unwrap_or_else(|e| {
+                        panic!("{}/{strategy:?} w={workers}: {e}", arch.name())
+                    });
+                assert!(
+                    model.beta.iter().all(|b| b.is_finite()),
+                    "{}/{strategy:?} w={workers}: non-finite β",
+                    arch.name()
+                );
+                let r = bd.solve_report;
+                assert_ne!(r.rung, DegradationRung::Failed);
+                assert_eq!(r.quarantined_rows, 0, "constant rows are finite");
+                match &base {
+                    None => base = Some((model.beta, r.rung, r.retries)),
+                    Some((beta, rung, retries)) => {
+                        assert_eq!(
+                            beta, &model.beta,
+                            "{}/{strategy:?}: β differs at workers={workers}",
+                            arch.name()
+                        );
+                        assert_eq!(
+                            (*rung, *retries),
+                            (r.rung, r.retries),
+                            "{}/{strategy:?}: report differs at workers={workers}",
+                            arch.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn duplicated_columns_take_the_same_rung_through_qr_and_tsqr() {
+    // a duplicated column is exactly rank-deficient: both direct QR and
+    // TSQR must fall back to the same first ladder rung over the normal
+    // equations, and say so in the report
+    let mut rng = Rng::new(11);
+    let (n, m) = (120usize, 6usize);
+    let mut a = Matrix::random(n, m, &mut rng);
+    for r in 0..n {
+        let v = a[(r, 0)];
+        a[(r, m - 1)] = v; // duplicate column 0 into the last column
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let policy = ParallelPolicy::with_workers(2);
+
+    let (beta_qr, rep_qr) = lstsq_qr_report(&a, &b, policy).unwrap();
+    let (beta_ts, rep_ts) = lstsq_tsqr_report(&a, &b, policy).unwrap();
+    for rep in [&rep_qr, &rep_ts] {
+        assert_eq!(
+            rep.rung,
+            DegradationRung::Ridge { step: 1, lambda: RIDGE_LADDER[0] },
+            "deficient system must land on ladder rung 1: {}",
+            rep.summary()
+        );
+        assert!(!rep.verdict.is_clean(), "verdict must flag the deficiency");
+        assert_eq!(rep.effective_lambda, RIDGE_LADDER[0]);
+    }
+    assert!(beta_qr.iter().all(|v| v.is_finite()));
+    assert!(beta_ts.iter().all(|v| v.is_finite()));
+    // both fall back to the identical normal-equations ladder
+    for (x, y) in beta_qr.iter().zip(&beta_ts) {
+        assert!((x - y).abs() < 1e-8, "qr {x} vs tsqr {y}");
+    }
+}
+
+#[test]
+fn all_zero_targets_stay_on_the_primary_rung() {
+    // zero targets are a perfectly conditioned (boring) problem: β ≈ 0 on
+    // the primary path, nothing to degrade
+    let mut w = toy_windowed(200, 6, 5);
+    w.y.iter_mut().for_each(|v| *v = 0.0);
+    for strategy in STRATEGIES {
+        for arch in [Arch::Elman, Arch::Fc, Arch::Lstm] {
+            let (model, bd) = trainer(2, strategy).train(arch, &w, 10, 3).unwrap();
+            assert!(model.beta.iter().all(|b| b.is_finite()));
+            assert_eq!(
+                bd.solve_report.rung,
+                DegradationRung::Primary,
+                "{}/{strategy:?}: {}",
+                arch.name(),
+                bd.solve_report.summary()
+            );
+            assert_eq!(bd.solve_report.retries, 0);
+        }
+    }
+}
+
+#[test]
+fn poisoned_rows_are_quarantined_and_reported() {
+    let mut w = toy_windowed(300, 6, 7);
+    w.x[4 * 6 + 2] = f32::NAN; // row 4's window
+    w.y[31] = f32::INFINITY; // row 31's target
+    w.yhist[120 * 6] = f32::NAN; // row 120's feedback history
+
+    // the trainer must see exactly what a manual pre-screen would produce
+    let screened = quarantine::screen(&w).unwrap();
+    let expect_dropped = screened.dropped();
+    assert_eq!(expect_dropped, 3);
+
+    for strategy in STRATEGIES {
+        for arch in [Arch::Elman, Arch::Jordan, Arch::Narmax] {
+            let (model, bd) = trainer(4, strategy).train(arch, &w, 10, 3).unwrap();
+            assert!(model.beta.iter().all(|b| b.is_finite()));
+            assert_eq!(
+                bd.solve_report.quarantined_rows, expect_dropped,
+                "{}/{strategy:?}: {}",
+                arch.name(),
+                bd.solve_report.summary()
+            );
+            // β must be bit-equal to training on the pre-filtered dataset
+            let (clean_model, clean_bd) =
+                trainer(4, strategy).train(arch, screened.data(), 10, 3).unwrap();
+            assert_eq!(clean_bd.solve_report.quarantined_rows, 0);
+            assert_eq!(
+                model.beta,
+                clean_model.beta,
+                "{}/{strategy:?}: quarantined train ≠ pre-filtered train",
+                arch.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fully_poisoned_dataset_is_a_typed_error_not_a_nan_beta() {
+    let mut w = toy_windowed(60, 5, 9);
+    w.y.iter_mut().for_each(|v| *v = f32::NAN);
+    for strategy in STRATEGIES {
+        let err = trainer(2, strategy).train(Arch::Elman, &w, 8, 3).unwrap_err();
+        let se = as_solve_error(&err).expect("typed SolveError");
+        assert_eq!(*se, SolveError::AllRowsQuarantined { rows: 60 });
+    }
+}
+
+#[test]
+fn healthy_runs_report_primary_with_nothing_to_explain() {
+    let w = toy_windowed(400, 6, 13);
+    for strategy in STRATEGIES {
+        for arch in ALL_ARCHS {
+            let (model, bd) = trainer(4, strategy).train(arch, &w, 10, 3).unwrap();
+            assert!(model.beta.iter().all(|b| b.is_finite()));
+            let r = bd.solve_report;
+            assert_eq!(
+                r.rung,
+                DegradationRung::Primary,
+                "{}/{strategy:?}: {}",
+                arch.name(),
+                r.summary()
+            );
+            assert_eq!(r.retries, 0, "{}/{strategy:?}", arch.name());
+            assert_eq!(r.quarantined_rows, 0, "{}/{strategy:?}", arch.name());
+        }
+    }
+}
