@@ -11,9 +11,10 @@ baseline ratio fails the job. Ratios, not absolute times, keep the gate
 portable across CI hardware generations.
 
 The bench's `meta` record must carry the machine's worker count in an
-explicit `workers` field; reading it from the `gflops` field (where old
-BENCH files smuggled it) is supported as a deprecated fallback for one
-release. A meta record carrying neither is rejected.
+explicit `workers` field. The deprecated fallback that read it from the
+`gflops` field (where pre-`workers` BENCH files smuggled it) has been
+removed after its one-release grace period: a meta record without
+`workers` is rejected outright — regenerate the BENCH file.
 
 Since ISSUE 5 the meta record also carries `isa` — which SIMD path the
 bench dispatched ("avx2" / "scalar"). Baseline keys listed in
@@ -47,22 +48,19 @@ def die(msg: str) -> None:
 def meta_workers(recs: list) -> float:
     """Worker count of the machine the bench ran on, from the meta record.
 
-    Prefers the explicit `workers` field; falls back to the legacy
-    `gflops` smuggle (deprecated — kept one release so old BENCH files
-    still gate); dies when the meta record carries neither.
+    Requires the explicit `workers` field. The legacy `gflops` smuggle
+    served its one-release deprecation window and is no longer honored: a
+    meta record without `workers` dies, whatever else it carries.
     """
     for r in recs:
         if r.get("op") != "meta":
             continue
-        if "workers" in r:
-            return max(1.0, float(r["workers"]))
-        if "gflops" in r:
-            print(
-                "WARN: meta record has no 'workers' field; falling back to "
-                "the deprecated gflops smuggle (regenerate BENCH_linalg.json)"
+        if "workers" not in r:
+            die(
+                "meta record carries no 'workers' field (the legacy gflops "
+                "smuggle is no longer honored — regenerate BENCH_linalg.json)"
             )
-            return max(1.0, float(r["gflops"]))
-        die("meta record carries neither 'workers' nor the legacy 'gflops'")
+        return max(1.0, float(r["workers"]))
     return 1.0  # no meta record: required_ops normally catches this first
 
 

@@ -1,9 +1,9 @@
 """Self-test for ci/check_bench.py (run with pytest, or directly).
 
 Exercises the paths a broken gate would silently wave through: a passing
-bench, a genuine speedup regression, a missing required op, the three
-meta-record worker-count cases (explicit `workers` field, the deprecated
-gflops fallback, and neither — which must be rejected), and the ISSUE-5
+bench, a genuine speedup regression, a missing required op, the
+meta-record worker-count cases (explicit `workers` field honored; the
+retired gflops smuggle and a bare meta both rejected), and the ISSUE-5
 `isa`-aware SIMD-microkernel floors (gated as written on an "avx2" meta,
 capped at parity on a scalar/missing meta so non-AVX2 runners are not
 misread as regressions).
@@ -78,13 +78,15 @@ def test_meta_workers_field_scales_threaded_floor():
     expect_fail([eight, rec("matmul"), rec("matmul_threaded", speedup=1.0)])
 
 
-def test_meta_gflops_fallback_still_honored():
-    # legacy BENCH file: worker count smuggled through gflops, no workers
+def test_meta_gflops_smuggle_no_longer_honored():
+    # legacy BENCH file: worker count smuggled through gflops, no workers.
+    # The one-release deprecation window is over — this is now rejected
+    # even on a bench that would otherwise pass.
     legacy = {"op": "meta", "shape": "workers=2", "ns_per_iter": 1.0, "gflops": 2.0}
-    gate([legacy, rec("matmul"), rec("matmul_threaded", speedup=1.0)])
+    expect_fail([legacy, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
 
 
-def test_meta_missing_both_rejected():
+def test_meta_missing_workers_rejected():
     bare = {"op": "meta", "shape": "workers=?", "ns_per_iter": 1.0}
     expect_fail([bare, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
 

@@ -1,8 +1,10 @@
 //! Microbenches for the β-solve substrate: blocked QR vs the seed scalar
 //! reference, tiled GEMM/Gram vs the naive loops, the accumulate-widen
 //! (f32 wire / f64 accumulate) kernels vs their f64 twins, TSQR streaming
-//! vs the parallel tree, and the GEMM-lifted FC `h_block` vs its scalar
-//! loop — at ELM-shaped sizes (tall-skinny, M ≤ 100).
+//! vs the parallel tree, the GEMM-lifted FC `h_block` vs its scalar
+//! loop, and the sequence-parallel chunked recurrence vs the sequential
+//! time loop at long horizons — at ELM-shaped sizes (tall-skinny,
+//! M ≤ 100).
 //!
 //! Besides the human-readable summary lines, the run emits a
 //! machine-readable `BENCH_linalg.json` (op, shape, ns/iter, GFLOP/s,
@@ -19,12 +21,12 @@
 
 use std::time::Duration;
 
-use opt_pr_elm::elm::arch::{fc, SampleBlock};
+use opt_pr_elm::elm::arch::{self as arch, fc, SampleBlock};
 use opt_pr_elm::elm::{Arch, ElmParams};
 use opt_pr_elm::linalg::{
     householder_qr, householder_qr_reference, lstsq_qr, lstsq_qr_report,
     lstsq_ridge, lstsq_tsqr, simd, solve_upper_triangular, FmaMode, Matrix,
-    MatrixF32, ParallelPolicy, TsqrAccumulator,
+    MatrixF32, ParallelPolicy, RecurrenceMode, TsqrAccumulator,
 };
 use opt_pr_elm::util::json::{num, obj, s, Json};
 use opt_pr_elm::util::rng::Rng;
@@ -40,9 +42,8 @@ struct Rec {
     gbps: f64,
     speedup_vs_reference: Option<f64>,
     /// bench machine's worker count — set on the `meta` record only, as
-    /// an explicit field (`ci/check_bench.py` no longer reads it out of
-    /// `gflops`, though the smuggle is still emitted one release for old
-    /// readers)
+    /// an explicit field (the one-release gflops smuggle is gone;
+    /// `ci/check_bench.py` now requires `workers` outright)
     workers: Option<f64>,
     /// which SIMD path the run dispatched ("avx2" / "scalar") — set on the
     /// `meta` record only, so the CI gate does not hold a scalar-fallback
@@ -129,8 +130,7 @@ fn main() {
     // the machine it actually ran on, and records which SIMD path was
     // dispatched (`isa`) so microkernel floors are not misread on
     // scalar-fallback runners. The worker count travels in the explicit
-    // `workers` field; it is *also* still mirrored into gflops for one
-    // release so pre-ISSUE-4 readers keep working.
+    // `workers` field only — the deprecated gflops mirror is retired.
     // healthy probe solve: a well-conditioned system must come back on the
     // ladder's primary rung — anything else means this machine's solve
     // substrate is degraded, which the CI gate warns about before holding
@@ -146,7 +146,7 @@ fn main() {
         op: "meta".to_string(),
         shape: format!("workers={} isa={}", threaded.workers, simd::isa_name()),
         ns_per_iter: 1.0,
-        gflops: threaded.workers as f64,
+        gflops: 0.0,
         gbps: 0.0,
         speedup_vs_reference: None,
         workers: Some(threaded.workers as f64),
@@ -351,6 +351,58 @@ fn main() {
         println!(
             "  -> f32-born FC h_block speedup vs scalar loop: {:.2}x",
             t_ref / t_f32
+        );
+        println!();
+    }
+
+    // long-horizon recurrence: the sequential GRU time loop vs the
+    // sequence-parallel chunked engine at 10⁵-scale horizons (quick mode
+    // keeps the same op keys at a smoke-sized horizon). The chunked mode
+    // evaluates only the tail chunk plus a lag-contraction warm-up, so
+    // its win is truncation-driven — it grows with the horizon and is
+    // gated in `linalg_baseline.json` as a plain (non-threaded) floor.
+    {
+        let (rows, s, m) = (64usize, 1usize, 32usize);
+        let q = if quick { 4096usize } else { 131_072 };
+        let (chunk, warmup) = (1024usize, 128usize);
+        let p = ElmParams::init(Arch::Gru, s, q, m, 6);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..rows * s * q).map(|_| rng.normal() as f32).collect();
+        let yh = vec![0f32; rows * q];
+        let eh = vec![0f32; rows * q];
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        let shape = format!("rows{rows}_q{q}_m{m}");
+        // lag-1 leaky recurrence: ~12 flops per (sample, step, unit)
+        let flops = 12.0 * (rows * q * m) as f64;
+        let bytes = 4.0 * ((rows * s * q) as f64 + (rows * m) as f64);
+        let r = bench(&format!("h_block_long_horizon {shape}"), 1, budget, 20, || {
+            arch::h_block_f32(&p, &blk)
+        });
+        let t_seq = push(&mut records, &r, "h_block_long_horizon", &shape, flops, bytes);
+        let chunked_policy = ParallelPolicy::auto()
+            .with_recurrence(RecurrenceMode::Chunked { chunk, warmup });
+        let chunked_steps = (chunk + warmup).min(q);
+        let chunked_flops = 12.0 * (rows * chunked_steps * m) as f64;
+        let r = bench(
+            &format!("h_block_long_horizon_chunked {shape}"),
+            1,
+            budget,
+            20,
+            || arch::h_block_f32_with(&p, &blk, chunked_policy),
+        );
+        let t_chk = push(
+            &mut records,
+            &r,
+            "h_block_long_horizon_chunked",
+            &shape,
+            chunked_flops,
+            bytes,
+        );
+        mark_speedup_at(&mut records, 1, t_seq / t_chk);
+        println!(
+            "  -> chunked long-horizon h_block (q={q}, chunk={chunk}+{warmup} warm-up) \
+             speedup vs sequential time loop: {:.2}x",
+            t_seq / t_chk
         );
         println!();
     }

@@ -28,7 +28,7 @@ use crate::coordinator::accumulator::{GramAccumulator, SolveStrategy};
 use crate::coordinator::batcher::{Block, RowBlockBatcher};
 use crate::coordinator::job::solve_job_label;
 use crate::data::window::Windowed;
-use crate::elm::arch::{block_ranges, h_block_range_prec, HBlock};
+use crate::elm::arch::{block_ranges, h_block_range_policy, HBlock};
 use crate::elm::trainer::{shift_history, SrElmModel};
 use crate::elm::{Arch, ElmParams, TrainOptions};
 use crate::linalg::matrix32::MatrixF32;
@@ -478,7 +478,7 @@ impl CpuElmTrainer {
                     None,
                     lo,
                     hi,
-                    self.policy.precision,
+                    self.policy,
                     idx,
                 ))
             })?;
@@ -547,7 +547,7 @@ impl CpuElmTrainer {
                     ehist,
                     lo,
                     hi,
-                    self.policy.precision,
+                    self.policy,
                     idx,
                 ))
             })?;
@@ -712,7 +712,7 @@ impl CpuElmTrainer {
                     ehist,
                     lo,
                     hi,
-                    self.policy.precision,
+                    self.policy,
                     idx,
                 );
                 checked_gram_partials(&h, &y, idx, m)
@@ -737,7 +737,7 @@ impl CpuElmTrainer {
         let ranges = block_ranges(data.n, self.block_rows);
         let parts = par_map(ranges, self.policy, |(lo, hi)| {
             let (h, _y) =
-                compute_h_block(&model.params, data, ehist, lo, hi, self.policy.precision);
+                compute_h_block(&model.params, data, ehist, lo, hi, self.policy);
             Ok(h.matvec(&model.beta))
         })?;
         Ok(parts.concat())
@@ -819,10 +819,10 @@ fn compute_h_block_inj(
     ehist: Option<&[f32]>,
     lo: usize,
     hi: usize,
-    precision: Precision,
+    policy: ParallelPolicy,
     idx: usize,
 ) -> (HBlock, Vec<f64>) {
-    let (mut h, y) = compute_h_block(params, data, ehist, lo, hi, precision);
+    let (mut h, y) = compute_h_block(params, data, ehist, lo, hi, policy);
     match &mut h {
         HBlock::F64(hb) => {
             let (r, c) = (hb.rows, hb.cols);
@@ -897,17 +897,19 @@ fn block_gram_partials(h: &HBlock, y: &[f64]) -> (Matrix, Vec<f64>, usize) {
     }
 }
 
-/// One batched H block (on the wire `precision` selects — f32-born under
-/// `MixedF32`) + widened targets for rows [lo, hi).
+/// One batched H block (on the wire the policy's precision selects —
+/// f32-born under `MixedF32` — and through the recurrence traversal its
+/// [`RecurrenceMode`](crate::linalg::RecurrenceMode) selects) + widened
+/// targets for rows [lo, hi).
 fn compute_h_block(
     params: &ElmParams,
     data: &Windowed,
     ehist: Option<&[f32]>,
     lo: usize,
     hi: usize,
-    precision: Precision,
+    policy: ParallelPolicy,
 ) -> (HBlock, Vec<f64>) {
-    let h = h_block_range_prec(params, data, ehist, lo, hi, precision);
+    let h = h_block_range_policy(params, data, ehist, lo, hi, policy);
     let y = data.y[lo..hi].iter().map(|&v| v as f64).collect();
     (h, y)
 }

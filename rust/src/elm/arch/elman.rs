@@ -47,6 +47,25 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
 /// straight into `MatrixF32` — no f64 materialization, half the block
 /// memory.
 pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
+    h_block_f32_from(p, blk, 0)
+}
+
+/// [`h_block_f32`] started at timestep `t_start` from a zero state — the
+/// warm-up-truncated kernel behind `RecurrenceMode::Chunked`. With
+/// `t_start == 0` this *is* the sequential kernel (the same loop over the
+/// same range — bit-identical by construction); with `t_start > 0` the
+/// lags reaching before `t_start` read the zero history instead of real
+/// states, which is exactly the chunked warm-up truncation the envelope
+/// suite (`tests/scan_props.rs`) documents. Elman's full-lag diagonal
+/// feedback makes its truncation envelope the loosest of the stateful
+/// architectures: a lag-`k` term sees a zero instead of a value in
+/// `(−1, 1)`, so the warm-up must cover the whole lag window back to
+/// `t = 0` for exactness.
+pub(crate) fn h_block_f32_from(
+    p: &ElmParams,
+    blk: &SampleBlock,
+    t_start: usize,
+) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
     let b = p.buf("b");
@@ -60,7 +79,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let full = blk.rows - blk.rows % 4;
     for i0 in (0..full).step_by(4) {
         hist4.iter_mut().for_each(|v| *v = 0.0);
-        for t in 0..q {
+        for t in t_start..q {
             let w0 = wx.row(i0 * q + t);
             let w1 = wx.row((i0 + 1) * q + t);
             let w2 = wx.row((i0 + 2) * q + t);
@@ -103,7 +122,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let mut cur = vec![0f32; m];
     for i in full..blk.rows {
         hist.iter_mut().for_each(|v| *v = 0.0);
-        for t in 0..q {
+        for t in t_start..q {
             let wrow = wx.row(i * q + t);
             for j in 0..m {
                 let mut acc = wrow[j] as f32 + b[j];

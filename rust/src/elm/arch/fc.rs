@@ -1,9 +1,13 @@
 //! Fully connected recurrence (Eq 9): every neuron sees every neuron's
 //! history — the most compute-heavy architecture (Table 2).
 
+use std::collections::HashMap;
+
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
+use crate::linalg::scan::chunk_schedule;
 use crate::linalg::{Matrix, MatrixF32, PackedPanels, ParallelPolicy};
+use crate::robust::inject;
 
 use super::{lift_wx, wx_at, SampleBlock};
 
@@ -121,6 +125,111 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     hs.pop().expect("q >= 1")
 }
 
+/// Sequence-parallel FC recurrence: [`h_block_f32`] with the time axis cut
+/// into the fixed [`chunk_schedule`] and the **cross-chunk** coupling GEMMs
+/// farmed out in parallel — **bit-identical to the sequential kernel at any
+/// chunk size and worker count**.
+///
+/// The trick that makes the parallelism exact: at timestep `t` the
+/// coupling term for lag `k` is `H_{t−k} · A_kᵀ`, a *pure* function of an
+/// earlier timestep's states. For a chunk `[clo, chi)` every lag reaching
+/// **before** the chunk (`t − k < clo`) reads states that are already
+/// final when the chunk starts, so those GEMMs — the bulk of the FLOPs at
+/// `chunk ≪ q` — are precomputed concurrently over the fixed task list
+/// `{(t, k) : t ∈ [clo, chi), k > t − clo}` via the order-preserving
+/// parallel map. The serial phase then walks `t` in order, computing the
+/// few *intra*-chunk GEMMs as states materialize and folding every
+/// coupling term in the oracle's exact ascending-`k` order. A GEMM's bits
+/// never depend on where it executes (it runs the identical sequential
+/// kernel on identical operands), and the fold order is the oracle's, so
+/// the result is the oracle's bits — `tests/scan_props.rs` pins this at
+/// chunk sizes {1, 7, 64, q} × 1/2/4/8 workers. With `chunk >= q` the
+/// schedule has one chunk, the external task list is empty, and the walk
+/// *is* [`h_block_f32`] (scan-of-one-chunk ≡ sequential by construction).
+///
+/// Under `--features fault-inject` this is a [`inject::Site::ScanChunk`]
+/// site: the panic hook fires at chunk starts, keyed by chunk index.
+pub fn h_block_f32_chunked(
+    p: &ElmParams,
+    blk: &SampleBlock,
+    chunk: usize,
+    policy: ParallelPolicy,
+) -> MatrixF32 {
+    let (q, m) = (p.q, p.m);
+    let rows = blk.rows;
+    if q == 0 {
+        return MatrixF32::zeros(rows, m);
+    }
+    let wx = lift_wx(p.buf("w"), 1, blk, p.s, q, m);
+    let b = p.buf("b");
+    let alpha = p.buf("alpha"); // (m, m, q): alpha[(j*m + l)*q + (k-1)]
+    let akt_packs: Vec<PackedPanels<f32>> = (1..q)
+        .map(|k| {
+            let mut t = MatrixF32::zeros(m, m);
+            for j in 0..m {
+                for l in 0..m {
+                    t[(l, j)] = alpha[(j * m + l) * q + (k - 1)];
+                }
+            }
+            t.pack_panels()
+        })
+        .collect();
+    let seq = ParallelPolicy::sequential();
+    let sched = chunk_schedule(q, chunk);
+    let mut hs: Vec<MatrixF32> = Vec::with_capacity(q);
+    let mut acc = Matrix::zeros(rows, m);
+    for (ci, &(clo, chi)) in sched.iter().enumerate() {
+        inject::maybe_panic(inject::Site::ScanChunk, ci);
+        // phase 1 (parallel): cross-chunk coupling GEMMs — pure functions
+        // of earlier chunks' final states. The task list is fixed by
+        // (q, chunk) alone and par_map preserves order, so which worker
+        // computes a GEMM never matters (and the GEMM itself runs the
+        // sequential kernel: identical operands → identical bits).
+        let tasks: Vec<(usize, usize)> = (clo..chi)
+            .flat_map(|t| (t - clo + 1..=t).map(move |k| (t, k)))
+            .collect();
+        let hs_ref = &hs;
+        let packs = &akt_packs;
+        let ext: HashMap<(usize, usize), Matrix> =
+            crate::linalg::policy::par_map(tasks, policy, move |(t, k)| {
+                Ok(((t, k), hs_ref[t - k].matmul_widen_packed(&packs[k - 1], seq)))
+            })
+            .expect("pure coupling GEMMs cannot fail")
+            .into_iter()
+            .collect();
+        // phase 2 (serial): the oracle's walk, fold order untouched —
+        // external couplings are looked up, intra-chunk ones computed as
+        // their source timesteps materialize.
+        for t in clo..chi {
+            for i in 0..rows {
+                let wrow = wx.row(i * q + t);
+                let arow = acc.row_mut(i);
+                for j in 0..m {
+                    arow[j] = wrow[j] + b[j] as f64;
+                }
+            }
+            for k in 1..=t {
+                let local;
+                let coupling = if t - k >= clo {
+                    local = hs[t - k].matmul_widen_packed(&akt_packs[k - 1], seq);
+                    &local
+                } else {
+                    &ext[&(t, k)]
+                };
+                for (av, cv) in acc.data_mut().iter_mut().zip(coupling.data()) {
+                    *av += cv;
+                }
+            }
+            let mut ht = MatrixF32::zeros(rows, m);
+            for (hv, av) in ht.data_mut().iter_mut().zip(acc.data()) {
+                *hv = tanh(*av as f32);
+            }
+            hs.push(ht);
+        }
+    }
+    hs.pop().expect("q >= 1")
+}
+
 /// The pre-batching scalar block loop (per sample, per timestep, per
 /// neuron, strided alpha walks) — kept as the oracle `h_block` is
 /// property-tested against and the baseline `benches/linalg.rs` measures
@@ -221,6 +330,34 @@ mod tests {
                     batched[(i, j)],
                     out[j]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_executor_is_bitwise_the_sequential_kernel() {
+        // the fold order is the oracle's and GEMM bits don't depend on
+        // where they run, so every chunk size × worker count must produce
+        // the sequential kernel's exact bits (q = 13 leaves a ragged tail
+        // at chunks 4 and 7)
+        let (s, q, m) = (2, 13, 6);
+        let rows = 7;
+        let p = ElmParams::init(Arch::Fc, s, q, m, 19);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x: Vec<f32> = rng.normals_f32(rows * s * q);
+        let yh = vec![0f32; rows * q];
+        let eh = vec![0f32; rows * q];
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        let want = h_block_f32(&p, &blk);
+        for chunk in [1usize, 4, 7, q, 64] {
+            for workers in [1usize, 4] {
+                let got = h_block_f32_chunked(
+                    &p,
+                    &blk,
+                    chunk,
+                    ParallelPolicy::with_workers(workers),
+                );
+                assert_eq!(got, want, "chunk={chunk} workers={workers}");
             }
         }
     }

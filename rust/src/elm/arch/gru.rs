@@ -46,6 +46,22 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
 /// The gate math is all-f32 and the outputs land straight in `MatrixF32`
 /// — no f64 materialization.
 pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
+    h_block_f32_from(p, blk, 0)
+}
+
+/// [`h_block_f32`] started at timestep `t_start` from a zero state — the
+/// warm-up-truncated kernel behind `RecurrenceMode::Chunked`. With
+/// `t_start == 0` this *is* the sequential kernel (the same loop over the
+/// same range — bit-identical by construction). With `t_start > 0` the
+/// cell starts from `f = 0` instead of the true carried state; the lag-1
+/// leaky update `f ← (1−z)·f + z·cand` with `z ∈ (0, 1)` contracts the
+/// initial-state discrepancy geometrically over the warm-up prefix — the
+/// envelope the chunked suite documents.
+pub(crate) fn h_block_f32_from(
+    p: &ElmParams,
+    blk: &SampleBlock,
+    t_start: usize,
+) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let wx3 = lift_wx(p.buf("w3"), 3, blk, p.s, q, m);
     let u3 = p.buf("u3"); // (3, m)
@@ -57,7 +73,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let full = blk.rows - blk.rows % 4;
     for i0 in (0..full).step_by(4) {
         f_prev4.iter_mut().for_each(|v| *v = 0.0);
-        for t in 0..q {
+        for t in t_start..q {
             let w0 = wx3.row(i0 * q + t);
             let w1 = wx3.row((i0 + 1) * q + t);
             let w2 = wx3.row((i0 + 2) * q + t);
@@ -90,7 +106,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     let mut cur = vec![0f32; m];
     for i in full..blk.rows {
         f_prev.iter_mut().for_each(|v| *v = 0.0);
-        for t in 0..q {
+        for t in t_start..q {
             let wrow = wx3.row(i * q + t);
             for j in 0..m {
                 let wx = |g: usize| wrow[g * m + j] as f32;

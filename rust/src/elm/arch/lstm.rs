@@ -53,6 +53,23 @@ pub fn h_block(p: &ElmParams, blk: &SampleBlock) -> Matrix {
 /// bit-identical to the scalar tail. The cell math is all-f32 and the
 /// outputs land straight in `MatrixF32` — no f64 materialization.
 pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
+    h_block_f32_from(p, blk, 0)
+}
+
+/// [`h_block_f32`] started at timestep `t_start` from a zero (f, c) state —
+/// the warm-up-truncated kernel behind `RecurrenceMode::Chunked`. With
+/// `t_start == 0` this *is* the sequential kernel (the same loop over the
+/// same range — bit-identical by construction). With `t_start > 0` the
+/// cell starts from `f = c = 0` instead of the true carried state; because
+/// the recurrence is lag-1 with a sigmoid forget gate `λ ∈ (0, 1)`
+/// contracting the cell state every step, the discrepancy decays
+/// geometrically over the warm-up prefix — the envelope the chunked suite
+/// documents.
+pub(crate) fn h_block_f32_from(
+    p: &ElmParams,
+    blk: &SampleBlock,
+    t_start: usize,
+) -> MatrixF32 {
     let (q, m) = (p.q, p.m);
     let wx4 = lift_wx(p.buf("w4"), 4, blk, p.s, q, m);
     let u4 = p.buf("u4"); // (4, m)
@@ -66,7 +83,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     for i0 in (0..full).step_by(4) {
         f_prev4.iter_mut().for_each(|v| *v = 0.0);
         c_prev4.iter_mut().for_each(|v| *v = 0.0);
-        for t in 0..q {
+        for t in t_start..q {
             let w0 = wx4.row(i0 * q + t);
             let w1 = wx4.row((i0 + 1) * q + t);
             let w2 = wx4.row((i0 + 2) * q + t);
@@ -103,7 +120,7 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     for i in full..blk.rows {
         f_prev.iter_mut().for_each(|v| *v = 0.0);
         c_prev.iter_mut().for_each(|v| *v = 0.0);
-        for t in 0..q {
+        for t in t_start..q {
             let wrow = wx4.row(i * q + t);
             for j in 0..m {
                 let pre = |g: usize| {

@@ -29,7 +29,9 @@ pub mod jordan;
 pub mod lstm;
 pub mod narmax;
 
+use crate::linalg::scan::{chunk_schedule, RecurrenceMode};
 use crate::linalg::{Matrix, MatrixF32, ParallelPolicy, Precision};
+use crate::robust::inject;
 
 use super::params::{Arch, ElmParams};
 
@@ -157,13 +159,93 @@ pub fn h_block_f32(p: &ElmParams, blk: &SampleBlock) -> MatrixF32 {
     }
 }
 
+/// Dispatch: H for a whole row block on the recurrence mode the policy
+/// selects, **f32-born** either way. [`RecurrenceMode::Sequential`] routes
+/// to the oracle kernels ([`h_block_f32`]); [`RecurrenceMode::Chunked`]
+/// routes to the sequence-parallel executors over the fixed
+/// [`chunk_schedule`]`(q, chunk)`:
+///
+/// * **FC** — [`fc::h_block_f32_chunked`]: cross-chunk coupling GEMMs
+///   precomputed in parallel, fold order untouched — **bit-identical** to
+///   the sequential kernel at any chunk size and worker count.
+/// * **Elman / LSTM / GRU** — the warm-up-truncated kernels
+///   (`h_block_f32_from`): only the tail chunk plus a `warmup`-step
+///   prefix is evaluated, from a zero state. When the warm-up reaches
+///   `t = 0` the run is bitwise the sequential kernel; otherwise the
+///   initial-state discrepancy is bounded by the documented per-arch
+///   envelope (`tests/scan_props.rs`). This O(chunk + warmup) truncation —
+///   not thread parallelism — is what makes the long-horizon bench's
+///   chunked mode fast; worker scaling still comes from row-block
+///   parallelism above this call.
+/// * **Jordan / NARMAX** — recurrence-free (pure GEMM + tanh): chunked
+///   mode is *identical* to sequential, so they route to the same kernel.
+///
+/// A schedule of at most one chunk (horizon 0/1, or `chunk >= q`) is the
+/// sequential walk by construction and routes to [`h_block_f32`]
+/// directly. Under `--features fault-inject` the chunked path is the
+/// [`inject::Site::ScanChunk`] site: panics fire at chunk starts and
+/// payload/truncation faults on the kernel output (pre-widen, so both
+/// [`Precision`] wires fault identically), all keyed by chunk index.
+pub fn h_block_f32_with(
+    p: &ElmParams,
+    blk: &SampleBlock,
+    policy: ParallelPolicy,
+) -> MatrixF32 {
+    let RecurrenceMode::Chunked { chunk, warmup } = policy.recurrence else {
+        return h_block_f32(p, blk);
+    };
+    let sched = chunk_schedule(p.q, chunk);
+    if sched.len() <= 1 {
+        return h_block_f32(p, blk);
+    }
+    assert_block_shape(p, blk);
+    let tail_ci = sched.len() - 1;
+    let mut h = match p.arch {
+        Arch::Fc => fc::h_block_f32_chunked(p, blk, chunk, policy),
+        // recurrence-free: the whole block is one GEMM + tanh, nothing to
+        // chunk — chunked mode is the sequential kernel, exactly
+        Arch::Jordan => jordan::h_block_f32(p, blk),
+        Arch::Narmax => narmax::h_block_f32(p, blk),
+        Arch::Elman | Arch::Lstm | Arch::Gru => {
+            inject::maybe_panic(inject::Site::ScanChunk, tail_ci);
+            let warm_start = sched[tail_ci].0.saturating_sub(warmup);
+            match p.arch {
+                Arch::Elman => elman::h_block_f32_from(p, blk, warm_start),
+                Arch::Lstm => lstm::h_block_f32_from(p, blk, warm_start),
+                _ => gru::h_block_f32_from(p, blk, warm_start),
+            }
+        }
+    };
+    // ScanChunk payload/truncation faults fire on the chunked output,
+    // keyed by the tail chunk index — deterministic per block, identical
+    // on both precision wires (the corruption happens before any widening)
+    let (r, c) = (h.rows, h.cols);
+    inject::corrupt_slice_f32(inject::Site::ScanChunk, tail_ci, h.data_mut(), r, c);
+    let keep = inject::truncated_rows(inject::Site::ScanChunk, tail_ci, r);
+    if keep < r {
+        h = MatrixF32::from_slice(keep, c, &h.data()[..keep * c]);
+    }
+    h
+}
+
 /// Dispatch: H for a whole row block on the wire `precision` selects —
 /// [`Precision::F64`] widens the f32-born kernel output (exact),
 /// [`Precision::MixedF32`] hands the f32 block through untouched.
+/// Recurrence traversal is [`RecurrenceMode::Sequential`]; callers with a
+/// full [`ParallelPolicy`] in hand use [`h_block_policy`].
 pub fn h_block_prec(p: &ElmParams, blk: &SampleBlock, precision: Precision) -> HBlock {
-    match precision {
-        Precision::F64 => HBlock::F64(h_block(p, blk)),
-        Precision::MixedF32 => HBlock::F32(h_block_f32(p, blk)),
+    h_block_policy(p, blk, ParallelPolicy::sequential().with_precision(precision))
+}
+
+/// Dispatch: H for a whole row block on the wire **and** recurrence mode
+/// the policy selects — the precision split of [`h_block_prec`] over the
+/// traversal split of [`h_block_f32_with`]. Both wires run the identical
+/// f32-born kernel; `F64` is an exact widening of it, so the recurrence
+/// mode never interacts with the precision choice.
+pub fn h_block_policy(p: &ElmParams, blk: &SampleBlock, policy: ParallelPolicy) -> HBlock {
+    match policy.precision {
+        Precision::F64 => HBlock::F64(h_block_f32_with(p, blk, policy).to_f64()),
+        Precision::MixedF32 => HBlock::F32(h_block_f32_with(p, blk, policy)),
     }
 }
 
@@ -239,6 +321,29 @@ pub fn h_block_range_prec(
     hi: usize,
     precision: Precision,
 ) -> HBlock {
+    h_block_range_policy(
+        p,
+        data,
+        ehist,
+        lo,
+        hi,
+        ParallelPolicy::sequential().with_precision(precision),
+    )
+}
+
+/// Batched H for rows [lo, hi) on the wire **and** recurrence mode the
+/// policy selects — [`h_block_range_prec`] with the traversal knob
+/// exposed (see [`h_block_f32_with`] for the chunked-mode contract). The
+/// range and the optional error-history buffer are validated here, the
+/// public boundary.
+pub fn h_block_range_policy(
+    p: &ElmParams,
+    data: &crate::data::window::Windowed,
+    ehist: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+    policy: ParallelPolicy,
+) -> HBlock {
     let (s, q) = (data.s, data.q);
     assert!(
         lo <= hi && hi <= data.n,
@@ -268,7 +373,7 @@ pub fn h_block_range_prec(
         yhist: &data.yhist[lo * q..hi * q],
         ehist: eh,
     };
-    h_block_prec(p, &blk, precision)
+    h_block_policy(p, &blk, policy)
 }
 
 /// Widen a (rows, q) f32 history slab to an f64 matrix (GEMM operand).

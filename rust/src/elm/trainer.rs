@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use crate::data::window::Windowed;
-use crate::linalg::{lstsq_qr, lstsq_ridge, Matrix, MatrixF32, Precision};
+use crate::linalg::{lstsq_qr, lstsq_ridge, Matrix, MatrixF32, ParallelPolicy, Precision};
 
 use super::arch::{self, HBlock};
 use super::params::{Arch, ElmParams};
@@ -153,11 +153,36 @@ pub fn hidden_matrix_prec(
     ehist: Option<&[f32]>,
     precision: Precision,
 ) -> HBlock {
-    match precision {
+    hidden_matrix_policy(
+        params,
+        data,
+        ehist,
+        ParallelPolicy::sequential().with_precision(precision),
+    )
+}
+
+/// [`hidden_matrix_prec`] with the full [`ParallelPolicy`] in hand: the
+/// block stitch additionally honors the policy's
+/// [`RecurrenceMode`](crate::linalg::RecurrenceMode) — each row block's
+/// recurrence runs through [`arch::h_block_range_policy`], so a
+/// `Chunked` policy picks up the sequence-parallel executors on both
+/// precision wires. (The policy's worker count parallelizes *inside* the
+/// chunked kernels; the block loop here stays a sequential stitch, as it
+/// always was — the coordinator's `CpuElmTrainer` is the block-parallel
+/// driver.)
+pub fn hidden_matrix_policy(
+    params: &ElmParams,
+    data: &Windowed,
+    ehist: Option<&[f32]>,
+    policy: ParallelPolicy,
+) -> HBlock {
+    match policy.precision {
         Precision::F64 => {
             let mut h = Matrix::zeros(data.n, params.m);
             for (lo, hi) in arch::block_ranges(data.n, H_BLOCK_ROWS) {
-                let hb = arch::h_block_range(params, data, ehist, lo, hi);
+                let hb =
+                    arch::h_block_range_policy(params, data, ehist, lo, hi, policy)
+                        .into_f64();
                 for r in 0..hi - lo {
                     h.row_mut(lo + r).copy_from_slice(hb.row(r));
                 }
@@ -167,7 +192,7 @@ pub fn hidden_matrix_prec(
         Precision::MixedF32 => {
             let mut h = MatrixF32::zeros(data.n, params.m);
             for (lo, hi) in arch::block_ranges(data.n, H_BLOCK_ROWS) {
-                match arch::h_block_range_prec(params, data, ehist, lo, hi, precision) {
+                match arch::h_block_range_policy(params, data, ehist, lo, hi, policy) {
                     HBlock::F32(hb) => {
                         for r in 0..hi - lo {
                             h.row_mut(lo + r).copy_from_slice(hb.row(r));

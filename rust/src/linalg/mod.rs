@@ -27,6 +27,11 @@
 //!   [`Precision`] wire-format / [`FmaMode`] contraction) knob every
 //!   threaded path shares, and the fixed-split schedules behind the
 //!   bit-identical-at-any-worker-count determinism contract,
+//! * [`scan`] — sequence-parallel recurrence primitives: the
+//!   [`RecurrenceMode`] knob the `elm::arch` kernels consume, the fixed
+//!   [`chunk_schedule`](scan::chunk_schedule) of the time axis, and the
+//!   blocked affine prefix scan ([`scan::scan_affine`]) for linear
+//!   recurrences,
 //! * [`simd`] — the pinned-width SIMD microkernels the GEMM/Gram inner
 //!   loops dispatch to at runtime (`std::arch` AVX2 register tiles with
 //!   the pre-SIMD scalar loops as both fallback and bit-identity oracle).
@@ -38,6 +43,7 @@ pub mod matrix;
 pub mod matrix32;
 pub mod policy;
 pub mod qr;
+pub mod scan;
 pub mod simd;
 pub mod solve;
 pub mod tsqr;
@@ -46,6 +52,7 @@ pub use cholesky::cholesky_solve;
 pub use matrix::{Matrix, PackedPanels};
 pub use matrix32::MatrixF32;
 pub use policy::{ParallelPolicy, Precision};
+pub use scan::RecurrenceMode;
 pub use simd::{FmaMode, IsaPath};
 pub use qr::{
     householder_qr, householder_qr_owned, householder_qr_owned_with,

@@ -36,6 +36,7 @@ use anyhow::{anyhow, Result};
 
 use crate::robust::error::SolveError;
 
+use super::scan::RecurrenceMode;
 use super::simd::FmaMode;
 
 /// Numeric wire format of the substrate's mixed-precision paths.
@@ -89,12 +90,27 @@ pub struct ParallelPolicy {
     /// relinquishes bit-identity with the exact kernels but **never** the
     /// worker-count invariance — the split schedules stay fixed.
     pub fma: FmaMode,
+    /// How the `elm::arch` recurrence kernels traverse the time axis.
+    /// Defaults to [`RecurrenceMode::Sequential`] (the conformance oracle).
+    /// [`RecurrenceMode::Chunked`] switches H-block construction to the
+    /// sequence-parallel executors (see [`scan`](super::scan)): exact and
+    /// bit-identical for FC/Jordan/NARMAX at any chunk size, warm-up
+    /// truncated within a documented envelope for Elman/LSTM/GRU. The
+    /// linalg kernels themselves ignore it — only the recurrence
+    /// dispatchers consume it — and the chunk schedule is fixed by shape,
+    /// so worker-count bit-invariance is unaffected.
+    pub recurrence: RecurrenceMode,
 }
 
 impl ParallelPolicy {
     /// Single-threaded: everything runs on the caller's thread.
     pub fn sequential() -> ParallelPolicy {
-        ParallelPolicy { workers: 1, precision: Precision::F64, fma: FmaMode::Exact }
+        ParallelPolicy {
+            workers: 1,
+            precision: Precision::F64,
+            fma: FmaMode::Exact,
+            recurrence: RecurrenceMode::Sequential,
+        }
     }
 
     /// Explicit worker count (clamped to >= 1).
@@ -103,6 +119,7 @@ impl ParallelPolicy {
             workers: workers.max(1),
             precision: Precision::F64,
             fma: FmaMode::Exact,
+            recurrence: RecurrenceMode::Sequential,
         }
     }
 
@@ -114,6 +131,7 @@ impl ParallelPolicy {
             workers: cores.clamp(1, 8),
             precision: Precision::F64,
             fma: FmaMode::Exact,
+            recurrence: RecurrenceMode::Sequential,
         }
     }
 
@@ -128,6 +146,14 @@ impl ParallelPolicy {
     /// with AVX2+FMA; everywhere else the kernels stay exact.
     pub fn with_fma(mut self, fma: FmaMode) -> ParallelPolicy {
         self.fma = fma;
+        self
+    }
+
+    /// Same worker count/precision/FMA mode, different recurrence traversal
+    /// (builder style). [`RecurrenceMode::Chunked`] only affects the
+    /// `elm::arch` H-block dispatchers; every linalg kernel ignores it.
+    pub fn with_recurrence(mut self, recurrence: RecurrenceMode) -> ParallelPolicy {
+        self.recurrence = recurrence;
         self
     }
 }
@@ -460,6 +486,29 @@ mod tests {
         assert_eq!(p.workers, 4);
         assert_eq!(p.precision, Precision::MixedF32);
         assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn recurrence_defaults_to_sequential_and_builds() {
+        assert_eq!(
+            ParallelPolicy::sequential().recurrence,
+            RecurrenceMode::Sequential
+        );
+        assert_eq!(
+            ParallelPolicy::with_workers(4).recurrence,
+            RecurrenceMode::Sequential
+        );
+        assert_eq!(ParallelPolicy::auto().recurrence, RecurrenceMode::Sequential);
+        assert_eq!(RecurrenceMode::default(), RecurrenceMode::Sequential);
+        let p = ParallelPolicy::with_workers(4)
+            .with_precision(Precision::MixedF32)
+            .with_recurrence(RecurrenceMode::Chunked { chunk: 64, warmup: 16 });
+        assert_eq!(p.workers, 4);
+        assert_eq!(p.precision, Precision::MixedF32);
+        assert_eq!(
+            p.recurrence,
+            RecurrenceMode::Chunked { chunk: 64, warmup: 16 }
+        );
     }
 
     #[test]

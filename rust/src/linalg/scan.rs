@@ -1,0 +1,340 @@
+//! Sequence-parallel recurrence primitives — breaking the time loop.
+//!
+//! Every `h_block` kernel used to walk timesteps strictly sequentially:
+//! the last inherently serial axis in a training path the paper
+//! parallelizes everywhere else. Martin & Cundy ("Parallelizing Linear
+//! Recurrent Neural Nets Over Sequence Length", arXiv 1709.04057) show
+//! that *linear* recurrences `h_t = A_t·h_{t−1} + b_t` admit an exact
+//! parallel prefix scan over affine maps, and Hwang & Sung's single-stream
+//! chunking motivates the warm-up scheme the nonlinear architectures use.
+//! This module provides both halves:
+//!
+//! * [`RecurrenceMode`] — the policy knob ([`ParallelPolicy::recurrence`])
+//!   that selects between the sequential oracle kernels and the chunked
+//!   sequence-parallel executors in `elm::arch`.
+//! * [`chunk_schedule`] — the fixed chunking of the horizon, a function of
+//!   `(horizon, chunk)` alone (it delegates to [`fixed_tiles`]), so the
+//!   chunk boundaries — like every other split schedule in the substrate —
+//!   never depend on the worker count.
+//! * [`Affine`] / [`scan_affine`] — the generic blocked affine prefix scan
+//!   for linear recurrences, with composition folded in ascending step
+//!   order over the fixed chunk schedule.
+//!
+//! # Determinism contract
+//!
+//! [`scan_affine`] obeys the substrate-wide §7.3 discipline: the chunk
+//! schedule is fixed by `(horizon, chunk)`, workers execute disjoint chunks
+//! via the order-preserving parallel map, and the sequential boundary fold
+//! walks composites in chunk order. Consequences, pinned by the in-module
+//! tests and `tests/scan_props.rs`:
+//!
+//! * **Worker-count bit-invariance at any chunk size** — changing the
+//!   worker count changes *when* a chunk is processed, never *what* is
+//!   computed or in which order results fold.
+//! * **Single chunk ≡ sequential, bitwise** — with `chunk >= horizon` the
+//!   per-step re-walk starts from `h0` itself and applies the steps one by
+//!   one, which *is* the sequential recurrence (scan-of-one-chunk ≡
+//!   sequential by construction).
+//! * **Multi-chunk drift is reassociation, not error**: later chunks start
+//!   from boundary states produced by composed affine maps, which
+//!   reassociates the floating-point evaluation versus stepwise
+//!   application. The drift per element is bounded by the usual
+//!   backward-stable matmul envelope `O(T·n·ε·∏‖A_t‖)`; for bit-exactness
+//!   against the sequential oracle use a single chunk (or the FC chunked
+//!   executor in `elm::arch::fc`, which keeps the original fold order and
+//!   is bit-identical at *every* chunk size).
+//!
+//! The FC architecture's production path does not route through
+//! [`scan_affine`] (its full-lag recurrence composes over `q` lags, not
+//! one); `scan_affine` is the reference engine for plain lag-1 linear
+//! recurrences and the conformance anchor for the scan discipline itself.
+
+use anyhow::{anyhow, Result};
+
+use super::matrix::Matrix;
+use super::policy::{fixed_tiles, par_map, ParallelPolicy};
+
+/// How the `elm::arch` kernels traverse the time axis of the recurrence.
+///
+/// Carried on [`ParallelPolicy`] and threaded through
+/// `arch::h_block_*` → `trainer::hidden_matrix_policy` →
+/// `coordinator::CpuElmTrainer`, so both the f64 and f32-born H wires pick
+/// the same mode up.
+///
+/// | Mode | FC | Elman / LSTM / GRU | Jordan / NARMAX |
+/// |------|----|--------------------|------------------|
+/// | `Sequential` | oracle loop | oracle loop | (recurrence-free) |
+/// | `Chunked` | **bit-identical** to `Sequential` at any chunk/worker count (cross-chunk coupling GEMMs precomputed in parallel, folds kept in oracle order) | tail chunk + `warmup` warm-up prefix from a zero state; bit-identical when the warm-up reaches `t = 0`, documented envelope otherwise | identical to `Sequential` (nothing to chunk) |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecurrenceMode {
+    /// Walk the time loop one step at a time — the conformance oracle every
+    /// chunked executor is tested against.
+    #[default]
+    Sequential,
+    /// Sequence-parallel traversal over the fixed [`chunk_schedule`].
+    Chunked {
+        /// Chunk height along the time axis (clamped to >= 1 by consumers).
+        /// `chunk >= horizon` degenerates to one chunk, which every
+        /// executor guarantees is bitwise identical to `Sequential`.
+        chunk: usize,
+        /// Warm-up prefix length for the stateful nonlinear architectures
+        /// (Elman/LSTM/GRU): each evaluated chunk re-runs `warmup` extra
+        /// leading steps from a zero state so the truncated history decays
+        /// before the outputs that matter. Ignored by the exact executors
+        /// (FC, and the recurrence-free Jordan/NARMAX).
+        warmup: usize,
+    },
+}
+
+/// Fixed chunking of the time axis `[0, horizon)` into `(lo, hi)` ranges of
+/// height `chunk` (last chunk may be short). A function of
+/// `(horizon, chunk)` alone — never of a worker count — exactly like every
+/// other split schedule in the substrate (it *is* [`fixed_tiles`] applied
+/// to the time axis).
+pub fn chunk_schedule(horizon: usize, chunk: usize) -> Vec<(usize, usize)> {
+    fixed_tiles(horizon, chunk)
+}
+
+/// An affine map `h ↦ A·h + b` — one step (or one composed chunk) of a
+/// linear recurrence `h_t = A_t·h_{t−1} + b_t`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Affine {
+    /// The linear part (n×n).
+    pub a: Matrix,
+    /// The offset (length n).
+    pub b: Vec<f64>,
+}
+
+impl Affine {
+    /// The identity map on an `n`-dimensional state.
+    pub fn identity(n: usize) -> Affine {
+        Affine { a: Matrix::identity(n), b: vec![0.0; n] }
+    }
+
+    /// Composition `self ∘ inner`: the map `h ↦ self(inner(h))`, i.e.
+    /// `(A₁, b₁) ∘ (A₂, b₂) = (A₁A₂, A₁b₂ + b₁)`. The matmul/matvec run
+    /// the sequential kernels — composition is pure, so where it executes
+    /// never affects its bits.
+    pub fn compose(&self, inner: &Affine) -> Affine {
+        let a = self.a.matmul(&inner.a);
+        let mut b = self.a.matvec(&inner.b);
+        for (bi, &s) in b.iter_mut().zip(self.b.iter()) {
+            *bi += s;
+        }
+        Affine { a, b }
+    }
+
+    /// Apply the map to a state: `A·h + b`.
+    pub fn apply(&self, h: &[f64]) -> Vec<f64> {
+        let mut out = self.a.matvec(h);
+        for (oi, &bi) in out.iter_mut().zip(self.b.iter()) {
+            *oi += bi;
+        }
+        out
+    }
+}
+
+/// Sequential reference for the linear recurrence: step `h0` through every
+/// affine map in order, returning all `T` states `h_1..h_T`. This is the
+/// oracle [`scan_affine`] is conformance-tested against.
+pub fn scan_affine_reference(steps: &[Affine], h0: &[f64]) -> Vec<Vec<f64>> {
+    let mut out = Vec::with_capacity(steps.len());
+    let mut h = h0.to_vec();
+    for s in steps {
+        h = s.apply(&h);
+        out.push(h.clone());
+    }
+    out
+}
+
+/// Blocked parallel prefix scan for the linear recurrence
+/// `h_t = A_t·h_{t−1} + b_t`, returning all `T` states `h_1..h_T`.
+///
+/// Three phases over the fixed [`chunk_schedule`]`(steps.len(), chunk)`:
+///
+/// 1. **Compose** (parallel): each chunk folds its steps into one affine
+///    composite in ascending step order — pure work, farmed out via the
+///    order-preserving parallel map.
+/// 2. **Boundary fold** (sequential): composites are applied to `h0` in
+///    chunk order, yielding each chunk's entry state.
+/// 3. **Re-walk** (parallel): each chunk re-steps from its entry state,
+///    emitting the per-step states.
+///
+/// See the module docs for the determinism contract: bit-invariant across
+/// worker counts at any `chunk`, bitwise equal to
+/// [`scan_affine_reference`] when the schedule has a single chunk, and
+/// within the reassociation envelope otherwise.
+///
+/// # Errors
+///
+/// Returns an error if any step's shape disagrees with `h0` (`A` must be
+/// n×n and `b` length n), or if a worker fails.
+pub fn scan_affine(
+    steps: &[Affine],
+    h0: &[f64],
+    chunk: usize,
+    policy: ParallelPolicy,
+) -> Result<Vec<Vec<f64>>> {
+    let n = h0.len();
+    for (t, s) in steps.iter().enumerate() {
+        if s.a.rows != n || s.a.cols != n || s.b.len() != n {
+            return Err(anyhow!(
+                "scan_affine: step {t} has shape A {}x{}, b {} (state is {n})",
+                s.a.rows,
+                s.a.cols,
+                s.b.len()
+            ));
+        }
+    }
+    let sched = chunk_schedule(steps.len(), chunk);
+    if sched.is_empty() {
+        return Ok(Vec::new());
+    }
+    // phase 1: per-chunk composites, ascending step order inside each chunk
+    let composites = par_map(sched.clone(), policy, |(lo, hi)| {
+        let mut c = steps[lo].clone();
+        for s in &steps[lo + 1..hi] {
+            c = s.compose(&c);
+        }
+        Ok(c)
+    })?;
+    // phase 2: boundary states, folded sequentially in chunk order
+    let mut entry = Vec::with_capacity(sched.len());
+    let mut h = h0.to_vec();
+    for c in &composites {
+        entry.push(h.clone());
+        h = c.apply(&h);
+    }
+    // phase 3: per-chunk stepwise re-walk from the entry state
+    let items: Vec<((usize, usize), Vec<f64>)> =
+        sched.into_iter().zip(entry).collect();
+    let parts = par_map(items, policy, |((lo, hi), start)| {
+        let mut out = Vec::with_capacity(hi - lo);
+        let mut h = start;
+        for s in &steps[lo..hi] {
+            h = s.apply(&h);
+            out.push(h.clone());
+        }
+        Ok(out)
+    })?;
+    Ok(parts.into_iter().flatten().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_steps(t: usize, n: usize, seed: u64) -> Vec<Affine> {
+        let mut rng = Rng::new(seed);
+        (0..t)
+            .map(|_| {
+                let mut a = Matrix::random(n, n, &mut rng);
+                // keep ∏‖A‖ tame so long scans stay well-scaled
+                for v in a.data_mut() {
+                    *v *= 0.3;
+                }
+                let b = (0..n).map(|_| rng.normal()).collect();
+                Affine { a, b }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunk_schedule_is_fixed_tiles_on_the_time_axis() {
+        assert_eq!(chunk_schedule(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(chunk_schedule(0, 4), vec![]);
+        assert_eq!(chunk_schedule(3, 0), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(chunk_schedule(5, 100), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn identity_composes_and_applies_trivially() {
+        let id = Affine::identity(3);
+        let f = &random_steps(1, 3, 1)[0];
+        assert_eq!(f.compose(&id), *f);
+        let h = vec![0.25, -1.5, 3.0];
+        assert_eq!(id.apply(&h), h);
+    }
+
+    #[test]
+    fn compose_matches_stepwise_application() {
+        let steps = random_steps(2, 4, 2);
+        let h = vec![0.5, -0.25, 1.0, 2.0];
+        let two = steps[1].compose(&steps[0]);
+        let stepped = steps[1].apply(&steps[0].apply(&h));
+        for (a, b) in two.apply(&h).iter().zip(stepped.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_chunk_is_bitwise_sequential() {
+        for t in [0usize, 1, 7, 33] {
+            let steps = random_steps(t, 5, 3);
+            let h0 = vec![0.1; 5];
+            let want = scan_affine_reference(&steps, &h0);
+            let got = scan_affine(
+                &steps,
+                &h0,
+                t.max(1),
+                ParallelPolicy::with_workers(4),
+            )
+            .unwrap();
+            assert_eq!(got, want, "t={t}: one chunk must be the oracle bits");
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_bits_at_any_chunk() {
+        let steps = random_steps(29, 4, 4);
+        let h0 = vec![0.2, -0.3, 0.0, 1.0];
+        for chunk in [1usize, 3, 7, 29, 64] {
+            let base =
+                scan_affine(&steps, &h0, chunk, ParallelPolicy::sequential()).unwrap();
+            for workers in [2usize, 4, 8] {
+                let got = scan_affine(
+                    &steps,
+                    &h0,
+                    chunk,
+                    ParallelPolicy::with_workers(workers),
+                )
+                .unwrap();
+                assert_eq!(got, base, "chunk={chunk} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_chunk_drift_stays_inside_the_reassociation_envelope() {
+        let steps = random_steps(64, 4, 5);
+        let h0 = vec![0.4, 0.1, -0.7, 0.9];
+        let want = scan_affine_reference(&steps, &h0);
+        for chunk in [1usize, 5, 16] {
+            let got =
+                scan_affine(&steps, &h0, chunk, ParallelPolicy::with_workers(4)).unwrap();
+            for (t, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                for (a, b) in g.iter().zip(w.iter()) {
+                    assert!(
+                        (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+                        "chunk={chunk} t={t}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_typed_error() {
+        let mut steps = random_steps(3, 4, 6);
+        steps[1].b.pop();
+        let err = scan_affine(&steps, &[0.0; 4], 2, ParallelPolicy::sequential())
+            .unwrap_err();
+        assert!(err.to_string().contains("step 1"), "{err}");
+    }
+
+    #[test]
+    fn recurrence_mode_defaults_to_sequential() {
+        assert_eq!(RecurrenceMode::default(), RecurrenceMode::Sequential);
+    }
+}

@@ -1,7 +1,8 @@
 //! Deterministic, seed-keyed fault injection for the training pipeline.
 //!
-//! The harness corrupts the pipeline at five sites — data windows, H
-//! blocks, Gram partials, TSQR leaves, worker threads — with a taxonomy
+//! The harness corrupts the pipeline at six sites — data windows, H
+//! blocks, sequence-parallel scan chunks, Gram partials, TSQR leaves,
+//! worker threads — with a taxonomy
 //! of faults (NaN/Inf payloads, denormal scaling, rank-collapsed columns,
 //! truncated blocks, injected worker panics). Whether a given (site,
 //! block-index) pair is corrupted is a pure function of the armed plan's
@@ -44,6 +45,13 @@ pub enum Site {
     DataWindow,
     /// A computed H block, before it reaches its consumer.
     HBlock,
+    /// A sequence-parallel recurrence chunk (`RecurrenceMode::Chunked`):
+    /// panics fire at chunk starts and payload/truncation faults on the
+    /// chunked kernel's output, all keyed by **chunk index** within the
+    /// fixed `chunk_schedule` — never by worker count or thread schedule.
+    /// Only the chunked dispatch path carries this site; sequential-mode
+    /// runs never reach it.
+    ScanChunk,
     /// A per-block (HᵀH, HᵀY) Gram partial.
     GramPartial,
     /// A TSQR leaf, right before its local QR factorization.
@@ -58,6 +66,7 @@ impl Site {
         match self {
             Site::DataWindow => "data-window",
             Site::HBlock => "h-block",
+            Site::ScanChunk => "scan-chunk",
             Site::GramPartial => "gram-partial",
             Site::TsqrLeaf => "tsqr-leaf",
             Site::Worker => "worker",

@@ -30,7 +30,7 @@ use opt_pr_elm::data::window::Windowed;
 use opt_pr_elm::data::MinMax;
 use opt_pr_elm::elm::trainer::hidden_matrix;
 use opt_pr_elm::elm::{Arch, ElmParams, ALL_ARCHS};
-use opt_pr_elm::linalg::{lstsq_qr, ParallelPolicy, Precision};
+use opt_pr_elm::linalg::{lstsq_qr, ParallelPolicy, Precision, RecurrenceMode};
 use opt_pr_elm::util::rng::Rng;
 
 const M: usize = 12;
@@ -263,6 +263,82 @@ fn f32_born_direct_qr_bit_identical_to_sequential_lstsq_qr() {
             seq,
             "{}: f32-born DirectQr β != sequential lstsq_qr",
             arch.name()
+        );
+    }
+}
+
+/// Trainer with the sequence-parallel recurrence engine switched on.
+fn chunked_trainer(workers: usize, precision: Precision, warmup: usize) -> CpuElmTrainer {
+    let mut t = CpuElmTrainer::with_policy(
+        ParallelPolicy::with_workers(workers)
+            .with_precision(precision)
+            .with_recurrence(RecurrenceMode::Chunked { chunk: 3, warmup }),
+    );
+    t.strategy = SolveStrategy::DirectQr;
+    t.block_rows = 64;
+    t
+}
+
+#[test]
+fn chunked_mode_with_full_warmup_pins_sequential_beta_bits_all_archs() {
+    // chunk = 3 over Q = 8 → chunks (0,3) (3,6) (6,8), tail start 6. A
+    // warm-up ≥ 6 reaches t = 0, so the stateful kernels run their exact
+    // sequential loop; FC is exact by construction and Jordan/NARMAX are
+    // recurrence-free. Every arch must reproduce the Sequential-mode β
+    // bits, on both precision wires, at several worker counts.
+    let (train, _test) = prepared();
+    for precision in [Precision::F64, Precision::MixedF32] {
+        for arch in ALL_ARCHS {
+            let mut seq_t = CpuElmTrainer::with_policy(
+                ParallelPolicy::with_workers(4).with_precision(precision),
+            );
+            seq_t.strategy = SolveStrategy::DirectQr;
+            seq_t.block_rows = 64;
+            let (seq, _) = seq_t.train(arch, &train, M, SEED).unwrap();
+            for workers in [1usize, 4] {
+                let (model, _) = chunked_trainer(workers, precision, Q)
+                    .train(arch, &train, M, SEED)
+                    .unwrap();
+                assert_eq!(
+                    model.beta,
+                    seq.beta,
+                    "{}: chunked full-warmup β != sequential bits ({precision:?}, workers={workers})",
+                    arch.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_mode_with_truncated_warmup_keeps_model_quality() {
+    // warmup = 4 < tail start 6 → the stateful archs really truncate
+    // (warm start at t = 2). FC stays bit-exact regardless; the truncated
+    // archs must still train to a finite MSE within 2× the per-arch
+    // ceiling — the warm-up envelope costs accuracy, never sanity.
+    let (train, test) = prepared();
+    let seq_beta = trainer(4).train(Arch::Fc, &train, M, SEED).unwrap().0.beta;
+    let fc = chunked_trainer(4, Precision::F64, 4)
+        .train(Arch::Fc, &train, M, SEED)
+        .unwrap()
+        .0;
+    assert_eq!(fc.beta, seq_beta, "FC chunked β must ignore the warm-up");
+    for arch in ALL_ARCHS {
+        let t = chunked_trainer(4, Precision::F64, 4);
+        let (model, _) = t.train(arch, &train, M, SEED).unwrap();
+        assert!(
+            model.beta.iter().all(|v| v.is_finite()),
+            "{}: non-finite chunked β",
+            arch.name()
+        );
+        let rmse = t.rmse(&model, &test).unwrap();
+        let mse = rmse * rmse;
+        assert!(mse.is_finite(), "{}: non-finite chunked MSE", arch.name());
+        assert!(
+            mse < ceiling(arch) * 2.0,
+            "{}: chunked test MSE {mse} above 2× ceiling {}",
+            arch.name(),
+            ceiling(arch) * 2.0
         );
     }
 }

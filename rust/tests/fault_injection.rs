@@ -19,6 +19,7 @@ use opt_pr_elm::coordinator::accumulator::SolveStrategy;
 use opt_pr_elm::coordinator::pipeline::CpuElmTrainer;
 use opt_pr_elm::data::window::Windowed;
 use opt_pr_elm::elm::Arch;
+use opt_pr_elm::linalg::RecurrenceMode;
 use opt_pr_elm::robust::inject::{arm, take_events, Fault, FaultPlan, Site};
 use opt_pr_elm::robust::{as_solve_error, DegradationRung};
 use opt_pr_elm::util::rng::Rng;
@@ -71,20 +72,26 @@ fn run_contract(
     workers: usize,
     w: &Windowed,
 ) -> Outcome {
+    contract_outcome(trainer(workers, strategy), plan, w, &format!("{strategy:?} w={workers}"))
+}
+
+/// The contract body, generic over the trainer (sequential- or
+/// chunked-recurrence) so the ScanChunk legs share the same enforcement.
+fn contract_outcome(t: CpuElmTrainer, plan: FaultPlan, w: &Windowed, ctx: &str) -> Outcome {
     let guard = arm(plan);
-    let out = trainer(workers, strategy).train(Arch::Elman, w, 8, 3);
+    let out = t.train(Arch::Elman, w, 8, 3);
     let events = take_events();
     drop(guard);
     assert!(
         !events.is_empty(),
-        "{plan:?}/{strategy:?} w={workers}: campaign never fired (vacuous test)"
+        "{plan:?}/{ctx}: campaign never fired (vacuous test)"
     );
     assert!(events.iter().all(|e| e.site == plan.site && e.fault == plan.fault));
     match out {
         Ok((model, bd)) => {
             assert!(
                 model.beta.iter().all(|b| b.is_finite()),
-                "{plan:?}/{strategy:?} w={workers}: Ok with non-finite β — \
+                "{plan:?}/{ctx}: Ok with non-finite β — \
                  the exact silent poisoning the harness exists to catch"
             );
             assert_ne!(bd.solve_report.rung, DegradationRung::Failed);
@@ -96,7 +103,7 @@ fn run_contract(
         }
         Err(e) => {
             let se = as_solve_error(&e).unwrap_or_else(|| {
-                panic!("{plan:?}/{strategy:?} w={workers}: stringly error: {e}")
+                panic!("{plan:?}/{ctx}: stringly error: {e}")
             });
             Outcome::TypedError { class: se.class() }
         }
@@ -250,6 +257,119 @@ fn injected_worker_panics_are_retried_to_a_bit_identical_beta() {
             assert_eq!(
                 model.beta, healthy.beta,
                 "{strategy:?} w={workers}: retried β must match the healthy bits"
+            );
+        }
+    }
+}
+
+/// Trainer with the sequence-parallel recurrence engine on — the
+/// `ScanChunk` site only exists on the chunked path. chunk = 3 over
+/// Q = 6 → two chunks per block, tail chunk index 1; warmup = 6 reaches
+/// t = 0, so the healthy chunked values are the sequential bits and an
+/// armed fault changes *only* what it injects.
+fn chunked_trainer(workers: usize, strategy: SolveStrategy) -> CpuElmTrainer {
+    let mut t = trainer(workers, strategy);
+    t.policy = t
+        .policy
+        .with_recurrence(RecurrenceMode::Chunked { chunk: 3, warmup: 6 });
+    t
+}
+
+/// The ScanChunk legs of the fault matrix: payload corruption, row
+/// truncation, and chunk-keyed panics on the chunked kernel output all
+/// honor the robustness contract, with outcomes identical at 1 and 8 (or
+/// whatever the CI matrix pins) workers — fire decisions are keyed by
+/// chunk index, never by schedule.
+#[test]
+fn scan_chunk_faults_honor_the_contract_at_every_worker_count() {
+    let w = toy_windowed(260, 6, 6);
+    let faults = [
+        Fault::NanPayload,
+        Fault::InfPayload,
+        Fault::TruncateRows,
+        Fault::WorkerPanic,
+    ];
+    for fault in faults {
+        for strategy in STRATEGIES {
+            let plan = FaultPlan { seed: 23, site: Site::ScanChunk, fault, period: 1 };
+            let mut base: Option<Outcome> = None;
+            for workers in worker_counts() {
+                let out = contract_outcome(
+                    chunked_trainer(workers, strategy),
+                    plan,
+                    &w,
+                    &format!("chunked {strategy:?} w={workers}"),
+                );
+                match &base {
+                    None => base = Some(out),
+                    Some(b) => assert_eq!(
+                        b, &out,
+                        "ScanChunk/{fault:?}/{strategy:?}: outcome differs at \
+                         workers={workers}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// The ScanChunk site never fires on the sequential recurrence path: a
+/// plan armed against a `RecurrenceMode::Sequential` trainer is inert
+/// (and the values are untouched) — the site is strictly chunked-only.
+#[test]
+fn scan_chunk_site_is_inert_on_the_sequential_path() {
+    let w = toy_windowed(260, 6, 7);
+    let (healthy, _) =
+        trainer(1, SolveStrategy::DirectQr).train(Arch::Elman, &w, 8, 3).unwrap();
+    let plan = FaultPlan {
+        seed: 23,
+        site: Site::ScanChunk,
+        fault: Fault::NanPayload,
+        period: 1,
+    };
+    let guard = arm(plan);
+    let res = trainer(1, SolveStrategy::DirectQr).train(Arch::Elman, &w, 8, 3);
+    let events = take_events();
+    drop(guard);
+    assert!(events.is_empty(), "ScanChunk fired without chunked mode: {events:?}");
+    assert_eq!(res.unwrap().0.beta, healthy.beta);
+}
+
+/// An injected panic at a chunk boundary is caught by the same worker
+/// isolation as block-level panics, retried once (the fired set marks the
+/// (site, index) so the retry runs clean), and the retried β is
+/// bit-identical to the healthy chunked run at every worker count.
+#[test]
+fn scan_chunk_panics_are_retried_to_a_bit_identical_beta() {
+    let w = toy_windowed(260, 6, 8);
+    for strategy in STRATEGIES {
+        for workers in worker_counts() {
+            let (healthy, _) = chunked_trainer(workers, strategy)
+                .train(Arch::Elman, &w, 8, 3)
+                .unwrap();
+            let plan = FaultPlan {
+                seed: 29,
+                site: Site::ScanChunk,
+                fault: Fault::WorkerPanic,
+                period: 1,
+            };
+            let guard = arm(plan);
+            let res = chunked_trainer(workers, strategy).train(Arch::Elman, &w, 8, 3);
+            let events = take_events();
+            drop(guard);
+            assert!(!events.is_empty(), "chunk panic campaign never fired");
+            let (model, bd) = res.unwrap_or_else(|e| {
+                panic!("chunked {strategy:?} w={workers}: panic leaked as error: {e}")
+            });
+            assert!(
+                bd.solve_report.retries >= events.len() as u32,
+                "chunked {strategy:?} w={workers}: {} panics but only {} retries",
+                events.len(),
+                bd.solve_report.retries
+            );
+            assert_eq!(
+                model.beta, healthy.beta,
+                "chunked {strategy:?} w={workers}: retried β must match healthy bits"
             );
         }
     }

@@ -1,0 +1,290 @@
+//! Sequence-parallel recurrence conformance: the chunked executors vs the
+//! sequential oracle kernels (`RecurrenceMode::Sequential`).
+//!
+//! Three tiers of guarantee, each pinned here:
+//!
+//! 1. **FC (and the recurrence-free Jordan/NARMAX): bit-identity.** The FC
+//!    chunked executor precomputes cross-chunk coupling GEMMs in parallel
+//!    but folds every term in the oracle's order, so its output is the
+//!    oracle's exact bits at any chunk size and worker count, on both
+//!    `Precision` wires. Scan-of-one-chunk (`chunk >= q`, horizon 0/1) is
+//!    the sequential walk by construction.
+//! 2. **Elman/LSTM/GRU: warm-up envelope.** The chunked mode evaluates the
+//!    tail chunk plus a `warmup`-step prefix from a zero state. When the
+//!    warm-up reaches `t = 0` the run is bitwise the sequential kernel
+//!    (same loop, same range). Otherwise the truncated history drifts the
+//!    output within the documented per-arch envelope: the lag-1 leaky
+//!    cells (LSTM/GRU) contract the initial-state discrepancy
+//!    geometrically over the warm-up (≤ 0.5 per element at the suite's
+//!    warm-up), while Elman's full-lag feedback only has the trivial
+//!    activation bound (≤ 2.0 — its exactness needs the warm-up to span
+//!    the horizon).
+//! 3. **The generic affine scan** (`linalg::scan::scan_affine`): single
+//!    chunk ≡ the stepping reference bitwise, and worker-count
+//!    bit-invariance at every chunk size.
+
+use opt_pr_elm::elm::arch::{self, HBlock, SampleBlock};
+use opt_pr_elm::elm::trainer::hidden_matrix_policy;
+use opt_pr_elm::elm::{Arch, ElmParams};
+use opt_pr_elm::linalg::scan::{scan_affine, scan_affine_reference, Affine};
+use opt_pr_elm::linalg::{Matrix, ParallelPolicy, Precision, RecurrenceMode};
+use opt_pr_elm::util::rng::Rng;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Owned random sample-block buffers (x, yhist, ehist).
+fn block_bufs(rows: usize, s: usize, q: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let x = rng.normals_f32(rows * s * q);
+    let yh: Vec<f32> = rng.normals_f32(rows * q).iter().map(|v| v * 0.1).collect();
+    let eh: Vec<f32> = rng.normals_f32(rows * q).iter().map(|v| v * 0.1).collect();
+    (x, yh, eh)
+}
+
+fn assert_hblock_bits_eq(a: &HBlock, b: &HBlock, ctx: &str) {
+    match (a, b) {
+        (HBlock::F64(a), HBlock::F64(b)) => assert_eq!(a, b, "{ctx}"),
+        (HBlock::F32(a), HBlock::F32(b)) => assert_eq!(a, b, "{ctx}"),
+        _ => panic!("{ctx}: precision wires differ"),
+    }
+}
+
+fn chunked(chunk: usize, warmup: usize) -> RecurrenceMode {
+    RecurrenceMode::Chunked { chunk, warmup }
+}
+
+/// FC blocked scan: bit-identical to the sequential kernel at 1/2/4/8
+/// workers × chunk sizes {1, 7, 64, horizon}, ragged tails (q = 13 vs
+/// chunk 7), both precision wires.
+#[test]
+fn fc_chunked_is_bit_identical_any_workers_chunks_wires() {
+    let (s, q, m, rows) = (2, 13, 6, 10);
+    let p = ElmParams::init(Arch::Fc, s, q, m, 41);
+    let (x, yh, eh) = block_bufs(rows, s, q, 8);
+    let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+    for precision in [Precision::F64, Precision::MixedF32] {
+        let oracle = arch::h_block_policy(
+            &p,
+            &blk,
+            ParallelPolicy::sequential().with_precision(precision),
+        );
+        for chunk in [1usize, 7, 64, q] {
+            for workers in WORKER_COUNTS {
+                let got = arch::h_block_policy(
+                    &p,
+                    &blk,
+                    ParallelPolicy::with_workers(workers)
+                        .with_precision(precision)
+                        .with_recurrence(chunked(chunk, 0)),
+                );
+                assert_hblock_bits_eq(
+                    &oracle,
+                    &got,
+                    &format!("{precision:?} chunk={chunk} workers={workers}"),
+                );
+            }
+        }
+    }
+}
+
+/// Degenerate horizons: q = 0 and q = 1 have a schedule of at most one
+/// chunk, which must be the sequential walk itself — bit for bit.
+#[test]
+fn fc_chunked_degenerate_horizons_are_sequential() {
+    for q in [0usize, 1] {
+        let (s, m, rows) = (2, 4, 5);
+        let p = ElmParams::init(Arch::Fc, s, q, m, 42);
+        let (x, yh, eh) = block_bufs(rows, s, q, 9);
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        for precision in [Precision::F64, Precision::MixedF32] {
+            let oracle = arch::h_block_policy(
+                &p,
+                &blk,
+                ParallelPolicy::sequential().with_precision(precision),
+            );
+            for chunk in [1usize, 4] {
+                let got = arch::h_block_policy(
+                    &p,
+                    &blk,
+                    ParallelPolicy::with_workers(4)
+                        .with_precision(precision)
+                        .with_recurrence(chunked(chunk, 2)),
+                );
+                assert_hblock_bits_eq(&oracle, &got, &format!("q={q} chunk={chunk}"));
+            }
+        }
+    }
+}
+
+/// The recurrence-free architectures have nothing to chunk: chunked mode
+/// routes to the very same kernel and must be bit-identical at any
+/// chunk/warmup/worker combination.
+#[test]
+fn jordan_narmax_chunked_is_identically_sequential() {
+    let (s, q, m, rows) = (2, 12, 5, 9);
+    for arch in [Arch::Jordan, Arch::Narmax] {
+        let p = ElmParams::init(arch, s, q, m, 43);
+        let (x, yh, eh) = block_bufs(rows, s, q, 10);
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+        for precision in [Precision::F64, Precision::MixedF32] {
+            let oracle = arch::h_block_policy(
+                &p,
+                &blk,
+                ParallelPolicy::sequential().with_precision(precision),
+            );
+            for (chunk, warmup) in [(1usize, 0usize), (5, 3), (64, 0)] {
+                let got = arch::h_block_policy(
+                    &p,
+                    &blk,
+                    ParallelPolicy::with_workers(4)
+                        .with_precision(precision)
+                        .with_recurrence(chunked(chunk, warmup)),
+                );
+                assert_hblock_bits_eq(
+                    &oracle,
+                    &got,
+                    &format!("{arch:?} {precision:?} chunk={chunk}"),
+                );
+            }
+        }
+    }
+}
+
+/// Max |chunked − sequential| per element over the block.
+fn envelope(p: &ElmParams, blk: &SampleBlock, mode: RecurrenceMode) -> f64 {
+    let seq = arch::h_block_policy(p, blk, ParallelPolicy::sequential()).into_f64();
+    let got = arch::h_block_policy(
+        p,
+        blk,
+        ParallelPolicy::with_workers(4).with_recurrence(mode),
+    )
+    .into_f64();
+    let mut worst = 0f64;
+    for (a, b) in got.data().iter().zip(seq.data()) {
+        assert!(a.is_finite(), "chunked output must stay finite");
+        worst = worst.max((a - b).abs());
+    }
+    worst
+}
+
+/// The stateful nonlinear architectures under chunked warm-up: exact when
+/// the warm-up reaches t = 0, inside the documented per-arch envelope
+/// otherwise (LSTM/GRU contract the truncated state geometrically; Elman
+/// only has the trivial activation bound).
+#[test]
+fn stateful_archs_obey_the_documented_warmup_envelope() {
+    let (s, q, m, rows) = (2, 96, 8, 10);
+    let chunk = 32; // last chunk starts at t = 64
+    for arch_kind in [Arch::Elman, Arch::Lstm, Arch::Gru] {
+        let p = ElmParams::init(arch_kind, s, q, m, 44);
+        let (x, yh, eh) = block_bufs(rows, s, q, 11);
+        let blk = SampleBlock { rows, x: &x, yhist: &yh, ehist: &eh };
+
+        // warm-up spanning the horizon (ws = 0): bitwise the oracle
+        let seq = arch::h_block_policy(&p, &blk, ParallelPolicy::sequential());
+        let exact = arch::h_block_policy(
+            &p,
+            &blk,
+            ParallelPolicy::with_workers(4).with_recurrence(chunked(chunk, q)),
+        );
+        assert_hblock_bits_eq(&seq, &exact, &format!("{arch_kind:?} full warm-up"));
+
+        // truncated warm-ups: the envelope is the documented per-arch
+        // bound — and always the trivial activation-range cap
+        let cap = match arch_kind {
+            // lag-1 leaky cells contract the zero-state discrepancy
+            // geometrically over the 48-step warm-up
+            Arch::Lstm | Arch::Gru => 0.5,
+            // full-lag feedback: only the activation range bounds it
+            _ => 2.0,
+        };
+        for warmup in [0usize, 48] {
+            let e = envelope(&p, &blk, chunked(chunk, warmup));
+            assert!(
+                e <= 2.0,
+                "{arch_kind:?} warmup={warmup}: {e} breaks the activation cap"
+            );
+            if warmup == 48 {
+                assert!(
+                    e <= cap,
+                    "{arch_kind:?} warmup={warmup}: envelope {e} > documented {cap}"
+                );
+            }
+        }
+    }
+}
+
+/// The trainer-level block stitch (`hidden_matrix_policy`) carries the
+/// recurrence mode through to every row block: FC stays bit-identical to
+/// the sequential stitch on both wires.
+#[test]
+fn hidden_matrix_policy_carries_chunked_mode_bit_identically_for_fc() {
+    use opt_pr_elm::data::window::Windowed;
+    let mut rng = Rng::new(12);
+    let q = 10;
+    let mut y = vec![0.3f64, 0.45];
+    for t in 2..300 + q {
+        let v = 0.55 * y[t - 1] + 0.2 * y[t - 2]
+            + 0.1 * (t as f64 * 0.23).sin()
+            + 0.04 * rng.normal();
+        y.push(v);
+    }
+    let w = Windowed::from_series(&y, q).unwrap();
+    let p = ElmParams::init(Arch::Fc, w.s, w.q, 7, 45);
+    for precision in [Precision::F64, Precision::MixedF32] {
+        let seq = hidden_matrix_policy(
+            &p,
+            &w,
+            None,
+            ParallelPolicy::sequential().with_precision(precision),
+        );
+        for workers in [1usize, 4] {
+            let got = hidden_matrix_policy(
+                &p,
+                &w,
+                None,
+                ParallelPolicy::with_workers(workers)
+                    .with_precision(precision)
+                    .with_recurrence(chunked(4, 0)),
+            );
+            assert_hblock_bits_eq(
+                &seq,
+                &got,
+                &format!("{precision:?} workers={workers}"),
+            );
+        }
+    }
+}
+
+/// The generic affine scan from the public surface: one chunk is the
+/// stepping reference bitwise; the worker count never changes bits at any
+/// chunk size.
+#[test]
+fn affine_scan_public_surface_contract() {
+    let n = 4;
+    let mut rng = Rng::new(13);
+    let steps: Vec<Affine> = (0..23)
+        .map(|_| {
+            let mut a = Matrix::random(n, n, &mut rng);
+            for v in a.data_mut() {
+                *v *= 0.3;
+            }
+            let b = (0..n).map(|_| rng.normal()).collect();
+            Affine { a, b }
+        })
+        .collect();
+    let h0 = vec![0.25; n];
+    let reference = scan_affine_reference(&steps, &h0);
+    let one_chunk =
+        scan_affine(&steps, &h0, steps.len(), ParallelPolicy::with_workers(4)).unwrap();
+    assert_eq!(one_chunk, reference, "single chunk must be the oracle bits");
+    for chunk in [1usize, 5, 23] {
+        let base = scan_affine(&steps, &h0, chunk, ParallelPolicy::sequential()).unwrap();
+        for workers in WORKER_COUNTS {
+            let got =
+                scan_affine(&steps, &h0, chunk, ParallelPolicy::with_workers(workers))
+                    .unwrap();
+            assert_eq!(got, base, "chunk={chunk} workers={workers}");
+        }
+    }
+}
