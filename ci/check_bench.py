@@ -25,6 +25,13 @@ parity (1.0) and a scalar-fallback runner is never misread as a SIMD
 regression. A missing `isa` field (pre-ISSUE-5 BENCH file) is treated
 as "scalar".
 
+Since ISSUE 8 the gate also serves the fleet bench
+(`BENCH_fleet.json` vs `benches/fleet_baseline.json`): fleet records
+carry `requests_per_s` (completed fleet requests per second) instead of
+`gflops` — grouped orchestration has no FLOP model. A non-meta record
+must carry one of the two throughput fields; a record with neither, or
+with a negative value in either, is malformed and fails the gate.
+
 Since ISSUE 6 the meta record may carry `solve_report` — the
 degradation-ladder rung a healthy probe solve came back on. The value
 must be one of "primary"/"ridge"/"failed" (an unknown rung is a
@@ -122,8 +129,14 @@ def run(bench_path: str, baseline_path: str) -> None:
             die(f"record {i} has a bad op: {r}")
         if r["op"] == "meta":
             continue  # shape/throughput fields don't apply to metadata
-        if "gflops" not in r:
-            die(f"record {i} missing 'gflops': {r}")
+        if "gflops" not in r and "requests_per_s" not in r:
+            die(
+                f"record {i} carries neither 'gflops' nor 'requests_per_s': {r}"
+            )
+        if "gflops" in r and float(r["gflops"]) < 0:
+            die(f"record {i} has negative gflops: {r}")
+        if "requests_per_s" in r and float(r["requests_per_s"]) < 0:
+            die(f"record {i} has negative requests_per_s: {r}")
         if not (float(r["ns_per_iter"]) > 0):
             die(f"record {i} has non-positive ns_per_iter: {r}")
         # gbps (achieved bandwidth vs the compulsory-traffic model) is

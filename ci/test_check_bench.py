@@ -6,7 +6,9 @@ meta-record worker-count cases (explicit `workers` field honored; the
 retired gflops smuggle and a bare meta both rejected), and the ISSUE-5
 `isa`-aware SIMD-microkernel floors (gated as written on an "avx2" meta,
 capped at parity on a scalar/missing meta so non-AVX2 runners are not
-misread as regressions).
+misread as regressions), and the ISSUE-8 fleet-bench records
+(`requests_per_s` accepted in place of `gflops`, neither-field and
+negative-value records rejected, the grouped-vs-solo parity floor).
 """
 
 import json
@@ -91,8 +93,65 @@ def test_meta_missing_workers_rejected():
     expect_fail([bare, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
 
 
-def test_non_meta_record_must_carry_gflops():
+def test_non_meta_record_must_carry_a_throughput_field():
+    # neither gflops nor requests_per_s: malformed (ISSUE-8 rule)
     bad = {"op": "matmul", "shape": "512x512x512", "ns_per_iter": 100.0}
+    expect_fail([META, bad, rec("matmul_threaded", speedup=2.0)])
+
+
+# --- ISSUE-8 fleet-bench records: requests_per_s in place of gflops ------
+
+FLEET_BASELINE = {
+    "regression_margin": 0.25,
+    "required_ops": [
+        "meta",
+        "fleet_train_grouped",
+        "fleet_train_solo",
+    ],
+    # grouped-vs-solo parity floor: 1.0 before margin, 0.75 after
+    "min_speedups": {"fleet_train_grouped": 1.0},
+}
+
+
+def fleet_rec(op, rps=120.0, speedup=None):
+    r = {
+        "op": op,
+        "shape": "tenants8_n160_m16_q4",
+        "ns_per_iter": 100.0,
+        "requests_per_s": rps,
+    }
+    if speedup is not None:
+        r["speedup_vs_reference"] = speedup
+    return r
+
+
+def test_requests_per_s_accepted_in_place_of_gflops():
+    gate(
+        [META, fleet_rec("fleet_train_grouped", speedup=1.4),
+         fleet_rec("fleet_train_solo")],
+        FLEET_BASELINE,
+    )
+
+
+def test_fleet_grouped_speedup_regression_fails():
+    # 0.5x grouped-vs-solo is below the 0.75 parity floor
+    expect_fail(
+        [META, fleet_rec("fleet_train_grouped", speedup=0.5),
+         fleet_rec("fleet_train_solo")],
+        FLEET_BASELINE,
+    )
+
+
+def test_negative_requests_per_s_rejected():
+    expect_fail(
+        [META, fleet_rec("fleet_train_grouped", rps=-1.0, speedup=1.4),
+         fleet_rec("fleet_train_solo")],
+        FLEET_BASELINE,
+    )
+
+
+def test_negative_gflops_rejected():
+    bad = rec("matmul", gflops=-1.0)
     expect_fail([META, bad, rec("matmul_threaded", speedup=2.0)])
 
 

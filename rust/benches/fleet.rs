@@ -1,0 +1,226 @@
+//! Fleet-trainer throughput bench: many small same-shape tenants trained
+//! (and served) through one `FleetTrainer` drain vs one-at-a-time solo
+//! `CpuElmTrainer` runs over the identical jobs.
+//!
+//! The grouped path does the same numeric work as the solo loop — the
+//! fleet's contract is bit-identical per-tenant β — so the measured win
+//! is pure orchestration: one flattened block-diagonal stream and one
+//! thread-pool barrier per drain instead of one per tenant (and, on the
+//! predict side, one packed group-GEMM instead of per-tenant matvec
+//! sweeps).
+//!
+//! Emits `BENCH_fleet.json` records carrying `requests_per_s` (the
+//! fleet's unit of throughput — these ops have no meaningful GFLOP/s
+//! column) and the grouped-vs-solo `speedup_vs_reference`, gated by
+//! `ci/check_bench.py` against `benches/fleet_baseline.json`. Override
+//! the output path with `BENCH_FLEET_OUT=…`; set `BENCH_FLEET_QUICK=1`
+//! for the CI smoke mode (fewer tenants and rows, every op key still
+//! emitted).
+
+use std::time::Duration;
+
+use opt_pr_elm::coordinator::accumulator::SolveStrategy;
+use opt_pr_elm::coordinator::pipeline::CpuElmTrainer;
+use opt_pr_elm::coordinator::{FleetOutcome, FleetRequest, FleetTrainer};
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::Arch;
+use opt_pr_elm::linalg::ParallelPolicy;
+use opt_pr_elm::util::json::{num, obj, s, Json};
+use opt_pr_elm::util::timer::{bench, BenchResult};
+
+/// One emitted measurement.
+struct Rec {
+    op: String,
+    shape: String,
+    ns_per_iter: f64,
+    /// fleet requests completed per second (the gate accepts this in
+    /// place of `gflops` — orchestration ops have no FLOP model)
+    requests_per_s: Option<f64>,
+    speedup_vs_reference: Option<f64>,
+    /// bench machine's worker count — set on the `meta` record only
+    workers: Option<f64>,
+}
+
+fn push(
+    records: &mut Vec<Rec>,
+    r: &BenchResult,
+    op: &str,
+    shape: &str,
+    requests: f64,
+) -> f64 {
+    println!("{}", r.summary());
+    let secs = r.mean_secs();
+    let rps = if secs > 0.0 { requests / secs } else { 0.0 };
+    records.push(Rec {
+        op: op.to_string(),
+        shape: shape.to_string(),
+        ns_per_iter: secs * 1e9,
+        requests_per_s: Some(rps),
+        speedup_vs_reference: None,
+        workers: None,
+    });
+    secs * 1e9
+}
+
+/// Attach the measured speedup to the record `back` positions from the
+/// end (2 = the grouped record of a (grouped, solo) pair just pushed).
+fn mark_speedup_at(records: &mut [Rec], back: usize, speedup: f64) {
+    let i = records.len() - back;
+    records[i].speedup_vs_reference = Some(speedup);
+}
+
+/// Chaotic logistic-map series, one distinct orbit per tenant.
+fn series(len: usize, seed: u64) -> Vec<f64> {
+    let mut x = 0.37 + (seed % 97) as f64 * 1e-3;
+    (0..len)
+        .map(|_| {
+            x = 3.7 * x * (1.0 - x);
+            x - 0.5
+        })
+        .collect()
+}
+
+fn main() {
+    let quick =
+        std::env::var("BENCH_FLEET_QUICK").map_or(false, |v| v != "0" && !v.is_empty());
+    let budget = Duration::from_millis(if quick { 150 } else { 400 });
+    let policy = ParallelPolicy::auto();
+    let tenants = if quick { 8usize } else { 24 };
+    let n = if quick { 160usize } else { 480 };
+    let (m, q) = (16usize, 4usize);
+    println!(
+        "== fleet trainer bench (grouped vs solo){} — {} tenants, n={}, m={}, \
+         threaded policy: {} workers ==",
+        if quick { " [quick]" } else { "" },
+        tenants,
+        n,
+        m,
+        policy.workers
+    );
+
+    let mut records: Vec<Rec> = Vec::new();
+    records.push(Rec {
+        op: "meta".to_string(),
+        shape: format!("workers={}", policy.workers),
+        ns_per_iter: 1.0,
+        requests_per_s: None,
+        speedup_vs_reference: None,
+        workers: Some(policy.workers as f64),
+    });
+
+    let datasets: Vec<Windowed> = (0..tenants)
+        .map(|i| Windowed::from_series(&series(n + q, 1000 + i as u64), q).unwrap())
+        .collect();
+    let shape = format!("tenants{tenants}_n{n}_m{m}_q{q}");
+    let solo = CpuElmTrainer {
+        policy,
+        block_rows: 256,
+        strategy: SolveStrategy::Gram,
+        lambda: 1e-6,
+    };
+
+    // grouped: every tenant through ONE block-diagonal drain
+    let r = bench(&format!("fleet_train_grouped {shape}"), 1, budget, 30, || {
+        let mut fleet = FleetTrainer::with_policy(policy);
+        for (i, d) in datasets.iter().enumerate() {
+            fleet
+                .submit(FleetRequest::Train {
+                    tenant: format!("t{i}"),
+                    arch: Arch::Elman,
+                    m,
+                    seed: 7 + i as u64,
+                    data: d.clone(),
+                })
+                .unwrap();
+        }
+        let out = fleet.drain();
+        assert!(out.iter().all(|(_, o)| matches!(o, FleetOutcome::Trained { .. })));
+        out.len()
+    });
+    let t_grouped = push(&mut records, &r, "fleet_train_grouped", &shape, tenants as f64);
+
+    // solo reference: the identical jobs, one CpuElmTrainer run each
+    let r = bench(&format!("fleet_train_solo {shape}"), 1, budget, 30, || {
+        let mut betas = 0usize;
+        for (i, d) in datasets.iter().enumerate() {
+            let (model, _) = solo.train(Arch::Elman, d, m, 7 + i as u64).unwrap();
+            betas += model.beta.len();
+        }
+        betas
+    });
+    let t_solo = push(&mut records, &r, "fleet_train_solo", &shape, tenants as f64);
+    mark_speedup_at(&mut records, 2, t_solo / t_grouped);
+    println!("  -> grouped train speedup vs solo loop: {:.2}x", t_solo / t_grouped);
+
+    // predict throughput against a warm cache: one flattened H stream +
+    // one packed group-GEMM vs per-tenant solo predicts
+    let mut warm = FleetTrainer::with_policy(policy);
+    for (i, d) in datasets.iter().enumerate() {
+        warm.submit(FleetRequest::Train {
+            tenant: format!("t{i}"),
+            arch: Arch::Elman,
+            m,
+            seed: 7 + i as u64,
+            data: d.clone(),
+        })
+        .unwrap();
+    }
+    warm.drain();
+    let models: Vec<_> =
+        (0..tenants).map(|i| warm.model(&format!("t{i}")).unwrap().clone()).collect();
+
+    let r = bench(&format!("fleet_predict_grouped {shape}"), 1, budget, 30, || {
+        for (i, d) in datasets.iter().enumerate() {
+            warm.submit(FleetRequest::Predict {
+                tenant: format!("t{i}"),
+                data: d.clone(),
+            })
+            .unwrap();
+        }
+        let out = warm.drain();
+        assert!(out.iter().all(|(_, o)| matches!(o, FleetOutcome::Predicted { .. })));
+        out.len()
+    });
+    let t_grouped =
+        push(&mut records, &r, "fleet_predict_grouped", &shape, tenants as f64);
+
+    let r = bench(&format!("fleet_predict_solo {shape}"), 1, budget, 30, || {
+        let mut total = 0usize;
+        for (model, d) in models.iter().zip(&datasets) {
+            total += solo.predict(model, d).unwrap().len();
+        }
+        total
+    });
+    let t_solo = push(&mut records, &r, "fleet_predict_solo", &shape, tenants as f64);
+    mark_speedup_at(&mut records, 2, t_solo / t_grouped);
+    println!("  -> grouped predict speedup vs solo loop: {:.2}x", t_solo / t_grouped);
+
+    let out_path = std::env::var("BENCH_FLEET_OUT")
+        .unwrap_or_else(|_| "BENCH_fleet.json".to_string());
+    let json = Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("op", s(&r.op)),
+                    ("shape", s(&r.shape)),
+                    ("ns_per_iter", num(r.ns_per_iter)),
+                ];
+                if let Some(x) = r.requests_per_s {
+                    pairs.push(("requests_per_s", num(x)));
+                }
+                if let Some(x) = r.workers {
+                    pairs.push(("workers", num(x)));
+                }
+                if let Some(x) = r.speedup_vs_reference {
+                    pairs.push(("speedup_vs_reference", num(x)));
+                }
+                obj(pairs)
+            })
+            .collect(),
+    );
+    match std::fs::write(&out_path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {out_path} ({} records)", records.len()),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

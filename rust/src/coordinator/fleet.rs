@@ -1,0 +1,1261 @@
+//! `FleetTrainer` — multi-tenant block-diagonal batched training for many
+//! small models.
+//!
+//! A fleet deployment trains hundreds of independent little ELMs (one per
+//! tenant/sensor/series). Training each alone pays one thread-pool
+//! spawn/join barrier, one block schedule, and one solve per model. This
+//! module batches them instead:
+//!
+//! * **Grouping rule.** Queued `Train` requests are grouped by
+//!   [`GroupKey`] = `(arch, M, s, q)` — the exact shape tuple that decides
+//!   every kernel and schedule downstream. Groups form in first-seen
+//!   submission order; within a group, members keep submission order.
+//! * **Block-diagonal stream.** Each group runs as ONE flattened parallel
+//!   stream: every member's fixed `block_ranges` schedule is concatenated
+//!   (member-major, block order) into a single task list executed by one
+//!   `par_map`/`par_map_isolated` barrier. Tasks never mix tenants — the
+//!   implied global system is block-diagonal, one block per tenant — so
+//!   each tenant's partials/blocks are produced by the *identical* code
+//!   (`compute_h_block_inj`, `checked_gram_partials`,
+//!   `CpuElmTrainer::solve_blocks`) with the *identical* per-tenant
+//!   schedule and fold order as a solo [`CpuElmTrainer`] run. That is the
+//!   fleet's contract: **per-tenant β is bit-identical to training that
+//!   model alone**, at any worker count, on either `Precision` wire.
+//! * **Per-tenant fault isolation.** Stream tasks return their tenant's
+//!   result as a value, so one tenant's poisoned blocks produce a typed
+//!   [`SolveError`] in that tenant's [`FleetOutcome::Failed`] while
+//!   group-mates train to completion bit-identically. The fleet's own
+//!   injection site is [`inject::Site::FleetJob`], keyed by the tenant's
+//!   train-submission index within the drain batch. (Worker-panic retry
+//!   counts are shared by the whole group's stream and reported on every
+//!   member; a panic that fails its sequential retry aborts the group.)
+//! * **Hot-tenant updates.** Trained models are cached (LRU, capacity
+//!   [`FleetTrainer::cache_capacity`]). An `Update` request routes new
+//!   rows through [`OnlineElm`] RLS: the filter is lazily seeded from the
+//!   training run's pre-ridge Gram matrix via
+//!   [`OnlineElm::from_state`], so after any number of updates β stays
+//!   equal (to solver precision) to batch ridge over *all rows seen* —
+//!   training rows plus every applied update. Retraining a tenant
+//!   replaces the cache entry and resets its filter.
+//! * **Grouped predict.** Non-NARMAX `Predict` requests across the whole
+//!   drain run as one flattened H-block stream followed by a single
+//!   [`Matrix::matmul_group`] packed group-GEMM over every `(H block, β)`
+//!   pair. NARMAX predicts delegate to [`CpuElmTrainer::predict`]
+//!   per tenant (the two-pass ELS refinement is inherently sequential
+//!   across its passes).
+//!
+//! Drain semantics: [`FleetTrainer::drain`] processes every queued
+//! `Train` first (grouped), then every `Update` in submission order, then
+//! every `Predict` — so an update or predict queued before its tenant's
+//! train still sees the freshly trained model. Outcomes are returned in
+//! submission order.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::accumulator::SolveStrategy;
+use crate::coordinator::pipeline::{
+    block_gram_partials, checked_gram_partials, compute_h_block, compute_h_block_inj,
+    fold_partials, CpuElmTrainer, TrainBreakdown,
+};
+use crate::data::window::Windowed;
+use crate::elm::arch::{block_ranges, HBlock};
+use crate::elm::trainer::shift_history;
+use crate::elm::{Arch, ElmParams, OnlineElm, RlsOutcome, SrElmModel, TrainOptions};
+use crate::linalg::policy::{par_map, par_map_isolated};
+use crate::linalg::{cholesky_solve, Matrix, ParallelPolicy};
+use crate::robust::{
+    as_solve_error, inject, quarantine, ridge_ladder_solve, DegradationRung,
+    SolveError, SolveReport, SolveStrategyKind,
+};
+
+/// The shape tuple that decides every kernel and schedule downstream —
+/// two tenants share a grouped stream iff their keys are equal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    /// Recurrent architecture of the model.
+    pub arch: Arch,
+    /// Hidden width M.
+    pub m: usize,
+    /// Input window length s.
+    pub s: usize,
+    /// History depth q.
+    pub q: usize,
+}
+
+/// One queued unit of fleet work, addressed by tenant id.
+#[derive(Debug, Clone)]
+pub enum FleetRequest {
+    /// Train (or retrain) this tenant's model from scratch.
+    Train {
+        /// Tenant id the trained model is cached under.
+        tenant: String,
+        /// Recurrent architecture to train.
+        arch: Arch,
+        /// Hidden width M.
+        m: usize,
+        /// Random-parameter seed.
+        seed: u64,
+        /// Training windows.
+        data: Windowed,
+    },
+    /// Fold new rows into this tenant's cached model via RLS.
+    Update {
+        /// Tenant whose cached model receives the rows.
+        tenant: String,
+        /// The new windows (same (s, q) as the trained model).
+        data: Windowed,
+    },
+    /// One-step-ahead predictions from this tenant's cached model.
+    Predict {
+        /// Tenant whose cached model predicts.
+        tenant: String,
+        /// The windows to predict on (same (s, q) as the trained model).
+        data: Windowed,
+    },
+}
+
+impl FleetRequest {
+    /// The tenant id this request addresses.
+    pub fn tenant(&self) -> &str {
+        match self {
+            FleetRequest::Train { tenant, .. }
+            | FleetRequest::Update { tenant, .. }
+            | FleetRequest::Predict { tenant, .. } => tenant,
+        }
+    }
+}
+
+/// Per-request result of a [`FleetTrainer::drain`], in submission order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetOutcome {
+    /// Training succeeded; the model is cached under its tenant id.
+    Trained {
+        /// How β was produced (strategy, degradation rung, retries, …).
+        report: SolveReport,
+        /// Row blocks processed for this tenant (both NARMAX passes).
+        blocks: usize,
+    },
+    /// An RLS update was applied to the cached model.
+    Updated {
+        /// The most severe per-block filter outcome (quarantined-input
+        /// counts summed across blocks).
+        outcome: RlsOutcome,
+        /// Total rows folded into the model so far (train + updates).
+        rows_seen: usize,
+    },
+    /// Predictions from the cached model.
+    Predicted {
+        /// One-step-ahead predictions, one per input window.
+        yhat: Vec<f64>,
+    },
+    /// The request failed; group-mates are unaffected.
+    Failed {
+        /// The typed failure.
+        error: SolveError,
+        /// The report of the failed attempt (rung = `Failed`).
+        report: SolveReport,
+    },
+}
+
+/// A tenant's cached model plus the state needed to keep it warm.
+struct CacheEntry {
+    model: SrElmModel,
+    /// Report of the training run (its `effective_lambda` seeds the RLS
+    /// ridge prior).
+    report: SolveReport,
+    /// Pre-ridge HᵀH over the rows the model was trained on — the seed
+    /// for the lazily constructed RLS covariance.
+    gram: Matrix,
+    /// Rows folded so far (training rows, then + update rows).
+    rows: usize,
+    /// Lazily seeded RLS filter; `None` until the first `Update`.
+    rls: Option<OnlineElm>,
+    /// Logical-clock timestamp of the last train/update/predict touch.
+    last_used: u64,
+}
+
+/// One member's view inside a grouped stream (borrows the drain batch).
+#[derive(Clone, Copy)]
+struct GroupMember<'a> {
+    params: &'a ElmParams,
+    data: &'a Windowed,
+    ehist: Option<&'a [f32]>,
+    /// The tenant's train-submission index in the drain batch — the
+    /// `Site::FleetJob` fault key.
+    fleet_idx: usize,
+    /// Rows the quarantine screen dropped for this member.
+    quarantined: usize,
+}
+
+/// A fitted group member: β plus the cache-seeding artifacts.
+struct Fit {
+    beta: Vec<f64>,
+    /// Pre-ridge HᵀH (the RLS seed).
+    gram: Matrix,
+    rows: usize,
+    report: SolveReport,
+    blocks: usize,
+}
+
+type FitResult = std::result::Result<Fit, (SolveError, SolveReport)>;
+type TrainResult = std::result::Result<TenantTrained, (SolveError, SolveReport)>;
+
+/// Owned per-tenant training result handed back to `drain`.
+struct TenantTrained {
+    model: SrElmModel,
+    report: SolveReport,
+    blocks: usize,
+    gram: Matrix,
+    rows: usize,
+}
+
+/// A queued `Train` with its slot in the drain batch.
+struct QueuedTrain {
+    slot: usize,
+    /// Train-submission index in the drain batch (the fault key).
+    fleet_idx: usize,
+    arch: Arch,
+    m: usize,
+    seed: u64,
+    data: Windowed,
+}
+
+/// Multi-tenant trainer front end: submit → queue → drain (see module
+/// docs for grouping, bit-identity, and cache semantics).
+pub struct FleetTrainer {
+    /// Worker count + wire precision, shared by every grouped stream.
+    pub policy: ParallelPolicy,
+    /// Samples per H block (fixed: part of the deterministic result).
+    pub block_rows: usize,
+    /// β-solve strategy every group runs (NARMAX always takes Gram).
+    pub strategy: SolveStrategy,
+    /// Ridge λ (NARMAX raises it to its floor).
+    pub lambda: f64,
+    /// Max cached tenant models; inserts beyond this evict the least
+    /// recently used entry (ties broken by smaller tenant id).
+    pub cache_capacity: usize,
+    queue: Vec<FleetRequest>,
+    cache: HashMap<String, CacheEntry>,
+    clock: u64,
+}
+
+impl FleetTrainer {
+    /// Fleet with `workers` threads and the Gram strategy (the natural
+    /// fleet default: fused partials, no per-tenant factor state).
+    pub fn new(workers: usize) -> FleetTrainer {
+        FleetTrainer::with_policy(ParallelPolicy::with_workers(workers))
+    }
+
+    /// Fleet with an explicit policy (worker count + wire precision).
+    pub fn with_policy(policy: ParallelPolicy) -> FleetTrainer {
+        FleetTrainer {
+            policy,
+            block_rows: 256,
+            strategy: SolveStrategy::Gram,
+            lambda: 1e-6,
+            cache_capacity: 64,
+            queue: Vec::new(),
+            cache: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// The solo trainer this fleet is contracted to be bit-identical to.
+    fn solo(&self) -> CpuElmTrainer {
+        CpuElmTrainer {
+            policy: self.policy,
+            block_rows: self.block_rows,
+            strategy: self.strategy,
+            lambda: self.lambda,
+        }
+    }
+
+    /// Queue a request. A `Train` for a tenant that already has a queued
+    /// `Train` is rejected with [`SolveError::DuplicateTenant`] — the
+    /// fleet cannot decide which model the id should map to.
+    pub fn submit(&mut self, req: FleetRequest) -> Result<()> {
+        if let FleetRequest::Train { tenant, .. } = &req {
+            let dup = self.queue.iter().any(|q| {
+                matches!(q, FleetRequest::Train { tenant: t, .. } if t == tenant)
+            });
+            if dup {
+                return Err(SolveError::DuplicateTenant { tenant: tenant.clone() }.into());
+            }
+        }
+        self.queue.push(req);
+        Ok(())
+    }
+
+    /// Requests currently queued for the next drain.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Tenants currently holding a cached model.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Whether this tenant has a cached model.
+    pub fn has_model(&self, tenant: &str) -> bool {
+        self.cache.contains_key(tenant)
+    }
+
+    /// The cached model for a tenant (tests pin β bit-identity through
+    /// this accessor).
+    pub fn model(&self, tenant: &str) -> Option<&SrElmModel> {
+        self.cache.get(tenant).map(|e| &e.model)
+    }
+
+    /// Process the whole queue: trains (grouped by [`GroupKey`]), then
+    /// updates, then predicts — outcomes in submission order. An empty
+    /// queue drains to an empty vec.
+    pub fn drain(&mut self) -> Vec<(String, FleetOutcome)> {
+        let queue = std::mem::take(&mut self.queue);
+        let names: Vec<String> =
+            queue.iter().map(|r| r.tenant().to_string()).collect();
+        let mut outcomes: Vec<Option<FleetOutcome>> =
+            queue.iter().map(|_| None).collect();
+
+        let mut trains: Vec<QueuedTrain> = Vec::new();
+        let mut updates: Vec<(usize, String, Windowed)> = Vec::new();
+        let mut predicts: Vec<(usize, String, Windowed)> = Vec::new();
+        for (slot, req) in queue.into_iter().enumerate() {
+            match req {
+                FleetRequest::Train { tenant: _, arch, m, seed, data } => {
+                    let fleet_idx = trains.len();
+                    trains.push(QueuedTrain { slot, fleet_idx, arch, m, seed, data });
+                }
+                FleetRequest::Update { tenant, data } => {
+                    updates.push((slot, tenant, data));
+                }
+                FleetRequest::Predict { tenant, data } => {
+                    predicts.push((slot, tenant, data));
+                }
+            }
+        }
+
+        // group trains by shape key, first-seen order
+        let mut groups: Vec<(GroupKey, Vec<usize>)> = Vec::new();
+        for (ti, job) in trains.iter().enumerate() {
+            let key =
+                GroupKey { arch: job.arch, m: job.m, s: job.data.s, q: job.data.q };
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, members)) => members.push(ti),
+                None => groups.push((key, vec![ti])),
+            }
+        }
+
+        for (_key, members) in &groups {
+            let results = self.train_group(&trains, members);
+            for (&ti, res) in members.iter().zip(results) {
+                let job = &trains[ti];
+                outcomes[job.slot] = Some(match res {
+                    Ok(t) => {
+                        let outcome = FleetOutcome::Trained {
+                            report: t.report,
+                            blocks: t.blocks,
+                        };
+                        self.cache_insert(
+                            names[job.slot].clone(),
+                            CacheEntry {
+                                model: t.model,
+                                report: t.report,
+                                gram: t.gram,
+                                rows: t.rows,
+                                rls: None,
+                                last_used: 0, // stamped by cache_insert
+                            },
+                        );
+                        outcome
+                    }
+                    Err((error, report)) => FleetOutcome::Failed { error, report },
+                });
+            }
+        }
+
+        for (slot, tenant, data) in updates {
+            outcomes[slot] = Some(self.apply_update(&tenant, &data));
+        }
+
+        self.run_predicts(predicts, &mut outcomes);
+
+        names
+            .into_iter()
+            .zip(outcomes)
+            .map(|(n, o)| (n, o.expect("every request resolved")))
+            .collect()
+    }
+
+    /// Train one shape group as a block-diagonal stream; results align
+    /// with `members`.
+    fn train_group(&self, trains: &[QueuedTrain], members: &[usize]) -> Vec<TrainResult> {
+        let arch = trains[members[0]].arch;
+        let fail_kind = if arch == Arch::Narmax {
+            SolveStrategyKind::Gram
+        } else {
+            strategy_kind(self.strategy)
+        };
+
+        // screen each member; a screening failure fails only that member
+        let screened: Vec<std::result::Result<(quarantine::Screened<'_>, ElmParams), SolveError>> =
+            members
+                .iter()
+                .map(|&ti| {
+                    let job = &trains[ti];
+                    quarantine::screen(&job.data)
+                        .map(|s| {
+                            let params = ElmParams::init(
+                                job.arch,
+                                s.data().s,
+                                s.data().q,
+                                job.m,
+                                job.seed,
+                            );
+                            (s, params)
+                        })
+                        .map_err(|e| to_solve_error(&e))
+                })
+                .collect();
+
+        let mut positions: Vec<usize> = Vec::new();
+        let mut mems: Vec<GroupMember<'_>> = Vec::new();
+        for (pos, res) in screened.iter().enumerate() {
+            if let Ok((s, params)) = res {
+                positions.push(pos);
+                mems.push(GroupMember {
+                    params,
+                    data: s.data(),
+                    ehist: None,
+                    fleet_idx: trains[members[pos]].fleet_idx,
+                    quarantined: s.dropped(),
+                });
+            }
+        }
+
+        let fits = if arch == Arch::Narmax {
+            self.narmax_group(&mems)
+        } else if self.strategy == SolveStrategy::Gram {
+            self.gram_group(&mems, self.lambda)
+        } else {
+            self.qr_group(&mems)
+        };
+
+        let mut out: Vec<Option<TrainResult>> = screened
+            .iter()
+            .enumerate()
+            .map(|(pos, res)| match res {
+                Err(e) => Some(Err((
+                    e.clone(),
+                    failed_report(fail_kind, trains[members[pos]].data.n),
+                ))),
+                Ok(_) => None,
+            })
+            .collect();
+        for (i, fit) in fits.into_iter().enumerate() {
+            let pos = positions[i];
+            out[pos] = Some(match fit {
+                Ok(f) => {
+                    let params =
+                        screened[pos].as_ref().expect("screened ok").1.clone();
+                    Ok(TenantTrained {
+                        model: SrElmModel { params, beta: f.beta },
+                        report: f.report,
+                        blocks: f.blocks,
+                        gram: f.gram,
+                        rows: f.rows,
+                    })
+                }
+                Err(e) => Err(e),
+            });
+        }
+        out.into_iter()
+            .map(|o| o.expect("every member resolved"))
+            .collect()
+    }
+
+    /// Grouped Gram strategy: one fused (H block → partials) stream, then
+    /// per-member in-order fold + ridge ladder — the byte-for-byte mirror
+    /// of the solo `gram_solve` per tenant.
+    fn gram_group(&self, mems: &[GroupMember<'_>], lambda: f64) -> Vec<FitResult> {
+        let mut reports: Vec<SolveReport> = mems
+            .iter()
+            .map(|_| SolveReport::new(SolveStrategyKind::Gram))
+            .collect();
+        let fits = self.gram_stream(mems, lambda, &mut reports);
+        mems.iter()
+            .zip(fits)
+            .zip(reports)
+            .map(|((mem, fit), mut report)| {
+                report.quarantined_rows += mem.quarantined;
+                let blocks = block_ranges(mem.data.n, self.block_rows).len();
+                match fit {
+                    Ok(f) => Ok(Fit {
+                        beta: f.0,
+                        gram: f.1,
+                        rows: f.2,
+                        report,
+                        blocks,
+                    }),
+                    Err(e) => Err((e, report)),
+                }
+            })
+            .collect()
+    }
+
+    /// The fused block-diagonal Gram stream shared by the Gram strategy
+    /// and both NARMAX passes. Per member: `Ok((β, pre-ridge HᵀH, rows))`
+    /// or the first typed error in block order; `reports` (aligned with
+    /// `mems`) record retries/rung/λ exactly as the solo path would.
+    fn gram_stream(
+        &self,
+        mems: &[GroupMember<'_>],
+        lambda: f64,
+        reports: &mut [SolveReport],
+    ) -> Vec<std::result::Result<(Vec<f64>, Matrix, usize), SolveError>> {
+        let mut tasks: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for (ji, mem) in mems.iter().enumerate() {
+            let ranges = block_ranges(mem.data.n, self.block_rows);
+            for (li, &(lo, hi)) in ranges.iter().enumerate() {
+                tasks.push((ji, li, lo, hi));
+            }
+        }
+        let mapped = par_map_isolated(&tasks, self.policy, |_, &(ji, li, lo, hi)| {
+            let mem = &mems[ji];
+            inject::maybe_panic(inject::Site::Worker, li);
+            let (h, y) = fleet_h_block(
+                mem.params,
+                mem.data,
+                mem.ehist,
+                lo,
+                hi,
+                self.policy,
+                li,
+                mem.fleet_idx,
+            );
+            Ok((ji, checked_gram_partials(&h, &y, li, mem.params.m)))
+        });
+        let (flat, retries) = match mapped {
+            Ok(v) => v,
+            Err(e) => {
+                // a worker panicked twice: the whole stream aborted
+                let err = to_solve_error(&e);
+                for r in reports.iter_mut() {
+                    r.rung = DegradationRung::Failed;
+                }
+                return mems.iter().map(|_| Err(err.clone())).collect();
+            }
+        };
+        let mut per: Vec<Vec<Result<(Matrix, Vec<f64>, usize)>>> =
+            mems.iter().map(|_| Vec::new()).collect();
+        for (ji, res) in flat {
+            per[ji].push(res);
+        }
+        mems.iter()
+            .zip(per)
+            .zip(reports.iter_mut())
+            .map(|((mem, partials), report)| {
+                report.retries += retries;
+                let mut ok = Vec::with_capacity(partials.len());
+                for p in partials {
+                    match p {
+                        Ok(v) => ok.push(v),
+                        Err(e) => {
+                            report.rung = DegradationRung::Failed;
+                            return Err(to_solve_error(&e));
+                        }
+                    }
+                }
+                let (g, c) = match fold_partials(&ok, mem.params.m) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        report.rung = DegradationRung::Failed;
+                        return Err(to_solve_error(&e));
+                    }
+                };
+                let rows = ok.iter().map(|(_, _, r)| *r).sum();
+                match ridge_ladder_solve(&g, &c, lambda, true, report) {
+                    Ok(beta) => Ok((beta, g, rows)),
+                    Err(e) => Err(to_solve_error(&e)),
+                }
+            })
+            .collect()
+    }
+
+    /// Grouped TSQR/DirectQr: one flattened block stream, then each
+    /// member finishes through `CpuElmTrainer::solve_blocks` — literally
+    /// the solo code, which is the bit-identity argument for these
+    /// strategies.
+    fn qr_group(&self, mems: &[GroupMember<'_>]) -> Vec<FitResult> {
+        let kind = strategy_kind(self.strategy);
+        let (blocks, retries) = match self.block_stream(mems) {
+            Ok(v) => v,
+            Err(e) => {
+                let err = to_solve_error(&e);
+                return mems
+                    .iter()
+                    .map(|mem| Err((err.clone(), failed_report(kind, mem.quarantined))))
+                    .collect();
+            }
+        };
+        let solo = self.solo();
+        let m = mems.first().map_or(0, |j| j.params.m);
+        mems.iter()
+            .zip(blocks)
+            .map(|(mem, bl)| {
+                let n_blocks = bl.len();
+                // fold the RLS gram seed before solve_blocks consumes the
+                // blocks (the solo path never needs this; it is the price
+                // of warm updates under the factorization strategies)
+                let (gram, rows) = gram_seed(&bl, m);
+                let mut bd =
+                    TrainBreakdown { blocks: n_blocks, ..Default::default() };
+                match solo.solve_blocks(
+                    mem.params,
+                    mem.data,
+                    None,
+                    self.lambda,
+                    bl,
+                    retries,
+                    &mut bd,
+                ) {
+                    Ok(beta) => {
+                        let mut report = bd.solve_report;
+                        report.quarantined_rows += mem.quarantined;
+                        Ok(Fit { beta, gram, rows, report, blocks: bd.blocks })
+                    }
+                    Err(e) => {
+                        let mut report = bd.solve_report;
+                        if report.strategy == SolveStrategyKind::Unspecified {
+                            report.strategy = kind;
+                        }
+                        report.rung = DegradationRung::Failed;
+                        report.quarantined_rows += mem.quarantined;
+                        Err((to_solve_error(&e), report))
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Grouped NARMAX two-pass ELS: grouped pass 1 (blocks kept for the
+    /// residual matvec), per-member residual history, grouped pass 2 over
+    /// the survivors — each pass the mirror of `narmax_pass1` /
+    /// `solve_pass`.
+    fn narmax_group(&self, mems: &[GroupMember<'_>]) -> Vec<FitResult> {
+        let lambda = self.lambda.max(TrainOptions::NARMAX_RIDGE);
+        let m = mems.first().map_or(0, |j| j.params.m);
+        let mut out: Vec<Option<FitResult>> = mems.iter().map(|_| None).collect();
+
+        // pass 1: blocks with e ≡ 0
+        let (blocks, retries1) = match self.block_stream(mems) {
+            Ok(v) => v,
+            Err(e) => {
+                let err = to_solve_error(&e);
+                return mems
+                    .iter()
+                    .map(|mem| {
+                        Err((
+                            err.clone(),
+                            failed_report(SolveStrategyKind::Gram, mem.quarantined),
+                        ))
+                    })
+                    .collect();
+            }
+        };
+        let idx: Vec<(usize, usize)> = blocks
+            .iter()
+            .enumerate()
+            .flat_map(|(ji, bl)| (0..bl.len()).map(move |li| (ji, li)))
+            .collect();
+        let partials = match par_map(idx, self.policy, |(ji, li)| {
+            let (h, y) = &blocks[ji][li];
+            Ok((ji, checked_gram_partials(h, y, li, m)))
+        }) {
+            Ok(v) => v,
+            Err(e) => {
+                let err = to_solve_error(&e);
+                return mems
+                    .iter()
+                    .map(|mem| {
+                        Err((
+                            err.clone(),
+                            failed_report(SolveStrategyKind::Gram, mem.quarantined),
+                        ))
+                    })
+                    .collect();
+            }
+        };
+        let mut per: Vec<Vec<Result<(Matrix, Vec<f64>, usize)>>> =
+            mems.iter().map(|_| Vec::new()).collect();
+        for (ji, res) in partials {
+            per[ji].push(res);
+        }
+
+        let mut ehists: Vec<Option<Vec<f32>>> = mems.iter().map(|_| None).collect();
+        for (ji, (mem, partials)) in mems.iter().zip(per).enumerate() {
+            let mut report = SolveReport::new(SolveStrategyKind::Gram);
+            report.retries = retries1;
+            report.quarantined_rows = mem.quarantined;
+            let mut ok = Vec::with_capacity(partials.len());
+            let mut first_err: Option<SolveError> = None;
+            for p in partials {
+                match p {
+                    Ok(v) => ok.push(v),
+                    Err(e) => {
+                        first_err = Some(to_solve_error(&e));
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                report.rung = DegradationRung::Failed;
+                out[ji] = Some(Err((e, report)));
+                continue;
+            }
+            let folded = match fold_partials(&ok, m) {
+                Ok(v) => v,
+                Err(e) => {
+                    report.rung = DegradationRung::Failed;
+                    out[ji] = Some(Err((to_solve_error(&e), report)));
+                    continue;
+                }
+            };
+            let (g, c) = folded;
+            match ridge_ladder_solve(&g, &c, lambda, true, &mut report) {
+                Ok(beta1) => {
+                    let mut yhat = Vec::with_capacity(mem.data.n);
+                    for (h, _) in &blocks[ji] {
+                        yhat.extend(h.matvec(&beta1));
+                    }
+                    let resid: Vec<f32> = mem
+                        .data
+                        .y
+                        .iter()
+                        .zip(&yhat)
+                        .map(|(&y, &p)| y - p as f32)
+                        .collect();
+                    ehists[ji] = Some(shift_history(&resid, mem.data.q));
+                }
+                Err(e) => out[ji] = Some(Err((to_solve_error(&e), report))),
+            }
+        }
+
+        // pass 2 over the survivors, with their residual histories
+        let survivors: Vec<usize> =
+            (0..mems.len()).filter(|&ji| out[ji].is_none()).collect();
+        let mems2: Vec<GroupMember<'_>> = survivors
+            .iter()
+            .map(|&ji| GroupMember { ehist: ehists[ji].as_deref(), ..mems[ji] })
+            .collect();
+        let fits2 = self.gram_group(&mems2, lambda);
+        for (&ji, fit) in survivors.iter().zip(fits2) {
+            out[ji] = Some(fit.map(|mut f| {
+                f.blocks *= 2; // both passes cut the same block schedule
+                f
+            }));
+        }
+        out.into_iter()
+            .map(|o| o.expect("every member resolved"))
+            .collect()
+    }
+
+    /// One flattened H-block stream for the whole group; per-member block
+    /// lists come back in block order.
+    #[allow(clippy::type_complexity)]
+    fn block_stream(
+        &self,
+        mems: &[GroupMember<'_>],
+    ) -> Result<(Vec<Vec<(HBlock, Vec<f64>)>>, u32)> {
+        let mut tasks: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for (ji, mem) in mems.iter().enumerate() {
+            let ranges = block_ranges(mem.data.n, self.block_rows);
+            for (li, &(lo, hi)) in ranges.iter().enumerate() {
+                tasks.push((ji, li, lo, hi));
+            }
+        }
+        let (flat, retries) =
+            par_map_isolated(&tasks, self.policy, |_, &(ji, li, lo, hi)| {
+                let mem = &mems[ji];
+                inject::maybe_panic(inject::Site::Worker, li);
+                Ok((
+                    ji,
+                    fleet_h_block(
+                        mem.params,
+                        mem.data,
+                        mem.ehist,
+                        lo,
+                        hi,
+                        self.policy,
+                        li,
+                        mem.fleet_idx,
+                    ),
+                ))
+            })?;
+        let mut per: Vec<Vec<(HBlock, Vec<f64>)>> =
+            mems.iter().map(|_| Vec::new()).collect();
+        for (ji, hb) in flat {
+            per[ji].push(hb);
+        }
+        Ok((per, retries))
+    }
+
+    /// Apply one RLS update to a cached tenant model.
+    fn apply_update(&mut self, tenant: &str, data: &Windowed) -> FleetOutcome {
+        self.clock += 1;
+        let clock = self.clock;
+        let lambda_default = self.lambda;
+        let block_rows = self.block_rows;
+        let policy = self.policy;
+        let Some(entry) = self.cache.get_mut(tenant) else {
+            return failed(
+                SolveError::UnknownTenant { tenant: tenant.to_string() },
+                SolveStrategyKind::Online,
+            );
+        };
+        entry.last_used = clock;
+        let screened = match quarantine::screen(data) {
+            Ok(s) => s,
+            Err(e) => return failed(to_solve_error(&e), SolveStrategyKind::Online),
+        };
+        let data = screened.data();
+        if data.s != entry.model.params.s || data.q != entry.model.params.q {
+            return failed(
+                SolveError::ShapeMismatch {
+                    context: "fleet update",
+                    detail: format!(
+                        "update windows are (s={}, q={}) but tenant {tenant:?} \
+                         trained at (s={}, q={})",
+                        data.s, data.q, entry.model.params.s, entry.model.params.q
+                    ),
+                },
+                SolveStrategyKind::Online,
+            );
+        }
+        if entry.rls.is_none() {
+            let lam = if entry.report.effective_lambda > 0.0 {
+                entry.report.effective_lambda
+            } else {
+                lambda_default
+            }
+            .max(1e-12);
+            match seed_rls(&entry.gram, &entry.model.beta, entry.rows, lam) {
+                Ok(r) => entry.rls = Some(r),
+                Err(e) => return failed(e, SolveStrategyKind::Online),
+            }
+        }
+        // NARMAX folds H(ehist) rows, with ehist from the cached model's
+        // one-pass residuals on the update window — the same refinement
+        // the predict path applies
+        let ehist = if entry.model.params.arch == Arch::Narmax {
+            let mut y0 = Vec::with_capacity(data.n);
+            for &(lo, hi) in &block_ranges(data.n, block_rows) {
+                let (h, _) =
+                    compute_h_block(&entry.model.params, data, None, lo, hi, policy);
+                y0.extend(h.matvec(&entry.model.beta));
+            }
+            let resid: Vec<f32> =
+                data.y.iter().zip(&y0).map(|(&y, &p)| y - p as f32).collect();
+            Some(shift_history(&resid, data.q))
+        } else {
+            None
+        };
+        let params = &entry.model.params;
+        let rls = entry.rls.as_mut().expect("seeded above");
+        let mut outcome = RlsOutcome::Applied;
+        for &(lo, hi) in &block_ranges(data.n, block_rows) {
+            let (h, y) =
+                compute_h_block(params, data, ehist.as_deref(), lo, hi, policy);
+            let rows = h.rows();
+            // H entries are f32 nonlinearity outputs: the narrowing cast
+            // is exact on either wire
+            let hf: Vec<f32> = match h {
+                HBlock::F32(hb) => hb.data().to_vec(),
+                HBlock::F64(hb) => hb.data().iter().map(|&v| v as f32).collect(),
+            };
+            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            match rls.update_block(&hf, &yf, rows) {
+                Ok(o) => outcome = merge_outcome(outcome, o),
+                Err(e) => {
+                    return failed(to_solve_error(&e), SolveStrategyKind::Online)
+                }
+            }
+        }
+        let (new_beta, rows_seen) = (rls.beta().to_vec(), rls.rows_seen());
+        entry.model.beta = new_beta;
+        entry.rows = rows_seen;
+        FleetOutcome::Updated { outcome, rows_seen }
+    }
+
+    /// Resolve every queued predict: NARMAX per tenant (two-pass),
+    /// everything else through one flattened H stream + one packed
+    /// group-GEMM.
+    fn run_predicts(
+        &mut self,
+        predicts: Vec<(usize, String, Windowed)>,
+        outcomes: &mut [Option<FleetOutcome>],
+    ) {
+        let kind = strategy_kind(self.strategy);
+        let mut narmax_preds: Vec<(usize, SrElmModel, Windowed)> = Vec::new();
+        let mut flat_preds: Vec<(usize, SrElmModel, Windowed)> = Vec::new();
+        for (slot, tenant, data) in predicts {
+            self.clock += 1;
+            let clock = self.clock;
+            match self.cache.get_mut(&tenant) {
+                None => {
+                    outcomes[slot] = Some(failed(
+                        SolveError::UnknownTenant { tenant },
+                        kind,
+                    ));
+                }
+                Some(entry) => {
+                    entry.last_used = clock;
+                    if data.s != entry.model.params.s
+                        || data.q != entry.model.params.q
+                    {
+                        outcomes[slot] = Some(failed(
+                            SolveError::ShapeMismatch {
+                                context: "fleet predict",
+                                detail: format!(
+                                    "predict windows are (s={}, q={}) but tenant \
+                                     {tenant:?} trained at (s={}, q={})",
+                                    data.s,
+                                    data.q,
+                                    entry.model.params.s,
+                                    entry.model.params.q
+                                ),
+                            },
+                            kind,
+                        ));
+                    } else if entry.model.params.arch == Arch::Narmax {
+                        narmax_preds.push((slot, entry.model.clone(), data));
+                    } else {
+                        flat_preds.push((slot, entry.model.clone(), data));
+                    }
+                }
+            }
+        }
+        let solo = self.solo();
+        for (slot, model, data) in narmax_preds {
+            outcomes[slot] = Some(match solo.predict(&model, &data) {
+                Ok(yhat) => FleetOutcome::Predicted { yhat },
+                Err(e) => failed(to_solve_error(&e), SolveStrategyKind::Gram),
+            });
+        }
+        if flat_preds.is_empty() {
+            return;
+        }
+        let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+        for (pi, (_, _, data)) in flat_preds.iter().enumerate() {
+            for (lo, hi) in block_ranges(data.n, self.block_rows) {
+                tasks.push((pi, lo, hi));
+            }
+        }
+        let mapped = par_map(tasks, self.policy, |(pi, lo, hi)| {
+            let (_, model, data) = &flat_preds[pi];
+            let (h, _) = compute_h_block(&model.params, data, None, lo, hi, self.policy);
+            Ok((pi, h.into_f64()))
+        });
+        match mapped {
+            Err(e) => {
+                let err = to_solve_error(&e);
+                for (slot, _, _) in &flat_preds {
+                    outcomes[*slot] = Some(failed(err.clone(), kind));
+                }
+            }
+            Ok(hs) => {
+                let betas: Vec<Matrix> = flat_preds
+                    .iter()
+                    .map(|(_, model, _)| {
+                        Matrix::from_vec(model.params.m, 1, model.beta.clone())
+                    })
+                    .collect();
+                let pairs: Vec<(&Matrix, &Matrix)> =
+                    hs.iter().map(|(pi, h)| (h, &betas[*pi])).collect();
+                let outs = Matrix::matmul_group(&pairs, self.policy);
+                let mut yhats: Vec<Vec<f64>> = flat_preds
+                    .iter()
+                    .map(|(_, _, d)| Vec::with_capacity(d.n))
+                    .collect();
+                for ((pi, _), out) in hs.iter().zip(outs) {
+                    yhats[*pi].extend(out.data());
+                }
+                for ((slot, _, _), yhat) in flat_preds.iter().zip(yhats) {
+                    outcomes[*slot] = Some(FleetOutcome::Predicted { yhat });
+                }
+            }
+        }
+    }
+
+    /// Insert under LRU eviction: at capacity, the smallest
+    /// `(last_used, tenant)` entry goes (deterministic tie-break).
+    fn cache_insert(&mut self, tenant: String, mut entry: CacheEntry) {
+        self.clock += 1;
+        entry.last_used = self.clock;
+        if !self.cache.contains_key(&tenant) && self.cache.len() >= self.cache_capacity
+        {
+            let victim = self
+                .cache
+                .iter()
+                .min_by_key(|(k, e)| (e.last_used, (*k).clone()))
+                .map(|(k, _)| k.clone());
+            if let Some(v) = victim {
+                self.cache.remove(&v);
+            }
+        }
+        self.cache.insert(tenant, entry);
+    }
+}
+
+/// The solo fused H-block computation plus the fleet's own
+/// [`inject::Site::FleetJob`] hooks, keyed by the tenant's
+/// train-submission index (worker-count and grouping invariant): a panic
+/// at the tenant's first-executed block task, payload corruption on every
+/// one of the tenant's blocks. No-ops without the `fault-inject` feature
+/// — the clean path is the byte-for-byte solo computation.
+#[allow(clippy::too_many_arguments)]
+fn fleet_h_block(
+    params: &ElmParams,
+    data: &Windowed,
+    ehist: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+    policy: ParallelPolicy,
+    local_idx: usize,
+    fleet_idx: usize,
+) -> (HBlock, Vec<f64>) {
+    inject::maybe_panic(inject::Site::FleetJob, fleet_idx);
+    let (mut h, y) = compute_h_block_inj(params, data, ehist, lo, hi, policy, local_idx);
+    match &mut h {
+        HBlock::F64(hb) => {
+            let (r, c) = (hb.rows, hb.cols);
+            inject::corrupt_slice_f64(inject::Site::FleetJob, fleet_idx, hb.data_mut(), r, c);
+        }
+        HBlock::F32(hb) => {
+            let (r, c) = (hb.rows, hb.cols);
+            inject::corrupt_slice_f32(inject::Site::FleetJob, fleet_idx, hb.data_mut(), r, c);
+        }
+    }
+    (h, y)
+}
+
+/// In-order fold of just the pre-ridge HᵀH (and the row count) over a
+/// member's blocks — the RLS covariance seed under the factorization
+/// strategies, whose solves never form the Gram matrix themselves.
+fn gram_seed(blocks: &[(HBlock, Vec<f64>)], m: usize) -> (Matrix, usize) {
+    let mut g = Matrix::zeros(m, m);
+    let mut rows = 0usize;
+    for (h, y) in blocks {
+        let (gl, _c, rl) = block_gram_partials(h, y);
+        for (gv, lv) in g.data_mut().iter_mut().zip(gl.data()) {
+            *gv += lv;
+        }
+        rows += rl;
+    }
+    (g, rows)
+}
+
+/// Seed an RLS filter so its state is exactly the batch ridge state over
+/// the training rows: P = (G + λI)⁻¹ column-by-column via Cholesky.
+fn seed_rls(
+    gram: &Matrix,
+    beta: &[f64],
+    rows: usize,
+    lambda: f64,
+) -> std::result::Result<OnlineElm, SolveError> {
+    let m = beta.len();
+    let mut a = gram.clone();
+    for i in 0..m {
+        a[(i, i)] += lambda;
+    }
+    let mut p = Matrix::zeros(m, m);
+    for j in 0..m {
+        let mut e = vec![0.0f64; m];
+        e[j] = 1.0;
+        let col = cholesky_solve(&a, &e).map_err(|err| to_solve_error(&err))?;
+        for (i, &v) in col.iter().enumerate() {
+            p[(i, j)] = v;
+        }
+    }
+    OnlineElm::from_state(m, lambda, p, beta.to_vec(), rows)
+        .map_err(|e| to_solve_error(&e))
+}
+
+/// The report kind a strategy's failures carry.
+fn strategy_kind(s: SolveStrategy) -> SolveStrategyKind {
+    match s {
+        SolveStrategy::Gram => SolveStrategyKind::Gram,
+        SolveStrategy::Tsqr => SolveStrategyKind::Tsqr,
+        SolveStrategy::DirectQr => SolveStrategyKind::Qr,
+    }
+}
+
+/// A `Failed` outcome with a rung-`Failed` report of the given kind.
+fn failed(error: SolveError, kind: SolveStrategyKind) -> FleetOutcome {
+    let mut report = SolveReport::new(kind);
+    report.rung = DegradationRung::Failed;
+    FleetOutcome::Failed { error, report }
+}
+
+/// A rung-`Failed` report recording the quarantined-row count.
+fn failed_report(kind: SolveStrategyKind, quarantined: usize) -> SolveReport {
+    let mut r = SolveReport::new(kind);
+    r.rung = DegradationRung::Failed;
+    r.quarantined_rows = quarantined;
+    r
+}
+
+/// Extract the typed `SolveError` from an `anyhow` chain; anything that
+/// somehow is not one (every error this crate raises is) is wrapped as a
+/// retried worker panic carrying the rendered message, preserving a
+/// typed surface.
+fn to_solve_error(err: &anyhow::Error) -> SolveError {
+    as_solve_error(err).cloned().unwrap_or_else(|| SolveError::WorkerPanic {
+        index: 0,
+        retried: true,
+        message: format!("{err:#}"),
+    })
+}
+
+/// Most severe of two per-block RLS outcomes (Reset > Quarantined >
+/// Applied); quarantined non-finite counts accumulate.
+fn merge_outcome(a: RlsOutcome, b: RlsOutcome) -> RlsOutcome {
+    use RlsOutcome::*;
+    match (a, b) {
+        (Reset, _) | (_, Reset) => Reset,
+        (QuarantinedInput { non_finite: x }, QuarantinedInput { non_finite: y }) => {
+            QuarantinedInput { non_finite: x + y }
+        }
+        (q @ QuarantinedInput { .. }, Applied)
+        | (Applied, q @ QuarantinedInput { .. }) => q,
+        (Applied, Applied) => Applied,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accumulator::SolveStrategy;
+
+    fn toy_data(n: usize, q: usize, phase: f64) -> Windowed {
+        let series: Vec<f64> =
+            (0..n + q).map(|i| (i as f64 * 0.07 + phase).sin()).collect();
+        Windowed::from_series(&series, q).expect("windowed")
+    }
+
+    fn train_req(tenant: &str, m: usize, seed: u64, phase: f64) -> FleetRequest {
+        FleetRequest::Train {
+            tenant: tenant.to_string(),
+            arch: Arch::Elman,
+            m,
+            seed,
+            data: toy_data(90, 3, phase),
+        }
+    }
+
+    #[test]
+    fn duplicate_train_rejected_until_drained() {
+        let mut fleet = FleetTrainer::new(2);
+        fleet.submit(train_req("a", 6, 1, 0.0)).unwrap();
+        let err = fleet.submit(train_req("a", 6, 2, 0.1)).unwrap_err();
+        assert_eq!(
+            as_solve_error(&err).map(SolveError::class),
+            Some("duplicate-tenant")
+        );
+        fleet.drain();
+        // after a drain, the id can be retrained
+        fleet.submit(train_req("a", 6, 2, 0.1)).unwrap();
+    }
+
+    #[test]
+    fn unknown_tenant_is_typed() {
+        let mut fleet = FleetTrainer::new(1);
+        fleet
+            .submit(FleetRequest::Predict {
+                tenant: "ghost".into(),
+                data: toy_data(40, 3, 0.0),
+            })
+            .unwrap();
+        fleet
+            .submit(FleetRequest::Update {
+                tenant: "ghost".into(),
+                data: toy_data(40, 3, 0.0),
+            })
+            .unwrap();
+        let out = fleet.drain();
+        assert_eq!(out.len(), 2);
+        for (_, o) in out {
+            match o {
+                FleetOutcome::Failed { error, report } => {
+                    assert_eq!(error.class(), "unknown-tenant");
+                    assert_eq!(report.rung, DegradationRung::Failed);
+                }
+                other => panic!("expected Failed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut fleet = FleetTrainer::new(2);
+        fleet.cache_capacity = 2;
+        fleet.submit(train_req("a", 6, 1, 0.0)).unwrap();
+        fleet.submit(train_req("b", 6, 2, 0.2)).unwrap();
+        fleet.drain();
+        // touch "a" so "b" is the LRU victim
+        fleet
+            .submit(FleetRequest::Predict { tenant: "a".into(), data: toy_data(40, 3, 0.0) })
+            .unwrap();
+        fleet.drain();
+        fleet.submit(train_req("c", 6, 3, 0.4)).unwrap();
+        fleet.drain();
+        assert!(fleet.has_model("a"));
+        assert!(!fleet.has_model("b"), "LRU entry should have been evicted");
+        assert!(fleet.has_model("c"));
+    }
+
+    #[test]
+    fn single_tenant_group_matches_solo_gram() {
+        let data = toy_data(120, 3, 0.3);
+        let solo = CpuElmTrainer {
+            policy: ParallelPolicy::with_workers(4),
+            block_rows: 256,
+            strategy: SolveStrategy::Gram,
+            lambda: 1e-6,
+        };
+        let (model, _) = solo.train(Arch::Elman, &data, 8, 7).unwrap();
+        let mut fleet = FleetTrainer::new(4);
+        fleet
+            .submit(FleetRequest::Train {
+                tenant: "t".into(),
+                arch: Arch::Elman,
+                m: 8,
+                seed: 7,
+                data,
+            })
+            .unwrap();
+        let out = fleet.drain();
+        assert!(matches!(out[0].1, FleetOutcome::Trained { .. }), "{:?}", out[0]);
+        assert_eq!(fleet.model("t").unwrap().beta, model.beta, "β must be bitwise solo");
+    }
+
+    #[test]
+    fn merge_outcome_takes_most_severe() {
+        use RlsOutcome::*;
+        assert_eq!(merge_outcome(Applied, Applied), Applied);
+        assert_eq!(
+            merge_outcome(Applied, QuarantinedInput { non_finite: 2 }),
+            QuarantinedInput { non_finite: 2 }
+        );
+        assert_eq!(
+            merge_outcome(
+                QuarantinedInput { non_finite: 1 },
+                QuarantinedInput { non_finite: 2 }
+            ),
+            QuarantinedInput { non_finite: 3 }
+        );
+        assert_eq!(merge_outcome(Reset, QuarantinedInput { non_finite: 1 }), Reset);
+    }
+}

@@ -15,6 +15,10 @@
 //!   threads instead of PJRT (offline / no-artifact deployments).
 //! * [`job`] — experiment descriptions (arch × dataset × M × variant) used
 //!   by the report emitters and benches.
+//! * [`fleet`] — `FleetTrainer`, the multi-tenant front end: many small
+//!   independent models grouped by shape and trained as block-diagonal
+//!   batched streams, with per-tenant β bit-identical to solo training,
+//!   an LRU model cache, and RLS warm updates for hot tenants.
 //!
 //! `CpuElmTrainer` honors the [`crate::linalg::Precision`] knob on its
 //! [`crate::linalg::ParallelPolicy`]: under `MixedF32` every
@@ -27,10 +31,12 @@
 
 pub mod accumulator;
 pub mod batcher;
+pub mod fleet;
 pub mod job;
 pub mod pipeline;
 
 pub use accumulator::{GramAccumulator, SolveStrategy};
 pub use batcher::{Block, RowBlockBatcher};
+pub use fleet::{FleetOutcome, FleetRequest, FleetTrainer, GroupKey};
 pub use job::TrainJob;
 pub use pipeline::{CpuElmTrainer, PrElmTrainer, TrainBreakdown};

@@ -513,7 +513,6 @@ impl CpuElmTrainer {
         ehist: Option<&[f32]>,
         bd: &mut TrainBreakdown,
     ) -> Result<Vec<f64>> {
-        let m = params.m;
         let ranges = block_ranges(data.n, self.block_rows);
         bd.blocks += ranges.len();
         // NARMAX always takes the ridge path (see TrainOptions::NARMAX_RIDGE)
@@ -552,7 +551,34 @@ impl CpuElmTrainer {
                 ))
             })?;
         bd.exec_s += t0.elapsed().as_secs_f64();
+        self.solve_blocks(params, data, ehist, lambda, blocks, exec_retries, bd)
+    }
 
+    /// The post-block half of [`solve_pass`](Self::solve_pass) for the
+    /// factorization strategies: consume already-computed H blocks (in
+    /// block order) and produce β via DirectQr assembly or the TSQR
+    /// reduction, falling back to the chunked-Gram ridge ladder (which
+    /// recomputes H for this dataset) on rank trouble. Shared with the
+    /// fleet trainer, whose grouped streams compute many tenants' blocks
+    /// in one flattened `par_map` and then finish each tenant through this
+    /// exact code path — that sharing is the fleet's bit-identity
+    /// guarantee for the TSQR/DirectQr strategies.
+    pub(crate) fn solve_blocks(
+        &self,
+        params: &ElmParams,
+        data: &Windowed,
+        ehist: Option<&[f32]>,
+        lambda: f64,
+        blocks: Vec<(HBlock, Vec<f64>)>,
+        exec_retries: u32,
+        bd: &mut TrainBreakdown,
+    ) -> Result<Vec<f64>> {
+        debug_assert_ne!(
+            self.strategy,
+            SolveStrategy::Gram,
+            "the Gram strategy folds partials without materializing blocks"
+        );
+        let m = params.m;
         if self.strategy == SolveStrategy::DirectQr {
             // assemble H in block order and run the threaded direct QR —
             // bit-identical to the sequential `lstsq_qr` on the same H at
@@ -766,7 +792,7 @@ impl CpuElmTrainer {
 
 /// In-block-order fold of (HᵀH, HᵀY, rows) partials — the fold order is
 /// fixed by block index, never by worker schedule (§7.3 determinism).
-fn fold_partials(
+pub(crate) fn fold_partials(
     partials: &[(Matrix, Vec<f64>, usize)],
     m: usize,
 ) -> Result<(Matrix, Vec<f64>)> {
@@ -791,7 +817,7 @@ fn fold_partials(
 /// [`block_gram_partials`] with a typed shape guard (a truncated block's H
 /// no longer matches its targets) and the `GramPartial` fault-inject hook
 /// applied to the partial, keyed by the block index.
-fn checked_gram_partials(
+pub(crate) fn checked_gram_partials(
     h: &HBlock,
     y: &[f64],
     idx: usize,
@@ -813,7 +839,7 @@ fn checked_gram_partials(
 /// corruption on the block's own wire, then row truncation — both keyed by
 /// the block index (worker-count invariant), both no-ops without the
 /// `fault-inject` feature.
-fn compute_h_block_inj(
+pub(crate) fn compute_h_block_inj(
     params: &ElmParams,
     data: &Windowed,
     ehist: Option<&[f32]>,
@@ -882,7 +908,7 @@ fn inject_data_window(data: &Windowed) -> Option<Windowed> {
 /// the *same* fixed `GRAM_ROW_CHUNK` schedule (`gram_with` mirrors
 /// `gram_widen`), so the bit-identity holds at any `block_rows`, not
 /// just single-chunk blocks.
-fn block_gram_partials(h: &HBlock, y: &[f64]) -> (Matrix, Vec<f64>, usize) {
+pub(crate) fn block_gram_partials(h: &HBlock, y: &[f64]) -> (Matrix, Vec<f64>, usize) {
     match h {
         HBlock::F64(h) => (
             h.gram_with(ParallelPolicy::sequential()),
@@ -901,7 +927,7 @@ fn block_gram_partials(h: &HBlock, y: &[f64]) -> (Matrix, Vec<f64>, usize) {
 /// f32-born under `MixedF32` — and through the recurrence traversal its
 /// [`RecurrenceMode`](crate::linalg::RecurrenceMode) selects) + widened
 /// targets for rows [lo, hi).
-fn compute_h_block(
+pub(crate) fn compute_h_block(
     params: &ElmParams,
     data: &Windowed,
     ehist: Option<&[f32]>,

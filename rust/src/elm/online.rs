@@ -72,6 +72,45 @@ impl OnlineElm {
         OnlineElm { m, p, beta: vec![0.0; m], rows_seen: 0, lambda, resets: 0 }
     }
 
+    /// Resume the filter from an externally computed ridge posterior:
+    /// `p` = (HᵀH + λI)⁻¹ over the `rows_seen` rows already absorbed and
+    /// `beta` the matching ridge solution. This is the fleet trainer's
+    /// batch→online handoff: a tenant trained by the block-diagonal batch
+    /// solve streams later rows through RLS *continuing* its batch
+    /// posterior instead of restarting from the I/λ prior, which is what
+    /// keeps the "β ≡ batch ridge over all rows seen" invariant true
+    /// across the handoff. Shapes and finiteness are checked up front —
+    /// a poisoned seed must not masquerade as healthy filter state.
+    pub fn from_state(
+        m: usize,
+        lambda: f64,
+        p: Matrix,
+        beta: Vec<f64>,
+        rows_seen: usize,
+    ) -> Result<OnlineElm> {
+        assert!(lambda > 0.0, "online ELM needs a ridge prior");
+        if p.rows != m || p.cols != m || beta.len() != m {
+            return Err(SolveError::ShapeMismatch {
+                context: "online seed",
+                detail: format!(
+                    "P is {}x{}, beta has {} vs M {}",
+                    p.rows,
+                    p.cols,
+                    beta.len(),
+                    m
+                ),
+            }
+            .into());
+        }
+        if !p.data().iter().all(|v| v.is_finite())
+            || !beta.iter().all(|v| v.is_finite())
+        {
+            return Err(SolveError::NonFiniteInput { site: "online seed", index: 0 }
+                .into());
+        }
+        Ok(OnlineElm { m, p, beta, rows_seen, lambda, resets: 0 })
+    }
+
     pub fn beta(&self) -> &[f64] {
         &self.beta
     }
@@ -263,6 +302,56 @@ mod tests {
         for (a, b) in by_1.beta().iter().zip(by_all.beta()) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn from_state_resume_equals_batch_ridge_over_all_rows() {
+        // seed the filter with the ridge posterior of a batch prefix, then
+        // stream the suffix: β must track the batch ridge over ALL rows —
+        // the invariant the fleet's batch→online handoff relies on
+        let (n, m, lambda) = (120usize, 5usize, 1e-3);
+        let (h, y) = random_problem(n, m, 7);
+        let cut = 72usize;
+        let hm = M::from_f32(cut, m, &h[..cut * m]);
+        let mut g = hm.gram();
+        for i in 0..m {
+            g[(i, i)] += lambda;
+        }
+        let mut p0 = M::zeros(m, m);
+        for j in 0..m {
+            let mut e = vec![0.0; m];
+            e[j] = 1.0;
+            let col = cholesky_solve(&g, &e).unwrap();
+            for i in 0..m {
+                p0[(i, j)] = col[i];
+            }
+        }
+        let beta0 = batch_ridge(&h[..cut * m], &y[..cut], cut, m, lambda);
+        let mut o = OnlineElm::from_state(m, lambda, p0, beta0, cut).unwrap();
+        let mut seen = cut;
+        while seen < n {
+            let hi = (seen + 16).min(n);
+            o.update_block(&h[seen * m..hi * m], &y[seen..hi], hi - seen).unwrap();
+            seen = hi;
+            let batch = batch_ridge(&h[..seen * m], &y[..seen], seen, m, lambda);
+            for (a, b) in o.beta().iter().zip(&batch) {
+                assert!((a - b).abs() < 1e-6, "prefix {seen}: {a} vs {b}");
+            }
+        }
+        assert_eq!(o.rows_seen(), n);
+    }
+
+    #[test]
+    fn from_state_rejects_bad_seeds() {
+        let p = M::zeros(3, 3);
+        assert!(OnlineElm::from_state(4, 1e-2, p.clone(), vec![0.0; 4], 0).is_err());
+        assert!(OnlineElm::from_state(3, 1e-2, p.clone(), vec![0.0; 2], 0).is_err());
+        let mut bad = M::zeros(3, 3);
+        bad[(1, 1)] = f64::NAN;
+        assert!(OnlineElm::from_state(3, 1e-2, bad, vec![0.0; 3], 0).is_err());
+        assert!(
+            OnlineElm::from_state(3, 1e-2, p, vec![f64::INFINITY, 0.0, 0.0], 0).is_err()
+        );
     }
 
     #[test]

@@ -200,6 +200,65 @@ impl Matrix {
         Matrix { rows: m, cols: n, data }
     }
 
+    /// Packed group-GEMM: many independent `Aᵢ·Bᵢ` products executed as
+    /// **one** flattened parallel stream — the kernel substrate of the
+    /// fleet trainer's block-diagonal batching. Every `Bᵢ` is packed once
+    /// into read-only [`PackedPanels`] up front, then the fixed
+    /// [`MM_ROW_TILE`] row tiles of *all* pairs are collected into a
+    /// single task list executed by `policy.workers` threads: one
+    /// spawn/join barrier for the whole group instead of one per product,
+    /// which is where the throughput lives when the group is many small
+    /// same-shape GEMMs (Appleyard-style fusion of a model fleet).
+    ///
+    /// Per-pair results are **bit-identical to [`Matrix::matmul_with`]**
+    /// (and, under the default [`FmaMode::Exact`], to [`Matrix::matmul`])
+    /// at any worker count: each output tile is produced by the identical
+    /// kernel over the identical per-pair pack, tiles never mix pairs
+    /// (the stream is block-diagonal over the group), and the tile
+    /// schedule is a function of the pair shapes alone.
+    pub fn matmul_group(
+        pairs: &[(&Matrix, &Matrix)],
+        policy: ParallelPolicy,
+    ) -> Vec<Matrix> {
+        for (a, b) in pairs {
+            assert_eq!(a.cols, b.rows, "matmul_group shape mismatch");
+        }
+        let packs: Vec<PackedPanels<f64>> = pairs
+            .iter()
+            .map(|(_, b)| PackedPanels::pack(&b.data, b.rows, b.cols))
+            .collect();
+        // one flat task list: (pair, row tile) in pair-major order — the
+        // same fixed tiling matmul_with uses per pair
+        let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+        for (p, (a, _)) in pairs.iter().enumerate() {
+            for (i0, i1) in fixed_tiles(a.rows, MM_ROW_TILE) {
+                tasks.push((p, i0, i1));
+            }
+        }
+        let slabs = par_map(tasks, policy, |(p, i0, i1)| {
+            Ok((p, pairs[p].0.matmul_rows(&packs[p], i0, i1, policy.fma)))
+        })
+        .expect("matmul_group worker thread panicked");
+        // stitch per pair: par_map preserves task order, and tasks are
+        // pair-major in ascending row-tile order
+        let mut outs: Vec<Matrix> = pairs
+            .iter()
+            .map(|(a, b)| Matrix {
+                rows: a.rows,
+                cols: b.cols,
+                data: Vec::with_capacity(a.rows * b.cols),
+            })
+            .collect();
+        for (p, slab) in slabs {
+            outs[p].data.extend_from_slice(&slab.data);
+        }
+        for (out, (a, b)) in outs.iter_mut().zip(pairs) {
+            // zero-row/zero-col pairs produce no tasks; keep the shape
+            out.data.resize(a.rows * b.cols, 0.0);
+        }
+        outs
+    }
+
     /// GEMM restricted to output rows [i0, i1) over a prebuilt B pack: the
     /// shared kernel behind `matmul` (full range) and `matmul_with` (one
     /// tile per call, pack shared across tiles). Row independence makes
@@ -612,6 +671,41 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn matmul_group_bit_identical_to_per_pair_matmul() {
+        // varied shapes in one group, including the fleet's M×1 predict
+        // columns and a tall pair spanning several MM_ROW_TILE tiles
+        let mut rng = Rng::new(11);
+        let shapes = [(3usize, 5usize, 2usize), (70, 8, 1), (1, 4, 4), (200, 12, 1)];
+        let mats: Vec<(Matrix, Matrix)> = shapes
+            .iter()
+            .map(|&(m, k, n)| (Matrix::random(m, k, &mut rng), Matrix::random(k, n, &mut rng)))
+            .collect();
+        let pairs: Vec<(&Matrix, &Matrix)> = mats.iter().map(|(a, b)| (a, b)).collect();
+        for workers in [1usize, 2, 4, 8] {
+            let policy = ParallelPolicy::with_workers(workers);
+            let got = Matrix::matmul_group(&pairs, policy);
+            assert_eq!(got.len(), pairs.len());
+            for (g, (a, b)) in got.iter().zip(&pairs) {
+                let want = a.matmul_with(b, policy);
+                assert_eq!(g, &want, "group GEMM diverged at workers={workers}");
+                assert_eq!(g, &a.matmul(b), "group GEMM diverged from matmul");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_group_handles_empty_and_degenerate_pairs() {
+        assert!(Matrix::matmul_group(&[], ParallelPolicy::with_workers(4)).is_empty());
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 2);
+        let c = Matrix::zeros(2, 3);
+        let d = Matrix::zeros(3, 0);
+        let out = Matrix::matmul_group(&[(&a, &b), (&c, &d)], ParallelPolicy::with_workers(2));
+        assert_eq!((out[0].rows, out[0].cols), (0, 2));
+        assert_eq!((out[1].rows, out[1].cols), (2, 0));
     }
 
     /// Unblocked ijk reference (the seed implementation, minus the

@@ -122,6 +122,19 @@ pub enum SolveError {
         /// Rows the dataset had before screening.
         rows: usize,
     },
+    /// Two queued fleet `Train` requests named the same tenant — the
+    /// fleet cannot decide which model the id should map to, so the
+    /// second submission is rejected up front.
+    DuplicateTenant {
+        /// The tenant id submitted twice.
+        tenant: String,
+    },
+    /// A fleet `Predict`/`Update` named a tenant with no cached model —
+    /// never trained through this fleet, or already LRU-evicted.
+    UnknownTenant {
+        /// The tenant id that missed the model cache.
+        tenant: String,
+    },
 }
 
 impl fmt::Display for SolveError {
@@ -180,6 +193,16 @@ impl fmt::Display for SolveError {
                 "input quarantine dropped all {rows} rows (every window \
                  contained non-finite values)"
             ),
+            SolveError::DuplicateTenant { tenant } => write!(
+                f,
+                "tenant {tenant:?} already has a queued train request \
+                 (one model per tenant id per drain)"
+            ),
+            SolveError::UnknownTenant { tenant } => write!(
+                f,
+                "tenant {tenant:?} has no cached model (never trained, or \
+                 LRU-evicted) — submit a train request first"
+            ),
         }
     }
 }
@@ -221,6 +244,8 @@ impl SolveError {
             SolveError::FoldIncomplete { .. } => "fold-incomplete",
             SolveError::WorkerPanic { .. } => "worker-panic",
             SolveError::AllRowsQuarantined { .. } => "all-rows-quarantined",
+            SolveError::DuplicateTenant { .. } => "duplicate-tenant",
+            SolveError::UnknownTenant { .. } => "unknown-tenant",
         }
     }
 }
@@ -284,6 +309,8 @@ mod tests {
             SolveError::WorkerPanic { index: 0, retried: false, message: String::new() }
                 .class(),
             SolveError::AllRowsQuarantined { rows: 0 }.class(),
+            SolveError::DuplicateTenant { tenant: String::new() }.class(),
+            SolveError::UnknownTenant { tenant: String::new() }.class(),
         ];
         let mut set = std::collections::HashSet::new();
         for c in all {

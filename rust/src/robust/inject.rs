@@ -1,8 +1,8 @@
 //! Deterministic, seed-keyed fault injection for the training pipeline.
 //!
-//! The harness corrupts the pipeline at six sites — data windows, H
+//! The harness corrupts the pipeline at seven sites — data windows, H
 //! blocks, sequence-parallel scan chunks, Gram partials, TSQR leaves,
-//! worker threads — with a taxonomy
+//! worker threads, fleet jobs — with a taxonomy
 //! of faults (NaN/Inf payloads, denormal scaling, rank-collapsed columns,
 //! truncated blocks, injected worker panics). Whether a given (site,
 //! block-index) pair is corrupted is a pure function of the armed plan's
@@ -58,6 +58,14 @@ pub enum Site {
     TsqrLeaf,
     /// A worker-thread item (panic injection).
     Worker,
+    /// One tenant's work inside a fleet group solve: payload faults hit
+    /// every H block of the targeted tenant and panics fire at the
+    /// tenant's first block task, all keyed by the **tenant's train index
+    /// within the drain batch** (submission order) — never by group
+    /// composition, worker count, or schedule. The per-tenant isolation
+    /// contract (a poisoned tenant must not perturb its group-mates) is
+    /// tested through this site.
+    FleetJob,
 }
 
 impl Site {
@@ -70,6 +78,7 @@ impl Site {
             Site::GramPartial => "gram-partial",
             Site::TsqrLeaf => "tsqr-leaf",
             Site::Worker => "worker",
+            Site::FleetJob => "fleet-job",
         }
     }
 }

@@ -17,10 +17,13 @@
 
 use opt_pr_elm::coordinator::accumulator::SolveStrategy;
 use opt_pr_elm::coordinator::pipeline::CpuElmTrainer;
+use opt_pr_elm::coordinator::{FleetOutcome, FleetRequest, FleetTrainer};
 use opt_pr_elm::data::window::Windowed;
 use opt_pr_elm::elm::Arch;
 use opt_pr_elm::linalg::RecurrenceMode;
-use opt_pr_elm::robust::inject::{arm, take_events, Fault, FaultPlan, Site};
+use opt_pr_elm::robust::inject::{
+    arm, corrupt_slice_f64, take_events, Fault, FaultPlan, Site,
+};
 use opt_pr_elm::robust::{as_solve_error, DegradationRung};
 use opt_pr_elm::util::rng::Rng;
 
@@ -370,6 +373,193 @@ fn scan_chunk_panics_are_retried_to_a_bit_identical_beta() {
             assert_eq!(
                 model.beta, healthy.beta,
                 "chunked {strategy:?} w={workers}: retried β must match healthy bits"
+            );
+        }
+    }
+}
+
+// --- Fleet-job fault isolation ------------------------------------------
+//
+// The `FleetJob` site targets ONE tenant's work inside a grouped
+// block-diagonal solve, keyed by the tenant's train-submission index in
+// the drain batch. The isolation contract: a poisoned tenant fails with a
+// typed per-tenant error (or recovers), and its group-mates' β stay
+// bit-identical to the clean drain — at every worker count.
+
+const FLEET_TENANTS: usize = 5;
+
+fn fleet_reqs() -> Vec<FleetRequest> {
+    (0..FLEET_TENANTS)
+        .map(|i| FleetRequest::Train {
+            tenant: format!("tenant-{i}"),
+            arch: Arch::Elman,
+            m: 8,
+            seed: 100 + i as u64,
+            data: toy_windowed(150 + 10 * i, 4, 50 + i as u64),
+        })
+        .collect()
+}
+
+fn loaded_fleet(workers: usize, reqs: &[FleetRequest]) -> FleetTrainer {
+    let mut fleet = FleetTrainer::new(workers);
+    fleet.block_rows = 48;
+    for r in reqs {
+        fleet.submit(r.clone()).unwrap();
+    }
+    fleet
+}
+
+/// Find a `(seed, period)` whose deterministic fire pattern over the
+/// tenant indices `0..FLEET_TENANTS` is a strict non-empty subset. The
+/// per-index decision is a pure function of the plan, so this probe
+/// exactly predicts which tenants an armed drain will poison.
+fn strict_subset_plan(fault: Fault) -> (FaultPlan, Vec<usize>) {
+    for period in [2usize, 3, 5] {
+        for seed in 1..40u64 {
+            let plan = FaultPlan { seed, site: Site::FleetJob, fault, period };
+            let guard = arm(plan);
+            let fired: Vec<usize> = (0..FLEET_TENANTS)
+                .filter(|&idx| {
+                    let mut probe = vec![0.5f64; 16];
+                    corrupt_slice_f64(Site::FleetJob, idx, &mut probe, 4, 4)
+                })
+                .collect();
+            let _ = take_events();
+            drop(guard);
+            if !fired.is_empty() && fired.len() < FLEET_TENANTS {
+                return (plan, fired);
+            }
+        }
+    }
+    panic!("no (seed, period) fires on a strict subset of {FLEET_TENANTS} tenants");
+}
+
+/// A NaN payload injected into a strict subset of a fleet group poisons
+/// exactly those tenants — each ends in a typed per-tenant ladder
+/// exhaustion and stays uncached — while every group-mate's β is
+/// bit-identical to the clean drain, invariantly across worker counts.
+#[test]
+fn fleet_nan_payload_poisons_only_the_targeted_tenants() {
+    let reqs = fleet_reqs();
+    let (plan, victims) = strict_subset_plan(Fault::NanPayload);
+    let mut base: Option<Vec<Option<Vec<f64>>>> = None;
+    for workers in worker_counts() {
+        let mut clean = loaded_fleet(workers, &reqs);
+        let clean_out = clean.drain();
+        assert!(
+            clean_out.iter().all(|(_, o)| matches!(o, FleetOutcome::Trained { .. })),
+            "workers={workers}: clean drain must train every tenant"
+        );
+
+        let mut fleet = loaded_fleet(workers, &reqs);
+        let guard = arm(plan);
+        let out = fleet.drain();
+        let events = take_events();
+        drop(guard);
+        assert!(events
+            .iter()
+            .all(|e| e.site == Site::FleetJob && e.fault == Fault::NanPayload));
+        let mut fired: Vec<usize> = events.iter().map(|e| e.index).collect();
+        fired.sort_unstable();
+        fired.dedup();
+        assert_eq!(
+            fired, victims,
+            "workers={workers}: fired tenants drifted from the probe"
+        );
+
+        for (i, (tenant, o)) in out.iter().enumerate() {
+            if victims.contains(&i) {
+                match o {
+                    FleetOutcome::Failed { error, report } => {
+                        assert_eq!(
+                            error.class(),
+                            "ladder-exhausted",
+                            "workers={workers} {tenant}"
+                        );
+                        assert_eq!(report.rung, DegradationRung::Failed);
+                    }
+                    other => panic!(
+                        "workers={workers} {tenant}: expected Failed, got {other:?}"
+                    ),
+                }
+                assert!(
+                    !fleet.has_model(tenant),
+                    "workers={workers} {tenant}: poisoned tenant must not be cached"
+                );
+            } else {
+                assert!(
+                    matches!(o, FleetOutcome::Trained { .. }),
+                    "workers={workers} {tenant}: group-mate must train: {o:?}"
+                );
+                assert_eq!(
+                    fleet.model(tenant).unwrap().beta,
+                    clean.model(tenant).unwrap().beta,
+                    "workers={workers} {tenant}: group-mate β must stay bit-identical"
+                );
+            }
+        }
+
+        // the whole per-tenant β signature is worker-count invariant
+        let sig: Vec<Option<Vec<f64>>> = out
+            .iter()
+            .map(|(t, _)| fleet.model(t).map(|m| m.beta.clone()))
+            .collect();
+        match &base {
+            None => base = Some(sig),
+            Some(b) => {
+                assert_eq!(b, &sig, "fleet outcome differs at workers={workers}")
+            }
+        }
+    }
+}
+
+/// An injected panic at a tenant's first fleet block task is isolated and
+/// retried by the group stream's worker isolation (the fired set marks
+/// the (site, tenant) pair, so the retry runs clean): every tenant still
+/// trains, the retries are reported, and every β is bit-identical to the
+/// clean drain at every worker count.
+#[test]
+fn fleet_job_panics_are_retried_to_bit_identical_betas() {
+    let reqs = fleet_reqs();
+    for workers in worker_counts() {
+        let mut clean = loaded_fleet(workers, &reqs);
+        clean.drain();
+
+        let mut fleet = loaded_fleet(workers, &reqs);
+        let plan = FaultPlan {
+            seed: 31,
+            site: Site::FleetJob,
+            fault: Fault::WorkerPanic,
+            period: 1, // every tenant panics once
+        };
+        let guard = arm(plan);
+        let out = fleet.drain();
+        let events = take_events();
+        drop(guard);
+        assert_eq!(
+            events.len(),
+            FLEET_TENANTS,
+            "workers={workers}: one panic per tenant must fire"
+        );
+        for (tenant, o) in &out {
+            match o {
+                FleetOutcome::Trained { report, .. } => {
+                    assert!(
+                        report.retries >= events.len() as u32,
+                        "workers={workers} {tenant}: {} panics but only {} \
+                         retries reported",
+                        events.len(),
+                        report.retries
+                    );
+                }
+                other => panic!(
+                    "workers={workers} {tenant}: panic leaked as {other:?}"
+                ),
+            }
+            assert_eq!(
+                fleet.model(tenant).unwrap().beta,
+                clean.model(tenant).unwrap().beta,
+                "workers={workers} {tenant}: retried β must match the clean bits"
             );
         }
     }

@@ -1,0 +1,376 @@
+//! Fleet conformance suite: the multi-tenant `FleetTrainer`'s grouped
+//! block-diagonal solves must be **bit-identical** to training each
+//! tenant's model alone — for every architecture, both precision wires,
+//! any worker count, ragged group sizes, and any submission order — and
+//! its RLS warm-update path must match batch ridge over all rows seen.
+
+use opt_pr_elm::coordinator::accumulator::SolveStrategy;
+use opt_pr_elm::coordinator::fleet::{FleetOutcome, FleetRequest, FleetTrainer};
+use opt_pr_elm::coordinator::CpuElmTrainer;
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::trainer::hidden_matrix;
+use opt_pr_elm::elm::{Arch, ALL_ARCHS};
+use opt_pr_elm::linalg::{cholesky_solve, ParallelPolicy, Precision};
+use opt_pr_elm::robust::{as_solve_error, DegradationRung, SolveError};
+
+/// Deterministic logistic-map series: chaotic enough to keep every arch's
+/// random features well-conditioned, no RNG dependency.
+fn series(n: usize, seed: u64) -> Vec<f64> {
+    let mut v = Vec::with_capacity(n);
+    let mut x = 0.37 + (seed % 97) as f64 * 1e-3;
+    for _ in 0..n {
+        x = 3.7 * x * (1.0 - x);
+        v.push(x - 0.5);
+    }
+    v
+}
+
+fn windows(n: usize, q: usize, seed: u64) -> Windowed {
+    Windowed::from_series(&series(n + q, seed), q).expect("windowed")
+}
+
+fn policy(workers: usize, precision: Precision) -> ParallelPolicy {
+    let mut p = ParallelPolicy::with_workers(workers);
+    p.precision = precision;
+    p
+}
+
+/// Solo trainer with the exact knobs the fleet under test uses.
+fn solo(pol: ParallelPolicy, strategy: SolveStrategy, block_rows: usize) -> CpuElmTrainer {
+    CpuElmTrainer { policy: pol, block_rows, strategy, lambda: 1e-6 }
+}
+
+fn fleet(pol: ParallelPolicy, strategy: SolveStrategy, block_rows: usize) -> FleetTrainer {
+    let mut f = FleetTrainer::with_policy(pol);
+    f.strategy = strategy;
+    f.block_rows = block_rows;
+    f
+}
+
+fn train_req(tenant: &str, arch: Arch, m: usize, seed: u64, data: Windowed) -> FleetRequest {
+    FleetRequest::Train { tenant: tenant.to_string(), arch, m, seed, data }
+}
+
+fn beta_of(f: &FleetTrainer, tenant: &str) -> Vec<f64> {
+    f.model(tenant).expect("cached model").beta.clone()
+}
+
+fn assert_all_trained(out: &[(String, FleetOutcome)]) {
+    for (tenant, o) in out {
+        assert!(
+            matches!(o, FleetOutcome::Trained { .. }),
+            "tenant {tenant} did not train: {o:?}"
+        );
+    }
+}
+
+/// Rows of two same-shape window sets, concatenated — H rows depend only
+/// on their own window row, so this is "all rows seen" for the RLS test.
+fn concat_windows(a: &Windowed, b: &Windowed) -> Windowed {
+    assert_eq!((a.s, a.q), (b.s, b.q));
+    Windowed {
+        n: a.n + b.n,
+        s: a.s,
+        q: a.q,
+        x: [a.x.clone(), b.x.clone()].concat(),
+        y: [a.y.clone(), b.y.clone()].concat(),
+        yhist: [a.yhist.clone(), b.yhist.clone()].concat(),
+    }
+}
+
+/// Tentpole conformance: a three-tenant group (ragged lengths, multiple
+/// blocks each) is bit-identical to three solo runs — every arch, both
+/// wires, 1/2/4/8 workers, the Gram fleet default.
+#[test]
+fn grouped_beta_is_bitwise_solo_every_arch_wire_worker() {
+    for &arch in ALL_ARCHS.iter() {
+        for precision in [Precision::F64, Precision::MixedF32] {
+            for workers in [1usize, 2, 4, 8] {
+                let pol = policy(workers, precision);
+                let st = solo(pol, SolveStrategy::Gram, 64);
+                let datas =
+                    [windows(150, 3, 1), windows(200, 3, 2), windows(170, 3, 3)];
+                let mut fl = fleet(pol, SolveStrategy::Gram, 64);
+                for (i, d) in datas.iter().enumerate() {
+                    fl.submit(train_req(
+                        &format!("t{i}"),
+                        arch,
+                        10,
+                        40 + i as u64,
+                        d.clone(),
+                    ))
+                    .unwrap();
+                }
+                let out = fl.drain();
+                assert_all_trained(&out);
+                for (i, d) in datas.iter().enumerate() {
+                    let (model, _) = st.train(arch, d, 10, 40 + i as u64).unwrap();
+                    assert_eq!(
+                        beta_of(&fl, &format!("t{i}")),
+                        model.beta,
+                        "β drifted from solo: arch={arch:?} precision={precision:?} \
+                         workers={workers} tenant=t{i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The factorization strategies share `solve_blocks` with the solo
+/// trainer — pin that the grouped stream feeding it stays bit-identical.
+#[test]
+fn grouped_beta_is_bitwise_solo_factorization_strategies() {
+    for strategy in [SolveStrategy::Tsqr, SolveStrategy::DirectQr] {
+        for precision in [Precision::F64, Precision::MixedF32] {
+            for &arch in &[Arch::Elman, Arch::Fc, Arch::Narmax] {
+                let pol = policy(4, precision);
+                let st = solo(pol, strategy, 64);
+                let datas = [windows(180, 3, 4), windows(140, 3, 5)];
+                let mut fl = fleet(pol, strategy, 64);
+                for (i, d) in datas.iter().enumerate() {
+                    fl.submit(train_req(
+                        &format!("t{i}"),
+                        arch,
+                        9,
+                        70 + i as u64,
+                        d.clone(),
+                    ))
+                    .unwrap();
+                }
+                let out = fl.drain();
+                assert_all_trained(&out);
+                for (i, d) in datas.iter().enumerate() {
+                    let (model, _) = st.train(arch, d, 9, 70 + i as u64).unwrap();
+                    assert_eq!(
+                        beta_of(&fl, &format!("t{i}")),
+                        model.beta,
+                        "β drifted from solo: strategy={strategy:?} arch={arch:?} \
+                         precision={precision:?} tenant=t{i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Ragged groups: 1, 2, and 17 tenants of differing lengths all match
+/// their solo runs bitwise — group size never leaks into any member's β.
+#[test]
+fn ragged_group_sizes_match_solo() {
+    let pol = policy(4, Precision::F64);
+    let st = solo(pol, SolveStrategy::Gram, 64);
+    for &count in &[1usize, 2, 17] {
+        let datas: Vec<Windowed> =
+            (0..count).map(|i| windows(80 + 17 * i, 2, i as u64)).collect();
+        let mut fl = fleet(pol, SolveStrategy::Gram, 64);
+        for (i, d) in datas.iter().enumerate() {
+            fl.submit(train_req(&format!("t{i}"), Arch::Jordan, 8, 100 + i as u64, d.clone()))
+                .unwrap();
+        }
+        let out = fl.drain();
+        assert_all_trained(&out);
+        for (i, d) in datas.iter().enumerate() {
+            let (model, _) = st.train(Arch::Jordan, d, 8, 100 + i as u64).unwrap();
+            assert_eq!(
+                beta_of(&fl, &format!("t{i}")),
+                model.beta,
+                "group of {count}: tenant t{i} drifted from solo"
+            );
+        }
+    }
+}
+
+/// Mixed-shape batches: tenants landing in different groups get the same
+/// β (and outcome order follows submission) no matter how the queue was
+/// interleaved.
+#[test]
+fn mixed_shape_submission_order_invariant() {
+    let pol = policy(4, Precision::F64);
+    // (tenant, arch, m, q, seed, n): three distinct group keys, two
+    // members each
+    let specs: Vec<(String, Arch, usize, usize, u64, usize)> = vec![
+        ("a0".into(), Arch::Elman, 8, 2, 1, 120),
+        ("b0".into(), Arch::Gru, 6, 3, 2, 140),
+        ("c0".into(), Arch::Elman, 8, 3, 3, 130),
+        ("a1".into(), Arch::Elman, 8, 2, 4, 160),
+        ("b1".into(), Arch::Gru, 6, 3, 5, 110),
+        ("c1".into(), Arch::Elman, 8, 3, 6, 150),
+    ];
+    let run = |order: &[usize]| -> Vec<(String, Vec<f64>)> {
+        let mut fl = fleet(pol, SolveStrategy::Gram, 64);
+        for &i in order {
+            let (t, arch, m, q, seed, n) = &specs[i];
+            fl.submit(train_req(t, *arch, *m, *seed, windows(*n, *q, *seed)))
+                .unwrap();
+        }
+        let out = fl.drain();
+        assert_all_trained(&out);
+        // submission order is preserved in the outcome list
+        let submitted: Vec<&str> =
+            order.iter().map(|&i| specs[i].0.as_str()).collect();
+        let returned: Vec<&str> = out.iter().map(|(t, _)| t.as_str()).collect();
+        assert_eq!(submitted, returned, "outcomes must follow submission order");
+        let mut betas: Vec<(String, Vec<f64>)> = specs
+            .iter()
+            .map(|(t, ..)| (t.clone(), beta_of(&fl, t)))
+            .collect();
+        betas.sort_by(|a, b| a.0.cmp(&b.0));
+        betas
+    };
+    let forward = run(&[0, 1, 2, 3, 4, 5]);
+    let shuffled = run(&[5, 2, 4, 0, 3, 1]);
+    assert_eq!(forward, shuffled, "submission order changed some tenant's β");
+}
+
+/// Warm updates: after a cache-hit RLS update, the tenant's β equals
+/// batch ridge over *all* rows seen (training rows + update rows) at the
+/// training λ — the `elm::online` seeding invariant, end to end.
+#[test]
+fn rls_update_matches_batch_ridge_over_all_rows() {
+    let pol = policy(2, Precision::F64);
+    let train_d = windows(160, 3, 5);
+    let upd_d = windows(48, 3, 9);
+    let m = 8usize;
+    let mut fl = fleet(pol, SolveStrategy::Gram, 64);
+    fl.submit(train_req("hot", Arch::Elman, m, 11, train_d.clone())).unwrap();
+    assert_all_trained(&fl.drain());
+    fl.submit(FleetRequest::Update { tenant: "hot".into(), data: upd_d.clone() })
+        .unwrap();
+    let out = fl.drain();
+    match &out[0].1 {
+        FleetOutcome::Updated { outcome, rows_seen } => {
+            assert_eq!(
+                *outcome,
+                opt_pr_elm::elm::RlsOutcome::Applied,
+                "clean update must apply"
+            );
+            assert_eq!(*rows_seen, train_d.n + upd_d.n);
+        }
+        other => panic!("expected Updated, got {other:?}"),
+    }
+    // reference: batch ridge over the concatenated rows at λ = 1e-6
+    let params = fl.model("hot").unwrap().params.clone();
+    let all = concat_windows(&train_d, &upd_d);
+    let h = hidden_matrix(&params, &all, None);
+    let mut g = h.gram_with(ParallelPolicy::sequential());
+    for i in 0..m {
+        g[(i, i)] += 1e-6;
+    }
+    let y: Vec<f64> = all.y.iter().map(|&v| v as f64).collect();
+    let c = h.t_matvec(&y);
+    let beta_ref = cholesky_solve(&g, &c).unwrap();
+    let beta = beta_of(&fl, "hot");
+    for (j, (&b, &r)) in beta.iter().zip(&beta_ref).enumerate() {
+        let tol = 1e-5 * r.abs().max(1.0);
+        assert!(
+            (b - r).abs() <= tol,
+            "β[{j}] = {b} vs batch ridge {r} (diff {})",
+            (b - r).abs()
+        );
+    }
+}
+
+/// Grouped predict: the packed group-GEMM path agrees with the solo
+/// block-matvec predict for every cached tenant (β itself is bitwise solo
+/// by the training contract; the GEMM may differ from matvec only within
+/// float round-off).
+#[test]
+fn grouped_predict_matches_solo_predict() {
+    let pol = policy(4, Precision::F64);
+    let st = solo(pol, SolveStrategy::Gram, 64);
+    let tenants: Vec<(&str, Arch, usize, usize, u64)> = vec![
+        ("p0", Arch::Elman, 8, 2, 21),
+        ("p1", Arch::Fc, 6, 3, 22),
+        ("p2", Arch::Gru, 7, 2, 23),
+        ("p3", Arch::Narmax, 8, 3, 24),
+    ];
+    let mut fl = fleet(pol, SolveStrategy::Gram, 64);
+    for &(t, arch, m, q, seed) in &tenants {
+        fl.submit(train_req(t, arch, m, seed, windows(150, q, seed))).unwrap();
+    }
+    assert_all_trained(&fl.drain());
+    for &(t, _, _, q, seed) in &tenants {
+        fl.submit(FleetRequest::Predict {
+            tenant: t.to_string(),
+            data: windows(90, q, seed + 50),
+        })
+        .unwrap();
+    }
+    let out = fl.drain();
+    for (&(t, _, _, q, seed), (tenant, o)) in tenants.iter().zip(&out) {
+        assert_eq!(t, tenant);
+        let yhat = match o {
+            FleetOutcome::Predicted { yhat } => yhat,
+            other => panic!("expected Predicted for {t}, got {other:?}"),
+        };
+        let model = fl.model(t).unwrap().clone();
+        let reference =
+            st.predict(&model, &windows(90, q, seed + 50)).unwrap();
+        assert_eq!(yhat.len(), reference.len());
+        for (i, (&a, &b)) in yhat.iter().zip(&reference).enumerate() {
+            let tol = 1e-10 * b.abs().max(1.0);
+            assert!(
+                (a - b).abs() <= tol,
+                "{t} yhat[{i}] = {a} vs solo {b}"
+            );
+        }
+    }
+}
+
+/// Degenerate sweep: empty drain, duplicate tenant id, an underdetermined
+/// tenant failing typed inside a healthy group (whose group-mate stays
+/// bitwise solo), and cache misses after eviction.
+#[test]
+fn degenerate_fleet_cases() {
+    let pol = policy(2, Precision::F64);
+
+    // empty fleet drains to an empty outcome list
+    let mut fl = fleet(pol, SolveStrategy::Gram, 64);
+    assert!(fl.drain().is_empty());
+
+    // duplicate tenant id rejected at submit with a typed error
+    fl.submit(train_req("dup", Arch::Elman, 8, 1, windows(100, 2, 1))).unwrap();
+    let err = fl
+        .submit(train_req("dup", Arch::Elman, 8, 2, windows(100, 2, 2)))
+        .unwrap_err();
+    assert_eq!(
+        as_solve_error(&err).map(SolveError::class),
+        Some("duplicate-tenant")
+    );
+    fl.drain();
+
+    // a tenant with fewer rows than M fails typed (underdetermined, rung
+    // recorded as failed) while its same-group mate trains bitwise solo
+    let big_d = windows(200, 2, 7);
+    let mut fl = fleet(pol, SolveStrategy::Gram, 64);
+    fl.submit(train_req("big", Arch::Elman, 12, 3, big_d.clone())).unwrap();
+    fl.submit(train_req("tiny", Arch::Elman, 12, 4, windows(6, 2, 8))).unwrap();
+    let out = fl.drain();
+    match &out[1].1 {
+        FleetOutcome::Failed { error, report } => {
+            assert_eq!(error.class(), "underdetermined", "{error}");
+            assert_eq!(report.rung, DegradationRung::Failed);
+        }
+        other => panic!("expected tiny to fail, got {other:?}"),
+    }
+    assert!(matches!(out[0].1, FleetOutcome::Trained { .. }));
+    let st = solo(pol, SolveStrategy::Gram, 64);
+    let (model, _) = st.train(Arch::Elman, &big_d, 12, 3).unwrap();
+    assert_eq!(beta_of(&fl, "big"), model.beta, "group-mate must stay bitwise solo");
+    assert!(!fl.has_model("tiny"), "failed trains must not be cached");
+
+    // predict/update on an unknown (never trained or evicted) tenant
+    fl.submit(FleetRequest::Predict { tenant: "ghost".into(), data: windows(30, 2, 1) })
+        .unwrap();
+    fl.submit(FleetRequest::Update { tenant: "ghost".into(), data: windows(30, 2, 1) })
+        .unwrap();
+    for (_, o) in fl.drain() {
+        match o {
+            FleetOutcome::Failed { error, .. } => {
+                assert_eq!(error.class(), "unknown-tenant")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+}
