@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""CI gate for the pallas-lint determinism-contract linter.
+
+Usage: check_lint.py <rust-root>
+
+Runs the linter in `--json` mode over `<rust-root>` and gates on its
+findings: zero unwaived findings passes (waived findings are reported but
+green), any unwaived finding fails with the finding list on stderr, and a
+linter that crashes, emits unparseable output, or emits JSON that does
+not match the documented schema is itself a hard failure — a broken gate
+must never read as a green one.
+
+The linter command defaults to the Rust binary via cargo
+(`cargo run -q -p pallas-lint --`), so the default invocation expects to
+run with the cargo workspace as the working directory:
+
+    cd rust && python3 ../ci/check_lint.py .
+
+Set `PALLAS_LINT_CMD` to substitute any command with the same CLI
+contract — CI's lint job also runs the gate through the Python mirror
+(`PALLAS_LINT_CMD="python3 ci/pallas_lint.py"`) so the two
+implementations cross-check each other on every push, and
+`ci/test_lint.py` uses the same hook to prove the gate fails on a seeded
+fixture violation.
+
+Exit codes: 0 clean, 1 unwaived findings, 2 gate/linter breakage.
+"""
+
+import json
+import os
+import shlex
+import subprocess
+import sys
+
+SCHEMA_KEYS = ("tool", "findings", "unwaived", "waived")
+FINDING_KEYS = ("rule", "path", "line", "message", "waived")
+
+
+def die(msg: str, code: int = 2) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(code)
+
+
+def lint_cmd() -> list:
+    """The linter argv prefix: `PALLAS_LINT_CMD` or the cargo default."""
+    env = os.environ.get("PALLAS_LINT_CMD", "").strip()
+    if env:
+        return shlex.split(env)
+    return ["cargo", "run", "-q", "-p", "pallas-lint", "--"]
+
+
+def run_linter(root: str) -> dict:
+    """Run the linter over `root` and return its validated JSON report."""
+    cmd = lint_cmd() + [root, "--json"]
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True)
+    except OSError as e:
+        die(f"cannot launch linter {cmd}: {e}")
+    if proc.returncode not in (0, 1):
+        # exit 1 still carries a findings report; anything else is breakage
+        die(
+            f"linter exited {proc.returncode} (expected 0 or 1): "
+            f"{proc.stderr.strip() or proc.stdout.strip()}"
+        )
+    try:
+        report = json.loads(proc.stdout)
+    except json.JSONDecodeError as e:
+        die(f"linter emitted unparseable JSON: {e}\n--- stdout ---\n{proc.stdout}")
+    validate(report)
+    return report
+
+
+def validate(report: dict) -> None:
+    """Reject reports that drift from the documented JSON schema."""
+    if not isinstance(report, dict):
+        die(f"report is not an object: {report!r}")
+    for key in SCHEMA_KEYS:
+        if key not in report:
+            die(f"report missing {key!r}: {sorted(report)}")
+    if report["tool"] != "pallas-lint":
+        die(f"report from unexpected tool {report['tool']!r}")
+    if not isinstance(report["findings"], list):
+        die("report 'findings' is not an array")
+    for i, f in enumerate(report["findings"]):
+        for key in FINDING_KEYS:
+            if key not in f:
+                die(f"finding {i} missing {key!r}: {f}")
+    unwaived = sum(1 for f in report["findings"] if not f["waived"])
+    if unwaived != report["unwaived"]:
+        die(
+            f"report counter disagrees with its own findings: "
+            f"unwaived={report['unwaived']} but {unwaived} findings are unwaived"
+        )
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        die(f"usage: {sys.argv[0]} <rust-root>")
+    report = run_linter(sys.argv[1])
+    for f in report["findings"]:
+        tag = "waived" if f["waived"] else "FAIL"
+        reason = f" ({f.get('reason')})" if f["waived"] and f.get("reason") else ""
+        print(
+            f"{tag}: {f['rule']}: {f['path']}:{f['line']}: {f['message']}{reason}",
+            file=sys.stderr if not f["waived"] else sys.stdout,
+        )
+    if report["unwaived"]:
+        die(f"{report['unwaived']} unwaived lint finding(s)", code=1)
+    print(
+        f"lint gate passed: 0 unwaived, {report['waived']} waived "
+        f"finding(s) across the tree"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,715 @@
+#!/usr/bin/env python3
+"""Python mirror of the ``pallas-lint`` determinism-contract analyzer.
+
+``rust/lint`` is the authoritative implementation (it runs as the blocking
+CI job); this mirror exists so environments without a Rust toolchain — the
+development container and the pytest tier — can still run the analyzer and
+verify the tree is clean. The two implementations are kept in sync by the
+shared fixture suite under ``rust/lint/fixtures/``: every pass/fail fixture
+must produce the same verdict from both. When you change a rule, change it
+in both places and extend the fixtures to pin the new behavior.
+
+The logic is a line-for-line port: a comment/string-masking lexer (no
+``syn``-style parsing on either side), then six lexical, conservative
+rules. See ``docs/ARCHITECTURE.md`` ("Statically-enforced invariants")
+for the rule table and waiver syntax.
+
+Usage::
+
+    python ci/pallas_lint.py [--json] [--fixture] <rust-root-or-src>
+
+Exit codes: 0 clean, 1 unwaived findings, 2 usage/IO error.
+"""
+
+from __future__ import annotations
+
+import bisect
+import json
+import sys
+from pathlib import Path
+
+# --- rule names and scopes (mirror rust/lint/src/rules.rs) -----------------
+
+RULE_UNSAFE = "unsafe-confinement"
+RULE_TWIN = "scalar-twin"
+RULE_HASH = "hash-order"
+RULE_THREAD = "thread-confinement"
+RULE_FOLD = "fold-order"
+RULE_ASSERT = "assert-discipline"
+RULE_WAIVER = "waiver-reason"
+RULES = [RULE_UNSAFE, RULE_TWIN, RULE_HASH, RULE_THREAD, RULE_FOLD, RULE_ASSERT, RULE_WAIVER]
+
+UNSAFE_FILE = "linalg/simd.rs"
+FORBID_EXEMPT = ["lib.rs", "linalg/mod.rs"]
+THREAD_ALLOWED = ["linalg/policy.rs", "linalg/tsqr.rs", "coordinator/pipeline.rs"]
+HASH_SCOPE = ["coordinator/", "linalg/", "elm/"]
+KERNEL_SCOPE = ["linalg/", "elm/arch/"]
+TWIN_TEST_FILE = "tests/simd_props.rs"
+
+HASH_ITER_METHODS = [
+    "iter", "iter_mut", "keys", "values", "values_mut",
+    "drain", "into_iter", "into_keys", "into_values", "retain",
+]
+
+
+# --- lexer (mirror rust/lint/src/lexer.rs) ----------------------------------
+
+def is_ident_char(c: str) -> bool:
+    return c.isalnum() or c == "_"
+
+
+def _prev_is_ident(raw: str, i: int) -> bool:
+    return i > 0 and is_ident_char(raw[i - 1])
+
+
+def _raw_string_end(raw: str, i: int):
+    n = len(raw)
+    j = i
+    if raw[j] == "b":
+        j += 1
+        if j >= n or raw[j] != "r":
+            return None
+    if raw[j] != "r":
+        return None
+    j += 1
+    hashes = 0
+    while j < n and raw[j] == "#":
+        hashes += 1
+        j += 1
+    if j >= n or raw[j] != '"':
+        return None
+    j += 1
+    while j < n:
+        if raw[j] == '"':
+            k = j + 1
+            seen = 0
+            while k < n and raw[k] == "#" and seen < hashes:
+                seen += 1
+                k += 1
+            if seen == hashes:
+                return k
+        j += 1
+    return n
+
+
+def _mask(raw: str):
+    """Blank comments and literal payloads; return (masked, comment_spans)."""
+    n = len(raw)
+    out: list[str] = []
+    comments: list[tuple[int, int]] = []
+    i = 0
+
+    def blank(c: str) -> str:
+        return "\n" if c == "\n" else " "
+
+    while i < n:
+        c = raw[i]
+        if c == "/" and i + 1 < n and raw[i + 1] == "/":
+            start = i
+            while i < n and raw[i] != "\n":
+                out.append(" ")
+                i += 1
+            comments.append((start, i))
+            continue
+        if c == "/" and i + 1 < n and raw[i + 1] == "*":
+            start = i
+            depth = 0
+            while i < n:
+                if raw[i] == "/" and i + 1 < n and raw[i + 1] == "*":
+                    depth += 1
+                    out.append(" ")
+                    out.append(" ")
+                    i += 2
+                elif raw[i] == "*" and i + 1 < n and raw[i + 1] == "/":
+                    depth -= 1
+                    out.append(" ")
+                    out.append(" ")
+                    i += 2
+                    if depth == 0:
+                        break
+                else:
+                    out.append(blank(raw[i]))
+                    i += 1
+            comments.append((start, i))
+            continue
+        if c in ("r", "b") and not _prev_is_ident(raw, i):
+            end = _raw_string_end(raw, i)
+            if end is not None:
+                while i < end:
+                    out.append(blank(raw[i]))
+                    i += 1
+                continue
+        if c == '"':
+            out.append(" ")
+            i += 1
+            while i < n:
+                if raw[i] == "\\" and i + 1 < n:
+                    out.append(" ")
+                    out.append(blank(raw[i + 1]))
+                    i += 2
+                elif raw[i] == '"':
+                    out.append(" ")
+                    i += 1
+                    break
+                else:
+                    out.append(blank(raw[i]))
+                    i += 1
+            continue
+        if c == "'":
+            if i + 1 < n and raw[i + 1] == "\\":
+                out.append(" ")
+                out.append(" ")
+                i += 2
+                while i < n and raw[i] != "'":
+                    out.append(blank(raw[i]))
+                    i += 1
+                if i < n:
+                    out.append(" ")
+                    i += 1
+                continue
+            if i + 2 < n and raw[i + 2] == "'" and raw[i + 1] != "'":
+                out.append(" ")
+                out.append(" ")
+                out.append(" ")
+                i += 3
+                continue
+            out.append("'")
+            i += 1
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out), comments
+
+
+def find_seq_in(hay: str, needle: str) -> list[int]:
+    out = []
+    start = 0
+    while True:
+        pos = hay.find(needle, start)
+        if pos < 0:
+            return out
+        out.append(pos)
+        start = pos + 1
+
+
+def find_word_in(hay: str, needle: str) -> list[int]:
+    out = []
+    for pos in find_seq_in(hay, needle):
+        left_ok = pos == 0 or not is_ident_char(hay[pos - 1])
+        end = pos + len(needle)
+        right_ok = end >= len(hay) or not is_ident_char(hay[end])
+        if left_ok and right_ok:
+            out.append(pos)
+    return out
+
+
+class FileView:
+    """Masked view of one source file (mirror of the Rust ``FileView``)."""
+
+    def __init__(self, text: str):
+        self.raw = text
+        self.chars, self.comments = _mask(text)
+        self.line_starts = [0]
+        for i, c in enumerate(text):
+            if c == "\n":
+                self.line_starts.append(i + 1)
+
+    def line_of(self, pos: int) -> int:
+        return bisect.bisect_right(self.line_starts, pos)
+
+    def find_word(self, needle: str) -> list[int]:
+        return find_word_in(self.chars, needle)
+
+    def find_seq(self, needle: str) -> list[int]:
+        return find_seq_in(self.chars, needle)
+
+    def range_contains(self, lo: int, hi: int, needle: str) -> bool:
+        hi = min(hi, len(self.chars))
+        return lo < hi and needle in self.chars[lo:hi]
+
+    def skip_ws(self, pos: int) -> int:
+        while pos < len(self.chars) and self.chars[pos].isspace():
+            pos += 1
+        return pos
+
+    def prev_non_ws(self, pos: int):
+        i = pos
+        while i > 0:
+            i -= 1
+            if not self.chars[i].isspace():
+                return i
+        return None
+
+    def ident_ending_at(self, end: int):
+        start = end
+        while start > 0 and is_ident_char(self.chars[start - 1]):
+            start -= 1
+        if start == end:
+            return None
+        return start, self.chars[start:end]
+
+    def ident_starting_at(self, pos: int):
+        end = pos
+        while end < len(self.chars) and is_ident_char(self.chars[end]):
+            end += 1
+        if end == pos:
+            return None
+        return self.chars[pos:end]
+
+    def match_brace(self, open_pos: int):
+        depth = 0
+        for off in range(open_pos, len(self.chars)):
+            c = self.chars[off]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                if depth == 0:
+                    return off
+        return None
+
+
+def _leading_pub(view: FileView, pos: int) -> bool:
+    end = pos
+    while True:
+        last = view.prev_non_ws(end)
+        if last is None:
+            return False
+        ident = view.ident_ending_at(last + 1)
+        if ident is None:
+            return False
+        start, word = ident
+        if word in ("unsafe", "const", "async"):
+            end = start
+            continue
+        return word == "pub"
+
+
+def fn_spans(view: FileView):
+    """Every ``fn`` item: dicts of name / is_pub / pos / body span."""
+    out = []
+    for pos in view.find_word("fn"):
+        name_start = view.skip_ws(pos + 2)
+        name = view.ident_starting_at(name_start)
+        if name is None:
+            continue
+        is_pub = _leading_pub(view, pos)
+        body = None
+        j = name_start + len(name)
+        while j < len(view.chars):
+            c = view.chars[j]
+            if c == "{":
+                close = view.match_brace(j)
+                if close is not None:
+                    body = (j, close)
+                break
+            if c == ";":
+                break
+            j += 1
+        out.append({"name": name, "is_pub": is_pub, "pos": pos, "body": body})
+    return out
+
+
+def cfg_test_spans(view: FileView):
+    out = []
+    for pos in view.find_seq("#[cfg(test)]"):
+        window_end = min(pos + 200, len(view.chars))
+        mods = find_word_in(view.chars[pos:window_end], "mod")
+        if not mods:
+            continue
+        j = pos + mods[0]
+        while j < len(view.chars) and view.chars[j] != "{":
+            j += 1
+        if j < len(view.chars):
+            close = view.match_brace(j)
+            if close is not None:
+                out.append((pos, close + 1))
+    return out
+
+
+def in_spans(pos: int, spans) -> bool:
+    return any(lo <= pos < hi for lo, hi in spans)
+
+
+# --- waivers (mirror rules.rs collect_waivers) ------------------------------
+
+def collect_waivers(view: FileView):
+    waivers = []
+    malformed = []
+    for lo, hi in view.comments:
+        text = view.raw[lo:hi]
+        idx = text.find("lint:")
+        if idx < 0:
+            continue
+        line = view.line_of(lo)
+        body = text[idx + len("lint:"):].strip()
+        if body.startswith("allow("):
+            stripped = body[len("allow("):]
+            close = stripped.find(")")
+            if close < 0:
+                malformed.append((line, "unterminated `lint: allow(…)`"))
+                continue
+            rule = stripped[:close].strip()
+            rest = stripped[close + 1:].strip()
+        elif body.startswith("fold-order-pinned"):
+            rule = RULE_FOLD
+            rest = body[len("fold-order-pinned"):].strip()
+        else:
+            malformed.append((line, f"unknown lint control comment `lint: {body}`"))
+            continue
+        if rule not in RULES or rule == RULE_WAIVER:
+            malformed.append((line, f"waiver names unknown rule `{rule}`"))
+            continue
+        reason = rest[2:].strip() if rest.startswith("--") else None
+        if reason:
+            waivers.append({"rule": rule, "reason": reason, "line": line})
+        else:
+            malformed.append((
+                line,
+                f"waiver for `{rule}` is missing its mandatory reason "
+                f"(`-- <why this site is exempt>`)",
+            ))
+    return waivers, malformed
+
+
+# --- rules (mirror rules.rs) -------------------------------------------------
+
+class Prepared:
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.rel = path[len("src/"):] if path.startswith("src/") else ""
+        self.view = FileView(text)
+        self.test_spans = cfg_test_spans(self.view)
+        self.fns = fn_spans(self.view)
+
+    def finding(self, rule, pos, message):
+        return self.finding_at_line(rule, self.view.line_of(pos), message)
+
+    def finding_at_line(self, rule, line, message):
+        return {
+            "rule": rule, "path": self.path, "line": line,
+            "message": message, "waived": False, "reason": None,
+        }
+
+
+def rule_unsafe(p: Prepared, out: list):
+    if p.rel == UNSAFE_FILE:
+        if not p.view.find_seq("#![deny(unsafe_op_in_unsafe_fn)]"):
+            out.append(p.finding_at_line(
+                RULE_UNSAFE, 1,
+                f"{UNSAFE_FILE} must carry `#![deny(unsafe_op_in_unsafe_fn)]` so every "
+                "unsafe operation sits in an explicit `unsafe` block"))
+        return
+    for pos in p.view.find_word("unsafe"):
+        out.append(p.finding(
+            RULE_UNSAFE, pos,
+            f"`unsafe` outside {UNSAFE_FILE}: the determinism contract confines all "
+            "unsafe code to the SIMD microkernel module"))
+    if p.rel not in FORBID_EXEMPT and not p.view.find_seq("#![forbid(unsafe_code)]"):
+        out.append(p.finding_at_line(
+            RULE_UNSAFE, 1,
+            "missing `#![forbid(unsafe_code)]` module header (compiler-backed rule A)"))
+
+
+def rule_twin(p: Prepared, twin_tests, out: list):
+    if p.rel != UNSAFE_FILE:
+        return
+    live = [f for f in p.fns if f["is_pub"] and not in_spans(f["pos"], p.test_spans)]
+    names = [f["name"] for f in live]
+    for f in live:
+        if f["name"].endswith("_scalar"):
+            continue
+        twin = f["name"] + "_scalar"
+        dispatched = (
+            f["body"] is not None
+            and p.view.range_contains(f["body"][0], f["body"][1], "avx2::")
+        ) or twin in names
+        if not dispatched:
+            continue
+        if twin not in names:
+            out.append(p.finding(
+                RULE_TWIN, f["pos"],
+                f"dispatched kernel `{f['name']}` has no `{twin}` twin: every SIMD kernel "
+                "needs a scalar oracle that is also the portable fallback"))
+            continue
+        referenced = twin_tests is not None and bool(twin_tests.view.find_word(twin))
+        if not referenced:
+            out.append(p.finding(
+                RULE_TWIN, f["pos"],
+                f"scalar twin `{twin}` is never referenced by {TWIN_TEST_FILE}: the "
+                f"dispatched-vs-scalar bit-identity of `{f['name']}` is unpinned"))
+
+
+def _hash_binding_name(view: FileView, pos: int):
+    while True:
+        prev = view.prev_non_ws(pos)
+        if prev is None:
+            return None
+        if prev >= 1 and view.chars[prev] == ":" and view.chars[prev - 1] == ":":
+            before = view.prev_non_ws(prev - 1)
+            if before is None:
+                return None
+            ident = view.ident_ending_at(before + 1)
+            if ident is None:
+                return None
+            pos = ident[0]
+            continue
+        if view.chars[prev] == ":":
+            last = view.prev_non_ws(prev)
+            if last is None:
+                return None
+            ident = view.ident_ending_at(last + 1)
+            return ident[1] if ident else None
+        if view.chars[prev] == "=":
+            if prev >= 1 and view.chars[prev - 1] == "=":
+                return None
+            last = view.prev_non_ws(prev)
+            if last is None:
+                return None
+            ident = view.ident_ending_at(last + 1)
+            return ident[1] if ident else None
+        return None
+
+
+def _hash_iter_method(view: FileView, end: int):
+    dot = view.skip_ws(end)
+    if dot >= len(view.chars) or view.chars[dot] != ".":
+        return None
+    m = view.ident_starting_at(view.skip_ws(dot + 1))
+    return m if m in HASH_ITER_METHODS else None
+
+
+def _for_loop_target(view: FileView, pos: int) -> bool:
+    end = pos
+    while True:
+        prev = view.prev_non_ws(end)
+        if prev is None:
+            return False
+        if view.chars[prev] in "&.()":
+            end = prev
+            continue
+        ident = view.ident_ending_at(prev + 1)
+        if ident is None:
+            return False
+        start, word = ident
+        if word in ("mut", "self"):
+            end = start
+            continue
+        return word == "in"
+
+
+def rule_hash(p: Prepared, out: list):
+    if not any(p.rel.startswith(s) for s in HASH_SCOPE):
+        return
+    bound = []
+    for ty in ("HashMap", "HashSet"):
+        for pos in p.view.find_word(ty):
+            name = _hash_binding_name(p.view, pos)
+            if name and name not in bound:
+                bound.append(name)
+    flagged = set()
+    for name in bound:
+        for pos in p.view.find_word(name):
+            if in_spans(pos, p.test_spans):
+                continue
+            end = pos + len(name)
+            if _hash_iter_method(p.view, end) is None and not _for_loop_target(p.view, pos):
+                continue
+            line = p.view.line_of(pos)
+            if line in flagged:
+                continue
+            flagged.add(line)
+            out.append(p.finding(
+                RULE_HASH, pos,
+                f"iteration over hash-ordered `{name}`: visit order is nondeterministic — "
+                "use BTreeMap/BTreeSet or sort before iterating (keyed lookup is fine)"))
+
+
+def rule_thread(p: Prepared, out: list):
+    if p.rel in THREAD_ALLOWED:
+        return
+    sites = list(p.view.find_seq("std::thread"))
+    for pat in ("thread::spawn", "thread::scope", "thread::Builder"):
+        for pos in p.view.find_seq(pat):
+            if pos < 2 or p.view.chars[pos - 1] != ":":
+                sites.append(pos)
+    flagged = set()
+    for pos in sorted(sites):
+        line = p.view.line_of(pos)
+        if line in flagged:
+            continue
+        flagged.add(line)
+        out.append(p.finding(
+            RULE_THREAD, pos,
+            "thread spawn/scope outside the ParallelPolicy substrate: worker-count "
+            "bit-invariance is only proven for the fixed-schedule machinery"))
+
+
+def rule_fold(p: Prepared, waivers, out: list):
+    if not any(p.rel.startswith(s) for s in KERNEL_SCOPE):
+        return
+    sites = []
+    for pat in (".sum()", ".sum::<", ".fold("):
+        sites.extend(p.view.find_seq(pat))
+    for pos in sorted(sites):
+        if in_spans(pos, p.test_spans):
+            continue
+        line = p.view.line_of(pos)
+        annotated = any(
+            w["rule"] == RULE_FOLD and w["line"] in (line, line - 1) for w in waivers
+        )
+        if not annotated:
+            out.append(p.finding(
+                RULE_FOLD, pos,
+                "float fold without a `// lint: fold-order-pinned -- <why>` annotation: "
+                "reduction order must be pinned (or provably order-free) in kernel modules"))
+
+
+def rule_assert(p: Prepared, out: list):
+    if not any(p.rel.startswith(s) for s in KERNEL_SCOPE):
+        return
+    pub_bodies = [
+        f["body"] for f in p.fns
+        if f["is_pub"] and not in_spans(f["pos"], p.test_spans) and f["body"] is not None
+    ]
+    sites = (
+        p.view.find_word("debug_assert")
+        + p.view.find_word("debug_assert_eq")
+        + p.view.find_word("debug_assert_ne")
+    )
+    for pos in sites:
+        if in_spans(pos, p.test_spans) or not in_spans(pos, pub_bodies):
+            continue
+        out.append(p.finding(
+            RULE_ASSERT, pos,
+            "`debug_assert!` in a pub kernel entry point: promote to `assert!` with a "
+            "message — release builds must fail loudly on shape/stride violations"))
+
+
+# --- orchestration (mirror lib.rs) -------------------------------------------
+
+def analyze_sources(sources):
+    """``sources`` is a list of (path, text); returns finding dicts."""
+    prepared = [Prepared(path, text) for path, text in sources]
+    twin_tests = next((p for p in prepared if p.path.endswith(TWIN_TEST_FILE)), None)
+    findings = []
+    for p in prepared:
+        if not p.rel:
+            continue
+        waivers, malformed = collect_waivers(p.view)
+        for line, message in malformed:
+            findings.append({
+                "rule": RULE_WAIVER, "path": p.path, "line": line,
+                "message": message, "waived": False, "reason": None,
+            })
+        file_findings: list = []
+        rule_unsafe(p, file_findings)
+        rule_twin(p, twin_tests, file_findings)
+        rule_hash(p, file_findings)
+        rule_thread(p, file_findings)
+        rule_fold(p, waivers, file_findings)
+        rule_assert(p, file_findings)
+        for f in file_findings:
+            for w in waivers:
+                if w["rule"] == f["rule"] and w["line"] in (f["line"], f["line"] - 1):
+                    f["waived"] = True
+                    f["reason"] = w["reason"]
+                    break
+        findings.extend(file_findings)
+    findings.sort(key=lambda f: (f["path"], f["line"], f["rule"]))
+    return findings
+
+
+def unwaived_count(findings) -> int:
+    return sum(1 for f in findings if not f["waived"])
+
+
+def fixture_sources(directory: Path):
+    sources = []
+    for path in sorted(directory.iterdir()):
+        if path.suffix != ".rs":
+            continue
+        text = path.read_text()
+        first = text.splitlines()[0] if text else ""
+        if first.startswith("//@ path:"):
+            virt = first[len("//@ path:"):].strip()
+        else:
+            virt = f"src/{path.name}"
+        sources.append((virt, text))
+    return sources
+
+
+def tree_sources(root: Path):
+    if (root / "src").is_dir():
+        src_dir, tests_dir = root / "src", root / "tests"
+    else:
+        src_dir, tests_dir = root, root.parent / "tests"
+    sources = []
+    for path in sorted(src_dir.rglob("*.rs")):
+        rel = path.relative_to(src_dir)
+        sources.append((f"src/{rel.as_posix()}", path.read_text()))
+    twin = tests_dir / "simd_props.rs"
+    if twin.is_file():
+        sources.append((TWIN_TEST_FILE, twin.read_text()))
+    return sources
+
+
+def render_json(findings) -> str:
+    return json.dumps({
+        "tool": "pallas-lint",
+        "findings": findings,
+        "unwaived": unwaived_count(findings),
+        "waived": len(findings) - unwaived_count(findings),
+    }) + "\n"
+
+
+def render_human(findings) -> str:
+    lines = []
+    for f in findings:
+        tail = f" (waived: {f['reason']})" if f["waived"] else ""
+        lines.append(f"{f['path']}:{f['line']}: [{f['rule']}] {f['message']}{tail}")
+    unwaived = unwaived_count(findings)
+    lines.append(
+        f"pallas-lint: {len(findings)} finding(s), {unwaived} unwaived, "
+        f"{len(findings) - unwaived} waived"
+    )
+    return "\n".join(lines) + "\n"
+
+
+def main(argv) -> int:
+    as_json = False
+    fixture = False
+    path = None
+    for arg in argv:
+        if arg == "--json":
+            as_json = True
+        elif arg == "--fixture":
+            fixture = True
+        elif arg in ("--help", "-h"):
+            print("usage: pallas_lint.py [--json] [--fixture] <rust-root-or-src>",
+                  file=sys.stderr)
+            return 0
+        elif arg.startswith("-"):
+            print(f"pallas_lint.py: unknown flag `{arg}`", file=sys.stderr)
+            return 2
+        elif path is not None:
+            print("pallas_lint.py: expected exactly one path argument", file=sys.stderr)
+            return 2
+        else:
+            path = Path(arg)
+    if path is None:
+        print("usage: pallas_lint.py [--json] [--fixture] <rust-root-or-src>",
+              file=sys.stderr)
+        return 2
+    try:
+        sources = fixture_sources(path) if fixture else tree_sources(path)
+    except OSError as exc:
+        print(f"pallas_lint.py: cannot read `{path}`: {exc}", file=sys.stderr)
+        return 2
+    findings = analyze_sources(sources)
+    sys.stdout.write(render_json(findings) if as_json else render_human(findings))
+    return 0 if unwaived_count(findings) == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

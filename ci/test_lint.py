@@ -1,0 +1,123 @@
+"""Self-test for the pallas-lint gate (run with pytest).
+
+Three layers, mirroring how the gate can break:
+
+1. **Fixture verdicts.** Every rule's pass/fail fixture pair under
+   `rust/lint/fixtures/` must produce its labelled verdict from the
+   Python mirror (`ci/pallas_lint.py`). The Rust implementation asserts
+   the same fixtures in `rust/lint/src/lib.rs`, so this shared suite is
+   the sync contract between the two implementations — a rule change
+   that lands on one side only fails here or there, never silently.
+2. **Real tree.** The mirror must report the actual `rust/` tree clean
+   (zero unwaived findings, every waiver carrying its reason) — the same
+   bar CI's blocking lint job holds the Rust binary to.
+3. **Wrapper process contract.** `ci/check_lint.py` must exit 0 on a
+   clean tree, 1 on a seeded fixture violation, and 2 when the linter
+   underneath crashes or emits garbage — all driven through the
+   `PALLAS_LINT_CMD` hook the CI cross-check also uses.
+"""
+
+import os
+import pathlib
+import shlex
+import subprocess
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+import pallas_lint  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "rust" / "lint" / "fixtures"
+CHECK = REPO / "ci" / "check_lint.py"
+MIRROR = REPO / "ci" / "pallas_lint.py"
+
+
+def analyze_fixture(directory):
+    return pallas_lint.analyze_sources(pallas_lint.fixture_sources(directory))
+
+
+# --- layer 1: fixture verdicts ---------------------------------------------
+
+
+def test_fixture_suite_covers_every_rule_exactly():
+    dirs = sorted(p.name for p in FIXTURES.iterdir() if p.is_dir())
+    assert dirs == sorted(pallas_lint.RULES)
+
+
+def test_pass_fixtures_clean_and_fail_fixtures_fire_their_rule():
+    for rule in pallas_lint.RULES:
+        clean = analyze_fixture(FIXTURES / rule / "pass")
+        assert pallas_lint.unwaived_count(clean) == 0, (rule, clean)
+        fired = [
+            f
+            for f in analyze_fixture(FIXTURES / rule / "fail")
+            if not f["waived"]
+        ]
+        assert fired, f"{rule}: fail fixture produced no findings"
+        assert any(f["rule"] == rule for f in fired), (rule, fired)
+
+
+def test_waiver_pass_fixture_records_reasons():
+    findings = analyze_fixture(FIXTURES / "waiver-reason" / "pass")
+    waived = [f for f in findings if f["waived"]]
+    assert waived, "waiver pass fixture should produce waived findings"
+    assert all(f["reason"] for f in waived)
+
+
+# --- layer 2: the real tree ------------------------------------------------
+
+
+def test_real_tree_is_clean_with_reasoned_waivers():
+    findings = pallas_lint.analyze_sources(
+        pallas_lint.tree_sources(REPO / "rust")
+    )
+    unwaived = [f for f in findings if not f["waived"]]
+    assert unwaived == [], unwaived
+    for f in findings:
+        assert f["reason"], f"waiver without a reason survived: {f}"
+
+
+# --- layer 3: the check_lint.py wrapper ------------------------------------
+
+
+def run_wrapper(root, cmd):
+    env = dict(os.environ, PALLAS_LINT_CMD=cmd)
+    return subprocess.run(
+        [sys.executable, str(CHECK), str(root)],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+
+
+def mirror_cmd(fixture=False):
+    cmd = f"{shlex.quote(sys.executable)} {shlex.quote(str(MIRROR))}"
+    return f"{cmd} --fixture" if fixture else cmd
+
+
+def test_wrapper_passes_on_clean_tree():
+    proc = run_wrapper(REPO / "rust", mirror_cmd())
+    assert proc.returncode == 0, (proc.stdout, proc.stderr)
+    assert "lint gate passed" in proc.stdout
+
+
+def test_wrapper_fails_on_seeded_fixture_violation():
+    proc = run_wrapper(FIXTURES / "hash-order" / "fail", mirror_cmd(fixture=True))
+    assert proc.returncode == 1, (proc.stdout, proc.stderr)
+    assert "hash-order" in proc.stderr
+
+
+def test_wrapper_passes_on_pass_fixture():
+    proc = run_wrapper(FIXTURES / "hash-order" / "pass", mirror_cmd(fixture=True))
+    assert proc.returncode == 0, (proc.stdout, proc.stderr)
+
+
+def test_wrapper_hard_fails_on_non_json_linter():
+    proc = run_wrapper(REPO / "rust", "echo not-json")
+    assert proc.returncode == 2, (proc.stdout, proc.stderr)
+
+
+def test_wrapper_hard_fails_on_linter_crash():
+    crash = f"{shlex.quote(sys.executable)} -c \"import sys; sys.exit(3)\""
+    proc = run_wrapper(REPO / "rust", crash)
+    assert proc.returncode == 2, (proc.stdout, proc.stderr)

@@ -1,0 +1,12 @@
+//@ path: src/elm/arch/demo.rs
+//! Fixture: a pub kernel entry point whose shape check vanishes in
+//! release builds — exactly the class of bug PR 4's contract bans.
+#![forbid(unsafe_code)]
+
+/// Writes `2 * x` into `out`; shape check is debug-only (wrong).
+pub fn double_into(x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, xi) in out.iter_mut().zip(x) {
+        *o = 2.0 * xi;
+    }
+}

@@ -1,0 +1,17 @@
+//@ path: src/elm/arch/demo.rs
+//! Fixture: a pub kernel entry point validating shapes with `assert!`
+//! (release-mode too); `debug_assert!` stays legal in private helpers.
+#![forbid(unsafe_code)]
+
+/// Writes `2 * x` into `out`; shape-checked in all build profiles.
+pub fn double_into(x: &[f64], out: &mut [f64]) {
+    assert!(x.len() == out.len(), "double_into: x and out lengths must match");
+    for (o, xi) in out.iter_mut().zip(x) {
+        *o = 2.0 * xi;
+    }
+}
+
+fn helper(x: &[f64]) -> f64 {
+    debug_assert!(!x.is_empty());
+    x[0]
+}

@@ -1,0 +1,9 @@
+//@ path: src/linalg/demo.rs
+//! Fixture: a float fold in a kernel module with no fold-order
+//! annotation — the reduction order contract is undeclared.
+#![forbid(unsafe_code)]
+
+/// Sums the slice without declaring its reduction-order contract.
+pub fn total(x: &[f64]) -> f64 {
+    x.iter().sum()
+}

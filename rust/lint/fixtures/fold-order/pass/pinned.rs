@@ -1,0 +1,10 @@
+//@ path: src/linalg/demo.rs
+//! Fixture: a float fold in a kernel module with its per-site
+//! fold-order annotation.
+#![forbid(unsafe_code)]
+
+/// Sums the slice left to right.
+pub fn total(x: &[f64]) -> f64 {
+    // lint: fold-order-pinned -- sequential left-to-right over one pinned slice
+    x.iter().sum()
+}

@@ -1,0 +1,18 @@
+//@ path: src/elm/demo.rs
+//! Fixture: iterating a `HashMap` in a deterministic module — visit
+//! order is hash-order, which RUSTC_HASH seed changes can move.
+#![forbid(unsafe_code)]
+
+use std::collections::HashMap;
+
+/// Sums every value — in whatever order the hash table produces.
+pub fn total() -> f64 {
+    let mut ext: HashMap<(usize, usize), f64> = HashMap::new();
+    ext.insert((0, 0), 1.0);
+    ext.insert((0, 1), 2.0);
+    let mut acc = 0.0;
+    for v in ext.values() {
+        acc += v;
+    }
+    acc
+}

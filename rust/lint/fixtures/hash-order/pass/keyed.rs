@@ -1,0 +1,18 @@
+//@ path: src/elm/demo.rs
+//! Fixture: a `HashMap` used only through keyed lookup — rule C permits
+//! this (visit order never matters when nothing is visited in order).
+#![forbid(unsafe_code)]
+
+use std::collections::HashMap;
+
+/// Sums the values at the requested keys, in the order the caller asks.
+pub fn gather(keys: &[(usize, usize)]) -> f64 {
+    let mut ext: HashMap<(usize, usize), f64> = HashMap::new();
+    ext.insert((0, 0), 1.0);
+    ext.insert((0, 1), 2.0);
+    let mut acc = 0.0;
+    for k in keys {
+        acc += ext.get(k).copied().unwrap_or(0.0);
+    }
+    acc
+}

@@ -1,0 +1,25 @@
+//@ path: src/linalg/simd.rs
+//! Fixture: the dispatched kernel has a scalar twin, but the sibling
+//! tests/simd_props.rs fixture never references it — the bit-identity
+//! of the dispatched path is unpinned.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+mod avx2 {
+    pub(super) fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+}
+
+/// Dispatched entry point: routes to the SIMD body when available.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    avx2::axpy(a, x, y);
+}
+
+/// Scalar oracle for [`axpy`] — defined but never tested.
+pub fn axpy_scalar(a: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}

@@ -1,0 +1,8 @@
+//@ path: tests/simd_props.rs
+//! Fixture: the conformance suite exists but exercises nothing — no
+//! scalar twin is referenced here.
+
+#[test]
+fn placeholder() {
+    assert_eq!(1 + 1, 2);
+}

@@ -1,0 +1,24 @@
+//@ path: src/linalg/simd.rs
+//! Fixture: a dispatched kernel with its scalar twin defined here and
+//! referenced by tests/simd_props.rs (sibling fixture file).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+mod avx2 {
+    pub(super) fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+}
+
+/// Dispatched entry point: routes to the SIMD body when available.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    avx2::axpy(a, x, y);
+}
+
+/// Scalar oracle and portable fallback for [`axpy`].
+pub fn axpy_scalar(a: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}

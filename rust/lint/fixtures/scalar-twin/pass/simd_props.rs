@@ -1,0 +1,13 @@
+//@ path: tests/simd_props.rs
+//! Fixture: the conformance suite references the scalar twin, pinning
+//! dispatched-vs-scalar bit-identity.
+
+#[test]
+fn axpy_matches_scalar() {
+    let x = [1.0, 2.0, 3.0];
+    let mut y = [0.5, 0.5, 0.5];
+    let mut y_ref = y;
+    kernels::axpy(2.0, &x, &mut y);
+    kernels::axpy_scalar(2.0, &x, &mut y_ref);
+    assert_eq!(y.map(f64::to_bits), y_ref.map(f64::to_bits));
+}

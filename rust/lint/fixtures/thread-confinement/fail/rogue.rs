@@ -1,0 +1,11 @@
+//@ path: src/runtime/demo.rs
+//! Fixture: ad-hoc thread spawn outside the ParallelPolicy substrate —
+//! worker-count bit-invariance is unproven for this path.
+#![forbid(unsafe_code)]
+
+/// Spawns a rogue background worker.
+pub fn fire_and_forget(x: f64) {
+    std::thread::spawn(move || {
+        let _ = x * 2.0;
+    });
+}

@@ -1,0 +1,13 @@
+//@ path: src/linalg/policy.rs
+//! Fixture: thread scoping inside the ParallelPolicy substrate — one of
+//! the three files where the fixed-schedule machinery lives.
+#![forbid(unsafe_code)]
+
+/// Runs `f` on each chunk from a scoped worker (fixture stand-in for the
+/// real policy fan-out).
+pub fn fan_out(chunks: &[&[f64]], f: fn(&[f64]) -> f64) -> Vec<f64> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks.iter().map(|c| s.spawn(move || f(c))).collect();
+        handles.into_iter().map(|h| h.join().expect("worker")).collect()
+    })
+}

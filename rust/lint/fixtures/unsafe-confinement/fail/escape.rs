@@ -1,0 +1,8 @@
+//@ path: src/runtime/escape.rs
+//! Fixture: `unsafe` outside linalg/simd.rs, and the forbid header is
+//! missing — both are rule A findings.
+
+/// Reads through a raw pointer outside the confined module.
+pub fn peek(p: *const f64) -> f64 {
+    unsafe { *p }
+}

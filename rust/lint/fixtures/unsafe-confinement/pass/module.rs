@@ -1,0 +1,9 @@
+//@ path: src/runtime/demo.rs
+//! Fixture: an ordinary module with the compiler-backed forbid header
+//! and no `unsafe` tokens.
+#![forbid(unsafe_code)]
+
+/// Doubles the input (safe code only).
+pub fn double(x: f64) -> f64 {
+    2.0 * x
+}

@@ -1,0 +1,10 @@
+//@ path: src/linalg/simd.rs
+//! Fixture: `unsafe` is permitted here, and the file carries the
+//! mandatory deny attribute.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+/// Read one element through a raw pointer (fixture stand-in for the
+/// intrinsic paths of the real microkernel module).
+pub fn peek(p: *const f64) -> f64 {
+    unsafe { *p }
+}

@@ -1,0 +1,13 @@
+//@ path: src/runtime/demo.rs
+//! Fixture: a waiver without its mandatory `-- <reason>` tail — the
+//! waiver itself becomes an unwaivable `waiver-reason` finding.
+#![forbid(unsafe_code)]
+
+/// Names a worker thread for a non-deterministic side channel.
+pub fn named_worker(x: f64) {
+    // lint: allow(thread-confinement)
+    let builder = std::thread::Builder::new().name("demo".to_string());
+    let _ = builder.spawn(move || {
+        let _ = x * 2.0;
+    });
+}

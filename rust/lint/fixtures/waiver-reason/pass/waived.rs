@@ -1,0 +1,13 @@
+//@ path: src/runtime/demo.rs
+//! Fixture: a rule D finding waived with the mandatory reason — the
+//! finding is recorded as waived, and the tree stays clean.
+#![forbid(unsafe_code)]
+
+/// Names a worker thread for a non-deterministic side channel.
+pub fn named_worker(x: f64) {
+    // lint: allow(thread-confinement) -- fixture: logging thread, off the solve path
+    let builder = std::thread::Builder::new().name("demo".to_string());
+    let _ = builder.spawn(move || {
+        let _ = x * 2.0;
+    });
+}

@@ -1,0 +1,474 @@
+//! Comment/string masking and token utilities — the lexical substrate the
+//! rules run on.
+//!
+//! [`FileView::new`] produces a *masked* copy of the source: every comment
+//! and every string/char-literal payload is replaced by spaces (newlines
+//! preserved), so the masked text has exactly the raw text's shape but
+//! contains only code tokens. Rules pattern-match the masked text — a
+//! `thread::spawn` inside a doc comment or a format string can never
+//! trigger a finding — while waiver parsing reads the recorded comment
+//! spans from the raw text.
+//!
+//! The lexer understands line comments, nested block comments, plain and
+//! raw (`r#"…"#`, `br#"…"#`) string literals, byte strings, and char
+//! literals vs lifetimes (`'a'` vs `'a`). It does not expand macros and it
+//! does not resolve types — the rules built on top are deliberately
+//! lexical and conservative (see the crate docs for the contract).
+
+/// A prepared source file: masked char stream plus line bookkeeping.
+pub struct FileView {
+    /// Masked text as a char vector (same length/shape as the raw text).
+    pub chars: Vec<char>,
+    /// Raw text, for waiver/annotation extraction inside comment spans.
+    pub raw: Vec<char>,
+    /// Char spans (start, end-exclusive) of every comment in the file.
+    pub comments: Vec<(usize, usize)>,
+    /// Char index where each line starts (line 1 at index 0).
+    line_starts: Vec<usize>,
+}
+
+/// True for characters that may appear in a Rust identifier.
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl FileView {
+    /// Lex `text` into a masked view.
+    pub fn new(text: &str) -> FileView {
+        let raw: Vec<char> = text.chars().collect();
+        let (chars, comments) = mask(&raw);
+        let mut line_starts = vec![0usize];
+        for (i, &c) in raw.iter().enumerate() {
+            if c == '\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        FileView { chars, raw, comments, line_starts }
+    }
+
+    /// 1-based line number of a char position.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// All char positions where `needle` occurs in the masked text with
+    /// identifier boundaries on both sides.
+    pub fn find_word(&self, needle: &str) -> Vec<usize> {
+        find_word_in(&self.chars, needle)
+    }
+
+    /// All char positions where `needle` occurs in the masked text
+    /// (no boundary requirement).
+    pub fn find_seq(&self, needle: &str) -> Vec<usize> {
+        find_seq_in(&self.chars, needle)
+    }
+
+    /// Whether the masked range [lo, hi) contains `needle`.
+    pub fn range_contains(&self, lo: usize, hi: usize, needle: &str) -> bool {
+        let hi = hi.min(self.chars.len());
+        if lo >= hi {
+            return false;
+        }
+        !find_seq_in(&self.chars[lo..hi], needle).is_empty()
+    }
+
+    /// First non-whitespace char position at or after `pos` in the masked
+    /// text.
+    pub fn skip_ws(&self, mut pos: usize) -> usize {
+        while pos < self.chars.len() && self.chars[pos].is_whitespace() {
+            pos += 1;
+        }
+        pos
+    }
+
+    /// Last non-whitespace char position strictly before `pos`, if any.
+    pub fn prev_non_ws(&self, pos: usize) -> Option<usize> {
+        let mut i = pos;
+        while i > 0 {
+            i -= 1;
+            if !self.chars[i].is_whitespace() {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// The identifier ending at `end` (exclusive), if the preceding chars
+    /// form one.
+    pub fn ident_ending_at(&self, end: usize) -> Option<(usize, String)> {
+        let mut start = end;
+        while start > 0 && is_ident_char(self.chars[start - 1]) {
+            start -= 1;
+        }
+        if start == end {
+            None
+        } else {
+            Some((start, self.chars[start..end].iter().collect()))
+        }
+    }
+
+    /// The identifier starting at `pos`, if any.
+    pub fn ident_starting_at(&self, pos: usize) -> Option<String> {
+        let mut end = pos;
+        while end < self.chars.len() && is_ident_char(self.chars[end]) {
+            end += 1;
+        }
+        if end == pos {
+            None
+        } else {
+            Some(self.chars[pos..end].iter().collect())
+        }
+    }
+
+    /// Matching `}` for the `{` at `open`, by depth counting over the
+    /// masked text (strings and comments are already blanked).
+    pub fn match_brace(&self, open: usize) -> Option<usize> {
+        debug_assert_eq!(self.chars[open], '{');
+        let mut depth = 0usize;
+        for (off, &c) in self.chars[open..].iter().enumerate() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(open + off);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+}
+
+/// Word-boundary search over a char slice.
+pub fn find_word_in(hay: &[char], needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for pos in find_seq_in(hay, needle) {
+        let left_ok = pos == 0 || !is_ident_char(hay[pos - 1]);
+        let end = pos + needle.chars().count();
+        let right_ok = end >= hay.len() || !is_ident_char(hay[end]);
+        if left_ok && right_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+/// Plain subsequence search over a char slice.
+pub fn find_seq_in(hay: &[char], needle: &str) -> Vec<usize> {
+    let nd: Vec<char> = needle.chars().collect();
+    if nd.is_empty() || hay.len() < nd.len() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for i in 0..=hay.len() - nd.len() {
+        if hay[i..i + nd.len()] == nd[..] {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Mask comments and literal payloads: returns the masked chars (same
+/// length as the input) plus the comment spans.
+fn mask(raw: &[char]) -> (Vec<char>, Vec<(usize, usize)>) {
+    let n = raw.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut comments: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = raw[i];
+        // line comment (covers `///` and `//!` doc comments too)
+        if c == '/' && raw.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < n && raw[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            comments.push((start, i));
+            continue;
+        }
+        // block comment, nesting per the Rust grammar
+        if c == '/' && raw.get(i + 1) == Some(&'*') {
+            let start = i;
+            let mut depth = 0usize;
+            while i < n {
+                if raw[i] == '/' && raw.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if raw[i] == '*' && raw.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(raw[i]));
+                    i += 1;
+                }
+            }
+            comments.push((start, i));
+            continue;
+        }
+        // raw string (r"…", r#"…"#, br#"…"#) — only when the prefix is not
+        // the tail of an identifier
+        if (c == 'r' || c == 'b') && !prev_is_ident(raw, i) {
+            if let Some(end) = raw_string_end(raw, i) {
+                while i < end {
+                    out.push(blank(raw[i]));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // plain / byte string
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if raw[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(blank(raw[i + 1]));
+                    i += 2;
+                } else if raw[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(raw[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if raw.get(i + 1) == Some(&'\\') {
+                // escaped char literal: consume through the closing quote
+                out.push(' ');
+                out.push(' ');
+                i += 2;
+                while i < n && raw[i] != '\'' {
+                    out.push(blank(raw[i]));
+                    i += 1;
+                }
+                if i < n {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && raw[i + 2] == '\'' && raw[i + 1] != '\'' {
+                // 'x' char literal
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+                continue;
+            }
+            // lifetime / loop label: keep the quote, keep going
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, comments)
+}
+
+fn prev_is_ident(raw: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(raw[i - 1])
+}
+
+/// If `raw[i..]` starts a raw (byte) string literal, return the exclusive
+/// end position, else None.
+fn raw_string_end(raw: &[char], i: usize) -> Option<usize> {
+    let n = raw.len();
+    let mut j = i;
+    if raw[j] == 'b' {
+        j += 1;
+        if j >= n || raw[j] != 'r' {
+            return None;
+        }
+    }
+    if raw[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < n && raw[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || raw[j] != '"' {
+        return None;
+    }
+    j += 1;
+    // scan for `"` followed by `hashes` hash marks
+    while j < n {
+        if raw[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && raw[k] == '#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// A function item found in the masked text.
+pub struct FnSpan {
+    /// Function name.
+    pub name: String,
+    /// Declared exactly `pub` (not `pub(crate)` / `pub(super)`).
+    pub is_pub: bool,
+    /// Char position of the `fn` keyword.
+    pub pos: usize,
+    /// Body span (open-brace position, close-brace position), if any.
+    pub body: Option<(usize, usize)>,
+}
+
+/// Collect every `fn` item in the view (including nested ones).
+pub fn fn_spans(view: &FileView) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for pos in view.find_word("fn") {
+        let name_start = view.skip_ws(pos + 2);
+        let Some(name) = view.ident_starting_at(name_start) else {
+            continue; // `fn(…)` pointer type or malformed
+        };
+        let is_pub = leading_pub(view, pos);
+        // body: first `{` before any `;` after the name
+        let mut body = None;
+        let mut j = name_start + name.chars().count();
+        while j < view.chars.len() {
+            match view.chars[j] {
+                '{' => {
+                    body = view.match_brace(j).map(|close| (j, close));
+                    break;
+                }
+                ';' => break,
+                _ => j += 1,
+            }
+        }
+        out.push(FnSpan { name, is_pub, pos, body });
+    }
+    out
+}
+
+/// Whether the `fn` at `pos` is preceded by a bare `pub` (skipping the
+/// `unsafe` / `const` / `async` qualifiers).
+fn leading_pub(view: &FileView, pos: usize) -> bool {
+    let mut end = pos;
+    loop {
+        let Some(last) = view.prev_non_ws(end) else {
+            return false;
+        };
+        let Some((start, word)) = view.ident_ending_at(last + 1) else {
+            return false; // `)` of pub(crate), `>`, `;`, `}` …
+        };
+        match word.as_str() {
+            "unsafe" | "const" | "async" => end = start,
+            "pub" => return true,
+            _ => return false,
+        }
+    }
+}
+
+/// Char spans of `#[cfg(test)] mod … { … }` regions — rules that guard
+/// runtime determinism skip findings inside them.
+pub fn cfg_test_spans(view: &FileView) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for pos in view.find_seq("#[cfg(test)]") {
+        // the `mod` keyword should follow within the next few tokens
+        let window_end = (pos + 200).min(view.chars.len());
+        let Some(mod_pos) = find_word_in(&view.chars[pos..window_end], "mod").first().copied()
+        else {
+            continue;
+        };
+        let mut j = pos + mod_pos;
+        while j < view.chars.len() && view.chars[j] != '{' {
+            j += 1;
+        }
+        if j < view.chars.len() {
+            if let Some(close) = view.match_brace(j) {
+                out.push((pos, close + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Whether `pos` falls inside any of the (sorted or unsorted) spans.
+pub fn in_spans(pos: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(lo, hi)| pos >= lo && pos < hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings_but_keeps_code() {
+        let v = FileView::new("let x = \"unsafe\"; // unsafe here\nunsafe {}\n");
+        let masked: String = v.chars.iter().collect();
+        assert!(!masked[..masked.find('\n').unwrap()].contains("unsafe"));
+        assert_eq!(v.find_word("unsafe").len(), 1);
+        assert_eq!(v.line_of(v.find_word("unsafe")[0]), 2);
+    }
+
+    #[test]
+    fn masks_nested_block_comments_and_raw_strings() {
+        let v = FileView::new("/* a /* b */ c */ fn f() {}\nlet s = r#\"thread::spawn\"#;\n");
+        assert_eq!(v.find_seq("thread::spawn").len(), 0);
+        assert_eq!(fn_spans(&v).len(), 1);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let v = FileView::new("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'x';\n");
+        let spans = fn_spans(&v);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "f");
+        assert!(spans[0].body.is_some());
+        // the char literal payload is masked: only the param and the
+        // return expression remain as `x` tokens
+        assert_eq!(v.find_word("x").len(), 2);
+    }
+
+    #[test]
+    fn pub_detection_distinguishes_scoped_pub() {
+        let src = "pub fn a() {}\npub(crate) fn b() {}\npub unsafe fn c() {}\nfn d() {}\n";
+        let v = FileView::new(src);
+        let spans = fn_spans(&v);
+        let pubs: Vec<(&str, bool)> =
+            spans.iter().map(|s| (s.name.as_str(), s.is_pub)).collect();
+        assert_eq!(pubs, vec![("a", true), ("b", false), ("c", true), ("d", false)]);
+    }
+
+    #[test]
+    fn cfg_test_span_covers_the_test_module() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n";
+        let v = FileView::new(src);
+        let spans = cfg_test_spans(&v);
+        assert_eq!(spans.len(), 1);
+        let t_pos = v.find_word("t")[0];
+        assert!(in_spans(t_pos, &spans));
+        assert!(!in_spans(v.find_word("live")[0], &spans));
+    }
+}

@@ -1,0 +1,349 @@
+//! pallas-lint: static analyzer for the opt-pr-elm determinism contract.
+//!
+//! The repo's central guarantee — every threaded/SIMD/chunked path is
+//! bit-identical to its sequential scalar oracle — rests on conventions
+//! the compiler never checks. This crate makes six of them machine
+//! checked (see [`rules`] for the rule table) over a masked token stream
+//! (see [`lexer`]); it deliberately has **zero dependencies** because the
+//! offline build environment cannot resolve crates.io, so no `syn`.
+//!
+//! Findings can be waived per site with
+//! `// lint: allow(<rule>) -- <reason>` on the flagged line or the line
+//! directly above it; the reason is mandatory (a reasonless waiver is
+//! itself an unwaivable `waiver-reason` finding). Rule E's annotation is
+//! `// lint: fold-order-pinned -- <reason>`.
+//!
+//! The rule semantics are locked by the fixture suite under `fixtures/`,
+//! which the Python mirror `ci/pallas_lint.py` must also pass — the
+//! fixtures are the sync contract between the two implementations.
+
+#![forbid(unsafe_code)]
+#![deny(missing_docs)]
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use rules::{collect_waivers, Prepared, RULE_WAIVER, TWIN_TEST_FILE};
+
+/// One source file handed to the analyzer: a repo-relative path (e.g.
+/// `src/linalg/simd.rs`) plus its text. Fixture files carry virtual paths
+/// via a `//@ path: …` first-line directive (see [`fixture_sources`]).
+pub struct Source {
+    /// Path relative to the `rust/` crate root (`src/…` or `tests/…`).
+    pub path: String,
+    /// Full file contents.
+    pub text: String,
+}
+
+/// One rule violation (possibly waived).
+#[derive(Clone)]
+pub struct Finding {
+    /// Rule name (one of [`rules::RULES`]).
+    pub rule: &'static str,
+    /// Path of the offending file, as given in [`Source::path`].
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description of the violation and the contract.
+    pub message: String,
+    /// Whether a `lint: allow(…)` waiver covers this site.
+    pub waived: bool,
+    /// The waiver's reason, when waived.
+    pub waive_reason: Option<String>,
+}
+
+/// Run every rule over `sources` and apply waivers. Rules only fire on
+/// `src/…` files; `tests/simd_props.rs` participates solely as the
+/// scalar-twin reference corpus for rule B.
+pub fn analyze_sources(sources: &[Source]) -> Vec<Finding> {
+    let prepared: Vec<Prepared> = sources.iter().map(Prepared::new).collect();
+    let twin_tests = prepared.iter().find(|p| p.path.ends_with(TWIN_TEST_FILE));
+    let mut findings = Vec::new();
+    for p in &prepared {
+        if p.rel.is_empty() {
+            continue; // non-src file: reference corpus only
+        }
+        let (waivers, malformed) = collect_waivers(&p.view);
+        for (line, message) in malformed {
+            findings.push(Finding {
+                rule: RULE_WAIVER,
+                path: p.path.clone(),
+                line,
+                message,
+                waived: false,
+                waive_reason: None,
+            });
+        }
+        let mut file_findings = Vec::new();
+        rules::rule_unsafe(p, &mut file_findings);
+        rules::rule_twin(p, twin_tests, &mut file_findings);
+        rules::rule_hash(p, &mut file_findings);
+        rules::rule_thread(p, &mut file_findings);
+        rules::rule_fold(p, &waivers, &mut file_findings);
+        rules::rule_assert(p, &mut file_findings);
+        for f in &mut file_findings {
+            if let Some(w) = waivers
+                .iter()
+                .find(|w| w.rule == f.rule && (w.line == f.line || w.line + 1 == f.line))
+            {
+                f.waived = true;
+                f.waive_reason = w.reason.clone();
+            }
+        }
+        findings.extend(file_findings);
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    findings
+}
+
+/// Number of findings not covered by a waiver.
+pub fn unwaived_count(findings: &[Finding]) -> usize {
+    findings.iter().filter(|f| !f.waived).count()
+}
+
+/// Render findings as the stable JSON schema consumed by `ci/check_lint.py`:
+/// `{"tool":"pallas-lint","findings":[…],"unwaived":N,"waived":M}`.
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"tool\":\"pallas-lint\",\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"rule\":");
+        out.push_str(&json_str(f.rule));
+        out.push_str(",\"path\":");
+        out.push_str(&json_str(&f.path));
+        out.push_str(",\"line\":");
+        out.push_str(&f.line.to_string());
+        out.push_str(",\"message\":");
+        out.push_str(&json_str(&f.message));
+        out.push_str(",\"waived\":");
+        out.push_str(if f.waived { "true" } else { "false" });
+        out.push_str(",\"reason\":");
+        match &f.waive_reason {
+            Some(r) => out.push_str(&json_str(r)),
+            None => out.push_str("null"),
+        }
+        out.push('}');
+    }
+    out.push_str("],\"unwaived\":");
+    out.push_str(&unwaived_count(findings).to_string());
+    out.push_str(",\"waived\":");
+    out.push_str(&(findings.len() - unwaived_count(findings)).to_string());
+    out.push_str("}\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render findings for terminals: one `path:line: [rule] message` per
+/// finding, waived sites suffixed with their reason, then a summary line.
+pub fn render_human(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message));
+        if f.waived {
+            let reason = f.waive_reason.as_deref().unwrap_or("");
+            out.push_str(&format!(" (waived: {reason})"));
+        }
+        out.push('\n');
+    }
+    let unwaived = unwaived_count(findings);
+    out.push_str(&format!(
+        "pallas-lint: {} finding(s), {} unwaived, {} waived\n",
+        findings.len(),
+        unwaived,
+        findings.len() - unwaived
+    ));
+    out
+}
+
+/// Load every `.rs` file in `dir` (non-recursive, sorted) as a fixture
+/// source. The first line may be a `//@ path: src/…` directive assigning
+/// the file a virtual tree path (the directive stays in the text — it is
+/// a comment, so the lexer masks it); without one, the file name is used.
+pub fn fixture_sources(dir: &Path) -> io::Result<Vec<Source>> {
+    let mut paths: Vec<_> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|e| e == "rs"))
+        .collect();
+    paths.sort();
+    let mut sources = Vec::new();
+    for p in paths {
+        let text = fs::read_to_string(&p)?;
+        let virt = text
+            .lines()
+            .next()
+            .and_then(|l| l.strip_prefix("//@ path:"))
+            .map(|v| v.trim().to_string())
+            .unwrap_or_else(|| {
+                format!("src/{}", p.file_name().unwrap().to_string_lossy())
+            });
+        sources.push(Source { path: virt, text });
+    }
+    Ok(sources)
+}
+
+/// Load the real tree: every `.rs` under `<root>/src` (recursive, sorted)
+/// plus `<root>/tests/simd_props.rs` when present. `root` may be the
+/// `rust/` crate root or its `src/` directory directly.
+pub fn tree_sources(root: &Path) -> io::Result<Vec<Source>> {
+    let (src_dir, tests_dir) = if root.join("src").is_dir() {
+        (root.join("src"), root.join("tests"))
+    } else {
+        let parent = root.parent().unwrap_or(Path::new(".")).to_path_buf();
+        (root.to_path_buf(), parent.join("tests"))
+    };
+    let mut sources = Vec::new();
+    let mut files = Vec::new();
+    walk_rs(&src_dir, &mut files)?;
+    files.sort();
+    for f in files {
+        let rel = f.strip_prefix(&src_dir).unwrap_or(&f);
+        sources.push(Source {
+            path: format!("src/{}", rel.display()),
+            text: fs::read_to_string(&f)?,
+        });
+    }
+    let twin = tests_dir.join("simd_props.rs");
+    if twin.is_file() {
+        sources.push(Source {
+            path: TWIN_TEST_FILE.to_string(),
+            text: fs::read_to_string(&twin)?,
+        });
+    }
+    Ok(sources)
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fixtures_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+    }
+
+    /// Every rule's pass fixture is clean and its fail fixture trips that
+    /// exact rule — the executable spec shared with ci/pallas_lint.py.
+    #[test]
+    fn fixtures_pass_and_fail_as_labelled() {
+        let root = fixtures_root();
+        let mut rule_dirs: Vec<_> = fs::read_dir(&root)
+            .expect("fixtures dir")
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.is_dir())
+            .collect();
+        rule_dirs.sort();
+        assert_eq!(rule_dirs.len(), 7, "one fixture dir per rule + waiver-reason");
+        for dir in rule_dirs {
+            let rule = dir.file_name().unwrap().to_string_lossy().to_string();
+            let pass = analyze_sources(&fixture_sources(&dir.join("pass")).unwrap());
+            assert_eq!(
+                unwaived_count(&pass),
+                0,
+                "pass fixture for `{rule}` must be clean, got:\n{}",
+                render_human(&pass)
+            );
+            let fail = analyze_sources(&fixture_sources(&dir.join("fail")).unwrap());
+            assert!(
+                fail.iter().any(|f| !f.waived && f.rule == rule),
+                "fail fixture for `{rule}` must trip it, got:\n{}",
+                render_human(&fail)
+            );
+        }
+    }
+
+    /// The waiver pass fixture exercises the waiver path: at least one
+    /// finding is present but waived, with its reason carried through.
+    #[test]
+    fn waiver_pass_fixture_records_reasons() {
+        let dir = fixtures_root().join("waiver-reason").join("pass");
+        let findings = analyze_sources(&fixture_sources(&dir).unwrap());
+        assert_eq!(unwaived_count(&findings), 0);
+        let waived: Vec<_> = findings.iter().filter(|f| f.waived).collect();
+        assert!(!waived.is_empty(), "waiver pass fixture must contain waived findings");
+        assert!(waived.iter().all(|f| f.waive_reason.is_some()));
+    }
+
+    /// The acceptance gate: the real tree has zero unwaived findings.
+    #[test]
+    fn real_tree_is_clean() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .to_path_buf();
+        let findings = analyze_sources(&tree_sources(&root).unwrap());
+        assert_eq!(
+            unwaived_count(&findings),
+            0,
+            "tree must be lint-clean:\n{}",
+            render_human(&findings)
+        );
+    }
+
+    #[test]
+    fn json_schema_is_stable() {
+        let findings = vec![Finding {
+            rule: "hash-order",
+            path: "src/x.rs".to_string(),
+            line: 3,
+            message: "m \"q\"".to_string(),
+            waived: true,
+            waive_reason: Some("r".to_string()),
+        }];
+        let json = render_json(&findings);
+        assert!(json.starts_with("{\"tool\":\"pallas-lint\",\"findings\":["));
+        assert!(json.contains("\"rule\":\"hash-order\""));
+        assert!(json.contains("\"message\":\"m \\\"q\\\"\""));
+        assert!(json.contains("\"unwaived\":0"));
+        assert!(json.contains("\"waived\":1"));
+    }
+
+    #[test]
+    fn reasonless_waiver_is_unwaivable() {
+        let src = Source {
+            path: "src/linalg/demo.rs".to_string(),
+            text: "#![forbid(unsafe_code)]\n\
+                   // lint: allow(hash-order)\n\
+                   pub fn f() {}\n"
+                .to_string(),
+        };
+        let findings = analyze_sources(&[src]);
+        assert!(findings
+            .iter()
+            .any(|f| f.rule == RULE_WAIVER && !f.waived && f.line == 2));
+    }
+}

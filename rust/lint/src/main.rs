@@ -1,0 +1,69 @@
+//! CLI for pallas-lint.
+//!
+//! ```text
+//! pallas-lint [--json] [--fixture] <path>
+//! ```
+//!
+//! `<path>` is the `rust/` crate root or its `src/` directory (tree
+//! mode), or — with `--fixture` — a directory of fixture files carrying
+//! `//@ path:` virtual-path directives. Exit codes: 0 clean, 1 unwaived
+//! findings, 2 usage/IO error.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_lint::{
+    analyze_sources, fixture_sources, render_human, render_json, tree_sources, unwaived_count,
+};
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut fixture = false;
+    let mut path: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--fixture" => fixture = true,
+            "--help" | "-h" => {
+                eprintln!("usage: pallas-lint [--json] [--fixture] <rust-root-or-src>");
+                return ExitCode::from(0);
+            }
+            a if a.starts_with('-') => {
+                eprintln!("pallas-lint: unknown flag `{a}`");
+                return ExitCode::from(2);
+            }
+            a => {
+                if path.is_some() {
+                    eprintln!("pallas-lint: expected exactly one path argument");
+                    return ExitCode::from(2);
+                }
+                path = Some(PathBuf::from(a));
+            }
+        }
+    }
+    let Some(path) = path else {
+        eprintln!("usage: pallas-lint [--json] [--fixture] <rust-root-or-src>");
+        return ExitCode::from(2);
+    };
+    let sources = if fixture { fixture_sources(&path) } else { tree_sources(&path) };
+    let sources = match sources {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("pallas-lint: cannot read `{}`: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let findings = analyze_sources(&sources);
+    if json {
+        print!("{}", render_json(&findings));
+    } else {
+        print!("{}", render_human(&findings));
+    }
+    if unwaived_count(&findings) == 0 {
+        ExitCode::from(0)
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,497 @@
+//! The six determinism-contract rules plus the waiver mechanism.
+//!
+//! Every rule is lexical and conservative: it pattern-matches the masked
+//! token stream (comments and literals blanked — see [`crate::lexer`]),
+//! never type information. Where a rule cannot prove a site is safe it
+//! flags it, and the site either gets fixed or carries a
+//! `// lint: allow(<rule>) -- <reason>` waiver with a mandatory reason.
+//! The rule table, the contract each rule protects, and the waiver syntax
+//! are documented in docs/ARCHITECTURE.md ("Statically-enforced
+//! invariants").
+
+use crate::lexer::{cfg_test_spans, fn_spans, in_spans, FileView, FnSpan};
+use crate::{Finding, Source};
+
+/// Rule names, as they appear in findings, waivers, and fixture
+/// directories.
+pub const RULES: [&str; 7] = [
+    RULE_UNSAFE,
+    RULE_TWIN,
+    RULE_HASH,
+    RULE_THREAD,
+    RULE_FOLD,
+    RULE_ASSERT,
+    RULE_WAIVER,
+];
+
+/// Rule A: `unsafe` confined to `linalg/simd.rs`.
+pub const RULE_UNSAFE: &str = "unsafe-confinement";
+/// Rule B: every dispatched SIMD kernel has a tested `*_scalar` twin.
+pub const RULE_TWIN: &str = "scalar-twin";
+/// Rule C: no `HashMap`/`HashSet` iteration in deterministic modules.
+pub const RULE_HASH: &str = "hash-order";
+/// Rule D: thread spawning confined to the `ParallelPolicy` substrate.
+pub const RULE_THREAD: &str = "thread-confinement";
+/// Rule E: float folds in kernel modules carry a fold-order annotation.
+pub const RULE_FOLD: &str = "fold-order";
+/// Rule F: no `debug_assert!` in `pub` kernel entry points.
+pub const RULE_ASSERT: &str = "assert-discipline";
+/// Meta rule: waivers/annotations must name a known rule and give a
+/// reason. Not waivable.
+pub const RULE_WAIVER: &str = "waiver-reason";
+
+/// The one file `unsafe` may appear in (path relative to `src/`).
+pub const UNSAFE_FILE: &str = "linalg/simd.rs";
+/// Files exempt from the `#![forbid(unsafe_code)]` header: the crate root
+/// and `linalg/mod.rs` are ancestors of `simd.rs`, and a `forbid` there
+/// would cascade onto it (forbid cannot be relaxed down the module tree).
+pub const FORBID_EXEMPT: [&str; 2] = ["lib.rs", "linalg/mod.rs"];
+/// Files allowed to spawn/scope threads: the `ParallelPolicy` machinery,
+/// the TSQR tree, and the coordinator pipeline.
+pub const THREAD_ALLOWED: [&str; 3] =
+    ["linalg/policy.rs", "linalg/tsqr.rs", "coordinator/pipeline.rs"];
+/// Modules whose results feed deterministic β solves: hash-order scope.
+pub const HASH_SCOPE: [&str; 3] = ["coordinator/", "linalg/", "elm/"];
+/// Kernel modules: fold-order and assert-discipline scope.
+pub const KERNEL_SCOPE: [&str; 2] = ["linalg/", "elm/arch/"];
+/// The conformance suite rule B requires scalar twins to be referenced in.
+pub const TWIN_TEST_FILE: &str = "tests/simd_props.rs";
+
+/// Map/set iteration methods whose visit order is hash-order dependent.
+const HASH_ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// A parsed `// lint: …` control comment.
+pub struct Waiver {
+    /// Rule being waived, or [`RULE_FOLD`] for `fold-order-pinned`.
+    pub rule: String,
+    /// Justification text after `--`; `None` when missing (an error).
+    pub reason: Option<String>,
+    /// 1-based line the comment sits on.
+    pub line: usize,
+}
+
+/// Parse every `lint:` control comment in the file. Returns
+/// `(waivers, malformed)` where malformed entries already carry
+/// [`RULE_WAIVER`] findings' metadata (line + message in `reason`).
+pub fn collect_waivers(view: &FileView) -> (Vec<Waiver>, Vec<(usize, String)>) {
+    let mut waivers = Vec::new();
+    let mut malformed = Vec::new();
+    for &(lo, hi) in &view.comments {
+        let text: String = view.raw[lo..hi].iter().collect();
+        let Some(idx) = text.find("lint:") else {
+            continue;
+        };
+        let line = view.line_of(lo);
+        let body = text[idx + "lint:".len()..].trim();
+        let (rule, rest) = if let Some(stripped) = body.strip_prefix("allow(") {
+            let Some(close) = stripped.find(')') else {
+                malformed.push((line, "unterminated `lint: allow(…)`".to_string()));
+                continue;
+            };
+            (stripped[..close].trim().to_string(), stripped[close + 1..].trim())
+        } else if let Some(stripped) = body.strip_prefix("fold-order-pinned") {
+            (RULE_FOLD.to_string(), stripped.trim())
+        } else {
+            malformed.push((
+                line,
+                format!("unknown lint control comment `lint: {body}`"),
+            ));
+            continue;
+        };
+        if !RULES.contains(&rule.as_str()) || rule == RULE_WAIVER {
+            malformed.push((line, format!("waiver names unknown rule `{rule}`")));
+            continue;
+        }
+        let reason = rest.strip_prefix("--").map(|r| r.trim().to_string());
+        match reason {
+            Some(r) if !r.is_empty() => {
+                waivers.push(Waiver { rule, reason: Some(r), line });
+            }
+            _ => {
+                malformed.push((
+                    line,
+                    format!(
+                        "waiver for `{rule}` is missing its mandatory reason \
+                         (`-- <why this site is exempt>`)"
+                    ),
+                ));
+            }
+        }
+    }
+    (waivers, malformed)
+}
+
+/// A source file prepared for rule evaluation.
+pub struct Prepared {
+    /// Path as given (e.g. `src/linalg/simd.rs`).
+    pub path: String,
+    /// Path relative to `src/` (empty for non-src files).
+    pub rel: String,
+    /// Masked view.
+    pub view: FileView,
+    /// `#[cfg(test)] mod` spans.
+    pub test_spans: Vec<(usize, usize)>,
+    /// Function items.
+    pub fns: Vec<FnSpan>,
+}
+
+impl Prepared {
+    /// Prepare a source for analysis.
+    pub fn new(src: &Source) -> Prepared {
+        let view = FileView::new(&src.text);
+        let test_spans = cfg_test_spans(&view);
+        let fns = fn_spans(&view);
+        let rel = src
+            .path
+            .strip_prefix("src/")
+            .map(str::to_string)
+            .unwrap_or_default();
+        Prepared { path: src.path.clone(), rel, view, test_spans, fns }
+    }
+
+    fn finding(&self, rule: &'static str, pos: usize, message: String) -> Finding {
+        Finding {
+            rule,
+            path: self.path.clone(),
+            line: self.view.line_of(pos),
+            message,
+            waived: false,
+            waive_reason: None,
+        }
+    }
+
+    fn finding_at_line(&self, rule: &'static str, line: usize, message: String) -> Finding {
+        Finding {
+            rule,
+            path: self.path.clone(),
+            line,
+            message,
+            waived: false,
+            waive_reason: None,
+        }
+    }
+}
+
+/// Rule A on one file: `unsafe` tokens outside [`UNSAFE_FILE`] are errors;
+/// [`UNSAFE_FILE`] must deny `unsafe_op_in_unsafe_fn`; every other file
+/// (except [`FORBID_EXEMPT`]) must carry `#![forbid(unsafe_code)]`.
+pub fn rule_unsafe(p: &Prepared, out: &mut Vec<Finding>) {
+    if p.rel == UNSAFE_FILE {
+        if p.view.find_seq("#![deny(unsafe_op_in_unsafe_fn)]").is_empty() {
+            out.push(p.finding_at_line(
+                RULE_UNSAFE,
+                1,
+                format!(
+                    "{UNSAFE_FILE} must carry `#![deny(unsafe_op_in_unsafe_fn)]` so every \
+                     unsafe operation sits in an explicit `unsafe` block"
+                ),
+            ));
+        }
+        return;
+    }
+    for pos in p.view.find_word("unsafe") {
+        out.push(p.finding(
+            RULE_UNSAFE,
+            pos,
+            format!(
+                "`unsafe` outside {UNSAFE_FILE}: the determinism contract confines all \
+                 unsafe code to the SIMD microkernel module"
+            ),
+        ));
+    }
+    if !FORBID_EXEMPT.contains(&p.rel.as_str())
+        && p.view.find_seq("#![forbid(unsafe_code)]").is_empty()
+    {
+        out.push(p.finding_at_line(
+            RULE_UNSAFE,
+            1,
+            "missing `#![forbid(unsafe_code)]` module header (compiler-backed rule A)"
+                .to_string(),
+        ));
+    }
+}
+
+/// Rule B: in [`UNSAFE_FILE`], every dispatched kernel (a non-test `pub fn`
+/// whose body references `avx2::`, or that has a `*_scalar` sibling) must
+/// have its scalar twin defined and referenced by [`TWIN_TEST_FILE`].
+pub fn rule_twin(p: &Prepared, twin_tests: Option<&Prepared>, out: &mut Vec<Finding>) {
+    if p.rel != UNSAFE_FILE {
+        return;
+    }
+    let live: Vec<&FnSpan> = p
+        .fns
+        .iter()
+        .filter(|f| f.is_pub && !in_spans(f.pos, &p.test_spans))
+        .collect();
+    let names: Vec<&str> = live.iter().map(|f| f.name.as_str()).collect();
+    for f in &live {
+        if f.name.ends_with("_scalar") {
+            continue;
+        }
+        let twin = format!("{}_scalar", f.name);
+        let dispatched = f
+            .body
+            .map(|(lo, hi)| p.view.range_contains(lo, hi, "avx2::"))
+            .unwrap_or(false)
+            || names.contains(&twin.as_str());
+        if !dispatched {
+            continue;
+        }
+        if !names.contains(&twin.as_str()) {
+            out.push(p.finding(
+                RULE_TWIN,
+                f.pos,
+                format!(
+                    "dispatched kernel `{}` has no `{twin}` twin: every SIMD kernel needs \
+                     a scalar oracle that is also the portable fallback",
+                    f.name
+                ),
+            ));
+            continue;
+        }
+        let referenced = twin_tests
+            .map(|t| !t.view.find_word(&twin).is_empty())
+            .unwrap_or(false);
+        if !referenced {
+            out.push(p.finding(
+                RULE_TWIN,
+                f.pos,
+                format!(
+                    "scalar twin `{twin}` is never referenced by {TWIN_TEST_FILE}: the \
+                     dispatched-vs-scalar bit-identity of `{}` is unpinned",
+                    f.name
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule C: in [`HASH_SCOPE`] modules, iterating a binding declared as
+/// `HashMap`/`HashSet` (or built from `HashMap::…`/`HashSet::…`) is an
+/// error — iteration order is hash-order. Keyed lookup is fine.
+pub fn rule_hash(p: &Prepared, out: &mut Vec<Finding>) {
+    if !HASH_SCOPE.iter().any(|s| p.rel.starts_with(s)) {
+        return;
+    }
+    let mut bound: Vec<String> = Vec::new();
+    for ty in ["HashMap", "HashSet"] {
+        for pos in p.view.find_word(ty) {
+            if let Some(name) = hash_binding_name(&p.view, pos) {
+                if !bound.contains(&name) {
+                    bound.push(name);
+                }
+            }
+        }
+    }
+    let mut flagged_lines: Vec<usize> = Vec::new();
+    for name in &bound {
+        for pos in p.view.find_word(name) {
+            if in_spans(pos, &p.test_spans) {
+                continue;
+            }
+            let end = pos + name.chars().count();
+            let hit = hash_iter_method(&p.view, end).is_some() || for_loop_target(&p.view, pos);
+            if !hit {
+                continue;
+            }
+            let line = p.view.line_of(pos);
+            if flagged_lines.contains(&line) {
+                continue;
+            }
+            flagged_lines.push(line);
+            out.push(p.finding(
+                RULE_HASH,
+                pos,
+                format!(
+                    "iteration over hash-ordered `{name}`: visit order is nondeterministic — \
+                     use BTreeMap/BTreeSet or sort before iterating (keyed lookup is fine)"
+                ),
+            ));
+        }
+    }
+}
+
+/// The binding name a `HashMap`/`HashSet` occurrence declares, if any:
+/// `name: HashMap<…>` (field/param/let-with-type) or
+/// `let name = HashMap::new()` (also `name = HashMap::with_capacity(…)`).
+fn hash_binding_name(view: &FileView, mut pos: usize) -> Option<String> {
+    // walk back over a `path::to::` prefix
+    loop {
+        let prev = view.prev_non_ws(pos)?;
+        if prev >= 1 && view.chars[prev] == ':' && view.chars[prev - 1] == ':' {
+            let (seg_start, _) = view.ident_ending_at(view.prev_non_ws(prev - 1)? + 1)?;
+            pos = seg_start;
+            continue;
+        }
+        if view.chars[prev] == ':' {
+            // `name : HashMap<…>`
+            let last = view.prev_non_ws(prev)?;
+            return view.ident_ending_at(last + 1).map(|(_, n)| n);
+        }
+        if view.chars[prev] == '=' {
+            // `name = HashMap::new()` — only when it is a plain `=`
+            if view.chars.get(prev.wrapping_sub(1)) == Some(&'=') {
+                return None; // `==` comparison
+            }
+            let last = view.prev_non_ws(prev)?;
+            return view.ident_ending_at(last + 1).map(|(_, n)| n);
+        }
+        return None;
+    }
+}
+
+/// If the chars after `end` are `.method(` with `method` in
+/// [`HASH_ITER_METHODS`], return the method name.
+fn hash_iter_method(view: &FileView, end: usize) -> Option<&'static str> {
+    let dot = view.skip_ws(end);
+    if view.chars.get(dot) != Some(&'.') {
+        return None;
+    }
+    let m_start = view.skip_ws(dot + 1);
+    let m = view.ident_starting_at(m_start)?;
+    HASH_ITER_METHODS.iter().find(|&&cand| cand == m).copied()
+}
+
+/// Whether the identifier at `pos` is the target of a `for … in` loop
+/// (walking back over `&`, `mut`, `self`, `.`, and parens to the `in`
+/// keyword).
+fn for_loop_target(view: &FileView, pos: usize) -> bool {
+    let mut end = pos;
+    loop {
+        let Some(prev) = view.prev_non_ws(end) else {
+            return false;
+        };
+        match view.chars[prev] {
+            '&' | '.' | '(' | ')' => {
+                end = prev;
+                continue;
+            }
+            _ => {}
+        }
+        let Some((start, word)) = view.ident_ending_at(prev + 1) else {
+            return false;
+        };
+        match word.as_str() {
+            "mut" | "self" => {
+                end = start;
+                continue;
+            }
+            "in" => return true,
+            _ => return false,
+        }
+    }
+}
+
+/// Rule D: `std::thread` / `thread::spawn` / `thread::scope` /
+/// `thread::Builder` outside [`THREAD_ALLOWED`] is an error — all
+/// threading must route through the `ParallelPolicy` fixed-schedule
+/// machinery.
+pub fn rule_thread(p: &Prepared, out: &mut Vec<Finding>) {
+    if THREAD_ALLOWED.contains(&p.rel.as_str()) {
+        return;
+    }
+    let mut flagged_lines: Vec<usize> = Vec::new();
+    let mut sites: Vec<usize> = p.view.find_seq("std::thread");
+    for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+        for pos in p.view.find_seq(pat) {
+            // skip when it is the tail of `std::thread::…` (already found)
+            let bounded = pos < 2 || view_char(p, pos - 1) != ':';
+            if bounded {
+                sites.push(pos);
+            }
+        }
+    }
+    sites.sort_unstable();
+    for pos in sites {
+        let line = p.view.line_of(pos);
+        if flagged_lines.contains(&line) {
+            continue;
+        }
+        flagged_lines.push(line);
+        out.push(p.finding(
+            RULE_THREAD,
+            pos,
+            "thread spawn/scope outside the ParallelPolicy substrate: worker-count \
+             bit-invariance is only proven for the fixed-schedule machinery"
+                .to_string(),
+        ));
+    }
+}
+
+fn view_char(p: &Prepared, pos: usize) -> char {
+    p.view.chars.get(pos).copied().unwrap_or(' ')
+}
+
+/// Rule E: in [`KERNEL_SCOPE`] modules, `.sum()` / `.fold(` sites outside
+/// tests must carry a `// lint: fold-order-pinned -- <why>` annotation on
+/// the same or the preceding line.
+pub fn rule_fold(p: &Prepared, waivers: &[Waiver], out: &mut Vec<Finding>) {
+    if !KERNEL_SCOPE.iter().any(|s| p.rel.starts_with(s)) {
+        return;
+    }
+    let mut sites: Vec<usize> = Vec::new();
+    for pat in [".sum()", ".sum::<", ".fold("] {
+        sites.extend(p.view.find_seq(pat));
+    }
+    sites.sort_unstable();
+    for pos in sites {
+        if in_spans(pos, &p.test_spans) {
+            continue;
+        }
+        let line = p.view.line_of(pos);
+        let annotated = waivers
+            .iter()
+            .any(|w| w.rule == RULE_FOLD && (w.line == line || w.line + 1 == line));
+        if !annotated {
+            out.push(p.finding(
+                RULE_FOLD,
+                pos,
+                "float fold without a `// lint: fold-order-pinned -- <why>` annotation: \
+                 reduction order must be pinned (or provably order-free) in kernel modules"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule F: in [`KERNEL_SCOPE`] modules, `debug_assert!` inside a `pub fn`
+/// is an error — public kernel entry points must validate shapes/strides
+/// in release builds too (PR 4's contract).
+pub fn rule_assert(p: &Prepared, out: &mut Vec<Finding>) {
+    if !KERNEL_SCOPE.iter().any(|s| p.rel.starts_with(s)) {
+        return;
+    }
+    let pub_bodies: Vec<(usize, usize)> = p
+        .fns
+        .iter()
+        .filter(|f| f.is_pub && !in_spans(f.pos, &p.test_spans))
+        .filter_map(|f| f.body)
+        .collect();
+    for pos in p.view.find_word("debug_assert")
+        .into_iter()
+        .chain(p.view.find_word("debug_assert_eq"))
+        .chain(p.view.find_word("debug_assert_ne"))
+    {
+        if in_spans(pos, &p.test_spans) || !in_spans(pos, &pub_bodies) {
+            continue;
+        }
+        out.push(p.finding(
+            RULE_ASSERT,
+            pos,
+            "`debug_assert!` in a pub kernel entry point: promote to `assert!` with a \
+             message — release builds must fail loudly on shape/stride violations"
+                .to_string(),
+        ));
+    }
+}

@@ -1,6 +1,8 @@
 //! The P-BPTT epoch loop: minibatch → `bptt_step` artifact → updated
 //! parameter/optimizer state, with wall-clock MSE logging (Fig 5).
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 use std::time::Instant;
 

@@ -14,6 +14,8 @@
 //! back to it when no `bptt_predict` executable is in the manifest (e.g.
 //! offline builds), and it doubles as the CPU oracle for the AOT graph.
 
+#![forbid(unsafe_code)]
+
 use crate::data::window::Windowed;
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::arch::block_ranges;

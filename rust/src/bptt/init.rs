@@ -1,6 +1,8 @@
 //! BPTT parameter initialization — shapes mirror
 //! `python/compile/bptt.py::param_shapes` (the artifact ABI).
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;

@@ -7,6 +7,8 @@
 //! parameter state, and the MSE-vs-wallclock log the paper plots in Fig 5.
 //! Matching the paper's setup: 10 epochs, batch 64, MSE loss, Adam.
 
+#![forbid(unsafe_code)]
+
 pub mod driver;
 pub mod forward;
 pub mod init;

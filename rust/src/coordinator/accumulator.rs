@@ -14,6 +14,8 @@
 //!   `lstsq_qr` path** at any worker count: the conformance anchor the
 //!   architecture-sweep e2e suite pins all six architectures to.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::linalg::{Matrix, TsqrAccumulator};

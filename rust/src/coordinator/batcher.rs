@@ -5,6 +5,8 @@
 //! and its padded rows masked out (the `elm_gram` graph multiplies rows by
 //! the mask before accumulating, so padding contributes exactly zero).
 
+#![forbid(unsafe_code)]
+
 use crate::data::window::Windowed;
 
 /// One fixed-shape block in artifact layout.

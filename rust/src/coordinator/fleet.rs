@@ -50,7 +50,9 @@
 //! train still sees the freshly trained model. Outcomes are returned in
 //! submission order.
 
-use std::collections::HashMap;
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
@@ -237,7 +239,7 @@ pub struct FleetTrainer {
     /// recently used entry (ties broken by smaller tenant id).
     pub cache_capacity: usize,
     queue: Vec<FleetRequest>,
-    cache: HashMap<String, CacheEntry>,
+    cache: BTreeMap<String, CacheEntry>,
     clock: u64,
 }
 
@@ -257,7 +259,7 @@ impl FleetTrainer {
             lambda: 1e-6,
             cache_capacity: 64,
             queue: Vec::new(),
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
             clock: 0,
         }
     }
@@ -996,10 +998,13 @@ impl FleetTrainer {
         entry.last_used = self.clock;
         if !self.cache.contains_key(&tenant) && self.cache.len() >= self.cache_capacity
         {
+            // BTreeMap iteration is key-ascending, and `min_by_key`
+            // keeps the first minimum, so ties on `last_used` evict the
+            // smallest tenant id — no per-candidate key clone needed
             let victim = self
                 .cache
                 .iter()
-                .min_by_key(|(k, e)| (e.last_used, (*k).clone()))
+                .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             if let Some(v) = victim {
                 self.cache.remove(&v);

@@ -1,6 +1,8 @@
 //! Experiment job descriptions: the (dataset × arch × M × BS × variant)
 //! grid the report emitters and benches iterate.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::data::spec::{registry, DatasetSpec};

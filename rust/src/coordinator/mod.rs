@@ -27,6 +27,7 @@
 //! f32 wire (`gram_widen`/`t_matvec_widen`, f64 accumulation — the
 //! artifact ABI's format), still bit-identical across worker counts.
 
+#![forbid(unsafe_code)]
 #![deny(missing_docs)]
 
 pub mod accumulator;

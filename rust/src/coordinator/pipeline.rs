@@ -17,6 +17,8 @@
 //! the residuals for pass 2 come from a parallel `elm_predict` sweep with
 //! pass-1 β (one refinement pass — DESIGN.md §2).
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc::channel;

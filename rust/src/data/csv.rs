@@ -3,6 +3,8 @@
 //! header name), `#`-comments and blank lines skipped, non-numeric cells
 //! rejected with row context.
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};

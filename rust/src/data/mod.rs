@@ -8,6 +8,8 @@
 //! experiments are unaffected by the substitution; the RMSE experiments
 //! (Table 4) get realistic learnable structure.
 
+#![forbid(unsafe_code)]
+
 pub mod csv;
 pub mod normalize;
 pub mod spec;

@@ -3,6 +3,8 @@
 //! report RMSE on the [0, 1] scale and note the paper's "large output =>
 //! large RMSE" observation in EXPERIMENTS.md.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, Copy)]

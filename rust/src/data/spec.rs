@@ -1,6 +1,8 @@
 //! The Table-3 dataset registry: published size, Q, split and output
 //! statistics for each of the ten benchmarks, plus generation.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Rng;
 
 use super::synth;

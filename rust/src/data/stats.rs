@@ -1,6 +1,8 @@
 //! Streaming summary statistics (Welford) used by the generators' tests and
 //! the Table 3 report.
 
+#![forbid(unsafe_code)]
+
 #[derive(Debug, Clone, Default)]
 pub struct Stats {
     n: usize,

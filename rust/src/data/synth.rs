@@ -4,6 +4,8 @@
 //! `fit_stats` then affinely rescales to the published mean/std and clamps
 //! to the published min/max. Determinism: same (n, seed) → same series.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Rng;
 
 /// Affine-rescale `xs` to the target mean/std, then clamp to [min, max].

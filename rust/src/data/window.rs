@@ -6,6 +6,8 @@
 //! forcing per DESIGN.md §2. S = 1 (univariate) throughout the benchmarks;
 //! the layout keeps the S axis so multivariate extensions slot in.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 /// A windowed dataset in the exact f32 layouts the artifacts consume.

@@ -1,5 +1,7 @@
 //! Scalar f32 activations; f32 to stay comparable with the XLA artifacts.
 
+#![forbid(unsafe_code)]
+
 #[inline(always)]
 pub fn tanh(x: f32) -> f32 {
     x.tanh()

@@ -1,5 +1,7 @@
 //! Elman recurrence (Eq 6): diagonal self-feedback over the last Q states.
 
+#![forbid(unsafe_code)]
+
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
 use crate::linalg::{Matrix, MatrixF32};

@@ -1,6 +1,8 @@
 //! Fully connected recurrence (Eq 9): every neuron sees every neuron's
 //! history — the most compute-heavy architecture (Table 2).
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use crate::elm::activation::tanh;

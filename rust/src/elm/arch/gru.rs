@@ -1,6 +1,8 @@
 //! GRU recurrence (Eq 11), diagonal. Gate order: [z, r, f] — matching
 //! `python/compile/kernels/gru.py`.
 
+#![forbid(unsafe_code)]
+
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::params::ElmParams;
 use crate::linalg::{Matrix, MatrixF32};

@@ -1,6 +1,8 @@
 //! Jordan recurrence (Eq 7): output feedback, teacher-forced during
 //! training — H(Q) is a direct function of the inputs (DESIGN.md §2).
 
+#![forbid(unsafe_code)]
+
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
 use crate::linalg::{Matrix, MatrixF32};
@@ -13,7 +15,7 @@ pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], out: &mut [f32]) {
     let w = p.buf("w");
     let b = p.buf("b");
     let alpha = p.buf("alpha");
-    debug_assert_eq!(yhist.len(), q);
+    assert_eq!(yhist.len(), q, "jordan h_row: yhist must hold Q lagged outputs");
     for j in 0..m {
         let mut acc = wx_at(w, x, s, q, m, j, q - 1) + b[j];
         for k in 0..q {
@@ -75,6 +77,16 @@ mod tests {
             let want = (w[j] * x[q - 1] + b[j]).tanh();
             assert!((out[j] - want).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "jordan h_row: yhist must hold Q lagged outputs")]
+    fn short_yhist_rejected_in_release() {
+        let (s, q, m) = (1, 5, 4);
+        let p = ElmParams::init(Arch::Jordan, s, q, m, 2);
+        let x = vec![0.1f32; q];
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &vec![0.0; q - 1], &mut out);
     }
 
     #[test]

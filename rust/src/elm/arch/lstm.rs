@@ -2,6 +2,8 @@
 //! f(t−1). Gate order on the stacked axis: [o, c~, λ (forget), in] —
 //! matching `python/compile/kernels/lstm.py`.
 
+#![forbid(unsafe_code)]
+
 use crate::elm::activation::{sigmoid, tanh};
 use crate::elm::params::ElmParams;
 use crate::linalg::{Matrix, MatrixF32};

@@ -22,6 +22,8 @@
 //! * `yhist` — target history, yhist[k-1] = y(t-k)   (jordan/narmax)
 //! * `ehist` — residual history, same alignment      (narmax)
 
+#![forbid(unsafe_code)]
+
 pub mod elman;
 pub mod fc;
 pub mod gru;
@@ -396,8 +398,8 @@ pub(crate) fn transposed_param(buf: &[f32], rows_in: usize, cols_in: usize) -> M
 
 /// Dispatch: one sample's H row (length M).
 pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(x.len(), p.s * p.q);
-    debug_assert_eq!(out.len(), p.m);
+    assert_eq!(x.len(), p.s * p.q, "h_row: x must hold S*Q lag values");
+    assert_eq!(out.len(), p.m, "h_row: out must hold M neuron outputs");
     match p.arch {
         Arch::Elman => elman::h_row(p, x, out),
         Arch::Jordan => jordan::h_row(p, x, yhist, out),
@@ -440,6 +442,22 @@ mod tests {
                 assert!(v.is_finite() && v.abs() <= 1.0 + 1e-5, "{arch:?}: {v}");
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "h_row: x must hold S*Q lag values")]
+    fn h_row_rejects_short_input_in_release() {
+        let p = ElmParams::init(Arch::Elman, 2, 6, 5, 11);
+        let mut out = vec![0f32; 5];
+        h_row(&p, &[0.0; 3], &[0.0; 6], &[0.0; 6], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "h_row: out must hold M neuron outputs")]
+    fn h_row_rejects_short_out_in_release() {
+        let p = ElmParams::init(Arch::Elman, 2, 6, 5, 11);
+        let mut out = vec![0f32; 4];
+        h_row(&p, &[0.0; 12], &[0.0; 6], &[0.0; 6], &mut out);
     }
 
     #[test]

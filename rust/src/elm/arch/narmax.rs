@@ -1,6 +1,8 @@
 //! NARMAX recurrence (Eq 8): exogenous output + error feedback (F = R = Q).
 //! The error history comes from the two-pass extended-least-squares trainer.
 
+#![forbid(unsafe_code)]
+
 use crate::elm::activation::tanh;
 use crate::elm::params::ElmParams;
 use crate::linalg::{Matrix, MatrixF32};
@@ -14,8 +16,8 @@ pub fn h_row(p: &ElmParams, x: &[f32], yhist: &[f32], ehist: &[f32], out: &mut [
     let b = p.buf("b");
     let wp = p.buf("wp");
     let wpp = p.buf("wpp");
-    debug_assert_eq!(yhist.len(), q);
-    debug_assert_eq!(ehist.len(), q);
+    assert_eq!(yhist.len(), q, "narmax h_row: yhist must hold Q lagged outputs");
+    assert_eq!(ehist.len(), q, "narmax h_row: ehist must hold Q lagged errors");
     for j in 0..m {
         let mut acc = wx_at(w, x, s, q, m, j, q - 1) + b[j];
         for l in 0..q {
@@ -85,6 +87,26 @@ mod tests {
         for j in 0..m {
             assert!((a[j] - b_[j]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "narmax h_row: yhist must hold Q lagged outputs")]
+    fn short_yhist_rejected_in_release() {
+        let (s, q, m) = (1, 4, 3);
+        let p = ElmParams::init(Arch::Narmax, s, q, m, 6);
+        let x = vec![0.1f32; q];
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &vec![0.0; q - 1], &vec![0.0; q], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "narmax h_row: ehist must hold Q lagged errors")]
+    fn short_ehist_rejected_in_release() {
+        let (s, q, m) = (1, 4, 3);
+        let p = ElmParams::init(Arch::Narmax, s, q, m, 6);
+        let x = vec![0.1f32; q];
+        let mut out = vec![0f32; m];
+        h_row(&p, &x, &vec![0.0; q], &vec![0.0; q - 1], &mut out);
     }
 
     #[test]

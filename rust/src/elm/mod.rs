@@ -17,6 +17,8 @@
 //! integration tests in `rust/tests/pipeline.rs` check rust-vs-artifact
 //! numerics on shared inputs.
 
+#![forbid(unsafe_code)]
+
 pub mod activation;
 pub mod arch;
 pub mod online;

@@ -26,6 +26,8 @@
 //! the ridge prior I/λ while keeping β ([`RlsOutcome::Reset`]), so the
 //! filter re-regularizes instead of propagating poison.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::linalg::{cholesky_solve, Matrix};

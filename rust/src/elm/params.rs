@@ -7,6 +7,8 @@
 //! terms (1/Q diagonal, 1/(QM) fully connected) so the Q-term recurrent sums
 //! stay O(1) and tanh does not saturate into rank collapse — DESIGN.md §2.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;

@@ -8,6 +8,8 @@
 //! solve stays a single linear system, preserving the non-iterative
 //! training property.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::data::window::Windowed;

@@ -11,6 +11,8 @@
 //! (observed − predicted) residuals of the preceding rows, zeros before the
 //! start of the test window.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::data::window::Windowed;

@@ -7,6 +7,8 @@
 //! Opt-PR-ELM divides the *tiled* reads (the W·X dot product and the
 //! recurrent sum) by TW² and adds the one-per-block b read (§5).
 
+#![forbid(unsafe_code)]
+
 use crate::elm::Arch;
 
 /// Per-thread operation counts over all Q timesteps.

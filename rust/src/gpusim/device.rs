@@ -1,6 +1,8 @@
 //! Device specifications: the paper's two GPUs (§6.1, §7.4) and its host
 //! CPU, plus the two calibration constants the absolute times hinge on.
 
+#![forbid(unsafe_code)]
+
 /// A CUDA-class device.
 #[derive(Debug, Clone)]
 pub struct DeviceSpec {

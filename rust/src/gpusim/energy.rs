@@ -3,6 +3,8 @@
 //! observation that any speedup above power-ratio (10×) is a net energy
 //! win for the GPU.
 
+#![forbid(unsafe_code)]
+
 use super::device::{DeviceSpec, HostSpec};
 use super::model::SimResult;
 

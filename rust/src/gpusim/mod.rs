@@ -21,6 +21,8 @@
 //! scales with n, M, Q, BS, and where Basic≈Opt — follows from the
 //! operation counts alone.
 
+#![forbid(unsafe_code)]
+
 pub mod counts;
 pub mod device;
 pub mod energy;

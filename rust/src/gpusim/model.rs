@@ -19,6 +19,8 @@
 //! small to fill the device — this is what makes small datasets show
 //! small speedups (paper: 24× on Japan population vs 522× on Temperature).
 
+#![forbid(unsafe_code)]
+
 use crate::elm::Arch;
 
 use super::counts::{flops, op_counts};

@@ -2,6 +2,8 @@
 //! equations `(HᵀH + λI) β = HᵀY` — the coordinator's streaming path and
 //! the rank-deficiency fallback of the QR solve.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::robust::error::SolveError;

@@ -52,6 +52,8 @@
 //! single-chunk path, so matrices with more than one chunk are pinned to
 //! the explicit AᵀA oracle by tolerance, not bits.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 use super::policy::{fixed_tiles, par_map, ParallelPolicy};
@@ -425,6 +427,7 @@ impl Matrix {
 
     /// Frobenius norm √(Σ xᵢⱼ²).
     pub fn frobenius(&self) -> f64 {
+        // lint: fold-order-pinned -- sequential left-to-right over the row-major buffer
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
@@ -435,6 +438,7 @@ impl Matrix {
             .iter()
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
+            // lint: fold-order-pinned -- max is order-free on the NaN-free abs values
             .fold(0.0, f64::max)
     }
 }
@@ -599,7 +603,8 @@ pub(crate) fn mirror_upper(g: &mut Matrix) {
 /// order every matvec-shaped path in the substrate shares).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    // lint: fold-order-pinned -- sequential left-to-right in ascending index order
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
@@ -621,6 +626,12 @@ mod tests {
         let mut rng = Rng::new(2);
         let a = Matrix::random(3, 5, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "dot: length mismatch")]
+    fn dot_rejects_length_mismatch_in_release() {
+        dot(&[1.0, 2.0], &[1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -35,6 +35,8 @@
 //!   accumulator stays f64. The property suite asserts this element-wise
 //!   bound on random inputs.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 use super::matrix::{mirror_upper, Matrix, PackedPanels, GRAM_ROW_CHUNK, MM_ROW_TILE};
@@ -313,6 +315,7 @@ impl MatrixF32 {
     pub fn matvec_widen(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, v.len());
         (0..self.rows)
+            // lint: fold-order-pinned -- per-row sequential left-to-right, matching Matrix::matvec
             .map(|i| self.row(i).iter().zip(v).map(|(&h, &x)| h as f64 * x).sum())
             .collect()
     }

@@ -32,6 +32,8 @@
 //! *can* change bits, the [`FmaMode`] contraction mode, is opt-in,
 //! envelope-documented, and still worker-count invariant.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, Result};
 
 use crate::robust::error::SolveError;

@@ -40,6 +40,8 @@
 //! panel-resident `apply_qt` likewise reassociates relative to the
 //! column-at-a-time loop (bounded by tests, not bitwise).
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use super::matrix::Matrix;

@@ -49,6 +49,8 @@
 //! one); `scan_affine` is the reference engine for plain lag-1 linear
 //! recurrences and the conformance anchor for the scan discipline itself.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, Result};
 
 use super::matrix::Matrix;

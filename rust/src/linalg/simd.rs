@@ -71,6 +71,8 @@
 //! stay unfused (they run the scalar expression), and the scalar fallback
 //! ignores Relaxed entirely — both inside the documented envelope.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::sync::OnceLock;
 
 /// Fused-multiply-add contraction mode of the SIMD GEMM/Gram microkernels.
@@ -170,7 +172,7 @@ fn use_fma(fma: FmaMode) -> bool {
 /// Each `out[j]` sees exactly one add per call, so element-wise
 /// accumulation order is untouched by the unroll.
 pub fn axpy_f64_scalar(a: f64, x: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(x.len(), out.len());
+    assert_eq!(x.len(), out.len(), "axpy_f64_scalar: length mismatch");
     let n = out.len();
     let mut j = 0;
     while j + 4 <= n {
@@ -189,7 +191,7 @@ pub fn axpy_f64_scalar(a: f64, x: &[f64], out: &mut [f64]) {
 /// `out[j] -= a · x[j]`, scalar — the reflector-application update of the
 /// QR panels (`c −= s·v`).
 pub fn axpy_sub_f64_scalar(a: f64, x: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(x.len(), out.len());
+    assert_eq!(x.len(), out.len(), "axpy_sub_f64_scalar: length mismatch");
     let n = out.len();
     let mut j = 0;
     while j + 4 <= n {
@@ -216,7 +218,7 @@ pub fn axpy_widen_scalar(a: f32, x: &[f32], out: &mut [f64]) {
 /// `out[j] += a · (x[j] as f64)` with an f64 coefficient and an f32 vector
 /// (the `t_matvec_widen` fold: `out[j] += vᵢ · row[j]`).
 pub fn axpy_wx_scalar(a: f64, x: &[f32], out: &mut [f64]) {
-    debug_assert_eq!(x.len(), out.len());
+    assert_eq!(x.len(), out.len(), "axpy_wx_scalar: length mismatch");
     let n = out.len();
     let mut j = 0;
     while j + 4 <= n {
@@ -373,8 +375,11 @@ mod avx2 {
     /// mode's lane operation).
     #[inline]
     #[target_feature(enable = "avx2")]
+    // register-only intrinsics are safe-callable inside target_feature fns
+    // on newer toolchains, making the explicit block redundant there
+    #[allow(unused_unsafe)]
     pub(super) unsafe fn madd_exact(a: __m256d, b: __m256d, acc: __m256d) -> __m256d {
-        _mm256_add_pd(acc, _mm256_mul_pd(a, b))
+        unsafe { _mm256_add_pd(acc, _mm256_mul_pd(a, b)) }
     }
 
     /// acc ← fma(a, b, acc), one rounding (the Relaxed mode's lane
@@ -382,8 +387,9 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    #[allow(unused_unsafe)]
     pub(super) unsafe fn madd_fused(a: __m256d, b: __m256d, acc: __m256d) -> __m256d {
-        _mm256_fmadd_pd(a, b, acc)
+        unsafe { _mm256_fmadd_pd(a, b, acc) }
     }
 
     macro_rules! axpy_like_body {
@@ -408,30 +414,32 @@ mod avx2 {
 
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn axpy_f64(a: f64, x: &[f64], out: &mut [f64]) {
-        axpy_like_body!(a, x, out, _mm256_add_pd, +)
+        unsafe { axpy_like_body!(a, x, out, _mm256_add_pd, +) }
     }
 
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn axpy_sub_f64(a: f64, x: &[f64], out: &mut [f64]) {
-        axpy_like_body!(a, x, out, _mm256_sub_pd, -)
+        unsafe { axpy_like_body!(a, x, out, _mm256_sub_pd, -) }
     }
 
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn axpy_wx(a: f64, x: &[f32], out: &mut [f64]) {
-        let n = out.len();
-        let av = _mm256_set1_pd(a);
-        let xp = x.as_ptr();
-        let op = out.as_mut_ptr();
-        let mut j = 0usize;
-        while j + 4 <= n {
-            let xv = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(j)));
-            let ov = _mm256_loadu_pd(op.add(j));
-            _mm256_storeu_pd(op.add(j), _mm256_add_pd(ov, _mm256_mul_pd(av, xv)));
-            j += 4;
-        }
-        while j < n {
-            *op.add(j) += a * *xp.add(j) as f64;
-            j += 1;
+        unsafe {
+            let n = out.len();
+            let av = _mm256_set1_pd(a);
+            let xp = x.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let xv = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(j)));
+                let ov = _mm256_loadu_pd(op.add(j));
+                _mm256_storeu_pd(op.add(j), _mm256_add_pd(ov, _mm256_mul_pd(av, xv)));
+                j += 4;
+            }
+            while j < n {
+                *op.add(j) += a * *xp.add(j) as f64;
+                j += 1;
+            }
         }
     }
 
@@ -522,7 +530,7 @@ mod avx2 {
         out: &mut [f64],
         ldo: usize,
     ) {
-        gemm_tile_f64_body!(arows, panel, jb, out, ldo, madd_exact)
+        unsafe { gemm_tile_f64_body!(arows, panel, jb, out, ldo, madd_exact) }
     }
 
     #[target_feature(enable = "avx2")]
@@ -534,7 +542,7 @@ mod avx2 {
         out: &mut [f64],
         ldo: usize,
     ) {
-        gemm_tile_f64_body!(arows, panel, jb, out, ldo, madd_fused)
+        unsafe { gemm_tile_f64_body!(arows, panel, jb, out, ldo, madd_fused) }
     }
 
     // widen twin: f32 A entries broadcast as f64, f32 B lanes converted
@@ -622,7 +630,7 @@ mod avx2 {
         out: &mut [f64],
         ldo: usize,
     ) {
-        gemm_tile_widen_body!(arows, panel, jb, out, ldo, madd_exact)
+        unsafe { gemm_tile_widen_body!(arows, panel, jb, out, ldo, madd_exact) }
     }
 
     #[target_feature(enable = "avx2")]
@@ -634,7 +642,7 @@ mod avx2 {
         out: &mut [f64],
         ldo: usize,
     ) {
-        gemm_tile_widen_body!(arows, panel, jb, out, ldo, madd_fused)
+        unsafe { gemm_tile_widen_body!(arows, panel, jb, out, ldo, madd_fused) }
     }
 
     macro_rules! gemm_row_f64_body {
@@ -677,13 +685,13 @@ mod avx2 {
 
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gemm_row_f64(arow: &[f64], panel: &[f64], jb: usize, out: &mut [f64]) {
-        gemm_row_f64_body!(arow, panel, jb, out, madd_exact)
+        unsafe { gemm_row_f64_body!(arow, panel, jb, out, madd_exact) }
     }
 
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn gemm_row_f64_fma(arow: &[f64], panel: &[f64], jb: usize, out: &mut [f64]) {
-        gemm_row_f64_body!(arow, panel, jb, out, madd_fused)
+        unsafe { gemm_row_f64_body!(arow, panel, jb, out, madd_fused) }
     }
 
     macro_rules! gemm_row_widen_body {
@@ -726,7 +734,7 @@ mod avx2 {
 
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gemm_row_widen(arow: &[f32], panel: &[f32], jb: usize, out: &mut [f64]) {
-        gemm_row_widen_body!(arow, panel, jb, out, madd_exact)
+        unsafe { gemm_row_widen_body!(arow, panel, jb, out, madd_exact) }
     }
 
     #[target_feature(enable = "avx2")]
@@ -737,7 +745,7 @@ mod avx2 {
         jb: usize,
         out: &mut [f64],
     ) {
-        gemm_row_widen_body!(arow, panel, jb, out, madd_fused)
+        unsafe { gemm_row_widen_body!(arow, panel, jb, out, madd_fused) }
     }
 
     // rank-4 Gram row update: per output element the term sum keeps the
@@ -774,13 +782,13 @@ mod avx2 {
 
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gram4_f64(x: [f64; 4], rs: [&[f64]; 4], grow: &mut [f64]) {
-        gram4_f64_body!(x, rs, grow, madd_exact)
+        unsafe { gram4_f64_body!(x, rs, grow, madd_exact) }
     }
 
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn gram4_f64_fma(x: [f64; 4], rs: [&[f64]; 4], grow: &mut [f64]) {
-        gram4_f64_body!(x, rs, grow, madd_fused)
+        unsafe { gram4_f64_body!(x, rs, grow, madd_fused) }
     }
 
     macro_rules! gram4_widen_body {
@@ -816,13 +824,13 @@ mod avx2 {
 
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gram4_widen(x: [f32; 4], rs: [&[f32]; 4], grow: &mut [f64]) {
-        gram4_widen_body!(x, rs, grow, madd_exact)
+        unsafe { gram4_widen_body!(x, rs, grow, madd_exact) }
     }
 
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn gram4_widen_fma(x: [f32; 4], rs: [&[f32]; 4], grow: &mut [f64]) {
-        gram4_widen_body!(x, rs, grow, madd_fused)
+        unsafe { gram4_widen_body!(x, rs, grow, madd_fused) }
     }
 }
 
@@ -1095,5 +1103,29 @@ mod tests {
         let panel = vec![0.0f64; 5]; // kb*jb would be 2*3 = 6
         let mut out = vec![0.0f64; 3];
         gemm_row_f64(&a, &panel, 3, &mut out, FmaMode::Exact);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy_f64_scalar: length mismatch")]
+    fn axpy_scalar_rejects_length_mismatch_in_release() {
+        let x = [1.0f64, 2.0];
+        let mut out = vec![0.0f64; 3];
+        axpy_f64_scalar(2.0, &x, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy_sub_f64_scalar: length mismatch")]
+    fn axpy_sub_scalar_rejects_length_mismatch_in_release() {
+        let x = [1.0f64, 2.0];
+        let mut out = vec![0.0f64; 3];
+        axpy_sub_f64_scalar(2.0, &x, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy_wx_scalar: length mismatch")]
+    fn axpy_wx_scalar_rejects_length_mismatch_in_release() {
+        let x = [1.0f32, 2.0];
+        let mut out = vec![0.0f64; 3];
+        axpy_wx_scalar(2.0, &x, &mut out);
     }
 }

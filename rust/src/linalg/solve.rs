@@ -20,6 +20,8 @@
 //! absolute `1e-300` bail, and non-finite pivots are reported as poisoned
 //! inputs rather than silently propagating NaN into β.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::robust::error::SolveError;
@@ -49,6 +51,7 @@ fn check_pivot(d: f64, row: usize, max_diag: f64) -> Result<()> {
 }
 
 fn max_abs_diag(m: &Matrix) -> f64 {
+    // lint: fold-order-pinned -- max is order-free on the NaN-free abs values
     (0..m.rows).map(|i| m[(i, i)].abs()).fold(0.0, f64::max)
 }
 
@@ -260,6 +263,7 @@ pub fn lstsq_ridge_from_parts(g: &Matrix, c: &[f64], lambda: f64) -> Result<Vec<
     }
     let mut greg = g.clone();
     // scale-invariant regularization: λ relative to mean diagonal
+    // lint: fold-order-pinned -- sequential ascending-diagonal sum, one order on every path
     let mean_diag = (0..n).map(|i| g[(i, i)]).sum::<f64>() / n as f64;
     let reg = lambda * mean_diag.max(1e-12);
     for i in 0..n {

@@ -42,6 +42,8 @@
 //! equations — the reason the paper uses QR rather than the explicit
 //! pseudo-inverse.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::robust::error::SolveError;

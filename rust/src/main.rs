@@ -8,6 +8,8 @@
 //! repro datasets             # list the Table-3 benchmark registry
 //! ```
 
+#![forbid(unsafe_code)]
+
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};

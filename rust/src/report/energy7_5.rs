@@ -2,6 +2,8 @@
 //! 3.71 s / 1113 J on the GPU vs 32 min / 57.6 kJ on the CPU) regenerated
 //! through gpusim, plus the break-even analysis for every dataset.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::data::spec::registry;

@@ -4,6 +4,8 @@
 //! paper discusses (§7.1: Basic ≈ Opt when Q ≤ BS, Opt wins when Q > BS)
 //! falls out of the Table-2 read counts.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::data::spec::registry;

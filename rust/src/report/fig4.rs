@@ -4,6 +4,8 @@
 //! trainer (`CpuElmTrainer`, threaded via one [`ParallelPolicy`]), so it
 //! needs no PJRT artifacts and works on offline builds.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::coordinator::CpuElmTrainer;

@@ -2,6 +2,8 @@
 //! Opt-PR-ELM single-shot point (Japan population, LSTM, M = 10).
 //! Fully measured on this machine.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::bptt::{BpttArch, BpttTrainer};

@@ -3,6 +3,8 @@
 //! Measured from the pipeline's phase clocks, alongside the gpusim model's
 //! decomposition at the paper's scale.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::coordinator::PrElmTrainer;

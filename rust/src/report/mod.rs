@@ -8,6 +8,8 @@
 //! [`crate::util::table::Table`]s; `run_report` writes them under
 //! `results/` as markdown + CSV.
 
+#![forbid(unsafe_code)]
+
 pub mod energy7_5;
 pub mod fig3;
 pub mod prep;

@@ -1,6 +1,8 @@
 //! Shared dataset preparation for the measured experiments: generate →
 //! fit min-max on the train prefix → window → sequential split.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::data::spec::DatasetSpec;

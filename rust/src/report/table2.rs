@@ -1,6 +1,8 @@
 //! Table 2: per-thread memory operations and FLOPs per architecture —
 //! the paper's symbolic formulas plus evaluations at the benchmark shapes.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::elm::{Arch, ALL_ARCHS};

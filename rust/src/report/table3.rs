@@ -1,6 +1,8 @@
 //! Table 3: benchmark descriptions — published row + the statistics our
 //! generators actually produce at the requested scale.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::data::spec::registry;

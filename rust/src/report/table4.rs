@@ -2,6 +2,8 @@
 //! datasets and six architectures — the §7.3 robustness experiment,
 //! *measured* (both trainers run here; no simulation involved).
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::coordinator::PrElmTrainer;

@@ -6,6 +6,8 @@
 //! measured column needs no PJRT artifacts, so the emitter runs on
 //! offline builds.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::coordinator::CpuElmTrainer;

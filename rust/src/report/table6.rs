@@ -3,6 +3,8 @@
 //! executables (the paper ran both on the same Tesla K20m; we run both on
 //! the same PJRT CPU client, preserving the comparison's symmetry).
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::bptt::{BpttArch, BpttTrainer};

@@ -19,6 +19,8 @@
 //!   that said *how many* blocks folded but never *which one* poisoned
 //!   the fold.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// Typed failure taxonomy for the β-solve pipeline (see the module docs).

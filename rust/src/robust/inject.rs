@@ -38,6 +38,8 @@
 //! isolation's sequential retry then succeeds, which is exactly the
 //! recovery path the suite needs to demonstrate.
 
+#![forbid(unsafe_code)]
+
 /// Pipeline site a fault plan targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Site {

@@ -14,6 +14,8 @@
 //! solve that used to succeed produces the identical β bits; the ladder
 //! only adds behavior where the old code errored out.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::linalg::solve::lstsq_ridge_from_parts;

@@ -25,6 +25,7 @@
 //! only *adds* behavior where the old code returned NaN, bailed with a
 //! string, or panicked.
 
+#![forbid(unsafe_code)]
 #![deny(missing_docs)]
 
 pub mod error;

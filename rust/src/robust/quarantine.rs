@@ -13,6 +13,8 @@
 //! `Windowed` value — same block boundaries, same bits — as before this
 //! module existed.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::data::window::Windowed;

@@ -8,6 +8,8 @@
 //! [`TrainBreakdown`](crate::coordinator::TrainBreakdown) without touching
 //! that struct's derive set.
 
+#![forbid(unsafe_code)]
+
 /// Which β-solve pipeline produced (or attempted) the solve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SolveStrategyKind {

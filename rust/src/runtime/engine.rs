@@ -5,6 +5,8 @@
 //! against the manifest ABI before touching PJRT, so shape bugs surface as
 //! readable errors rather than XLA aborts.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::path::Path;
 

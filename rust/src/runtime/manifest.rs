@@ -1,5 +1,7 @@
 //! The artifact ABI: names, kinds, shapes — parsed from manifest.json.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

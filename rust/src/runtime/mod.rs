@@ -12,6 +12,8 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
+#![forbid(unsafe_code)]
+
 pub mod engine;
 pub mod manifest;
 pub mod pool;

@@ -5,10 +5,13 @@
 //! round-robin over channels. One worker is plenty for correctness paths;
 //! benches can raise `workers` for inter-block parallelism.
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
+// lint: allow(thread-confinement) -- handle type only; spawning is waived below
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
@@ -43,6 +46,7 @@ impl EnginePool {
             let dir = artifacts_dir.to_path_buf();
             // engine construction happens on the worker thread (!Send);
             // surface construction errors through the first request instead
+            // lint: allow(thread-confinement) -- PJRT artifact pool: long-lived engine owners off the deterministic solve path, not a compute fan-out
             let handle = std::thread::Builder::new()
                 .name(format!("pjrt-engine-{wid}"))
                 .spawn(move || {

@@ -12,6 +12,8 @@
 //! [`super::pool::EnginePool`]; artifact-dependent tests skip themselves
 //! when no manifest is present, so the shim never silently fakes results.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// Error type mirroring `xla::Error` closely enough for `anyhow` interop.

@@ -11,6 +11,8 @@
 //! });
 //! ```
 
+#![forbid(unsafe_code)]
+
 pub mod prop {
     use crate::util::rng::Rng;
 

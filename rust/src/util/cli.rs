@@ -3,6 +3,8 @@
 //! Replaces clap in the offline build. Unknown options are an error so
 //! typos fail loudly.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};

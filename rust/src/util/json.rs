@@ -4,6 +4,8 @@
 //! arrays, strings (with escapes), numbers, booleans, null. No serde in the
 //! offline build, so this is a first-class substrate with its own tests.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -3,6 +3,8 @@
 //! These replace crates that are unavailable in the offline build
 //! (rand, serde_json, clap, criterion) — see the note in `Cargo.toml`.
 
+#![forbid(unsafe_code)]
+
 pub mod cli;
 pub mod json;
 pub mod rng;

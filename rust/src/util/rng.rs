@@ -3,6 +3,8 @@
 //! tests — reproducibility across runs is a §7.3 (robustness) requirement,
 //! so everything that draws randomness takes an explicit seed.
 
+#![forbid(unsafe_code)]
+
 /// SplitMix64: tiny, fast, passes BigCrush when used as a stream.
 #[derive(Clone, Debug)]
 pub struct Rng {

@@ -1,6 +1,8 @@
 //! Markdown table formatting for the report emitters (Tables 2-6, Figs 3-6
 //! as series tables). Columns are auto-width; numbers are right-aligned.
 
+#![forbid(unsafe_code)]
+
 #[derive(Debug, Clone)]
 pub struct Table {
     pub title: String,

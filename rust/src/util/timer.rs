@@ -4,6 +4,8 @@
 //! iteration cap is reached, and reports mean / p50 / p95 like a criterion
 //! summary line. Used by every `rust/benches/*.rs` (harness = false).
 
+#![forbid(unsafe_code)]
+
 use std::time::{Duration, Instant};
 
 /// Measure one closure invocation.

@@ -318,6 +318,69 @@ fn grouped_predict_matches_solo_predict() {
     }
 }
 
+/// LRU cache under capacity pressure: identical submission sequences at
+/// 1 and 4 workers leave the identical cached-tenant set, bitwise-equal
+/// survivor βs, and outcomes in submission order — eviction order never
+/// depends on worker count or map iteration order (the cache is a
+/// `BTreeMap`, so ties on the LRU clock evict the smallest tenant id).
+#[test]
+fn lru_eviction_is_submission_deterministic_across_workers() {
+    let tenants: Vec<String> = (0..6).map(|i| format!("t{i}")).collect();
+    type RunOut = (Vec<String>, Vec<String>, Vec<(String, Vec<f64>)>);
+    let run = |workers: usize| -> RunOut {
+        let mut fl = fleet(policy(workers, Precision::F64), SolveStrategy::Gram, 64);
+        fl.cache_capacity = 3;
+        // first wave: four trains into a 3-slot cache (one eviction)
+        for (i, t) in tenants.iter().take(4).enumerate() {
+            fl.submit(train_req(
+                t,
+                Arch::Elman,
+                8,
+                30 + i as u64,
+                windows(120 + 10 * i, 2, i as u64),
+            ))
+            .unwrap();
+        }
+        let mut order: Vec<String> =
+            fl.drain().into_iter().map(|(t, _)| t).collect();
+        // touch t1 so it outlives the second wave's evictions
+        fl.submit(FleetRequest::Predict {
+            tenant: tenants[1].clone(),
+            data: windows(40, 2, 9),
+        })
+        .unwrap();
+        fl.drain();
+        // second wave: two more trains force two further evictions
+        for (i, t) in tenants.iter().enumerate().skip(4) {
+            fl.submit(train_req(
+                t,
+                Arch::Elman,
+                8,
+                30 + i as u64,
+                windows(120 + 10 * i, 2, i as u64),
+            ))
+            .unwrap();
+        }
+        order.extend(fl.drain().into_iter().map(|(t, _)| t));
+        assert_eq!(fl.cached(), 3, "cache must sit exactly at capacity");
+        let survivors: Vec<String> =
+            tenants.iter().filter(|t| fl.has_model(t)).cloned().collect();
+        let betas: Vec<(String, Vec<f64>)> =
+            survivors.iter().map(|t| (t.clone(), beta_of(&fl, t))).collect();
+        (order, survivors, betas)
+    };
+    let (o1, s1, b1) = run(1);
+    let (o4, s4, b4) = run(4);
+    assert_eq!(o1, o4, "outcome order must not depend on worker count");
+    assert_eq!(
+        s1,
+        vec!["t1".to_string(), "t4".into(), "t5".into()],
+        "survivors must be exactly the three most recently used tenants"
+    );
+    assert_eq!(s1, s4, "cached-tenant set must not depend on worker count");
+    assert_eq!(b1, b4, "survivor βs must be bitwise identical across workers");
+}
+
 /// Degenerate sweep: empty drain, duplicate tenant id, an underdetermined
 /// tenant failing typed inside a healthy group (whose group-mate stays
 /// bitwise solo), and cache misses after eviction.

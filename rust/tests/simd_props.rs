@@ -366,6 +366,124 @@ fn fma_relaxed_within_envelope_and_worker_invariant() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// miri_ subset: the undefined-behaviour audit tier. CI runs exactly these
+// under `cargo miri test --test simd_props miri_` (interpreted, so shapes
+// stay tiny — one 8-lane boundary crossing each). They re-walk every
+// raw-pointer path in `linalg::simd` plus the PackedPanels matmul route;
+// the full-size bit-identity sweeps above stay out of the interpreter.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn miri_axpy_family_pointer_paths() {
+    for n in [0usize, 1, 7, 9] {
+        let x = randv(n, 600 + n as u64);
+        let x32 = randv32(n, 700 + n as u64);
+        let base = randv(n, 800 + n as u64);
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::axpy_f64(-0.7, &x, &mut d);
+        simd::axpy_f64_scalar(-0.7, &x, &mut s);
+        assert_bits_eq(&d, &s, &format!("miri axpy_f64 n={n}"));
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::axpy_sub_f64(-0.7, &x, &mut d);
+        simd::axpy_sub_f64_scalar(-0.7, &x, &mut s);
+        assert_bits_eq(&d, &s, &format!("miri axpy_sub_f64 n={n}"));
+
+        let (mut d, mut s) = (base.clone(), base.clone());
+        simd::axpy_widen(-0.7, &x32, &mut d);
+        simd::axpy_widen_scalar(-0.7, &x32, &mut s);
+        assert_bits_eq(&d, &s, &format!("miri axpy_widen n={n}"));
+
+        let (mut d, mut s) = (base.clone(), base);
+        simd::axpy_wx(-0.7, &x32, &mut d);
+        simd::axpy_wx_scalar(-0.7, &x32, &mut s);
+        assert_bits_eq(&d, &s, &format!("miri axpy_wx n={n}"));
+    }
+}
+
+#[test]
+fn miri_gemm_tile_and_row_pointer_paths() {
+    // jb = 9 crosses one 8-lane boundary; kb = 3 keeps the panel walk
+    // short; ldo > jb exercises the strided output-slab pointers
+    let (jb, kb) = (9usize, 3usize);
+    let ldo = jb + 3;
+    let a: Vec<Vec<f64>> = (0..4).map(|r| randv(kb, 60 + r as u64)).collect();
+    let a32: Vec<Vec<f32>> = (0..4).map(|r| randv32(kb, 80 + r as u64)).collect();
+    let panel = randv(kb * jb, 61);
+    let panel32 = randv32(kb * jb, 81);
+    let base = randv(3 * ldo + jb, 62);
+
+    let (mut d, mut s) = (base.clone(), base.clone());
+    simd::gemm_tile_f64([&a[0], &a[1], &a[2], &a[3]], &panel, jb, &mut d, ldo, FmaMode::Exact);
+    simd::gemm_tile_f64_scalar([&a[0], &a[1], &a[2], &a[3]], &panel, jb, &mut s, ldo);
+    assert_bits_eq(&d, &s, "miri gemm_tile_f64");
+
+    let (mut d, mut s) = (base.clone(), base.clone());
+    simd::gemm_tile_widen(
+        [&a32[0], &a32[1], &a32[2], &a32[3]],
+        &panel32,
+        jb,
+        &mut d,
+        ldo,
+        FmaMode::Exact,
+    );
+    simd::gemm_tile_widen_scalar([&a32[0], &a32[1], &a32[2], &a32[3]], &panel32, jb, &mut s, ldo);
+    assert_bits_eq(&d, &s, "miri gemm_tile_widen");
+
+    let (mut d, mut s) = (base[..jb].to_vec(), base[..jb].to_vec());
+    simd::gemm_row_f64(&a[0], &panel, jb, &mut d, FmaMode::Exact);
+    simd::gemm_row_f64_scalar(&a[0], &panel, jb, &mut s);
+    assert_bits_eq(&d, &s, "miri gemm_row_f64");
+
+    let (mut d, mut s) = (base[..jb].to_vec(), base[..jb].to_vec());
+    simd::gemm_row_widen(&a32[0], &panel32, jb, &mut d, FmaMode::Exact);
+    simd::gemm_row_widen_scalar(&a32[0], &panel32, jb, &mut s);
+    assert_bits_eq(&d, &s, "miri gemm_row_widen");
+}
+
+#[test]
+fn miri_gram4_pointer_paths() {
+    let n = 9usize; // one 8-lane pass + a 1-lane tail
+    let rows: Vec<Vec<f64>> = (0..4).map(|r| randv(n, 90 + r as u64)).collect();
+    let rows32: Vec<Vec<f32>> = (0..4).map(|r| randv32(n, 95 + r as u64)).collect();
+    let x = [1.5, -0.25, 0.125, 3.0];
+    let x32 = [1.5f32, -0.25, 0.125, 3.0];
+    let base = randv(n, 99);
+
+    let (mut d, mut s) = (base.clone(), base.clone());
+    simd::gram4_f64(x, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut d, FmaMode::Exact);
+    simd::gram4_f64_scalar(x, [&rows[0], &rows[1], &rows[2], &rows[3]], &mut s);
+    assert_bits_eq(&d, &s, "miri gram4_f64");
+
+    let (mut d, mut s) = (base.clone(), base);
+    simd::gram4_widen(
+        x32,
+        [&rows32[0], &rows32[1], &rows32[2], &rows32[3]],
+        &mut d,
+        FmaMode::Exact,
+    );
+    simd::gram4_widen_scalar(x32, [&rows32[0], &rows32[1], &rows32[2], &rows32[3]], &mut s);
+    assert_bits_eq(&d, &s, "miri gram4_widen");
+}
+
+#[test]
+fn miri_packed_panels_matmul() {
+    // small enough to interpret, shaped to hit the packed-panel route:
+    // one 4-row quad + 1 tail row, a j remainder, and a short k walk
+    let a = random_matrix(5, 6, 120);
+    let b = random_matrix(6, 9, 121);
+    assert_eq!(a.matmul(&b), matmul_naive(&a, &b), "miri packed matmul");
+    let a32 = random_f32(5, 6, 122);
+    let b32 = random_f32(6, 9, 123);
+    assert_eq!(
+        a32.matmul_widen(&b32, ParallelPolicy::sequential()),
+        a32.to_f64().matmul(&b32.to_f64()),
+        "miri packed widen matmul"
+    );
+}
+
 #[test]
 fn fma_relaxed_gram_worker_invariant_and_bounded() {
     let a = random_matrix(1060, 9, 50); // > 2 GRAM_ROW_CHUNKs
