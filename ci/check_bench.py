@@ -32,6 +32,13 @@ carry `requests_per_s` (completed fleet requests per second) instead of
 must carry one of the two throughput fields; a record with neither, or
 with a negative value in either, is malformed and fails the gate.
 
+Since ISSUE 10 the fleet bench also emits `service_*` ops (the jobs
+routed through the deadline-aware `FleetService` front end). A
+`service_*` record must carry all three scheduling counters — `shed`,
+`retries`, `deadline_miss` — and every counter, on any record, must be
+non-negative; a missing counter on a service op or a negative counter
+anywhere is a malformed BENCH file and fails the gate.
+
 Since ISSUE 6 the meta record may carry `solve_report` — the
 degradation-ladder rung a healthy probe solve came back on. The value
 must be one of "primary"/"ridge"/"failed" (an unknown rung is a
@@ -84,6 +91,10 @@ def meta_isa(recs: list) -> str:
 
 
 KNOWN_RUNGS = ("primary", "ridge", "failed")
+
+# scheduling counters every `service_*` record must carry (and that must
+# be non-negative wherever they appear)
+SERVICE_COUNTERS = ("shed", "retries", "deadline_miss")
 
 
 def check_solve_report(recs: list) -> None:
@@ -143,6 +154,13 @@ def run(bench_path: str, baseline_path: str) -> None:
         # informational but must be well-formed when present
         if "gbps" in r and float(r["gbps"]) < 0:
             die(f"record {i} has negative gbps: {r}")
+        # service scheduling counters: mandatory on service_* ops,
+        # non-negative everywhere
+        for counter in SERVICE_COUNTERS:
+            if r["op"].startswith("service_") and counter not in r:
+                die(f"service record {i} missing counter {counter!r}: {r}")
+            if counter in r and float(r[counter]) < 0:
+                die(f"record {i} has negative {counter}: {r}")
 
     check_solve_report(recs)
 

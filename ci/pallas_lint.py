@@ -41,7 +41,12 @@ RULES = [RULE_UNSAFE, RULE_TWIN, RULE_HASH, RULE_THREAD, RULE_FOLD, RULE_ASSERT,
 
 UNSAFE_FILE = "linalg/simd.rs"
 FORBID_EXEMPT = ["lib.rs", "linalg/mod.rs"]
-THREAD_ALLOWED = ["linalg/policy.rs", "linalg/tsqr.rs", "coordinator/pipeline.rs"]
+THREAD_ALLOWED = [
+    "linalg/policy.rs",
+    "linalg/tsqr.rs",
+    "coordinator/pipeline.rs",
+    "coordinator/service.rs",
+]
 HASH_SCOPE = ["coordinator/", "linalg/", "elm/"]
 KERNEL_SCOPE = ["linalg/", "elm/arch/"]
 TWIN_TEST_FILE = "tests/simd_props.rs"

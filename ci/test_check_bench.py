@@ -8,7 +8,9 @@ retired gflops smuggle and a bare meta both rejected), and the ISSUE-5
 capped at parity on a scalar/missing meta so non-AVX2 runners are not
 misread as regressions), and the ISSUE-8 fleet-bench records
 (`requests_per_s` accepted in place of `gflops`, neither-field and
-negative-value records rejected, the grouped-vs-solo parity floor).
+negative-value records rejected, the grouped-vs-solo parity floor), and
+the ISSUE-10 service counters (`shed`/`retries`/`deadline_miss`
+mandatory on `service_*` ops, non-negative everywhere).
 """
 
 import json
@@ -153,6 +155,56 @@ def test_negative_requests_per_s_rejected():
 def test_negative_gflops_rejected():
     bad = rec("matmul", gflops=-1.0)
     expect_fail([META, bad, rec("matmul_threaded", speedup=2.0)])
+
+
+# --- ISSUE-10 service ops: mandatory scheduling counters -----------------
+
+SERVICE_BASELINE = {
+    "regression_margin": 0.25,
+    "required_ops": ["meta", "service_async_train", "service_overload_shed"],
+    "min_speedups": {},
+}
+
+
+def service_rec(op, rps=120.0, **counters):
+    r = fleet_rec(op, rps=rps)
+    r.update({"shed": 0.0, "retries": 0.0, "deadline_miss": 0.0})
+    r.update(counters)
+    return r
+
+
+def test_service_ops_with_counters_pass():
+    gate(
+        [META, service_rec("service_async_train"),
+         service_rec("service_overload_shed", shed=15.0, deadline_miss=1.0)],
+        SERVICE_BASELINE,
+    )
+
+
+def test_service_op_missing_counter_rejected():
+    incomplete = service_rec("service_async_train")
+    del incomplete["retries"]
+    expect_fail(
+        [META, incomplete, service_rec("service_overload_shed")],
+        SERVICE_BASELINE,
+    )
+
+
+def test_negative_counter_rejected_on_any_record():
+    # on a service op …
+    expect_fail(
+        [META, service_rec("service_async_train", shed=-1.0),
+         service_rec("service_overload_shed")],
+        SERVICE_BASELINE,
+    )
+    # … and even on a non-service record that happens to carry one
+    stray = dict(rec("matmul"), retries=-2.0)
+    expect_fail([META, stray, rec("matmul_threaded", speedup=2.0)])
+
+
+def test_non_service_record_need_not_carry_counters():
+    # plain fleet/linalg records stay valid without any counter fields
+    gate([META, rec("matmul"), rec("matmul_threaded", speedup=2.0)])
 
 
 SIMD_BASELINE = {

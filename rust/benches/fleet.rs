@@ -12,7 +12,10 @@
 //! Emits `BENCH_fleet.json` records carrying `requests_per_s` (the
 //! fleet's unit of throughput — these ops have no meaningful GFLOP/s
 //! column) and the grouped-vs-solo `speedup_vs_reference`, gated by
-//! `ci/check_bench.py` against `benches/fleet_baseline.json`. Override
+//! `ci/check_bench.py` against `benches/fleet_baseline.json`. The
+//! `service_*` ops route the same jobs through the deadline-aware
+//! `FleetService` front end and additionally carry the `shed` /
+//! `retries` / `deadline_miss` counters the gate validates. Override
 //! the output path with `BENCH_FLEET_OUT=…`; set `BENCH_FLEET_QUICK=1`
 //! for the CI smoke mode (fewer tenants and rows, every op key still
 //! emitted).
@@ -21,7 +24,9 @@ use std::time::Duration;
 
 use opt_pr_elm::coordinator::accumulator::SolveStrategy;
 use opt_pr_elm::coordinator::pipeline::CpuElmTrainer;
-use opt_pr_elm::coordinator::{FleetOutcome, FleetRequest, FleetTrainer};
+use opt_pr_elm::coordinator::{
+    FleetOutcome, FleetRequest, FleetService, FleetTrainer, ServiceConfig, ServiceStats,
+};
 use opt_pr_elm::data::window::Windowed;
 use opt_pr_elm::elm::Arch;
 use opt_pr_elm::linalg::ParallelPolicy;
@@ -39,6 +44,21 @@ struct Rec {
     speedup_vs_reference: Option<f64>,
     /// bench machine's worker count — set on the `meta` record only
     workers: Option<f64>,
+    /// requests shed by the overload ladder — set on `service_*` ops only
+    shed: Option<f64>,
+    /// retry re-queues of degraded solves — set on `service_*` ops only
+    retries: Option<f64>,
+    /// typed deadline misses — set on `service_*` ops only
+    deadline_miss: Option<f64>,
+}
+
+/// Attach the service counters to the record just pushed (`service_*`
+/// ops must carry all three — `ci/check_bench.py` enforces it).
+fn mark_service_counters(records: &mut [Rec], stats: &ServiceStats) {
+    let last = records.last_mut().expect("a record was just pushed");
+    last.shed = Some(stats.shed as f64);
+    last.retries = Some(stats.retries as f64);
+    last.deadline_miss = Some(stats.deadline_miss as f64);
 }
 
 fn push(
@@ -58,6 +78,9 @@ fn push(
         requests_per_s: Some(rps),
         speedup_vs_reference: None,
         workers: None,
+        shed: None,
+        retries: None,
+        deadline_miss: None,
     });
     secs * 1e9
 }
@@ -106,6 +129,9 @@ fn main() {
         requests_per_s: None,
         speedup_vs_reference: None,
         workers: Some(policy.workers as f64),
+        shed: None,
+        retries: None,
+        deadline_miss: None,
     });
 
     let datasets: Vec<Windowed> = (0..tenants)
@@ -195,6 +221,92 @@ fn main() {
     mark_speedup_at(&mut records, 2, t_solo / t_grouped);
     println!("  -> grouped predict speedup vs solo loop: {:.2}x", t_solo / t_grouped);
 
+    // async service train: the identical jobs through the deadline-aware
+    // FleetService front end (unbounded, no deadlines) — the service
+    // contract says this is the same numeric work as one sync drain, so
+    // the delta over fleet_train_grouped is pure scheduling overhead
+    let run_async = |stats_out: &mut ServiceStats| {
+        let mut svc = FleetService::new(FleetTrainer::with_policy(policy));
+        for (i, d) in datasets.iter().enumerate() {
+            svc.submit(
+                FleetRequest::Train {
+                    tenant: format!("t{i}"),
+                    arch: Arch::Elman,
+                    m,
+                    seed: 7 + i as u64,
+                    data: d.clone(),
+                },
+                None,
+                0,
+            )
+            .unwrap();
+        }
+        let done = svc.run_to_idle();
+        assert!(done.iter().all(|c| c.outcome.is_ok()));
+        *stats_out = svc.stats();
+        done.len()
+    };
+    let r = bench(&format!("service_async_train {shape}"), 1, budget, 30, || {
+        let mut stats = ServiceStats::default();
+        run_async(&mut stats)
+    });
+    let _ = push(&mut records, &r, "service_async_train", &shape, tenants as f64);
+    let mut stats = ServiceStats::default();
+    run_async(&mut stats);
+    mark_service_counters(&mut records, &stats);
+    println!(
+        "  -> async service train: completed={} retries={} shed={}",
+        stats.completed, stats.retries, stats.shed
+    );
+
+    // overload shedding: a bounded queue offered more trains than it
+    // admits plus one doomed low-priority predict — exercises the ladder
+    // (RejectTrains at 90% occupancy) and the typed deadline path
+    let cap = 10usize;
+    let offered = tenants.max(12);
+    let run_overload = |stats_out: &mut ServiceStats| {
+        let mut svc = FleetService::with_config(
+            FleetTrainer::with_policy(policy),
+            ServiceConfig { capacity: Some(cap), ..ServiceConfig::default() },
+        );
+        for i in 0..offered {
+            let d = &datasets[i % datasets.len()];
+            let _ = svc.submit(
+                FleetRequest::Train {
+                    tenant: format!("t{i}"),
+                    arch: Arch::Elman,
+                    m,
+                    seed: 7 + i as u64,
+                    data: d.clone(),
+                },
+                None,
+                0,
+            );
+        }
+        let _ = svc.submit(
+            FleetRequest::Predict { tenant: "t0".to_string(), data: datasets[0].clone() },
+            Some(0),
+            0,
+        );
+        let done = svc.run_to_idle();
+        *stats_out = svc.stats();
+        done.len()
+    };
+    let r = bench(&format!("service_overload_shed {shape}"), 1, budget, 30, || {
+        let mut stats = ServiceStats::default();
+        run_overload(&mut stats)
+    });
+    push(&mut records, &r, "service_overload_shed", &shape, (offered + 1) as f64);
+    let mut stats = ServiceStats::default();
+    run_overload(&mut stats);
+    mark_service_counters(&mut records, &stats);
+    println!(
+        "  -> overload ladder: shed={} deadline_miss={} of {} offered",
+        stats.shed,
+        stats.deadline_miss,
+        offered + 1
+    );
+
     let out_path = std::env::var("BENCH_FLEET_OUT")
         .unwrap_or_else(|_| "BENCH_fleet.json".to_string());
     let json = Json::Arr(
@@ -214,6 +326,15 @@ fn main() {
                 }
                 if let Some(x) = r.speedup_vs_reference {
                     pairs.push(("speedup_vs_reference", num(x)));
+                }
+                if let Some(x) = r.shed {
+                    pairs.push(("shed", num(x)));
+                }
+                if let Some(x) = r.retries {
+                    pairs.push(("retries", num(x)));
+                }
+                if let Some(x) = r.deadline_miss {
+                    pairs.push(("deadline_miss", num(x)));
                 }
                 obj(pairs)
             })

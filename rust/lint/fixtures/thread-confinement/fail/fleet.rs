@@ -1,0 +1,14 @@
+//@ path: src/coordinator/fleet.rs
+//! Fixture: the fleet trainer itself is NOT on the thread allowlist —
+//! only the service wrapper's audited drain thread is. A scope here must
+//! still be flagged.
+#![forbid(unsafe_code)]
+
+/// Drains a batch on an unaudited ad-hoc scope.
+pub fn rogue_drain(batch: Vec<u64>) -> Vec<u64> {
+    std::thread::scope(|s| {
+        s.spawn(move || batch.into_iter().map(|x| x + 1).collect())
+            .join()
+            .expect("rogue")
+    })
+}

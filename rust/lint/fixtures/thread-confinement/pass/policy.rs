@@ -1,6 +1,6 @@
 //@ path: src/linalg/policy.rs
 //! Fixture: thread scoping inside the ParallelPolicy substrate — one of
-//! the three files where the fixed-schedule machinery lives.
+//! the four audited files where scheduled fan-out may live.
 #![forbid(unsafe_code)]
 
 /// Runs `f` on each chunk from a scoped worker (fixture stand-in for the

@@ -1,0 +1,14 @@
+//@ path: src/coordinator/service.rs
+//! Fixture: the fleet service's scoped drain thread — the fourth audited
+//! scheduler file admitted to the thread-confinement allowlist.
+#![forbid(unsafe_code)]
+
+/// Drains a batch on one scoped worker thread (fixture stand-in for the
+/// real `FleetService::cycle` dispatch).
+pub fn drain_on_worker(batch: Vec<u64>) -> Vec<u64> {
+    std::thread::scope(|s| {
+        s.spawn(move || batch.into_iter().map(|x| x + 1).collect())
+            .join()
+            .expect("service drain thread")
+    })
+}

@@ -47,9 +47,15 @@ pub const UNSAFE_FILE: &str = "linalg/simd.rs";
 /// would cascade onto it (forbid cannot be relaxed down the module tree).
 pub const FORBID_EXEMPT: [&str; 2] = ["lib.rs", "linalg/mod.rs"];
 /// Files allowed to spawn/scope threads: the `ParallelPolicy` machinery,
-/// the TSQR tree, and the coordinator pipeline.
-pub const THREAD_ALLOWED: [&str; 3] =
-    ["linalg/policy.rs", "linalg/tsqr.rs", "coordinator/pipeline.rs"];
+/// the TSQR tree, the coordinator pipeline, and the fleet service (whose
+/// scoped drain thread is its only threading site — the audit is the
+/// async≡sync bit-identity suite in `tests/service_props.rs`).
+pub const THREAD_ALLOWED: [&str; 4] = [
+    "linalg/policy.rs",
+    "linalg/tsqr.rs",
+    "coordinator/pipeline.rs",
+    "coordinator/service.rs",
+];
 /// Modules whose results feed deterministic β solves: hash-order scope.
 pub const HASH_SCOPE: [&str; 3] = ["coordinator/", "linalg/", "elm/"];
 /// Kernel modules: fold-order and assert-discipline scope.

@@ -46,9 +46,11 @@
 //!
 //! Drain semantics: [`FleetTrainer::drain`] processes every queued
 //! `Train` first (grouped), then every `Update` in submission order, then
-//! every `Predict` — so an update or predict queued before its tenant's
-//! train still sees the freshly trained model. Outcomes are returned in
-//! submission order.
+//! every `Predict` — so an update or predict queued behind its tenant's
+//! queued train still sees the freshly trained model. Malformed requests
+//! never get that far: [`FleetTrainer::submit`] screens duplicates and
+//! unknown tenants with typed errors at submission time (see its docs).
+//! Outcomes are returned in submission order.
 
 #![forbid(unsafe_code)]
 
@@ -67,6 +69,7 @@ use crate::elm::trainer::shift_history;
 use crate::elm::{Arch, ElmParams, OnlineElm, RlsOutcome, SrElmModel, TrainOptions};
 use crate::linalg::policy::{par_map, par_map_isolated};
 use crate::linalg::{cholesky_solve, Matrix, ParallelPolicy};
+use crate::robust::journal::{RlsSnapshot, TenantSnapshot};
 use crate::robust::{
     as_solve_error, inject, quarantine, ridge_ladder_solve, DegradationRung,
     SolveError, SolveReport, SolveStrategyKind,
@@ -172,6 +175,10 @@ struct CacheEntry {
     gram: Matrix,
     /// Rows folded so far (training rows, then + update rows).
     rows: usize,
+    /// The random-parameter seed the model was trained with — journaled
+    /// so [`FleetTrainer::restore`] can regenerate the (deterministic)
+    /// `ElmParams` instead of serializing the weight buffers.
+    seed: u64,
     /// Lazily seeded RLS filter; `None` until the first `Update`.
     rls: Option<OnlineElm>,
     /// Logical-clock timestamp of the last train/update/predict touch.
@@ -274,16 +281,45 @@ impl FleetTrainer {
         }
     }
 
-    /// Queue a request. A `Train` for a tenant that already has a queued
-    /// `Train` is rejected with [`SolveError::DuplicateTenant`] — the
-    /// fleet cannot decide which model the id should map to.
+    /// Queue a request, with the malformed-request screening done **at
+    /// submit time** so bad requests fail fast instead of riding to the
+    /// drain:
+    ///
+    /// * A `Train` for a tenant that already has a queued `Train` is
+    ///   rejected with [`SolveError::DuplicateTenant`] — the fleet cannot
+    ///   decide which model the id should map to.
+    /// * An `Update`/`Predict` for a tenant with neither a cached model
+    ///   nor a queued `Train` is rejected with
+    ///   [`SolveError::UnknownTenant`] — it could never resolve (a queued
+    ///   `Train` is enough, because the drain processes trains first).
+    ///
+    /// The drain-time [`SolveError::UnknownTenant`] outcome still exists
+    /// for the cases submit cannot foresee: the backing `Train` failing
+    /// in the same drain, or the cached model being evicted between
+    /// submit and drain.
     pub fn submit(&mut self, req: FleetRequest) -> Result<()> {
-        if let FleetRequest::Train { tenant, .. } = &req {
-            let dup = self.queue.iter().any(|q| {
-                matches!(q, FleetRequest::Train { tenant: t, .. } if t == tenant)
-            });
-            if dup {
-                return Err(SolveError::DuplicateTenant { tenant: tenant.clone() }.into());
+        match &req {
+            FleetRequest::Train { tenant, .. } => {
+                let dup = self.queue.iter().any(|q| {
+                    matches!(q, FleetRequest::Train { tenant: t, .. } if t == tenant)
+                });
+                if dup {
+                    return Err(
+                        SolveError::DuplicateTenant { tenant: tenant.clone() }.into()
+                    );
+                }
+            }
+            FleetRequest::Update { tenant, .. }
+            | FleetRequest::Predict { tenant, .. } => {
+                let resolvable = self.cache.contains_key(tenant)
+                    || self.queue.iter().any(|q| {
+                        matches!(q, FleetRequest::Train { tenant: t, .. } if t == tenant)
+                    });
+                if !resolvable {
+                    return Err(
+                        SolveError::UnknownTenant { tenant: tenant.clone() }.into()
+                    );
+                }
             }
         }
         self.queue.push(req);
@@ -309,6 +345,83 @@ impl FleetTrainer {
     /// this accessor).
     pub fn model(&self, tenant: &str) -> Option<&SrElmModel> {
         self.cache.get(tenant).map(|e| &e.model)
+    }
+
+    /// Snapshot a cached tenant's full warm state for the crash-safe
+    /// journal ([`crate::robust::journal`]): the `(arch, s, q, m, seed)`
+    /// tuple that regenerates the random parameters deterministically,
+    /// the exact β bits, the pre-ridge Gram accumulator, the solve
+    /// report, and — when the tenant has absorbed `Update`s — the RLS
+    /// covariance and λ. `None` when the tenant has no cached model.
+    pub fn snapshot(&self, tenant: &str) -> Option<TenantSnapshot> {
+        let e = self.cache.get(tenant)?;
+        Some(TenantSnapshot {
+            arch: e.model.params.arch,
+            s: e.model.params.s,
+            q: e.model.params.q,
+            m: e.model.params.m,
+            seed: e.seed,
+            beta: e.model.beta.clone(),
+            gram: e.gram.clone(),
+            rows: e.rows,
+            report: e.report,
+            rls: e.rls.as_ref().map(|r| RlsSnapshot {
+                p: r.covariance().clone(),
+                lambda: r.lambda(),
+            }),
+        })
+    }
+
+    /// Rebuild a tenant's cache entry from a journal snapshot — the
+    /// recovery half of [`FleetTrainer::snapshot`]. The random parameters
+    /// are regenerated by [`ElmParams::init`] (deterministic in the
+    /// seed), β/Gram/P move as exact bits, and a snapshotted RLS filter
+    /// resumes through [`OnlineElm::from_state`] — so the restored entry
+    /// is bit-identical to the pre-crash one: the same β, and the same
+    /// trajectory under any further updates or predicts. LRU metadata
+    /// (`last_used`) restarts fresh; eviction order is scheduling state,
+    /// not model state, and is not journaled.
+    pub fn restore(&mut self, tenant: &str, snap: &TenantSnapshot) -> Result<()> {
+        if snap.beta.len() != snap.m
+            || snap.gram.rows != snap.m
+            || snap.gram.cols != snap.m
+        {
+            return Err(SolveError::ShapeMismatch {
+                context: "fleet restore",
+                detail: format!(
+                    "snapshot for {tenant:?} has beta {} / gram {}x{} vs M {}",
+                    snap.beta.len(),
+                    snap.gram.rows,
+                    snap.gram.cols,
+                    snap.m
+                ),
+            }
+            .into());
+        }
+        let params = ElmParams::init(snap.arch, snap.s, snap.q, snap.m, snap.seed);
+        let rls = match &snap.rls {
+            None => None,
+            Some(r) => Some(OnlineElm::from_state(
+                snap.m,
+                r.lambda,
+                r.p.clone(),
+                snap.beta.clone(),
+                snap.rows,
+            )?),
+        };
+        self.cache_insert(
+            tenant.to_string(),
+            CacheEntry {
+                model: SrElmModel { params, beta: snap.beta.clone() },
+                report: snap.report,
+                gram: snap.gram.clone(),
+                rows: snap.rows,
+                seed: snap.seed,
+                rls,
+                last_used: 0, // stamped by cache_insert
+            },
+        );
+        Ok(())
     }
 
     /// Process the whole queue: trains (grouped by [`GroupKey`]), then
@@ -367,6 +480,7 @@ impl FleetTrainer {
                                 report: t.report,
                                 gram: t.gram,
                                 rows: t.rows,
+                                seed: job.seed,
                                 rls: None,
                                 last_used: 0, // stamped by cache_insert
                             },
@@ -1175,31 +1289,125 @@ mod tests {
     }
 
     #[test]
-    fn unknown_tenant_is_typed() {
+    fn unknown_tenant_is_rejected_at_submit_time() {
         let mut fleet = FleetTrainer::new(1);
+        for req in [
+            FleetRequest::Predict { tenant: "ghost".into(), data: toy_data(40, 3, 0.0) },
+            FleetRequest::Update { tenant: "ghost".into(), data: toy_data(40, 3, 0.0) },
+        ] {
+            let err = fleet.submit(req).unwrap_err();
+            assert_eq!(
+                as_solve_error(&err).map(SolveError::class),
+                Some("unknown-tenant")
+            );
+        }
+        assert_eq!(fleet.queued(), 0, "rejected requests never reach the queue");
+        assert!(fleet.drain().is_empty());
+    }
+
+    #[test]
+    fn queued_train_makes_update_and_predict_submittable() {
+        let mut fleet = FleetTrainer::new(2);
+        fleet.submit(train_req("a", 6, 1, 0.0)).unwrap();
+        // the model is not cached yet, but a queued Train resolves first
         fleet
-            .submit(FleetRequest::Predict {
-                tenant: "ghost".into(),
-                data: toy_data(40, 3, 0.0),
-            })
+            .submit(FleetRequest::Update { tenant: "a".into(), data: toy_data(40, 3, 0.5) })
             .unwrap();
         fleet
-            .submit(FleetRequest::Update {
-                tenant: "ghost".into(),
-                data: toy_data(40, 3, 0.0),
-            })
+            .submit(FleetRequest::Predict { tenant: "a".into(), data: toy_data(40, 3, 0.0) })
             .unwrap();
         let out = fleet.drain();
-        assert_eq!(out.len(), 2);
-        for (_, o) in out {
-            match o {
-                FleetOutcome::Failed { error, report } => {
-                    assert_eq!(error.class(), "unknown-tenant");
-                    assert_eq!(report.rung, DegradationRung::Failed);
-                }
-                other => panic!("expected Failed, got {other:?}"),
+        assert!(matches!(out[0].1, FleetOutcome::Trained { .. }), "{:?}", out[0]);
+        assert!(matches!(out[1].1, FleetOutcome::Updated { .. }), "{:?}", out[1]);
+        assert!(matches!(out[2].1, FleetOutcome::Predicted { .. }), "{:?}", out[2]);
+        // and once cached, submit accepts without any queued train
+        fleet
+            .submit(FleetRequest::Predict { tenant: "a".into(), data: toy_data(40, 3, 0.0) })
+            .unwrap();
+    }
+
+    #[test]
+    fn drain_time_unknown_tenant_survives_for_failed_backing_train() {
+        // submit screening admits a Predict on the strength of a queued
+        // Train; if that train then fails, the predict must still come
+        // back as a typed drain-time unknown-tenant failure
+        let mut fleet = FleetTrainer::new(1);
+        let poisoned =
+            Windowed::from_series(&vec![f64::NAN; 43], 3).expect("windowed");
+        fleet
+            .submit(FleetRequest::Train {
+                tenant: "p".into(),
+                arch: Arch::Elman,
+                m: 6,
+                seed: 1,
+                data: poisoned,
+            })
+            .unwrap();
+        fleet
+            .submit(FleetRequest::Predict { tenant: "p".into(), data: toy_data(40, 3, 0.0) })
+            .unwrap();
+        let out = fleet.drain();
+        assert!(
+            matches!(&out[0].1, FleetOutcome::Failed { .. }),
+            "all-NaN training data must fail: {:?}",
+            out[0]
+        );
+        match &out[1].1 {
+            FleetOutcome::Failed { error, report } => {
+                assert_eq!(error.class(), "unknown-tenant");
+                assert_eq!(report.rung, DegradationRung::Failed);
             }
+            other => panic!("expected Failed, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_bit_identically() {
+        let mut fleet = FleetTrainer::new(2);
+        fleet.submit(train_req("a", 6, 1, 0.0)).unwrap();
+        fleet.drain();
+        fleet
+            .submit(FleetRequest::Update { tenant: "a".into(), data: toy_data(40, 3, 0.7) })
+            .unwrap();
+        fleet.drain();
+        let snap = fleet.snapshot("a").expect("cached tenant snapshots");
+        assert!(snap.rls.is_some(), "updated tenant snapshots its RLS state");
+
+        let mut recovered = FleetTrainer::new(2);
+        recovered.restore("a", &snap).unwrap();
+        let bits = |b: &[f64]| b.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&recovered.model("a").unwrap().beta),
+            bits(&fleet.model("a").unwrap().beta),
+            "restored β must be bit-identical"
+        );
+        // identical further updates walk identical trajectories
+        for f in [&mut fleet, &mut recovered] {
+            f.submit(FleetRequest::Update { tenant: "a".into(), data: toy_data(30, 3, 1.3) })
+                .unwrap();
+            f.drain();
+        }
+        assert_eq!(
+            bits(&recovered.model("a").unwrap().beta),
+            bits(&fleet.model("a").unwrap().beta),
+            "post-restore update trajectories must stay bit-identical"
+        );
+        assert!(fleet.snapshot("nobody").is_none());
+    }
+
+    #[test]
+    fn restore_rejects_shape_poisoned_snapshots() {
+        let mut fleet = FleetTrainer::new(1);
+        fleet.submit(train_req("a", 6, 1, 0.0)).unwrap();
+        fleet.drain();
+        let mut snap = fleet.snapshot("a").unwrap();
+        snap.beta.pop();
+        let err = fleet.restore("b", &snap).unwrap_err();
+        assert_eq!(
+            as_solve_error(&err).map(SolveError::class),
+            Some("shape-mismatch")
+        );
+        assert!(!fleet.has_model("b"));
     }
 
     #[test]

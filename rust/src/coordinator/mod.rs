@@ -19,6 +19,11 @@
 //!   independent models grouped by shape and trained as block-diagonal
 //!   batched streams, with per-tenant β bit-identical to solo training,
 //!   an LRU model cache, and RLS warm updates for hot tenants.
+//! * [`service`] — `FleetService`, the deadline-aware async front end
+//!   wrapped around `FleetTrainer`: bounded admission queue with typed
+//!   backpressure, logical-tick deadlines and retry/backoff, an overload
+//!   ladder (shed → downgrade → reject), and the crash-safe tenant
+//!   journal ([`crate::robust::journal`]).
 //!
 //! `CpuElmTrainer` honors the [`crate::linalg::Precision`] knob on its
 //! [`crate::linalg::ParallelPolicy`]: under `MixedF32` every
@@ -35,9 +40,13 @@ pub mod batcher;
 pub mod fleet;
 pub mod job;
 pub mod pipeline;
+pub mod service;
 
 pub use accumulator::{GramAccumulator, SolveStrategy};
 pub use batcher::{Block, RowBlockBatcher};
 pub use fleet::{FleetOutcome, FleetRequest, FleetTrainer, GroupKey};
+pub use service::{
+    Completion, FleetService, OverloadRung, ServiceConfig, ServiceError, ServiceStats,
+};
 pub use job::TrainJob;
 pub use pipeline::{CpuElmTrainer, PrElmTrainer, TrainBreakdown};

@@ -1,0 +1,1023 @@
+//! `FleetService` — the deadline-aware asynchronous front end of the
+//! multi-tenant fleet trainer.
+//!
+//! [`FleetTrainer`] is a synchronous, unbounded, all-or-nothing batch: a
+//! flooded queue grows without limit, a slow drain blocks every caller,
+//! and a crash loses every trained model. This module wraps it in the
+//! service layer a real deployment needs, without giving up one bit of
+//! the determinism contract:
+//!
+//! * **Bounded admission with typed backpressure.** [`ServiceConfig::capacity`]
+//!   caps the queue; a submit over the cap fails with
+//!   [`ServiceError::QueueFull`] instead of growing silently, and the
+//!   fleet trainer's submit-time screening (duplicate / unknown tenant)
+//!   is mirrored at admission so malformed requests never occupy a slot.
+//! * **Logical-tick deadlines.** Time is the [`LogicalClock`] — a `u64`
+//!   tick advanced once per [`FleetService::cycle`], never the wall
+//!   clock. A request carries an optional absolute deadline tick; it is
+//!   checked at admission *and* again when the request is about to join a
+//!   drain (group formation). An expired request fails with a typed
+//!   [`ServiceError::DeadlineExceeded`] — it is never silently trained.
+//! * **Deterministic retry with exponential backoff.** A `Train` whose
+//!   [`SolveReport`] lands on a ridge rung, or that fails with a worker
+//!   panic, is re-queued up to [`ServiceConfig::max_retries`] times. The
+//!   backoff delay is `backoff_base · 2^(attempt-1)` ticks plus a jitter
+//!   drawn from an [`Rng`] keyed by `(seed, admission index, attempt)` —
+//!   a pure function of the submission sequence, so the whole retry
+//!   schedule is bit-reproducible and worker-count invariant.
+//! * **Overload ladder.** Mirroring the solve-degradation ladder at the
+//!   scheduling level, queue occupancy drives a monotone rung
+//!   ([`OverloadRung`]): healthy → shed lowest-priority predicts →
+//!   additionally downgrade oversized TSQR groups to the cheaper Gram
+//!   strategy → additionally reject new trains at admission. Every shed
+//!   is a typed [`ServiceError`]; nothing is dropped silently.
+//! * **Crash-safe journal.** Every completed train/update appends the
+//!   tenant's full warm state to a [`TenantJournal`];
+//!   [`FleetService::warm_from`] replays a (possibly torn) journal into
+//!   the cache, restoring bit-identical models and reporting a torn tail
+//!   as a typed [`ServiceError::JournalTorn`].
+//!
+//! **Conformance anchor:** with no capacity bound, no deadlines, and no
+//! faults armed, a submission sequence followed by [`FleetService::run_to_idle`]
+//! forwards exactly that sequence, in order, into one inner drain — so
+//! every tenant β is bit-identical to a synchronous
+//! [`FleetTrainer::drain`] of the same submissions, at any worker count
+//! (pinned by `tests/service_props.rs`).
+//!
+//! The inner drain runs on a scoped worker thread (this file is one of
+//! the four audited scheduler modules of the thread-confinement lint
+//! rule); the service's own bookkeeping is single-threaded and uses only
+//! order-preserving containers.
+
+#![forbid(unsafe_code)]
+
+use std::fmt;
+
+use crate::coordinator::accumulator::SolveStrategy;
+use crate::coordinator::fleet::{FleetOutcome, FleetRequest, FleetTrainer, GroupKey};
+use crate::linalg::policy::LogicalClock;
+use crate::robust::journal::{TenantJournal, TenantSnapshot};
+use crate::robust::{inject, DegradationRung, SolveError};
+use crate::util::rng::Rng;
+
+/// Typed failure surface of the service layer. Solve-level failures keep
+/// their [`SolveError`] taxonomy (inside [`FleetOutcome::Failed`]); this
+/// enum covers the scheduling decisions stacked on top.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The bounded admission queue is at capacity.
+    QueueFull {
+        /// Configured capacity.
+        capacity: usize,
+        /// Requests queued when the submit arrived.
+        queued: usize,
+    },
+    /// The request was refused by a scheduling policy (overload ladder,
+    /// admission screening); the reason says which.
+    Rejected {
+        /// Human-readable policy reason.
+        reason: String,
+    },
+    /// The request's deadline tick passed before it could be scheduled.
+    DeadlineExceeded {
+        /// The absolute deadline tick the request carried.
+        deadline: u64,
+        /// The logical tick at which the expiry was detected.
+        now: u64,
+    },
+    /// A transiently-degraded train was retried `attempts` times and
+    /// never produced a healthy solve.
+    RetriesExhausted {
+        /// Retry attempts consumed (= configured `max_retries`).
+        attempts: u32,
+    },
+    /// Journal recovery found a torn/corrupt record (crash mid-append);
+    /// everything before it was recovered.
+    JournalTorn {
+        /// Byte offset of the torn record in the journal.
+        offset: usize,
+        /// Why the record was rejected.
+        reason: String,
+    },
+}
+
+impl ServiceError {
+    /// Stable kebab-case class name (the service-level mirror of
+    /// [`SolveError::class`]).
+    pub fn class(&self) -> &'static str {
+        match self {
+            ServiceError::QueueFull { .. } => "queue-full",
+            ServiceError::Rejected { .. } => "rejected",
+            ServiceError::DeadlineExceeded { .. } => "deadline-exceeded",
+            ServiceError::RetriesExhausted { .. } => "retries-exhausted",
+            ServiceError::JournalTorn { .. } => "journal-torn",
+        }
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::QueueFull { capacity, queued } => write!(
+                f,
+                "admission queue full: {queued} queued at capacity {capacity}"
+            ),
+            ServiceError::Rejected { reason } => write!(f, "rejected: {reason}"),
+            ServiceError::DeadlineExceeded { deadline, now } => write!(
+                f,
+                "deadline tick {deadline} exceeded at logical tick {now}"
+            ),
+            ServiceError::RetriesExhausted { attempts } => {
+                write!(f, "degraded solve retried {attempts} time(s) without recovery")
+            }
+            ServiceError::JournalTorn { offset, reason } => {
+                write!(f, "journal torn at byte {offset}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Scheduling-level degradation rung, driven by queue occupancy (see the
+/// module docs). Rungs are cumulative: each adds its measure on top of
+/// the previous one's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum OverloadRung {
+    /// Below the shed watermark: every request class is served.
+    #[default]
+    Healthy,
+    /// At/above 1/2 capacity: predicts below the priority floor are shed.
+    ShedPredicts,
+    /// At/above 3/4 capacity: additionally, oversized TSQR train groups
+    /// are downgraded to the Gram strategy for this drain.
+    DowngradeGroups,
+    /// At/above 9/10 capacity: additionally, new trains are rejected at
+    /// admission.
+    RejectTrains,
+}
+
+impl OverloadRung {
+    /// Stable lowercase name for logs and bench metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadRung::Healthy => "healthy",
+            OverloadRung::ShedPredicts => "shed-predicts",
+            OverloadRung::DowngradeGroups => "downgrade-groups",
+            OverloadRung::RejectTrains => "reject-trains",
+        }
+    }
+}
+
+/// Service knobs. The defaults make the service behave like the bare
+/// trainer (unbounded, no retries beyond two, no shedding) — every knob
+/// is opt-in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Admission queue capacity; `None` is unbounded (and keeps the
+    /// overload ladder at [`OverloadRung::Healthy`] forever).
+    pub capacity: Option<usize>,
+    /// How many times a transiently-degraded train is re-queued before
+    /// its degraded outcome is accepted (ridge rung) or reported as
+    /// [`ServiceError::RetriesExhausted`] (persistent worker panic).
+    pub max_retries: u32,
+    /// Base backoff in logical ticks; attempt `k` waits
+    /// `backoff_base · 2^(k-1)` ticks plus seeded jitter in
+    /// `[0, backoff_base)`.
+    pub backoff_base: u64,
+    /// Seed keying the backoff jitter (per admission index and attempt).
+    pub seed: u64,
+    /// Predicts with `priority <` this floor are shed at
+    /// [`OverloadRung::ShedPredicts`] and above.
+    pub shed_priority_floor: u32,
+    /// Train groups larger than this are downgraded from TSQR to Gram at
+    /// [`OverloadRung::DowngradeGroups`] and above.
+    pub downgrade_group_size: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            capacity: None,
+            max_retries: 2,
+            backoff_base: 4,
+            seed: 0,
+            shed_priority_floor: 1,
+            downgrade_group_size: 4,
+        }
+    }
+}
+
+/// Monotone counters the service keeps (exported by `benches/fleet.rs`
+/// as the `shed`/`retries`/`deadline_miss` bench fields).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServiceStats {
+    /// Requests that reached a terminal outcome (ok or typed failure).
+    pub completed: u64,
+    /// Requests shed by the overload ladder (predict sheds + admission
+    /// rejections under [`OverloadRung::RejectTrains`]).
+    pub shed: u64,
+    /// Re-queues of transiently-degraded or panicked requests.
+    pub retries: u64,
+    /// Requests failed with [`ServiceError::DeadlineExceeded`].
+    pub deadline_miss: u64,
+    /// Trains that ran under a TSQR→Gram group downgrade.
+    pub downgraded: u64,
+}
+
+/// One finished request: its admission id, tenant, and either the inner
+/// trainer outcome or the typed service-level failure.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// The id [`FleetService::submit`] returned for this request.
+    pub id: u64,
+    /// Tenant the request addressed.
+    pub tenant: String,
+    /// The terminal outcome.
+    pub outcome: std::result::Result<FleetOutcome, ServiceError>,
+}
+
+/// One admitted, not-yet-finished request.
+struct Pending {
+    id: u64,
+    /// Admission index — the `Site::ServiceQueue` fault key and the
+    /// backoff-jitter key. Assigned at submit, never reused.
+    admission: usize,
+    req: FleetRequest,
+    /// Absolute deadline tick, if any.
+    deadline: Option<u64>,
+    /// Larger is more important; predicts below the configured floor are
+    /// shed under overload.
+    priority: u32,
+    /// Retry attempts consumed so far.
+    attempts: u32,
+    /// Earliest logical tick this request may join a drain.
+    eligible: u64,
+}
+
+/// The async front end (see module docs).
+pub struct FleetService {
+    trainer: FleetTrainer,
+    /// Scheduling knobs (capacity, retries, backoff, ladder thresholds).
+    pub config: ServiceConfig,
+    clock: LogicalClock,
+    queue: Vec<Pending>,
+    next_id: u64,
+    admitted: usize,
+    journal: TenantJournal,
+    stats: ServiceStats,
+}
+
+impl FleetService {
+    /// Wrap a trainer with the default (unbounded, non-shedding) config.
+    pub fn new(trainer: FleetTrainer) -> FleetService {
+        FleetService::with_config(trainer, ServiceConfig::default())
+    }
+
+    /// Wrap a trainer with explicit scheduling knobs.
+    pub fn with_config(trainer: FleetTrainer, config: ServiceConfig) -> FleetService {
+        FleetService {
+            trainer,
+            config,
+            clock: LogicalClock::new(),
+            queue: Vec::new(),
+            next_id: 0,
+            admitted: 0,
+            journal: TenantJournal::new(),
+            stats: ServiceStats::default(),
+        }
+    }
+
+    /// The wrapped trainer (tests pin β bit-identity through its
+    /// `model()` accessor).
+    pub fn trainer(&self) -> &FleetTrainer {
+        &self.trainer
+    }
+
+    /// Current logical tick.
+    pub fn now(&self) -> u64 {
+        self.clock.now()
+    }
+
+    /// Requests admitted but not yet finished.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The monotone service counters.
+    pub fn stats(&self) -> ServiceStats {
+        self.stats
+    }
+
+    /// The crash-safe journal accumulated so far (persist
+    /// [`TenantJournal::as_bytes`] to survive a process crash).
+    pub fn journal(&self) -> &TenantJournal {
+        &self.journal
+    }
+
+    /// The current overload rung, a pure function of queue occupancy vs
+    /// capacity (always [`OverloadRung::Healthy`] when unbounded).
+    pub fn overload_rung(&self) -> OverloadRung {
+        let Some(cap) = self.config.capacity else {
+            return OverloadRung::Healthy;
+        };
+        let q = self.queue.len();
+        if q * 10 >= cap * 9 {
+            OverloadRung::RejectTrains
+        } else if q * 4 >= cap * 3 {
+            OverloadRung::DowngradeGroups
+        } else if q * 2 >= cap {
+            OverloadRung::ShedPredicts
+        } else {
+            OverloadRung::Healthy
+        }
+    }
+
+    /// Admit a request. `deadline` is an absolute [`LogicalClock`] tick
+    /// (`None` = no deadline); `priority` orders predicts under overload
+    /// shedding (larger = keep longer). Returns the request id that later
+    /// [`Completion`]s carry, or the typed admission failure:
+    /// [`ServiceError::QueueFull`], [`ServiceError::DeadlineExceeded`]
+    /// (already expired on arrival), or [`ServiceError::Rejected`]
+    /// (overload ladder, duplicate queued train, unknown tenant).
+    pub fn submit(
+        &mut self,
+        req: FleetRequest,
+        deadline: Option<u64>,
+        priority: u32,
+    ) -> std::result::Result<u64, ServiceError> {
+        let now = self.clock.now();
+        if let Some(cap) = self.config.capacity {
+            if self.queue.len() >= cap {
+                return Err(ServiceError::QueueFull { capacity: cap, queued: self.queue.len() });
+            }
+        }
+        if let Some(d) = deadline {
+            if now > d {
+                self.stats.deadline_miss += 1;
+                return Err(ServiceError::DeadlineExceeded { deadline: d, now });
+            }
+        }
+        match &req {
+            FleetRequest::Train { tenant, .. } => {
+                if self.overload_rung() >= OverloadRung::RejectTrains {
+                    self.stats.shed += 1;
+                    return Err(ServiceError::Rejected {
+                        reason: format!(
+                            "overload rung {} rejects new trains",
+                            self.overload_rung().name()
+                        ),
+                    });
+                }
+                let dup = self.queue.iter().any(|p| {
+                    matches!(&p.req, FleetRequest::Train { tenant: t, .. } if t == tenant)
+                });
+                if dup {
+                    return Err(ServiceError::Rejected {
+                        reason: format!("tenant {tenant:?} already has a queued train"),
+                    });
+                }
+            }
+            FleetRequest::Update { tenant, .. } | FleetRequest::Predict { tenant, .. } => {
+                let resolvable = self.trainer.has_model(tenant)
+                    || self.queue.iter().any(|p| {
+                        matches!(&p.req, FleetRequest::Train { tenant: t, .. } if t == tenant)
+                    });
+                if !resolvable {
+                    return Err(ServiceError::Rejected {
+                        reason: format!(
+                            "tenant {tenant:?} has neither a cached model nor a queued train"
+                        ),
+                    });
+                }
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let admission = self.admitted;
+        self.admitted += 1;
+        self.queue.push(Pending {
+            id,
+            admission,
+            req,
+            deadline,
+            priority,
+            attempts: 0,
+            eligible: now,
+        });
+        Ok(id)
+    }
+
+    /// Run one service cycle: advance the clock one tick, shed expired
+    /// and overload-shed requests (typed), dispatch every eligible
+    /// request into the inner trainer (one scoped-thread drain — two
+    /// under a group downgrade), apply the retry/backoff policy to
+    /// transiently-degraded trains, and journal every completed
+    /// train/update. Returns the completions this cycle produced, in
+    /// admission order.
+    pub fn cycle(&mut self) -> Vec<Completion> {
+        let now = self.clock.advance();
+        let rung = self.overload_rung();
+        let pendings = std::mem::take(&mut self.queue);
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut kept: Vec<Pending> = Vec::new();
+        let mut candidates: Vec<Pending> = Vec::new();
+
+        // 1. deadline + overload shedding, eligibility partition
+        for p in pendings {
+            let skewed = inject::deadline_skew(inject::Site::ServiceQueue, p.admission);
+            let expired = p.deadline.is_some_and(|d| now > d);
+            if expired || skewed {
+                self.stats.deadline_miss += 1;
+                self.stats.completed += 1;
+                completions.push(Completion {
+                    id: p.id,
+                    tenant: p.req.tenant().to_string(),
+                    outcome: Err(ServiceError::DeadlineExceeded {
+                        deadline: p.deadline.unwrap_or(now),
+                        now,
+                    }),
+                });
+                continue;
+            }
+            if rung >= OverloadRung::ShedPredicts
+                && matches!(p.req, FleetRequest::Predict { .. })
+                && p.priority < self.config.shed_priority_floor
+            {
+                self.stats.shed += 1;
+                self.stats.completed += 1;
+                completions.push(Completion {
+                    id: p.id,
+                    tenant: p.req.tenant().to_string(),
+                    outcome: Err(ServiceError::Rejected {
+                        reason: format!(
+                            "overload rung {} shed priority-{} predict",
+                            rung.name(),
+                            p.priority
+                        ),
+                    }),
+                });
+                continue;
+            }
+            if p.eligible > now {
+                kept.push(p);
+            } else {
+                candidates.push(p);
+            }
+        }
+
+        // 2. defer updates/predicts whose backing train is still waiting
+        // out a backoff window — forwarding them now could only fail
+        let waiting_trains: Vec<(String, u64)> = kept
+            .iter()
+            .filter_map(|p| match &p.req {
+                FleetRequest::Train { tenant, .. } => Some((tenant.clone(), p.eligible)),
+                _ => None,
+            })
+            .collect();
+        let mut runnable: Vec<Pending> = Vec::new();
+        for mut p in candidates {
+            let defer = match &p.req {
+                FleetRequest::Train { .. } => None,
+                FleetRequest::Update { tenant, .. }
+                | FleetRequest::Predict { tenant, .. } => waiting_trains
+                    .iter()
+                    .find(|(t, _)| t == tenant)
+                    .map(|&(_, el)| el),
+            };
+            match defer {
+                Some(el) => {
+                    p.eligible = el;
+                    kept.push(p);
+                }
+                None => runnable.push(p),
+            }
+        }
+
+        // 3. injected dispatch panics → retry with backoff
+        let mut forward: Vec<Pending> = Vec::new();
+        for mut p in runnable {
+            let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                inject::maybe_panic(inject::Site::ServiceQueue, p.admission)
+            }))
+            .is_err();
+            if !panicked {
+                forward.push(p);
+                continue;
+            }
+            if p.attempts >= self.config.max_retries {
+                self.stats.completed += 1;
+                completions.push(Completion {
+                    id: p.id,
+                    tenant: p.req.tenant().to_string(),
+                    outcome: Err(ServiceError::RetriesExhausted { attempts: p.attempts }),
+                });
+            } else {
+                p.attempts += 1;
+                p.eligible = now + backoff_ticks(&self.config, p.admission, p.attempts);
+                self.stats.retries += 1;
+                kept.push(p);
+            }
+        }
+
+        // 4. group-downgrade partition (overload rung ≥ DowngradeGroups,
+        // TSQR strategy only): oversized shape groups drain first under
+        // the Gram strategy, the rest under the configured strategy
+        let mut phase_a: Vec<Pending> = Vec::new();
+        let mut phase_b: Vec<Pending> = Vec::new();
+        if rung >= OverloadRung::DowngradeGroups
+            && self.trainer.strategy == SolveStrategy::Tsqr
+        {
+            let mut group_sizes: Vec<(GroupKey, usize)> = Vec::new();
+            for p in &forward {
+                if let FleetRequest::Train { arch, m, data, .. } = &p.req {
+                    let key = GroupKey { arch: *arch, m: *m, s: data.s, q: data.q };
+                    match group_sizes.iter_mut().find(|(k, _)| *k == key) {
+                        Some((_, n)) => *n += 1,
+                        None => group_sizes.push((key, 1)),
+                    }
+                }
+            }
+            let oversized: Vec<GroupKey> = group_sizes
+                .into_iter()
+                .filter(|&(_, n)| n > self.config.downgrade_group_size)
+                .map(|(k, _)| k)
+                .collect();
+            for p in forward {
+                let downgrade = match &p.req {
+                    FleetRequest::Train { arch, m, data, .. } => oversized.contains(
+                        &GroupKey { arch: *arch, m: *m, s: data.s, q: data.q },
+                    ),
+                    _ => false,
+                };
+                if downgrade {
+                    phase_a.push(p);
+                } else {
+                    phase_b.push(p);
+                }
+            }
+        } else {
+            phase_b = forward;
+        }
+
+        // 5. dispatch: phase A under Gram (downgrade), phase B under the
+        // configured strategy — each one inner drain on a scoped thread
+        if !phase_a.is_empty() {
+            self.stats.downgraded += phase_a.len() as u64;
+            let saved = self.trainer.strategy;
+            self.trainer.strategy = SolveStrategy::Gram;
+            self.dispatch(phase_a, now, &mut completions, &mut kept);
+            self.trainer.strategy = saved;
+        }
+        if !phase_b.is_empty() {
+            self.dispatch(phase_b, now, &mut completions, &mut kept);
+        }
+
+        self.queue = kept;
+        completions.sort_by_key(|c| c.id);
+        completions
+    }
+
+    /// Submit a batch into the inner trainer, drain it on a scoped worker
+    /// thread, apply the retry policy to the outcomes, and journal the
+    /// completions.
+    fn dispatch(
+        &mut self,
+        batch: Vec<Pending>,
+        now: u64,
+        completions: &mut Vec<Completion>,
+        kept: &mut Vec<Pending>,
+    ) {
+        let mut submitted: Vec<Pending> = Vec::new();
+        for p in batch {
+            match self.trainer.submit(p.req.clone()) {
+                Ok(()) => submitted.push(p),
+                Err(e) => {
+                    // admission screening raced a cache eviction or a
+                    // failed backing train — surface the inner typed error
+                    self.stats.completed += 1;
+                    completions.push(Completion {
+                        id: p.id,
+                        tenant: p.req.tenant().to_string(),
+                        outcome: Err(ServiceError::Rejected {
+                            reason: format!("fleet submit refused: {e:#}"),
+                        }),
+                    });
+                }
+            }
+        }
+        if submitted.is_empty() {
+            return;
+        }
+        let trainer = &mut self.trainer;
+        let results = std::thread::scope(|scope| {
+            scope
+                .spawn(|| trainer.drain())
+                .join()
+                .expect("service drain thread panicked")
+        });
+        debug_assert_eq!(results.len(), submitted.len());
+        for (p, (tenant, outcome)) in submitted.into_iter().zip(results) {
+            let retryable = matches!(&p.req, FleetRequest::Train { .. })
+                && match &outcome {
+                    FleetOutcome::Trained { report, .. } => {
+                        matches!(report.rung, DegradationRung::Ridge { .. })
+                    }
+                    FleetOutcome::Failed { error, .. } => {
+                        matches!(error, SolveError::WorkerPanic { .. })
+                    }
+                    _ => false,
+                };
+            if retryable && p.attempts < self.config.max_retries {
+                let mut p = p;
+                p.attempts += 1;
+                p.eligible = now + backoff_ticks(&self.config, p.admission, p.attempts);
+                self.stats.retries += 1;
+                kept.push(p);
+                continue;
+            }
+            let terminal = match outcome {
+                // a persistently panicking train exhausted its retries
+                FleetOutcome::Failed { ref error, .. }
+                    if retryable && matches!(error, SolveError::WorkerPanic { .. }) =>
+                {
+                    Err(ServiceError::RetriesExhausted { attempts: p.attempts })
+                }
+                // a ridge-rung train that exhausted retries is still a
+                // model — hand it over with its (degraded) report
+                other => Ok(other),
+            };
+            if matches!(
+                terminal,
+                Ok(FleetOutcome::Trained { .. }) | Ok(FleetOutcome::Updated { .. })
+            ) {
+                if let Some(snap) = self.trainer.snapshot(&tenant) {
+                    self.journal.append(&tenant, &snap);
+                }
+            }
+            self.stats.completed += 1;
+            completions.push(Completion { id: p.id, tenant, outcome: terminal });
+        }
+    }
+
+    /// Cycle until the queue is empty, fast-forwarding the clock past
+    /// backoff windows when nothing is runnable. Returns every completion
+    /// in id order. (Bounded by a defensive cycle cap; the retry budget
+    /// makes the queue drain in finitely many cycles regardless.)
+    pub fn run_to_idle(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        let mut cycles = 0u32;
+        while !self.queue.is_empty() && cycles < 100_000 {
+            cycles += 1;
+            let next = self.clock.now() + 1;
+            if self.queue.iter().all(|p| p.eligible > next) {
+                let min_eligible =
+                    self.queue.iter().map(|p| p.eligible).min().unwrap_or(next);
+                self.clock.advance_to(min_eligible - 1);
+            }
+            out.extend(self.cycle());
+        }
+        out.sort_by_key(|c| c.id);
+        out
+    }
+
+    /// Replay a (possibly torn) journal into the wrapped trainer's cache:
+    /// every intact record restores its tenant bit-identically (later
+    /// records supersede earlier), a torn tail comes back as a typed
+    /// [`ServiceError::JournalTorn`], and a snapshot that fails the
+    /// restore shape screen is skipped (counted out of the returned
+    /// total). Returns `(tenants restored, optional tear)`.
+    pub fn warm_from(
+        &mut self,
+        journal: &TenantJournal,
+    ) -> (usize, Option<ServiceError>) {
+        let rec = journal.recover();
+        let mut applied = 0usize;
+        for (tenant, snap) in &rec.snapshots {
+            if self.trainer.restore(tenant, snap).is_ok() {
+                applied += 1;
+            }
+        }
+        let torn = rec.torn.map(|t| ServiceError::JournalTorn {
+            offset: t.offset,
+            reason: t.reason,
+        });
+        (applied, torn)
+    }
+
+    /// Snapshot one cached tenant (delegates to
+    /// [`FleetTrainer::snapshot`]).
+    pub fn snapshot(&self, tenant: &str) -> Option<TenantSnapshot> {
+        self.trainer.snapshot(tenant)
+    }
+}
+
+/// Backoff delay in logical ticks for retry `attempt` (1-based) of the
+/// request at `admission`: exponential in the attempt, plus jitter drawn
+/// from an [`Rng`] keyed by `(config.seed, admission, attempt)` — a pure
+/// function, so the whole retry schedule is bit-reproducible and
+/// worker-count invariant.
+fn backoff_ticks(config: &ServiceConfig, admission: usize, attempt: u32) -> u64 {
+    let base = config.backoff_base.max(1);
+    let exp = base.saturating_mul(1u64 << (attempt.saturating_sub(1)).min(16));
+    let mut rng = Rng::new(
+        config
+            .seed
+            .wrapping_add(0x5EED_5EED)
+            ^ (admission as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (attempt as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+    );
+    exp + rng.next_u64() % base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::window::Windowed;
+    use crate::elm::Arch;
+
+    fn toy_data(n: usize, q: usize, phase: f64) -> Windowed {
+        let series: Vec<f64> =
+            (0..n + q).map(|i| (i as f64 * 0.07 + phase).sin()).collect();
+        Windowed::from_series(&series, q).expect("windowed")
+    }
+
+    fn train_req(tenant: &str, m: usize, seed: u64, phase: f64) -> FleetRequest {
+        FleetRequest::Train {
+            tenant: tenant.to_string(),
+            arch: Arch::Elman,
+            m,
+            seed,
+            data: toy_data(90, 3, phase),
+        }
+    }
+
+    fn service(workers: usize, config: ServiceConfig) -> FleetService {
+        FleetService::with_config(FleetTrainer::new(workers), config)
+    }
+
+    #[test]
+    fn error_classes_are_distinct_and_display() {
+        let all = [
+            ServiceError::QueueFull { capacity: 1, queued: 1 },
+            ServiceError::Rejected { reason: "r".into() },
+            ServiceError::DeadlineExceeded { deadline: 1, now: 2 },
+            ServiceError::RetriesExhausted { attempts: 2 },
+            ServiceError::JournalTorn { offset: 8, reason: "t".into() },
+        ];
+        let classes: Vec<&str> = all.iter().map(|e| e.class()).collect();
+        let mut dedup = classes.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len(), "classes must be distinct: {classes:?}");
+        for e in &all {
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn async_service_matches_sync_drain() {
+        // the conformance anchor, small edition (1/2/4/8-worker sweep
+        // lives in tests/service_props.rs)
+        let mut sync = FleetTrainer::new(2);
+        sync.submit(train_req("a", 6, 1, 0.0)).unwrap();
+        sync.submit(train_req("b", 6, 2, 0.4)).unwrap();
+        let _ = sync.drain();
+
+        let mut svc = service(2, ServiceConfig::default());
+        svc.submit(train_req("a", 6, 1, 0.0), None, 0).unwrap();
+        svc.submit(train_req("b", 6, 2, 0.4), None, 0).unwrap();
+        let done = svc.run_to_idle();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|c| matches!(
+            c.outcome,
+            Ok(FleetOutcome::Trained { .. })
+        )));
+        for t in ["a", "b"] {
+            let a: Vec<u64> =
+                sync.model(t).unwrap().beta.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = svc
+                .trainer()
+                .model(t)
+                .unwrap()
+                .beta
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(a, b, "tenant {t} β must be bit-identical to sync drain");
+        }
+        assert_eq!(svc.stats().completed, 2);
+        assert_eq!(svc.stats().retries, 0);
+    }
+
+    #[test]
+    fn queue_full_is_typed() {
+        let mut svc =
+            service(1, ServiceConfig { capacity: Some(2), ..ServiceConfig::default() });
+        svc.submit(train_req("a", 6, 1, 0.0), None, 0).unwrap();
+        svc.submit(train_req("b", 6, 2, 0.1), None, 0).unwrap();
+        let err = svc.submit(train_req("c", 6, 3, 0.2), None, 0).unwrap_err();
+        assert_eq!(err, ServiceError::QueueFull { capacity: 2, queued: 2 });
+    }
+
+    #[test]
+    fn expired_deadline_rejected_at_admission_and_at_cycle() {
+        let mut svc = service(1, ServiceConfig::default());
+        // burn some ticks
+        for _ in 0..5 {
+            svc.cycle();
+        }
+        assert_eq!(svc.now(), 5);
+        let err = svc.submit(train_req("a", 6, 1, 0.0), Some(3), 0).unwrap_err();
+        assert_eq!(err.class(), "deadline-exceeded");
+        // admitted alive, but the deadline passes before the next cycle
+        // reaches it: deadline 5 expires at tick 6
+        svc.submit(train_req("b", 6, 2, 0.1), Some(5), 0).unwrap();
+        // hold the request back so the cycle's group formation sees it
+        // only after expiry
+        svc.queue[0].eligible = 7;
+        let mut done = svc.cycle(); // tick 6: not eligible, but expired → shed typed
+        done.extend(svc.run_to_idle());
+        let all: Vec<&Completion> = done.iter().collect();
+        assert_eq!(all.len(), 1);
+        match &all[0].outcome {
+            Err(ServiceError::DeadlineExceeded { deadline: 5, now }) => {
+                assert!(*now > 5);
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(!svc.trainer().has_model("b"), "expired request must never train");
+        assert_eq!(svc.stats().deadline_miss, 2);
+    }
+
+    #[test]
+    fn overload_ladder_rungs_follow_occupancy() {
+        let mut svc = service(
+            1,
+            ServiceConfig { capacity: Some(10), ..ServiceConfig::default() },
+        );
+        assert_eq!(svc.overload_rung(), OverloadRung::Healthy);
+        for i in 0..5 {
+            svc.submit(train_req(&format!("t{i}"), 6, i as u64, 0.1 * i as f64), None, 0)
+                .unwrap();
+        }
+        assert_eq!(svc.overload_rung(), OverloadRung::ShedPredicts);
+        for i in 5..8 {
+            svc.submit(train_req(&format!("t{i}"), 6, i as u64, 0.1 * i as f64), None, 0)
+                .unwrap();
+        }
+        assert_eq!(svc.overload_rung(), OverloadRung::DowngradeGroups);
+        svc.submit(train_req("t8", 6, 8, 0.8), None, 0).unwrap();
+        assert_eq!(svc.overload_rung(), OverloadRung::RejectTrains);
+        let err = svc.submit(train_req("t9", 6, 9, 0.9), None, 0).unwrap_err();
+        assert_eq!(err.class(), "rejected");
+        assert_eq!(svc.stats().shed, 1);
+        // rungs are ordered
+        assert!(OverloadRung::Healthy < OverloadRung::ShedPredicts);
+        assert!(OverloadRung::ShedPredicts < OverloadRung::DowngradeGroups);
+        assert!(OverloadRung::DowngradeGroups < OverloadRung::RejectTrains);
+    }
+
+    #[test]
+    fn low_priority_predicts_shed_under_pressure() {
+        let mut svc = service(
+            2,
+            ServiceConfig { capacity: Some(8), ..ServiceConfig::default() },
+        );
+        svc.submit(train_req("a", 6, 1, 0.0), None, 0).unwrap();
+        svc.run_to_idle();
+        // refill to the shed watermark: 4 of 8
+        for i in 0..3 {
+            svc.submit(train_req(&format!("t{i}"), 6, 10 + i, 0.1), None, 0).unwrap();
+        }
+        let lo = svc
+            .submit(
+                FleetRequest::Predict { tenant: "a".into(), data: toy_data(30, 3, 0.0) },
+                None,
+                0,
+            )
+            .unwrap();
+        let hi = svc
+            .submit(
+                FleetRequest::Predict { tenant: "a".into(), data: toy_data(30, 3, 0.0) },
+                None,
+                5,
+            )
+            .unwrap();
+        let done = svc.run_to_idle();
+        let find = |id: u64| done.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(
+            find(lo).outcome.as_ref().unwrap_err().class(),
+            "rejected",
+            "priority-0 predict shed"
+        );
+        assert!(
+            matches!(find(hi).outcome, Ok(FleetOutcome::Predicted { .. })),
+            "priority-5 predict survives: {:?}",
+            find(hi).outcome
+        );
+        assert!(svc.stats().shed >= 1);
+    }
+
+    #[test]
+    fn admission_screens_unknown_and_duplicate_tenants() {
+        let mut svc = service(1, ServiceConfig::default());
+        let err = svc
+            .submit(
+                FleetRequest::Predict { tenant: "ghost".into(), data: toy_data(30, 3, 0.0) },
+                None,
+                0,
+            )
+            .unwrap_err();
+        assert_eq!(err.class(), "rejected");
+        svc.submit(train_req("a", 6, 1, 0.0), None, 0).unwrap();
+        let err = svc.submit(train_req("a", 6, 2, 0.1), None, 0).unwrap_err();
+        assert_eq!(err.class(), "rejected");
+        // queued train makes the tenant addressable before it is cached
+        svc.submit(
+            FleetRequest::Predict { tenant: "a".into(), data: toy_data(30, 3, 0.0) },
+            None,
+            0,
+        )
+        .unwrap();
+        let done = svc.run_to_idle();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|c| c.outcome.is_ok()));
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_exponential() {
+        let cfg = ServiceConfig { seed: 42, backoff_base: 4, ..ServiceConfig::default() };
+        for admission in [0usize, 3, 17] {
+            for attempt in 1..=4u32 {
+                let a = backoff_ticks(&cfg, admission, attempt);
+                let b = backoff_ticks(&cfg, admission, attempt);
+                assert_eq!(a, b, "pure function of (seed, admission, attempt)");
+                let floor = 4u64 << (attempt - 1);
+                assert!(
+                    a >= floor && a < floor + 4,
+                    "attempt {attempt}: {a} outside [{floor}, {})",
+                    floor + 4
+                );
+            }
+        }
+        let other = ServiceConfig { seed: 43, ..cfg };
+        let same_everywhere = (0..16u32)
+            .all(|k| backoff_ticks(&cfg, k as usize, 1) == backoff_ticks(&other, k as usize, 1));
+        assert!(!same_everywhere, "seed must key the jitter");
+    }
+
+    #[test]
+    fn journal_round_trips_through_warm_from() {
+        let mut svc = service(2, ServiceConfig::default());
+        svc.submit(train_req("a", 6, 1, 0.0), None, 0).unwrap();
+        svc.submit(train_req("b", 6, 2, 0.4), None, 0).unwrap();
+        svc.run_to_idle();
+        svc.submit(
+            FleetRequest::Update { tenant: "a".into(), data: toy_data(40, 3, 0.9) },
+            None,
+            0,
+        )
+        .unwrap();
+        svc.run_to_idle();
+        let journal = svc.journal().clone();
+        assert_eq!(journal.record_boundaries().len(), 4, "header + 3 records");
+
+        let mut cold = service(2, ServiceConfig::default());
+        let (applied, torn) = cold.warm_from(&journal);
+        assert_eq!((applied, torn), (2, None));
+        for t in ["a", "b"] {
+            let live: Vec<u64> =
+                svc.trainer().model(t).unwrap().beta.iter().map(|v| v.to_bits()).collect();
+            let rec: Vec<u64> = cold
+                .trainer()
+                .model(t)
+                .unwrap()
+                .beta
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(live, rec, "tenant {t} recovery must be bit-identical");
+        }
+        // torn tail: typed, prefix still applies
+        let cut = journal.record_boundaries()[2] + 5;
+        let torn_journal = TenantJournal::from_bytes(journal.as_bytes()[..cut].to_vec());
+        let mut cold2 = service(2, ServiceConfig::default());
+        let (applied, torn) = cold2.warm_from(&torn_journal);
+        assert_eq!(applied, 2, "intact prefix restores");
+        assert_eq!(torn.as_ref().map(|e| e.class()), Some("journal-torn"));
+    }
+
+    #[test]
+    fn run_to_idle_fast_forwards_backoff_windows() {
+        let mut svc = service(1, ServiceConfig::default());
+        svc.submit(train_req("a", 6, 1, 0.0), None, 0).unwrap();
+        // artificially push the request deep into the future; run_to_idle
+        // must jump there instead of spinning one tick at a time
+        svc.queue[0].eligible = 1_000;
+        let done = svc.run_to_idle();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].outcome.is_ok());
+        assert_eq!(svc.now(), 1_000, "clock fast-forwarded to the eligible tick");
+    }
+}

@@ -130,6 +130,15 @@ impl OnlineElm {
         self.resets
     }
 
+    /// The covariance P = (HᵀH + λI)⁻¹ the filter currently holds. Exposed
+    /// (read-only) so the fleet's crash-safe journal can snapshot the full
+    /// filter state; [`OnlineElm::from_state`] is the matching restore
+    /// path, and because both sides move exact f64 bits the round trip is
+    /// bit-identical.
+    pub fn covariance(&self) -> &Matrix {
+        &self.p
+    }
+
     /// Reset the covariance to the ridge prior I/λ (keeping β) and record
     /// it — the [`RlsOutcome::Reset`] recovery.
     fn reset_covariance(&mut self) -> RlsOutcome {
@@ -354,6 +363,32 @@ mod tests {
         assert!(
             OnlineElm::from_state(3, 1e-2, p, vec![f64::INFINITY, 0.0, 0.0], 0).is_err()
         );
+    }
+
+    #[test]
+    fn covariance_round_trips_bit_identically_through_from_state() {
+        let (n, m, lambda) = (48usize, 4usize, 1e-3);
+        let (h, y) = random_problem(n, m, 9);
+        let mut live = OnlineElm::new(m, lambda);
+        live.update_block(&h, &y, n).unwrap();
+        let restored = OnlineElm::from_state(
+            m,
+            live.lambda(),
+            live.covariance().clone(),
+            live.beta().to_vec(),
+            live.rows_seen(),
+        )
+        .unwrap();
+        assert_eq!(restored.covariance(), live.covariance());
+        // one more identical update on both: bit-identical trajectories
+        let (h2, y2) = random_problem(8, m, 10);
+        let mut a = live;
+        let mut b = restored;
+        a.update_block(&h2, &y2, 8).unwrap();
+        b.update_block(&h2, &y2, 8).unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(a.beta()), bits(b.beta()));
+        assert_eq!(a.covariance(), b.covariance());
     }
 
     #[test]

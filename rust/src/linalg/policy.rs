@@ -166,6 +166,48 @@ impl Default for ParallelPolicy {
     }
 }
 
+/// Deterministic logical clock — the fleet service's only notion of time.
+///
+/// The service layer (`coordinator::service`) needs deadlines and
+/// exponential backoff, but wall-clock time would break the substrate's
+/// bit-reproducibility: two runs of the same submissions would observe
+/// different timestamps and make different scheduling decisions. Instead,
+/// time is a `u64` tick counter advanced once per service cycle —
+/// deadlines and backoff eligibility are compared against ticks, so every
+/// scheduling decision is a pure function of the submission sequence (and
+/// the configured seed), independent of host load or worker count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct LogicalClock {
+    tick: u64,
+}
+
+impl LogicalClock {
+    /// Clock at tick 0.
+    pub fn new() -> LogicalClock {
+        LogicalClock { tick: 0 }
+    }
+
+    /// Current tick.
+    pub fn now(&self) -> u64 {
+        self.tick
+    }
+
+    /// Advance by one tick and return the new value (saturating — the
+    /// clock never wraps back before an already-issued deadline).
+    pub fn advance(&mut self) -> u64 {
+        self.tick = self.tick.saturating_add(1);
+        self.tick
+    }
+
+    /// Jump forward to `tick` if it is ahead (used to fast-forward past a
+    /// backoff window when the queue is otherwise idle); never moves
+    /// backwards.
+    pub fn advance_to(&mut self, tick: u64) -> u64 {
+        self.tick = self.tick.max(tick);
+        self.tick
+    }
+}
+
 /// Fixed tiling of `[0, n)` into `(lo, hi)` ranges of height `tile` (the
 /// last tile may be short). The boundaries are a function of `(n, tile)`
 /// alone — **never** of a worker count — which is what makes every parallel
@@ -469,6 +511,18 @@ mod tests {
             }
             other => panic!("wrong variant: {other:?}"),
         }
+    }
+
+    #[test]
+    fn logical_clock_is_monotone() {
+        let mut c = LogicalClock::new();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.advance(), 1);
+        assert_eq!(c.advance(), 2);
+        assert_eq!(c.advance_to(10), 10);
+        assert_eq!(c.advance_to(5), 10, "never moves backwards");
+        assert_eq!(c.now(), 10);
+        assert_eq!(LogicalClock::default(), LogicalClock::new());
     }
 
     #[test]

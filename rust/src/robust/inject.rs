@@ -1,10 +1,11 @@
 //! Deterministic, seed-keyed fault injection for the training pipeline.
 //!
-//! The harness corrupts the pipeline at seven sites — data windows, H
+//! The harness corrupts the pipeline at eight sites — data windows, H
 //! blocks, sequence-parallel scan chunks, Gram partials, TSQR leaves,
-//! worker threads, fleet jobs — with a taxonomy
+//! worker threads, fleet jobs, service-queue requests — with a taxonomy
 //! of faults (NaN/Inf payloads, denormal scaling, rank-collapsed columns,
-//! truncated blocks, injected worker panics). Whether a given (site,
+//! truncated blocks, injected worker panics, deadline skew). Whether a
+//! given (site,
 //! block-index) pair is corrupted is a pure function of the armed plan's
 //! seed and the index — **never** of the worker count or thread schedule —
 //! so an injected run is as reproducible as a healthy one (§7.3).
@@ -68,6 +69,16 @@ pub enum Site {
     /// contract (a poisoned tenant must not perturb its group-mates) is
     /// tested through this site.
     FleetJob,
+    /// One admitted request in the fleet service's queue
+    /// (`coordinator::service`): [`Fault::DeadlineSkew`] marks the request
+    /// as past-deadline at its next scheduling check and
+    /// [`Fault::WorkerPanic`] panics its dispatch (triggering the
+    /// service's retry/backoff path), both keyed by the request's
+    /// **admission index** — never by worker count, queue depth, or
+    /// schedule. The per-request isolation contract (a shed or retried
+    /// request must not perturb any other tenant's β bits) is tested
+    /// through this site.
+    ServiceQueue,
 }
 
 impl Site {
@@ -81,6 +92,7 @@ impl Site {
             Site::TsqrLeaf => "tsqr-leaf",
             Site::Worker => "worker",
             Site::FleetJob => "fleet-job",
+            Site::ServiceQueue => "service-queue",
         }
     }
 }
@@ -103,6 +115,10 @@ pub enum Fault {
     TruncateRows,
     /// Panic the worker item (fires once per index; the retry succeeds).
     WorkerPanic,
+    /// Report a queued service request as past its deadline at the next
+    /// scheduling check (only [`Site::ServiceQueue`] consumes it — the
+    /// payload-corruption hooks ignore it).
+    DeadlineSkew,
 }
 
 impl Fault {
@@ -116,6 +132,7 @@ impl Fault {
             Fault::ConstantColumn => "constant-column",
             Fault::TruncateRows => "truncate-rows",
             Fault::WorkerPanic => "worker-panic",
+            Fault::DeadlineSkew => "deadline-skew",
         }
     }
 }
@@ -274,7 +291,7 @@ mod active {
                 }
                 true
             }
-            Fault::TruncateRows | Fault::WorkerPanic => false,
+            Fault::TruncateRows | Fault::WorkerPanic | Fault::DeadlineSkew => false,
         };
         if fired {
             log(site, index, fault);
@@ -332,6 +349,14 @@ mod active {
             }
             _ => rows,
         }
+    }
+
+    pub fn deadline_skew(site: Site, index: usize) -> bool {
+        if fires(site, index) != Some(Fault::DeadlineSkew) {
+            return false;
+        }
+        log(site, index, Fault::DeadlineSkew);
+        true
     }
 
     pub fn maybe_panic(site: Site, index: usize) {
@@ -436,6 +461,24 @@ pub fn truncated_rows(_site: Site, _index: usize, rows: usize) -> usize {
     rows
 }
 
+/// True when a `DeadlineSkew` plan fires at this (site, index): the
+/// service layer treats the request as past its deadline at the next
+/// scheduling check. Fires (and logs an event) every time it is asked —
+/// the fire decision stays the pure `(seed, index)` function shared by
+/// every hook. Always `false` without `fault-inject`.
+#[cfg(feature = "fault-inject")]
+pub fn deadline_skew(site: Site, index: usize) -> bool {
+    active::deadline_skew(site, index)
+}
+
+/// See the feature-gated twin; compiled to a constant without
+/// `fault-inject`.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn deadline_skew(_site: Site, _index: usize) -> bool {
+    false
+}
+
 /// Panic the current worker item when a `WorkerPanic` plan fires at this
 /// (site, index) — once per index, so the sequential retry succeeds.
 /// No-op without `fault-inject`.
@@ -535,6 +578,31 @@ mod tests {
         assert!(!corrupt_slice_f32(Site::GramPartial, 0, &mut data, 2, 4));
         assert!(armed_for(Site::HBlock));
         assert!(!armed_for(Site::Worker));
+    }
+
+    #[test]
+    fn deadline_skew_fires_deterministically_and_only_at_its_site() {
+        let _g = arm(FaultPlan {
+            seed: 11,
+            site: Site::ServiceQueue,
+            fault: Fault::DeadlineSkew,
+            period: 3,
+        });
+        let first: Vec<bool> = (0..32).map(|i| deadline_skew(Site::ServiceQueue, i)).collect();
+        let second: Vec<bool> = (0..32).map(|i| deadline_skew(Site::ServiceQueue, i)).collect();
+        assert_eq!(first, second, "pure function of (seed, index)");
+        let hits = first.iter().filter(|&&b| b).count();
+        assert!(hits > 0 && hits < 32, "period 3 fires a strict subset: {hits}");
+        // other sites and other hooks untouched
+        assert!(!deadline_skew(Site::FleetJob, 0));
+        let mut data = vec![1.0f64; 8];
+        assert!(!corrupt_slice_f64(Site::ServiceQueue, 0, &mut data, 2, 4));
+        assert_eq!(truncated_rows(Site::ServiceQueue, 0, 10), 10);
+        maybe_panic(Site::ServiceQueue, 0); // DeadlineSkew plan: must not panic
+        let events = take_events();
+        assert!(events.iter().all(|e| e.fault == Fault::DeadlineSkew
+            && e.site == Site::ServiceQueue));
+        assert_eq!(events.len(), 2 * hits, "both sweeps logged");
     }
 
     #[test]

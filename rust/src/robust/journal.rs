@@ -1,0 +1,608 @@
+//! Crash-safe tenant journal — append-only, checksummed β/Gram state log.
+//!
+//! The fleet service (`coordinator::service`) journals every completed
+//! train/update so a crashed process can rebuild its warm cache
+//! **bit-identically**: the journal stores the exact f64 bit patterns of
+//! β, the Gram accumulator, and (when online RLS has run) the RLS
+//! covariance P, plus the `(arch, s, q, m, seed)` tuple that
+//! deterministically regenerates the random ELM parameters via
+//! [`ElmParams::init`](crate::elm::ElmParams::init).
+//!
+//! ## Format
+//!
+//! The byte log is an 8-byte magic header (`PALJRN01`) followed by framed
+//! records:
+//!
+//! ```text
+//! [u32 LE payload-len][payload bytes][u64 LE FNV-1a(payload)]
+//! ```
+//!
+//! All integers are little-endian; every float is stored as its raw IEEE-754
+//! bit pattern (`f64::to_bits`), so round-tripping is exact — including NaN
+//! payloads and signed zeros. Later records for the same tenant supersede
+//! earlier ones on recovery, which is how post-crash replay after
+//! `elm::online` RLS updates converges on the live cache.
+//!
+//! ## Torn tails
+//!
+//! A crash mid-append leaves a truncated or corrupted final record.
+//! [`TenantJournal::recover`] detects this with the length frame and the
+//! FNV-1a checksum, stops at the last intact record, and reports the tear
+//! as a typed [`JournalTorn`] — never a panic. Everything before the tear
+//! is recovered normally.
+
+#![forbid(unsafe_code)]
+
+use crate::elm::Arch;
+use crate::linalg::Matrix;
+use crate::robust::report::{
+    DeficiencyVerdict, DegradationRung, SolveReport, SolveStrategyKind,
+};
+
+/// Magic header identifying a tenant journal byte log (version 01).
+pub const JOURNAL_MAGIC: [u8; 8] = *b"PALJRN01";
+
+/// Everything needed to rebuild one tenant's cache entry bit-identically:
+/// the deterministic parameter tuple, the trained β bits, the Gram
+/// accumulator, the solve provenance, and the optional RLS state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSnapshot {
+    /// Architecture of the tenant's model.
+    pub arch: Arch,
+    /// Exogenous input width the model was trained with.
+    pub s: usize,
+    /// Feedback window length Q.
+    pub q: usize,
+    /// Hidden width M.
+    pub m: usize,
+    /// Seed that regenerates the random parameters via `ElmParams::init`.
+    pub seed: u64,
+    /// Trained output weights (exact f64 bits).
+    pub beta: Vec<f64>,
+    /// Gram accumulator `HᵀH` the fleet trainer cached for RLS seeding.
+    pub gram: Matrix,
+    /// Rows folded into `gram` / seen by the solve.
+    pub rows: usize,
+    /// Provenance of the solve that produced β.
+    pub report: SolveReport,
+    /// Online RLS state, present once `Update` requests have run.
+    pub rls: Option<RlsSnapshot>,
+}
+
+/// RLS state beyond what the cache entry already carries: the covariance
+/// P = (HᵀH + λI)⁻¹ and the λ it was seeded with. β and the row count are
+/// shared with the snapshot (they stay in sync after every update).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RlsSnapshot {
+    /// The m×m covariance matrix (exact f64 bits).
+    pub p: Matrix,
+    /// The ridge λ the RLS state was seeded with.
+    pub lambda: f64,
+}
+
+/// A detected torn/corrupt journal tail: byte offset of the first
+/// unrecoverable record and a human-readable reason.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalTorn {
+    /// Byte offset (from the start of the log) of the torn record's frame.
+    pub offset: usize,
+    /// Why the record was rejected (`"truncated frame"`,
+    /// `"checksum mismatch"`, …).
+    pub reason: String,
+}
+
+/// Result of [`TenantJournal::recover`]: the surviving per-tenant
+/// snapshots (in first-appended order, later records superseding earlier
+/// ones), how many intact records were replayed, and the tear — if any —
+/// that ended the replay.
+#[derive(Debug, Clone)]
+pub struct Recovered {
+    /// One entry per tenant, ordered by first appearance in the journal.
+    pub snapshots: Vec<(String, TenantSnapshot)>,
+    /// Number of intact records replayed (superseded ones included).
+    pub replayed: usize,
+    /// The typed tear report when the tail was truncated or corrupt.
+    pub torn: Option<JournalTorn>,
+}
+
+/// Append-only, checksummed byte log of tenant snapshots (see the module
+/// docs for the frame format and the torn-tail contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantJournal {
+    buf: Vec<u8>,
+}
+
+impl Default for TenantJournal {
+    fn default() -> TenantJournal {
+        TenantJournal::new()
+    }
+}
+
+impl TenantJournal {
+    /// Fresh journal holding only the magic header.
+    pub fn new() -> TenantJournal {
+        TenantJournal { buf: JOURNAL_MAGIC.to_vec() }
+    }
+
+    /// Adopt raw bytes (e.g. read back after a crash). No validation
+    /// happens here — [`recover`](TenantJournal::recover) does all of it,
+    /// so even a garbage buffer yields a typed report, not a panic.
+    pub fn from_bytes(bytes: Vec<u8>) -> TenantJournal {
+        TenantJournal { buf: bytes }
+    }
+
+    /// The raw byte log (magic header + framed records).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Total size of the byte log in bytes.
+    pub fn len_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Byte offsets of every record boundary: the end of the header, then
+    /// the end of each complete record. Truncating the log at any returned
+    /// offset simulates a clean crash between appends; truncating anywhere
+    /// else simulates a torn append.
+    pub fn record_boundaries(&self) -> Vec<usize> {
+        let mut bounds = Vec::new();
+        if self.buf.len() < JOURNAL_MAGIC.len() {
+            return bounds;
+        }
+        bounds.push(JOURNAL_MAGIC.len());
+        let mut pos = JOURNAL_MAGIC.len();
+        while pos + 4 <= self.buf.len() {
+            let len = read_u32(&self.buf, pos) as usize;
+            let end = pos + 4 + len + 8;
+            if end > self.buf.len() {
+                break;
+            }
+            bounds.push(end);
+            pos = end;
+        }
+        bounds
+    }
+
+    /// Append one tenant snapshot as a framed, checksummed record.
+    pub fn append(&mut self, tenant: &str, snap: &TenantSnapshot) {
+        let payload = encode_snapshot(tenant, snap);
+        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let sum = fnv1a(&payload);
+        self.buf.extend_from_slice(&payload);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+    }
+
+    /// Replay the log: decode every intact record in order (later records
+    /// for the same tenant supersede earlier ones) and stop at the first
+    /// truncated or corrupt record, reporting it as a typed
+    /// [`JournalTorn`]. Never panics, whatever the bytes.
+    pub fn recover(&self) -> Recovered {
+        let mut out = Recovered { snapshots: Vec::new(), replayed: 0, torn: None };
+        if self.buf.len() < JOURNAL_MAGIC.len() {
+            out.torn = Some(JournalTorn {
+                offset: 0,
+                reason: format!(
+                    "log shorter than the {}-byte magic header",
+                    JOURNAL_MAGIC.len()
+                ),
+            });
+            return out;
+        }
+        if self.buf[..JOURNAL_MAGIC.len()] != JOURNAL_MAGIC {
+            out.torn = Some(JournalTorn {
+                offset: 0,
+                reason: "bad magic header".to_string(),
+            });
+            return out;
+        }
+        let mut pos = JOURNAL_MAGIC.len();
+        while pos < self.buf.len() {
+            if pos + 4 > self.buf.len() {
+                out.torn = Some(JournalTorn {
+                    offset: pos,
+                    reason: "truncated frame (partial length prefix)".to_string(),
+                });
+                return out;
+            }
+            let len = read_u32(&self.buf, pos) as usize;
+            let payload_start = pos + 4;
+            let payload_end = payload_start + len;
+            let frame_end = payload_end + 8;
+            if frame_end > self.buf.len() {
+                out.torn = Some(JournalTorn {
+                    offset: pos,
+                    reason: "truncated frame (record extends past end of log)"
+                        .to_string(),
+                });
+                return out;
+            }
+            let payload = &self.buf[payload_start..payload_end];
+            let stored = read_u64(&self.buf, payload_end);
+            if fnv1a(payload) != stored {
+                out.torn = Some(JournalTorn {
+                    offset: pos,
+                    reason: "checksum mismatch".to_string(),
+                });
+                return out;
+            }
+            match decode_snapshot(payload) {
+                Ok((tenant, snap)) => {
+                    out.replayed += 1;
+                    match out.snapshots.iter_mut().find(|(t, _)| *t == tenant) {
+                        Some((_, slot)) => *slot = snap,
+                        None => out.snapshots.push((tenant, snap)),
+                    }
+                }
+                Err(reason) => {
+                    out.torn = Some(JournalTorn { offset: pos, reason });
+                    return out;
+                }
+            }
+            pos = frame_end;
+        }
+        out
+    }
+}
+
+/// FNV-1a over a byte slice — the journal's record checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn read_u32(buf: &[u8], pos: usize) -> u32 {
+    u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap())
+}
+
+fn read_u64(buf: &[u8], pos: usize) -> u64 {
+    u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap())
+}
+
+// --- payload codec ---------------------------------------------------------
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    push_u64(out, v.to_bits());
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    push_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn push_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    push_u32(out, m.rows as u32);
+    push_u32(out, m.cols as u32);
+    for &v in m.data() {
+        push_f64(out, v);
+    }
+}
+
+fn encode_report(out: &mut Vec<u8>, r: &SolveReport) {
+    let strat = match r.strategy {
+        SolveStrategyKind::Unspecified => 0u8,
+        SolveStrategyKind::Qr => 1,
+        SolveStrategyKind::Tsqr => 2,
+        SolveStrategyKind::Gram => 3,
+        SolveStrategyKind::Online => 4,
+    };
+    out.push(strat);
+    match r.rung {
+        DegradationRung::Primary => {
+            out.push(0);
+            push_u32(out, 0);
+            push_f64(out, 0.0);
+        }
+        DegradationRung::Ridge { step, lambda } => {
+            out.push(1);
+            push_u32(out, step);
+            push_f64(out, lambda);
+        }
+        DegradationRung::Failed => {
+            out.push(2);
+            push_u32(out, 0);
+            push_f64(out, 0.0);
+        }
+    }
+    match r.verdict {
+        DeficiencyVerdict::NotChecked => {
+            out.push(0);
+            push_u64(out, 0);
+        }
+        DeficiencyVerdict::FullRank => {
+            out.push(1);
+            push_u64(out, 0);
+        }
+        DeficiencyVerdict::RankDeficient { pivot } => {
+            out.push(2);
+            push_u64(out, pivot as u64);
+        }
+        DeficiencyVerdict::NonFinite { row } => {
+            out.push(3);
+            push_u64(out, row as u64);
+        }
+    }
+    push_f64(out, r.effective_lambda);
+    push_u32(out, r.retries);
+    push_u64(out, r.quarantined_rows as u64);
+}
+
+fn encode_snapshot(tenant: &str, snap: &TenantSnapshot) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_str(&mut out, tenant);
+    push_str(&mut out, snap.arch.name());
+    push_u64(&mut out, snap.s as u64);
+    push_u64(&mut out, snap.q as u64);
+    push_u64(&mut out, snap.m as u64);
+    push_u64(&mut out, snap.seed);
+    push_u64(&mut out, snap.rows as u64);
+    encode_report(&mut out, &snap.report);
+    push_u32(&mut out, snap.beta.len() as u32);
+    for &b in &snap.beta {
+        push_f64(&mut out, b);
+    }
+    push_matrix(&mut out, &snap.gram);
+    match &snap.rls {
+        None => out.push(0),
+        Some(r) => {
+            out.push(1);
+            push_f64(&mut out, r.lambda);
+            push_matrix(&mut out, &r.p);
+        }
+    }
+    out
+}
+
+/// Sequential cursor over a payload; every read is bounds-checked so a
+/// corrupt-but-checksum-colliding payload still decodes to a typed error.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err("payload underrun".to_string());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "non-UTF-8 string".to_string())
+    }
+
+    fn matrix(&mut self) -> Result<Matrix, String> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| "matrix shape overflow".to_string())?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f64()?);
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+}
+
+fn decode_report(c: &mut Cursor) -> Result<SolveReport, String> {
+    let strategy = match c.u8()? {
+        0 => SolveStrategyKind::Unspecified,
+        1 => SolveStrategyKind::Qr,
+        2 => SolveStrategyKind::Tsqr,
+        3 => SolveStrategyKind::Gram,
+        4 => SolveStrategyKind::Online,
+        t => return Err(format!("unknown strategy tag {t}")),
+    };
+    let rung_tag = c.u8()?;
+    let step = c.u32()?;
+    let lambda = c.f64()?;
+    let rung = match rung_tag {
+        0 => DegradationRung::Primary,
+        1 => DegradationRung::Ridge { step, lambda },
+        2 => DegradationRung::Failed,
+        t => return Err(format!("unknown rung tag {t}")),
+    };
+    let verdict_tag = c.u8()?;
+    let verdict_arg = c.u64()? as usize;
+    let verdict = match verdict_tag {
+        0 => DeficiencyVerdict::NotChecked,
+        1 => DeficiencyVerdict::FullRank,
+        2 => DeficiencyVerdict::RankDeficient { pivot: verdict_arg },
+        3 => DeficiencyVerdict::NonFinite { row: verdict_arg },
+        t => return Err(format!("unknown verdict tag {t}")),
+    };
+    let effective_lambda = c.f64()?;
+    let retries = c.u32()?;
+    let quarantined_rows = c.u64()? as usize;
+    Ok(SolveReport { strategy, rung, verdict, effective_lambda, retries, quarantined_rows })
+}
+
+fn decode_snapshot(payload: &[u8]) -> Result<(String, TenantSnapshot), String> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let tenant = c.string()?;
+    let arch_name = c.string()?;
+    let arch = Arch::parse(&arch_name).map_err(|e| e.to_string())?;
+    let s = c.u64()? as usize;
+    let q = c.u64()? as usize;
+    let m = c.u64()? as usize;
+    let seed = c.u64()?;
+    let rows = c.u64()? as usize;
+    let report = decode_report(&mut c)?;
+    let beta_len = c.u32()? as usize;
+    let mut beta = Vec::with_capacity(beta_len);
+    for _ in 0..beta_len {
+        beta.push(c.f64()?);
+    }
+    let gram = c.matrix()?;
+    let rls = match c.u8()? {
+        0 => None,
+        1 => {
+            let lambda = c.f64()?;
+            let p = c.matrix()?;
+            Some(RlsSnapshot { p, lambda })
+        }
+        t => return Err(format!("unknown rls tag {t}")),
+    };
+    if c.pos != payload.len() {
+        return Err("trailing bytes after snapshot".to_string());
+    }
+    Ok((tenant, TenantSnapshot { arch, s, q, m, seed, beta, gram, rows, report, rls }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(m: usize, seed: u64, bump: f64) -> TenantSnapshot {
+        let mut gram = Matrix::zeros(m, m);
+        for i in 0..m {
+            gram[(i, i)] = 1.0 + bump + i as f64 * 0.25;
+        }
+        TenantSnapshot {
+            arch: Arch::Elman,
+            s: 1,
+            q: 3,
+            m,
+            seed,
+            beta: (0..m).map(|i| bump + i as f64 * 0.125).collect(),
+            gram,
+            rows: 40,
+            report: SolveReport {
+                strategy: SolveStrategyKind::Gram,
+                rung: DegradationRung::Ridge { step: 2, lambda: 1e-4 },
+                verdict: DeficiencyVerdict::RankDeficient { pivot: 1 },
+                effective_lambda: 1e-4,
+                retries: 3,
+                quarantined_rows: 2,
+            },
+            rls: Some(RlsSnapshot { p: Matrix::identity(m), lambda: 1e-6 }),
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let mut j = TenantJournal::new();
+        let mut a = snap(4, 7, 0.5);
+        a.beta[0] = -0.0; // signed zero must survive
+        a.beta[1] = f64::NAN; // NaN bits must survive
+        j.append("alpha", &a);
+        j.append("beta-tenant", &snap(3, 9, 1.5));
+        let rec = j.recover();
+        assert!(rec.torn.is_none());
+        assert_eq!(rec.replayed, 2);
+        assert_eq!(rec.snapshots.len(), 2);
+        let (name, got) = &rec.snapshots[0];
+        assert_eq!(name, "alpha");
+        assert_eq!(got.beta[0].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(got.beta[1].to_bits(), a.beta[1].to_bits());
+        assert_eq!(got.gram, a.gram);
+        assert_eq!(got.report, a.report);
+        assert_eq!(got.rls, a.rls);
+        assert_eq!(rec.snapshots[1].1, snap(3, 9, 1.5));
+    }
+
+    #[test]
+    fn later_record_supersedes_earlier() {
+        let mut j = TenantJournal::new();
+        j.append("t", &snap(4, 7, 0.0));
+        j.append("t", &snap(4, 7, 9.0));
+        let rec = j.recover();
+        assert_eq!(rec.replayed, 2);
+        assert_eq!(rec.snapshots.len(), 1);
+        assert_eq!(rec.snapshots[0].1.beta[0], 9.0);
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_clean() {
+        let mut j = TenantJournal::new();
+        j.append("a", &snap(4, 1, 0.0));
+        j.append("b", &snap(4, 2, 1.0));
+        j.append("a", &snap(4, 1, 2.0));
+        let bounds = j.record_boundaries();
+        assert_eq!(bounds.len(), 4, "header + 3 records");
+        for (i, &cut) in bounds.iter().enumerate() {
+            let part = TenantJournal::from_bytes(j.as_bytes()[..cut].to_vec());
+            let rec = part.recover();
+            assert!(rec.torn.is_none(), "cut at boundary {i} must be clean");
+            assert_eq!(rec.replayed, i);
+        }
+    }
+
+    #[test]
+    fn torn_tail_is_typed_and_prefix_survives() {
+        let mut j = TenantJournal::new();
+        j.append("a", &snap(4, 1, 0.0));
+        j.append("b", &snap(4, 2, 1.0));
+        let bounds = j.record_boundaries();
+        // cut mid-way through the second record
+        let cut = bounds[1] + (bounds[2] - bounds[1]) / 2;
+        let part = TenantJournal::from_bytes(j.as_bytes()[..cut].to_vec());
+        let rec = part.recover();
+        let torn = rec.torn.expect("mid-record cut must be reported");
+        assert_eq!(torn.offset, bounds[1]);
+        assert!(torn.reason.contains("truncated"), "{}", torn.reason);
+        assert_eq!(rec.replayed, 1, "intact prefix still recovers");
+        assert_eq!(rec.snapshots[0].0, "a");
+    }
+
+    #[test]
+    fn bit_flip_fails_checksum() {
+        let mut j = TenantJournal::new();
+        j.append("a", &snap(4, 1, 0.0));
+        let mut bytes = j.as_bytes().to_vec();
+        let mid = JOURNAL_MAGIC.len() + 20;
+        bytes[mid] ^= 0x40;
+        let rec = TenantJournal::from_bytes(bytes).recover();
+        let torn = rec.torn.expect("flipped bit must be detected");
+        assert!(torn.reason.contains("checksum"), "{}", torn.reason);
+        assert_eq!(rec.replayed, 0);
+    }
+
+    #[test]
+    fn garbage_bytes_never_panic() {
+        for bytes in [
+            Vec::new(),
+            vec![0u8; 3],
+            vec![0xFF; 64],
+            JOURNAL_MAGIC.iter().copied().chain([9, 0, 0, 0]).collect(),
+        ] {
+            let rec = TenantJournal::from_bytes(bytes).recover();
+            assert!(rec.torn.is_some());
+            assert_eq!(rec.replayed, 0);
+        }
+    }
+}

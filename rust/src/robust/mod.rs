@@ -19,6 +19,9 @@
 //!   reaches the Gram fold; the clean path borrows (bit-identity).
 //! * [`inject`] — the seed-keyed fault-injection harness behind the
 //!   `fault-inject` cargo feature (no-op hooks otherwise).
+//! * [`journal`] — the crash-safe tenant journal: append-only checksummed
+//!   β/Gram/RLS state with typed torn-tail recovery, the persistence leg
+//!   of the fleet service (`coordinator::service`).
 //!
 //! Invariant inherited from PRs 2–5: when no fault is injected and no
 //! ladder rung fires, every β bit is unchanged — the robustness layer
@@ -30,11 +33,13 @@
 
 pub mod error;
 pub mod inject;
+pub mod journal;
 pub mod ladder;
 pub mod quarantine;
 pub mod report;
 
 pub use error::{as_solve_error, SolveError};
+pub use journal::{JournalTorn, Recovered, RlsSnapshot, TenantJournal, TenantSnapshot};
 pub use ladder::{all_finite, ladder_lambdas, ridge_ladder_solve, RIDGE_LADDER};
 pub use quarantine::{screen, Screened};
 pub use report::{DeficiencyVerdict, DegradationRung, SolveReport, SolveStrategyKind};

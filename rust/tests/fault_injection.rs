@@ -17,12 +17,14 @@
 
 use opt_pr_elm::coordinator::accumulator::SolveStrategy;
 use opt_pr_elm::coordinator::pipeline::CpuElmTrainer;
-use opt_pr_elm::coordinator::{FleetOutcome, FleetRequest, FleetTrainer};
+use opt_pr_elm::coordinator::{
+    FleetOutcome, FleetRequest, FleetService, FleetTrainer, ServiceConfig,
+};
 use opt_pr_elm::data::window::Windowed;
 use opt_pr_elm::elm::Arch;
 use opt_pr_elm::linalg::RecurrenceMode;
 use opt_pr_elm::robust::inject::{
-    arm, corrupt_slice_f64, take_events, Fault, FaultPlan, Site,
+    arm, corrupt_slice_f64, deadline_skew, take_events, Fault, FaultPlan, Site,
 };
 use opt_pr_elm::robust::{as_solve_error, DegradationRung};
 use opt_pr_elm::util::rng::Rng;
@@ -561,6 +563,186 @@ fn fleet_job_panics_are_retried_to_bit_identical_betas() {
                 clean.model(tenant).unwrap().beta,
                 "workers={workers} {tenant}: retried β must match the clean bits"
             );
+        }
+    }
+}
+
+// --- Service-queue fault isolation ---------------------------------------
+//
+// The `ServiceQueue` site targets ONE admitted request inside the
+// deadline-aware `FleetService`, keyed by its admission index — never by
+// worker count or drain schedule. The isolation contract: a skewed or
+// panicked request is shed (typed `deadline-exceeded`) or retried to
+// success, and every other tenant's β stays bit-identical to the clean
+// run, at every worker count.
+
+fn loaded_service(workers: usize, reqs: &[FleetRequest]) -> FleetService {
+    let mut trainer = FleetTrainer::new(workers);
+    trainer.block_rows = 48;
+    let mut svc = FleetService::with_config(trainer, ServiceConfig::default());
+    for r in reqs {
+        svc.submit(r.clone(), None, 0).unwrap();
+    }
+    svc
+}
+
+/// Find a `(seed, period)` firing on a strict non-empty subset of the
+/// admission indices `0..FLEET_TENANTS`. The probe uses the side-effect
+/// free `deadline_skew` hook; the fire decision depends only on
+/// `(site, index, seed, period)` — never the fault — so the same plan
+/// with `fault` swapped in fires on the same indices.
+fn service_subset_plan(fault: Fault) -> (FaultPlan, Vec<usize>) {
+    for period in [2usize, 3, 5] {
+        for seed in 1..40u64 {
+            let probe = FaultPlan {
+                seed,
+                site: Site::ServiceQueue,
+                fault: Fault::DeadlineSkew,
+                period,
+            };
+            let guard = arm(probe);
+            let fired: Vec<usize> = (0..FLEET_TENANTS)
+                .filter(|&i| deadline_skew(Site::ServiceQueue, i))
+                .collect();
+            let _ = take_events();
+            drop(guard);
+            if !fired.is_empty() && fired.len() < FLEET_TENANTS {
+                return (
+                    FaultPlan { seed, site: Site::ServiceQueue, fault, period },
+                    fired,
+                );
+            }
+        }
+    }
+    panic!("no (seed, period) fires on a strict subset of {FLEET_TENANTS} requests");
+}
+
+/// Injected deadline skew sheds exactly the targeted requests with a
+/// typed `deadline-exceeded` — they are never trained, never cached — and
+/// every unskewed tenant's β is bit-identical to the clean run, at every
+/// worker count.
+#[test]
+fn service_deadline_skew_sheds_only_the_targeted_requests() {
+    let reqs = fleet_reqs();
+    let (plan, victims) = service_subset_plan(Fault::DeadlineSkew);
+    let mut base: Option<Vec<Option<Vec<f64>>>> = None;
+    for workers in worker_counts() {
+        let mut clean = loaded_service(workers, &reqs);
+        let clean_done = clean.run_to_idle();
+        assert!(clean_done.iter().all(|c| c.outcome.is_ok()));
+
+        let mut svc = loaded_service(workers, &reqs);
+        let guard = arm(plan);
+        let done = svc.run_to_idle();
+        let events = take_events();
+        drop(guard);
+        assert!(!events.is_empty(), "skew campaign never fired (vacuous test)");
+        assert!(events
+            .iter()
+            .all(|e| e.site == Site::ServiceQueue && e.fault == Fault::DeadlineSkew));
+
+        assert_eq!(done.len(), FLEET_TENANTS);
+        for (i, c) in done.iter().enumerate() {
+            if victims.contains(&i) {
+                let err = c.outcome.as_ref().expect_err("skewed request must be shed");
+                assert_eq!(
+                    err.class(),
+                    "deadline-exceeded",
+                    "workers={workers} {}: {err}",
+                    c.tenant
+                );
+                assert!(
+                    !svc.trainer().has_model(&c.tenant),
+                    "workers={workers} {}: skewed request must never train",
+                    c.tenant
+                );
+            } else {
+                assert!(
+                    matches!(c.outcome, Ok(FleetOutcome::Trained { .. })),
+                    "workers={workers} {}: unskewed tenant must train: {:?}",
+                    c.tenant,
+                    c.outcome
+                );
+                assert_eq!(
+                    svc.trainer().model(&c.tenant).unwrap().beta,
+                    clean.trainer().model(&c.tenant).unwrap().beta,
+                    "workers={workers} {}: unskewed β must stay bit-identical",
+                    c.tenant
+                );
+            }
+        }
+        assert_eq!(svc.stats().deadline_miss, victims.len() as u64);
+
+        let sig: Vec<Option<Vec<f64>>> = done
+            .iter()
+            .map(|c| svc.trainer().model(&c.tenant).map(|m| m.beta.clone()))
+            .collect();
+        match &base {
+            None => base = Some(sig),
+            Some(b) => {
+                assert_eq!(b, &sig, "service outcome differs at workers={workers}")
+            }
+        }
+    }
+}
+
+/// An injected panic at a request's dispatch is caught, the request is
+/// re-queued with seed-keyed backoff, and the retry (the fired set marks
+/// the admission index, so it runs clean) trains it to the same bits as
+/// the clean run — no other tenant's β moves, at every worker count.
+#[test]
+fn service_queue_panics_are_retried_without_perturbing_other_tenants() {
+    let reqs = fleet_reqs();
+    let (plan, victims) = service_subset_plan(Fault::WorkerPanic);
+    let mut base: Option<Vec<Vec<f64>>> = None;
+    for workers in worker_counts() {
+        let mut clean = loaded_service(workers, &reqs);
+        clean.run_to_idle();
+
+        let mut svc = loaded_service(workers, &reqs);
+        let guard = arm(plan);
+        let done = svc.run_to_idle();
+        let events = take_events();
+        drop(guard);
+        assert!(!events.is_empty(), "panic campaign never fired (vacuous test)");
+        let mut fired: Vec<usize> = events.iter().map(|e| e.index).collect();
+        fired.sort_unstable();
+        fired.dedup();
+        assert_eq!(fired, victims, "workers={workers}: fired set drifted from probe");
+
+        // every request — panicked or not — ends Trained after the retry
+        assert_eq!(done.len(), FLEET_TENANTS);
+        for c in &done {
+            assert!(
+                matches!(c.outcome, Ok(FleetOutcome::Trained { .. })),
+                "workers={workers} {}: retried request must train: {:?}",
+                c.tenant,
+                c.outcome
+            );
+        }
+        assert_eq!(
+            svc.stats().retries,
+            victims.len() as u64,
+            "workers={workers}: one retry per panicked request"
+        );
+        for c in &done {
+            assert_eq!(
+                svc.trainer().model(&c.tenant).unwrap().beta,
+                clean.trainer().model(&c.tenant).unwrap().beta,
+                "workers={workers} {}: β must stay bit-identical through the retry",
+                c.tenant
+            );
+        }
+
+        let sig: Vec<Vec<f64>> = done
+            .iter()
+            .map(|c| svc.trainer().model(&c.tenant).unwrap().beta.clone())
+            .collect();
+        match &base {
+            None => base = Some(sig),
+            Some(b) => {
+                assert_eq!(b, &sig, "service outcome differs at workers={workers}")
+            }
         }
     }
 }

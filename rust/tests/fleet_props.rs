@@ -423,17 +423,22 @@ fn degenerate_fleet_cases() {
     assert_eq!(beta_of(&fl, "big"), model.beta, "group-mate must stay bitwise solo");
     assert!(!fl.has_model("tiny"), "failed trains must not be cached");
 
-    // predict/update on an unknown (never trained or evicted) tenant
-    fl.submit(FleetRequest::Predict { tenant: "ghost".into(), data: windows(30, 2, 1) })
-        .unwrap();
-    fl.submit(FleetRequest::Update { tenant: "ghost".into(), data: windows(30, 2, 1) })
-        .unwrap();
-    for (_, o) in fl.drain() {
-        match o {
-            FleetOutcome::Failed { error, .. } => {
-                assert_eq!(error.class(), "unknown-tenant")
-            }
-            other => panic!("expected Failed, got {other:?}"),
-        }
-    }
+    // predict/update on an unknown (never trained or evicted) tenant is
+    // screened at submit time since ISSUE 10 — the typed error arrives
+    // before the request ever occupies a queue slot
+    let err = fl
+        .submit(FleetRequest::Predict { tenant: "ghost".into(), data: windows(30, 2, 1) })
+        .unwrap_err();
+    assert_eq!(
+        as_solve_error(&err).map(SolveError::class),
+        Some("unknown-tenant")
+    );
+    let err = fl
+        .submit(FleetRequest::Update { tenant: "ghost".into(), data: windows(30, 2, 1) })
+        .unwrap_err();
+    assert_eq!(
+        as_solve_error(&err).map(SolveError::class),
+        Some("unknown-tenant")
+    );
+    assert!(fl.drain().is_empty(), "screened requests never reach the queue");
 }

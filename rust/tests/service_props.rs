@@ -1,0 +1,247 @@
+//! Service conformance suite: the deadline-aware async `FleetService`
+//! must add **zero numeric drift** on top of the fleet contract, and its
+//! crash-safe journal must restore tenants **bit-identically**.
+//!
+//! * With no capacity bound, no deadlines, and no faults, the async
+//!   submit/run_to_idle path produces per-tenant β bit-identical to one
+//!   synchronous `FleetTrainer::drain` of the same submissions — at
+//!   1/2/4/8 workers.
+//! * Truncating the journal at **every** record boundary (a clean crash
+//!   between appends) recovers exactly the prefix's tenants, bit-identical
+//!   to the live cache at that point — again worker-count invariant.
+//! * Truncating *inside* the final record (a torn append) or flipping a
+//!   byte fails the checksum and comes back as a typed
+//!   `ServiceError::JournalTorn` — never a panic — with the intact prefix
+//!   still restored.
+//! * A journal written after `elm::online` RLS warm updates replays into
+//!   a cold service whose cache matches the live one bit-for-bit, and one
+//!   further identical update lands bit-identically on both.
+
+use opt_pr_elm::coordinator::fleet::{FleetOutcome, FleetRequest, FleetTrainer};
+use opt_pr_elm::coordinator::{FleetService, ServiceConfig};
+use opt_pr_elm::data::window::Windowed;
+use opt_pr_elm::elm::Arch;
+use opt_pr_elm::linalg::ParallelPolicy;
+use opt_pr_elm::robust::TenantJournal;
+
+fn series(n: usize, seed: u64) -> Vec<f64> {
+    let mut v = Vec::with_capacity(n);
+    let mut x = 0.37 + (seed % 97) as f64 * 1e-3;
+    for _ in 0..n {
+        x = 3.7 * x * (1.0 - x);
+        v.push(x - 0.5);
+    }
+    v
+}
+
+fn windows(n: usize, q: usize, seed: u64) -> Windowed {
+    Windowed::from_series(&series(n + q, seed), q).expect("windowed")
+}
+
+fn train_req(tenant: &str, m: usize, seed: u64) -> FleetRequest {
+    FleetRequest::Train {
+        tenant: tenant.to_string(),
+        arch: Arch::Elman,
+        m,
+        seed,
+        data: windows(120 + 7 * (seed as usize % 5), 3, seed),
+    }
+}
+
+fn update_req(tenant: &str, seed: u64) -> FleetRequest {
+    FleetRequest::Update { tenant: tenant.to_string(), data: windows(40, 3, seed) }
+}
+
+fn beta_bits(trainer: &FleetTrainer, tenant: &str) -> Vec<u64> {
+    trainer
+        .model(tenant)
+        .unwrap_or_else(|| panic!("tenant {tenant} not cached"))
+        .beta
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+fn service(workers: usize) -> FleetService {
+    let pol = ParallelPolicy::with_workers(workers);
+    FleetService::with_config(FleetTrainer::with_policy(pol), ServiceConfig::default())
+}
+
+/// The submission sequence every test uses: three trains, then warm
+/// updates on two of the tenants.
+fn submit_all(svc: &mut FleetService) {
+    for (i, t) in ["a", "b", "c"].iter().enumerate() {
+        svc.submit(train_req(t, 8, 11 + i as u64), None, 0).unwrap();
+    }
+    svc.run_to_idle().iter().for_each(|c| assert!(c.outcome.is_ok(), "{c:?}"));
+    svc.submit(update_req("a", 31), None, 0).unwrap();
+    svc.submit(update_req("b", 32), None, 0).unwrap();
+    svc.run_to_idle().iter().for_each(|c| assert!(c.outcome.is_ok(), "{c:?}"));
+}
+
+/// Tentpole conformance: unbounded/no-deadline/no-fault async service ≡
+/// synchronous drain, bit-for-bit, at every worker count.
+#[test]
+fn async_beta_is_bitwise_sync_at_every_worker_count() {
+    for workers in [1usize, 2, 4, 8] {
+        let pol = ParallelPolicy::with_workers(workers);
+
+        let mut sync = FleetTrainer::with_policy(pol);
+        for (i, t) in ["a", "b", "c"].iter().enumerate() {
+            sync.submit(train_req(t, 8, 11 + i as u64)).unwrap();
+        }
+        let out = sync.drain();
+        assert!(out.iter().all(|(_, o)| matches!(o, FleetOutcome::Trained { .. })));
+        sync.submit(update_req("a", 31)).unwrap();
+        sync.submit(update_req("b", 32)).unwrap();
+        let out = sync.drain();
+        assert!(out.iter().all(|(_, o)| matches!(o, FleetOutcome::Updated { .. })));
+
+        let mut svc = service(workers);
+        submit_all(&mut svc);
+
+        for t in ["a", "b", "c"] {
+            assert_eq!(
+                beta_bits(&sync, t),
+                beta_bits(svc.trainer(), t),
+                "workers={workers} tenant={t}: async β drifted from sync drain"
+            );
+        }
+        let stats = svc.stats();
+        assert_eq!(
+            (stats.shed, stats.retries, stats.deadline_miss),
+            (0, 0, 0),
+            "healthy run must not shed, retry, or miss deadlines"
+        );
+    }
+}
+
+/// Crash-at-every-boundary: truncating the journal at each record
+/// boundary recovers exactly the tenants appended so far, bit-identical
+/// to the live models — at every worker count.
+#[test]
+fn recovery_at_every_record_boundary_is_bit_identical() {
+    for workers in [1usize, 2, 4, 8] {
+        let mut svc = service(workers);
+        submit_all(&mut svc);
+        let journal = svc.journal().clone();
+        let bounds = journal.record_boundaries();
+        // header + 3 trains + 2 updates
+        assert_eq!(bounds.len(), 6, "workers={workers}: unexpected journal layout");
+
+        for (k, &cut) in bounds.iter().enumerate() {
+            let crashed =
+                TenantJournal::from_bytes(journal.as_bytes()[..cut].to_vec());
+            let mut cold = service(workers);
+            let (applied, torn) = cold.warm_from(&crashed);
+            assert!(
+                torn.is_none(),
+                "workers={workers} boundary {k}: clean crash must not read torn"
+            );
+            // records land in append order a, b, c, a-upd, b-upd: the
+            // tenant set after k records is a prefix, with updates
+            // superseding in place
+            let expect: &[&str] = match k {
+                0 => &[],
+                1 => &["a"],
+                2 => &["a", "b"],
+                _ => &["a", "b", "c"],
+            };
+            assert_eq!(
+                applied,
+                expect.len(),
+                "workers={workers} boundary {k}: wrong tenant count restored"
+            );
+            for t in expect {
+                assert!(cold.trainer().has_model(t));
+            }
+            // at the final boundary the recovered cache must equal the
+            // live one bit-for-bit (updates included)
+            if k == bounds.len() - 1 {
+                for t in ["a", "b", "c"] {
+                    assert_eq!(
+                        beta_bits(svc.trainer(), t),
+                        beta_bits(cold.trainer(), t),
+                        "workers={workers} tenant={t}: recovery drifted"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Torn final record: a truncation inside the last frame (and separately
+/// a flipped payload byte) is detected by the checksum and reported as a
+/// typed `JournalTorn` — the intact prefix still restores, nothing
+/// panics.
+#[test]
+fn torn_final_record_is_typed_not_a_panic() {
+    let mut svc = service(2);
+    submit_all(&mut svc);
+    let journal = svc.journal().clone();
+    let bounds = journal.record_boundaries();
+    let last_start = bounds[bounds.len() - 2];
+    let last_end = bounds[bounds.len() - 1];
+
+    // every torn length inside the final frame: typed, prefix intact
+    for cut in [last_start + 1, last_start + 5, last_end - 1] {
+        let torn_j = TenantJournal::from_bytes(journal.as_bytes()[..cut].to_vec());
+        let mut cold = service(2);
+        let (applied, torn) = cold.warm_from(&torn_j);
+        assert_eq!(applied, 3, "prefix tenants must survive a torn tail (cut {cut})");
+        let err = torn.expect("a mid-frame truncation must be reported");
+        assert_eq!(err.class(), "journal-torn", "{err}");
+    }
+
+    // bit flip inside the final frame's payload: checksum catches it
+    let mut bytes = journal.as_bytes().to_vec();
+    bytes[last_start + 6] ^= 0x40;
+    let mut cold = service(2);
+    let (applied, torn) = cold.warm_from(&TenantJournal::from_bytes(bytes));
+    assert_eq!(applied, 3);
+    assert_eq!(torn.map(|e| e.class()), Some("journal-torn"));
+
+    // pure garbage never panics either
+    let mut cold = service(2);
+    let (applied, torn) =
+        cold.warm_from(&TenantJournal::from_bytes(vec![0xAB; 57]));
+    assert_eq!(applied, 0);
+    assert!(torn.is_some());
+}
+
+/// RLS continuity: a journal written after warm updates replays into a
+/// cold service bit-identical to the live cache, and one further
+/// identical update lands bit-identically on both — the recovered RLS
+/// state (P, λ, rows seen) is the live state, not an approximation.
+#[test]
+fn replay_after_rls_updates_matches_live_cache() {
+    let mut live = service(2);
+    submit_all(&mut live);
+
+    let mut cold = service(2);
+    let (applied, torn) = cold.warm_from(&live.journal().clone());
+    assert_eq!((applied, torn), (3, None));
+    for t in ["a", "b", "c"] {
+        assert_eq!(
+            beta_bits(live.trainer(), t),
+            beta_bits(cold.trainer(), t),
+            "tenant {t}: replayed cache drifted from live"
+        );
+    }
+
+    // one more identical update on both sides: the warm path must
+    // continue bit-identically from the recovered state
+    for svc in [&mut live, &mut cold] {
+        svc.submit(update_req("a", 77), None, 0).unwrap();
+        let done = svc.run_to_idle();
+        assert!(done.iter().all(|c| matches!(
+            c.outcome,
+            Ok(FleetOutcome::Updated { .. })
+        )));
+    }
+    assert_eq!(
+        beta_bits(live.trainer(), "a"),
+        beta_bits(cold.trainer(), "a"),
+        "post-recovery update diverged: RLS state was not restored exactly"
+    );
+}
